@@ -1,0 +1,77 @@
+//! Head-to-head: Algorithm 1 (both variants, both embeddings) vs CG and
+//! randomized-preconditioned CG on one fixed-`nu` problem — the paper's
+//! Figure 2 protocol at example scale.
+//!
+//! ```sh
+//! cargo run --release --example adaptive_vs_baselines
+//! ```
+
+use effdim::data::synthetic;
+use effdim::rng::Xoshiro256;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
+use effdim::solvers::cg::{self, CgConfig};
+use effdim::solvers::pcg::{self, PcgConfig};
+use effdim::solvers::{direct, RidgeProblem, SolveReport, StopRule};
+
+fn main() {
+    let ds = synthetic::cifar_like(2048, 256, 11);
+    let nu = 1.0;
+    let eps = 1e-8;
+    let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+    let x_star = direct::solve(&problem);
+    let stop = StopRule::TrueError { x_star, eps };
+    let x0 = vec![0.0; problem.d()];
+
+    println!(
+        "dataset {} (n={}, d={}), nu={}, d_e={:.1}, eps={:.0e}\n",
+        ds.name,
+        problem.n(),
+        problem.d(),
+        nu,
+        ds.effective_dimension(nu),
+        eps
+    );
+
+    let mut reports: Vec<SolveReport> = Vec::new();
+
+    reports.push(
+        cg::solve(&problem, &x0, &CgConfig { max_iters: 100_000, stop: stop.clone() }).report,
+    );
+
+    for kind in [SketchKind::Srht, SketchKind::Gaussian] {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        reports.push(pcg::solve(&problem, &x0, &PcgConfig::new(kind, 0.5, stop.clone()), &mut rng).report);
+    }
+
+    for kind in [SketchKind::Srht, SketchKind::Gaussian] {
+        for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
+            let mut cfg = AdaptiveConfig::new(kind, stop.clone());
+            cfg.variant = variant;
+            reports.push(adaptive::solve(&problem, &x0, &cfg, 31).report);
+        }
+    }
+
+    println!(
+        "{:<26} {:>8} {:>8} {:>10} {:>10} {:>8}",
+        "solver", "iters", "m", "time_s", "rel_err", "conv"
+    );
+    for r in &reports {
+        println!(
+            "{:<26} {:>8} {:>8} {:>10.4} {:>10.1e} {:>8}",
+            r.solver,
+            r.iterations,
+            r.peak_m,
+            r.wall_time_s,
+            r.final_rel_error.unwrap_or(f64::NAN),
+            r.converged
+        );
+        assert!(r.converged, "{} did not converge", r.solver);
+    }
+
+    // The paper's headline at this scale: adaptive uses far less memory
+    // (sketch size) than pCG.
+    let pcg_m = reports.iter().find(|r| r.solver.starts_with("pcg")).unwrap().peak_m;
+    let ada_m = reports.iter().find(|r| r.solver.starts_with("adaptive")).unwrap().peak_m;
+    println!("\nsketch memory: adaptive m = {ada_m} vs pCG m = {pcg_m}");
+}

@@ -1,0 +1,108 @@
+//! END-TO-END DRIVER — proves all three layers compose on a real workload.
+//!
+//! Pipeline exercised:
+//!   L1 (Pallas kernels) + L2 (JAX graph)  --AOT-->  artifacts/*.hlo.txt
+//!   L3 (this binary): loads the fused-gradient artifact via PJRT,
+//!   plugs it into Algorithm 1 as the per-iteration gradient oracle, and
+//!   solves a CIFAR-like regularized least-squares workload end to end,
+//!   then cross-checks against the pure-native solve and runs the same
+//!   job through the coordinator service.
+//!
+//! Run `make artifacts` first (shape n=4096, d=256 by default):
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//! Falls back to the native oracle (with a notice) if artifacts are
+//! missing, so the example always demonstrates the full solve.
+
+use effdim::coordinator::job::{execute, JobSpec, SolverChoice, Workload};
+use effdim::data::synthetic;
+use effdim::runtime::GradientOracle;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::{AdaptiveConfig, AdaptiveSolver, AdaptiveVariant};
+use effdim::solvers::{direct, RidgeProblem, StopRule};
+
+fn main() {
+    // Shape must match the AOT artifacts (python -m compile.aot --n --d).
+    let (n, d) = (4096, 256);
+    let nu = 1.0;
+    let ds = synthetic::cifar_like(n, d, 2026);
+    let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+    let d_e = ds.effective_dimension(nu);
+    println!("=== end-to-end: adaptive IHS on {} (n={n}, d={d}, nu={nu}) ===", ds.name);
+    println!("effective dimension d_e = {d_e:.1}  (d_e/d = {:.3})", d_e / d as f64);
+
+    let x_star = direct::solve(&problem);
+
+    // --- native solve (f64 reference) ---
+    let stop_native = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-10 };
+    let cfg = AdaptiveConfig::new(SketchKind::Srht, stop_native);
+    let native = AdaptiveSolver::new(&problem, &vec![0.0; d], cfg.clone(), 404).run();
+    report("native (f64)", &native.report);
+
+    // --- PJRT-backed solve: the AOT fused-gradient artifact is the hot op ---
+    #[cfg(feature = "xla-runtime")]
+    {
+        match effdim::runtime::PjrtRuntime::load(effdim::runtime::DEFAULT_ARTIFACTS_DIR) {
+            Err(e) => println!("\n[artifacts unavailable: {e}]\n[skipping PJRT-backed solve]"),
+            Ok(runtime) => match runtime.gradient_oracle(&problem) {
+                Err(e) => println!("\n[gradient artifact unavailable: {e}]"),
+                Ok(oracle) => {
+                    // f32 artifacts cap achievable relative error ~1e-6.
+                    let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-5 };
+                    let mut cfg_xla = AdaptiveConfig::new(SketchKind::Srht, stop);
+                    cfg_xla.variant = AdaptiveVariant::PolyakFirst;
+                    let mut solver = AdaptiveSolver::new(&problem, &vec![0.0; d], cfg_xla, 404);
+                    solver.set_gradient_fn(|x| oracle.gradient(x));
+                    let sol = solver.run();
+                    report("pjrt-xla (f32 AOT gradient)", &sol.report);
+                    assert!(sol.report.converged, "XLA-backed solve must converge");
+
+                    // Conformance: XLA and native gradients agree to f32.
+                    let x_test: Vec<f64> = (0..d).map(|i| (i as f64 * 0.01).sin()).collect();
+                    let g_native = problem.gradient(&x_test);
+                    let g_xla = oracle.gradient(&x_test);
+                    let scale = g_native.iter().map(|v| v.abs()).fold(0.0, f64::max);
+                    let max_diff = g_native
+                        .iter()
+                        .zip(&g_xla)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0, f64::max);
+                    println!("gradient conformance: max |native - xla| / scale = {:.2e}", max_diff / scale);
+                    assert!(max_diff / scale < 1e-4, "backend mismatch");
+                }
+            },
+        }
+    }
+
+    // --- the same workload through the coordinator service ---
+    println!("\n=== coordinator path ===");
+    let spec = JobSpec {
+        workload: Workload::Synthetic { profile: "cifar-like".into(), n, d, seed: 2026 },
+        nu,
+        solver: SolverChoice::Adaptive {
+            kind: SketchKind::Srht,
+            variant: AdaptiveVariant::GradientOnly,
+        },
+        eps: 1e-8,
+        seed: 505,
+        path_nus: Vec::new(),
+    };
+    let outcome = execute(&spec).expect("coordinator job");
+    report("coordinator job (adaptive-gd-srht)", &outcome.report);
+    assert!(outcome.report.converged);
+
+    println!("\nend_to_end: all layers composed OK");
+}
+
+fn report(label: &str, r: &effdim::solvers::SolveReport) {
+    println!("\n-- {label} --");
+    println!("solver     : {}", r.solver);
+    println!("converged  : {} (rel err {:.1e})", r.converged, r.final_rel_error.unwrap_or(f64::NAN));
+    println!("iterations : {} (+{} rejected, {} doublings)", r.iterations, r.rejections, r.doublings);
+    println!("sketch m   : final {} / peak {}", r.final_m, r.peak_m);
+    println!(
+        "time       : {:.3}s = sketch {:.3} + factor {:.3} + iterate {:.3}",
+        r.wall_time_s, r.sketch_time_s, r.factor_time_s, r.iter_time_s
+    );
+}

@@ -1,0 +1,44 @@
+//! Quickstart: solve one ridge problem with the adaptive sketching solver.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use effdim::data::synthetic;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::{solve, AdaptiveConfig};
+use effdim::solvers::{direct, RidgeProblem, StopRule};
+
+fn main() {
+    // A synthetic overdetermined problem with fast spectral decay
+    // (sigma_j = 0.95^j), the regime where d_e << d.
+    let ds = synthetic::exponential_decay(2048, 256, 42);
+    let nu = 0.1;
+    let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+
+    println!("problem: n = {}, d = {}, nu = {}", problem.n(), problem.d(), nu);
+    println!("effective dimension d_e = {:.1} (of d = {})", ds.effective_dimension(nu), ds.d());
+
+    // Ground truth for the error metric (the paper's experimental
+    // protocol measures against the exact solution).
+    let x_star = direct::solve(&problem);
+    let stop = StopRule::TrueError { x_star, eps: 1e-10 };
+
+    // Algorithm 1: starts at m = 1, grows only as needed.
+    let config = AdaptiveConfig::new(SketchKind::Srht, stop);
+    let solution = solve(&problem, &vec![0.0; problem.d()], &config, 7);
+
+    let r = &solution.report;
+    println!("\nsolver          : {}", r.solver);
+    println!("converged       : {}", r.converged);
+    println!("iterations      : {}", r.iterations);
+    println!("rejected steps  : {}", r.rejections);
+    println!("sketch doublings: {}", r.doublings);
+    println!("final sketch m  : {} (vs d = {})", r.final_m, problem.d());
+    println!("rel. error      : {:.2e}", r.final_rel_error.unwrap_or(f64::NAN));
+    println!(
+        "time            : {:.3}s (sketch {:.3}s, factor {:.3}s, iterate {:.3}s)",
+        r.wall_time_s, r.sketch_time_s, r.factor_time_s, r.iter_time_s
+    );
+    assert!(r.converged, "quickstart must converge");
+}

@@ -1,0 +1,45 @@
+//! Regularization path (the paper's Figure 1 workload): compute ridge
+//! solutions over a decreasing grid of `nu`, warm-starting each solve,
+//! and compare the adaptive solver against CG.
+//!
+//! ```sh
+//! cargo run --release --example regularization_path
+//! ```
+
+use effdim::data::synthetic;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::AdaptiveVariant;
+use effdim::solvers::path::{run_path, PathSolver};
+
+fn main() {
+    let ds = synthetic::mnist_like(2048, 256, 3);
+    let nus: Vec<f64> = (-2..=4).rev().map(|j| 10f64.powi(j)).collect();
+    let eps = 1e-8;
+
+    println!("dataset: {} (n = {}, d = {})", ds.name, ds.n(), ds.d());
+    println!("path: nu in {nus:?}, eps = {eps:.0e}\n");
+
+    let solvers = [
+        PathSolver::Cg,
+        PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst },
+        PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly },
+    ];
+
+    for solver in &solvers {
+        let res = run_path(&ds.a, &ds.b, &nus, eps, solver, 17);
+        println!("== {} ==", res.solver);
+        println!("{:<10} {:>8} {:>12} {:>8} {:>8}", "nu", "d_e", "cum_time_s", "iters", "m");
+        for p in &res.points {
+            println!(
+                "{:<10.0e} {:>8.1} {:>12.4} {:>8} {:>8}",
+                p.nu,
+                ds.effective_dimension(p.nu),
+                p.cumulative_time_s,
+                p.report.iterations,
+                p.report.peak_m
+            );
+            assert!(p.report.converged, "{} failed at nu={}", res.solver, p.nu);
+        }
+        println!("total: {:.3}s, peak m: {}\n", res.total_time_s(), res.peak_m());
+    }
+}

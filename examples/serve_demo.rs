@@ -1,0 +1,64 @@
+//! Coordinator-as-a-service demo: start the TCP server in-process, drive
+//! it with the line-JSON client, print metrics.
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+
+use effdim::coordinator::server::{Client, Server};
+use std::sync::atomic::Ordering;
+
+fn main() {
+    let server = Server::bind("127.0.0.1:0", 2).expect("bind");
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    println!("coordinator listening on {addr}");
+    let handle = std::thread::spawn(move || server.run());
+
+    let mut client = Client::connect(addr).expect("connect");
+
+    // Submit a small batch of heterogeneous solves.
+    let mut jobs = Vec::new();
+    for (profile, solver, nu) in [
+        ("mnist-like", "adaptive-srht", 1.0),
+        ("cifar-like", "adaptive-gd-srht", 0.1),
+        ("exp", "cg", 1.0),
+        ("poly", "pcg-srht", 0.5),
+    ] {
+        let req = format!(
+            r#"{{"cmd":"solve","profile":"{profile}","n":512,"d":64,"nu":{nu},"solver":"{solver}","eps":1e-8,"seed":5}}"#
+        );
+        let resp = client.call(&req).expect("solve request");
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+        let job = resp.get("job").unwrap().as_usize().unwrap();
+        println!("submitted {profile}/{solver} as job {job}");
+        jobs.push(job);
+    }
+
+    // Wait for each and print the result lines.
+    for job in jobs {
+        let resp = client
+            .call(&format!(r#"{{"cmd":"wait","job":{job},"timeout_s":120}}"#))
+            .expect("wait");
+        let state = resp.get("state").unwrap().as_str().unwrap().to_string();
+        let result = resp.get("result");
+        match (state.as_str(), result) {
+            ("done", Some(r)) => println!(
+                "job {job}: {} iters={} m={} time={:.3}s converged={}",
+                r.get("solver").unwrap().as_str().unwrap(),
+                r.get("iterations").unwrap().as_usize().unwrap(),
+                r.get("peak_m").unwrap().as_usize().unwrap(),
+                r.get("wall_time_s").unwrap().as_f64().unwrap(),
+                r.get("converged").unwrap().as_bool().unwrap(),
+            ),
+            other => panic!("job {job} unexpected state {other:?}"),
+        }
+    }
+
+    let metrics = client.call(r#"{"cmd":"metrics"}"#).expect("metrics");
+    println!("\nmetrics: {}", metrics.get("metrics").unwrap().to_string());
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+    println!("server stopped cleanly");
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: jitted L2 functions -> HLO *text* artifacts for Rust/PJRT.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--n 4096] [--d 256] \
+        [--m 16,64,256] [--bn 256]
+
+Emits one ``<op>.hlo.txt`` per (op, shape) plus ``manifest.json``
+describing every artifact (op, input shapes, dtype) for the Rust artifact
+registry.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts(n: int, d: int, m_list: list[int]):
+    """Yield (name, lowered) for every artifact of the configured shapes."""
+    # Per-iteration hot path: the fused gradient.
+    yield (
+        f"gradient_n{n}_d{d}",
+        model.gradient_jit.lower(f32(n, d), f32(d), f32(n), f32(1)),
+    )
+    # Full candidate evaluation + sketch/factor ops, one per sketch size.
+    for m in m_list:
+        if m > d:
+            # The small-sketch Woodbury artifact only applies for m <= d;
+            # larger sketches fall back to the native direct branch.
+            continue
+        yield (
+            f"ihs_iteration_n{n}_d{d}_m{m}",
+            model.ihs_iteration_jit.lower(
+                f32(n, d), f32(n), f32(1), f32(m, d), f32(m, m),
+                f32(d), f32(d), f32(d), f32(1), f32(1),
+            ),
+        )
+        yield (
+            f"sketch_gaussian_n{n}_d{d}_m{m}",
+            model.sketch_gaussian_jit.lower(f32(m, n), f32(n, d)),
+        )
+        yield (
+            f"srht_n{n}_d{d}_m{m}",
+            model.srht_sketch_jit.lower(f32(n, d), f32(n), i32(m)),
+        )
+        yield (
+            f"factor_n{n}_d{d}_m{m}",
+            model.factor_sketch_jit.lower(f32(m, d), f32(1)),
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=256)
+    ap.add_argument(
+        "--m",
+        default="16,64,256",
+        help="comma-separated sketch sizes to specialize (power-of-two "
+        "doubling grid of the adaptive solver)",
+    )
+    args = ap.parse_args()
+    m_list = [int(x) for x in args.m.split(",") if x]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"n": args.n, "d": args.d, "m_list": m_list, "artifacts": []}
+    for name, lowered in build_artifacts(args.n, args.d, m_list):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"name": name, "file": f"{name}.hlo.txt", "bytes": len(text)})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: fast Walsh–Hadamard transform over the row dimension.
+
+This is the compute core of the SRHT (paper §3.2). TPU mapping
+(DESIGN.md §Hardware-Adaptation): the CPU-style recursive FWHT becomes a
+*stage-unrolled, column-tiled* kernel — the grid splits the `d` columns
+into VMEM-sized tiles, each grid step keeps its whole `(n, bd)` panel
+VMEM-resident and runs all `log2(n)` butterfly stages in-register as
+reshape/add/sub (pure VPU work, no MXU). The butterflies at stage `h` are
+contiguous vector ops of width `bd`, exactly the layout the paper's
+`O(nd log n)` bound wants.
+
+VMEM budget: one `(n, bd)` f32 panel; with n = 8192 and bd = 256 that is
+8 MiB — comfortably under the ~16 MiB/core budget with double-buffering
+disabled (the panel is both input and output of the stage loop).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(x_ref, o_ref):
+    """Full log2(n)-stage butterfly on a VMEM-resident (n, bd) panel."""
+    v = x_ref[...]
+    n = v.shape[0]
+    tail = v.shape[1:]
+    h = 1
+    # Stage loop is static (n is a compile-time shape), so it unrolls into
+    # log2(n) fused reshape/add/sub layers.
+    while h < n:
+        v = v.reshape(n // (2 * h), 2, h, *tail)
+        u = v[:, 0] + v[:, 1]
+        w = v[:, 0] - v[:, 1]
+        v = jnp.concatenate([u[:, None], w[:, None]], axis=1).reshape(n, *tail)
+        h *= 2
+    o_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("bd",))
+def fwht(x, *, bd=256):
+    """Unnormalized FWHT along axis 0 of ``x``: (n, d), n a power of two."""
+    n, d = x.shape
+    assert n & (n - 1) == 0, f"FWHT needs power-of-two rows, got {n}"
+    bd = min(bd, d)
+    grid = (pl.cdiv(d, bd),)
+    return pl.pallas_call(
+        _fwht_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, bd), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "bd"))
+def srht_apply(a, signs, rows, *, m, bd=256):
+    """Full SRHT ``S A`` pipeline: sign flip -> Pallas FWHT -> row gather.
+
+    ``a``: (n, d) pre-padded to power-of-two n; ``signs``: (n,) Rademacher;
+    ``rows``: (m,) int32 indices. The gather stays in XLA (dynamic-slice
+    lowering); the O(nd log n) transform is the Pallas kernel.
+    """
+    v = a * signs[:, None]
+    v = fwht(v, bd=bd)
+    return v[rows] * (1.0 / jnp.sqrt(jnp.float32(m)))
+
+
+def vmem_footprint_bytes(n, bd=256, dtype_bytes=4):
+    """Panel residency for one grid step."""
+    return dtype_bytes * n * bd

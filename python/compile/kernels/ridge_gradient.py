@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused ridge gradient ``A^T (A x - b) + nu^2 x``.
+
+This is the per-iteration hot spot of every solver in the paper (O(nd),
+executed hundreds of times per solve). TPU mapping (DESIGN.md
+§Hardware-Adaptation): the two GEMVs are fused into a single pass over
+row-panels of ``A`` — each grid step loads one ``(bn, d)`` panel, computes
+the residual slice ``r = A_i x - b_i`` *and* immediately accumulates
+``A_i^T r`` into the VMEM-resident output, so the length-``n`` residual is
+never materialized in HBM (a CPU/GPU implementation writes it out and
+reads it back; on TPU that round-trip is pure HBM bandwidth waste).
+
+The ``nu^2 x`` term seeds the accumulator at grid step 0.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gradient_kernel(a_ref, x_ref, b_ref, nu2_ref, o_ref, *, n_total, bn):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = nu2_ref[0] * x_ref[...]
+
+    # Mask the ragged final row-panel: Pallas pads out-of-bounds reads
+    # (NaN in interpret mode) and those rows would pollute the A^T r
+    # reduction.
+    valid = n_total - i * bn
+    row = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    a_tile = jnp.where(row < valid, a_ref[...], 0.0)  # (bn, d) panel
+    b_tile = jnp.where(row[:, 0] < valid, b_ref[...], 0.0)
+    x = x_ref[...]               # (d,)
+    r = a_tile @ x - b_tile      # (bn,) residual slice — VMEM only
+    o_ref[...] += a_tile.T @ r
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def ridge_gradient(a, x, b, nu2, *, bn=256):
+    """Fused gradient. ``a``: (n, d); ``x``: (d,); ``b``: (n,);
+    ``nu2``: (1,) array holding nu^2 (runtime input so one artifact serves
+    the whole regularization path)."""
+    n, d = a.shape
+    bn = min(bn, n)
+    grid = (pl.cdiv(n, bn),)
+    kernel = functools.partial(_gradient_kernel, n_total=n, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(a, x, b, nu2)
+
+
+def vmem_footprint_bytes(d, bn=256, dtype_bytes=4):
+    """Panel + vectors resident per grid step."""
+    return dtype_bytes * (bn * d + 2 * d + bn + 1)

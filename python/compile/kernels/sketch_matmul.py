@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: tiled sketch application ``S @ A``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the Gaussian sketch is a
+plain GEMM, so the kernel is a classic three-level tiling —
+``(bm x bk) @ (bk x bd)`` tiles stream HBM -> VMEM under the BlockSpec
+index maps and feed the MXU via ``jnp.dot`` with
+``preferred_element_type=float32``; the output tile stays VMEM-resident
+across the contraction (k) grid dimension and is accumulated in place.
+Block sizes default to the MXU-native 128 and are clamped to the problem,
+so the same kernel serves both unit-test shapes and the production
+(8192 x 1024) workload.
+
+``interpret=True`` everywhere: the CPU PJRT runtime cannot execute Mosaic
+custom-calls; structure (not wallclock) is what we optimize here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(s_ref, a_ref, o_ref, *, n_total, bk):
+    """One (i, j, k) grid step: o[i,j] += S[i,k] @ A[k,j].
+
+    The final k-tile may overhang the contraction dimension; Pallas pads
+    out-of-bounds reads (with NaN in interpret mode), so the overhang is
+    masked to zero before it enters the dot — contraction padding is the
+    one place tile raggedness is *not* automatically safe.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    valid = n_total - k * bk  # how many contraction rows are real
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+    a_tile = jnp.where(lane < valid, a_ref[...], 0.0)
+    s_tile = jnp.where(lane.T < valid, s_ref[...], 0.0)
+    o_ref[...] += jnp.dot(s_tile, a_tile, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bd"))
+def sketch_matmul(s, a, *, bm=128, bk=128, bd=128):
+    """Compute ``S @ A`` with a tiled Pallas kernel.
+
+    ``s``: (m, n), ``a``: (n, d). Dimensions need not be multiples of the
+    block sizes; Pallas masks the ragged edges.
+    """
+    m, n = s.shape
+    n2, d = a.shape
+    assert n == n2, f"inner dims mismatch: {n} vs {n2}"
+    bm, bk, bd = min(bm, m), min(bk, n), min(bd, d)
+    grid = (pl.cdiv(m, bm), pl.cdiv(d, bd), pl.cdiv(n, bk))
+    kernel = functools.partial(_matmul_kernel, n_total=n, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(s, a)
+
+
+def vmem_footprint_bytes(bm=128, bk=128, bd=128, dtype_bytes=4):
+    """Estimated VMEM residency per grid step: S-tile + A-tile + out-tile."""
+    return dtype_bytes * (bm * bk + bk * bd + bm * bd)

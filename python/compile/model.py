@@ -1,0 +1,88 @@
+"""L2: the paper's compute graph in JAX, composed from the L1 kernels.
+
+Everything here is build-time only. ``aot.py`` lowers these jitted
+functions to HLO text; the Rust runtime (rust/src/runtime/) loads and
+executes them via PJRT. Python never runs on the solve path.
+
+The graph mirrors one iteration of Algorithm 1:
+
+* ``gradient``          — fused ridge gradient (L1 kernel)
+* ``ihs_iteration``     — heavy-ball candidate + gradient + Woodbury
+                          preconditioning + sketched Newton decrement, as a
+                          single fused module (one PJRT dispatch per
+                          candidate evaluation)
+* ``sketch_gaussian``   — tiled S @ A (L1 kernel)
+* ``srht_sketch``       — sign flip + Pallas FWHT + row gather (L1 kernel)
+"""
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from .kernels import fwht as fwht_k
+from .kernels import ihs_step as ihs_k
+from .kernels import ridge_gradient as grad_k
+from .kernels import sketch_matmul as sm_k
+
+
+def gradient(a, x, b, nu2):
+    """``∇f(x) = A^T (A x - b) + nu^2 x`` — L1 fused kernel."""
+    return grad_k.ridge_gradient(a, x, b, nu2)
+
+
+def woodbury_apply(sa, l_factor, g, nu2):
+    """``H_S^{-1} g`` from the cached Cholesky factor of
+    ``K = nu^2 I_m + SA SA^T`` (small-sketch branch, m <= d)."""
+    sag = sa @ g
+    y = jsl.solve_triangular(l_factor, sag, lower=True)
+    kinv_sag = jsl.solve_triangular(l_factor.T, y, lower=False)
+    return (g - sa.T @ kinv_sag) / nu2[0]
+
+
+def newton_decrement(g, g_tilde):
+    """Lemma 1: ``r = 1/2 g^T H_S^{-1} g``."""
+    return 0.5 * jnp.vdot(g, g_tilde)
+
+
+def ihs_iteration(a, b, nu2, sa, l_factor, x, x_prev, g_tilde, mu, beta):
+    """One full candidate evaluation of Algorithm 1 (steps 4 / 9).
+
+    Returns ``(x_plus, g_plus, g_tilde_plus, r_plus)``. With ``beta = 0``
+    this is the gradient-IHS candidate; otherwise the Polyak one.
+    """
+    x_plus = ihs_k.ihs_update(x, x_prev, g_tilde, mu, beta)
+    g_plus = gradient(a, x_plus, b, nu2)
+    g_tilde_plus = woodbury_apply(sa, l_factor, g_plus, nu2)
+    r_plus = newton_decrement(g_plus, g_tilde_plus)
+    return x_plus, g_plus, g_tilde_plus, r_plus
+
+
+def sketch_gaussian(s, a):
+    """``S @ A`` — L1 tiled-GEMM kernel."""
+    return sm_k.sketch_matmul(s, a)
+
+
+def srht_sketch(a, signs, rows):
+    """SRHT ``S A`` — sign flip + Pallas FWHT + gather."""
+    m = rows.shape[0]
+    return fwht_k.srht_apply(a, signs, rows, m=m)
+
+
+def factor_sketch(sa, nu2):
+    """Cholesky factor of ``K = nu^2 I_m + SA SA^T`` — runs once per sketch
+    change; emitted as its own artifact so Rust can refactor on doubling
+    without leaving PJRT."""
+    m = sa.shape[0]
+    k = nu2[0] * jnp.eye(m, dtype=sa.dtype) + sa @ sa.T
+    return jnp.linalg.cholesky(k)
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with the exact signatures the AOT step lowers.
+# ---------------------------------------------------------------------------
+
+gradient_jit = jax.jit(gradient)
+ihs_iteration_jit = jax.jit(ihs_iteration)
+sketch_gaussian_jit = jax.jit(sketch_gaussian)
+srht_sketch_jit = jax.jit(srht_sketch)
+factor_sketch_jit = jax.jit(factor_sketch)

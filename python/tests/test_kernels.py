@@ -1,0 +1,172 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and block sizes, so ragged tiling edges are
+exercised) and asserts allclose against ``kernels/ref.py``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fwht as fwht_k
+from compile.kernels import ihs_step as ihs_k
+from compile.kernels import ref
+from compile.kernels import ridge_gradient as grad_k
+from compile.kernels import sketch_matmul as sm_k
+
+jax.config.update("jax_enable_x64", False)
+
+COMMON = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sketch_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 60),
+    d=st.integers(1, 40),
+    bm=st.sampled_from([8, 16, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+    bd=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sketch_matmul_matches_ref(m, n, d, bm, bk, bd, seed):
+    rng = np.random.default_rng(seed)
+    s = rand(rng, m, n)
+    a = rand(rng, n, d)
+    got = sm_k.sketch_matmul(s, a, bm=bm, bk=bk, bd=bd)
+    want = ref.sketch_matmul(s, a)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_sketch_matmul_identity():
+    s = jnp.eye(5, dtype=jnp.float32)
+    a = jnp.arange(15, dtype=jnp.float32).reshape(5, 3)
+    np.testing.assert_allclose(sm_k.sketch_matmul(s, a), a, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fwht / srht
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    logn=st.integers(0, 8),
+    d=st.integers(1, 20),
+    bd=st.sampled_from([4, 16, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwht_matches_hadamard_matrix(logn, d, bd, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d)
+    got = fwht_k.fwht(x, bd=bd)
+    want = ref.fwht_reference(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(
+    logn=st.integers(1, 8),
+    d=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_srht_matches_ref(logn, d, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    a = rand(rng, n, d)
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=n), dtype=jnp.float32)
+    m = int(rng.integers(1, n + 1))
+    rows = jnp.asarray(rng.choice(n, size=m, replace=False), dtype=jnp.int32)
+    got = fwht_k.srht_apply(a, signs, rows, m=m)
+    want = ref.srht_apply(a, signs, rows, m)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_involution():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 64, 3)
+    twice = fwht_k.fwht(fwht_k.fwht(x)) / 64.0
+    np.testing.assert_allclose(twice, x, rtol=1e-5, atol=1e-5)
+
+
+def test_fwht_rejects_non_power_of_two():
+    with pytest.raises(AssertionError):
+        fwht_k.fwht(jnp.zeros((6, 2), dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# ridge_gradient
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    n=st.integers(1, 80),
+    d=st.integers(1, 32),
+    bn=st.sampled_from([8, 32, 256]),
+    nu=st.floats(0.01, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ridge_gradient_matches_ref(n, d, bn, nu, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, n, d)
+    x = rand(rng, d)
+    b = rand(rng, n)
+    nu2 = jnp.asarray([nu * nu], dtype=jnp.float32)
+    got = grad_k.ridge_gradient(a, x, b, nu2, bn=bn)
+    want = ref.ridge_gradient(a, x, b, jnp.float32(nu))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_gradient_zero_at_optimum():
+    # x* = (A^T A + nu^2 I)^{-1} A^T b  =>  kernel gradient ~ 0.
+    rng = np.random.default_rng(1)
+    a = rand(rng, 40, 8)
+    b = rand(rng, 40)
+    nu = 0.5
+    h = a.T @ a + nu * nu * jnp.eye(8)
+    x_star = jnp.linalg.solve(h, a.T @ b)
+    g = grad_k.ridge_gradient(a, x_star, b, jnp.asarray([nu * nu], jnp.float32))
+    assert float(jnp.linalg.norm(g)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# ihs_update
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    d=st.integers(1, 200),
+    mu=st.floats(0.0, 2.0),
+    beta=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ihs_update_matches_ref(d, mu, beta, seed):
+    rng = np.random.default_rng(seed)
+    x, xp, gt = rand(rng, d), rand(rng, d), rand(rng, d)
+    mu_a = jnp.asarray([mu], jnp.float32)
+    beta_a = jnp.asarray([beta], jnp.float32)
+    got = ihs_k.ihs_update(x, xp, gt, mu_a, beta_a)
+    want = ref.ihs_update(x, xp, gt, jnp.float32(mu), jnp.float32(beta))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ihs_update_zero_step_is_identity():
+    x = jnp.arange(7, dtype=jnp.float32)
+    z = jnp.asarray([0.0], jnp.float32)
+    got = ihs_k.ihs_update(x, x, x, z, z)
+    np.testing.assert_allclose(got, x, atol=0)

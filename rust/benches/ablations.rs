@@ -1,0 +1,88 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **Fixed vs refreshed embeddings** (paper §1.3): refreshing `S` every
+//!    iteration gives no rate advantage and pays sketch+factor per step.
+//! 2. **Adaptive vs Hutchinson-estimate-then-fixed-m** ([31]-style): the
+//!    estimator needs Gram-scale work up front and carries no accuracy
+//!    guarantee; Algorithm 1 reaches the same error without it.
+//! 3. **Polyak-first vs gradient-only** (paper §5): when the Polyak
+//!    candidate is often rejected (SRHT), the gradient-only variant wins.
+
+use effdim::data::synthetic;
+use effdim::rng::Xoshiro256;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
+use effdim::solvers::ihs::{self, IhsConfig};
+use effdim::solvers::{direct, RidgeProblem, StopRule};
+
+fn main() {
+    let ds = synthetic::exponential_decay(1024, 128, 21);
+    let nu = 0.1;
+    let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+    let x_star = direct::solve(&p);
+    let d_e = ds.effective_dimension(nu);
+    let stop = StopRule::TrueError { x_star, eps: 1e-8 };
+    let x0 = vec![0.0; p.d()];
+    println!("ablations on synthetic-exp (n=1024, d=128, nu={nu}, d_e={d_e:.1})\n");
+
+    // --- 1. fixed vs refreshed ---
+    let m = ((d_e / 0.15).ceil() as usize).max(8);
+    let mut fixed_cfg = IhsConfig::gaussian(m, 0.15, stop.clone());
+    fixed_cfg.momentum = false;
+    let mut refresh_cfg = fixed_cfg.clone();
+    refresh_cfg.refresh = true;
+    let mut r1 = Xoshiro256::seed_from_u64(1);
+    let mut r2 = Xoshiro256::seed_from_u64(1);
+    let fixed = ihs::solve(&p, &x0, &fixed_cfg, &mut r1);
+    let refreshed = ihs::solve(&p, &x0, &refresh_cfg, &mut r2);
+    println!("[1] fixed vs refreshed embeddings (gradient-IHS, m={m}):");
+    for (label, r) in [("fixed", &fixed.report), ("refreshed", &refreshed.report)] {
+        println!(
+            "    {label:<10} iters={:<4} time={:.4}s (sketch+factor {:.4}s) conv={}",
+            r.iterations,
+            r.wall_time_s,
+            r.sketch_time_s + r.factor_time_s,
+            r.converged
+        );
+    }
+    assert!(refreshed.report.wall_time_s >= fixed.report.wall_time_s * 0.9);
+
+    // --- 2. adaptive vs Hutchinson baseline ---
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let (hutch, de_hat) = ihs::solve_with_estimated_de(
+        &p,
+        &x0,
+        SketchKind::Gaussian,
+        0.15,
+        30,
+        stop.clone(),
+        &mut rng,
+    );
+    let acfg = AdaptiveConfig::new(SketchKind::Gaussian, stop.clone());
+    let ada = adaptive::solve(&p, &x0, &acfg, 3);
+    println!("\n[2] adaptive vs hutchinson-estimate ([31]) — d_e = {d_e:.1}, estimate {de_hat:.1}:");
+    println!(
+        "    hutchinson iters={:<4} m={:<5} time={:.4}s conv={}",
+        hutch.report.iterations, hutch.report.peak_m, hutch.report.wall_time_s, hutch.report.converged
+    );
+    println!(
+        "    adaptive   iters={:<4} m={:<5} time={:.4}s conv={}",
+        ada.report.iterations, ada.report.peak_m, ada.report.wall_time_s, ada.report.converged
+    );
+
+    // --- 3. Polyak-first vs gradient-only (SRHT) ---
+    println!("\n[3] Polyak-first vs gradient-only (SRHT):");
+    for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
+        let mut cfg = AdaptiveConfig::new(SketchKind::Srht, stop.clone());
+        cfg.variant = variant;
+        let sol = adaptive::solve(&p, &x0, &cfg, 4);
+        println!(
+            "    {:<24} iters={:<4} rejected={:<4} time={:.4}s conv={}",
+            format!("{variant:?}"),
+            sol.report.iterations,
+            sol.report.rejections,
+            sol.report.wall_time_s,
+            sol.report.converged
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Theorem 7 (quick mode): sketch/factor/iterate decomposition and the
+//! adaptive-vs-pCG crossover as d_e/d varies.
+//! Full runs: `cargo run --release --bin bench_figures -- complexity`.
+
+use effdim::bench_harness::complexity::{self, ComplexityConfig};
+
+fn main() {
+    let cfg = ComplexityConfig { n: 1024, d: 128, eps: 1e-8, seed: 5 };
+    let rows = complexity::run(&cfg, &[100.0, 1.0, 0.01]);
+    println!("{}", complexity::render_table(&rows));
+    // d_e shrinks with nu; at the largest nu the adaptive method must use
+    // a (much) smaller sketch than pCG — the memory claim of §4.2.
+    let big_nu = &rows[0];
+    assert!(big_nu.ada_m < big_nu.pcg_m, "adaptive m must be below pCG at small d_e");
+}

@@ -1,0 +1,23 @@
+//! Theorems 3-4 (quick mode): empirical C_S eigenvalue brackets.
+//! Full runs: `cargo run --release --bin bench_figures -- concentration`.
+
+use effdim::bench_harness::concentration::{self, ConcentrationConfig};
+use effdim::sketch::SketchKind;
+
+fn main() {
+    let cfg = ConcentrationConfig { n: 512, d: 32, nu: 0.5, trials: 10, seed: 4 };
+    let mut rows = concentration::run(SketchKind::Gaussian, &[0.18, 0.1, 0.05], &cfg);
+    rows.extend(concentration::run(SketchKind::Srht, &[0.5, 0.25], &cfg));
+    println!("{}", concentration::render_table(&rows));
+    // The brackets must hold for the overwhelming majority of draws.
+    for r in &rows {
+        assert!(
+            r.inside_frac >= 0.8,
+            "{} rho={} bracket violated too often: {}",
+            r.kind,
+            r.rho,
+            r.inside_frac
+        );
+    }
+    println!("all brackets hold (>= 80% of draws inside)");
+}

@@ -1,0 +1,25 @@
+//! Figure 1 (quick mode): regularization path on the MNIST/CIFAR-like
+//! surrogates. Full runs: `cargo run --release --bin bench_figures -- fig1`.
+
+use effdim::bench_harness::figures::{self, FigureConfig};
+
+fn main() {
+    let cfg = FigureConfig { n: 512, d: 64, trials: 2, eps: 1e-8, seed: 1 };
+    let series = figures::fig1(&cfg);
+    println!("{}", figures::render_table(&series));
+    assert!(series.iter().all(|s| s.all_converged), "all solvers must converge");
+    // Reproduction check (Figure 1's qualitative claim): the adaptive
+    // methods beat pCG on total path time at this scale.
+    for ds in ["mnist-like", "cifar-like"] {
+        let total = |solver: &str| {
+            series
+                .iter()
+                .find(|s| s.dataset == ds && s.solver == solver)
+                .map(|s| *s.cum_time_mean.last().unwrap())
+                .unwrap()
+        };
+        let ada = total("adaptive-gd-srht").min(total("adaptive-polyak-srht"));
+        let pcg = total("pcg-srht");
+        println!("{ds}: adaptive {ada:.3}s vs pcg {pcg:.3}s -> {}", if ada < pcg { "adaptive wins" } else { "pcg wins" });
+    }
+}

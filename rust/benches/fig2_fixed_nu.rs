@@ -1,0 +1,27 @@
+//! Figure 2 (quick mode): fixed nu = 10 comparison.
+//! Full runs: `cargo run --release --bin bench_figures -- fig2`.
+
+use effdim::bench_harness::figures::{self, FigureConfig};
+
+fn main() {
+    let cfg = FigureConfig { n: 512, d: 64, trials: 3, eps: 1e-8, seed: 2 };
+    let series = figures::fig2(&cfg);
+    println!("{}", figures::render_table(&series));
+    assert!(series.iter().all(|s| s.all_converged));
+    // At nu = 10, d_e is small: adaptive sketch sizes must be far below
+    // pCG's d log d / rho prescription.
+    for s in &series {
+        if s.solver.starts_with("adaptive") {
+            let pcg_m = series
+                .iter()
+                .find(|t| t.dataset == s.dataset && t.solver.starts_with("pcg"))
+                .unwrap()
+                .m_mean[0];
+            println!(
+                "{} {}: m = {:.0} (pcg m = {:.0}, d_e = {:.1})",
+                s.dataset, s.solver, s.m_mean[0], pcg_m, s.d_e[0]
+            );
+            assert!(s.m_mean[0] <= pcg_m, "adaptive must not out-size pCG at small d_e");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Figure 3 (quick mode): synthetic exponential / polynomial decays.
+//! Full runs: `cargo run --release --bin bench_figures -- fig3`.
+
+use effdim::bench_harness::figures::{self, FigureConfig};
+
+fn main() {
+    let cfg = FigureConfig { n: 512, d: 64, trials: 2, eps: 1e-8, seed: 3 };
+    let series = figures::fig3(&cfg);
+    println!("{}", figures::render_table(&series));
+    assert!(series.iter().all(|s| s.all_converged));
+    // Appendix A.1's qualitative claim: on polynomial decay the Gaussian
+    // adaptive variant pays for dense sketching; SRHT stays competitive.
+    let poly_srht = series
+        .iter()
+        .find(|s| s.dataset == "synthetic-poly" && s.solver == "adaptive-polyak-srht")
+        .unwrap();
+    let poly_gauss = series
+        .iter()
+        .find(|s| s.dataset == "synthetic-poly" && s.solver == "adaptive-polyak-gaussian")
+        .unwrap();
+    println!(
+        "poly decay: srht {:.3}s vs gaussian {:.3}s",
+        poly_srht.cum_time_mean.last().unwrap(),
+        poly_gauss.cum_time_mean.last().unwrap()
+    );
+}

@@ -1,0 +1,75 @@
+//! Microbenchmarks of the native hot-path kernels (the §Perf targets):
+//! blocked GEMM, FWHT, ridge gradient, Woodbury factor + apply.
+
+use effdim::bench_harness::bench;
+use effdim::linalg::Matrix;
+use effdim::rng::Xoshiro256;
+use effdim::sketch::srht::fwht_rows;
+use effdim::sketch::{gaussian::GaussianSketch, srht::SrhtSketch, Sketch};
+use effdim::solvers::woodbury::WoodburyCache;
+use effdim::solvers::RidgeProblem;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let (n, d, m) = (2048usize, 256usize, 128usize);
+    let a = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
+    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+    let problem = RidgeProblem::new(a.clone(), b, 0.5);
+    let x: Vec<f64> = (0..d).map(|i| (i as f64 * 0.02).cos()).collect();
+
+    println!("native kernel benches (n={n}, d={d}, m={m})\n");
+
+    // GEMM flops: 2 m n d.
+    let gs = GaussianSketch::sample(m, n, &mut rng);
+    let r = bench("gaussian sketch S*A (GEMM)", 1, 5, || gs.apply(&a));
+    let gflops = 2.0 * (m * n * d) as f64 / r.summary.mean / 1e9;
+    println!("{}   [{:.2} GFLOP/s]", r.report_line(), gflops);
+
+    let hs = SrhtSketch::sample(m, n, &mut rng);
+    let r = bench("SRHT sketch S*A (FWHT path)", 1, 5, || hs.apply(&a));
+    println!("{}", r.report_line());
+
+    let mut work = Matrix::from_fn(n, d, |_, _| 1.0);
+    let r = bench("FWHT rows (2048 x 256)", 1, 5, || fwht_rows(&mut work));
+    let fwht_flops = (n as f64) * (n as f64).log2() * d as f64;
+    println!("{}   [{:.2} GFLOP/s]", r.report_line(), fwht_flops / r.summary.mean / 1e9);
+
+    let r = bench("ridge gradient A^T(Ax-b)+nu^2 x", 2, 10, || problem.gradient(&x));
+    let grad_flops = 4.0 * (n * d) as f64;
+    println!("{}   [{:.2} GFLOP/s]", r.report_line(), grad_flops / r.summary.mean / 1e9);
+
+    let sa = gs.apply(&a);
+    let r = bench("woodbury factor (m x m chol)", 1, 5, || WoodburyCache::new(sa.clone(), 0.5));
+    println!("{}", r.report_line());
+
+    let cache = WoodburyCache::new(sa, 0.5);
+    let g = problem.gradient(&x);
+    let r = bench("woodbury apply H_S^-1 g", 2, 20, || cache.apply_inverse(&g));
+    println!("{}", r.report_line());
+
+    // Remark 4.1 fast path: O(nnz) CountSketch on CSR data. Time should
+    // scale with density, not with n*d.
+    use effdim::linalg::sparse::CsrMatrix;
+    use effdim::sketch::sparse::SparseSketch;
+    println!();
+    let mut prev = f64::INFINITY;
+    for density in [0.01, 0.1, 1.0] {
+        let dense = Matrix::from_fn(n, d, |_, _| {
+            if rng.next_f64() < density { rng.next_gaussian() } else { 0.0 }
+        });
+        let csr = CsrMatrix::from_dense(&dense);
+        let cs = SparseSketch::sample(m, n, &mut rng);
+        let r = bench(
+            &format!("countsketch CSR apply (density {density})"),
+            1,
+            5,
+            || cs.apply_csr(&csr),
+        );
+        println!("{}   [nnz = {}]", r.report_line(), csr.nnz());
+        if density <= 0.1 {
+            prev = r.summary.mean;
+        } else {
+            assert!(prev < r.summary.mean, "O(nnz): sparser must be faster");
+        }
+    }
+}

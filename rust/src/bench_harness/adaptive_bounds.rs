@@ -1,0 +1,176 @@
+//! Theorems 5–6 checks: the adaptive solver's sketch size, rejection
+//! count, and error decay stay within the proven bounds, across datasets
+//! and regularization levels.
+
+use super::write_csv;
+use crate::data::synthetic::Dataset;
+use crate::data::{cifar_like, mnist_like, synthetic};
+use crate::sketch::SketchKind;
+use crate::solvers::adaptive::{self, AdaptiveConfig};
+use crate::solvers::{direct, RidgeProblem, StopRule};
+use crate::theory::bounds::{
+    gaussian_rejection_bound, gaussian_sketch_size_bound, srht_rejection_bound,
+    srht_sketch_size_bound,
+};
+
+/// One check row.
+#[derive(Clone, Debug)]
+pub struct BoundsRow {
+    pub dataset: String,
+    pub kind: SketchKind,
+    pub nu: f64,
+    pub d_e: f64,
+    pub peak_m: usize,
+    pub m_bound: f64,
+    pub rejections: usize,
+    pub doublings: usize,
+    pub k_bound: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Whether both Theorem-5/6 inequalities held on this run.
+    pub within_bounds: bool,
+}
+
+/// Config for the bounds sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundsConfig {
+    pub n: usize,
+    pub d: usize,
+    pub eps: f64,
+    pub seed: u64,
+}
+
+impl BoundsConfig {
+    pub fn quick() -> Self {
+        Self { n: 1024, d: 128, eps: 1e-8, seed: 5 }
+    }
+}
+
+fn datasets(cfg: &BoundsConfig) -> Vec<Dataset> {
+    vec![
+        synthetic::exponential_decay(cfg.n, cfg.d, cfg.seed),
+        mnist_like(cfg.n, cfg.d, cfg.seed + 1),
+        cifar_like(cfg.n, cfg.d, cfg.seed + 2),
+    ]
+}
+
+/// Run the sweep over datasets x {Gaussian, SRHT} x nus.
+pub fn run(cfg: &BoundsConfig, nus: &[f64]) -> Vec<BoundsRow> {
+    let mut rows = Vec::new();
+    for ds in datasets(cfg) {
+        for &nu in nus {
+            let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+            let d_e = ds.effective_dimension(nu);
+            let x_star = direct::solve(&problem);
+            for kind in [SketchKind::Gaussian, SketchKind::Srht] {
+                let stop = StopRule::TrueError { x_star: x_star.clone(), eps: cfg.eps };
+                let acfg = AdaptiveConfig::new(kind, stop);
+                let sol = adaptive::solve(&problem, &vec![0.0; ds.d()], &acfg, cfg.seed + 9);
+                let (m_bound, k_bound) = match kind {
+                    SketchKind::Gaussian => (
+                        gaussian_sketch_size_bound(acfg.rho, d_e),
+                        gaussian_rejection_bound(acfg.rho, d_e, acfg.m_initial),
+                    ),
+                    _ => (
+                        srht_sketch_size_bound(acfg.rho, cfg.n, d_e),
+                        srht_rejection_bound(acfg.rho, cfg.n, d_e, acfg.m_initial),
+                    ),
+                };
+                // The sketch cannot exceed the padded row count regardless
+                // of the theoretical bound.
+                let m_cap = crate::sketch::srht::next_pow2(cfg.n) as f64;
+                let within = (sol.report.peak_m as f64) <= m_bound.min(m_cap).max(2.0)
+                    && (sol.report.doublings as f64) <= k_bound.max(1.0) + 1.0;
+                rows.push(BoundsRow {
+                    dataset: ds.name.clone(),
+                    kind,
+                    nu,
+                    d_e,
+                    peak_m: sol.report.peak_m,
+                    m_bound,
+                    rejections: sol.report.rejections,
+                    doublings: sol.report.doublings,
+                    k_bound,
+                    iterations: sol.report.iterations,
+                    converged: sol.report.converged,
+                    within_bounds: within,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Text table.
+pub fn render_table(rows: &[BoundsRow]) -> String {
+    let mut out = String::from(
+        "dataset         kind      nu        d_e     peak_m  m_bound   K(dbl)  K_bound  iters  conv  within\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<15} {:<8} {:<9.1e} {:>7.1} {:>8} {:>8.0} {:>8} {:>8.1} {:>6} {:>5} {:>7}\n",
+            r.dataset,
+            r.kind.to_string(),
+            r.nu,
+            r.d_e,
+            r.peak_m,
+            r.m_bound,
+            r.doublings,
+            r.k_bound,
+            r.iterations,
+            r.converged,
+            r.within_bounds
+        ));
+    }
+    out
+}
+
+/// Dump to CSV.
+pub fn dump_csv(name: &str, rows: &[BoundsRow]) -> std::io::Result<()> {
+    let lines: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                r.dataset, r.kind, r.nu, r.d_e, r.peak_m, r.m_bound, r.rejections,
+                r.doublings, r.k_bound, r.iterations, r.converged, r.within_bounds
+            )
+        })
+        .collect();
+    write_csv(
+        format!("results/{name}.csv"),
+        "dataset,kind,nu,d_e,peak_m,m_bound,rejections,doublings,k_bound,iterations,converged,within_bounds",
+        &lines,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_hold_on_small_sweep() {
+        let cfg = BoundsConfig { n: 256, d: 32, eps: 1e-8, seed: 1 };
+        let rows = run(&cfg, &[1.0]);
+        assert_eq!(rows.len(), 6); // 3 datasets x 2 kinds
+        assert!(rows.iter().all(|r| r.converged), "all must converge");
+        assert!(rows.iter().all(|r| r.within_bounds), "Theorem 5/6 bounds violated: {rows:#?}");
+    }
+
+    #[test]
+    fn peak_m_tracks_effective_dimension() {
+        // Across nu, larger d_e should not need smaller peak m (weak
+        // monotonicity up to doubling granularity).
+        let cfg = BoundsConfig { n: 512, d: 64, eps: 1e-8, seed: 2 };
+        let rows = run(&cfg, &[10.0, 0.1]);
+        let pick = |nu: f64| {
+            rows.iter()
+                .find(|r| r.dataset == "synthetic-exp" && r.kind == SketchKind::Gaussian && r.nu == nu)
+                .unwrap()
+        };
+        let hi_nu = pick(10.0); // small d_e
+        let lo_nu = pick(0.1); // larger d_e
+        assert!(lo_nu.d_e > hi_nu.d_e);
+        assert!(lo_nu.peak_m >= hi_nu.peak_m);
+    }
+}

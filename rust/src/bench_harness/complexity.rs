@@ -1,0 +1,164 @@
+//! Theorem 7: time-complexity decomposition and the adaptive-vs-pCG
+//! crossover as `d_e/d` varies.
+//!
+//! The paper's claim: total cost splits into sketch + factor + iterate,
+//! with the adaptive method's factor term scaling in `d_e` (not `d`), so
+//! it wins exactly when `d_e << d`. The harness measures the three phases
+//! directly from the solver reports and sweeps `nu` (hence `d_e`) to show
+//! the crossover.
+
+use super::write_csv;
+use crate::data::synthetic;
+use crate::rng::Xoshiro256;
+use crate::sketch::SketchKind;
+use crate::solvers::adaptive::{self, AdaptiveConfig};
+use crate::solvers::pcg::{self, PcgConfig};
+use crate::solvers::{direct, RidgeProblem, StopRule};
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct ComplexityRow {
+    pub nu: f64,
+    pub d_e: f64,
+    pub de_over_d: f64,
+    // Adaptive decomposition.
+    pub ada_sketch_s: f64,
+    pub ada_factor_s: f64,
+    pub ada_iter_s: f64,
+    pub ada_total_s: f64,
+    pub ada_m: usize,
+    // pCG decomposition.
+    pub pcg_sketch_s: f64,
+    pub pcg_factor_s: f64,
+    pub pcg_iter_s: f64,
+    pub pcg_total_s: f64,
+    pub pcg_m: usize,
+    pub adaptive_wins: bool,
+}
+
+/// Config.
+#[derive(Clone, Copy, Debug)]
+pub struct ComplexityConfig {
+    pub n: usize,
+    pub d: usize,
+    pub eps: f64,
+    pub seed: u64,
+}
+
+impl ComplexityConfig {
+    pub fn quick() -> Self {
+        Self { n: 1024, d: 128, eps: 1e-8, seed: 11 }
+    }
+
+    pub fn paper() -> Self {
+        Self { n: 8192, d: 512, eps: 1e-10, seed: 11 }
+    }
+}
+
+/// Sweep `nu` (each value induces a different `d_e`) and measure both
+/// solvers' phase decomposition.
+pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
+    let ds = synthetic::exponential_decay(cfg.n, cfg.d, cfg.seed);
+    let mut rows = Vec::new();
+    for &nu in nus {
+        let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+        let d_e = ds.effective_dimension(nu);
+        let x_star = direct::solve(&problem);
+        let stop = StopRule::TrueError { x_star: x_star.clone(), eps: cfg.eps };
+
+        let acfg = AdaptiveConfig::new(SketchKind::Srht, stop.clone());
+        let ada = adaptive::solve(&problem, &vec![0.0; cfg.d], &acfg, cfg.seed);
+
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed + 1);
+        let pcfg = PcgConfig::new(SketchKind::Srht, 0.5, stop);
+        let pcg_sol = pcg::solve(&problem, &vec![0.0; cfg.d], &pcfg, &mut rng);
+
+        rows.push(ComplexityRow {
+            nu,
+            d_e,
+            de_over_d: d_e / cfg.d as f64,
+            ada_sketch_s: ada.report.sketch_time_s,
+            ada_factor_s: ada.report.factor_time_s,
+            ada_iter_s: ada.report.iter_time_s,
+            ada_total_s: ada.report.wall_time_s,
+            ada_m: ada.report.peak_m,
+            pcg_sketch_s: pcg_sol.report.sketch_time_s,
+            pcg_factor_s: pcg_sol.report.factor_time_s,
+            pcg_iter_s: pcg_sol.report.iter_time_s,
+            pcg_total_s: pcg_sol.report.wall_time_s,
+            pcg_m: pcg_sol.report.peak_m,
+            adaptive_wins: ada.report.wall_time_s < pcg_sol.report.wall_time_s,
+        });
+    }
+    rows
+}
+
+/// Text table.
+pub fn render_table(rows: &[ComplexityRow]) -> String {
+    let mut out = String::from(
+        "nu        d_e/d    adaptive: sketch+factor+iter = total (m)      pcg: sketch+factor+iter = total (m)     winner\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<9.1e} {:>6.3}   {:>7.3}+{:>6.3}+{:>6.3} = {:>7.3} ({:>5})   {:>7.3}+{:>6.3}+{:>6.3} = {:>7.3} ({:>5})   {}\n",
+            r.nu,
+            r.de_over_d,
+            r.ada_sketch_s,
+            r.ada_factor_s,
+            r.ada_iter_s,
+            r.ada_total_s,
+            r.ada_m,
+            r.pcg_sketch_s,
+            r.pcg_factor_s,
+            r.pcg_iter_s,
+            r.pcg_total_s,
+            r.pcg_m,
+            if r.adaptive_wins { "adaptive" } else { "pcg" }
+        ));
+    }
+    out
+}
+
+/// Dump to CSV.
+pub fn dump_csv(name: &str, rows: &[ComplexityRow]) -> std::io::Result<()> {
+    let lines: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                r.nu, r.d_e, r.de_over_d, r.ada_sketch_s, r.ada_factor_s, r.ada_iter_s,
+                r.ada_total_s, r.ada_m, r.pcg_sketch_s, r.pcg_factor_s, r.pcg_iter_s,
+                r.pcg_total_s, r.pcg_m, r.adaptive_wins
+            )
+        })
+        .collect();
+    write_csv(
+        format!("results/{name}.csv"),
+        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,adaptive_wins",
+        &lines,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decomposition_sums_are_consistent() {
+        let cfg = ComplexityConfig { n: 256, d: 32, eps: 1e-6, seed: 1 };
+        let rows = run(&cfg, &[1.0]);
+        let r = &rows[0];
+        // Phases must not exceed the total (within timer noise).
+        assert!(r.ada_sketch_s + r.ada_factor_s <= r.ada_total_s + 0.05);
+        assert!(r.pcg_factor_s > 0.0, "pcg always factors");
+    }
+
+    #[test]
+    fn adaptive_uses_smaller_m_when_de_small() {
+        let cfg = ComplexityConfig { n: 512, d: 64, eps: 1e-6, seed: 2 };
+        let rows = run(&cfg, &[10.0]);
+        let r = &rows[0];
+        assert!(r.d_e < 5.0, "premise: d_e small, got {}", r.d_e);
+        assert!(r.ada_m < r.pcg_m, "adaptive m {} !< pcg m {}", r.ada_m, r.pcg_m);
+    }
+}

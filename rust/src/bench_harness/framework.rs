@@ -1,0 +1,66 @@
+//! Minimal benchmarking framework (criterion replacement for the offline
+//! build): warmup, timed iterations, summary statistics.
+
+use crate::util::stats::{fmt_time, summarize, Summary};
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>12} (±{:>10}, min {:>10}, n={})",
+            self.name,
+            fmt_time(s.mean),
+            fmt_time(s.std),
+            fmt_time(s.min),
+            s.n
+        )
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: summarize(&times) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 1, 5, || 42);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.report_line().contains("noop"));
+    }
+
+    #[test]
+    fn bench_measures_work() {
+        let fast = bench("fast", 0, 3, || 1 + 1);
+        let slow = bench("slow", 0, 3, || {
+            // Feed black_box input so the loop cannot be const-folded.
+            let mut s = std::hint::black_box(0u64);
+            for i in 0..200_000 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        assert!(slow.summary.mean > fast.summary.mean);
+    }
+}

@@ -1,0 +1,53 @@
+//! Benchmark harness regenerating every figure/table of the paper.
+//!
+//! Each experiment module exposes a `run(cfg) -> Vec<Row>`-style API used
+//! both by the `bench_figures` binary (full reproduction runs, text tables
+//! + CSV under `results/`) and by `cargo bench` (quick spot checks via
+//! [`framework`]).
+//!
+//! | paper artifact | module |
+//! |----------------|--------|
+//! | Figure 1 (reg-path, MNIST/CIFAR surrogates) | [`figures`] `fig1` |
+//! | Figure 2 (fixed nu)                          | [`figures`] `fig2` |
+//! | Figure 3 (synthetic exp/poly decays)         | [`figures`] `fig3` |
+//! | Theorem 3/4 concentration checks             | [`concentration`] |
+//! | Theorem 5/6 adaptive bounds                  | [`adaptive_bounds`] |
+//! | Theorem 7 complexity decomposition           | [`complexity`] |
+
+pub mod adaptive_bounds;
+pub mod complexity;
+pub mod concentration;
+pub mod figures;
+pub mod framework;
+
+pub use framework::{bench, BenchResult};
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write CSV rows (with header) under `results/`.
+pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[String]) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for row in rows {
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn write_csv_creates_file() {
+        let dir = std::env::temp_dir().join("effdim-csv-test");
+        let path = dir.join("t.csv");
+        super::write_csv(&path, "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

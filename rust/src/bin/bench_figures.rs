@@ -1,0 +1,88 @@
+//! Full reproduction runs for every paper figure/table.
+//!
+//! ```text
+//! bench_figures fig1 [--paper]      # Figure 1: reg-path, MNIST/CIFAR-like
+//! bench_figures fig2 [--paper]      # Figure 2: fixed nu = 10
+//! bench_figures fig3 [--paper]      # Figure 3: synthetic exp/poly decays
+//! bench_figures concentration       # Theorems 3-4 eigenvalue brackets
+//! bench_figures adaptive_bounds     # Theorems 5-6 m/K bounds
+//! bench_figures complexity          # Theorem 7 phase decomposition
+//! bench_figures all [--paper]
+//! ```
+//!
+//! Text tables go to stdout; CSVs land under `results/`.
+
+use effdim::bench_harness::{adaptive_bounds, complexity, concentration, figures};
+use effdim::sketch::SketchKind;
+use effdim::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let what = args.subcommand.clone().unwrap_or_else(|| "all".to_string());
+    let paper = args.has("paper");
+
+    let fig_cfg = if paper { figures::FigureConfig::paper() } else { figures::FigureConfig::quick() };
+    let mut ran_any = false;
+
+    if matches!(what.as_str(), "fig1" | "all") {
+        ran_any = true;
+        println!("=== Figure 1: regularization path (nu 1e4 .. 1e-2) ===");
+        let series = figures::fig1(&fig_cfg);
+        println!("{}", figures::render_table(&series));
+        figures::dump_csv("fig1_regpath", &series).expect("write csv");
+        println!("-> results/fig1_regpath.csv");
+    }
+    if matches!(what.as_str(), "fig2" | "all") {
+        ran_any = true;
+        println!("=== Figure 2: fixed nu = 10 ===");
+        let series = figures::fig2(&fig_cfg);
+        println!("{}", figures::render_table(&series));
+        figures::dump_csv("fig2_fixed_nu", &series).expect("write csv");
+        println!("-> results/fig2_fixed_nu.csv");
+    }
+    if matches!(what.as_str(), "fig3" | "all") {
+        ran_any = true;
+        println!("=== Figure 3: synthetic spectral decays (nu 1e0 .. 1e-4) ===");
+        let series = figures::fig3(&fig_cfg);
+        println!("{}", figures::render_table(&series));
+        figures::dump_csv("fig3_synthetic", &series).expect("write csv");
+        println!("-> results/fig3_synthetic.csv");
+    }
+    if matches!(what.as_str(), "concentration" | "all") {
+        ran_any = true;
+        println!("=== Theorems 3-4: C_S eigenvalue concentration ===");
+        let cfg = if paper {
+            concentration::ConcentrationConfig::paper()
+        } else {
+            concentration::ConcentrationConfig::quick()
+        };
+        let mut rows = concentration::run(SketchKind::Gaussian, &[0.18, 0.1, 0.05], &cfg);
+        rows.extend(concentration::run(SketchKind::Srht, &[0.5, 0.25, 0.1], &cfg));
+        println!("{}", concentration::render_table(&rows));
+        concentration::dump_csv("concentration", &rows).expect("write csv");
+        println!("-> results/concentration.csv");
+    }
+    if matches!(what.as_str(), "adaptive_bounds" | "all") {
+        ran_any = true;
+        println!("=== Theorems 5-6: adaptive sketch-size / rejection bounds ===");
+        let cfg = adaptive_bounds::BoundsConfig::quick();
+        let rows = adaptive_bounds::run(&cfg, &[10.0, 1.0, 0.1]);
+        println!("{}", adaptive_bounds::render_table(&rows));
+        adaptive_bounds::dump_csv("adaptive_bounds", &rows).expect("write csv");
+        println!("-> results/adaptive_bounds.csv");
+    }
+    if matches!(what.as_str(), "complexity" | "all") {
+        ran_any = true;
+        println!("=== Theorem 7: complexity decomposition & crossover ===");
+        let cfg = if paper { complexity::ComplexityConfig::paper() } else { complexity::ComplexityConfig::quick() };
+        let rows = complexity::run(&cfg, &[100.0, 10.0, 1.0, 0.1, 0.01]);
+        println!("{}", complexity::render_table(&rows));
+        complexity::dump_csv("complexity", &rows).expect("write csv");
+        println!("-> results/complexity.csv");
+    }
+
+    if !ran_any {
+        eprintln!("unknown experiment: {what}");
+        std::process::exit(2);
+    }
+}

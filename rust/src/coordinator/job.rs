@@ -1,0 +1,331 @@
+//! Job model: what a client may ask the coordinator to solve, and the
+//! lifecycle of a submitted job.
+
+use crate::data::synthetic::{self, SpectrumProfile};
+use crate::linalg::Matrix;
+use crate::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
+use crate::solvers::cg::{self, CgConfig};
+use crate::solvers::pcg::{self, PcgConfig};
+use crate::solvers::{direct, RidgeProblem, SolveReport, StopRule};
+use crate::rng::Xoshiro256;
+use crate::sketch::SketchKind;
+use crate::util::json::Json;
+
+/// Monotonic job identifier.
+pub type JobId = u64;
+
+/// The data a job runs on. Workloads are generated server-side from a
+/// spec (shipping an 8k x 1k matrix over the wire would dwarf solve time;
+/// the spec is also what makes runs reproducible).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Workload {
+    /// Synthetic dataset with a named profile (see [`crate::data`]).
+    Synthetic { profile: String, n: usize, d: usize, seed: u64 },
+    /// Raw problem supplied in-process (library users; not on the wire).
+    Inline { a: Matrix, b: Vec<f64> },
+}
+
+impl Workload {
+    /// Materialize the data matrix and observations.
+    pub fn materialize(&self) -> Result<(Matrix, Vec<f64>), String> {
+        match self {
+            Workload::Inline { a, b } => Ok((a.clone(), b.clone())),
+            Workload::Synthetic { profile, n, d, seed } => {
+                let ds = match profile.as_str() {
+                    "exp" => synthetic::exponential_decay(*n, *d, *seed),
+                    "poly" => synthetic::polynomial_decay(*n, *d, *seed),
+                    "mnist-like" => synthetic::mnist_like(*n, *d, *seed),
+                    "cifar-like" => synthetic::cifar_like(*n, *d, *seed),
+                    other => {
+                        if let Some(rate) = other.strip_prefix("exp:") {
+                            let rate: f64 = rate.parse().map_err(|_| format!("bad rate in {other}"))?;
+                            synthetic::generate(*n, *d, &SpectrumProfile::Exponential { rate }, *seed, other)
+                        } else {
+                            return Err(format!("unknown workload profile: {other}"));
+                        }
+                    }
+                };
+                Ok((ds.a, ds.b))
+            }
+        }
+    }
+}
+
+/// Which solver a job uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverChoice {
+    Adaptive { kind: SketchKind, variant: AdaptiveVariant },
+    Cg,
+    Pcg { kind: SketchKind },
+}
+
+impl SolverChoice {
+    pub fn parse(name: &str) -> Result<Self, String> {
+        match name {
+            "adaptive" | "adaptive-gaussian" => Ok(SolverChoice::Adaptive {
+                kind: SketchKind::Gaussian,
+                variant: AdaptiveVariant::PolyakFirst,
+            }),
+            "adaptive-srht" => Ok(SolverChoice::Adaptive {
+                kind: SketchKind::Srht,
+                variant: AdaptiveVariant::PolyakFirst,
+            }),
+            "adaptive-gd" | "adaptive-gd-gaussian" => Ok(SolverChoice::Adaptive {
+                kind: SketchKind::Gaussian,
+                variant: AdaptiveVariant::GradientOnly,
+            }),
+            "adaptive-gd-srht" => Ok(SolverChoice::Adaptive {
+                kind: SketchKind::Srht,
+                variant: AdaptiveVariant::GradientOnly,
+            }),
+            "cg" => Ok(SolverChoice::Cg),
+            "pcg" | "pcg-srht" => Ok(SolverChoice::Pcg { kind: SketchKind::Srht }),
+            "pcg-gaussian" => Ok(SolverChoice::Pcg { kind: SketchKind::Gaussian }),
+            other => Err(format!("unknown solver: {other}")),
+        }
+    }
+}
+
+/// A full job specification.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub workload: Workload,
+    pub nu: f64,
+    pub solver: SolverChoice,
+    /// Relative precision target; measured against the direct solution
+    /// (the coordinator computes the oracle, mirroring the paper's
+    /// experimental protocol).
+    pub eps: f64,
+    pub seed: u64,
+    /// Non-empty: run a warm-started regularization path over these
+    /// (strictly decreasing) nu values instead of the single solve at
+    /// `nu` — the Figure-1 workload as a service.
+    pub path_nus: Vec<f64>,
+}
+
+/// Lifecycle states. Jobs only ever move forward.
+#[derive(Clone, Debug)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done(Box<SolveOutcome>),
+    Failed(String),
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_))
+    }
+}
+
+/// Result payload of a finished job.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    /// For path jobs: the report of the final path point (cumulative wall
+    /// time in `wall_time_s`); per-point detail in `path_points`.
+    pub report: SolveReport,
+    /// Solution vector at the final point (returned on request).
+    pub x: Vec<f64>,
+    /// `(nu, cumulative_time_s, iterations, peak_m, converged)` per path
+    /// point; empty for single solves.
+    pub path_points: Vec<(f64, f64, usize, usize, bool)>,
+}
+
+impl SolveOutcome {
+    /// Wire representation (without the solution vector unless asked).
+    pub fn to_json(&self, include_x: bool) -> Json {
+        let r = &self.report;
+        let mut fields = vec![
+            ("solver", Json::from(r.solver.clone())),
+            ("iterations", Json::from(r.iterations)),
+            ("rejections", Json::from(r.rejections)),
+            ("doublings", Json::from(r.doublings)),
+            ("final_m", Json::from(r.final_m)),
+            ("peak_m", Json::from(r.peak_m)),
+            ("wall_time_s", Json::from(r.wall_time_s)),
+            ("sketch_time_s", Json::from(r.sketch_time_s)),
+            ("factor_time_s", Json::from(r.factor_time_s)),
+            ("iter_time_s", Json::from(r.iter_time_s)),
+            ("converged", Json::from(r.converged)),
+        ];
+        if let Some(e) = r.final_rel_error {
+            fields.push(("final_rel_error", Json::from(e)));
+        }
+        if include_x {
+            fields.push(("x", Json::Arr(self.x.iter().map(|&v| Json::from(v)).collect())));
+        }
+        if !self.path_points.is_empty() {
+            fields.push((
+                "path",
+                Json::Arr(
+                    self.path_points
+                        .iter()
+                        .map(|&(nu, t, iters, m, conv)| {
+                            Json::obj(vec![
+                                ("nu", Json::from(nu)),
+                                ("cum_time_s", Json::from(t)),
+                                ("iterations", Json::from(iters)),
+                                ("peak_m", Json::from(m)),
+                                ("converged", Json::from(conv)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Execute a job spec to completion (runs on a scheduler worker).
+pub fn execute(spec: &JobSpec) -> Result<SolveOutcome, String> {
+    let (a, b) = spec.workload.materialize()?;
+    if a.rows() < a.cols() {
+        return Err("underdetermined workloads go through the dual API".into());
+    }
+    if !spec.path_nus.is_empty() {
+        return execute_path(spec, &a, &b);
+    }
+    let problem = RidgeProblem::new(a, b, spec.nu);
+    let x_star = direct::solve(&problem);
+    let stop = StopRule::TrueError { x_star, eps: spec.eps };
+    let d = problem.d();
+    let x0 = vec![0.0; d];
+
+    let solution = match spec.solver {
+        SolverChoice::Cg => cg::solve(&problem, &x0, &CgConfig { max_iters: 200_000, stop }),
+        SolverChoice::Pcg { kind } => {
+            let mut rng = Xoshiro256::seed_from_u64(spec.seed);
+            pcg::solve(&problem, &x0, &PcgConfig::new(kind, 0.5, stop), &mut rng)
+        }
+        SolverChoice::Adaptive { kind, variant } => {
+            let mut cfg = AdaptiveConfig::new(kind, stop);
+            cfg.variant = variant;
+            adaptive::solve(&problem, &x0, &cfg, spec.seed)
+        }
+    };
+    Ok(SolveOutcome { report: solution.report, x: solution.x, path_points: Vec::new() })
+}
+
+/// Run a warm-started regularization path (Figure-1 workload) as one job.
+fn execute_path(spec: &JobSpec, a: &Matrix, b: &[f64]) -> Result<SolveOutcome, String> {
+    use crate::solvers::path::{run_path, PathSolver};
+    for w in spec.path_nus.windows(2) {
+        if w[0] <= w[1] {
+            return Err("path nus must be strictly decreasing".into());
+        }
+    }
+    let solver = match spec.solver {
+        SolverChoice::Cg => PathSolver::Cg,
+        SolverChoice::Pcg { kind } => PathSolver::Pcg { kind, rho: 0.5 },
+        SolverChoice::Adaptive { kind, variant } => PathSolver::Adaptive { kind, variant },
+    };
+    let res = run_path(a, b, &spec.path_nus, spec.eps, &solver, spec.seed);
+    let path_points: Vec<(f64, f64, usize, usize, bool)> = res
+        .points
+        .iter()
+        .map(|p| {
+            (p.nu, p.cumulative_time_s, p.report.iterations, p.report.peak_m, p.report.converged)
+        })
+        .collect();
+    let mut report = res.points.last().unwrap().report.clone();
+    report.wall_time_s = res.total_time_s();
+    report.peak_m = res.peak_m();
+    report.converged = res.points.iter().all(|p| p.report.converged);
+    report.solver = format!("path-{}", res.solver);
+    Ok(SolveOutcome { report, x: Vec::new(), path_points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(solver: &str) -> JobSpec {
+        JobSpec {
+            workload: Workload::Synthetic { profile: "exp".into(), n: 128, d: 16, seed: 1 },
+            nu: 0.5,
+            solver: SolverChoice::parse(solver).unwrap(),
+            eps: 1e-8,
+            seed: 7,
+            path_nus: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn execute_adaptive_job() {
+        let out = execute(&spec("adaptive")).unwrap();
+        assert!(out.report.converged);
+        assert_eq!(out.x.len(), 16);
+    }
+
+    #[test]
+    fn execute_cg_and_pcg_jobs() {
+        assert!(execute(&spec("cg")).unwrap().report.converged);
+        assert!(execute(&spec("pcg-srht")).unwrap().report.converged);
+    }
+
+    #[test]
+    fn solver_parse_rejects_unknown() {
+        assert!(SolverChoice::parse("nope").is_err());
+        assert_eq!(
+            SolverChoice::parse("adaptive-gd-srht").unwrap(),
+            SolverChoice::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly }
+        );
+    }
+
+    #[test]
+    fn workload_profiles_materialize() {
+        for p in ["exp", "poly", "mnist-like", "cifar-like", "exp:0.9"] {
+            let w = Workload::Synthetic { profile: p.into(), n: 64, d: 8, seed: 2 };
+            let (a, b) = w.materialize().unwrap();
+            assert_eq!((a.rows(), a.cols(), b.len()), (64, 8, 64), "{p}");
+        }
+        let bad = Workload::Synthetic { profile: "nope".into(), n: 64, d: 8, seed: 2 };
+        assert!(bad.materialize().is_err());
+    }
+
+    #[test]
+    fn outcome_json_shape() {
+        let out = execute(&spec("adaptive")).unwrap();
+        let j = out.to_json(false);
+        assert!(j.get("iterations").is_some());
+        assert!(j.get("x").is_none());
+        let jx = out.to_json(true);
+        assert_eq!(jx.get("x").unwrap().as_arr().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn execute_path_job() {
+        let mut sp = spec("adaptive-srht");
+        sp.path_nus = vec![10.0, 1.0, 0.1];
+        let out = execute(&sp).unwrap();
+        assert!(out.report.converged);
+        assert_eq!(out.path_points.len(), 3);
+        assert!(out.report.solver.starts_with("path-"));
+        // Cumulative times monotone.
+        for w in out.path_points.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        let j = out.to_json(false);
+        assert_eq!(j.get("path").unwrap().as_arr().unwrap().len(), 3);
+        // Unsorted path rejected.
+        sp.path_nus = vec![0.1, 1.0];
+        assert!(execute(&sp).is_err());
+    }
+
+    #[test]
+    fn state_labels() {
+        assert_eq!(JobState::Queued.label(), "queued");
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Failed("x".into()).is_terminal());
+    }
+}

@@ -1,0 +1,137 @@
+//! Process-wide metrics: counters plus a streaming latency aggregate.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Counters are lock-free; the latency aggregate takes a short mutex.
+#[derive(Debug)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    /// Submissions rejected by backpressure.
+    pub rejected: AtomicU64,
+    solve_time: Mutex<LatencyAgg>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct LatencyAgg {
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            solve_time: Mutex::new(LatencyAgg::default()),
+        }
+    }
+
+    /// Record one solve latency (seconds).
+    pub fn record_solve_time(&self, seconds: f64) {
+        let mut agg = self.solve_time.lock().unwrap();
+        if agg.count == 0 {
+            agg.min = seconds;
+            agg.max = seconds;
+        } else {
+            agg.min = agg.min.min(seconds);
+            agg.max = agg.max.max(seconds);
+        }
+        agg.count += 1;
+        agg.sum += seconds;
+        agg.sum_sq += seconds * seconds;
+    }
+
+    /// Mean solve latency (0 if none recorded).
+    pub fn mean_solve_time(&self) -> f64 {
+        let agg = self.solve_time.lock().unwrap();
+        if agg.count == 0 {
+            0.0
+        } else {
+            agg.sum / agg.count as f64
+        }
+    }
+
+    /// JSON snapshot for the `metrics` wire command.
+    pub fn to_json(&self) -> Json {
+        let agg = *self.solve_time.lock().unwrap();
+        let mean = if agg.count > 0 { agg.sum / agg.count as f64 } else { 0.0 };
+        let var = if agg.count > 1 {
+            (agg.sum_sq - agg.sum * agg.sum / agg.count as f64) / (agg.count as f64 - 1.0)
+        } else {
+            0.0
+        };
+        Json::obj(vec![
+            ("submitted", Json::from(self.submitted.load(Ordering::Relaxed) as usize)),
+            ("completed", Json::from(self.completed.load(Ordering::Relaxed) as usize)),
+            ("failed", Json::from(self.failed.load(Ordering::Relaxed) as usize)),
+            ("rejected", Json::from(self.rejected.load(Ordering::Relaxed) as usize)),
+            ("solve_time_mean_s", Json::from(mean)),
+            ("solve_time_std_s", Json::from(var.max(0.0).sqrt())),
+            ("solve_time_min_s", Json::from(agg.min)),
+            ("solve_time_max_s", Json::from(agg.max)),
+            ("solve_count", Json::from(agg.count as usize)),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_start_at_zero() {
+        let m = Metrics::new();
+        let j = m.to_json();
+        assert_eq!(j.get("submitted").unwrap().as_usize(), Some(0));
+        assert_eq!(m.mean_solve_time(), 0.0);
+    }
+
+    #[test]
+    fn latency_aggregation() {
+        let m = Metrics::new();
+        for t in [0.1, 0.2, 0.3] {
+            m.record_solve_time(t);
+        }
+        assert!((m.mean_solve_time() - 0.2).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("solve_count").unwrap().as_usize(), Some(3));
+        assert!((j.get("solve_time_min_s").unwrap().as_f64().unwrap() - 0.1).abs() < 1e-12);
+        assert!((j.get("solve_time_max_s").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-12);
+        let std = j.get("solve_time_std_s").unwrap().as_f64().unwrap();
+        assert!((std - 0.1).abs() < 1e-9, "std {std}");
+    }
+
+    #[test]
+    fn counters_are_atomic() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.submitted.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 4000);
+    }
+}

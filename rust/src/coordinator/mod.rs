@@ -1,0 +1,25 @@
+//! L3 coordinator: the solver-as-a-service layer.
+//!
+//! The paper's contribution is an algorithm, so L3 is a *thin but real*
+//! service around it (per DESIGN.md §2): a job queue + worker pool that
+//! runs ridge solves and regularization paths, a metrics registry, and a
+//! TCP server speaking line-delimited JSON. The event loop, process
+//! topology, and metrics live in Rust; solves call into the solver stack
+//! and (optionally) the PJRT runtime for the AOT hot path.
+//!
+//! * [`job`] — job specifications (workload x solver x stop rule) and the
+//!   job state machine.
+//! * [`scheduler`] — worker pool with a bounded queue and backpressure.
+//! * [`metrics`] — process-wide counters and latency aggregates.
+//! * [`protocol`] — wire encoding of requests/responses.
+//! * [`server`] — `std::net` TCP front end (thread per connection).
+
+pub mod job;
+pub mod metrics;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use job::{JobId, JobSpec, JobState, SolverChoice, Workload};
+pub use scheduler::Scheduler;
+pub use server::Server;

@@ -1,0 +1,164 @@
+//! Wire protocol: line-delimited JSON over TCP.
+//!
+//! Requests (one JSON object per line):
+//! ```json
+//! {"cmd":"solve","profile":"mnist-like","n":1024,"d":128,"nu":1.0,
+//!  "solver":"adaptive-srht","eps":1e-8,"seed":7}
+//! {"cmd":"status","job":3}
+//! {"cmd":"wait","job":3,"timeout_s":60}
+//! {"cmd":"result","job":3,"include_x":true}
+//! {"cmd":"metrics"}
+//! {"cmd":"ping"}
+//! {"cmd":"shutdown"}
+//! ```
+//! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+
+use super::job::{JobSpec, SolverChoice, Workload};
+use crate::util::json::{self, Json};
+
+/// A decoded client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Solve(JobSpec),
+    Status { job: u64 },
+    Wait { job: u64, timeout_s: f64 },
+    Result { job: u64, include_x: bool },
+    Metrics,
+    Ping,
+    Shutdown,
+}
+
+/// Decode one request line.
+pub fn decode(line: &str) -> Result<Request, String> {
+    let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+    let cmd = v.get("cmd").and_then(Json::as_str).ok_or("missing cmd")?;
+    match cmd {
+        "solve" => {
+            let profile = v.get("profile").and_then(Json::as_str).unwrap_or("exp").to_string();
+            let n = v.get("n").and_then(Json::as_usize).unwrap_or(1024);
+            let d = v.get("d").and_then(Json::as_usize).unwrap_or(128);
+            let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
+            let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
+            let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let solver_name = v.get("solver").and_then(Json::as_str).unwrap_or("adaptive");
+            let solver = SolverChoice::parse(solver_name)?;
+            // Optional "nus": [..] turns the job into a warm-started
+            // regularization path (Figure-1 workload as a service).
+            let path_nus: Vec<f64> = v
+                .get("nus")
+                .and_then(Json::as_arr)
+                .map(|arr| arr.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default();
+            Ok(Request::Solve(JobSpec {
+                workload: Workload::Synthetic { profile, n, d, seed },
+                nu,
+                solver,
+                eps,
+                seed,
+                path_nus,
+            }))
+        }
+        "status" => Ok(Request::Status { job: require_job(&v)? }),
+        "wait" => Ok(Request::Wait {
+            job: require_job(&v)?,
+            timeout_s: v.get("timeout_s").and_then(Json::as_f64).unwrap_or(120.0),
+        }),
+        "result" => Ok(Request::Result {
+            job: require_job(&v)?,
+            include_x: v.get("include_x").and_then(Json::as_bool).unwrap_or(false),
+        }),
+        "metrics" => Ok(Request::Metrics),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!("unknown cmd: {other}")),
+    }
+}
+
+fn require_job(v: &Json) -> Result<u64, String> {
+    v.get("job")
+        .and_then(Json::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| "missing job id".to_string())
+}
+
+/// Encode a success response.
+pub fn ok(mut fields: Vec<(&str, Json)>) -> String {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields).to_string()
+}
+
+/// Encode an error response.
+pub fn err(message: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(message))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_solve_with_defaults() {
+        let r = decode(r#"{"cmd":"solve"}"#).unwrap();
+        match r {
+            Request::Solve(spec) => {
+                assert_eq!(spec.nu, 1.0);
+                assert!(matches!(spec.workload, Workload::Synthetic { ref profile, .. } if profile == "exp"));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decode_full_solve() {
+        let line = r#"{"cmd":"solve","profile":"cifar-like","n":2048,"d":256,"nu":0.1,
+                       "solver":"adaptive-srht","eps":1e-10,"seed":42}"#;
+        match decode(&line.replace('\n', " ")).unwrap() {
+            Request::Solve(spec) => {
+                assert_eq!(spec.eps, 1e-10);
+                assert_eq!(spec.seed, 42);
+                assert!(matches!(spec.solver, SolverChoice::Adaptive { .. }));
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decode_path_solve() {
+        let r = decode(r#"{"cmd":"solve","profile":"exp","nus":[10,1,0.1]}"#).unwrap();
+        match r {
+            Request::Solve(spec) => assert_eq!(spec.path_nus, vec![10.0, 1.0, 0.1]),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decode_control_commands() {
+        assert!(matches!(decode(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping));
+        assert!(matches!(decode(r#"{"cmd":"metrics"}"#).unwrap(), Request::Metrics));
+        assert!(matches!(decode(r#"{"cmd":"shutdown"}"#).unwrap(), Request::Shutdown));
+        assert!(matches!(
+            decode(r#"{"cmd":"wait","job":3,"timeout_s":5}"#).unwrap(),
+            Request::Wait { job: 3, .. }
+        ));
+    }
+
+    #[test]
+    fn decode_errors() {
+        assert!(decode("not json").is_err());
+        assert!(decode(r#"{"cmd":"status"}"#).is_err(), "missing job id");
+        assert!(decode(r#"{"cmd":"explode"}"#).is_err());
+        assert!(decode(r#"{"cmd":"solve","solver":"bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn response_encoding() {
+        let line = ok(vec![("job", Json::from(3usize))]);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("job").unwrap().as_usize(), Some(3));
+        let e = err("boom");
+        let v = json::parse(&e).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("boom"));
+    }
+}

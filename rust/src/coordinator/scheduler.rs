@@ -1,0 +1,299 @@
+//! Worker-pool scheduler with a bounded queue and backpressure.
+//!
+//! Invariants (exercised by the property tests in `rust/tests/`):
+//! * every accepted job reaches exactly one terminal state;
+//! * job ids are unique and monotonically increasing;
+//! * at most `workers` jobs run concurrently;
+//! * `submit` returns `QueueFull` instead of blocking when the backlog
+//!   reaches `queue_cap` (backpressure, never unbounded memory).
+
+use super::job::{self, JobId, JobSpec, JobState};
+use super::metrics::Metrics;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Submission error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full"),
+            SubmitError::ShuttingDown => write!(f, "scheduler shutting down"),
+        }
+    }
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<(JobId, JobSpec)>>,
+    states: Mutex<HashMap<JobId, JobState>>,
+    /// Signals workers (new job / shutdown) and waiters (state change).
+    cv: Condvar,
+    state_cv: Condvar,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    queue_cap: usize,
+    pub metrics: Metrics,
+}
+
+/// The scheduler handle (cheaply clonable via `Arc`).
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Start a scheduler with `workers` threads and a queue bound.
+    pub fn start(workers: usize, queue_cap: usize) -> Self {
+        assert!(workers >= 1);
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            states: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            state_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+            queue_cap,
+            metrics: Metrics::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("effdim-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { inner, workers: handles }
+    }
+
+    /// Submit a job; returns its id, or backpressure.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        if self.inner.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let mut queue = self.inner.queue.lock().unwrap();
+        if queue.len() >= self.inner.queue_cap {
+            self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::QueueFull);
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
+        self.inner.states.lock().unwrap().insert(id, JobState::Queued);
+        queue.push_back((id, spec));
+        self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        drop(queue);
+        self.inner.cv.notify_one();
+        Ok(id)
+    }
+
+    /// Snapshot of a job's state (`None` for unknown ids).
+    pub fn status(&self, id: JobId) -> Option<JobState> {
+        self.inner.states.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until the job is terminal (or `timeout` elapses). Returns the
+    /// final state if it terminated in time.
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobState> {
+        let deadline = Instant::now() + timeout;
+        let mut states = self.inner.states.lock().unwrap();
+        loop {
+            match states.get(&id) {
+                None => return None,
+                Some(s) if s.is_terminal() => return Some(s.clone()),
+                Some(_) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return states.get(&id).cloned();
+                    }
+                    let (guard, _) = self
+                        .inner
+                        .state_cv
+                        .wait_timeout(states, deadline - now)
+                        .unwrap();
+                    states = guard;
+                }
+            }
+        }
+    }
+
+    /// Number of queued (not yet running) jobs.
+    pub fn backlog(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    /// Process-wide metrics handle.
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    /// Stop accepting jobs, finish the backlog, join the workers.
+    pub fn shutdown(mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let next = {
+            let mut queue = inner.queue.lock().unwrap();
+            loop {
+                if let Some(item) = queue.pop_front() {
+                    break Some(item);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                queue = inner.cv.wait(queue).unwrap();
+            }
+        };
+        let Some((id, spec)) = next else { return };
+
+        {
+            let mut states = inner.states.lock().unwrap();
+            states.insert(id, JobState::Running);
+        }
+        inner.state_cv.notify_all();
+
+        let start = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job::execute(&spec)));
+        let elapsed = start.elapsed().as_secs_f64();
+
+        let state = match result {
+            Ok(Ok(outcome)) => {
+                inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                inner.metrics.record_solve_time(elapsed);
+                JobState::Done(Box::new(outcome))
+            }
+            Ok(Err(msg)) => {
+                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                JobState::Failed(msg)
+            }
+            Err(panic) => {
+                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "worker panicked".into());
+                JobState::Failed(format!("panic: {msg}"))
+            }
+        };
+        inner.states.lock().unwrap().insert(id, state);
+        inner.state_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{SolverChoice, Workload};
+
+    fn quick_spec(seed: u64) -> JobSpec {
+        JobSpec {
+            workload: Workload::Synthetic { profile: "exp".into(), n: 64, d: 8, seed },
+            nu: 1.0,
+            solver: SolverChoice::Cg,
+            eps: 1e-6,
+            seed,
+            path_nus: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn submit_run_wait_roundtrip() {
+        let s = Scheduler::start(2, 16);
+        let id = s.submit(quick_spec(1)).unwrap();
+        let state = s.wait(id, Duration::from_secs(30)).expect("job known");
+        match state {
+            JobState::Done(out) => assert!(out.report.converged),
+            other => panic!("unexpected state {other:?}"),
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn ids_unique_and_increasing() {
+        let s = Scheduler::start(1, 64);
+        let ids: Vec<JobId> = (0..8).map(|i| s.submit(quick_spec(i)).unwrap()).collect();
+        for w in ids.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn backpressure_kicks_in() {
+        // One worker + cap 1: the third rapid submit must be rejected
+        // (one running, one queued).
+        let s = Scheduler::start(1, 1);
+        let _a = s.submit(quick_spec(1)).unwrap();
+        let mut rejected = false;
+        for i in 0..50 {
+            match s.submit(quick_spec(i + 2)) {
+                Err(SubmitError::QueueFull) => {
+                    rejected = true;
+                    break;
+                }
+                Ok(_) => {}
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected, "queue should have filled");
+        s.shutdown();
+    }
+
+    #[test]
+    fn failed_job_reports_error() {
+        let s = Scheduler::start(1, 8);
+        let mut spec = quick_spec(1);
+        spec.workload = Workload::Synthetic { profile: "nope".into(), n: 64, d: 8, seed: 1 };
+        let id = s.submit(spec).unwrap();
+        let state = s.wait(id, Duration::from_secs(10)).unwrap();
+        assert!(matches!(state, JobState::Failed(ref m) if m.contains("unknown workload")));
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_id_is_none() {
+        let s = Scheduler::start(1, 8);
+        assert!(s.status(999).is_none());
+        assert!(s.wait(999, Duration::from_millis(10)).is_none());
+        s.shutdown();
+    }
+
+    #[test]
+    fn all_jobs_reach_terminal_state() {
+        let s = Scheduler::start(3, 64);
+        let ids: Vec<JobId> = (0..12).map(|i| s.submit(quick_spec(i)).unwrap()).collect();
+        for id in &ids {
+            let state = s.wait(*id, Duration::from_secs(60)).unwrap();
+            assert!(state.is_terminal(), "job {id} not terminal");
+        }
+        let m = s.metrics();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 12);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 12);
+        s.shutdown();
+    }
+}

@@ -1,0 +1,251 @@
+//! TCP front end: `std::net` listener, one thread per connection,
+//! line-delimited JSON (see [`super::protocol`]).
+
+use super::job::JobState;
+use super::protocol::{self, Request};
+use super::scheduler::Scheduler;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The coordinator server. Owns the scheduler.
+pub struct Server {
+    scheduler: Arc<Scheduler>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) with a
+    /// worker pool of the given size.
+    pub fn bind(addr: &str, workers: usize) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        // Poll for shutdown between accepts.
+        listener.set_nonblocking(true)?;
+        Ok(Self {
+            scheduler: Arc::new(Scheduler::start(workers, 256)),
+            listener,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Bound address (for clients when using an ephemeral port).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound listener")
+    }
+
+    /// Handle returned to request a stop from another thread.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop. Returns when `shutdown` is requested (via command or
+    /// the stop handle).
+    pub fn run(&self) {
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _addr)) => {
+                    let scheduler = Arc::clone(&self.scheduler);
+                    let stop = Arc::clone(&self.stop);
+                    conns.push(std::thread::spawn(move || {
+                        handle_connection(stream, &scheduler, &stop);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(_) => break,
+            }
+            conns.retain(|h| !h.is_finished());
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, scheduler: &Scheduler, stop: &AtomicBool) {
+    // Short read timeout so the thread re-checks the stop flag instead of
+    // blocking forever on an idle client (run() joins these threads at
+    // shutdown; an indefinite blocking read would deadlock the server).
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // client closed
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Timeout may leave a partial line buffered in `line`;
+                // keep it and retry.
+                continue;
+            }
+            Err(_) => return,
+        }
+        let request = std::mem::take(&mut line);
+        if request.trim().is_empty() {
+            continue;
+        }
+        let response = match protocol::decode(&request) {
+            Err(e) => protocol::err(&e),
+            Ok(req) => respond(req, scheduler, stop),
+        };
+        if writer.write_all(response.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            return;
+        }
+    }
+}
+
+fn respond(req: Request, scheduler: &Scheduler, stop: &AtomicBool) -> String {
+    match req {
+        Request::Ping => protocol::ok(vec![("pong", Json::Bool(true))]),
+        Request::Metrics => protocol::ok(vec![
+            ("metrics", scheduler.metrics().to_json()),
+            ("backlog", Json::from(scheduler.backlog())),
+        ]),
+        Request::Shutdown => {
+            stop.store(true, Ordering::SeqCst);
+            protocol::ok(vec![("stopping", Json::Bool(true))])
+        }
+        Request::Solve(spec) => match scheduler.submit(spec) {
+            Ok(id) => protocol::ok(vec![("job", Json::from(id as usize))]),
+            Err(e) => protocol::err(&e.to_string()),
+        },
+        Request::Status { job } => match scheduler.status(job) {
+            None => protocol::err("unknown job"),
+            Some(state) => protocol::ok(vec![("state", Json::from(state.label()))]),
+        },
+        Request::Wait { job, timeout_s } => {
+            match scheduler.wait(job, Duration::from_secs_f64(timeout_s.max(0.0))) {
+                None => protocol::err("unknown job"),
+                Some(state) => state_response(state, false),
+            }
+        }
+        Request::Result { job, include_x } => match scheduler.status(job) {
+            None => protocol::err("unknown job"),
+            Some(state) => state_response(state, include_x),
+        },
+    }
+}
+
+fn state_response(state: JobState, include_x: bool) -> String {
+    match state {
+        JobState::Done(outcome) => protocol::ok(vec![
+            ("state", Json::from("done")),
+            ("result", outcome.to_json(include_x)),
+        ]),
+        JobState::Failed(msg) => protocol::ok(vec![
+            ("state", Json::from("failed")),
+            ("error", Json::from(msg)),
+        ]),
+        other => protocol::ok(vec![("state", Json::from(other.label()))]),
+    }
+}
+
+/// Minimal blocking client for tests, examples, and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line, read one response line, parse it.
+    pub fn call(&mut self, request: &str) -> Result<Json, String> {
+        self.writer
+            .write_all(request.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        crate::util::json::parse(line.trim()).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start_server() -> (std::net::SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let server = Server::bind("127.0.0.1:0", 2).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let handle = std::thread::spawn(move || server.run());
+        (addr, stop, handle)
+    }
+
+    #[test]
+    fn ping_and_metrics() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let pong = client.call(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+        let metrics = client.call(r#"{"cmd":"metrics"}"#).unwrap();
+        assert!(metrics.get("metrics").is_some());
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn solve_roundtrip_over_tcp() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client
+            .call(r#"{"cmd":"solve","profile":"exp","n":128,"d":16,"nu":0.5,"solver":"adaptive","eps":1e-8,"seed":3}"#)
+            .unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let job = resp.get("job").unwrap().as_usize().unwrap();
+        let done = client
+            .call(&format!(r#"{{"cmd":"wait","job":{job},"timeout_s":60}}"#))
+            .unwrap();
+        assert_eq!(done.get("state").unwrap().as_str(), Some("done"));
+        let result = done.get("result").unwrap();
+        assert_eq!(result.get("converged").unwrap().as_bool(), Some(true));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_requests_get_errors() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client.call("garbage").unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        let resp = client.call(r#"{"cmd":"status","job":12345}"#).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_command_stops_server() {
+        let (addr, _stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client.call(r#"{"cmd":"shutdown"}"#).unwrap();
+        assert_eq!(resp.get("stopping").unwrap().as_bool(), Some(true));
+        handle.join().unwrap();
+    }
+}

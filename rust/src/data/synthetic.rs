@@ -1,0 +1,264 @@
+//! Synthetic ridge-regression workloads with controlled spectra.
+
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+use crate::sketch::srht::{fwht_rows, next_pow2};
+use crate::theory::effective_dimension_from_spectrum;
+
+/// Singular-value profile of the generated data matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpectrumProfile {
+    /// `sigma_j = rate^j`, `j = 0..d` — Appendix A.1's exponential decay
+    /// (paper uses `rate = 0.95`).
+    Exponential { rate: f64 },
+    /// `sigma_j = 1/(j+1)` — Appendix A.1's polynomial decay.
+    Polynomial,
+    /// `sigma_j = scale * (exp(-j/tau) + floor)` — image-dataset surrogate:
+    /// a steep head (dominant PCA directions) over a flat tail (pixel
+    /// noise floor), the shape of MNIST/CIFAR gram spectra.
+    ExponentialWithFloor { tau: f64, floor: f64, scale: f64 },
+    /// Explicit singular values (tests, custom experiments).
+    Explicit(Vec<f64>),
+}
+
+impl SpectrumProfile {
+    /// Materialize the `d` singular values, descending.
+    pub fn singular_values(&self, d: usize) -> Vec<f64> {
+        let mut s: Vec<f64> = match self {
+            SpectrumProfile::Exponential { rate } => {
+                (0..d).map(|j| rate.powi(j as i32)).collect()
+            }
+            SpectrumProfile::Polynomial => (0..d).map(|j| 1.0 / (j as f64 + 1.0)).collect(),
+            SpectrumProfile::ExponentialWithFloor { tau, floor, scale } => (0..d)
+                .map(|j| scale * ((-(j as f64) / tau).exp() + floor))
+                .collect(),
+            SpectrumProfile::Explicit(v) => {
+                assert_eq!(v.len(), d, "explicit spectrum length mismatch");
+                v.clone()
+            }
+        };
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(*s.last().unwrap() > 0.0, "spectrum must be positive (rank(A) = d)");
+        s
+    }
+}
+
+/// A generated ridge workload.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Data matrix, `n x d`.
+    pub a: Matrix,
+    /// Observations, length `n`.
+    pub b: Vec<f64>,
+    /// Exact singular values of `a` (descending) — free `d_e` computation.
+    pub sigma: Vec<f64>,
+    /// Human-readable name for reports.
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Effective dimension at regularization `nu` (exact, from the stored
+    /// spectrum).
+    pub fn effective_dimension(&self, nu: f64) -> f64 {
+        effective_dimension_from_spectrum(&self.sigma, nu)
+    }
+
+    /// Condition number of the augmented matrix `[A; nu I]`.
+    pub fn condition_number(&self, nu: f64) -> f64 {
+        let s1 = self.sigma[0];
+        let sd = *self.sigma.last().unwrap();
+        ((s1 * s1 + nu * nu) / (sd * sd + nu * nu)).sqrt()
+    }
+}
+
+/// Draw an implicit random orthonormal `n x d` factor applied to `w`:
+/// returns `Q w` where `Q = H_n diag(eps) P_rows` is a randomized Hadamard
+/// basis (exactly orthogonal columns). `w` is `d x d`; the result embeds
+/// `w`'s rows at random distinct positions, sign-flips, and mixes with the
+/// FWHT — `O(n d log n)`.
+fn random_orthonormal_apply(n: usize, w: &Matrix, rng: &mut Xoshiro256) -> Matrix {
+    let d = w.cols();
+    assert!(w.rows() == d && d <= n);
+    let n_pad = next_pow2(n);
+    // Scatter the rows of w into d random distinct rows of the padded
+    // buffer (this is P^T w), then sign-flip and FWHT.
+    let positions = rng.sample_without_replacement(n_pad, d);
+    let mut work = Matrix::zeros(n_pad, d);
+    for (r, &pos) in positions.iter().enumerate() {
+        let sign = rng.next_rademacher();
+        let src = w.row(r);
+        let dst = work.row_mut(pos);
+        for k in 0..d {
+            dst[k] = sign * src[k];
+        }
+    }
+    fwht_rows(&mut work);
+    // Normalized Hadamard: scale 1/sqrt(n_pad). Restricting H diag(eps) P
+    // to the first n rows of n_pad is NOT orthogonal when n < n_pad, so we
+    // require n == n_pad for exact orthogonality; otherwise fall back to
+    // keeping all n_pad rows conceptually and subsampling would break the
+    // spectrum. We therefore demand power-of-two n at generation time.
+    assert_eq!(n, n_pad, "dataset n must be a power of two (got {n})");
+    let scale = 1.0 / (n_pad as f64).sqrt();
+    let mut out = Matrix::zeros(n, d);
+    for i in 0..n {
+        let src = work.row(i);
+        let dst = out.row_mut(i);
+        for k in 0..d {
+            dst[k] = scale * src[k];
+        }
+    }
+    out
+}
+
+/// Generate `A = U diag(sigma) V^T` (`U`: randomized Hadamard basis in
+/// `R^{n x d}`, `V`: randomized Hadamard basis in `R^{d x d}`) plus planted
+/// observations. `n` and `d` must be powers of two.
+pub fn generate(n: usize, d: usize, profile: &SpectrumProfile, seed: u64, name: &str) -> Dataset {
+    assert!(n >= d, "overdetermined generator needs n >= d");
+    assert!(d.is_power_of_two(), "dataset d must be a power of two (got {d})");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let sigma = profile.singular_values(d);
+
+    // w = diag(sigma) V^T where V^T = (H_d diag(eps))/sqrt(d) row-permuted.
+    let mut vt = Matrix::zeros(d, d);
+    {
+        let perm = rng.sample_without_replacement(d, d);
+        for (i, &p) in perm.iter().enumerate() {
+            vt.set(i, p, rng.next_rademacher());
+        }
+        fwht_rows(&mut vt);
+        let scale = 1.0 / (d as f64).sqrt();
+        for x in vt.as_mut_slice() {
+            *x *= scale;
+        }
+    }
+    let mut w = vt;
+    for i in 0..d {
+        let s = sigma[i];
+        for x in w.row_mut(i) {
+            *x *= s;
+        }
+    }
+
+    let a = random_orthonormal_apply(n, &w, &mut rng);
+
+    // b = A x_planted + noise  (Appendix A.1).
+    let mut x_pl = vec![0.0; d];
+    rng.fill_gaussian(&mut x_pl, 1.0 / (d as f64).sqrt());
+    let mut b = a.matvec(&x_pl);
+    let noise_sigma = 1.0 / (n as f64).sqrt();
+    for bi in b.iter_mut() {
+        *bi += noise_sigma * rng.next_gaussian();
+    }
+
+    Dataset { a, b, sigma, name: name.to_string() }
+}
+
+/// Appendix A.1 exponential-decay workload (`sigma_j = 0.95^j`).
+pub fn exponential_decay(n: usize, d: usize, seed: u64) -> Dataset {
+    generate(n, d, &SpectrumProfile::Exponential { rate: 0.95 }, seed, "synthetic-exp")
+}
+
+/// Appendix A.1 polynomial-decay workload (`sigma_j = 1/j`).
+pub fn polynomial_decay(n: usize, d: usize, seed: u64) -> Dataset {
+    generate(n, d, &SpectrumProfile::Polynomial, seed, "synthetic-poly")
+}
+
+/// MNIST-like surrogate: steep spectral head with a small tail floor,
+/// mirroring the gram spectrum of centered MNIST pixels (a few dominant
+/// stroke directions, fast decay, tiny pixel-noise floor). Defaults:
+/// `n = 8192`, `d = 512`.
+pub fn mnist_like(n: usize, d: usize, seed: u64) -> Dataset {
+    let profile = SpectrumProfile::ExponentialWithFloor { tau: d as f64 / 24.0, floor: 1e-4, scale: 40.0 };
+    generate(n, d, &profile, seed, "mnist-like")
+}
+
+/// CIFAR-like surrogate: slower decay and a heavier tail than MNIST
+/// (natural-image statistics keep more directions alive), so `d_e` is
+/// larger at equal `nu`. Defaults: `n = 8192`, `d = 1024`.
+pub fn cifar_like(n: usize, d: usize, seed: u64) -> Dataset {
+    let profile = SpectrumProfile::ExponentialWithFloor { tau: d as f64 / 10.0, floor: 3e-4, scale: 60.0 };
+    generate(n, d, &profile, seed, "cifar-like")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::singular_values;
+
+    #[test]
+    fn generated_spectrum_matches_request() {
+        let ds = exponential_decay(64, 16, 1);
+        let measured = singular_values(&ds.a);
+        for (m, e) in measured.iter().zip(&ds.sigma) {
+            assert!((m - e).abs() < 1e-9, "measured {m} expected {e}");
+        }
+    }
+
+    #[test]
+    fn polynomial_spectrum_matches() {
+        let ds = polynomial_decay(64, 8, 2);
+        let measured = singular_values(&ds.a);
+        for (j, m) in measured.iter().enumerate() {
+            assert!((m - 1.0 / (j as f64 + 1.0)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn observations_have_planted_signal() {
+        // ||b|| should be dominated by the signal, not the noise.
+        let ds = exponential_decay(256, 32, 3);
+        let b_norm = crate::linalg::norm2(&ds.b);
+        assert!(b_norm > 0.1, "b looks like pure noise: {b_norm}");
+        assert_eq!(ds.b.len(), 256);
+    }
+
+    #[test]
+    fn effective_dimension_sane() {
+        let ds = mnist_like(1024, 128, 4);
+        let de_small_nu = ds.effective_dimension(1e-3);
+        let de_large_nu = ds.effective_dimension(10.0);
+        assert!(de_small_nu <= 128.0 + 1e-9);
+        assert!(de_large_nu < de_small_nu);
+        assert!(de_large_nu > 0.0);
+    }
+
+    #[test]
+    fn mnist_like_has_smaller_de_than_cifar_like() {
+        // The substitution preserves the paper's regime: CIFAR's heavier
+        // tail keeps more effective directions at moderate nu.
+        let m = mnist_like(1024, 256, 5);
+        let c = cifar_like(1024, 256, 6);
+        let nu = 1.0;
+        assert!(m.effective_dimension(nu) < c.effective_dimension(nu));
+    }
+
+    #[test]
+    fn condition_number_improves_with_regularization() {
+        let ds = polynomial_decay(128, 32, 7);
+        assert!(ds.condition_number(1.0) < ds.condition_number(0.01));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d1 = exponential_decay(64, 8, 42);
+        let d2 = exponential_decay(64, 8, 42);
+        assert!(d1.a.max_abs_diff(&d2.a) == 0.0);
+        assert_eq!(d1.b, d2.b);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two_n() {
+        exponential_decay(100, 8, 1);
+    }
+}

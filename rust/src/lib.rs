@@ -1,0 +1,53 @@
+//! # effdim — Effective Dimension Adaptive Sketching for Regularized Least-Squares
+//!
+//! A production-quality reproduction of *"Effective Dimension Adaptive
+//! Sketching Methods for Faster Regularized Least-Squares Optimization"*
+//! (Lacotte & Pilanci, NeurIPS 2020), built as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The library solves
+//! ```text
+//! x* = argmin_x  1/2 ||A x - b||^2 + nu^2/2 ||x||^2
+//! ```
+//! via the **adaptive Iterative Hessian Sketch** (Algorithm 1 of the paper):
+//! a Polyak/gradient heavy-ball iteration preconditioned by the sketched
+//! Hessian `H_S = (SA)^T (SA) + nu^2 I`, whose sketch size `m` starts at 1
+//! and doubles only when the *sketched Newton decrement* shows insufficient
+//! progress — so `m` never exceeds `O(d_e)` where
+//! `d_e = trace(A (A^T A + nu^2 I)^{-1} A^T)` is the effective dimension.
+//!
+//! ## Layout
+//! * [`linalg`] — dense linear-algebra substrate (blocked GEMM, Cholesky,
+//!   Householder QR, Golub–Kahan SVD, triangular solves).
+//! * [`rng`] — deterministic xoshiro256++ RNG with Gaussian / Rademacher
+//!   streams.
+//! * [`sketch`] — Gaussian, SRHT (fast Walsh–Hadamard) and sparse
+//!   (CountSketch) embeddings.
+//! * [`theory`] — closed-form convergence rates, step sizes and the
+//!   concentration bounds of Theorems 3–7.
+//! * [`data`] — synthetic workload generators matching the paper's
+//!   experimental section (exp/poly spectral decays, MNIST/CIFAR-like
+//!   surrogates).
+//! * [`solvers`] — direct Cholesky, CG, preconditioned CG, fixed-size IHS,
+//!   **adaptive IHS (Algorithm 1)**, dual solver, regularization-path
+//!   driver.
+//! * [`runtime`] — PJRT executor for AOT-compiled JAX/Pallas artifacts plus
+//!   a shape-generic native backend.
+//! * [`coordinator`] — the L3 service: job scheduler, solve state machine,
+//!   event bus, metrics, tokio TCP server.
+//! * [`bench_harness`] — regenerates every figure/table of the paper.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod solvers;
+pub mod theory;
+pub mod util;
+
+pub use linalg::matrix::Matrix;
+pub use solvers::adaptive::{AdaptiveConfig, AdaptiveSolver, AdaptiveVariant};
+pub use solvers::{RidgeProblem, SolveReport};

@@ -1,0 +1,191 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used for (i) the direct ridge solver (`A^T A + nu^2 I`), (ii) the cached
+//! Woodbury factor `nu^2 I_m + (SA)(SA)^T` at each sketch-size change, and
+//! (iii) the pCG baseline's normal-equations fallback. The factorization is
+//! the classic row-oriented `L L^T` with an optional diagonal jitter retry
+//! for matrices at the edge of positive definiteness.
+
+use super::matrix::Matrix;
+use super::triangular::{solve_lower, solve_lower_transpose};
+
+/// A lower-triangular Cholesky factor `L` with `L L^T = M`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+/// Error raised when the input is not (numerically) positive definite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite {
+    /// Pivot index at which the factorization broke down.
+    pub pivot: usize,
+    /// Value of the failing diagonal element.
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "matrix not positive definite: pivot {} has value {:.3e}",
+            self.pivot, self.value
+        )
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix. Only the lower triangle
+    /// of `m` is read.
+    pub fn factor(m: &Matrix) -> Result<Self, NotPositiveDefinite> {
+        let n = m.rows();
+        assert_eq!(m.cols(), n, "Cholesky needs a square matrix");
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // s = m[i][j] - sum_k l[i][k] l[j][k]
+                let (li, lj) = (l.row(i), l.row(j));
+                let s = m.get(i, j) - super::dot(&li[..j], &lj[..j]);
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(NotPositiveDefinite { pivot: i, value: s });
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.get(j, j));
+                }
+            }
+        }
+        Ok(Self { l })
+    }
+
+    /// Factor with escalating diagonal jitter (`eps * trace/n * 10^k`).
+    /// Returns the factor and the jitter actually applied.
+    pub fn factor_with_jitter(m: &Matrix, max_tries: usize) -> Result<(Self, f64), NotPositiveDefinite> {
+        match Self::factor(m) {
+            Ok(c) => return Ok((c, 0.0)),
+            Err(e) if max_tries == 0 => return Err(e),
+            Err(_) => {}
+        }
+        let n = m.rows();
+        let mean_diag = (0..n).map(|i| m.get(i, i)).sum::<f64>() / n as f64;
+        let mut jitter = 1e-12 * mean_diag.abs().max(1e-300);
+        let mut last_err = NotPositiveDefinite { pivot: 0, value: 0.0 };
+        for _ in 0..max_tries {
+            let mut mj = m.clone();
+            mj.add_diag(jitter);
+            match Self::factor(&mj) {
+                Ok(c) => return Ok((c, jitter)),
+                Err(e) => last_err = e,
+            }
+            jitter *= 10.0;
+        }
+        Err(last_err)
+    }
+
+    /// The lower-triangular factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `M x = b` via the two triangular solves.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = solve_lower(&self.l, b);
+        solve_lower_transpose(&self.l, &y)
+    }
+
+    /// Solve for several right-hand sides stacked as matrix columns.
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Matrix::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b.get(i, j);
+            }
+            let x = self.solve(&col);
+            for i in 0..n {
+                out.set(i, j, x[i]);
+            }
+        }
+        out
+    }
+
+    /// log-determinant of `M` (`= 2 sum log L_ii`).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let a = Matrix::from_fn(n + 3, n, |_, _| rng.next_gaussian());
+        let mut g = a.gram();
+        g.add_diag(0.5);
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let m = spd(12, 1);
+        let c = Cholesky::factor(&m).unwrap();
+        let rec = c.l().matmul(&c.l().transpose());
+        assert!(rec.max_abs_diff(&m) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_residual() {
+        let m = spd(15, 2);
+        let c = Cholesky::factor(&m).unwrap();
+        let b: Vec<f64> = (0..15).map(|i| (i as f64 * 0.11).sin()).collect();
+        let x = c.solve(&b);
+        let r = m.matvec(&x);
+        for i in 0..15 {
+            assert!((r[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_mat_columnwise() {
+        let m = spd(8, 3);
+        let c = Cholesky::factor(&m).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let b = Matrix::from_fn(8, 3, |_, _| rng.next_gaussian());
+        let x = c.solve_mat(&b);
+        let r = m.matmul(&x);
+        assert!(r.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut m = Matrix::eye(3);
+        m.set(2, 2, -1.0);
+        assert!(Cholesky::factor(&m).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_semidefinite() {
+        // Rank-deficient Gram matrix: x x^T.
+        let x = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let m = x.matmul(&x.transpose());
+        assert!(Cholesky::factor(&m).is_err());
+        let (c, jitter) = Cholesky::factor_with_jitter(&m, 16).unwrap();
+        assert!(jitter > 0.0);
+        let rec = c.l().matmul(&c.l().transpose());
+        assert!(rec.max_abs_diff(&m) < 1e-3);
+    }
+
+    #[test]
+    fn log_det_identity_is_zero() {
+        let c = Cholesky::factor(&Matrix::eye(5)).unwrap();
+        assert!(c.log_det().abs() < 1e-14);
+    }
+}

@@ -1,0 +1,379 @@
+//! Row-major dense matrix with cache-blocked multiplication.
+//!
+//! The hot operations in this repository are `S * A` (sketching),
+//! `A^T (A x - b)` (ridge gradient) and small Gram products
+//! `(SA)(SA)^T`; all of them reduce to the GEMM / GEMV kernels here.
+
+use super::{axpy, dot};
+
+/// Dense row-major `rows x cols` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+/// GEMM blocking parameters, tuned for ~32 KiB L1 / 1 MiB L2 caches.
+/// `MC x KC` panel of the packed left operand plus a `KC x NC` slab of the
+/// right operand stay cache-resident during the inner loops.
+const MC: usize = 64;
+const KC: usize = 256;
+const NC: usize = 512;
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw mutable row-major data.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Explicit transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// `y = self * x` (GEMV). Row-major layout makes this a stream of dots.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// `y = self^T * x` without forming the transpose (axpy over rows).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dimension mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), &mut y);
+        }
+        y
+    }
+
+    /// Blocked GEMM: `C = self * other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dimension mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Matrix::zeros(m, n);
+        // Packed panel of A (MC x KC), contiguous by row.
+        let mut apack = vec![0.0; MC * KC];
+        for jc in (0..n).step_by(NC) {
+            let nb = NC.min(n - jc);
+            for pc in (0..k).step_by(KC) {
+                let kb = KC.min(k - pc);
+                for ic in (0..m).step_by(MC) {
+                    let mb = MC.min(m - ic);
+                    // Pack A[ic..ic+mb, pc..pc+kb].
+                    for i in 0..mb {
+                        let src = &self.data[(ic + i) * k + pc..(ic + i) * k + pc + kb];
+                        apack[i * kb..(i + 1) * kb].copy_from_slice(src);
+                    }
+                    // Micro loops: for each packed row of A, stream rows of
+                    // B. Four rank-1 updates are fused per pass so each
+                    // C-row element is loaded/stored once per 8 flops
+                    // instead of once per 2 (the op would otherwise be
+                    // store-bound; see EXPERIMENTS.md §Perf).
+                    for i in 0..mb {
+                        let arow = &apack[i * kb..(i + 1) * kb];
+                        let crow = &mut c.data[(ic + i) * n + jc..(ic + i) * n + jc + nb];
+                        let kq = kb / 8 * 8;
+                        let mut p = 0;
+                        while p < kq {
+                            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+                            let (a4, a5, a6, a7) =
+                                (arow[p + 4], arow[p + 5], arow[p + 6], arow[p + 7]);
+                            let base = (pc + p) * n + jc;
+                            let b0 = &other.data[base..base + nb];
+                            let b1 = &other.data[base + n..base + n + nb];
+                            let b2 = &other.data[base + 2 * n..base + 2 * n + nb];
+                            let b3 = &other.data[base + 3 * n..base + 3 * n + nb];
+                            let b4 = &other.data[base + 4 * n..base + 4 * n + nb];
+                            let b5 = &other.data[base + 5 * n..base + 5 * n + nb];
+                            let b6 = &other.data[base + 6 * n..base + 6 * n + nb];
+                            let b7 = &other.data[base + 7 * n..base + 7 * n + nb];
+                            for j in 0..nb {
+                                let s0 = a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                                let s1 = a4 * b4[j] + a5 * b5[j] + a6 * b6[j] + a7 * b7[j];
+                                crow[j] += s0 + s1;
+                            }
+                            p += 8;
+                        }
+                        for (off, &aip) in arow[kq..].iter().enumerate() {
+                            if aip == 0.0 {
+                                continue;
+                            }
+                            let base = (pc + kq + off) * n + jc;
+                            axpy(aip, &other.data[base..base + nb], crow);
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = self^T * self` (Gram matrix), exploiting symmetry: only the
+    /// upper triangle is computed, then mirrored.
+    pub fn gram(&self) -> Matrix {
+        let (n, d) = (self.rows, self.cols);
+        let mut g = Matrix::zeros(d, d);
+        // Accumulate rank-1 updates row by row (sequential access to A).
+        for i in 0..n {
+            let r = &self.data[i * d..(i + 1) * d];
+            for a in 0..d {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[a * d..(a + 1) * d];
+                for b in a..d {
+                    grow[b] += ra * r[b];
+                }
+            }
+        }
+        for a in 0..d {
+            for b in 0..a {
+                g.data[a * d + b] = g.data[b * d + a];
+            }
+        }
+        g
+    }
+
+    /// `C = self * self^T` (outer Gram), symmetric.
+    pub fn gram_outer(&self) -> Matrix {
+        let n = self.rows;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            let ri = self.row(i);
+            for j in i..n {
+                let v = dot(ri, self.row(j));
+                g.data[i * n + j] = v;
+                g.data[j * n + i] = v;
+            }
+        }
+        g
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        dot(&self.data, &self.data).sqrt()
+    }
+
+    /// `self += alpha * other`.
+    pub fn add_scaled(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        axpy(alpha, &other.data, &mut self.data);
+    }
+
+    /// Add `alpha` to the diagonal (ridge shift).
+    pub fn add_diag(&mut self, alpha: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Maximum absolute entry difference against `other`.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a.get(i, p) * b.get(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn test_mat(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.next_gaussian())
+    }
+
+    #[test]
+    fn matmul_matches_naive_awkward_shapes() {
+        // Shapes straddling the blocking boundaries.
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (65, 257, 33), (70, 300, 513), (128, 64, 17)] {
+            let a = test_mat(m, k, 1);
+            let b = test_mat(k, n, 2);
+            let c = a.matmul(&b);
+            let c0 = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&c0) < 1e-9, "mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let a = test_mat(31, 17, 3);
+        let x: Vec<f64> = (0..17).map(|i| (i as f64).sin()).collect();
+        let xm = Matrix::from_vec(17, 1, x.clone());
+        let y = a.matvec(&x);
+        let ym = a.matmul(&xm);
+        for i in 0..31 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_is_transpose_matvec() {
+        let a = test_mat(23, 11, 4);
+        let x: Vec<f64> = (0..23).map(|i| (i as f64).cos()).collect();
+        let y1 = a.matvec_t(&x);
+        let y2 = a.transpose().matvec(&x);
+        for i in 0..11 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let a = test_mat(19, 7, 5);
+        let g = a.gram();
+        let g0 = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&g0) < 1e-10);
+    }
+
+    #[test]
+    fn gram_outer_matches_explicit() {
+        let a = test_mat(9, 13, 6);
+        let g = a.gram_outer();
+        let g0 = a.matmul(&a.transpose());
+        assert!(g.max_abs_diff(&g0) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = test_mat(12, 29, 7);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        let a = test_mat(8, 8, 8);
+        let i = Matrix::eye(8);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-14);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn add_diag_shifts_spectrum() {
+        let mut a = Matrix::zeros(3, 3);
+        a.add_diag(2.5);
+        for i in 0..3 {
+            assert_eq!(a.get(i, i), 2.5);
+        }
+    }
+}

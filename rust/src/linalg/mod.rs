@@ -1,0 +1,91 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's experiments were run on NumPy/LAPACK; this repository
+//! implements its own dense kernels so the whole stack is self-contained
+//! and auditable:
+//!
+//! * [`matrix`] — row-major [`matrix::Matrix`], blocked GEMM, GEMV, basic
+//!   vector ops.
+//! * [`cholesky`] — Cholesky factorization + positive-definite solves.
+//! * [`qr`] — Householder QR (used by the pCG baseline's preconditioner).
+//! * [`svd`] — one-sided Jacobi SVD (singular values for `d_e`, spectra,
+//!   and test oracles).
+//! * [`triangular`] — forward/back substitution.
+//! * [`sparse`] — CSR storage + `O(nnz)` kernels (paper Remark 4.1).
+
+pub mod cholesky;
+pub mod matrix;
+pub mod sparse;
+pub mod qr;
+pub mod svd;
+pub mod triangular;
+
+pub use matrix::Matrix;
+
+/// Euclidean norm of a vector.
+pub fn norm2(v: &[f64]) -> f64 {
+    dot(v, v).sqrt()
+}
+
+/// Dot product (unrolled x4 to let the compiler vectorize).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = 4 * i;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in 4 * chunks..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `v *= alpha`.
+pub fn scale(alpha: f64, v: &mut [f64]) {
+    for x in v.iter_mut() {
+        *x *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..13).map(|i| (i * i) as f64 * 0.5).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn norm2_pythagorean() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,264 @@
+//! Householder QR factorization.
+//!
+//! The pCG baseline (Rokhlin–Tygert) preconditions CG on the ridge system
+//! with the R-factor of the sketched matrix `[SA; nu I]`; this module
+//! provides the thin QR it needs, plus `q_explicit` for tests and for the
+//! SVD's re-orthogonalization step.
+
+use super::matrix::Matrix;
+use super::{axpy, dot, norm2};
+
+/// Compact Householder QR of an `m x n` matrix with `m >= n`:
+/// stores the Householder vectors in-place below R.
+#[derive(Clone, Debug)]
+pub struct QR {
+    /// Upper triangle holds R; columns below the diagonal hold the
+    /// (unnormalized tail of the) Householder vectors.
+    qr: Matrix,
+    /// Scalar `tau_k = 2 / ||v_k||^2` per reflector (0 for a no-op).
+    tau: Vec<f64>,
+}
+
+impl QR {
+    /// Factor `a` (consumed) into QR. Requires `rows >= cols`.
+    pub fn factor(mut a: Matrix) -> Self {
+        let (m, n) = (a.rows(), a.cols());
+        assert!(m >= n, "QR requires rows >= cols (got {m} x {n})");
+        let mut tau = vec![0.0; n];
+        let mut v = vec![0.0; m];
+        for k in 0..n {
+            // Build the reflector for column k, rows k..m.
+            let mut alpha = 0.0;
+            for i in k..m {
+                let x = a.get(i, k);
+                v[i] = x;
+                alpha += x * x;
+            }
+            alpha = alpha.sqrt();
+            if alpha == 0.0 {
+                tau[k] = 0.0;
+                continue;
+            }
+            // Choose the sign that avoids cancellation.
+            if v[k] > 0.0 {
+                alpha = -alpha;
+            }
+            v[k] -= alpha;
+            let vnorm2 = dot(&v[k..m], &v[k..m]);
+            if vnorm2 == 0.0 {
+                tau[k] = 0.0;
+                a.set(k, k, alpha);
+                continue;
+            }
+            let t = 2.0 / vnorm2;
+            tau[k] = t;
+            // Apply I - t v v^T to the trailing columns k..n.
+            for j in k..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += v[i] * a.get(i, j);
+                }
+                let st = s * t;
+                for i in k..m {
+                    let val = a.get(i, j) - st * v[i];
+                    a.set(i, j, val);
+                }
+            }
+            // Store: R_kk = alpha already set by the reflection
+            // (a[k][k] == alpha up to roundoff); stash v tail below.
+            for i in k + 1..m {
+                a.set(i, k, v[i] / v[k]); // scaled so v[k] == 1 implicitly
+            }
+            // Rescale tau to account for the v[k]=1 normalization.
+            tau[k] = t * v[k] * v[k];
+        }
+        Self { qr: a, tau }
+    }
+
+    /// Number of rows of the original matrix.
+    pub fn rows(&self) -> usize {
+        self.qr.rows()
+    }
+
+    /// Number of columns of the original matrix.
+    pub fn cols(&self) -> usize {
+        self.qr.cols()
+    }
+
+    /// Extract the thin `n x n` upper-triangular factor R.
+    pub fn r(&self) -> Matrix {
+        let n = self.qr.cols();
+        Matrix::from_fn(n, n, |i, j| if j >= i { self.qr.get(i, j) } else { 0.0 })
+    }
+
+    /// Apply `Q^T` to a length-`m` vector in place.
+    pub fn apply_qt(&self, x: &mut [f64]) {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(x.len(), m);
+        for k in 0..n {
+            let t = self.tau[k];
+            if t == 0.0 {
+                continue;
+            }
+            // v = [1, qr[k+1..m][k]]
+            let mut s = x[k];
+            for i in k + 1..m {
+                s += self.qr.get(i, k) * x[i];
+            }
+            let st = s * t;
+            x[k] -= st;
+            for i in k + 1..m {
+                x[i] -= st * self.qr.get(i, k);
+            }
+        }
+    }
+
+    /// Apply `Q` to a length-`m` vector in place.
+    pub fn apply_q(&self, x: &mut [f64]) {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(x.len(), m);
+        for k in (0..n).rev() {
+            let t = self.tau[k];
+            if t == 0.0 {
+                continue;
+            }
+            let mut s = x[k];
+            for i in k + 1..m {
+                s += self.qr.get(i, k) * x[i];
+            }
+            let st = s * t;
+            x[k] -= st;
+            for i in k + 1..m {
+                x[i] -= st * self.qr.get(i, k);
+            }
+        }
+    }
+
+    /// Materialize the thin `m x n` orthonormal factor Q.
+    pub fn q_thin(&self) -> Matrix {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        let mut q = Matrix::zeros(m, n);
+        let mut e = vec![0.0; m];
+        for j in 0..n {
+            e.iter_mut().for_each(|x| *x = 0.0);
+            e[j] = 1.0;
+            self.apply_q(&mut e);
+            for i in 0..m {
+                q.set(i, j, e[i]);
+            }
+        }
+        q
+    }
+
+    /// Least-squares solve `min ||a x - b||` using the factorization.
+    pub fn solve_ls(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.qr.cols();
+        let mut y = b.to_vec();
+        self.apply_qt(&mut y);
+        // Back substitution on the top n x n triangle.
+        let mut x = y[..n].to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.qr.get(i, j) * x[j];
+            }
+            let d = self.qr.get(i, i);
+            assert!(d != 0.0, "rank-deficient R at {i}");
+            x[i] = s / d;
+        }
+        x
+    }
+}
+
+/// Modified Gram–Schmidt orthonormalization of the columns of `a`
+/// (returns an `m x n` matrix with orthonormal columns). Used where a full
+/// Householder Q would be overkill.
+pub fn mgs_orthonormalize(a: &Matrix) -> Matrix {
+    let (m, n) = (a.rows(), a.cols());
+    let mut q = a.transpose(); // work on rows = original columns
+    let mut qj_copy = vec![0.0; m];
+    for k in 0..n {
+        // Re-orthogonalize twice for stability ("twice is enough").
+        for _ in 0..2 {
+            for j in 0..k {
+                qj_copy.copy_from_slice(q.row(j));
+                let c = dot(q.row(k), &qj_copy);
+                axpy(-c, &qj_copy, q.row_mut(k));
+            }
+        }
+        let nrm = norm2(q.row(k));
+        if nrm > 0.0 {
+            let inv = 1.0 / nrm;
+            for x in q.row_mut(k) {
+                *x *= inv;
+            }
+        }
+    }
+    q.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn test_mat(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Matrix::from_fn(m, n, |_, _| rng.next_gaussian())
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        for &(m, n) in &[(5, 5), (12, 7), (33, 8)] {
+            let a = test_mat(m, n, 1);
+            let f = QR::factor(a.clone());
+            let rec = f.q_thin().matmul(&f.r());
+            assert!(rec.max_abs_diff(&a) < 1e-9, "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let a = test_mat(20, 6, 2);
+        let q = QR::factor(a).q_thin();
+        let qtq = q.gram();
+        assert!(qtq.max_abs_diff(&Matrix::eye(6)) < 1e-10);
+    }
+
+    #[test]
+    fn qt_then_q_roundtrip() {
+        let a = test_mat(15, 4, 3);
+        let f = QR::factor(a);
+        let x0: Vec<f64> = (0..15).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut x = x0.clone();
+        f.apply_qt(&mut x);
+        f.apply_q(&mut x);
+        for i in 0..15 {
+            assert!((x[i] - x0[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn least_squares_matches_normal_equations() {
+        let a = test_mat(25, 5, 4);
+        let b: Vec<f64> = (0..25).map(|i| (i as f64 * 0.17).cos()).collect();
+        let x_qr = QR::factor(a.clone()).solve_ls(&b);
+        // Normal equations solution.
+        let g = a.gram();
+        let rhs = a.matvec_t(&b);
+        let x_ne = crate::linalg::cholesky::Cholesky::factor(&g).unwrap().solve(&rhs);
+        for i in 0..5 {
+            assert!((x_qr[i] - x_ne[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn mgs_orthonormal_columns() {
+        let a = test_mat(18, 5, 5);
+        let q = mgs_orthonormalize(&a);
+        assert!(q.gram().max_abs_diff(&Matrix::eye(5)) < 1e-10);
+        // Span preserved: a's columns representable by q.
+        let proj = q.matmul(&q.transpose().matmul(&a));
+        assert!(proj.max_abs_diff(&a) < 1e-8);
+    }
+}

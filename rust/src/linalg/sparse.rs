@@ -1,0 +1,234 @@
+//! Compressed sparse row (CSR) matrices — the substrate for the paper's
+//! Remark 4.1: with sparse data, embeddings whose application costs
+//! `O(nnz(A))` (CountSketch, [`crate::sketch::sparse`]) replace the dense
+//! `O(mnd)` / `O(nd log n)` sketches. This module provides the storage and
+//! the `O(nnz)` matvec/sketch building blocks; the deviation analysis for
+//! sparse embeddings is future work in the paper and out of scope here.
+
+use super::matrix::Matrix;
+
+/// CSR matrix: `indptr[i]..indptr[i+1]` indexes row `i`'s entries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut sorted: Vec<(usize, usize, f64)> = triplets.to_vec();
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f64> = Vec::with_capacity(sorted.len());
+        for &(r, c, v) in &sorted {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if let (Some(&last_c), true) = (indices.last(), indptr[r + 1] > 0) {
+                // Same row (indptr counting below) and same column: merge.
+                if indptr[r + 1] == indices.len() && last_c == c as u32 {
+                    *values.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            indices.push(c as u32);
+            values.push(v);
+            indptr[r + 1] = indices.len();
+        }
+        // Forward-fill row pointers for empty rows.
+        for i in 1..=rows {
+            if indptr[i] < indptr[i - 1] {
+                indptr[i] = indptr[i - 1];
+            }
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &Matrix) -> Self {
+        let (rows, cols) = (a.rows(), a.cols());
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..rows {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density `nnz / (rows * cols)`.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Row accessor: `(column indices, values)`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let span = self.indptr[i]..self.indptr[i + 1];
+        (&self.indices[span.clone()], &self.values[span])
+    }
+
+    /// Densify (tests / small matrices only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let dst = out.row_mut(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                dst[c as usize] += v;
+            }
+        }
+        out
+    }
+
+    /// `y = A x` in `O(nnz)`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut s = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                s += v * x[c as usize];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// `y = A^T x` in `O(nnz)` (scatter over rows).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                y[c as usize] += v * xi;
+            }
+        }
+        y
+    }
+
+    /// Ridge gradient on sparse data: `A^T(Ax - b) + nu^2 x`, `O(nnz)`.
+    pub fn ridge_gradient(&self, x: &[f64], b: &[f64], nu: f64) -> Vec<f64> {
+        assert_eq!(b.len(), self.rows);
+        let mut r = self.matvec(x);
+        for (ri, bi) in r.iter_mut().zip(b) {
+            *ri -= bi;
+        }
+        let mut g = self.matvec_t(&r);
+        for (gi, xi) in g.iter_mut().zip(x) {
+            *gi += nu * nu * xi;
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_sparse(rows: usize, cols: usize, density: f64, seed: u64) -> (CsrMatrix, Matrix) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let dense = Matrix::from_fn(rows, cols, |_, _| {
+            if rng.next_f64() < density {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        });
+        (CsrMatrix::from_dense(&dense), dense)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let (csr, dense) = random_sparse(17, 9, 0.2, 1);
+        assert!(csr.to_dense().max_abs_diff(&dense) == 0.0);
+        assert!(csr.density() < 0.4);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let (csr, dense) = random_sparse(23, 11, 0.3, 2);
+        let x: Vec<f64> = (0..11).map(|i| (i as f64 * 0.4).sin()).collect();
+        let ys = csr.matvec(&x);
+        let yd = dense.matvec(&x);
+        for i in 0..23 {
+            assert!((ys[i] - yd[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let (csr, dense) = random_sparse(15, 21, 0.25, 3);
+        let x: Vec<f64> = (0..15).map(|i| (i as f64 * 0.7).cos()).collect();
+        let ys = csr.matvec_t(&x);
+        let yd = dense.matvec_t(&x);
+        for i in 0..21 {
+            assert!((ys[i] - yd[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ridge_gradient_matches_dense_problem() {
+        let (csr, dense) = random_sparse(32, 8, 0.3, 4);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut b = vec![0.0; 32];
+        rng.fill_gaussian(&mut b, 1.0);
+        let p = crate::solvers::RidgeProblem::new(dense, b.clone(), 0.6);
+        let x: Vec<f64> = (0..8).map(|i| i as f64 * 0.1).collect();
+        let gs = csr.ridge_gradient(&x, &b, 0.6);
+        let gd = p.gradient(&x);
+        for i in 0..8 {
+            assert!((gs[i] - gd[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn triplets_merge_duplicates_and_handle_empty_rows() {
+        let csr = CsrMatrix::from_triplets(
+            4,
+            3,
+            &[(0, 1, 2.0), (0, 1, 3.0), (2, 0, 1.0), (2, 2, -1.0)],
+        );
+        assert_eq!(csr.nnz(), 3);
+        let d = csr.to_dense();
+        assert_eq!(d.get(0, 1), 5.0);
+        assert_eq!(d.get(1, 0), 0.0); // empty row
+        assert_eq!(d.get(2, 2), -1.0);
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let csr = CsrMatrix::from_triplets(3, 3, &[]);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.matvec(&[1.0, 1.0, 1.0]), vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,244 @@
+//! One-sided Jacobi SVD.
+//!
+//! Singular values drive everything in this paper: the effective dimension
+//! `d_e = sum sigma_i^2/(sigma_i^2 + nu^2)`, the diagonal matrix `D`, the
+//! condition number of the augmented matrix, and the eigenvalues of the
+//! deviation matrix `C_S` checked against Theorems 3–4. One-sided Jacobi is
+//! slow (O(n^2 m) per sweep) but simple and accurate to near machine
+//! precision, which is exactly what an oracle needs. It is never on the
+//! solve hot path.
+
+use super::matrix::Matrix;
+use super::{dot, norm2};
+
+/// Thin SVD result: `a = u * diag(s) * vt` with `u: m x k`, `vt: k x n`,
+/// `k = min(m, n)`, singular values descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub vt: Matrix,
+}
+
+/// Compute the thin SVD of `a` by one-sided Jacobi rotations.
+pub fn svd(a: &Matrix) -> Svd {
+    if a.rows() >= a.cols() {
+        svd_tall(a)
+    } else {
+        // SVD of the transpose and swap factors.
+        let t = svd_tall(&a.transpose());
+        Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() }
+    }
+}
+
+/// Singular values only (descending). Cheaper in memory (V not accumulated
+/// into an explicit U), same rotations.
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    let work = if a.rows() >= a.cols() { a.clone() } else { a.transpose() };
+    let (w, _v) = jacobi_sweeps(work, false);
+    let n = w.cols();
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| {
+            let col: Vec<f64> = (0..w.rows()).map(|i| w.get(i, j)).collect();
+            norm2(&col)
+        })
+        .collect();
+    s.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    s
+}
+
+fn svd_tall(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    let (w, v) = jacobi_sweeps(a.clone(), true);
+    let v = v.expect("V accumulated");
+    // Column norms are the singular values; normalize columns into U.
+    let mut entries: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += w.get(i, j) * w.get(i, j);
+            }
+            (s.sqrt(), j)
+        })
+        .collect();
+    entries.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (out_j, &(sig, j)) in entries.iter().enumerate() {
+        s.push(sig);
+        let inv = if sig > 0.0 { 1.0 / sig } else { 0.0 };
+        for i in 0..m {
+            u.set(i, out_j, w.get(i, j) * inv);
+        }
+        for i in 0..n {
+            vt.set(out_j, i, v.get(i, j));
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Run Jacobi sweeps on the columns of `w` until off-diagonal Gram entries
+/// are negligible. Returns the rotated matrix and (optionally) the
+/// accumulated right-rotation matrix V.
+fn jacobi_sweeps(mut w: Matrix, want_v: bool) -> (Matrix, Option<Matrix>) {
+    let (m, n) = (w.rows(), w.cols());
+    let mut v = if want_v { Some(Matrix::eye(n)) } else { None };
+    // Column-major scratch: one-sided Jacobi touches column pairs, so keep
+    // the working matrix transposed (rows = original columns) for locality.
+    let mut wt = w.transpose();
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in p + 1..n {
+                let (alpha, beta, gamma) = {
+                    let cp = wt.row(p);
+                    let cq = wt.row(q);
+                    (dot(cp, cp), dot(cq, cq), dot(cp, cq))
+                };
+                let denom = (alpha * beta).sqrt();
+                if denom == 0.0 {
+                    continue;
+                }
+                let ratio = gamma.abs() / denom;
+                off = off.max(ratio);
+                if ratio <= eps {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Rotate the column pair (rows p, q of wt).
+                rotate_rows(&mut wt, p, q, c, s, m);
+                if let Some(vm) = v.as_mut() {
+                    // V columns rotate identically; V is n x n, stored
+                    // row-major, rotate columns p,q.
+                    for i in 0..n {
+                        let vip = vm.get(i, p);
+                        let viq = vm.get(i, q);
+                        vm.set(i, p, c * vip - s * viq);
+                        vm.set(i, q, s * vip + c * viq);
+                    }
+                }
+            }
+        }
+        if off <= eps {
+            break;
+        }
+    }
+    w = wt.transpose();
+    (w, v)
+}
+
+#[inline]
+fn rotate_rows(wt: &mut Matrix, p: usize, q: usize, c: f64, s: f64, len: usize) {
+    // Rows p and q are disjoint slices of the backing vector.
+    let cols = wt.cols();
+    debug_assert_eq!(cols, len);
+    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+    let data = wt.as_mut_slice();
+    let (head, tail) = data.split_at_mut(hi * cols);
+    let row_lo = &mut head[lo * cols..lo * cols + cols];
+    let row_hi = &mut tail[..cols];
+    if p < q {
+        for i in 0..len {
+            let wp = row_lo[i];
+            let wq = row_hi[i];
+            row_lo[i] = c * wp - s * wq;
+            row_hi[i] = s * wp + c * wq;
+        }
+    } else {
+        for i in 0..len {
+            let wp = row_hi[i];
+            let wq = row_lo[i];
+            row_hi[i] = c * wp - s * wq;
+            row_lo[i] = s * wp + c * wq;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn test_mat(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Matrix::from_fn(m, n, |_, _| rng.next_gaussian())
+    }
+
+    #[test]
+    fn reconstruction_tall() {
+        let a = test_mat(14, 6, 1);
+        let f = svd(&a);
+        let rec = f.u.matmul(&Matrix::diag(&f.s)).matmul(&f.vt);
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn reconstruction_wide() {
+        let a = test_mat(5, 11, 2);
+        let f = svd(&a);
+        let rec = f.u.matmul(&Matrix::diag(&f.s)).matmul(&f.vt);
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let a = test_mat(12, 5, 3);
+        let f = svd(&a);
+        assert!(f.u.gram().max_abs_diff(&Matrix::eye(5)) < 1e-9);
+        assert!(f.vt.gram_outer().max_abs_diff(&Matrix::eye(5)) < 1e-9);
+    }
+
+    #[test]
+    fn values_descending_nonnegative() {
+        let a = test_mat(20, 8, 4);
+        let s = singular_values(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn known_diagonal_spectrum() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let s = singular_values(&a);
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+        assert!((s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // sum sigma_i^2 == ||A||_F^2
+        let a = test_mat(17, 9, 5);
+        let s = singular_values(&a);
+        let sum_sq: f64 = s.iter().map(|x| x * x).sum();
+        let fro2 = a.fro_norm().powi(2);
+        assert!((sum_sq - fro2).abs() < 1e-8 * fro2);
+    }
+
+    #[test]
+    fn rank_deficient_has_zero_singular_value() {
+        // Two identical columns.
+        let a = Matrix::from_fn(6, 3, |i, j| if j == 2 { i as f64 } else { (i + j) as f64 });
+        // col2 = col0 + something? Make exact dependence: col1 = 2*col0.
+        let a = {
+            let mut m = a;
+            for i in 0..6 {
+                let v = m.get(i, 0);
+                m.set(i, 1, 2.0 * v);
+            }
+            m
+        };
+        let s = singular_values(&a);
+        assert!(s[2] < 1e-10, "smallest singular value should vanish, got {}", s[2]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Triangular solves (forward / back substitution).
+//!
+//! These back the Cholesky-based ridge solves and the pCG baseline's
+//! R-factor preconditioner applications — both on the per-iteration hot
+//! path, so the loops are written over contiguous rows only.
+
+use super::matrix::Matrix;
+
+/// Solve `L y = b` with `L` lower-triangular (entries above the diagonal
+/// are ignored). Panics if a diagonal entry is exactly zero.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for i in 0..n {
+        let row = l.row(i);
+        let mut s = y[i];
+        // Contiguous prefix of row i times the solved prefix of y.
+        for j in 0..i {
+            s -= row[j] * y[j];
+        }
+        let d = row[i];
+        assert!(d != 0.0, "singular lower-triangular matrix at {i}");
+        y[i] = s / d;
+    }
+    y
+}
+
+/// Solve `U x = b` with `U` upper-triangular.
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let row = u.row(i);
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= row[j] * x[j];
+        }
+        let d = row[i];
+        assert!(d != 0.0, "singular upper-triangular matrix at {i}");
+        x[i] = s / d;
+    }
+    x
+}
+
+/// Solve `L^T x = b` with `L` lower-triangular, without forming `L^T`.
+pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let d = l.get(i, i);
+        assert!(d != 0.0, "singular matrix at {i}");
+        x[i] /= d;
+        let xi = x[i];
+        // Column i of L below the diagonal == row entries l[j][i], j > i;
+        // here we iterate rows to stay contiguous in memory.
+        for j in 0..i {
+            x[j] -= l.get(i, j) * xi;
+        }
+    }
+    x
+}
+
+/// Solve `U^T y = b` with `U` upper-triangular, without forming `U^T`.
+pub fn solve_upper_transpose(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for i in 0..n {
+        let d = u.get(i, i);
+        assert!(d != 0.0, "singular matrix at {i}");
+        y[i] /= d;
+        let yi = y[i];
+        let row = u.row(i);
+        for j in i + 1..n {
+            y[j] -= row[j] * yi;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_lower(n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Matrix::from_fn(n, n, |i, j| {
+            if j < i {
+                rng.next_gaussian() * 0.3
+            } else if j == i {
+                2.0 + rng.next_f64() // well away from zero
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn lower_solve_roundtrip() {
+        let l = random_lower(9, 1);
+        let x0: Vec<f64> = (0..9).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b = l.matvec(&x0);
+        let x = solve_lower(&l, &b);
+        for i in 0..9 {
+            assert!((x[i] - x0[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn upper_solve_roundtrip() {
+        let u = random_lower(9, 2).transpose();
+        let x0: Vec<f64> = (0..9).map(|i| (i as f64 * 0.3).cos()).collect();
+        let b = u.matvec(&x0);
+        let x = solve_upper(&u, &b);
+        for i in 0..9 {
+            assert!((x[i] - x0[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lower_transpose_solve_matches_explicit() {
+        let l = random_lower(7, 3);
+        let b: Vec<f64> = (0..7).map(|i| i as f64 + 1.0).collect();
+        let x1 = solve_lower_transpose(&l, &b);
+        let x2 = solve_upper(&l.transpose(), &b);
+        for i in 0..7 {
+            assert!((x1[i] - x2[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn upper_transpose_solve_matches_explicit() {
+        let u = random_lower(7, 4).transpose();
+        let b: Vec<f64> = (0..7).map(|i| (i as f64).sqrt()).collect();
+        let y1 = solve_upper_transpose(&u, &b);
+        let y2 = solve_lower(&u.transpose(), &b);
+        for i in 0..7 {
+            assert!((y1[i] - y2[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn singular_diagonal_panics() {
+        let mut l = Matrix::eye(3);
+        l.set(1, 1, 0.0);
+        solve_lower(&l, &[1.0, 1.0, 1.0]);
+    }
+}

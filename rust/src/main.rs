@@ -1,0 +1,202 @@
+//! `effdim` CLI — the L3 entrypoint.
+//!
+//! ```text
+//! effdim solve  --profile mnist-like --n 1024 --d 128 --nu 1.0 \
+//!               --solver adaptive-srht --eps 1e-8 --seed 7
+//! effdim path   --profile exp --n 1024 --d 128 --nus 1e2,1e1,1,0.1 \
+//!               --solver adaptive-srht --eps 1e-8
+//! effdim serve  --addr 127.0.0.1:7199 --workers 2
+//! effdim request --addr 127.0.0.1:7199 --json '{"cmd":"ping"}'
+//! effdim info   --profile cifar-like --n 1024 --d 128 --nu 1.0
+//! ```
+
+use effdim::coordinator::job::{self, JobSpec, SolverChoice, Workload};
+use effdim::coordinator::server::{Client, Server};
+use effdim::data::synthetic;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::AdaptiveVariant;
+use effdim::solvers::path::{run_path, PathSolver};
+use effdim::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("solve") => cmd_solve(&args),
+        Some("path") => cmd_path(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("request") => cmd_request(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: effdim <solve|path|serve|request|info> [--flags]");
+            eprintln!("see `rust/src/main.rs` docs for the flag list");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn workload_from(args: &Args) -> Workload {
+    Workload::Synthetic {
+        profile: args.get_or("profile", "exp").to_string(),
+        n: args.get_usize("n", 1024),
+        d: args.get_usize("d", 128),
+        seed: args.get_u64("seed", 1),
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let spec = JobSpec {
+        workload: workload_from(args),
+        nu: args.get_f64("nu", 1.0),
+        solver: match SolverChoice::parse(args.get_or("solver", "adaptive-srht")) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        eps: args.get_f64("eps", 1e-8),
+        seed: args.get_u64("seed", 1),
+        path_nus: args.get_f64_list("path-nus", &[]),
+    };
+    match job::execute(&spec) {
+        Ok(outcome) => {
+            println!("{}", outcome.to_json(args.has("include-x")).to_string());
+            if outcome.report.converged {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("solve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_path(args: &Args) -> i32 {
+    let n = args.get_usize("n", 1024);
+    let d = args.get_usize("d", 128);
+    let seed = args.get_u64("seed", 1);
+    let profile = args.get_or("profile", "exp");
+    let ds = match profile {
+        "exp" => synthetic::exponential_decay(n, d, seed),
+        "poly" => synthetic::polynomial_decay(n, d, seed),
+        "mnist-like" => synthetic::mnist_like(n, d, seed),
+        "cifar-like" => synthetic::cifar_like(n, d, seed),
+        other => {
+            eprintln!("unknown profile {other}");
+            return 2;
+        }
+    };
+    let nus = args.get_f64_list("nus", &[100.0, 10.0, 1.0, 0.1, 0.01]);
+    let solver = match args.get_or("solver", "adaptive-srht") {
+        "cg" => PathSolver::Cg,
+        "pcg" | "pcg-srht" => PathSolver::Pcg { kind: SketchKind::Srht, rho: 0.5 },
+        "pcg-gaussian" => PathSolver::Pcg { kind: SketchKind::Gaussian, rho: 0.5 },
+        "adaptive" | "adaptive-srht" => {
+            PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst }
+        }
+        "adaptive-gaussian" => {
+            PathSolver::Adaptive { kind: SketchKind::Gaussian, variant: AdaptiveVariant::PolyakFirst }
+        }
+        "adaptive-gd" | "adaptive-gd-srht" => {
+            PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly }
+        }
+        other => {
+            eprintln!("unknown solver {other}");
+            return 2;
+        }
+    };
+    let res = run_path(&ds.a, &ds.b, &nus, args.get_f64("eps", 1e-8), &solver, seed);
+    println!("solver: {}", res.solver);
+    println!(
+        "{:<12} {:>10} {:>12} {:>10} {:>8} {:>6}",
+        "nu", "d_e", "cum_time_s", "iters", "m", "conv"
+    );
+    for p in &res.points {
+        println!(
+            "{:<12.3e} {:>10.1} {:>12.4} {:>10} {:>8} {:>6}",
+            p.nu,
+            ds.effective_dimension(p.nu),
+            p.cumulative_time_s,
+            p.report.iterations,
+            p.report.peak_m,
+            p.report.converged
+        );
+    }
+    if res.points.iter().all(|p| p.report.converged) {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let addr = args.get_or("addr", "127.0.0.1:7199");
+    let workers = args.get_usize("workers", 2);
+    match Server::bind(addr, workers) {
+        Ok(server) => {
+            println!("effdim coordinator listening on {}", server.local_addr());
+            server.run();
+            println!("coordinator stopped");
+            0
+        }
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_request(args: &Args) -> i32 {
+    let addr = args.get_or("addr", "127.0.0.1:7199");
+    let payload = args.get_or("json", r#"{"cmd":"ping"}"#);
+    let addr: std::net::SocketAddr = match addr.parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad addr {addr}: {e}");
+            return 2;
+        }
+    };
+    match Client::connect(addr) {
+        Ok(mut client) => match client.call(payload) {
+            Ok(resp) => {
+                println!("{}", resp.to_string());
+                0
+            }
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let workload = workload_from(args);
+    let (a, _b) = match workload.materialize() {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nu = args.get_f64("nu", 1.0);
+    let sigma = effdim::linalg::svd::singular_values(&a);
+    let d_e = effdim::theory::effective_dimension_from_spectrum(&sigma, nu);
+    println!("n = {}, d = {}", a.rows(), a.cols());
+    println!("sigma_1 = {:.4e}, sigma_d = {:.4e}", sigma[0], sigma.last().unwrap());
+    println!("nu = {nu:.3e}");
+    println!("effective dimension d_e = {d_e:.2}  (d_e/d = {:.3})", d_e / a.cols() as f64);
+    println!(
+        "condition number of [A; nu I] = {:.3e}",
+        ((sigma[0] * sigma[0] + nu * nu) / (sigma.last().unwrap().powi(2) + nu * nu)).sqrt()
+    );
+    0
+}

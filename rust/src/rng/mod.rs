@@ -1,0 +1,247 @@
+//! Deterministic random-number substrate.
+//!
+//! Sketching algorithms are only reproducible if every random draw is
+//! seeded and stream-split explicitly, so we implement a small, fully
+//! deterministic stack instead of pulling in `rand`:
+//!
+//! * [`Xoshiro256`] — xoshiro256++ core generator (Blackman & Vigna),
+//!   seeded through SplitMix64 so that *any* `u64` seed yields a
+//!   well-mixed state.
+//! * Gaussian variates via the polar (Marsaglia) method.
+//! * Rademacher (±1) variates for SRHT sign flips and Hutchinson probes.
+
+/// SplitMix64 step — used to expand a single `u64` seed into generator
+/// state and to derive independent child seeds.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ generator. Period 2^256 − 1, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// Cached second Gaussian variate from the polar method.
+    gauss_spare: Option<f64>,
+}
+
+impl Xoshiro256 {
+    /// Create a generator from a `u64` seed (SplitMix64-expanded).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, gauss_spare: None }
+    }
+
+    /// Derive an independent child generator (for per-trial / per-sketch
+    /// streams). Uses the current stream to produce a fresh seed, then
+    /// SplitMix64-expands it, so children of distinct indices are
+    /// decorrelated.
+    pub fn split(&mut self, index: u64) -> Xoshiro256 {
+        let base = self.next_u64() ^ index.wrapping_mul(0xA24B_AED4_963E_E407);
+        Xoshiro256::seed_from_u64(base)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire rejection, unbiased).
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // Rejection sampling on the top bits: unbiased and branch-cheap.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            let (hi, lo) = {
+                let wide = (r as u128) * (bound as u128);
+                ((wide >> 64) as u64, wide as u64)
+            };
+            if lo >= threshold {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard Gaussian via the Marsaglia polar method (caches the spare).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Rademacher variate: ±1 with equal probability.
+    #[inline]
+    pub fn next_rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a slice with i.i.d. `N(0, sigma^2)` entries.
+    pub fn fill_gaussian(&mut self, out: &mut [f64], sigma: f64) {
+        for x in out.iter_mut() {
+            *x = sigma * self.next_gaussian();
+        }
+    }
+
+    /// Fill a slice with i.i.d. Rademacher signs.
+    pub fn fill_rademacher(&mut self, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.next_rademacher();
+        }
+    }
+
+    /// Sample `m` distinct indices uniformly from `{0, .., n-1}` via a
+    /// partial Fisher–Yates shuffle — O(n) memory, O(m) swaps. Used by the
+    /// SRHT row-subsampling step (sampling *without* replacement).
+    pub fn sample_without_replacement(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "cannot sample {m} of {n} without replacement");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_differ() {
+        let mut a = Xoshiro256::seed_from_u64(1);
+        let mut b = Xoshiro256::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.next_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 5e-3);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            m1 += g;
+            m2 += g * g;
+            m4 += g * g * g * g;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.01, "mean {}", m1 / nf);
+        assert!((m2 / nf - 1.0).abs() < 0.02, "var {}", m2 / nf);
+        assert!((m4 / nf - 3.0).abs() < 0.1, "kurtosis {}", m4 / nf);
+    }
+
+    #[test]
+    fn rademacher_balance() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.next_rademacher()).sum();
+        assert!(sum.abs() / (n as f64) < 0.01);
+    }
+
+    #[test]
+    fn next_below_unbiased_and_in_range() {
+        let mut r = Xoshiro256::seed_from_u64(5);
+        let bound = 7u64;
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            let v = r.next_below(bound);
+            assert!(v < bound);
+            counts[v as usize] += 1;
+        }
+        let expect = n as f64 / bound as f64;
+        for c in counts {
+            assert!((c as f64 - expect).abs() < 0.06 * expect, "count {c}");
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let idx = r.sample_without_replacement(100, 40);
+        assert_eq!(idx.len(), 40);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40, "indices must be distinct");
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn split_streams_decorrelated() {
+        let mut root = Xoshiro256::seed_from_u64(123);
+        let mut c1 = root.split(0);
+        let mut c2 = root.split(1);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

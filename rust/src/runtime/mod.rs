@@ -1,0 +1,33 @@
+//! Runtime bridging L3 (Rust coordinator) to the AOT-compiled L2/L1
+//! artifacts.
+//!
+//! Python (JAX + Pallas) runs exactly once, at build time: `make artifacts`
+//! lowers the model's jitted functions to HLO *text* under `artifacts/`.
+//! This module loads those files, compiles them on the PJRT CPU client
+//! (`xla` crate) and executes them from the solve hot path — Python is
+//! never on the request path.
+//!
+//! Two engines implement the per-iteration gradient oracle:
+//! * [`native`] — pure-Rust, any shape (the default; also the reference
+//!   the conformance tests compare against);
+//! * [`pjrt`] (feature `xla-runtime`) — the AOT artifact, shape-specialized
+//!   to the configured `(n, d)`, with `A` and `b` kept device-resident
+//!   across iterations so each call only uploads the length-`d` iterate.
+
+pub mod native;
+#[cfg(feature = "xla-runtime")]
+pub mod pjrt;
+
+pub use native::NativeGradient;
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::{ArtifactManifest, PjrtRuntime, XlaGradient};
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// A gradient oracle: computes `∇f(x) = A^T A x + nu^2 x - A^T b`.
+pub trait GradientOracle {
+    fn gradient(&self, x: &[f64]) -> Vec<f64>;
+    /// Human-readable backend label for reports.
+    fn backend(&self) -> &'static str;
+}

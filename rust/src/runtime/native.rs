@@ -1,0 +1,42 @@
+//! Native (pure-Rust) gradient engine — the shape-generic reference
+//! implementation of the per-iteration hot op.
+
+use super::GradientOracle;
+use crate::solvers::RidgeProblem;
+
+/// Wraps a [`RidgeProblem`]'s own gradient as a [`GradientOracle`].
+pub struct NativeGradient<'p> {
+    problem: &'p RidgeProblem,
+}
+
+impl<'p> NativeGradient<'p> {
+    pub fn new(problem: &'p RidgeProblem) -> Self {
+        Self { problem }
+    }
+}
+
+impl GradientOracle for NativeGradient<'_> {
+    fn gradient(&self, x: &[f64]) -> Vec<f64> {
+        self.problem.gradient(x)
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn oracle_matches_problem_gradient() {
+        let ds = synthetic::exponential_decay(64, 8, 1);
+        let p = RidgeProblem::new(ds.a, ds.b, 0.5);
+        let oracle = NativeGradient::new(&p);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.2).sin()).collect();
+        assert_eq!(oracle.gradient(&x), p.gradient(&x));
+        assert_eq!(oracle.backend(), "native");
+    }
+}

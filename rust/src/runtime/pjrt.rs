@@ -1,0 +1,171 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the solve hot path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py`): jax >= 0.5
+//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly.
+//!
+//! Artifacts are f32 (the Pallas kernels target the TPU MXU); the native
+//! solver state is f64. The [`XlaGradient`] oracle downcasts the iterate,
+//! runs the fused-gradient module on device-resident `A`/`b` buffers, and
+//! upcasts the result — mixed precision that caps achievable relative
+//! error around 1e-6, which the end-to-end example accounts for in its
+//! stop rule.
+
+use super::GradientOracle;
+use crate::solvers::RidgeProblem;
+use crate::util::json::{self, Json};
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub n: usize,
+    pub d: usize,
+    pub m_list: Vec<usize>,
+    pub artifacts: Vec<String>,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let n = v.get("n").and_then(Json::as_usize).ok_or("manifest missing n")?;
+        let d = v.get("d").and_then(Json::as_usize).ok_or("manifest missing d")?;
+        let m_list = v
+            .get("m_list")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing m_list")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing artifacts")?
+            .iter()
+            .filter_map(|a| a.get("name").and_then(Json::as_str).map(String::from))
+            .collect();
+        Ok(Self { n, d, m_list, artifacts })
+    }
+}
+
+/// PJRT CPU client plus the artifact directory.
+///
+/// NOTE: the `xla` crate's client is `Rc`-based, so the runtime (and any
+/// oracle built from it) is pinned to one thread; the coordinator keeps
+/// XLA-backed solves on the worker that created the runtime.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: ArtifactManifest,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from `dir` and create the CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts`)", manifest_path.display()))?;
+        let manifest = ArtifactManifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest })
+    }
+
+    /// Whether the given artifact exists in the manifest.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.artifacts.iter().any(|a| a == name)
+    }
+
+    /// Load + compile an artifact by name (compilation happens once per
+    /// oracle; oracles are long-lived).
+    pub fn executable(&self, name: &str) -> Result<xla::PjRtLoadedExecutable, String> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| format!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| format!("compile {name}: {e:?}"))
+    }
+
+    /// Build the fused-gradient oracle for `problem`; fails if the
+    /// artifact shapes don't match the problem.
+    pub fn gradient_oracle(&self, problem: &RidgeProblem) -> Result<XlaGradient, String> {
+        let (n, d) = (problem.n(), problem.d());
+        if (n, d) != (self.manifest.n, self.manifest.d) {
+            return Err(format!(
+                "artifact shapes ({}, {}) != problem shapes ({n}, {d}); regenerate with \
+                 `make artifacts N={n} D={d}`",
+                self.manifest.n, self.manifest.d
+            ));
+        }
+        let name = format!("gradient_n{n}_d{d}");
+        let exe = self.executable(&name)?;
+
+        // Device-resident constants: A (f32), b (f32), nu^2.
+        let to_f32 = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        let a32 = to_f32(problem.a.as_slice());
+        let b32 = to_f32(problem.b.as_ref().expect("XLA oracle needs raw b"));
+        let a_buf = self
+            .client
+            .buffer_from_host_buffer(&a32, &[n, d], None)
+            .map_err(|e| format!("upload A: {e:?}"))?;
+        let b_buf = self
+            .client
+            .buffer_from_host_buffer(&b32, &[n], None)
+            .map_err(|e| format!("upload b: {e:?}"))?;
+        let nu2 = [(problem.nu * problem.nu) as f32];
+        let nu2_buf = self
+            .client
+            .buffer_from_host_buffer(&nu2, &[1], None)
+            .map_err(|e| format!("upload nu2: {e:?}"))?;
+
+        Ok(XlaGradient { client: self.client.clone(), exe, a_buf, b_buf, nu2_buf, d })
+    }
+}
+
+/// Gradient oracle executing the AOT fused-gradient artifact.
+///
+/// `A`, `b`, `nu^2` stay device-resident; each call uploads only the
+/// length-`d` iterate and downloads the length-`d` gradient.
+pub struct XlaGradient {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    a_buf: xla::PjRtBuffer,
+    b_buf: xla::PjRtBuffer,
+    nu2_buf: xla::PjRtBuffer,
+    d: usize,
+}
+
+impl XlaGradient {
+    /// Raw f32 gradient call.
+    pub fn gradient_f32(&self, x: &[f32]) -> Result<Vec<f32>, String> {
+        assert_eq!(x.len(), self.d);
+        let x_buf = self
+            .client
+            .buffer_from_host_buffer(x, &[self.d], None)
+            .map_err(|e| format!("upload x: {e:?}"))?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = self
+            .exe
+            .execute_b(&[&self.a_buf, &x_buf, &self.b_buf, &self.nu2_buf])
+            .map_err(|e| format!("execute gradient: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("download gradient: {e:?}"))?;
+        let lit = lit.to_tuple1().map_err(|e| format!("untuple: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| format!("to_vec: {e:?}"))
+    }
+}
+
+impl GradientOracle for XlaGradient {
+    fn gradient(&self, x: &[f64]) -> Vec<f64> {
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let g32 = self.gradient_f32(&x32).expect("XLA gradient execution failed");
+        g32.into_iter().map(|v| v as f64).collect()
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt-xla"
+    }
+}

@@ -1,0 +1,102 @@
+//! Gaussian embedding: `S` with i.i.d. `N(0, 1/m)` entries (paper §3.1).
+//!
+//! The sketch is stored densely; `S A` is a blocked GEMM. The `1/sqrt(m)`
+//! scaling makes `E[S^T S] = I_n`, which is the normalization assumed by
+//! Theorem 3's bounds on the eigenvalues of `C_S`.
+
+use super::Sketch;
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+
+/// Dense Gaussian sketching matrix.
+#[derive(Clone, Debug)]
+pub struct GaussianSketch {
+    s: Matrix,
+}
+
+impl GaussianSketch {
+    /// Sample an `m x n` sketch with entries `N(0, 1/m)`.
+    pub fn sample(m: usize, n: usize, rng: &mut Xoshiro256) -> Self {
+        assert!(m > 0 && n > 0);
+        let sigma = 1.0 / (m as f64).sqrt();
+        let mut s = Matrix::zeros(m, n);
+        rng.fill_gaussian(s.as_mut_slice(), sigma);
+        Self { s }
+    }
+
+    /// Access the dense sketch.
+    pub fn matrix(&self) -> &Matrix {
+        &self.s
+    }
+}
+
+impl Sketch for GaussianSketch {
+    fn m(&self) -> usize {
+        self.s.rows()
+    }
+
+    fn n(&self) -> usize {
+        self.s.cols()
+    }
+
+    fn apply(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.n(), "sketch/matrix dimension mismatch");
+        self.s.matmul(a)
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.s.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_variance_is_one_over_m() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let m = 64;
+        let sk = GaussianSketch::sample(m, 512, &mut rng);
+        let data = sk.matrix().as_slice();
+        let var: f64 = data.iter().map(|x| x * x).sum::<f64>() / data.len() as f64;
+        assert!((var - 1.0 / m as f64).abs() < 0.1 / m as f64, "var {var}");
+    }
+
+    #[test]
+    fn isometry_in_expectation() {
+        // ||Sx||^2 concentrates around ||x||^2.
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let n = 256;
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.1).sin()).collect();
+        let x_norm2: f64 = x.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let trials = 30;
+        for _ in 0..trials {
+            let sk = GaussianSketch::sample(128, n, &mut rng);
+            let sx = sk.matrix().matvec(&x);
+            acc += sx.iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - x_norm2).abs() < 0.1 * x_norm2, "mean {mean} vs {x_norm2}");
+    }
+
+    #[test]
+    fn apply_matches_dense_matmul() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let sk = GaussianSketch::sample(5, 17, &mut rng);
+        let a = Matrix::from_fn(17, 4, |i, j| (i * 4 + j) as f64 * 0.01);
+        let sa = sk.apply(&a);
+        let sa2 = sk.to_dense().matmul(&a);
+        assert!(sa.max_abs_diff(&sa2) < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_stream() {
+        let mut r1 = Xoshiro256::seed_from_u64(7);
+        let mut r2 = Xoshiro256::seed_from_u64(7);
+        let s1 = GaussianSketch::sample(3, 9, &mut r1);
+        let s2 = GaussianSketch::sample(3, 9, &mut r2);
+        assert!(s1.matrix().max_abs_diff(s2.matrix()) == 0.0);
+    }
+}

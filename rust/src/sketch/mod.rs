@@ -1,0 +1,127 @@
+//! Random embeddings `S in R^{m x n}`.
+//!
+//! Three families, matching the paper:
+//! * [`gaussian`] — i.i.d. `N(0, 1/m)` entries (§3.1, Theorem 3). `SA`
+//!   costs `O(m n d)` via GEMM.
+//! * [`srht`] — Subsampled Randomized Hadamard Transform (§3.2, Theorem 4):
+//!   `S = R H diag(eps)` with `H` the normalized Walsh–Hadamard transform.
+//!   `SA` costs `O(n d log n)` through the in-place FWHT.
+//! * [`sparse`] — CountSketch / SJLT (Remark 4.1, listed as future work in
+//!   the paper): `SA` costs `O(nnz(A))`.
+//!
+//! All embeddings implement [`Sketch`], which exposes the only operation
+//! the solvers need — *apply to a matrix* — plus metadata. Sketches are
+//! deterministic given an RNG stream, so experiments are reproducible.
+
+pub mod gaussian;
+pub mod sparse;
+pub mod srht;
+
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+
+/// Which embedding family to use. Mirrors the paper's two analyzed sketches
+/// plus the sparse extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchKind {
+    Gaussian,
+    Srht,
+    Sparse,
+}
+
+impl std::fmt::Display for SketchKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SketchKind::Gaussian => write!(f, "gaussian"),
+            SketchKind::Srht => write!(f, "srht"),
+            SketchKind::Sparse => write!(f, "sparse"),
+        }
+    }
+}
+
+impl std::str::FromStr for SketchKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" | "g" => Ok(SketchKind::Gaussian),
+            "srht" | "hadamard" | "h" => Ok(SketchKind::Srht),
+            "sparse" | "countsketch" | "sjlt" => Ok(SketchKind::Sparse),
+            other => Err(format!("unknown sketch kind: {other}")),
+        }
+    }
+}
+
+/// A sampled random embedding `S in R^{m x n}`.
+pub trait Sketch {
+    /// Sketch dimension `m`.
+    fn m(&self) -> usize;
+    /// Ambient dimension `n`.
+    fn n(&self) -> usize;
+    /// Compute `S * a` for an `n x d` matrix `a`.
+    fn apply(&self, a: &Matrix) -> Matrix;
+    /// Materialize `S` as a dense matrix (tests / diagnostics only).
+    fn to_dense(&self) -> Matrix {
+        self.apply(&Matrix::eye(self.n()))
+    }
+}
+
+/// Sample a sketch of the given family. `rng` is advanced.
+pub fn sample(kind: SketchKind, m: usize, n: usize, rng: &mut Xoshiro256) -> Box<dyn Sketch + Send + Sync> {
+    match kind {
+        SketchKind::Gaussian => Box::new(gaussian::GaussianSketch::sample(m, n, rng)),
+        SketchKind::Srht => Box::new(srht::SrhtSketch::sample(m, n, rng)),
+        SketchKind::Sparse => Box::new(sparse::SparseSketch::sample(m, n, rng)),
+    }
+}
+
+/// Flop-count model for forming `SA` (used by the complexity harness,
+/// Theorem 7): Gaussian `2mnd`, SRHT `nd log2(n~) + md`, sparse `2 nnz(A)`.
+pub fn sketch_cost_flops(kind: SketchKind, m: usize, n: usize, d: usize) -> f64 {
+    let (mf, nf, df) = (m as f64, n as f64, d as f64);
+    match kind {
+        SketchKind::Gaussian => 2.0 * mf * nf * df,
+        SketchKind::Srht => {
+            let np = (n.max(2) as f64).log2().ceil();
+            nf * df * np + mf * df
+        }
+        SketchKind::Sparse => 2.0 * nf * df,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip_display_parse() {
+        for k in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+            let s = k.to_string();
+            assert_eq!(s.parse::<SketchKind>().unwrap(), k);
+        }
+        assert!("bogus".parse::<SketchKind>().is_err());
+    }
+
+    #[test]
+    fn sample_dispatch_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for k in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+            let s = sample(k, 4, 16, &mut rng);
+            assert_eq!(s.m(), 4);
+            assert_eq!(s.n(), 16);
+            let a = Matrix::eye(16);
+            let sa = s.apply(&a);
+            assert_eq!((sa.rows(), sa.cols()), (4, 16));
+        }
+    }
+
+    #[test]
+    fn cost_model_orderings() {
+        // SRHT must beat Gaussian for large m, sparse beats both.
+        let (m, n, d) = (512, 4096, 256);
+        let g = sketch_cost_flops(SketchKind::Gaussian, m, n, d);
+        let h = sketch_cost_flops(SketchKind::Srht, m, n, d);
+        let s = sketch_cost_flops(SketchKind::Sparse, m, n, d);
+        assert!(h < g);
+        assert!(s < h);
+    }
+}

@@ -1,0 +1,140 @@
+//! Sparse embedding (CountSketch / SJLT with one nonzero per column).
+//!
+//! The paper's Remark 4.1 points to `O(nnz(A))`-time embeddings as the
+//! natural extension of the adaptive method to sparse data; we implement
+//! the classic CountSketch: each ambient coordinate `j` is hashed to a
+//! single row `h(j)` with a random sign `s(j)`, so
+//! `(S x)_r = sum_{j: h(j)=r} s(j) x_j` and `E[S^T S] = I`.
+
+use super::Sketch;
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+
+/// CountSketch embedding: one (row, sign) pair per ambient coordinate.
+#[derive(Clone, Debug)]
+pub struct SparseSketch {
+    m: usize,
+    /// Target row per coordinate, length `n`.
+    hash: Vec<u32>,
+    /// Sign per coordinate, length `n`.
+    signs: Vec<f64>,
+}
+
+impl SparseSketch {
+    /// Sample an `m x n` CountSketch.
+    pub fn sample(m: usize, n: usize, rng: &mut Xoshiro256) -> Self {
+        assert!(m > 0 && n > 0);
+        let mut hash = Vec::with_capacity(n);
+        let mut signs = vec![0.0; n];
+        for _ in 0..n {
+            hash.push(rng.next_below(m as u64) as u32);
+        }
+        rng.fill_rademacher(&mut signs);
+        Self { m, hash, signs }
+    }
+}
+
+impl Sketch for SparseSketch {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.hash.len()
+    }
+
+    fn apply(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.n(), "sketch/matrix dimension mismatch");
+        let d = a.cols();
+        let mut out = Matrix::zeros(self.m, d);
+        // Single pass over A's rows: scatter-add into the target row.
+        for j in 0..self.n() {
+            let r = self.hash[j] as usize;
+            let s = self.signs[j];
+            let src = a.row(j);
+            let dst = out.row_mut(r);
+            for k in 0..d {
+                dst[k] += s * src[k];
+            }
+        }
+        out
+    }
+}
+
+impl SparseSketch {
+    /// `S * A` for CSR input in `O(nnz(A))` — the Remark 4.1 fast path:
+    /// each stored entry is visited once and scatter-added into its hashed
+    /// output row.
+    pub fn apply_csr(&self, a: &crate::linalg::sparse::CsrMatrix) -> Matrix {
+        assert_eq!(a.rows(), self.n(), "sketch/matrix dimension mismatch");
+        let d = a.cols();
+        let mut out = Matrix::zeros(self.m, d);
+        for j in 0..self.n() {
+            let r = self.hash[j] as usize;
+            let s = self.signs[j];
+            let (cols, vals) = a.row(j);
+            let dst = out.row_mut(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                dst[c as usize] += s * v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_nonzero_per_column() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let sk = SparseSketch::sample(5, 20, &mut rng);
+        let dense = sk.to_dense();
+        for j in 0..20 {
+            let nnz = (0..5).filter(|&i| dense.get(i, j) != 0.0).count();
+            assert_eq!(nnz, 1, "column {j}");
+            let sum_abs: f64 = (0..5).map(|i| dense.get(i, j).abs()).sum();
+            assert!((sum_abs - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn isometry_in_expectation() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.21).sin()).collect();
+        let xn2: f64 = x.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let trials = 500;
+        for _ in 0..trials {
+            let sk = SparseSketch::sample(32, n, &mut rng);
+            let sx = sk.apply(&Matrix::from_vec(n, 1, x.clone()));
+            acc += sx.as_slice().iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - xn2).abs() < 0.1 * xn2, "mean {mean} vs {xn2}");
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let sk = SparseSketch::sample(4, 11, &mut rng);
+        let a = Matrix::from_fn(11, 3, |i, j| (i + 2 * j) as f64 * 0.1);
+        assert!(sk.apply(&a).max_abs_diff(&sk.to_dense().matmul(&a)) < 1e-12);
+    }
+
+    #[test]
+    fn apply_csr_matches_dense_apply() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let n = 40;
+        let dense = Matrix::from_fn(n, 6, |_, _| {
+            if rng.next_f64() < 0.2 { rng.next_gaussian() } else { 0.0 }
+        });
+        let csr = crate::linalg::sparse::CsrMatrix::from_dense(&dense);
+        let sk = SparseSketch::sample(8, n, &mut rng);
+        let via_csr = sk.apply_csr(&csr);
+        let via_dense = sk.apply(&dense);
+        assert!(via_csr.max_abs_diff(&via_dense) < 1e-12);
+    }
+}

@@ -1,0 +1,243 @@
+//! Subsampled Randomized Hadamard Transform (paper §3.2, Theorem 4).
+//!
+//! `S = sqrt(n~/m) * R * H * diag(eps)` where `eps` is a Rademacher vector,
+//! `H` the normalized Walsh–Hadamard transform of size `n~` (ambient
+//! dimension zero-padded to the next power of two) and `R` a uniform
+//! without-replacement row-subsampling — the sampling model under which the
+//! paper's matrix-Bernstein argument (Theorem 10, Gross–Nesme) is stated.
+//!
+//! Applying `S` to an `n x d` matrix costs `O(n~ d log n~)`: the FWHT runs
+//! over the *row* dimension so each butterfly is a pair of contiguous
+//! length-`d` row operations — the same access pattern the L1 Pallas kernel
+//! uses on TPU (stage-by-stage stride halving over a VMEM-resident block).
+
+use super::Sketch;
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+
+/// SRHT embedding: stores only the sign vector and the selected rows.
+#[derive(Clone, Debug)]
+pub struct SrhtSketch {
+    n: usize,
+    /// Padded dimension (next power of two >= n).
+    n_pad: usize,
+    /// Rademacher signs, length `n`.
+    signs: Vec<f64>,
+    /// Selected Hadamard rows (without replacement), length `m`.
+    rows: Vec<usize>,
+}
+
+/// Next power of two >= `n`.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// In-place *unnormalized* fast Walsh–Hadamard transform over the row
+/// dimension of an `n_pad x d` matrix (each butterfly operates on whole
+/// rows, so the inner loops stream contiguous memory).
+pub fn fwht_rows(work: &mut Matrix) {
+    let n = work.rows();
+    assert!(n.is_power_of_two(), "FWHT needs power-of-two rows");
+    let d = work.cols();
+    let mut len = 1;
+    while len < n {
+        let stride = len * 2;
+        for base in (0..n).step_by(stride) {
+            for i in base..base + len {
+                let j = i + len;
+                // Split borrow: rows i and j are disjoint.
+                let (head, tail) = work.as_mut_slice().split_at_mut(j * d);
+                let ri = &mut head[i * d..i * d + d];
+                let rj = &mut tail[..d];
+                for k in 0..d {
+                    let u = ri[k];
+                    let v = rj[k];
+                    ri[k] = u + v;
+                    rj[k] = u - v;
+                }
+            }
+        }
+        len = stride;
+    }
+}
+
+/// In-place unnormalized FWHT of a single vector (power-of-two length).
+pub fn fwht_vec(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut len = 1;
+    while len < n {
+        let stride = len * 2;
+        for base in (0..n).step_by(stride) {
+            for i in base..base + len {
+                let j = i + len;
+                let u = x[i];
+                let v = x[j];
+                x[i] = u + v;
+                x[j] = u - v;
+            }
+        }
+        len = stride;
+    }
+}
+
+impl SrhtSketch {
+    /// Sample an `m x n` SRHT.
+    pub fn sample(m: usize, n: usize, rng: &mut Xoshiro256) -> Self {
+        assert!(m > 0 && n > 0);
+        let n_pad = next_pow2(n);
+        assert!(m <= n_pad, "SRHT sketch size {m} exceeds padded dim {n_pad}");
+        let mut signs = vec![0.0; n];
+        rng.fill_rademacher(&mut signs);
+        let rows = rng.sample_without_replacement(n_pad, m);
+        Self { n, n_pad, signs, rows }
+    }
+
+    /// Padded (power-of-two) ambient dimension.
+    pub fn n_pad(&self) -> usize {
+        self.n_pad
+    }
+}
+
+impl Sketch for SrhtSketch {
+    fn m(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, a: &Matrix) -> Matrix {
+        assert_eq!(a.rows(), self.n, "sketch/matrix dimension mismatch");
+        let d = a.cols();
+        // Work buffer: sign-flipped rows of A, zero-padded.
+        let mut work = Matrix::zeros(self.n_pad, d);
+        for i in 0..self.n {
+            let sign = self.signs[i];
+            let src = a.row(i);
+            let dst = work.row_mut(i);
+            for k in 0..d {
+                dst[k] = sign * src[k];
+            }
+        }
+        fwht_rows(&mut work);
+        // Select rows and apply the net scaling: normalized H contributes
+        // 1/sqrt(n_pad), the sqrt(n_pad/m) embedding scale cancels it to
+        // 1/sqrt(m) on the unnormalized transform output.
+        let scale = 1.0 / (self.rows.len() as f64).sqrt();
+        let mut out = Matrix::zeros(self.rows.len(), d);
+        for (oi, &ri) in self.rows.iter().enumerate() {
+            let src = work.row(ri);
+            let dst = out.row_mut(oi);
+            for k in 0..d {
+                dst[k] = scale * src[k];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm2;
+
+    #[test]
+    fn fwht_matches_hadamard_matrix() {
+        // H_4 (unnormalized, Sylvester construction).
+        let h4 = [
+            [1.0, 1.0, 1.0, 1.0],
+            [1.0, -1.0, 1.0, -1.0],
+            [1.0, 1.0, -1.0, -1.0],
+            [1.0, -1.0, -1.0, 1.0],
+        ];
+        let x = [0.5, -1.0, 2.0, 3.0];
+        let mut y = x;
+        fwht_vec(&mut y);
+        for i in 0..4 {
+            let expect: f64 = (0..4).map(|j| h4[i][j] * x[j]).sum();
+            assert!((y[i] - expect).abs() < 1e-12, "row {i}");
+        }
+    }
+
+    #[test]
+    fn fwht_rows_matches_vec_per_column() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut m = Matrix::from_fn(8, 3, |_, _| rng.next_gaussian());
+        let orig = m.clone();
+        fwht_rows(&mut m);
+        for j in 0..3 {
+            let mut col: Vec<f64> = (0..8).map(|i| orig.get(i, j)).collect();
+            fwht_vec(&mut col);
+            for i in 0..8 {
+                assert!((m.get(i, j) - col[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_involution_up_to_n() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x0: Vec<f64> = (0..16).map(|_| rng.next_gaussian()).collect();
+        let mut x = x0.clone();
+        fwht_vec(&mut x);
+        fwht_vec(&mut x);
+        for i in 0..16 {
+            assert!((x[i] / 16.0 - x0[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn full_srht_is_orthogonal() {
+        // m == n_pad, n power of two: S is orthogonal (up to scaling making
+        // S^T S = (n/m) * I = I) -> exact isometry.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let n = 16;
+        let sk = SrhtSketch::sample(n, n, &mut rng);
+        let s = sk.to_dense();
+        let sts = s.gram();
+        assert!(sts.max_abs_diff(&Matrix::eye(n)) < 1e-10);
+    }
+
+    #[test]
+    fn isometry_in_expectation_padded() {
+        // Non-power-of-two n: E ||S x||^2 = ||x||^2 over subsample draws.
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let n = 24; // pads to 32
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).cos()).collect();
+        let xn2 = norm2(&x).powi(2);
+        let mut acc = 0.0;
+        let trials = 300;
+        for _ in 0..trials {
+            let sk = SrhtSketch::sample(8, n, &mut rng);
+            let a = Matrix::from_vec(n, 1, x.clone());
+            let sx = sk.apply(&a);
+            acc += sx.as_slice().iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - xn2).abs() < 0.05 * xn2, "mean {mean} vs {xn2}");
+    }
+
+    #[test]
+    fn rows_distinct_without_replacement() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let sk = SrhtSketch::sample(20, 30, &mut rng);
+        let mut rows = sk.rows.clone();
+        rows.sort_unstable();
+        rows.dedup();
+        assert_eq!(rows.len(), 20);
+        assert!(rows.iter().all(|&r| r < sk.n_pad()));
+    }
+
+    #[test]
+    fn apply_matches_dense_composition() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let n = 10; // pads to 16
+        let sk = SrhtSketch::sample(4, n, &mut rng);
+        let a = Matrix::from_fn(n, 3, |i, j| (i as f64 - j as f64) * 0.2);
+        let sa = sk.apply(&a);
+        let sa2 = sk.to_dense().matmul(&a);
+        assert!(sa.max_abs_diff(&sa2) < 1e-10);
+    }
+}

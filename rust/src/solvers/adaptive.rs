@@ -1,0 +1,478 @@
+//! **Algorithm 1: Adaptive Polyak-IHS** — the paper's contribution.
+//!
+//! The solver never needs the effective dimension `d_e`. It starts with an
+//! arbitrary sketch size (`m = 1` by default) and monitors the *sketched
+//! Newton decrement* `r_t = 1/2 g_t^T H_S^{-1} g_t` (Lemma 1), which the
+//! iteration computes for free since it already forms `H_S^{-1} g_t`:
+//!
+//! 1. propose a Polyak (heavy-ball) step; accept if the geometric-mean
+//!    improvement `(r_p^+ / r_1)^{1/t}` meets the target rate `c_p`;
+//! 2. otherwise propose a plain gradient-IHS step; accept if the one-step
+//!    ratio `r_gd^+ / r_t` meets `c_gd`;
+//! 3. otherwise double `m`, resample `S`, re-factor, and retry the same
+//!    iteration.
+//!
+//! Theorems 5–6 guarantee `m` stops growing at `O(d_e/rho)` (Gaussian) or
+//! `O(d_e log d_e / rho)` (SRHT), with at most `O(log(d_e/rho))` rejected
+//! rounds, and overall error `delta_t / delta_1 <= O(c_gd(rho)^{t-1})`.
+//!
+//! The `GradientOnly` variant (also evaluated in the paper's §5) skips the
+//! Polyak candidate — same guarantees, and faster in practice when the
+//! Polyak step is frequently rejected (one gradient evaluation per
+//! iteration instead of two).
+
+use super::woodbury::WoodburyCache;
+use super::{RidgeProblem, Solution, SolveReport, StopRule};
+use crate::linalg::{axpy, dot, norm2};
+use crate::rng::Xoshiro256;
+use crate::sketch::{self, SketchKind};
+use crate::theory::rates::IhsParams;
+use crate::theory::{gaussian_bounds, srht_bounds};
+use std::time::Instant;
+
+/// Which candidate schedule Algorithm 1 runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdaptiveVariant {
+    /// Full Algorithm 1: Polyak candidate first, gradient fallback.
+    PolyakFirst,
+    /// The paper's §5 variant: gradient-IHS candidates only.
+    GradientOnly,
+}
+
+/// Configuration of the adaptive solver.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    pub kind: SketchKind,
+    pub variant: AdaptiveVariant,
+    /// Initial sketch size (paper default: 1).
+    pub m_initial: usize,
+    /// Aspect-ratio target `rho`; sets the acceptance thresholds via
+    /// Definition 3.1 (Gaussian, with `eta`) or 3.2 (SRHT).
+    pub rho: f64,
+    /// Gaussian concentration parameter `eta` (Definition 3.1).
+    pub eta: f64,
+    /// Growth factor applied on rejection (paper: 2).
+    pub growth: usize,
+    pub max_iters: usize,
+    pub stop: StopRule,
+}
+
+impl AdaptiveConfig {
+    /// Paper-default configuration for a sketch family.
+    pub fn new(kind: SketchKind, stop: StopRule) -> Self {
+        let rho = match kind {
+            SketchKind::Gaussian => 0.1,
+            // SRHT/sparse brackets are [1 -/+ sqrt(rho)]: rho = 0.5 keeps
+            // the m-threshold reachable at benchmark sizes while the rate
+            // c_gd = rho still halves the error per accepted step.
+            SketchKind::Srht | SketchKind::Sparse => 0.5,
+        };
+        Self {
+            kind,
+            variant: AdaptiveVariant::PolyakFirst,
+            m_initial: 1,
+            rho,
+            eta: 0.01,
+            growth: 2,
+            max_iters: 10_000,
+            stop,
+        }
+    }
+
+    /// Target rates / step sizes per Definitions 3.1 / 3.2.
+    pub fn params(&self) -> IhsParams {
+        match self.kind {
+            SketchKind::Gaussian => gaussian_bounds(self.rho, self.eta, 1.0).params(),
+            SketchKind::Srht | SketchKind::Sparse => srht_bounds(self.rho, 2, 2.0).params(),
+        }
+    }
+}
+
+/// One solver with explicit state — used directly by the coordinator's
+/// state machine; [`solve`] is the plain-function wrapper.
+pub struct AdaptiveSolver<'p> {
+    problem: &'p RidgeProblem,
+    config: AdaptiveConfig,
+    params: IhsParams,
+    rng: Xoshiro256,
+    /// Gradient oracle. Defaults to the native `problem.gradient`; the
+    /// PJRT runtime swaps in an AOT-compiled artifact via
+    /// [`AdaptiveSolver::set_gradient_fn`] — the O(nd) per-iteration hot
+    /// op is the only thing that changes backend.
+    grad_fn: Box<dyn Fn(&[f64]) -> Vec<f64> + 'p>,
+    /// Cap on m: padded row count (SRHT cannot exceed it; for the others
+    /// growing past n stops helping).
+    m_cap: usize,
+
+    // Iteration state.
+    pub m: usize,
+    cache: WoodburyCache,
+    x_prev: Vec<f64>,
+    x: Vec<f64>,
+    g: Vec<f64>,
+    g_tilde: Vec<f64>,
+    r_t: f64,
+    r_1: f64,
+    t: usize,
+
+    pub report: SolveReport,
+}
+
+impl<'p> AdaptiveSolver<'p> {
+    /// Initialize at `x0` (both `x_0` and `x_1` per the paper's two-point
+    /// heavy-ball initialization).
+    pub fn new(problem: &'p RidgeProblem, x0: &[f64], config: AdaptiveConfig, seed: u64) -> Self {
+        assert_eq!(x0.len(), problem.d());
+        assert!(config.m_initial >= 1 && config.growth >= 2);
+        let params = config.params();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let m_cap = crate::sketch::srht::next_pow2(problem.n());
+        let m = config.m_initial.min(m_cap);
+
+        let mut report = SolveReport::new(format!(
+            "adaptive-{}-{}",
+            match config.variant {
+                AdaptiveVariant::PolyakFirst => "polyak",
+                AdaptiveVariant::GradientOnly => "gd",
+            },
+            config.kind
+        ));
+
+        let t0 = Instant::now();
+        let s = sketch::sample(config.kind, m, problem.n(), &mut rng);
+        let sa = s.apply(&problem.a);
+        report.sketch_time_s += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let cache = WoodburyCache::new(sa, problem.nu);
+        report.factor_time_s += t0.elapsed().as_secs_f64();
+
+        let x = x0.to_vec();
+        let g = problem.gradient(&x);
+        let g_tilde = cache.apply_inverse(&g);
+        let r_1 = 0.5 * dot(&g, &g_tilde);
+        report.final_m = m;
+        report.peak_m = m;
+
+        Self {
+            problem,
+            config,
+            params,
+            rng,
+            grad_fn: Box::new(move |x| problem.gradient(x)),
+            m_cap,
+            m,
+            cache,
+            x_prev: x.clone(),
+            x,
+            g,
+            g_tilde,
+            r_t: r_1,
+            r_1,
+            t: 1,
+            report,
+        }
+    }
+
+    /// Replace the gradient oracle (e.g. with a PJRT-executed artifact).
+    /// The oracle must compute `A^T A x + nu^2 x - A^T b` for the same
+    /// problem; everything else (sketching, factorization, acceptance
+    /// logic) is unchanged.
+    pub fn set_gradient_fn(&mut self, f: impl Fn(&[f64]) -> Vec<f64> + 'p) {
+        self.grad_fn = Box::new(f);
+        // Refresh cached gradient state under the new oracle so mixed
+        // precision cannot leave a stale high-precision g.
+        self.g = (self.grad_fn)(&self.x);
+        self.g_tilde = self.cache.apply_inverse(&self.g);
+        self.r_t = 0.5 * dot(&self.g, &self.g_tilde);
+        if self.t == 1 {
+            self.r_1 = self.r_t;
+        }
+    }
+
+    /// Current iterate.
+    pub fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    /// Current sketched Newton decrement `r_t`.
+    pub fn newton_decrement(&self) -> f64 {
+        self.r_t
+    }
+
+    /// Double the sketch size, resample, re-factor, and refresh the
+    /// decrement state (step 14–15 of Algorithm 1).
+    fn grow_sketch(&mut self) {
+        let new_m = (self.m * self.config.growth).min(self.m_cap);
+        self.report.doublings += 1;
+        self.m = new_m;
+        self.report.peak_m = self.report.peak_m.max(new_m);
+        self.report.final_m = new_m;
+
+        let t0 = Instant::now();
+        let sa = if new_m >= self.m_cap {
+            // At the cap, drop sketching entirely: with S = I the cache
+            // holds the exact Hessian (H_S = A^T A + nu^2 I), so forced
+            // steps are damped exact-Newton and cannot stall. (An
+            // orthogonal SRHT at m = n_pad is exact anyway; a Gaussian
+            // sketch at m = n is not, hence the explicit fallback.)
+            self.problem.a.clone()
+        } else {
+            let s = sketch::sample(self.config.kind, new_m, self.problem.n(), &mut self.rng);
+            s.apply(&self.problem.a)
+        };
+        self.report.sketch_time_s += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        self.cache = WoodburyCache::new(sa, self.problem.nu);
+        self.report.factor_time_s += t0.elapsed().as_secs_f64();
+
+        // g_t is unchanged; the preconditioned direction and decrement are
+        // re-evaluated under the new sketch geometry.
+        self.g_tilde = self.cache.apply_inverse(&self.g);
+        self.r_t = 0.5 * dot(&self.g, &self.g_tilde);
+        if self.t == 1 {
+            // No step accepted yet: the reference decrement belongs to the
+            // new sketch.
+            self.r_1 = self.r_t;
+        }
+    }
+
+    /// Evaluate a candidate `x^+`: returns `(g^+, g_tilde^+, r^+)`.
+    fn evaluate(&self, x_plus: &[f64]) -> (Vec<f64>, Vec<f64>, f64) {
+        let g_plus = (self.grad_fn)(x_plus);
+        let gt_plus = self.cache.apply_inverse(&g_plus);
+        let r_plus = 0.5 * dot(&g_plus, &gt_plus);
+        (g_plus, gt_plus, r_plus)
+    }
+
+    /// Accept a candidate as `x_{t+1}`.
+    fn accept(&mut self, x_plus: Vec<f64>, g_plus: Vec<f64>, gt_plus: Vec<f64>, r_plus: f64) {
+        self.x_prev = std::mem::replace(&mut self.x, x_plus);
+        self.g = g_plus;
+        self.g_tilde = gt_plus;
+        self.r_t = r_plus;
+        self.t += 1;
+        self.report.iterations += 1;
+        self.report.m_trace.push(self.m);
+    }
+
+    /// One outer iteration of Algorithm 1 (may internally grow the sketch
+    /// several times). Returns `false` if the sketch is already at its cap
+    /// and neither candidate passes — then the accept thresholds are waived
+    /// for the final (exact-Hessian-quality) step.
+    pub fn step(&mut self) {
+        loop {
+            // --- Polyak candidate (steps 4–7) ---
+            if self.config.variant == AdaptiveVariant::PolyakFirst {
+                let mut x_p = self.x.clone();
+                axpy(-self.params.mu_p, &self.g_tilde, &mut x_p);
+                for i in 0..x_p.len() {
+                    x_p[i] += self.params.beta_p * (self.x[i] - self.x_prev[i]);
+                }
+                let (g_p, gt_p, r_p) = self.evaluate(&x_p);
+                let c_p_plus = if self.r_1 > 0.0 {
+                    (r_p / self.r_1).powf(1.0 / self.t as f64)
+                } else {
+                    0.0
+                };
+                if c_p_plus <= self.params.c_p {
+                    self.accept(x_p, g_p, gt_p, r_p);
+                    return;
+                }
+                self.report.rejections += 1;
+            }
+
+            // --- Gradient candidate (steps 9–12) ---
+            let mut x_gd = self.x.clone();
+            axpy(-self.params.mu_gd, &self.g_tilde, &mut x_gd);
+            let (g_gd, gt_gd, r_gd) = self.evaluate(&x_gd);
+            let c_gd_plus = if self.r_t > 0.0 { r_gd / self.r_t } else { 0.0 };
+            if c_gd_plus <= self.params.c_gd || self.m >= self.m_cap {
+                // At the cap H_S is (near-)exact: the step is a damped
+                // Newton step and is always productive; accept it so the
+                // solver cannot live-lock.
+                self.accept(x_gd, g_gd, gt_gd, r_gd);
+                return;
+            }
+            self.report.rejections += 1;
+
+            // --- Both rejected: grow (steps 14–15) ---
+            self.grow_sketch();
+        }
+    }
+
+    /// Run to completion under the configured stop rule.
+    pub fn run(mut self) -> Solution {
+        let start = Instant::now();
+        let g0_norm = norm2(&self.g);
+        let delta0 = match &self.config.stop {
+            StopRule::TrueError { x_star, .. } => self.problem.prediction_error(&self.x, x_star),
+            _ => 0.0,
+        };
+
+        let max_iters = self.config.max_iters;
+        let stop = self.config.stop.clone();
+        while self.report.iterations < max_iters {
+            self.step();
+            let stop_now = match &stop {
+                StopRule::TrueError { x_star, eps } => {
+                    let delta = self.problem.prediction_error(&self.x, x_star);
+                    let rel = if delta0 > 0.0 { delta / delta0 } else { 0.0 };
+                    self.report.error_trace.push(rel);
+                    delta <= eps * delta0
+                }
+                StopRule::GradientNorm { tol } => norm2(&self.g) <= tol * g0_norm,
+            };
+            if stop_now {
+                self.report.converged = true;
+                break;
+            }
+        }
+
+        if let StopRule::TrueError { x_star, eps } = &stop {
+            let delta = self.problem.prediction_error(&self.x, x_star);
+            let rel = if delta0 > 0.0 { delta / delta0 } else { 0.0 };
+            self.report.final_rel_error = Some(rel);
+            if delta0 > 0.0 && delta <= eps * delta0 {
+                self.report.converged = true;
+            }
+        }
+        let total = start.elapsed().as_secs_f64();
+        self.report.wall_time_s = total;
+        self.report.iter_time_s = total - self.report.sketch_time_s - self.report.factor_time_s;
+        Solution { x: self.x, report: self.report }
+    }
+}
+
+/// Convenience wrapper: run Algorithm 1 from `x0` with the given seed.
+pub fn solve(
+    problem: &RidgeProblem,
+    x0: &[f64],
+    config: &AdaptiveConfig,
+    seed: u64,
+) -> Solution {
+    AdaptiveSolver::new(problem, x0, config.clone(), seed).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::direct;
+    use crate::solvers::test_util::small_problem;
+    use crate::theory::effective_dimension_from_spectrum;
+
+    fn de_of(p: &RidgeProblem) -> f64 {
+        let s = crate::linalg::svd::singular_values(&p.a);
+        effective_dimension_from_spectrum(&s, p.nu)
+    }
+
+    fn stop_for(p: &RidgeProblem, eps: f64) -> StopRule {
+        StopRule::TrueError { x_star: direct::solve(p), eps }
+    }
+
+    #[test]
+    fn converges_from_m_equals_one_gaussian() {
+        let p = small_problem(256, 32, 0.5, 1);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
+        let sol = solve(&p, &vec![0.0; 32], &cfg, 11);
+        assert!(sol.report.converged, "adaptive failed: {:?}", sol.report.final_rel_error);
+        assert!(sol.report.final_m >= 1);
+    }
+
+    #[test]
+    fn converges_from_m_equals_one_srht() {
+        let p = small_problem(256, 32, 0.5, 2);
+        let cfg = AdaptiveConfig::new(SketchKind::Srht, stop_for(&p, 1e-10));
+        let sol = solve(&p, &vec![0.0; 32], &cfg, 12);
+        assert!(sol.report.converged);
+    }
+
+    #[test]
+    fn converges_with_sparse_sketch() {
+        let p = small_problem(256, 32, 0.5, 3);
+        let cfg = AdaptiveConfig::new(SketchKind::Sparse, stop_for(&p, 1e-8));
+        let sol = solve(&p, &vec![0.0; 32], &cfg, 13);
+        assert!(sol.report.converged);
+    }
+
+    #[test]
+    fn sketch_size_bounded_by_theorem_5() {
+        // m <= 2 * c0 * d_e / rho with c0 <= 5 (Gaussian), modulo the
+        // doubling overshoot already included in the factor 2.
+        let p = small_problem(1024, 64, 1.0, 4);
+        let d_e = de_of(&p);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
+        let sol = solve(&p, &vec![0.0; 64], &cfg, 14);
+        let bound = crate::theory::bounds::gaussian_sketch_size_bound(cfg.rho, d_e);
+        assert!(sol.report.converged);
+        assert!(
+            (sol.report.peak_m as f64) <= bound.max(2.0),
+            "peak m {} exceeds Theorem 5 bound {:.1} (d_e {:.1})",
+            sol.report.peak_m,
+            bound,
+            d_e
+        );
+    }
+
+    #[test]
+    fn rejections_logarithmic() {
+        let p = small_problem(512, 64, 0.5, 5);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
+        let sol = solve(&p, &vec![0.0; 64], &cfg, 15);
+        // Doublings from m=1 can't exceed log2(n_pad)+1, and should be
+        // far fewer on this easy problem.
+        assert!(sol.report.doublings <= 11, "doublings {}", sol.report.doublings);
+    }
+
+    #[test]
+    fn gradient_only_variant_converges() {
+        let p = small_problem(256, 32, 0.3, 6);
+        let mut cfg = AdaptiveConfig::new(SketchKind::Srht, stop_for(&p, 1e-10));
+        cfg.variant = AdaptiveVariant::GradientOnly;
+        let sol = solve(&p, &vec![0.0; 32], &cfg, 16);
+        assert!(sol.report.converged);
+        assert!(sol.report.solver.contains("adaptive-gd"));
+    }
+
+    #[test]
+    fn small_de_means_small_final_m() {
+        // Large nu => tiny d_e => the adaptive m must stay small even
+        // though d = 64.
+        let p = small_problem(512, 64, 50.0, 7);
+        let d_e = de_of(&p);
+        assert!(d_e < 2.0, "test premise: d_e = {d_e}");
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
+        let sol = solve(&p, &vec![0.0; 64], &cfg, 17);
+        assert!(sol.report.converged);
+        assert!(sol.report.peak_m <= 64, "peak m {} should be << d", sol.report.peak_m);
+    }
+
+    #[test]
+    fn warm_start_keeps_convergence() {
+        let p = small_problem(256, 32, 0.2, 8);
+        let x_star = direct::solve(&p);
+        let near: Vec<f64> = x_star.iter().map(|v| v * 0.99).collect();
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
+        let sol = solve(&p, &near, &cfg, 18);
+        assert!(sol.report.converged);
+    }
+
+    #[test]
+    fn m_trace_monotone_nondecreasing() {
+        let p = small_problem(256, 32, 0.1, 9);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
+        let sol = solve(&p, &vec![0.0; 32], &cfg, 19);
+        for w in sol.report.m_trace.windows(2) {
+            assert!(w[1] >= w[0], "m_trace must never shrink");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = small_problem(128, 16, 0.5, 10);
+        let cfg = AdaptiveConfig::new(SketchKind::Srht, stop_for(&p, 1e-9));
+        let s1 = solve(&p, &vec![0.0; 16], &cfg, 77);
+        let s2 = solve(&p, &vec![0.0; 16], &cfg, 77);
+        assert_eq!(s1.x, s2.x);
+        assert_eq!(s1.report.iterations, s2.report.iterations);
+    }
+}

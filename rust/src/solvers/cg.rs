@@ -1,0 +1,164 @@
+//! Conjugate gradient on the ridge normal equations (baseline).
+//!
+//! Per-iteration cost `O(nd)` (one `A` and one `A^T` GEMV); iteration count
+//! scales with `sqrt(kappa)` of the augmented matrix — this is the solver
+//! the paper beats except at very large `nu` (Figures 1–3).
+
+use super::{RidgeProblem, Solution, SolveReport, StopRule};
+use crate::linalg::{axpy, dot, norm2};
+use std::time::Instant;
+
+/// CG configuration.
+#[derive(Clone, Debug)]
+pub struct CgConfig {
+    pub max_iters: usize,
+    pub stop: StopRule,
+}
+
+impl Default for CgConfig {
+    fn default() -> Self {
+        Self { max_iters: 10_000, stop: StopRule::GradientNorm { tol: 1e-12 } }
+    }
+}
+
+/// Run CG from `x0` on `(A^T A + nu^2 I) x = A^T b`.
+pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig) -> Solution {
+    let start = Instant::now();
+    let d = problem.d();
+    assert_eq!(x0.len(), d);
+    let mut report = SolveReport::new("cg");
+
+    let mut x = x0.to_vec();
+    // Residual of the linear system: r = A^T b - H x = -gradient(x).
+    let mut r = problem.gradient(&x);
+    crate::linalg::scale(-1.0, &mut r);
+    let g0_norm = norm2(&r);
+    let delta0 = match &config.stop {
+        StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
+        _ => 0.0,
+    };
+    if let StopRule::TrueError { x_star, .. } = &config.stop {
+        report.error_trace.push(1.0);
+        let _ = x_star;
+    }
+
+    let mut p = r.clone();
+    let mut rs_old = dot(&r, &r);
+
+    for t in 0..config.max_iters {
+        if rs_old == 0.0 {
+            report.converged = true;
+            break;
+        }
+        let hp = problem.hessian_vec(&p);
+        let alpha = rs_old / dot(&p, &hp);
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &hp, &mut r);
+        let rs_new = dot(&r, &r);
+        report.iterations = t + 1;
+
+        // Stop checks (negated residual == gradient up to sign).
+        let stop_now = match &config.stop {
+            StopRule::TrueError { x_star, eps } => {
+                let delta = problem.prediction_error(&x, x_star);
+                report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
+                delta <= eps * delta0
+            }
+            StopRule::GradientNorm { tol } => rs_new.sqrt() <= tol * g0_norm,
+        };
+        if stop_now {
+            report.converged = true;
+            break;
+        }
+
+        let beta = rs_new / rs_old;
+        // p = r + beta p
+        for i in 0..d {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+
+    if let StopRule::TrueError { x_star, eps } = &config.stop {
+        let delta = problem.prediction_error(&x, x_star);
+        report.final_rel_error = Some(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
+        if delta0 > 0.0 && delta <= eps * delta0 {
+            report.converged = true;
+        }
+    }
+    let total = start.elapsed().as_secs_f64();
+    report.wall_time_s = total;
+    report.iter_time_s = total;
+    Solution { x, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::direct;
+    use crate::solvers::test_util::small_problem;
+
+    #[test]
+    fn converges_to_direct_solution() {
+        let p = small_problem(128, 16, 0.5, 1);
+        let x_star = direct::solve(&p);
+        let sol = solve(&p, &vec![0.0; 16], &CgConfig::default());
+        assert!(sol.report.converged);
+        for i in 0..16 {
+            assert!((sol.x[i] - x_star[i]).abs() < 1e-7, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn exact_in_d_iterations() {
+        // CG on a d-dimensional quadratic terminates in <= d steps
+        // (exact arithmetic; allow small slack).
+        let p = small_problem(64, 8, 1.0, 2);
+        let sol = solve(&p, &vec![0.0; 8], &CgConfig::default());
+        assert!(sol.report.iterations <= 10, "iters {}", sol.report.iterations);
+    }
+
+    #[test]
+    fn true_error_stop_rule() {
+        let p = small_problem(128, 16, 0.2, 3);
+        let x_star = direct::solve(&p);
+        let cfg = CgConfig {
+            max_iters: 500,
+            stop: StopRule::TrueError { x_star: x_star.clone(), eps: 1e-8 },
+        };
+        let sol = solve(&p, &vec![0.0; 16], &cfg);
+        assert!(sol.report.converged);
+        assert!(sol.report.final_rel_error.unwrap() <= 1e-8);
+        // Error trace must be monotone-ish decreasing overall.
+        let tr = &sol.report.error_trace;
+        assert!(tr.last().unwrap() < &1e-8);
+    }
+
+    #[test]
+    fn warm_start_faster_than_cold() {
+        let p = small_problem(128, 32, 0.05, 4);
+        let x_star = direct::solve(&p);
+        let near: Vec<f64> = x_star.iter().map(|v| v * 0.999).collect();
+        let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-9 };
+        let cold = solve(&p, &vec![0.0; 32], &CgConfig { max_iters: 1000, stop: stop.clone() });
+        let warm = solve(&p, &near, &CgConfig { max_iters: 1000, stop });
+        assert!(warm.report.iterations <= cold.report.iterations);
+    }
+
+    #[test]
+    fn ill_conditioning_slows_cg() {
+        // Smaller nu => larger kappa => more iterations.
+        let mk = |nu: f64, seed: u64| {
+            let p = small_problem(256, 64, nu, seed);
+            let x_star = direct::solve(&p);
+            let cfg = CgConfig {
+                max_iters: 5000,
+                stop: StopRule::TrueError { x_star, eps: 1e-10 },
+            };
+            solve(&p, &vec![0.0; 64], &cfg).report.iterations
+        };
+        let hard = mk(1e-3, 5);
+        let easy = mk(10.0, 5);
+        assert!(hard > easy, "hard {hard} <= easy {easy}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Underdetermined case `d >= n` via the dual problem (Appendix A.2).
+//!
+//! The dual of `min_x 1/2 ||Ax - b||^2 + nu^2/2 ||x||^2` is
+//! `min_z 1/2 ||A^T z||^2 + nu^2/2 ||z||^2 - b^T z`, which is itself an
+//! overdetermined ridge problem with data matrix `A^T in R^{d x n}` and
+//! normal-equations RHS equal to `b` directly — no pseudo-inverse `A^† b`
+//! is ever formed (the paper's key observation:
+//! `∇g(z) = A A^T z + nu^2 z - b`). The primal solution is recovered as
+//! `x* = A^T z*`.
+
+use super::adaptive::{self, AdaptiveConfig};
+use super::{RidgeProblem, Solution, StopRule};
+use crate::linalg::Matrix;
+
+/// An underdetermined ridge instance (`d >= n`) and its dual reduction.
+pub struct DualRidge {
+    /// The dual, overdetermined problem in `z in R^n` with data `A^T`.
+    pub dual: RidgeProblem,
+    /// Original data matrix (`n x d`), kept for the primal map.
+    a: Matrix,
+}
+
+impl DualRidge {
+    /// Build the dual reduction of `(A, b, nu)` with `A: n x d`, `d >= n`.
+    pub fn new(a: Matrix, b: Vec<f64>, nu: f64) -> Self {
+        assert!(a.cols() >= a.rows(), "dual path is for underdetermined problems (d >= n)");
+        assert_eq!(a.rows(), b.len());
+        let dual = RidgeProblem::from_normal(a.transpose(), b, nu);
+        Self { dual, a }
+    }
+
+    /// Map a dual iterate to the primal space: `x = A^T z`.
+    pub fn primal(&self, z: &[f64]) -> Vec<f64> {
+        self.a.matvec_t(z)
+    }
+
+    /// Solve via the adaptive algorithm on the dual, returning the primal
+    /// solution. Guarantees of Theorems 5–7 carry over verbatim
+    /// (Appendix A.2).
+    pub fn solve_adaptive(&self, config: &AdaptiveConfig, seed: u64) -> Solution {
+        let n = self.dual.d();
+        let z0 = vec![0.0; n];
+        let mut sol = adaptive::solve(&self.dual, &z0, config, seed);
+        sol.x = self.primal(&sol.x);
+        sol.report.solver = format!("dual-{}", sol.report.solver);
+        sol
+    }
+}
+
+/// Exact primal solution of an underdetermined ridge problem through the
+/// dual normal equations (`(A A^T + nu^2 I_n) z = b`, `x = A^T z`) —
+/// `O(d n^2)`, the ground truth for the dual experiments.
+pub fn solve_direct(a: &Matrix, b: &[f64], nu: f64) -> Vec<f64> {
+    use crate::linalg::cholesky::Cholesky;
+    let mut k = a.gram_outer(); // A A^T, n x n
+    k.add_diag(nu * nu);
+    let chol = Cholesky::factor(&k).expect("A A^T + nu^2 I is PD");
+    let z = chol.solve(b);
+    a.matvec_t(&z)
+}
+
+/// Dual stop rule helper: build a `TrueError` rule in the *dual* space
+/// from the known dual optimum.
+pub fn dual_stop(dual: &RidgeProblem, eps: f64) -> StopRule {
+    StopRule::TrueError { x_star: super::direct::solve(dual), eps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::sketch::SketchKind;
+
+    /// Wide random matrix (d >= n) with decaying row space.
+    fn wide_problem(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        // Transpose of an overdetermined synthetic dataset.
+        let ds = crate::data::synthetic::exponential_decay(d, n, seed);
+        let a = ds.a.transpose(); // n x d
+        let mut rng = Xoshiro256::seed_from_u64(seed + 1);
+        let mut b = vec![0.0; n];
+        rng.fill_gaussian(&mut b, 1.0);
+        (a, b)
+    }
+
+    #[test]
+    fn dual_direct_satisfies_primal_optimality() {
+        let (a, b) = wide_problem(16, 64, 1);
+        let nu = 0.5;
+        let x = solve_direct(&a, &b, nu);
+        // Primal optimality: A^T (A x - b) + nu^2 x = 0.
+        let p = RidgeProblem::new(a, b, nu);
+        let g = p.gradient(&x);
+        assert!(crate::linalg::norm2(&g) < 1e-9, "gradient norm {}", crate::linalg::norm2(&g));
+    }
+
+    #[test]
+    fn adaptive_dual_matches_direct() {
+        let (a, b) = wide_problem(16, 64, 2);
+        let nu = 0.5;
+        let x_direct = solve_direct(&a, &b, nu);
+        let dr = DualRidge::new(a, b, nu);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, dual_stop(&dr.dual, 1e-12));
+        let sol = dr.solve_adaptive(&cfg, 3);
+        assert!(sol.report.converged);
+        for i in 0..x_direct.len() {
+            assert!(
+                (sol.x[i] - x_direct[i]).abs() < 1e-5,
+                "coord {i}: {} vs {}",
+                sol.x[i],
+                x_direct[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dual_gradient_needs_no_pseudoinverse() {
+        // ∇g(z) computed by the machinery == A A^T z + nu^2 z - b.
+        let (a, b) = wide_problem(8, 32, 4);
+        let nu = 0.7;
+        let dr = DualRidge::new(a.clone(), b.clone(), nu);
+        let z: Vec<f64> = (0..8).map(|i| (i as f64 * 0.4).sin()).collect();
+        let g = dr.dual.gradient(&z);
+        let aaz = a.matvec(&a.matvec_t(&z));
+        for i in 0..8 {
+            let expect = aaz[i] + nu * nu * z[i] - b[i];
+            assert!((g[i] - expect).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn srht_dual_converges() {
+        let (a, b) = wide_problem(16, 128, 5);
+        let dr = DualRidge::new(a, b, 1.0);
+        let cfg = AdaptiveConfig::new(SketchKind::Srht, dual_stop(&dr.dual, 1e-10));
+        let sol = dr.solve_adaptive(&cfg, 6);
+        assert!(sol.report.converged);
+        assert!(sol.report.solver.starts_with("dual-adaptive"));
+    }
+
+    #[test]
+    #[should_panic(expected = "underdetermined")]
+    fn rejects_tall_input() {
+        let (a, b) = wide_problem(8, 32, 7);
+        DualRidge::new(a.transpose(), b[..4].to_vec(), 0.5);
+    }
+}

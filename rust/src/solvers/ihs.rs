@@ -1,0 +1,329 @@
+//! Fixed-sketch-size IHS: the gradient (`beta = 0`) and Polyak heavy-ball
+//! variants of update (2), with the convergence guarantees of Theorems 1–2.
+//!
+//! These are the building blocks Algorithm 1 adapts; exposed standalone for
+//! users who *do* know `d_e` (and for the rate-validation experiments that
+//! check `delta_t ~ (d_e/m)^t`).
+
+use super::woodbury::WoodburyCache;
+use super::{RidgeProblem, Solution, SolveReport, StopRule};
+use crate::linalg::{axpy, norm2};
+use crate::rng::Xoshiro256;
+use crate::sketch::{self, SketchKind};
+use crate::theory::rates::IhsParams;
+use crate::theory::{gaussian_bounds, srht_bounds};
+use std::time::Instant;
+
+/// Fixed-size IHS configuration.
+#[derive(Clone, Debug)]
+pub struct IhsConfig {
+    pub kind: SketchKind,
+    /// Sketch size `m`.
+    pub m: usize,
+    /// Step/momentum parameters; `IhsParams` from Definitions 3.1/3.2, or
+    /// hand-chosen.
+    pub params: IhsParams,
+    /// Use the Polyak (heavy-ball) update; `false` = plain gradient-IHS.
+    pub momentum: bool,
+    /// Resample `S` (and re-factor) at every iteration — the *refreshed*
+    /// IHS variant discussed in §1.3. The paper's cited results
+    /// ([25, 26]): refreshing does not improve on a fixed embedding
+    /// (same Gaussian rate, slower SRHT rate) while paying the full
+    /// sketch+factor cost each step; this flag exists to reproduce that
+    /// ablation (`benches/ablations`).
+    pub refresh: bool,
+    pub max_iters: usize,
+    pub stop: StopRule,
+}
+
+impl IhsConfig {
+    /// Parameters per Definition 3.1 (Gaussian practical parameters) for a
+    /// given aspect ratio `rho` (`eta` fixed at 0.01 as in the paper's
+    /// experiments).
+    pub fn gaussian(m: usize, rho: f64, stop: StopRule) -> Self {
+        let params = gaussian_bounds(rho, 0.01, 1.0).params();
+        Self {
+            kind: SketchKind::Gaussian,
+            m,
+            params,
+            momentum: true,
+            refresh: false,
+            max_iters: 10_000,
+            stop,
+        }
+    }
+
+    /// Parameters per Definition 3.2 (SRHT practical parameters).
+    pub fn srht(m: usize, rho: f64, stop: StopRule) -> Self {
+        let params = srht_bounds(rho, 2, 2.0).params();
+        Self {
+            kind: SketchKind::Srht,
+            m,
+            params,
+            momentum: true,
+            refresh: false,
+            max_iters: 10_000,
+            stop,
+        }
+    }
+}
+
+/// Run fixed-size IHS from `x0`.
+pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &IhsConfig, rng: &mut Xoshiro256) -> Solution {
+    let start = Instant::now();
+    let d = problem.d();
+    assert_eq!(x0.len(), d);
+    let label = if config.momentum { "polyak-ihs" } else { "gradient-ihs" };
+    let mut report = SolveReport::new(format!("{label}-{}", config.kind));
+    report.final_m = config.m;
+    report.peak_m = config.m;
+
+    // Sketch + factor once.
+    let t0 = Instant::now();
+    let s = sketch::sample(config.kind, config.m, problem.n(), rng);
+    let sa = s.apply(&problem.a);
+    report.sketch_time_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let cache = WoodburyCache::new(sa, problem.nu);
+    report.factor_time_s = t0.elapsed().as_secs_f64();
+
+    let t_iter = Instant::now();
+    let mut x_prev = x0.to_vec();
+    let mut x = x0.to_vec();
+    let mut g = problem.gradient(&x);
+    let g0_norm = norm2(&g);
+    let delta0 = match &config.stop {
+        StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
+        _ => 0.0,
+    };
+
+    let (mu, beta) = if config.momentum {
+        (config.params.mu_p, config.params.beta_p)
+    } else {
+        (config.params.mu_gd, 0.0)
+    };
+
+    let mut cache = cache;
+    for t in 0..config.max_iters {
+        if config.refresh && t > 0 {
+            // Refreshed-embedding ablation: new S, new factorization.
+            let t0 = Instant::now();
+            let s = sketch::sample(config.kind, config.m, problem.n(), rng);
+            let sa = s.apply(&problem.a);
+            report.sketch_time_s += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            cache = WoodburyCache::new(sa, problem.nu);
+            report.factor_time_s += t0.elapsed().as_secs_f64();
+        }
+        let gt = cache.apply_inverse(&g);
+        // x_next = x - mu * gt + beta * (x - x_prev)
+        let mut x_next = x.clone();
+        axpy(-mu, &gt, &mut x_next);
+        if beta != 0.0 {
+            for i in 0..d {
+                x_next[i] += beta * (x[i] - x_prev[i]);
+            }
+        }
+        x_prev = std::mem::replace(&mut x, x_next);
+        g = problem.gradient(&x);
+        report.iterations = t + 1;
+
+        let stop_now = match &config.stop {
+            StopRule::TrueError { x_star, eps } => {
+                let delta = problem.prediction_error(&x, x_star);
+                report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
+                delta <= eps * delta0
+            }
+            StopRule::GradientNorm { tol } => norm2(&g) <= tol * g0_norm,
+        };
+        if stop_now {
+            report.converged = true;
+            break;
+        }
+    }
+
+    if let StopRule::TrueError { x_star, eps } = &config.stop {
+        let delta = problem.prediction_error(&x, x_star);
+        report.final_rel_error = Some(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
+        if delta0 > 0.0 && delta <= eps * delta0 {
+            report.converged = true;
+        }
+    }
+    report.iter_time_s = t_iter.elapsed().as_secs_f64();
+    report.wall_time_s = start.elapsed().as_secs_f64();
+    Solution { x, report }
+}
+
+/// The \[31\]-style baseline the adaptive method supersedes: estimate `d_e`
+/// with a Hutchinson trace estimator (cost: `probes` ridge solves on the
+/// Gram matrix, i.e. `O(nd^2 + probes * d^2)` — already more than the
+/// adaptive method's whole budget), then run fixed-size IHS with
+/// `m = ceil(d_e_hat / rho)`. Exposed for the ablation benches; no
+/// accuracy guarantee links `d_e_hat` to the true `d_e`.
+pub fn solve_with_estimated_de(
+    problem: &RidgeProblem,
+    x0: &[f64],
+    kind: SketchKind,
+    rho: f64,
+    probes: usize,
+    stop: StopRule,
+    rng: &mut Xoshiro256,
+) -> (Solution, f64) {
+    let t0 = Instant::now();
+    let de_hat = crate::theory::effective_dim::hutchinson_effective_dimension(
+        &problem.a,
+        problem.nu,
+        probes,
+        rng,
+    )
+    .max(1.0);
+    let estimate_time = t0.elapsed().as_secs_f64();
+    let m = ((de_hat / rho).ceil() as usize)
+        .clamp(1, crate::sketch::srht::next_pow2(problem.n()));
+    let mut cfg = match kind {
+        SketchKind::Gaussian => IhsConfig::gaussian(m, rho.min(0.18), stop),
+        _ => IhsConfig::srht(m, rho, stop),
+    };
+    cfg.kind = kind;
+    let mut sol = solve(problem, x0, &cfg, rng);
+    sol.report.solver = format!("hutchinson-ihs-{kind}");
+    // Charge the estimation phase to the factor bucket (it plays the same
+    // role: pre-iteration setup).
+    sol.report.factor_time_s += estimate_time;
+    sol.report.wall_time_s += estimate_time;
+    (sol, de_hat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::direct;
+    use crate::solvers::test_util::small_problem;
+    use crate::theory::effective_dimension_from_spectrum;
+
+    fn de_of(p: &RidgeProblem) -> f64 {
+        let s = crate::linalg::svd::singular_values(&p.a);
+        effective_dimension_from_spectrum(&s, p.nu)
+    }
+
+    #[test]
+    fn gradient_ihs_converges_with_m_near_de() {
+        let p = small_problem(256, 32, 0.5, 1);
+        let x_star = direct::solve(&p);
+        let d_e = de_of(&p);
+        let rho = 0.15;
+        let m = ((d_e / rho).ceil() as usize).max(8);
+        let mut cfg = IhsConfig::gaussian(m, rho, StopRule::TrueError { x_star, eps: 1e-10 });
+        cfg.momentum = false;
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        assert!(sol.report.converged, "gradient-IHS failed (m={m}, d_e={d_e:.1})");
+    }
+
+    #[test]
+    fn polyak_ihs_converges_and_accelerates() {
+        let p = small_problem(512, 32, 0.1, 3);
+        let x_star = direct::solve(&p);
+        let d_e = de_of(&p);
+        let rho = 0.15;
+        let m = ((d_e / rho).ceil() as usize).max(8);
+        let stop = StopRule::TrueError { x_star, eps: 1e-10 };
+        let mut rng1 = Xoshiro256::seed_from_u64(4);
+        let mut rng2 = Xoshiro256::seed_from_u64(4);
+        let mut grad_cfg = IhsConfig::gaussian(m, rho, stop.clone());
+        grad_cfg.momentum = false;
+        let polyak_cfg = IhsConfig::gaussian(m, rho, stop);
+        let grad = solve(&p, &vec![0.0; 32], &grad_cfg, &mut rng1);
+        let polyak = solve(&p, &vec![0.0; 32], &polyak_cfg, &mut rng2);
+        assert!(grad.report.converged && polyak.report.converged);
+        assert!(
+            polyak.report.iterations <= grad.report.iterations,
+            "polyak {} > gradient {}",
+            polyak.report.iterations,
+            grad.report.iterations
+        );
+    }
+
+    #[test]
+    fn rate_scales_with_aspect_ratio() {
+        // Theorem 1: larger m (smaller d_e/m) => faster contraction.
+        let p = small_problem(512, 16, 0.3, 5);
+        let x_star = direct::solve(&p);
+        let stop = StopRule::TrueError { x_star, eps: 1e-9 };
+        let d_e = de_of(&p);
+        let run = |m: usize, seed: u64| {
+            let mut cfg = IhsConfig::gaussian(m, 0.15, stop.clone());
+            cfg.momentum = false;
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            solve(&p, &vec![0.0; 16], &cfg, &mut rng).report.iterations
+        };
+        let m_small = ((d_e / 0.15).ceil() as usize).max(8);
+        let iters_small = run(m_small, 6);
+        let iters_large = run(4 * m_small, 6);
+        assert!(iters_large <= iters_small);
+    }
+
+    #[test]
+    fn srht_variant_converges() {
+        let p = small_problem(256, 32, 0.5, 7);
+        let x_star = direct::solve(&p);
+        let d_e = de_of(&p);
+        let m = ((d_e * 4.0).ceil() as usize).clamp(16, 256);
+        let cfg = IhsConfig::srht(m, 0.25, StopRule::TrueError { x_star, eps: 1e-9 });
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        assert!(sol.report.converged, "SRHT IHS failed with m={m}");
+    }
+
+    #[test]
+    fn tiny_sketch_fails_to_meet_rate() {
+        // m = 1 on a problem with d_e >> 1: the fixed-size method stalls —
+        // exactly the failure mode the adaptive algorithm exists to fix.
+        let p = small_problem(256, 32, 0.05, 9);
+        let x_star = direct::solve(&p);
+        let mut cfg = IhsConfig::gaussian(1, 0.15, StopRule::TrueError { x_star, eps: 1e-10 });
+        cfg.momentum = false;
+        cfg.max_iters = 60;
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        assert!(!sol.report.converged, "m=1 should not converge in 60 iters");
+    }
+
+    #[test]
+    fn refreshed_variant_converges_but_pays_setup_cost() {
+        let p = small_problem(256, 32, 0.5, 11);
+        let x_star = direct::solve(&p);
+        let d_e = de_of(&p);
+        let m = ((d_e / 0.15).ceil() as usize).max(8);
+        let stop = StopRule::TrueError { x_star, eps: 1e-9 };
+        let mut fixed_cfg = IhsConfig::gaussian(m, 0.15, stop.clone());
+        fixed_cfg.momentum = false;
+        let mut refresh_cfg = fixed_cfg.clone();
+        refresh_cfg.refresh = true;
+        let mut r1 = Xoshiro256::seed_from_u64(12);
+        let mut r2 = Xoshiro256::seed_from_u64(12);
+        let fixed = solve(&p, &vec![0.0; 32], &fixed_cfg, &mut r1);
+        let refreshed = solve(&p, &vec![0.0; 32], &refresh_cfg, &mut r2);
+        assert!(fixed.report.converged && refreshed.report.converged);
+        // Section 1.3 ablation: refreshing buys no iteration advantage
+        // worth its cost — sketch+factor time must be strictly larger.
+        assert!(
+            refreshed.report.sketch_time_s + refreshed.report.factor_time_s
+                > fixed.report.sketch_time_s + fixed.report.factor_time_s
+        );
+    }
+
+    #[test]
+    fn hutchinson_baseline_converges_with_reasonable_estimate() {
+        let p = small_problem(256, 32, 0.5, 13);
+        let x_star = direct::solve(&p);
+        let d_e = de_of(&p);
+        let stop = StopRule::TrueError { x_star, eps: 1e-9 };
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        let (sol, de_hat) =
+            solve_with_estimated_de(&p, &vec![0.0; 32], SketchKind::Gaussian, 0.15, 50, stop, &mut rng);
+        assert!(sol.report.converged, "hutchinson baseline failed");
+        assert!((de_hat - d_e).abs() < 0.5 * d_e.max(2.0), "estimate {de_hat} vs {d_e}");
+        assert!(sol.report.solver.starts_with("hutchinson"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Regularization-path driver (Figures 1 and 3).
+//!
+//! Computes the ridge solutions for a decreasing sequence of `nu` values,
+//! warm-starting each solve at the previous solution — the workload the
+//! paper argues is the practically relevant one (model selection /
+//! inverse problems). Every solver runs the same protocol so cumulative
+//! times are comparable.
+
+use super::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
+use super::cg::{self, CgConfig};
+use super::pcg::{self, PcgConfig};
+use super::{direct, RidgeProblem, SolveReport, StopRule};
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+use crate::sketch::SketchKind;
+
+/// Which algorithm runs the path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PathSolver {
+    Cg,
+    Pcg { kind: SketchKind, rho: f64 },
+    Adaptive { kind: SketchKind, variant: AdaptiveVariant },
+}
+
+impl PathSolver {
+    pub fn label(&self) -> String {
+        match self {
+            PathSolver::Cg => "cg".into(),
+            PathSolver::Pcg { kind, .. } => format!("pcg-{kind}"),
+            PathSolver::Adaptive { kind, variant } => format!(
+                "adaptive-{}-{kind}",
+                match variant {
+                    AdaptiveVariant::PolyakFirst => "polyak",
+                    AdaptiveVariant::GradientOnly => "gd",
+                }
+            ),
+        }
+    }
+}
+
+/// Result of one path point.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub nu: f64,
+    pub report: SolveReport,
+    /// Cumulative wall time up to and including this point.
+    pub cumulative_time_s: f64,
+}
+
+/// Full path result.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub solver: String,
+    pub points: Vec<PathPoint>,
+}
+
+impl PathResult {
+    pub fn total_time_s(&self) -> f64 {
+        self.points.last().map(|p| p.cumulative_time_s).unwrap_or(0.0)
+    }
+
+    pub fn peak_m(&self) -> usize {
+        self.points.iter().map(|p| p.report.peak_m).max().unwrap_or(0)
+    }
+}
+
+/// Run a regularization path on `(a, b)` over `nus` (must be decreasing) to
+/// relative precision `eps` per point (measured against the exact solution,
+/// as in the paper's figures).
+pub fn run_path(
+    a: &Matrix,
+    b: &[f64],
+    nus: &[f64],
+    eps: f64,
+    solver: &PathSolver,
+    seed: u64,
+) -> PathResult {
+    assert!(!nus.is_empty());
+    for w in nus.windows(2) {
+        assert!(w[0] > w[1], "nu sequence must be strictly decreasing");
+    }
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let d = a.cols();
+    let mut x = vec![0.0; d];
+    let mut points = Vec::with_capacity(nus.len());
+    let mut cumulative = 0.0;
+
+    for (i, &nu) in nus.iter().enumerate() {
+        let problem = RidgeProblem::new(a.clone(), b.to_vec(), nu);
+        // Oracle for the stop rule: exact solution at this nu (excluded
+        // from timing — the paper measures solver time only).
+        let x_star = direct::solve(&problem);
+        let stop = StopRule::TrueError { x_star, eps };
+
+        let solution = match solver {
+            PathSolver::Cg => cg::solve(&problem, &x, &CgConfig { max_iters: 100_000, stop }),
+            PathSolver::Pcg { kind, rho } => {
+                let cfg = PcgConfig::new(*kind, *rho, stop);
+                pcg::solve(&problem, &x, &cfg, &mut rng)
+            }
+            PathSolver::Adaptive { kind, variant } => {
+                let mut cfg = AdaptiveConfig::new(*kind, stop);
+                cfg.variant = *variant;
+                adaptive::solve(&problem, &x, &cfg, seed.wrapping_add(i as u64))
+            }
+        };
+
+        cumulative += solution.report.wall_time_s;
+        points.push(PathPoint { nu, report: solution.report, cumulative_time_s: cumulative });
+        x = solution.x;
+    }
+
+    PathResult { solver: solver.label(), points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn small_path_data() -> (Matrix, Vec<f64>) {
+        let ds = synthetic::exponential_decay(256, 32, 1);
+        (ds.a, ds.b)
+    }
+
+    #[test]
+    fn cg_path_converges_everywhere() {
+        let (a, b) = small_path_data();
+        let nus = [1.0, 0.1, 0.01];
+        let res = run_path(&a, &b, &nus, 1e-8, &PathSolver::Cg, 1);
+        assert_eq!(res.points.len(), 3);
+        assert!(res.points.iter().all(|p| p.report.converged));
+    }
+
+    #[test]
+    fn adaptive_path_converges_and_reuses_growth() {
+        let (a, b) = small_path_data();
+        let nus = [1.0, 0.1, 0.01];
+        let solver = PathSolver::Adaptive {
+            kind: SketchKind::Gaussian,
+            variant: AdaptiveVariant::PolyakFirst,
+        };
+        let res = run_path(&a, &b, &nus, 1e-8, &solver, 2);
+        assert!(res.points.iter().all(|p| p.report.converged));
+        // d_e grows as nu shrinks: peak m should be nondecreasing in i
+        // *typically*; at minimum the final point must have m >= 1.
+        assert!(res.peak_m() >= 1);
+    }
+
+    #[test]
+    fn cumulative_time_monotone() {
+        let (a, b) = small_path_data();
+        let nus = [10.0, 1.0, 0.1];
+        let res = run_path(&a, &b, &nus, 1e-6, &PathSolver::Cg, 3);
+        for w in res.points.windows(2) {
+            assert!(w[1].cumulative_time_s >= w[0].cumulative_time_s);
+        }
+        assert!((res.total_time_s() - res.points.last().unwrap().cumulative_time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly decreasing")]
+    fn rejects_unsorted_path() {
+        let (a, b) = small_path_data();
+        run_path(&a, &b, &[0.1, 1.0], 1e-6, &PathSolver::Cg, 4);
+    }
+
+    #[test]
+    fn pcg_path_converges() {
+        let (a, b) = small_path_data();
+        let nus = [1.0, 0.1];
+        let solver = PathSolver::Pcg { kind: SketchKind::Srht, rho: 0.5 };
+        let res = run_path(&a, &b, &nus, 1e-8, &solver, 5);
+        assert!(res.points.iter().all(|p| p.report.converged));
+    }
+
+    #[test]
+    fn labels_stable() {
+        assert_eq!(PathSolver::Cg.label(), "cg");
+        let s = PathSolver::Adaptive {
+            kind: SketchKind::Srht,
+            variant: AdaptiveVariant::GradientOnly,
+        };
+        assert_eq!(s.label(), "adaptive-gd-srht");
+    }
+}

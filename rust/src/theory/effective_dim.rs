@@ -1,0 +1,175 @@
+//! Effective dimension and the deviation matrix `C_S`.
+//!
+//! `d_e := trace(A (A^T A + nu^2 I)^{-1} A^T) = sum_i sigma_i^2 / (sigma_i^2 + nu^2)`
+//! is the quantity the whole paper revolves around: it is the sketch size
+//! at which the eigenvalues of
+//! `C_S = D (U^T S^T S U - I) D + I` concentrate around 1.
+//!
+//! This module computes `d_e` exactly from a spectrum (or a matrix, via the
+//! Jacobi SVD), builds `D` and `C_S` for the concentration experiments, and
+//! provides a Hutchinson-type randomized trace estimator — the heuristic
+//! the paper cites from \[31\] as the alternative its adaptive method makes
+//! unnecessary.
+
+use crate::linalg::cholesky::Cholesky;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::svd::{singular_values, svd};
+use crate::rng::Xoshiro256;
+use crate::sketch::Sketch;
+
+/// `d_e` from the singular values of `A` at regularization `nu`.
+pub fn effective_dimension_from_spectrum(sigma: &[f64], nu: f64) -> f64 {
+    assert!(nu >= 0.0);
+    sigma
+        .iter()
+        .map(|&s| {
+            let s2 = s * s;
+            s2 / (s2 + nu * nu)
+        })
+        .sum()
+}
+
+/// `d_e` computed exactly from `A` (Jacobi SVD; test/diagnostic use).
+pub fn effective_dimension(a: &Matrix, nu: f64) -> f64 {
+    effective_dimension_from_spectrum(&singular_values(a), nu)
+}
+
+/// The diagonal of `D = diag(sigma_i / sqrt(sigma_i^2 + nu^2))`.
+pub fn d_diagonal(sigma: &[f64], nu: f64) -> Vec<f64> {
+    sigma.iter().map(|&s| s / (s * s + nu * nu).sqrt()).collect()
+}
+
+/// Hutchinson trace estimator for
+/// `d_e = trace((A^T A)(A^T A + nu^2 I)^{-1})` using `probes` Rademacher
+/// probes: `d_e ≈ mean_z z^T G (G + nu^2 I)^{-1} z`, `G = A^T A`.
+/// This is the \[31\]-style heuristic; the adaptive method exists precisely
+/// so you never need it, but we ship it for comparison experiments.
+pub fn hutchinson_effective_dimension(a: &Matrix, nu: f64, probes: usize, rng: &mut Xoshiro256) -> f64 {
+    let d = a.cols();
+    let mut gram = a.gram();
+    let g = gram.clone();
+    gram.add_diag(nu * nu);
+    let chol = Cholesky::factor(&gram).expect("ridge Gram is PD");
+    let mut z = vec![0.0; d];
+    let mut acc = 0.0;
+    for _ in 0..probes.max(1) {
+        rng.fill_rademacher(&mut z);
+        // z^T G (G + nu^2 I)^{-1} z
+        let w = chol.solve(&z);
+        let gw = g.matvec(&w);
+        acc += crate::linalg::dot(&z, &gw);
+    }
+    acc / probes.max(1) as f64
+}
+
+/// Empirical `C_S = D (U^T S^T S U - I) D + I` for a given problem matrix
+/// and sketch. Used by the concentration harness (Theorems 3–4 checks);
+/// never on the solve path.
+pub fn c_s_matrix(a: &Matrix, nu: f64, sketch: &dyn Sketch) -> Matrix {
+    let f = svd(a);
+    let d_diag = d_diagonal(&f.s, nu);
+    let su = sketch.apply(&f.u); // m x d
+    let mut dev = su.gram(); // U^T S^T S U
+    let d = a.cols();
+    // dev <- D (dev - I) D + I
+    for i in 0..d {
+        for j in 0..d {
+            let delta = if i == j { 1.0 } else { 0.0 };
+            let v = d_diag[i] * (dev.get(i, j) - delta) * d_diag[j] + delta;
+            dev.set(i, j, v);
+        }
+    }
+    dev
+}
+
+/// Extreme eigenvalues `(gamma_d, gamma_1)` of a symmetric PSD matrix via
+/// its (Jacobi) singular values — for symmetric PSD these coincide with the
+/// eigenvalues.
+pub fn extreme_eigenvalues(sym: &Matrix) -> (f64, f64) {
+    let s = singular_values(sym);
+    (*s.last().unwrap(), s[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{gaussian::GaussianSketch, srht::SrhtSketch};
+
+    fn decaying_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        // A = U diag(sigma) V^T with exponentially decaying sigma.
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let g1 = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
+        let g2 = Matrix::from_fn(d, d, |_, _| rng.next_gaussian());
+        let u = crate::linalg::qr::QR::factor(g1).q_thin();
+        let v = crate::linalg::qr::QR::factor(g2).q_thin();
+        let sigma: Vec<f64> = (0..d).map(|j| 0.8f64.powi(j as i32)).collect();
+        u.matmul(&Matrix::diag(&sigma)).matmul(&v.transpose())
+    }
+
+    #[test]
+    fn de_limits() {
+        let sigma = vec![1.0, 1.0, 1.0];
+        // nu -> 0: d_e -> rank; nu -> inf: d_e -> 0.
+        assert!((effective_dimension_from_spectrum(&sigma, 0.0) - 3.0).abs() < 1e-12);
+        assert!(effective_dimension_from_spectrum(&sigma, 1e6) < 1e-9);
+    }
+
+    #[test]
+    fn de_monotone_in_nu() {
+        let sigma: Vec<f64> = (0..20).map(|j| 0.9f64.powi(j)).collect();
+        let d1 = effective_dimension_from_spectrum(&sigma, 0.1);
+        let d2 = effective_dimension_from_spectrum(&sigma, 1.0);
+        assert!(d1 > d2);
+    }
+
+    #[test]
+    fn de_from_matrix_matches_spectrum() {
+        let a = decaying_matrix(24, 8, 1);
+        let s = singular_values(&a);
+        let d1 = effective_dimension(&a, 0.5);
+        let d2 = effective_dimension_from_spectrum(&s, 0.5);
+        assert!((d1 - d2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hutchinson_close_to_exact() {
+        let a = decaying_matrix(30, 10, 2);
+        let exact = effective_dimension(&a, 0.3);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let est = hutchinson_effective_dimension(&a, 0.3, 200, &mut rng);
+        assert!((est - exact).abs() < 0.15 * exact.max(1.0), "est {est} exact {exact}");
+    }
+
+    #[test]
+    fn d_diagonal_in_unit_interval() {
+        let sigma = vec![5.0, 1.0, 0.1];
+        for v in d_diagonal(&sigma, 0.5) {
+            assert!(v > 0.0 && v < 1.0);
+        }
+    }
+
+    #[test]
+    fn c_s_identity_for_orthogonal_full_sketch() {
+        // With m = n_pad and SRHT, S is a (scaled) orthogonal matrix, so
+        // U^T S^T S U = I and C_S = I exactly.
+        let a = decaying_matrix(16, 4, 4);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let sk = SrhtSketch::sample(16, 16, &mut rng);
+        let cs = c_s_matrix(&a, 0.5, &sk);
+        assert!(cs.max_abs_diff(&Matrix::eye(4)) < 1e-8);
+    }
+
+    #[test]
+    fn c_s_eigenvalues_concentrate_with_m() {
+        let a = decaying_matrix(32, 6, 6);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let small = GaussianSketch::sample(8, 32, &mut rng);
+        let large = GaussianSketch::sample(256, 32, &mut rng);
+        let (lo_s, hi_s) = extreme_eigenvalues(&c_s_matrix(&a, 0.5, &small));
+        let (lo_l, hi_l) = extreme_eigenvalues(&c_s_matrix(&a, 0.5, &large));
+        // Larger sketch => tighter bracket around 1.
+        assert!((hi_l - 1.0).abs() < (hi_s - 1.0).abs() + 0.05);
+        assert!((1.0 - lo_l) < (1.0 - lo_s) + 0.05);
+        assert!(lo_s > 0.0, "C_S is positive definite (paper §2)");
+    }
+}

@@ -1,0 +1,18 @@
+//! Closed-form theory of the paper: convergence rates, algorithmic
+//! parameters, effective dimension, and the concentration bounds of
+//! Theorems 3–7.
+//!
+//! Everything the adaptive algorithm needs at run time — step sizes,
+//! momentum, target improvement ratios — is a pure function of
+//! `(lambda, Lambda)` eigenvalue bounds for `C_S`, which in turn are pure
+//! functions of the aspect ratio `rho` (and `eta` for Gaussian sketches).
+//! Keeping these as plain functions makes the parameter plumbing in
+//! [`crate::solvers::adaptive`] exactly mirror Definitions 3.1 / 3.2.
+
+pub mod bounds;
+pub mod effective_dim;
+pub mod rates;
+
+pub use bounds::{gaussian_bounds, srht_bounds, EigenBounds};
+pub use effective_dim::{effective_dimension, effective_dimension_from_spectrum};
+pub use rates::{IhsParams, Rates};

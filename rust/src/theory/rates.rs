@@ -1,0 +1,141 @@
+//! Convergence rates and step sizes of Theorems 1–2.
+//!
+//! Given eigenvalue bounds `0 < lambda <= eig(C_S) <= Lambda`:
+//!
+//! * gradient-IHS (Theorem 1): step `mu_gd = 2 / (1/lambda + 1/Lambda)`,
+//!   per-step rate `c_gd = ((Lambda - lambda) / (Lambda + lambda))^2`;
+//! * Polyak-IHS (Theorem 2): step
+//!   `mu_p = 4 / (1/sqrt(lambda) + 1/sqrt(Lambda))^2`, momentum
+//!   `beta_p = ((sqrt(Lambda) - sqrt(lambda)) / (sqrt(Lambda) + sqrt(lambda)))^2`,
+//!   asymptotic rate `c_p = beta_p`.
+
+/// Eigenvalue bracket `[lambda, Lambda]` for `C_S`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rates {
+    pub lambda: f64,
+    pub big_lambda: f64,
+}
+
+/// Full set of algorithmic parameters derived from a bracket — the inputs
+/// of Algorithm 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IhsParams {
+    /// Gradient-IHS step size `mu_gd`.
+    pub mu_gd: f64,
+    /// Polyak-IHS step size `mu_p`.
+    pub mu_p: f64,
+    /// Polyak momentum `beta_p`.
+    pub beta_p: f64,
+    /// Target per-step rate for gradient-IHS acceptance, `c_gd`.
+    pub c_gd: f64,
+    /// Target geometric-mean rate for Polyak-IHS acceptance, `c_p`.
+    pub c_p: f64,
+}
+
+impl Rates {
+    /// Build a bracket; panics unless `0 < lambda <= Lambda`.
+    pub fn new(lambda: f64, big_lambda: f64) -> Self {
+        assert!(
+            lambda > 0.0 && big_lambda >= lambda,
+            "invalid eigenvalue bracket [{lambda}, {big_lambda}]"
+        );
+        Self { lambda, big_lambda }
+    }
+
+    /// Theorem 1 step size.
+    pub fn mu_gd(&self) -> f64 {
+        2.0 / (1.0 / self.lambda + 1.0 / self.big_lambda)
+    }
+
+    /// Theorem 1 per-iteration contraction factor.
+    pub fn c_gd(&self) -> f64 {
+        let r = (self.big_lambda - self.lambda) / (self.big_lambda + self.lambda);
+        r * r
+    }
+
+    /// Theorem 2 step size.
+    pub fn mu_p(&self) -> f64 {
+        let s = 1.0 / self.lambda.sqrt() + 1.0 / self.big_lambda.sqrt();
+        4.0 / (s * s)
+    }
+
+    /// Theorem 2 momentum parameter.
+    pub fn beta_p(&self) -> f64 {
+        let num = self.big_lambda.sqrt() - self.lambda.sqrt();
+        let den = self.big_lambda.sqrt() + self.lambda.sqrt();
+        let r = num / den;
+        r * r
+    }
+
+    /// Theorem 2 asymptotic rate (equals `beta_p`).
+    pub fn c_p(&self) -> f64 {
+        self.beta_p()
+    }
+
+    /// Bundle everything into [`IhsParams`].
+    pub fn params(&self) -> IhsParams {
+        IhsParams {
+            mu_gd: self.mu_gd(),
+            mu_p: self.mu_p(),
+            beta_p: self.beta_p(),
+            c_gd: self.c_gd(),
+            c_p: self.c_p(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_bracket_identity() {
+        // lambda == Lambda == 1: exact Newton, rate 0, step 1.
+        let r = Rates::new(1.0, 1.0);
+        assert!((r.mu_gd() - 1.0).abs() < 1e-15);
+        assert!(r.c_gd().abs() < 1e-15);
+        assert!((r.mu_p() - 1.0).abs() < 1e-15);
+        assert!(r.beta_p().abs() < 1e-15);
+    }
+
+    #[test]
+    fn srht_practical_rate_is_rho() {
+        // Definition 3.2: lambda = 1 - sqrt(rho), Lambda = 1 + sqrt(rho)
+        // => c_gd = rho exactly (used in the proof of Theorem 7).
+        for rho in [0.01f64, 0.1, 0.25, 0.5, 0.9] {
+            let r = Rates::new(1.0 - rho.sqrt(), 1.0 + rho.sqrt());
+            assert!((r.c_gd() - rho).abs() < 1e-12, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn polyak_accelerates_over_gradient() {
+        // c_p = sqrt-conditioning rate must beat c_gd for any nontrivial
+        // bracket.
+        let r = Rates::new(0.4, 1.6);
+        assert!(r.c_p() < r.c_gd());
+    }
+
+    #[test]
+    fn rates_in_unit_interval() {
+        let r = Rates::new(0.05, 3.0);
+        for v in [r.c_gd(), r.c_p(), r.beta_p()] {
+            assert!((0.0..1.0).contains(&v));
+        }
+        assert!(r.mu_gd() > 0.0 && r.mu_p() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid eigenvalue bracket")]
+    fn rejects_nonpositive_lambda() {
+        Rates::new(0.0, 1.0);
+    }
+
+    #[test]
+    fn params_bundle_consistent() {
+        let r = Rates::new(0.3, 1.9);
+        let p = r.params();
+        assert_eq!(p.mu_gd, r.mu_gd());
+        assert_eq!(p.c_p, r.c_p());
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny `--flag value` argument parser for the binaries (offline build has
+//! no clap). Supports `--key value`, `--key=value`, boolean `--key`, and a
+//! positional subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand plus flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags present without a value (`--paper`).
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                // Extra positional: treat as a switch for forgiveness.
+                out.switches.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean switch presence (`--paper`).
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list of f64 (`--nus 1e4,1e3,1`).
+    pub fn get_f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter_map(|x| x.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["solve", "--n", "1024", "--rho=0.1", "--paper"]);
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.get_usize("n", 0), 1024);
+        assert!((a.get_f64("rho", 0.0) - 0.1).abs() < 1e-15);
+        assert!(a.has("paper"));
+        assert!(!a.has("absent"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse(&["--nus", "1e2, 10,1"]);
+        assert_eq!(a.get_f64_list("nus", &[]), vec![100.0, 10.0, 1.0]);
+        assert_eq!(a.get_f64_list("other", &[5.0]), vec![5.0]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // `--shift -3` — the value starts with '-' but not '--'.
+        let a = parse(&["--shift", "-3"]);
+        assert_eq!(a.get_f64("shift", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the build is fully offline, so there is
+//! no serde/clap/criterion — these modules cover exactly what the rest of
+//! the crate needs).
+
+pub mod cli;
+pub mod json;
+pub mod stats;

@@ -1,0 +1,86 @@
+//! Summary statistics for benchmark trials (mean / std / min / median),
+//! replacing criterion's aggregation in the offline build.
+
+/// Aggregate of a set of measurements.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+/// Compute summary statistics. Empty input yields all zeros.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    Summary { n, mean, std: var.sqrt(), min: sorted[0], max: sorted[n - 1], median }
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if abs < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if abs < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        // Sample std of 1..4 = sqrt(5/3).
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn odd_median() {
+        assert_eq!(summarize(&[3.0, 1.0, 2.0]).median, 2.0);
+    }
+
+    #[test]
+    fn empty_is_zeros() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn time_formatting_ranges() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains(" s"));
+    }
+}

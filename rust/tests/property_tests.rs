@@ -1,0 +1,245 @@
+//! Property-based tests (hand-rolled generator loop — the offline build
+//! has no proptest). Each property is checked over many randomized cases
+//! drawn from a seeded RNG; failures print the case for reproduction.
+
+use effdim::coordinator::job::{JobSpec, SolverChoice, Workload};
+use effdim::coordinator::scheduler::Scheduler;
+use effdim::linalg::cholesky::Cholesky;
+use effdim::linalg::{norm2, Matrix};
+use effdim::rng::Xoshiro256;
+use effdim::sketch::{self, SketchKind};
+use effdim::solvers::woodbury::WoodburyCache;
+use effdim::solvers::{direct, RidgeProblem};
+use std::time::Duration;
+
+/// Run `cases` randomized checks of `property`, feeding it a fresh RNG.
+fn check_property(name: &str, cases: usize, mut property: impl FnMut(u64, &mut Xoshiro256)) {
+    for case in 0..cases as u64 {
+        let mut rng = Xoshiro256::seed_from_u64(0xbeef ^ case.wrapping_mul(0x9E3779B97F4A7C15));
+        // A panic inside `property` fails the test; include the case id.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(case, &mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case}: {e:?}");
+        }
+    }
+}
+
+fn random_dims(rng: &mut Xoshiro256) -> (usize, usize) {
+    let d = 1usize << (2 + rng.next_below(4) as usize); // 4..32
+    let n = d << (1 + rng.next_below(3) as usize); // 2d..8d
+    (n, d)
+}
+
+// ---------------------------------------------------------------------------
+// Linalg / sketch invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gemm_matches_naive() {
+    check_property("gemm == naive", 30, |_case, rng| {
+        let m = 1 + rng.next_below(40) as usize;
+        let k = 1 + rng.next_below(40) as usize;
+        let n = 1 + rng.next_below(40) as usize;
+        let a = Matrix::from_fn(m, k, |_, _| rng.next_gaussian());
+        let b = Matrix::from_fn(k, n, |_, _| rng.next_gaussian());
+        let c = a.matmul(&b);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.get(i, p) * b.get(p, j);
+                }
+                assert!((c.get(i, j) - s).abs() < 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_inverts() {
+    check_property("cholesky solve", 25, |_case, rng| {
+        let d = 1 + rng.next_below(24) as usize;
+        let g = Matrix::from_fn(d + 2, d, |_, _| rng.next_gaussian());
+        let mut spd = g.gram();
+        spd.add_diag(0.1 + rng.next_f64());
+        let chol = Cholesky::factor(&spd).unwrap();
+        let x0: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let b = spd.matvec(&x0);
+        let x = chol.solve(&b);
+        for i in 0..d {
+            assert!((x[i] - x0[i]).abs() < 1e-7, "coord {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_sketches_preserve_norms_on_average() {
+    // E ||S x||^2 = ||x||^2 for every family; check the empirical mean
+    // over sketches stays within a loose band.
+    check_property("sketch isometry", 6, |case, rng| {
+        let kind = match case % 3 {
+            0 => SketchKind::Gaussian,
+            1 => SketchKind::Srht,
+            _ => SketchKind::Sparse,
+        };
+        let n = 64;
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let xm = Matrix::from_vec(n, 1, x.clone());
+        let x2 = norm2(&x).powi(2);
+        let trials = 60;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let s = sketch::sample(kind, 32, n, rng);
+            let sx = s.apply(&xm);
+            acc += sx.as_slice().iter().map(|v| v * v).sum::<f64>();
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - x2).abs() < 0.35 * x2,
+            "{kind}: mean {mean} vs {x2}"
+        );
+    });
+}
+
+#[test]
+fn prop_woodbury_inverts_hs_any_shape() {
+    check_property("woodbury inverse", 30, |_case, rng| {
+        let d = 2 + rng.next_below(20) as usize;
+        let m = 1 + rng.next_below(2 * d as u64) as usize;
+        let sa = Matrix::from_fn(m, d, |_, _| rng.next_gaussian() * 0.6);
+        let nu = 0.2 + rng.next_f64();
+        let cache = WoodburyCache::new(sa.clone(), nu);
+        let g: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let z = cache.apply_inverse(&g);
+        let hz = cache.h_s().matvec(&z);
+        for i in 0..d {
+            assert!((hz[i] - g[i]).abs() < 1e-7, "m={m} d={d} coord {i}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Solver invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_direct_solution_is_stationary() {
+    check_property("direct stationarity", 15, |case, rng| {
+        let (n, d) = random_dims(rng);
+        let ds = effdim::data::synthetic::exponential_decay(n, d, 0x5eed + case);
+        let nu = 10f64.powf(rng.next_f64() * 4.0 - 2.0); // 1e-2..1e2
+        let p = RidgeProblem::new(ds.a, ds.b, nu);
+        let x = direct::solve(&p);
+        let g = p.gradient(&x);
+        let scale = norm2(&p.atb).max(1.0);
+        assert!(norm2(&g) / scale < 1e-8, "n={n} d={d} nu={nu}");
+    });
+}
+
+#[test]
+fn prop_adaptive_m_monotone_and_bounded() {
+    use effdim::solvers::adaptive::{self, AdaptiveConfig};
+    use effdim::solvers::StopRule;
+    check_property("adaptive m monotone", 8, |case, rng| {
+        let (n, d) = random_dims(rng);
+        let ds = effdim::data::synthetic::exponential_decay(n, d, 0xfeed + case);
+        let nu = 10f64.powf(rng.next_f64() * 2.0 - 1.0);
+        let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+        let x_star = direct::solve(&p);
+        let kind = if case % 2 == 0 { SketchKind::Gaussian } else { SketchKind::Srht };
+        let cfg = AdaptiveConfig::new(kind, StopRule::TrueError { x_star, eps: 1e-8 });
+        let sol = adaptive::solve(&p, &vec![0.0; d], &cfg, 0xabc + case);
+        assert!(sol.report.converged, "n={n} d={d} nu={nu} {kind}");
+        for w in sol.report.m_trace.windows(2) {
+            assert!(w[1] >= w[0], "m must never shrink");
+        }
+        let cap = effdim::sketch::srht::next_pow2(n);
+        assert!(sol.report.peak_m <= cap);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_never_loses_or_duplicates_jobs() {
+    // Submit a randomized batch under random worker counts; every accepted
+    // job must reach exactly one terminal state and ids must be unique.
+    check_property("scheduler conservation", 4, |case, rng| {
+        let workers = 1 + rng.next_below(3) as usize;
+        let s = Scheduler::start(workers, 128);
+        let batch = 4 + rng.next_below(8) as usize;
+        let mut ids = Vec::new();
+        for i in 0..batch {
+            let spec = JobSpec {
+                workload: Workload::Synthetic {
+                    profile: if i % 4 == 3 { "nope".into() } else { "exp".into() },
+                    n: 64,
+                    d: 8,
+                    seed: case * 100 + i as u64,
+                },
+                nu: 1.0,
+                solver: SolverChoice::Cg,
+                eps: 1e-6,
+                seed: i as u64,
+                path_nus: Vec::new(),
+            };
+            ids.push(s.submit(spec).unwrap());
+        }
+        // Unique, increasing ids.
+        let mut sorted = ids.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len());
+        // All terminal; invalid profiles fail, the rest complete.
+        let mut done = 0;
+        let mut failed = 0;
+        for (i, id) in ids.iter().enumerate() {
+            match s.wait(*id, Duration::from_secs(60)).unwrap() {
+                effdim::coordinator::job::JobState::Done(_) => done += 1,
+                effdim::coordinator::job::JobState::Failed(_) => {
+                    assert_eq!(i % 4, 3, "only the bad profile may fail");
+                    failed += 1;
+                }
+                other => panic!("non-terminal state {other:?}"),
+            }
+        }
+        assert_eq!(done + failed, batch);
+        let m = s.metrics();
+        use std::sync::atomic::Ordering;
+        assert_eq!(m.submitted.load(Ordering::Relaxed) as usize, batch);
+        assert_eq!(
+            (m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed)) as usize,
+            batch
+        );
+        s.shutdown();
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use effdim::util::json::{parse, Json};
+    check_property("json roundtrip", 40, |_case, rng| {
+        // Random nested value.
+        fn gen(rng: &mut Xoshiro256, depth: usize) -> Json {
+            match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.next_u64() & 1 == 0),
+                2 => Json::Num((rng.next_gaussian() * 100.0 * 64.0).round() / 64.0),
+                3 => Json::Str(format!("s{}-\"esc\"\n", rng.next_below(1000))),
+                4 => Json::Arr((0..rng.next_below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.next_below(4))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).unwrap_or_else(|e| panic!("parse {text:?}: {e}"));
+        assert_eq!(back, v, "{text}");
+    });
+}

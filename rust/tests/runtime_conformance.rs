@@ -1,0 +1,86 @@
+//! PJRT runtime conformance: the AOT-compiled fused-gradient artifact must
+//! agree with the native implementation to f32 precision, and the
+//! XLA-backed adaptive solve must converge.
+//!
+//! These tests need `make artifacts` (shape n=4096, d=256); they skip with
+//! a notice when artifacts are absent so `cargo test` works on a fresh
+//! checkout.
+
+#![cfg(feature = "xla-runtime")]
+
+use effdim::data::synthetic;
+use effdim::runtime::{GradientOracle, PjrtRuntime, DEFAULT_ARTIFACTS_DIR};
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::{AdaptiveConfig, AdaptiveSolver};
+use effdim::solvers::{direct, RidgeProblem, StopRule};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    match PjrtRuntime::load(DEFAULT_ARTIFACTS_DIR) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("[skip] artifacts unavailable: {e}");
+            None
+        }
+    }
+}
+
+fn problem_for(rt: &PjrtRuntime) -> RidgeProblem {
+    let (n, d) = (rt.manifest.n, rt.manifest.d);
+    let ds = synthetic::cifar_like(n, d, 99);
+    RidgeProblem::new(ds.a, ds.b, 1.0)
+}
+
+#[test]
+fn manifest_lists_gradient_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let name = format!("gradient_n{}_d{}", rt.manifest.n, rt.manifest.d);
+    assert!(rt.has(&name), "manifest missing {name}");
+    assert!(!rt.manifest.m_list.is_empty());
+}
+
+#[test]
+fn xla_gradient_matches_native_to_f32() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let problem = problem_for(&rt);
+    let oracle = rt.gradient_oracle(&problem).expect("oracle");
+    assert_eq!(oracle.backend(), "pjrt-xla");
+
+    for seed in 0..3u64 {
+        let mut rng = effdim::rng::Xoshiro256::seed_from_u64(seed);
+        let x: Vec<f64> = (0..problem.d()).map(|_| rng.next_gaussian()).collect();
+        let g_native = problem.gradient(&x);
+        let g_xla = oracle.gradient(&x);
+        let scale = g_native.iter().map(|v| v.abs()).fold(1e-30, f64::max);
+        for i in 0..problem.d() {
+            let rel = (g_native[i] - g_xla[i]).abs() / scale;
+            assert!(rel < 1e-4, "seed {seed} coord {i}: native {} xla {}", g_native[i], g_xla[i]);
+        }
+    }
+}
+
+#[test]
+fn adaptive_solve_with_xla_gradient_converges() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let problem = problem_for(&rt);
+    let oracle = rt.gradient_oracle(&problem).expect("oracle");
+    let x_star = direct::solve(&problem);
+    // f32 artifact: target a tolerance above the mixed-precision floor.
+    let stop = StopRule::TrueError { x_star, eps: 1e-5 };
+    let cfg = AdaptiveConfig::new(SketchKind::Srht, stop);
+    let mut solver = AdaptiveSolver::new(&problem, &vec![0.0; problem.d()], cfg, 7);
+    solver.set_gradient_fn(|x| oracle.gradient(x));
+    let sol = solver.run();
+    assert!(
+        sol.report.converged,
+        "XLA-backed adaptive solve failed: rel {:?}",
+        sol.report.final_rel_error
+    );
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = synthetic::exponential_decay(128, 16, 1);
+    let p = RidgeProblem::new(ds.a, ds.b, 0.5);
+    assert!(rt.gradient_oracle(&p).is_err(), "mismatched shapes must be rejected");
+}

@@ -1,0 +1,112 @@
+//! Integration: every solver in the stack agrees with the direct solution
+//! on shared problems, including across embeddings and the dual path.
+
+use effdim::data::synthetic;
+use effdim::linalg::norm2;
+use effdim::rng::Xoshiro256;
+use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
+use effdim::solvers::cg::{self, CgConfig};
+use effdim::solvers::dual::{dual_stop, solve_direct, DualRidge};
+use effdim::solvers::pcg::{self, PcgConfig};
+use effdim::solvers::{direct, RidgeProblem, StopRule};
+
+fn rel_err(x: &[f64], x_star: &[f64]) -> f64 {
+    let mut diff = x.to_vec();
+    for i in 0..x.len() {
+        diff[i] -= x_star[i];
+    }
+    norm2(&diff) / norm2(x_star).max(1e-300)
+}
+
+#[test]
+fn all_solvers_agree_on_mnist_like() {
+    let ds = synthetic::mnist_like(512, 64, 1);
+    let nu = 0.5;
+    let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+    let x_star = direct::solve(&p);
+    let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-10 };
+    let x0 = vec![0.0; 64];
+
+    // The paper's criterion is the prediction norm delta_t/delta_0; the
+    // x-space translation is weaker by the conditioning (sigma_1/nu ~ 80
+    // here), so check delta-convergence exactly and x-space loosely.
+    let cg_sol = cg::solve(&p, &x0, &CgConfig { max_iters: 50_000, stop: stop.clone() });
+    assert!(cg_sol.report.converged && cg_sol.report.final_rel_error.unwrap() <= 1e-10, "cg");
+    assert!(rel_err(&cg_sol.x, &x_star) < 1e-2, "cg x-space");
+
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let pcg_sol = pcg::solve(&p, &x0, &PcgConfig::new(SketchKind::Srht, 0.5, stop.clone()), &mut rng);
+    assert!(pcg_sol.report.converged, "pcg");
+    assert!(rel_err(&pcg_sol.x, &x_star) < 1e-2, "pcg x-space");
+
+    for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+        for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
+            let mut cfg = AdaptiveConfig::new(kind, stop.clone());
+            cfg.variant = variant;
+            let sol = adaptive::solve(&p, &x0, &cfg, 3);
+            assert!(
+                sol.report.converged && rel_err(&sol.x, &x_star) < 1e-2,
+                "adaptive {kind} {variant:?}: rel {}",
+                rel_err(&sol.x, &x_star)
+            );
+        }
+    }
+}
+
+#[test]
+fn primal_and_dual_agree_on_square_ish_problem() {
+    // d slightly >= n: solve the same data through the dual and compare
+    // with the primal direct solve applied to the transpose formulation.
+    let base = synthetic::exponential_decay(128, 32, 4);
+    let a_wide = base.a.transpose(); // 32 x 128
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut b = vec![0.0; 32];
+    rng.fill_gaussian(&mut b, 1.0);
+    let nu = 0.7;
+
+    let x_exact = solve_direct(&a_wide, &b, nu);
+    let dr = DualRidge::new(a_wide.clone(), b.clone(), nu);
+    let cfg = AdaptiveConfig::new(SketchKind::Gaussian, dual_stop(&dr.dual, 1e-12));
+    let sol = dr.solve_adaptive(&cfg, 6);
+    assert!(sol.report.converged);
+    assert!(rel_err(&sol.x, &x_exact) < 1e-4);
+}
+
+#[test]
+fn regularization_shift_matches_theory() {
+    // x*(nu) shrinks along the path; consecutive path solutions must obey
+    // the monotone norm property of ridge regression.
+    let ds = synthetic::polynomial_decay(256, 32, 7);
+    let norms: Vec<f64> = [0.01, 0.1, 1.0, 10.0]
+        .iter()
+        .map(|&nu| {
+            let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+            norm2(&direct::solve(&p))
+        })
+        .collect();
+    for w in norms.windows(2) {
+        assert!(w[1] <= w[0] + 1e-12, "||x*|| must shrink with nu: {norms:?}");
+    }
+}
+
+#[test]
+fn adaptive_rate_matches_theorem_6_envelope() {
+    // SRHT: delta_t / delta_1 <= 2 (1 + sigma1^2/nu^2) c_gd^{t-1}.
+    let ds = synthetic::exponential_decay(512, 32, 8);
+    let nu = 0.5;
+    let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+    let x_star = direct::solve(&p);
+    let stop = StopRule::TrueError { x_star, eps: 1e-12 };
+    let cfg = AdaptiveConfig::new(SketchKind::Srht, stop);
+    let sol = adaptive::solve(&p, &vec![0.0; 32], &cfg, 9);
+    let c_gd = cfg.params().c_gd;
+    let prefactor = effdim::theory::bounds::srht_error_prefactor(ds.sigma[0], nu);
+    for (i, rel) in sol.report.error_trace.iter().enumerate() {
+        let envelope = prefactor * c_gd.powi(i as i32);
+        assert!(
+            *rel <= envelope.max(1e-12) * 1.001,
+            "iteration {i}: rel {rel} above Theorem-6 envelope {envelope}"
+        );
+    }
+}
