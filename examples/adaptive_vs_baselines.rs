@@ -2,17 +2,15 @@
 //! randomized-preconditioned CG on one fixed-`nu` problem — the paper's
 //! Figure 2 protocol at example scale.
 //!
+//! Every contender is named by a [`SolverSpec`] string and run through
+//! the unified `Solver` trait — one loop, no per-solver plumbing.
+//!
 //! ```sh
 //! cargo run --release --example adaptive_vs_baselines
 //! ```
 
 use effdim::data::synthetic;
-use effdim::rng::Xoshiro256;
-use effdim::sketch::SketchKind;
-use effdim::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
-use effdim::solvers::cg::{self, CgConfig};
-use effdim::solvers::pcg::{self, PcgConfig};
-use effdim::solvers::{direct, RidgeProblem, SolveReport, StopRule};
+use effdim::solvers::{direct, RidgeProblem, SolveReport, Solver as _, SolverSpec, StopRule};
 
 fn main() {
     let ds = synthetic::cifar_like(2048, 256, 11);
@@ -33,23 +31,20 @@ fn main() {
         eps
     );
 
+    let contenders = [
+        "cg",
+        "pcg-srht",
+        "pcg-gaussian",
+        "adaptive-srht",
+        "adaptive-gd-srht",
+        "adaptive-gaussian",
+        "adaptive-gd-gaussian",
+    ];
+
     let mut reports: Vec<SolveReport> = Vec::new();
-
-    reports.push(
-        cg::solve(&problem, &x0, &CgConfig { max_iters: 100_000, stop: stop.clone() }).report,
-    );
-
-    for kind in [SketchKind::Srht, SketchKind::Gaussian] {
-        let mut rng = Xoshiro256::seed_from_u64(21);
-        reports.push(pcg::solve(&problem, &x0, &PcgConfig::new(kind, 0.5, stop.clone()), &mut rng).report);
-    }
-
-    for kind in [SketchKind::Srht, SketchKind::Gaussian] {
-        for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
-            let mut cfg = AdaptiveConfig::new(kind, stop.clone());
-            cfg.variant = variant;
-            reports.push(adaptive::solve(&problem, &x0, &cfg, 31).report);
-        }
+    for name in contenders {
+        let spec: SolverSpec = name.parse().expect("valid solver spec");
+        reports.push(spec.build(31).solve(&problem, &x0, &stop).report);
     }
 
     println!(

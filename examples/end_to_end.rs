@@ -15,11 +15,11 @@
 //! Falls back to the native oracle (with a notice) if artifacts are
 //! missing, so the example always demonstrates the full solve.
 
-use effdim::coordinator::job::{execute, JobSpec, SolverChoice, Workload};
+use effdim::coordinator::job::{execute, JobSpec, Workload};
 use effdim::data::synthetic;
 use effdim::runtime::GradientOracle;
 use effdim::sketch::SketchKind;
-use effdim::solvers::adaptive::{AdaptiveConfig, AdaptiveSolver, AdaptiveVariant};
+use effdim::solvers::adaptive::{AdaptiveConfig, AdaptiveSolver};
 use effdim::solvers::{direct, RidgeProblem, StopRule};
 
 fn main() {
@@ -36,8 +36,8 @@ fn main() {
 
     // --- native solve (f64 reference) ---
     let stop_native = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-10 };
-    let cfg = AdaptiveConfig::new(SketchKind::Srht, stop_native);
-    let native = AdaptiveSolver::new(&problem, &vec![0.0; d], cfg.clone(), 404).run();
+    let cfg = AdaptiveConfig::new(SketchKind::Srht);
+    let native = AdaptiveSolver::new(&problem, &vec![0.0; d], cfg.clone(), stop_native, 404).run();
     report("native (f64)", &native.report);
 
     // --- PJRT-backed solve: the AOT fused-gradient artifact is the hot op ---
@@ -50,9 +50,9 @@ fn main() {
                 Ok(oracle) => {
                     // f32 artifacts cap achievable relative error ~1e-6.
                     let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-5 };
-                    let mut cfg_xla = AdaptiveConfig::new(SketchKind::Srht, stop);
-                    cfg_xla.variant = AdaptiveVariant::PolyakFirst;
-                    let mut solver = AdaptiveSolver::new(&problem, &vec![0.0; d], cfg_xla, 404);
+                    let cfg_xla = AdaptiveConfig::new(SketchKind::Srht);
+                    let mut solver =
+                        AdaptiveSolver::new(&problem, &vec![0.0; d], cfg_xla, stop, 404);
                     solver.set_gradient_fn(|x| oracle.gradient(x));
                     let sol = solver.run();
                     report("pjrt-xla (f32 AOT gradient)", &sol.report);
@@ -80,10 +80,7 @@ fn main() {
     let spec = JobSpec {
         workload: Workload::Synthetic { profile: "cifar-like".into(), n, d, seed: 2026 },
         nu,
-        solver: SolverChoice::Adaptive {
-            kind: SketchKind::Srht,
-            variant: AdaptiveVariant::GradientOnly,
-        },
+        solver: "adaptive-gd-srht".parse().expect("valid solver spec"),
         eps: 1e-8,
         seed: 505,
         path_nus: Vec::new(),

@@ -1,13 +1,16 @@
-//! Quickstart: solve one ridge problem with the adaptive sketching solver.
+//! Quickstart: solve one ridge problem through the unified solver API.
+//!
+//! Pick any solver by its spec string — `"cg"`, `"pcg-gaussian"`,
+//! `"adaptive-srht"`, `"ihs-sparse@m=256"`, ... — build it with a seed,
+//! and call `solve`. `effdim solvers` (or `effdim::solvers::registry()`)
+//! lists every available spec.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use effdim::data::synthetic;
-use effdim::sketch::SketchKind;
-use effdim::solvers::adaptive::{solve, AdaptiveConfig};
-use effdim::solvers::{direct, RidgeProblem, StopRule};
+use effdim::solvers::{direct, RidgeProblem, Solver as _, SolverSpec, StopRule};
 
 fn main() {
     // A synthetic overdetermined problem with fast spectral decay
@@ -24,9 +27,17 @@ fn main() {
     let x_star = direct::solve(&problem);
     let stop = StopRule::TrueError { x_star, eps: 1e-10 };
 
-    // Algorithm 1: starts at m = 1, grows only as needed.
-    let config = AdaptiveConfig::new(SketchKind::Srht, stop);
-    let solution = solve(&problem, &vec![0.0; problem.d()], &config, 7);
+    // Algorithm 1 by name: starts at m = 1, grows only as needed. Swap
+    // the string for "cg", "pcg-srht", "ihs-gaussian@m=64", ... — the
+    // rest of the program does not change.
+    let spec: SolverSpec = "adaptive-srht".parse().expect("valid solver spec");
+    let solver = spec.build(7);
+    println!(
+        "solver '{spec}': warm-start={}, randomized={}",
+        solver.supports_warm_start(),
+        solver.is_randomized()
+    );
+    let solution = solver.solve(&problem, &vec![0.0; problem.d()], &stop);
 
     let r = &solution.report;
     println!("\nsolver          : {}", r.solver);

@@ -2,14 +2,16 @@
 //! solutions over a decreasing grid of `nu`, warm-starting each solve,
 //! and compare the adaptive solver against CG.
 //!
+//! Solvers are chosen by [`SolverSpec`] string — the same names the CLI
+//! (`effdim path --solver ...`) and the coordinator accept.
+//!
 //! ```sh
 //! cargo run --release --example regularization_path
 //! ```
 
 use effdim::data::synthetic;
-use effdim::sketch::SketchKind;
-use effdim::solvers::adaptive::AdaptiveVariant;
-use effdim::solvers::path::{run_path, PathSolver};
+use effdim::solvers::path::run_path;
+use effdim::solvers::SolverSpec;
 
 fn main() {
     let ds = synthetic::mnist_like(2048, 256, 3);
@@ -19,14 +21,9 @@ fn main() {
     println!("dataset: {} (n = {}, d = {})", ds.name, ds.n(), ds.d());
     println!("path: nu in {nus:?}, eps = {eps:.0e}\n");
 
-    let solvers = [
-        PathSolver::Cg,
-        PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst },
-        PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly },
-    ];
-
-    for solver in &solvers {
-        let res = run_path(&ds.a, &ds.b, &nus, eps, solver, 17);
+    for name in ["cg", "adaptive-srht", "adaptive-gd-srht"] {
+        let spec: SolverSpec = name.parse().expect("valid solver spec");
+        let res = run_path(&ds.a, &ds.b, &nus, eps, &spec, 17);
         println!("== {} ==", res.solver);
         println!("{:<10} {:>8} {:>12} {:>8} {:>8}", "nu", "d_e", "cum_time_s", "iters", "m");
         for p in &res.points {

@@ -17,6 +17,20 @@ fn main() {
 
     let mut client = Client::connect(addr).expect("connect");
 
+    // Discover the solver registry over the wire — every "spec" string
+    // below is a valid "solver" field for a solve request.
+    let listing = client.call(r#"{"cmd":"solvers"}"#).expect("solvers request");
+    let solvers = listing.get("solvers").unwrap().as_arr().unwrap();
+    println!("server advertises {} solvers:", solvers.len());
+    for entry in solvers {
+        println!(
+            "  {:<26} {}",
+            entry.get("spec").unwrap().as_str().unwrap(),
+            entry.get("description").unwrap().as_str().unwrap()
+        );
+    }
+    println!();
+
     // Submit a small batch of heterogeneous solves.
     let mut jobs = Vec::new();
     for (profile, solver, nu) in [
@@ -24,6 +38,7 @@ fn main() {
         ("cifar-like", "adaptive-gd-srht", 0.1),
         ("exp", "cg", 1.0),
         ("poly", "pcg-srht", 0.5),
+        ("exp", "ihs-gaussian@m=64", 1.0),
     ] {
         let req = format!(
             r#"{{"cmd":"solve","profile":"{profile}","n":512,"d":64,"nu":{nu},"solver":"{solver}","eps":1e-8,"seed":5}}"#

@@ -2,17 +2,19 @@
 //! (paper Appendix A.2): the dual is overdetermined, Algorithm 1 applies
 //! verbatim, and the primal solution is recovered as `x = A^T z`.
 //!
+//! The dual reduction is a registry solver like any other: spec string
+//! `"dual-adaptive-gaussian"`, dispatched through the unified `Solver`
+//! trait.
+//!
 //! ```sh
 //! cargo run --release --example underdetermined_dual
 //! ```
 
 use effdim::data::synthetic;
 use effdim::linalg::norm2;
-use effdim::sketch::SketchKind;
-use effdim::solvers::adaptive::AdaptiveConfig;
-use effdim::solvers::dual::{dual_stop, solve_direct, DualRidge};
-use effdim::solvers::RidgeProblem;
 use effdim::rng::Xoshiro256;
+use effdim::solvers::dual::solve_direct;
+use effdim::solvers::{RidgeProblem, Solver as _, SolverSpec, StopRule};
 
 fn main() {
     // Wide problem: n = 128 samples, d = 1024 features.
@@ -28,11 +30,13 @@ fn main() {
     // Exact solution through the dual normal equations (O(d n^2)).
     let x_exact = solve_direct(&a, &b, nu);
 
-    // Adaptive solve on the dual: the gradient is A A^T z + nu^2 z - b,
+    // Adaptive solve on the dual, via the unified API. The solver builds
+    // the dual reduction internally: the gradient is A A^T z + nu^2 z - b,
     // so the pseudo-inverse b_hat = A^+ b never needs to be formed.
-    let dual = DualRidge::new(a.clone(), b.clone(), nu);
-    let cfg = AdaptiveConfig::new(SketchKind::Gaussian, dual_stop(&dual.dual, 1e-12));
-    let sol = dual.solve_adaptive(&cfg, 9);
+    let problem = RidgeProblem::new(a, b, nu);
+    let spec: SolverSpec = "dual-adaptive-gaussian".parse().expect("valid solver spec");
+    let stop = StopRule::TrueError { x_star: x_exact.clone(), eps: 1e-12 };
+    let sol = spec.build(9).solve(&problem, &vec![0.0; d], &stop);
 
     let mut diff = sol.x.clone();
     for i in 0..d {
@@ -46,8 +50,7 @@ fn main() {
     println!("||x - x*||/||x*|| = {rel:.2e}");
 
     // Primal optimality check: gradient of the primal objective at x.
-    let primal = RidgeProblem::new(a, b, nu);
-    let g = primal.gradient(&sol.x);
+    let g = problem.gradient(&sol.x);
     println!("primal gradient norm = {:.2e}", norm2(&g));
     assert!(sol.report.converged && rel < 1e-4);
 }

@@ -9,7 +9,6 @@
 //!    candidate is often rejected (SRHT), the gradient-only variant wins.
 
 use effdim::data::synthetic;
-use effdim::rng::Xoshiro256;
 use effdim::sketch::SketchKind;
 use effdim::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
 use effdim::solvers::ihs::{self, IhsConfig};
@@ -27,14 +26,12 @@ fn main() {
 
     // --- 1. fixed vs refreshed ---
     let m = ((d_e / 0.15).ceil() as usize).max(8);
-    let mut fixed_cfg = IhsConfig::gaussian(m, 0.15, stop.clone());
+    let mut fixed_cfg = IhsConfig::gaussian(m, 0.15);
     fixed_cfg.momentum = false;
     let mut refresh_cfg = fixed_cfg.clone();
     refresh_cfg.refresh = true;
-    let mut r1 = Xoshiro256::seed_from_u64(1);
-    let mut r2 = Xoshiro256::seed_from_u64(1);
-    let fixed = ihs::solve(&p, &x0, &fixed_cfg, &mut r1);
-    let refreshed = ihs::solve(&p, &x0, &refresh_cfg, &mut r2);
+    let fixed = ihs::solve(&p, &x0, &fixed_cfg, &stop, 1);
+    let refreshed = ihs::solve(&p, &x0, &refresh_cfg, &stop, 1);
     println!("[1] fixed vs refreshed embeddings (gradient-IHS, m={m}):");
     for (label, r) in [("fixed", &fixed.report), ("refreshed", &refreshed.report)] {
         println!(
@@ -48,18 +45,10 @@ fn main() {
     assert!(refreshed.report.wall_time_s >= fixed.report.wall_time_s * 0.9);
 
     // --- 2. adaptive vs Hutchinson baseline ---
-    let mut rng = Xoshiro256::seed_from_u64(2);
-    let (hutch, de_hat) = ihs::solve_with_estimated_de(
-        &p,
-        &x0,
-        SketchKind::Gaussian,
-        0.15,
-        30,
-        stop.clone(),
-        &mut rng,
-    );
-    let acfg = AdaptiveConfig::new(SketchKind::Gaussian, stop.clone());
-    let ada = adaptive::solve(&p, &x0, &acfg, 3);
+    let (hutch, de_hat) =
+        ihs::solve_with_estimated_de(&p, &x0, SketchKind::Gaussian, 0.15, 30, &stop, 2);
+    let acfg = AdaptiveConfig::new(SketchKind::Gaussian);
+    let ada = adaptive::solve(&p, &x0, &acfg, &stop, 3);
     println!("\n[2] adaptive vs hutchinson-estimate ([31]) — d_e = {d_e:.1}, estimate {de_hat:.1}:");
     println!(
         "    hutchinson iters={:<4} m={:<5} time={:.4}s conv={}",
@@ -73,9 +62,9 @@ fn main() {
     // --- 3. Polyak-first vs gradient-only (SRHT) ---
     println!("\n[3] Polyak-first vs gradient-only (SRHT):");
     for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
-        let mut cfg = AdaptiveConfig::new(SketchKind::Srht, stop.clone());
+        let mut cfg = AdaptiveConfig::new(SketchKind::Srht);
         cfg.variant = variant;
-        let sol = adaptive::solve(&p, &x0, &cfg, 4);
+        let sol = adaptive::solve(&p, &x0, &cfg, &stop, 4);
         println!(
             "    {:<24} iters={:<4} rejected={:<4} time={:.4}s conv={}",
             format!("{variant:?}"),

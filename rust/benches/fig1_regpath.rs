@@ -18,7 +18,7 @@ fn main() {
                 .map(|s| *s.cum_time_mean.last().unwrap())
                 .unwrap()
         };
-        let ada = total("adaptive-gd-srht").min(total("adaptive-polyak-srht"));
+        let ada = total("adaptive-gd-srht").min(total("adaptive-srht"));
         let pcg = total("pcg-srht");
         println!("{ds}: adaptive {ada:.3}s vs pcg {pcg:.3}s -> {}", if ada < pcg { "adaptive wins" } else { "pcg wins" });
     }

@@ -12,11 +12,11 @@ fn main() {
     // adaptive variant pays for dense sketching; SRHT stays competitive.
     let poly_srht = series
         .iter()
-        .find(|s| s.dataset == "synthetic-poly" && s.solver == "adaptive-polyak-srht")
+        .find(|s| s.dataset == "synthetic-poly" && s.solver == "adaptive-srht")
         .unwrap();
     let poly_gauss = series
         .iter()
-        .find(|s| s.dataset == "synthetic-poly" && s.solver == "adaptive-polyak-gaussian")
+        .find(|s| s.dataset == "synthetic-poly" && s.solver == "adaptive-gaussian")
         .unwrap();
     println!(
         "poly decay: srht {:.3}s vs gaussian {:.3}s",

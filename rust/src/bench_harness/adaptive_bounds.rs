@@ -64,8 +64,13 @@ pub fn run(cfg: &BoundsConfig, nus: &[f64]) -> Vec<BoundsRow> {
             let x_star = direct::solve(&problem);
             for kind in [SketchKind::Gaussian, SketchKind::Srht] {
                 let stop = StopRule::TrueError { x_star: x_star.clone(), eps: cfg.eps };
-                let acfg = AdaptiveConfig::new(kind, stop);
-                let sol = adaptive::solve(&problem, &vec![0.0; ds.d()], &acfg, cfg.seed + 9);
+                // One config drives both the solve and the theory bounds,
+                // so the bound columns can never be computed from
+                // different parameters than the run used. (This is the
+                // same paper-default config `SolverSpec::Adaptive` builds.)
+                let acfg = AdaptiveConfig::new(kind);
+                let sol =
+                    adaptive::solve(&problem, &vec![0.0; ds.d()], &acfg, &stop, cfg.seed + 9);
                 let (m_bound, k_bound) = match kind {
                     SketchKind::Gaussian => (
                         gaussian_sketch_size_bound(acfg.rho, d_e),

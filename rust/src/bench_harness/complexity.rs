@@ -9,10 +9,9 @@
 
 use super::write_csv;
 use crate::data::synthetic;
-use crate::rng::Xoshiro256;
-use crate::sketch::SketchKind;
-use crate::solvers::adaptive::{self, AdaptiveConfig};
-use crate::solvers::pcg::{self, PcgConfig};
+use crate::sketch::{self, SketchKind};
+use crate::solvers::adaptive::AdaptiveVariant;
+use crate::solvers::api::{Solver as _, SolverSpec, DEFAULT_PCG_RHO};
 use crate::solvers::{direct, RidgeProblem, StopRule};
 
 /// One sweep point.
@@ -27,12 +26,17 @@ pub struct ComplexityRow {
     pub ada_iter_s: f64,
     pub ada_total_s: f64,
     pub ada_m: usize,
+    /// Modeled flops for forming `SA` at the peak sketch size
+    /// ([`crate::sketch::sketch_cost_flops`], Theorem 7's sketch term).
+    pub ada_sketch_flops: f64,
     // pCG decomposition.
     pub pcg_sketch_s: f64,
     pub pcg_factor_s: f64,
     pub pcg_iter_s: f64,
     pub pcg_total_s: f64,
     pub pcg_m: usize,
+    /// Modeled flops for pCG's preconditioner sketch.
+    pub pcg_sketch_flops: f64,
     pub adaptive_wins: bool,
 }
 
@@ -56,22 +60,32 @@ impl ComplexityConfig {
 }
 
 /// Sweep `nu` (each value induces a different `d_e`) and measure both
-/// solvers' phase decomposition.
+/// solvers' phase decomposition. Both contenders run through the unified
+/// [`SolverSpec`] dispatch, exactly as CLI / coordinator callers would.
 pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
     let ds = synthetic::exponential_decay(cfg.n, cfg.d, cfg.seed);
+    let ada_spec = SolverSpec::Adaptive {
+        kind: SketchKind::Srht,
+        variant: AdaptiveVariant::PolyakFirst,
+    };
+    let pcg_spec = SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO };
     let mut rows = Vec::new();
     for &nu in nus {
         let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
         let d_e = ds.effective_dimension(nu);
         let x_star = direct::solve(&problem);
-        let stop = StopRule::TrueError { x_star: x_star.clone(), eps: cfg.eps };
+        let stop = StopRule::TrueError { x_star, eps: cfg.eps };
 
-        let acfg = AdaptiveConfig::new(SketchKind::Srht, stop.clone());
-        let ada = adaptive::solve(&problem, &vec![0.0; cfg.d], &acfg, cfg.seed);
+        let ada = ada_spec.build(cfg.seed).solve(&problem, &vec![0.0; cfg.d], &stop);
+        let pcg_sol = pcg_spec.build(cfg.seed + 1).solve(&problem, &vec![0.0; cfg.d], &stop);
 
-        let mut rng = Xoshiro256::seed_from_u64(cfg.seed + 1);
-        let pcfg = PcgConfig::new(SketchKind::Srht, 0.5, stop);
-        let pcg_sol = pcg::solve(&problem, &vec![0.0; cfg.d], &pcfg, &mut rng);
+        // Theorem 7 cost model alongside the measured times (dense data:
+        // nnz = None; a sparse workload would thread its nnz through).
+        let kind = SketchKind::Srht;
+        let ada_sketch_flops =
+            sketch::sketch_cost_flops(kind, ada.report.peak_m, cfg.n, cfg.d, None);
+        let pcg_sketch_flops =
+            sketch::sketch_cost_flops(kind, pcg_sol.report.peak_m, cfg.n, cfg.d, None);
 
         rows.push(ComplexityRow {
             nu,
@@ -82,11 +96,13 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
             ada_iter_s: ada.report.iter_time_s,
             ada_total_s: ada.report.wall_time_s,
             ada_m: ada.report.peak_m,
+            ada_sketch_flops,
             pcg_sketch_s: pcg_sol.report.sketch_time_s,
             pcg_factor_s: pcg_sol.report.factor_time_s,
             pcg_iter_s: pcg_sol.report.iter_time_s,
             pcg_total_s: pcg_sol.report.wall_time_s,
             pcg_m: pcg_sol.report.peak_m,
+            pcg_sketch_flops,
             adaptive_wins: ada.report.wall_time_s < pcg_sol.report.wall_time_s,
         });
     }
@@ -125,16 +141,16 @@ pub fn dump_csv(name: &str, rows: &[ComplexityRow]) -> std::io::Result<()> {
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.nu, r.d_e, r.de_over_d, r.ada_sketch_s, r.ada_factor_s, r.ada_iter_s,
-                r.ada_total_s, r.ada_m, r.pcg_sketch_s, r.pcg_factor_s, r.pcg_iter_s,
-                r.pcg_total_s, r.pcg_m, r.adaptive_wins
+                r.ada_total_s, r.ada_m, r.ada_sketch_flops, r.pcg_sketch_s, r.pcg_factor_s,
+                r.pcg_iter_s, r.pcg_total_s, r.pcg_m, r.pcg_sketch_flops, r.adaptive_wins
             )
         })
         .collect();
     write_csv(
         format!("results/{name}.csv"),
-        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,adaptive_wins",
+        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,ada_sketch_flops,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,pcg_sketch_flops,adaptive_wins",
         &lines,
     )
 }
@@ -160,5 +176,8 @@ mod tests {
         let r = &rows[0];
         assert!(r.d_e < 5.0, "premise: d_e small, got {}", r.d_e);
         assert!(r.ada_m < r.pcg_m, "adaptive m {} !< pcg m {}", r.ada_m, r.pcg_m);
+        // The Theorem-7 cost model must order with m (same kind, same n/d).
+        assert!(r.ada_sketch_flops <= r.pcg_sketch_flops);
+        assert!(r.ada_sketch_flops > 0.0);
     }
 }

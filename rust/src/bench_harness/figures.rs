@@ -12,7 +12,8 @@ use crate::data::synthetic::Dataset;
 use crate::data::{cifar_like, mnist_like, synthetic};
 use crate::sketch::SketchKind;
 use crate::solvers::adaptive::AdaptiveVariant;
-use crate::solvers::path::{run_path, PathResult, PathSolver};
+use crate::solvers::api::SolverSpec;
+use crate::solvers::path::{run_path, PathResult};
 use crate::util::stats::summarize;
 
 /// Experiment scale. `quick` keeps CI runtimes sane; `paper` matches the
@@ -53,19 +54,13 @@ pub struct PathSeries {
     pub all_converged: bool,
 }
 
-/// The four solvers the paper's figures compare.
-pub fn figure_solvers() -> Vec<(PathSolver, &'static str)> {
+/// The four solvers the paper's figures compare, as registry spec strings.
+pub fn figure_solvers() -> Vec<SolverSpec> {
     vec![
-        (PathSolver::Cg, "cg"),
-        (PathSolver::Pcg { kind: SketchKind::Srht, rho: 0.5 }, "pcg-srht"),
-        (
-            PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst },
-            "adaptive-srht",
-        ),
-        (
-            PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly },
-            "adaptive-gd-srht",
-        ),
+        SolverSpec::Cg,
+        SolverSpec::Pcg { kind: SketchKind::Srht, rho: 0.5 },
+        SolverSpec::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst },
+        SolverSpec::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly },
     ]
 }
 
@@ -74,7 +69,7 @@ pub fn run_series(
     ds: &Dataset,
     nus: &[f64],
     eps: f64,
-    solver: &PathSolver,
+    spec: &SolverSpec,
     trials: usize,
     seed: u64,
 ) -> PathSeries {
@@ -82,7 +77,7 @@ pub fn run_series(
     let mut ms: Vec<Vec<f64>> = vec![Vec::new(); nus.len()];
     let mut all_converged = true;
     for trial in 0..trials {
-        let res: PathResult = run_path(&ds.a, &ds.b, nus, eps, solver, seed + 1000 * trial as u64);
+        let res: PathResult = run_path(&ds.a, &ds.b, nus, eps, spec, seed + 1000 * trial as u64);
         for (i, p) in res.points.iter().enumerate() {
             cum[i].push(p.cumulative_time_s);
             ms[i].push(p.report.peak_m as f64);
@@ -92,7 +87,7 @@ pub fn run_series(
     let summaries: Vec<_> = cum.iter().map(|v| summarize(v)).collect();
     PathSeries {
         dataset: ds.name.clone(),
-        solver: solver.label(),
+        solver: spec.to_string(),
         nus: nus.to_vec(),
         cum_time_mean: summaries.iter().map(|s| s.mean).collect(),
         cum_time_std: summaries.iter().map(|s| s.std).collect(),
@@ -109,8 +104,8 @@ pub fn fig1(cfg: &FigureConfig) -> Vec<PathSeries> {
     let datasets = [mnist_like(cfg.n, cfg.d, cfg.seed), cifar_like(cfg.n, cfg.d, cfg.seed + 1)];
     let mut out = Vec::new();
     for ds in &datasets {
-        for (solver, _) in figure_solvers() {
-            out.push(run_series(ds, &nus, cfg.eps, &solver, cfg.trials, cfg.seed));
+        for spec in figure_solvers() {
+            out.push(run_series(ds, &nus, cfg.eps, &spec, cfg.trials, cfg.seed));
         }
     }
     out
@@ -123,8 +118,8 @@ pub fn fig2(cfg: &FigureConfig) -> Vec<PathSeries> {
     let datasets = [mnist_like(cfg.n, cfg.d, cfg.seed), cifar_like(cfg.n, cfg.d, cfg.seed + 1)];
     let mut out = Vec::new();
     for ds in &datasets {
-        for (solver, _) in figure_solvers() {
-            out.push(run_series(ds, &nus, cfg.eps, &solver, cfg.trials, cfg.seed));
+        for spec in figure_solvers() {
+            out.push(run_series(ds, &nus, cfg.eps, &spec, cfg.trials, cfg.seed));
         }
     }
     out
@@ -140,15 +135,15 @@ pub fn fig3(cfg: &FigureConfig) -> Vec<PathSeries> {
         synthetic::polynomial_decay(cfg.n, cfg.d, cfg.seed + 1),
     ];
     let mut solvers = figure_solvers();
-    solvers.push((
-        PathSolver::Adaptive { kind: SketchKind::Gaussian, variant: AdaptiveVariant::PolyakFirst },
-        "adaptive-gaussian",
-    ));
-    solvers.push((PathSolver::Pcg { kind: SketchKind::Gaussian, rho: 0.5 }, "pcg-gaussian"));
+    solvers.push(SolverSpec::Adaptive {
+        kind: SketchKind::Gaussian,
+        variant: AdaptiveVariant::PolyakFirst,
+    });
+    solvers.push(SolverSpec::Pcg { kind: SketchKind::Gaussian, rho: 0.5 });
     let mut out = Vec::new();
     for ds in &datasets {
-        for (solver, _) in &solvers {
-            out.push(run_series(ds, &nus, cfg.eps, solver, cfg.trials, cfg.seed));
+        for spec in &solvers {
+            out.push(run_series(ds, &nus, cfg.eps, spec, cfg.trials, cfg.seed));
         }
     }
     out
@@ -223,7 +218,7 @@ mod tests {
         assert!(series.iter().all(|s| s.all_converged));
         // Adaptive must use m << pcg's m on these spectra at nu = 10.
         let pcg = series.iter().find(|s| s.solver.starts_with("pcg")).unwrap();
-        let ada = series.iter().find(|s| s.solver == "adaptive-polyak-srht").unwrap();
+        let ada = series.iter().find(|s| s.solver == "adaptive-srht").unwrap();
         assert!(ada.m_mean[0] < pcg.m_mean[0]);
     }
 

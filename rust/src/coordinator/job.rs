@@ -3,12 +3,8 @@
 
 use crate::data::synthetic::{self, SpectrumProfile};
 use crate::linalg::Matrix;
-use crate::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
-use crate::solvers::cg::{self, CgConfig};
-use crate::solvers::pcg::{self, PcgConfig};
-use crate::solvers::{direct, RidgeProblem, SolveReport, StopRule};
-use crate::rng::Xoshiro256;
-use crate::sketch::SketchKind;
+use crate::solvers::api::{Solver as _, SolverSpec};
+use crate::solvers::{RidgeProblem, SolveReport};
 use crate::util::json::Json;
 
 /// Monotonic job identifier.
@@ -51,47 +47,15 @@ impl Workload {
     }
 }
 
-/// Which solver a job uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SolverChoice {
-    Adaptive { kind: SketchKind, variant: AdaptiveVariant },
-    Cg,
-    Pcg { kind: SketchKind },
-}
-
-impl SolverChoice {
-    pub fn parse(name: &str) -> Result<Self, String> {
-        match name {
-            "adaptive" | "adaptive-gaussian" => Ok(SolverChoice::Adaptive {
-                kind: SketchKind::Gaussian,
-                variant: AdaptiveVariant::PolyakFirst,
-            }),
-            "adaptive-srht" => Ok(SolverChoice::Adaptive {
-                kind: SketchKind::Srht,
-                variant: AdaptiveVariant::PolyakFirst,
-            }),
-            "adaptive-gd" | "adaptive-gd-gaussian" => Ok(SolverChoice::Adaptive {
-                kind: SketchKind::Gaussian,
-                variant: AdaptiveVariant::GradientOnly,
-            }),
-            "adaptive-gd-srht" => Ok(SolverChoice::Adaptive {
-                kind: SketchKind::Srht,
-                variant: AdaptiveVariant::GradientOnly,
-            }),
-            "cg" => Ok(SolverChoice::Cg),
-            "pcg" | "pcg-srht" => Ok(SolverChoice::Pcg { kind: SketchKind::Srht }),
-            "pcg-gaussian" => Ok(SolverChoice::Pcg { kind: SketchKind::Gaussian }),
-            other => Err(format!("unknown solver: {other}")),
-        }
-    }
-}
-
-/// A full job specification.
+/// A full job specification. The solver is a [`SolverSpec`]: any string
+/// accepted by `SolverSpec::from_str` (see `effdim solvers` for the
+/// registry) is a valid job solver — the coordinator carries no solver
+/// dispatch of its own.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub workload: Workload,
     pub nu: f64,
-    pub solver: SolverChoice,
+    pub solver: SolverSpec,
     /// Relative precision target; measured against the direct solution
     /// (the coordinator computes the oracle, mirroring the paper's
     /// experimental protocol).
@@ -189,47 +153,45 @@ impl SolveOutcome {
 /// Execute a job spec to completion (runs on a scheduler worker).
 pub fn execute(spec: &JobSpec) -> Result<SolveOutcome, String> {
     let (a, b) = spec.workload.materialize()?;
-    if a.rows() < a.cols() {
-        return Err("underdetermined workloads go through the dual API".into());
+    // Shape/solver compatibility: the dual reduction handles d >= n and
+    // nothing else; every other solver needs n >= d.
+    let is_dual = matches!(spec.solver, SolverSpec::DualAdaptive { .. });
+    if a.rows() < a.cols() && !is_dual {
+        return Err(format!(
+            "underdetermined workload (n {} < d {}) needs a dual-adaptive-* solver",
+            a.rows(),
+            a.cols()
+        ));
+    }
+    if is_dual && a.rows() > a.cols() {
+        return Err(format!(
+            "dual solvers need d >= n (workload is n {} x d {})",
+            a.rows(),
+            a.cols()
+        ));
     }
     if !spec.path_nus.is_empty() {
         return execute_path(spec, &a, &b);
     }
     let problem = RidgeProblem::new(a, b, spec.nu);
-    let x_star = direct::solve(&problem);
-    let stop = StopRule::TrueError { x_star, eps: spec.eps };
-    let d = problem.d();
-    let x0 = vec![0.0; d];
+    // Oracle for the stop rule (skipped for dual specs, which build their
+    // own dual-space oracle — see SolverSpec::true_error_stop).
+    let stop = spec.solver.true_error_stop(&problem, spec.eps);
+    let x0 = vec![0.0; problem.d()];
 
-    let solution = match spec.solver {
-        SolverChoice::Cg => cg::solve(&problem, &x0, &CgConfig { max_iters: 200_000, stop }),
-        SolverChoice::Pcg { kind } => {
-            let mut rng = Xoshiro256::seed_from_u64(spec.seed);
-            pcg::solve(&problem, &x0, &PcgConfig::new(kind, 0.5, stop), &mut rng)
-        }
-        SolverChoice::Adaptive { kind, variant } => {
-            let mut cfg = AdaptiveConfig::new(kind, stop);
-            cfg.variant = variant;
-            adaptive::solve(&problem, &x0, &cfg, spec.seed)
-        }
-    };
+    let solution = spec.solver.build(spec.seed).solve(&problem, &x0, &stop);
     Ok(SolveOutcome { report: solution.report, x: solution.x, path_points: Vec::new() })
 }
 
 /// Run a warm-started regularization path (Figure-1 workload) as one job.
 fn execute_path(spec: &JobSpec, a: &Matrix, b: &[f64]) -> Result<SolveOutcome, String> {
-    use crate::solvers::path::{run_path, PathSolver};
+    use crate::solvers::path::run_path;
     for w in spec.path_nus.windows(2) {
         if w[0] <= w[1] {
             return Err("path nus must be strictly decreasing".into());
         }
     }
-    let solver = match spec.solver {
-        SolverChoice::Cg => PathSolver::Cg,
-        SolverChoice::Pcg { kind } => PathSolver::Pcg { kind, rho: 0.5 },
-        SolverChoice::Adaptive { kind, variant } => PathSolver::Adaptive { kind, variant },
-    };
-    let res = run_path(a, b, &spec.path_nus, spec.eps, &solver, spec.seed);
+    let res = run_path(a, b, &spec.path_nus, spec.eps, &spec.solver, spec.seed);
     let path_points: Vec<(f64, f64, usize, usize, bool)> = res
         .points
         .iter()
@@ -253,7 +215,7 @@ mod tests {
         JobSpec {
             workload: Workload::Synthetic { profile: "exp".into(), n: 128, d: 16, seed: 1 },
             nu: 0.5,
-            solver: SolverChoice::parse(solver).unwrap(),
+            solver: solver.parse().unwrap(),
             eps: 1e-8,
             seed: 7,
             path_nus: Vec::new(),
@@ -274,12 +236,40 @@ mod tests {
     }
 
     #[test]
-    fn solver_parse_rejects_unknown() {
-        assert!(SolverChoice::parse("nope").is_err());
-        assert_eq!(
-            SolverChoice::parse("adaptive-gd-srht").unwrap(),
-            SolverChoice::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly }
-        );
+    fn execute_direct_and_ihs_jobs() {
+        // The coordinator accepts every spec string, not a hardcoded menu.
+        let direct_out = execute(&spec("direct")).unwrap();
+        assert!(direct_out.report.converged);
+        assert_eq!(direct_out.report.solver, "direct");
+        let ihs_out = execute(&spec("ihs-gaussian@m=64")).unwrap();
+        assert!(ihs_out.report.converged);
+        assert_eq!(ihs_out.report.solver, "ihs-gaussian@m=64");
+    }
+
+    #[test]
+    fn dual_solver_rejected_on_tall_workload() {
+        let err = execute(&spec("dual-adaptive-gaussian")).unwrap_err();
+        assert!(err.contains("dual solvers need d >= n"), "{err}");
+    }
+
+    #[test]
+    fn dual_solver_runs_on_wide_inline_workload() {
+        // The dual spec exists for d >= n; an inline wide workload must
+        // execute, and a non-dual solver on the same data must be refused.
+        let ds = crate::data::synthetic::exponential_decay(64, 16, 5);
+        let a = ds.a.transpose(); // 16 x 64
+        let b = ds.b[..16].to_vec();
+        let mut sp = spec("dual-adaptive-gaussian");
+        sp.workload = Workload::Inline { a: a.clone(), b: b.clone() };
+        let out = execute(&sp).unwrap();
+        assert!(out.report.converged);
+        assert_eq!(out.report.solver, "dual-adaptive-gaussian");
+        assert_eq!(out.x.len(), 64);
+
+        let mut cg_sp = spec("cg");
+        cg_sp.workload = Workload::Inline { a, b };
+        let err = execute(&cg_sp).unwrap_err();
+        assert!(err.contains("dual-adaptive"), "{err}");
     }
 
     #[test]

@@ -20,6 +20,6 @@ pub mod protocol;
 pub mod scheduler;
 pub mod server;
 
-pub use job::{JobId, JobSpec, JobState, SolverChoice, Workload};
+pub use job::{JobId, JobSpec, JobState, Workload};
 pub use scheduler::Scheduler;
 pub use server::Server;

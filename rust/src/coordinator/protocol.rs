@@ -8,12 +8,18 @@
 //! {"cmd":"wait","job":3,"timeout_s":60}
 //! {"cmd":"result","job":3,"include_x":true}
 //! {"cmd":"metrics"}
+//! {"cmd":"solvers"}
 //! {"cmd":"ping"}
 //! {"cmd":"shutdown"}
 //! ```
 //! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//!
+//! The `"solver"` field of a solve request is a [`SolverSpec`] string
+//! (`"cg"`, `"adaptive-srht"`, `"ihs-sparse@m=256"`, ...); `"solvers"`
+//! returns the full registry for client-side discovery.
 
-use super::job::{JobSpec, SolverChoice, Workload};
+use super::job::{JobSpec, Workload};
+use crate::solvers::api::SolverSpec;
 use crate::util::json::{self, Json};
 
 /// A decoded client request.
@@ -24,6 +30,7 @@ pub enum Request {
     Wait { job: u64, timeout_s: f64 },
     Result { job: u64, include_x: bool },
     Metrics,
+    Solvers,
     Ping,
     Shutdown,
 }
@@ -41,7 +48,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
             let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
             let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let solver_name = v.get("solver").and_then(Json::as_str).unwrap_or("adaptive");
-            let solver = SolverChoice::parse(solver_name)?;
+            let solver: SolverSpec = solver_name.parse()?;
             // Optional "nus": [..] turns the job into a warm-started
             // regularization path (Figure-1 workload as a service).
             let path_nus: Vec<f64> = v
@@ -68,6 +75,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
             include_x: v.get("include_x").and_then(Json::as_bool).unwrap_or(false),
         }),
         "metrics" => Ok(Request::Metrics),
+        "solvers" => Ok(Request::Solvers),
         "ping" => Ok(Request::Ping),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!("unknown cmd: {other}")),
@@ -116,10 +124,24 @@ mod tests {
             Request::Solve(spec) => {
                 assert_eq!(spec.eps, 1e-10);
                 assert_eq!(spec.seed, 42);
-                assert!(matches!(spec.solver, SolverChoice::Adaptive { .. }));
+                assert!(matches!(spec.solver, SolverSpec::Adaptive { .. }));
             }
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn decode_spec_with_params() {
+        let r = decode(r#"{"cmd":"solve","solver":"ihs-sparse@m=256"}"#).unwrap();
+        match r {
+            Request::Solve(spec) => assert_eq!(spec.solver.to_string(), "ihs-sparse@m=256"),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decode_solvers_command() {
+        assert!(matches!(decode(r#"{"cmd":"solvers"}"#).unwrap(), Request::Solvers));
     }
 
     #[test]

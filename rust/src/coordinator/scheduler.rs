@@ -208,13 +208,14 @@ fn worker_loop(inner: &Inner) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::{SolverChoice, Workload};
+    use crate::coordinator::job::Workload;
+    use crate::solvers::api::SolverSpec;
 
     fn quick_spec(seed: u64) -> JobSpec {
         JobSpec {
             workload: Workload::Synthetic { profile: "exp".into(), n: 64, d: 8, seed },
             nu: 1.0,
-            solver: SolverChoice::Cg,
+            solver: SolverSpec::Cg,
             eps: 1e-6,
             seed,
             path_nus: Vec::new(),

@@ -120,6 +120,18 @@ fn respond(req: Request, scheduler: &Scheduler, stop: &AtomicBool) -> String {
             ("metrics", scheduler.metrics().to_json()),
             ("backlog", Json::from(scheduler.backlog())),
         ]),
+        Request::Solvers => {
+            let entries = crate::solvers::api::registry()
+                .into_iter()
+                .map(|spec| {
+                    Json::obj(vec![
+                        ("spec", Json::from(spec.to_string())),
+                        ("description", Json::from(spec.describe())),
+                    ])
+                })
+                .collect();
+            protocol::ok(vec![("solvers", Json::Arr(entries))])
+        }
         Request::Shutdown => {
             stop.store(true, Ordering::SeqCst);
             protocol::ok(vec![("stopping", Json::Bool(true))])
@@ -224,6 +236,22 @@ mod tests {
         assert_eq!(done.get("state").unwrap().as_str(), Some("done"));
         let result = done.get("result").unwrap();
         assert_eq!(result.get("converged").unwrap().as_bool(), Some(true));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn solvers_command_lists_registry() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client.call(r#"{"cmd":"solvers"}"#).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let listed = resp.get("solvers").unwrap().as_arr().unwrap();
+        let registry = crate::solvers::api::registry();
+        assert_eq!(listed.len(), registry.len());
+        for (entry, spec) in listed.iter().zip(&registry) {
+            assert_eq!(entry.get("spec").unwrap().as_str(), Some(spec.to_string().as_str()));
+        }
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();
     }

@@ -16,6 +16,30 @@
 //! progress — so `m` never exceeds `O(d_e)` where
 //! `d_e = trace(A (A^T A + nu^2 I)^{-1} A^T)` is the effective dimension.
 //!
+//! ## The unified solver API
+//!
+//! Every solver — direct Cholesky, CG, preconditioned CG, fixed-size IHS,
+//! adaptive IHS, the dual reduction — is named by a
+//! [`SolverSpec`](solvers::SolverSpec) string and run through the
+//! [`Solver`](solvers::Solver) trait:
+//!
+//! ```no_run
+//! use effdim::solvers::{direct, RidgeProblem, Solver as _, SolverSpec, StopRule};
+//! # let (a, b) = (effdim::Matrix::eye(8), vec![1.0; 8]);
+//! let problem = RidgeProblem::new(a, b, 0.5);
+//! let stop = StopRule::TrueError { x_star: direct::solve(&problem), eps: 1e-10 };
+//! let spec: SolverSpec = "adaptive-srht".parse().unwrap();
+//! let solution = spec.build(7).solve(&problem, &vec![0.0; problem.d()], &stop);
+//! assert!(solution.report.converged);
+//! ```
+//!
+//! Spec strings follow `name[@key=value,...]` — `"cg"`, `"pcg-gaussian"`,
+//! `"ihs-sparse@m=256"`, `"dual-adaptive-gaussian"` — and round-trip
+//! through `Display`/`FromStr`. [`solvers::registry`] lists every entry;
+//! the CLI (`effdim solvers`), the coordinator (`{"cmd":"solvers"}`), the
+//! regularization-path driver and the bench harness all dispatch through
+//! this one surface.
+//!
 //! ## Layout
 //! * [`linalg`] — dense linear-algebra substrate (blocked GEMM, Cholesky,
 //!   Householder QR, Golub–Kahan SVD, triangular solves).
@@ -28,13 +52,14 @@
 //! * [`data`] — synthetic workload generators matching the paper's
 //!   experimental section (exp/poly spectral decays, MNIST/CIFAR-like
 //!   surrogates).
-//! * [`solvers`] — direct Cholesky, CG, preconditioned CG, fixed-size IHS,
-//!   **adaptive IHS (Algorithm 1)**, dual solver, regularization-path
-//!   driver.
+//! * [`solvers`] — the solver implementations plus
+//!   [`solvers::api`]: the [`Solver`](solvers::Solver) trait,
+//!   [`SolverSpec`](solvers::SolverSpec) strings and the
+//!   [`registry`](solvers::registry) every caller dispatches through.
 //! * [`runtime`] — PJRT executor for AOT-compiled JAX/Pallas artifacts plus
 //!   a shape-generic native backend.
 //! * [`coordinator`] — the L3 service: job scheduler, solve state machine,
-//!   event bus, metrics, tokio TCP server.
+//!   metrics, TCP server speaking line-delimited JSON.
 //! * [`bench_harness`] — regenerates every figure/table of the paper.
 
 pub mod bench_harness;
@@ -50,4 +75,4 @@ pub mod util;
 
 pub use linalg::matrix::Matrix;
 pub use solvers::adaptive::{AdaptiveConfig, AdaptiveSolver, AdaptiveVariant};
-pub use solvers::{RidgeProblem, SolveReport};
+pub use solvers::{registry, RidgeProblem, SolveReport, Solver, SolverSpec};

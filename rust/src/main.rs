@@ -1,22 +1,48 @@
 //! `effdim` CLI — the L3 entrypoint.
 //!
 //! ```text
-//! effdim solve  --profile mnist-like --n 1024 --d 128 --nu 1.0 \
-//!               --solver adaptive-srht --eps 1e-8 --seed 7
-//! effdim path   --profile exp --n 1024 --d 128 --nus 1e2,1e1,1,0.1 \
-//!               --solver adaptive-srht --eps 1e-8
-//! effdim serve  --addr 127.0.0.1:7199 --workers 2
+//! effdim solve   --profile mnist-like --n 1024 --d 128 --nu 1.0 \
+//!                --solver adaptive-srht --eps 1e-8 --seed 7
+//! effdim path    --profile exp --n 1024 --d 128 --nus 1e2,1e1,1,0.1 \
+//!                --solver adaptive-srht --eps 1e-8
+//! effdim serve   --addr 127.0.0.1:7199 --workers 2
 //! effdim request --addr 127.0.0.1:7199 --json '{"cmd":"ping"}'
-//! effdim info   --profile cifar-like --n 1024 --d 128 --nu 1.0
+//! effdim info    --profile cifar-like --n 1024 --d 128 --nu 1.0
+//! effdim solvers
 //! ```
+//!
+//! Every `--solver` value is a spec string parsed by
+//! [`SolverSpec`](effdim::solvers::SolverSpec) with the grammar
+//!
+//! ```text
+//! spec      := name [ "@" param ( "," param )* ]
+//! name      := "direct" | "cg" | "pcg-<kind>" | "ihs-<kind>"
+//!            | "polyak-ihs-<kind>" | "adaptive-<kind>"
+//!            | "adaptive-gd-<kind>" | "dual-adaptive-<kind>"
+//! kind      := "gaussian" | "srht" | "sparse"
+//! param     := "m=<usize>"   (ihs sketch size)
+//!            | "rho=<f64>"   (pcg preconditioner aspect ratio)
+//! ```
+//!
+//! e.g. `cg`, `pcg-gaussian`, `adaptive-srht`, `ihs-sparse@m=256`,
+//! `pcg-srht@rho=0.25`. `effdim solvers` prints the full registry.
 
-use effdim::coordinator::job::{self, JobSpec, SolverChoice, Workload};
+use effdim::coordinator::job::{self, JobSpec, Workload};
 use effdim::coordinator::server::{Client, Server};
 use effdim::data::synthetic;
-use effdim::sketch::SketchKind;
-use effdim::solvers::adaptive::AdaptiveVariant;
-use effdim::solvers::path::{run_path, PathSolver};
+use effdim::solvers::path::run_path;
+use effdim::solvers::{Solver as _, SolverSpec};
 use effdim::util::cli::Args;
+
+const USAGE: &str = "usage: effdim <solve|path|serve|request|info|solvers> [--flags]
+  --solver takes a spec string: name[@key=value,...]
+    names : direct | cg | pcg-<kind> | ihs-<kind> | polyak-ihs-<kind>
+            | adaptive-<kind> | adaptive-gd-<kind> | dual-adaptive-<kind>
+    kinds : gaussian | srht | sparse
+    params: m=<usize> (ihs), rho=<f64> (pcg)
+    bare aliases 'adaptive', 'adaptive-gd', 'dual' default to gaussian;
+    'pcg' defaults to srht — name the kind explicitly in scripts
+  run `effdim solvers` for the registry; see rust/src/main.rs docs for flags";
 
 fn main() {
     let args = Args::from_env();
@@ -26,9 +52,9 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("request") => cmd_request(&args),
         Some("info") => cmd_info(&args),
+        Some("solvers") => cmd_solvers(),
         _ => {
-            eprintln!("usage: effdim <solve|path|serve|request|info> [--flags]");
-            eprintln!("see `rust/src/main.rs` docs for the flag list");
+            eprintln!("{USAGE}");
             2
         }
     };
@@ -44,16 +70,24 @@ fn workload_from(args: &Args) -> Workload {
     }
 }
 
+fn parse_solver(args: &Args, default: &str) -> Result<SolverSpec, i32> {
+    match args.get_or("solver", default).parse() {
+        Ok(spec) => Ok(spec),
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!("{USAGE}");
+            Err(2)
+        }
+    }
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let spec = JobSpec {
         workload: workload_from(args),
         nu: args.get_f64("nu", 1.0),
-        solver: match SolverChoice::parse(args.get_or("solver", "adaptive-srht")) {
+        solver: match parse_solver(args, "adaptive-srht") {
             Ok(s) => s,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
+            Err(code) => return code,
         },
         eps: args.get_f64("eps", 1e-8),
         seed: args.get_u64("seed", 1),
@@ -91,25 +125,11 @@ fn cmd_path(args: &Args) -> i32 {
         }
     };
     let nus = args.get_f64_list("nus", &[100.0, 10.0, 1.0, 0.1, 0.01]);
-    let solver = match args.get_or("solver", "adaptive-srht") {
-        "cg" => PathSolver::Cg,
-        "pcg" | "pcg-srht" => PathSolver::Pcg { kind: SketchKind::Srht, rho: 0.5 },
-        "pcg-gaussian" => PathSolver::Pcg { kind: SketchKind::Gaussian, rho: 0.5 },
-        "adaptive" | "adaptive-srht" => {
-            PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst }
-        }
-        "adaptive-gaussian" => {
-            PathSolver::Adaptive { kind: SketchKind::Gaussian, variant: AdaptiveVariant::PolyakFirst }
-        }
-        "adaptive-gd" | "adaptive-gd-srht" => {
-            PathSolver::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly }
-        }
-        other => {
-            eprintln!("unknown solver {other}");
-            return 2;
-        }
+    let spec = match parse_solver(args, "adaptive-srht") {
+        Ok(s) => s,
+        Err(code) => return code,
     };
-    let res = run_path(&ds.a, &ds.b, &nus, args.get_f64("eps", 1e-8), &solver, seed);
+    let res = run_path(&ds.a, &ds.b, &nus, args.get_f64("eps", 1e-8), &spec, seed);
     println!("solver: {}", res.solver);
     println!(
         "{:<12} {:>10} {:>12} {:>10} {:>8} {:>6}",
@@ -198,5 +218,23 @@ fn cmd_info(args: &Args) -> i32 {
         "condition number of [A; nu I] = {:.3e}",
         ((sigma[0] * sigma[0] + nu * nu) / (sigma.last().unwrap().powi(2) + nu * nu)).sqrt()
     );
+    0
+}
+
+/// Print the solver registry — the same list the coordinator serves for
+/// `{"cmd":"solvers"}` and the agreement tests iterate.
+fn cmd_solvers() -> i32 {
+    println!("{:<28} {:>5} {:>7}  description", "spec", "warm", "random");
+    for spec in effdim::solvers::registry() {
+        let solver = spec.build(0);
+        println!(
+            "{:<28} {:>5} {:>7}  {}",
+            spec.to_string(),
+            if solver.supports_warm_start() { "yes" } else { "no" },
+            if solver.is_randomized() { "yes" } else { "no" },
+            spec.describe()
+        );
+    }
+    println!("\nspec grammar: name[@key=value,...]  (m=<usize> for ihs, rho=<f64> for pcg)");
     0
 }

@@ -75,8 +75,10 @@ pub fn sample(kind: SketchKind, m: usize, n: usize, rng: &mut Xoshiro256) -> Box
 }
 
 /// Flop-count model for forming `SA` (used by the complexity harness,
-/// Theorem 7): Gaussian `2mnd`, SRHT `nd log2(n~) + md`, sparse `2 nnz(A)`.
-pub fn sketch_cost_flops(kind: SketchKind, m: usize, n: usize, d: usize) -> f64 {
+/// Theorem 7): Gaussian `2mnd`, SRHT `nd log2(n~) + md`, sparse
+/// `2 nnz(A)`. The sparse model needs the input's nonzero count; pass
+/// `nnz = None` for dense data (where `nnz(A) = n d`).
+pub fn sketch_cost_flops(kind: SketchKind, m: usize, n: usize, d: usize, nnz: Option<usize>) -> f64 {
     let (mf, nf, df) = (m as f64, n as f64, d as f64);
     match kind {
         SketchKind::Gaussian => 2.0 * mf * nf * df,
@@ -84,7 +86,7 @@ pub fn sketch_cost_flops(kind: SketchKind, m: usize, n: usize, d: usize) -> f64 
             let np = (n.max(2) as f64).log2().ceil();
             nf * df * np + mf * df
         }
-        SketchKind::Sparse => 2.0 * nf * df,
+        SketchKind::Sparse => 2.0 * nnz.map(|z| z as f64).unwrap_or(nf * df),
     }
 }
 
@@ -118,10 +120,24 @@ mod tests {
     fn cost_model_orderings() {
         // SRHT must beat Gaussian for large m, sparse beats both.
         let (m, n, d) = (512, 4096, 256);
-        let g = sketch_cost_flops(SketchKind::Gaussian, m, n, d);
-        let h = sketch_cost_flops(SketchKind::Srht, m, n, d);
-        let s = sketch_cost_flops(SketchKind::Sparse, m, n, d);
+        let g = sketch_cost_flops(SketchKind::Gaussian, m, n, d, None);
+        let h = sketch_cost_flops(SketchKind::Srht, m, n, d, None);
+        let s = sketch_cost_flops(SketchKind::Sparse, m, n, d, None);
         assert!(h < g);
         assert!(s < h);
+    }
+
+    #[test]
+    fn sparse_cost_scales_with_nnz() {
+        // 2 * nnz(A), not 2 * n * d: a 1%-dense matrix must cost 1% of
+        // the dense fallback.
+        let (m, n, d) = (512, 4096, 256);
+        let dense = sketch_cost_flops(SketchKind::Sparse, m, n, d, None);
+        let sparse = sketch_cost_flops(SketchKind::Sparse, m, n, d, Some(n * d / 100));
+        assert_eq!(dense, 2.0 * (n * d) as f64);
+        assert_eq!(sparse, 2.0 * (n * d / 100) as f64);
+        // nnz does not affect the dense-data families.
+        let g = sketch_cost_flops(SketchKind::Gaussian, m, n, d, Some(1));
+        assert_eq!(g, 2.0 * (m * n * d) as f64);
     }
 }

@@ -39,7 +39,9 @@ pub enum AdaptiveVariant {
     GradientOnly,
 }
 
-/// Configuration of the adaptive solver.
+/// Configuration of the adaptive solver. The stopping rule is not part of
+/// the config: it is passed per-solve through the unified
+/// [`crate::solvers::api::Solver`] call.
 #[derive(Clone, Debug)]
 pub struct AdaptiveConfig {
     pub kind: SketchKind,
@@ -54,12 +56,11 @@ pub struct AdaptiveConfig {
     /// Growth factor applied on rejection (paper: 2).
     pub growth: usize,
     pub max_iters: usize,
-    pub stop: StopRule,
 }
 
 impl AdaptiveConfig {
     /// Paper-default configuration for a sketch family.
-    pub fn new(kind: SketchKind, stop: StopRule) -> Self {
+    pub fn new(kind: SketchKind) -> Self {
         let rho = match kind {
             SketchKind::Gaussian => 0.1,
             // SRHT/sparse brackets are [1 -/+ sqrt(rho)]: rho = 0.5 keeps
@@ -75,7 +76,6 @@ impl AdaptiveConfig {
             eta: 0.01,
             growth: 2,
             max_iters: 10_000,
-            stop,
         }
     }
 
@@ -93,6 +93,7 @@ impl AdaptiveConfig {
 pub struct AdaptiveSolver<'p> {
     problem: &'p RidgeProblem,
     config: AdaptiveConfig,
+    stop: StopRule,
     params: IhsParams,
     rng: Xoshiro256,
     /// Gradient oracle. Defaults to the native `problem.gradient`; the
@@ -121,7 +122,13 @@ pub struct AdaptiveSolver<'p> {
 impl<'p> AdaptiveSolver<'p> {
     /// Initialize at `x0` (both `x_0` and `x_1` per the paper's two-point
     /// heavy-ball initialization).
-    pub fn new(problem: &'p RidgeProblem, x0: &[f64], config: AdaptiveConfig, seed: u64) -> Self {
+    pub fn new(
+        problem: &'p RidgeProblem,
+        x0: &[f64],
+        config: AdaptiveConfig,
+        stop: StopRule,
+        seed: u64,
+    ) -> Self {
         assert_eq!(x0.len(), problem.d());
         assert!(config.m_initial >= 1 && config.growth >= 2);
         let params = config.params();
@@ -129,14 +136,12 @@ impl<'p> AdaptiveSolver<'p> {
         let m_cap = crate::sketch::srht::next_pow2(problem.n());
         let m = config.m_initial.min(m_cap);
 
-        let mut report = SolveReport::new(format!(
-            "adaptive-{}-{}",
-            match config.variant {
-                AdaptiveVariant::PolyakFirst => "polyak",
-                AdaptiveVariant::GradientOnly => "gd",
-            },
-            config.kind
-        ));
+        // Canonical spec-string labels (see `solvers::api`): the Polyak
+        // variant is the default and carries no infix.
+        let mut report = SolveReport::new(match config.variant {
+            AdaptiveVariant::PolyakFirst => format!("adaptive-{}", config.kind),
+            AdaptiveVariant::GradientOnly => format!("adaptive-gd-{}", config.kind),
+        });
 
         let t0 = Instant::now();
         let s = sketch::sample(config.kind, m, problem.n(), &mut rng);
@@ -156,6 +161,7 @@ impl<'p> AdaptiveSolver<'p> {
         Self {
             problem,
             config,
+            stop,
             params,
             rng,
             grad_fn: Box::new(move |x| problem.gradient(x)),
@@ -300,17 +306,21 @@ impl<'p> AdaptiveSolver<'p> {
         }
     }
 
-    /// Run to completion under the configured stop rule.
+    /// Run to completion under the stop rule given at construction.
     pub fn run(mut self) -> Solution {
         let start = Instant::now();
         let g0_norm = norm2(&self.g);
-        let delta0 = match &self.config.stop {
+        let delta0 = match &self.stop {
             StopRule::TrueError { x_star, .. } => self.problem.prediction_error(&self.x, x_star),
             _ => 0.0,
         };
+        if matches!(self.stop, StopRule::TrueError { .. }) {
+            // Shared trace convention: entry t is delta_t / delta_0.
+            self.report.error_trace.push(1.0);
+        }
 
         let max_iters = self.config.max_iters;
-        let stop = self.config.stop.clone();
+        let stop = self.stop.clone();
         while self.report.iterations < max_iters {
             self.step();
             let stop_now = match &stop {
@@ -348,9 +358,10 @@ pub fn solve(
     problem: &RidgeProblem,
     x0: &[f64],
     config: &AdaptiveConfig,
+    stop: &StopRule,
     seed: u64,
 ) -> Solution {
-    AdaptiveSolver::new(problem, x0, config.clone(), seed).run()
+    AdaptiveSolver::new(problem, x0, config.clone(), stop.clone(), seed).run()
 }
 
 #[cfg(test)]
@@ -372,25 +383,26 @@ mod tests {
     #[test]
     fn converges_from_m_equals_one_gaussian() {
         let p = small_problem(256, 32, 0.5, 1);
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
-        let sol = solve(&p, &vec![0.0; 32], &cfg, 11);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 11);
         assert!(sol.report.converged, "adaptive failed: {:?}", sol.report.final_rel_error);
         assert!(sol.report.final_m >= 1);
+        assert_eq!(sol.report.solver, "adaptive-gaussian");
     }
 
     #[test]
     fn converges_from_m_equals_one_srht() {
         let p = small_problem(256, 32, 0.5, 2);
-        let cfg = AdaptiveConfig::new(SketchKind::Srht, stop_for(&p, 1e-10));
-        let sol = solve(&p, &vec![0.0; 32], &cfg, 12);
+        let cfg = AdaptiveConfig::new(SketchKind::Srht);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 12);
         assert!(sol.report.converged);
     }
 
     #[test]
     fn converges_with_sparse_sketch() {
         let p = small_problem(256, 32, 0.5, 3);
-        let cfg = AdaptiveConfig::new(SketchKind::Sparse, stop_for(&p, 1e-8));
-        let sol = solve(&p, &vec![0.0; 32], &cfg, 13);
+        let cfg = AdaptiveConfig::new(SketchKind::Sparse);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-8), 13);
         assert!(sol.report.converged);
     }
 
@@ -400,8 +412,8 @@ mod tests {
         // doubling overshoot already included in the factor 2.
         let p = small_problem(1024, 64, 1.0, 4);
         let d_e = de_of(&p);
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
-        let sol = solve(&p, &vec![0.0; 64], &cfg, 14);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 14);
         let bound = crate::theory::bounds::gaussian_sketch_size_bound(cfg.rho, d_e);
         assert!(sol.report.converged);
         assert!(
@@ -416,8 +428,8 @@ mod tests {
     #[test]
     fn rejections_logarithmic() {
         let p = small_problem(512, 64, 0.5, 5);
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
-        let sol = solve(&p, &vec![0.0; 64], &cfg, 15);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 15);
         // Doublings from m=1 can't exceed log2(n_pad)+1, and should be
         // far fewer on this easy problem.
         assert!(sol.report.doublings <= 11, "doublings {}", sol.report.doublings);
@@ -426,11 +438,11 @@ mod tests {
     #[test]
     fn gradient_only_variant_converges() {
         let p = small_problem(256, 32, 0.3, 6);
-        let mut cfg = AdaptiveConfig::new(SketchKind::Srht, stop_for(&p, 1e-10));
+        let mut cfg = AdaptiveConfig::new(SketchKind::Srht);
         cfg.variant = AdaptiveVariant::GradientOnly;
-        let sol = solve(&p, &vec![0.0; 32], &cfg, 16);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 16);
         assert!(sol.report.converged);
-        assert!(sol.report.solver.contains("adaptive-gd"));
+        assert_eq!(sol.report.solver, "adaptive-gd-srht");
     }
 
     #[test]
@@ -440,8 +452,8 @@ mod tests {
         let p = small_problem(512, 64, 50.0, 7);
         let d_e = de_of(&p);
         assert!(d_e < 2.0, "test premise: d_e = {d_e}");
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
-        let sol = solve(&p, &vec![0.0; 64], &cfg, 17);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 17);
         assert!(sol.report.converged);
         assert!(sol.report.peak_m <= 64, "peak m {} should be << d", sol.report.peak_m);
     }
@@ -451,16 +463,16 @@ mod tests {
         let p = small_problem(256, 32, 0.2, 8);
         let x_star = direct::solve(&p);
         let near: Vec<f64> = x_star.iter().map(|v| v * 0.99).collect();
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
-        let sol = solve(&p, &near, &cfg, 18);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &near, &cfg, &StopRule::TrueError { x_star, eps: 1e-10 }, 18);
         assert!(sol.report.converged);
     }
 
     #[test]
     fn m_trace_monotone_nondecreasing() {
         let p = small_problem(256, 32, 0.1, 9);
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, stop_for(&p, 1e-10));
-        let sol = solve(&p, &vec![0.0; 32], &cfg, 19);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 19);
         for w in sol.report.m_trace.windows(2) {
             assert!(w[1] >= w[0], "m_trace must never shrink");
         }
@@ -469,9 +481,10 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let p = small_problem(128, 16, 0.5, 10);
-        let cfg = AdaptiveConfig::new(SketchKind::Srht, stop_for(&p, 1e-9));
-        let s1 = solve(&p, &vec![0.0; 16], &cfg, 77);
-        let s2 = solve(&p, &vec![0.0; 16], &cfg, 77);
+        let cfg = AdaptiveConfig::new(SketchKind::Srht);
+        let stop = stop_for(&p, 1e-9);
+        let s1 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77);
+        let s2 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77);
         assert_eq!(s1.x, s2.x);
         assert_eq!(s1.report.iterations, s2.report.iterations);
     }

@@ -8,21 +8,22 @@ use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{axpy, dot, norm2};
 use std::time::Instant;
 
-/// CG configuration.
+/// CG configuration. The stopping rule is not part of the config: it is
+/// passed per-solve through the unified [`crate::solvers::api::Solver`]
+/// call.
 #[derive(Clone, Debug)]
 pub struct CgConfig {
     pub max_iters: usize,
-    pub stop: StopRule,
 }
 
 impl Default for CgConfig {
     fn default() -> Self {
-        Self { max_iters: 10_000, stop: StopRule::GradientNorm { tol: 1e-12 } }
+        Self { max_iters: 10_000 }
     }
 }
 
 /// Run CG from `x0` on `(A^T A + nu^2 I) x = A^T b`.
-pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig) -> Solution {
+pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig, stop: &StopRule) -> Solution {
     let start = Instant::now();
     let d = problem.d();
     assert_eq!(x0.len(), d);
@@ -33,13 +34,14 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig) -> Solution 
     let mut r = problem.gradient(&x);
     crate::linalg::scale(-1.0, &mut r);
     let g0_norm = norm2(&r);
-    let delta0 = match &config.stop {
+    let delta0 = match stop {
         StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
         _ => 0.0,
     };
-    if let StopRule::TrueError { x_star, .. } = &config.stop {
+    if matches!(stop, StopRule::TrueError { .. }) {
+        // Trace convention shared with the sketching solvers: entry t is
+        // delta_t / delta_0, starting at the (trivially 1.0) initial point.
         report.error_trace.push(1.0);
-        let _ = x_star;
     }
 
     let mut p = r.clone();
@@ -58,7 +60,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig) -> Solution 
         report.iterations = t + 1;
 
         // Stop checks (negated residual == gradient up to sign).
-        let stop_now = match &config.stop {
+        let stop_now = match stop {
             StopRule::TrueError { x_star, eps } => {
                 let delta = problem.prediction_error(&x, x_star);
                 report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
@@ -79,7 +81,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig) -> Solution 
         rs_old = rs_new;
     }
 
-    if let StopRule::TrueError { x_star, eps } = &config.stop {
+    if let StopRule::TrueError { x_star, eps } = stop {
         let delta = problem.prediction_error(&x, x_star);
         report.final_rel_error = Some(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
         if delta0 > 0.0 && delta <= eps * delta0 {
@@ -102,7 +104,8 @@ mod tests {
     fn converges_to_direct_solution() {
         let p = small_problem(128, 16, 0.5, 1);
         let x_star = direct::solve(&p);
-        let sol = solve(&p, &vec![0.0; 16], &CgConfig::default());
+        let stop = StopRule::GradientNorm { tol: 1e-12 };
+        let sol = solve(&p, &vec![0.0; 16], &CgConfig::default(), &stop);
         assert!(sol.report.converged);
         for i in 0..16 {
             assert!((sol.x[i] - x_star[i]).abs() < 1e-7, "coord {i}");
@@ -114,23 +117,23 @@ mod tests {
         // CG on a d-dimensional quadratic terminates in <= d steps
         // (exact arithmetic; allow small slack).
         let p = small_problem(64, 8, 1.0, 2);
-        let sol = solve(&p, &vec![0.0; 8], &CgConfig::default());
+        let stop = StopRule::GradientNorm { tol: 1e-12 };
+        let sol = solve(&p, &vec![0.0; 8], &CgConfig::default(), &stop);
         assert!(sol.report.iterations <= 10, "iters {}", sol.report.iterations);
     }
 
     #[test]
-    fn true_error_stop_rule() {
+    fn true_error_stop_rule_records_full_trace() {
         let p = small_problem(128, 16, 0.2, 3);
         let x_star = direct::solve(&p);
-        let cfg = CgConfig {
-            max_iters: 500,
-            stop: StopRule::TrueError { x_star: x_star.clone(), eps: 1e-8 },
-        };
-        let sol = solve(&p, &vec![0.0; 16], &cfg);
+        let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-8 };
+        let sol = solve(&p, &vec![0.0; 16], &CgConfig { max_iters: 500 }, &stop);
         assert!(sol.report.converged);
         assert!(sol.report.final_rel_error.unwrap() <= 1e-8);
-        // Error trace must be monotone-ish decreasing overall.
+        // One relative error per iteration, plus the 1.0 at the start.
         let tr = &sol.report.error_trace;
+        assert_eq!(tr.len(), sol.report.iterations + 1);
+        assert_eq!(tr[0], 1.0);
         assert!(tr.last().unwrap() < &1e-8);
     }
 
@@ -140,8 +143,9 @@ mod tests {
         let x_star = direct::solve(&p);
         let near: Vec<f64> = x_star.iter().map(|v| v * 0.999).collect();
         let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-9 };
-        let cold = solve(&p, &vec![0.0; 32], &CgConfig { max_iters: 1000, stop: stop.clone() });
-        let warm = solve(&p, &near, &CgConfig { max_iters: 1000, stop });
+        let cfg = CgConfig { max_iters: 1000 };
+        let cold = solve(&p, &vec![0.0; 32], &cfg, &stop);
+        let warm = solve(&p, &near, &cfg, &stop);
         assert!(warm.report.iterations <= cold.report.iterations);
     }
 
@@ -151,11 +155,8 @@ mod tests {
         let mk = |nu: f64, seed: u64| {
             let p = small_problem(256, 64, nu, seed);
             let x_star = direct::solve(&p);
-            let cfg = CgConfig {
-                max_iters: 5000,
-                stop: StopRule::TrueError { x_star, eps: 1e-10 },
-            };
-            solve(&p, &vec![0.0; 64], &cfg).report.iterations
+            let stop = StopRule::TrueError { x_star, eps: 1e-10 };
+            solve(&p, &vec![0.0; 64], &CgConfig { max_iters: 5000 }, &stop).report.iterations
         };
         let hard = mk(1e-3, 5);
         let easy = mk(10.0, 5);

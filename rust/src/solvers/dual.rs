@@ -35,12 +35,13 @@ impl DualRidge {
     }
 
     /// Solve via the adaptive algorithm on the dual, returning the primal
-    /// solution. Guarantees of Theorems 5–7 carry over verbatim
+    /// solution. `stop` is evaluated in the *dual* space (see
+    /// [`dual_stop`]). Guarantees of Theorems 5–7 carry over verbatim
     /// (Appendix A.2).
-    pub fn solve_adaptive(&self, config: &AdaptiveConfig, seed: u64) -> Solution {
+    pub fn solve_adaptive(&self, config: &AdaptiveConfig, stop: &StopRule, seed: u64) -> Solution {
         let n = self.dual.d();
         let z0 = vec![0.0; n];
-        let mut sol = adaptive::solve(&self.dual, &z0, config, seed);
+        let mut sol = adaptive::solve(&self.dual, &z0, config, stop, seed);
         sol.x = self.primal(&sol.x);
         sol.report.solver = format!("dual-{}", sol.report.solver);
         sol
@@ -99,8 +100,8 @@ mod tests {
         let nu = 0.5;
         let x_direct = solve_direct(&a, &b, nu);
         let dr = DualRidge::new(a, b, nu);
-        let cfg = AdaptiveConfig::new(SketchKind::Gaussian, dual_stop(&dr.dual, 1e-12));
-        let sol = dr.solve_adaptive(&cfg, 3);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = dr.solve_adaptive(&cfg, &dual_stop(&dr.dual, 1e-12), 3);
         assert!(sol.report.converged);
         for i in 0..x_direct.len() {
             assert!(
@@ -131,10 +132,10 @@ mod tests {
     fn srht_dual_converges() {
         let (a, b) = wide_problem(16, 128, 5);
         let dr = DualRidge::new(a, b, 1.0);
-        let cfg = AdaptiveConfig::new(SketchKind::Srht, dual_stop(&dr.dual, 1e-10));
-        let sol = dr.solve_adaptive(&cfg, 6);
+        let cfg = AdaptiveConfig::new(SketchKind::Srht);
+        let sol = dr.solve_adaptive(&cfg, &dual_stop(&dr.dual, 1e-10), 6);
         assert!(sol.report.converged);
-        assert!(sol.report.solver.starts_with("dual-adaptive"));
+        assert_eq!(sol.report.solver, "dual-adaptive-srht");
     }
 
     #[test]

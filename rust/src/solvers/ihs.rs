@@ -14,7 +14,8 @@ use crate::theory::rates::IhsParams;
 use crate::theory::{gaussian_bounds, srht_bounds};
 use std::time::Instant;
 
-/// Fixed-size IHS configuration.
+/// Fixed-size IHS configuration. Stop rule and seed are per-solve
+/// arguments of the unified [`crate::solvers::api::Solver`] call.
 #[derive(Clone, Debug)]
 pub struct IhsConfig {
     pub kind: SketchKind,
@@ -33,14 +34,13 @@ pub struct IhsConfig {
     /// ablation (`benches/ablations`).
     pub refresh: bool,
     pub max_iters: usize,
-    pub stop: StopRule,
 }
 
 impl IhsConfig {
     /// Parameters per Definition 3.1 (Gaussian practical parameters) for a
     /// given aspect ratio `rho` (`eta` fixed at 0.01 as in the paper's
     /// experiments).
-    pub fn gaussian(m: usize, rho: f64, stop: StopRule) -> Self {
+    pub fn gaussian(m: usize, rho: f64) -> Self {
         let params = gaussian_bounds(rho, 0.01, 1.0).params();
         Self {
             kind: SketchKind::Gaussian,
@@ -49,12 +49,11 @@ impl IhsConfig {
             momentum: true,
             refresh: false,
             max_iters: 10_000,
-            stop,
         }
     }
 
     /// Parameters per Definition 3.2 (SRHT practical parameters).
-    pub fn srht(m: usize, rho: f64, stop: StopRule) -> Self {
+    pub fn srht(m: usize, rho: f64) -> Self {
         let params = srht_bounds(rho, 2, 2.0).params();
         Self {
             kind: SketchKind::Srht,
@@ -63,24 +62,30 @@ impl IhsConfig {
             momentum: true,
             refresh: false,
             max_iters: 10_000,
-            stop,
         }
     }
 }
 
-/// Run fixed-size IHS from `x0`.
-pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &IhsConfig, rng: &mut Xoshiro256) -> Solution {
+/// Run fixed-size IHS from `x0`; the embedding is drawn from `seed`.
+pub fn solve(
+    problem: &RidgeProblem,
+    x0: &[f64],
+    config: &IhsConfig,
+    stop: &StopRule,
+    seed: u64,
+) -> Solution {
     let start = Instant::now();
     let d = problem.d();
     assert_eq!(x0.len(), d);
-    let label = if config.momentum { "polyak-ihs" } else { "gradient-ihs" };
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let label = if config.momentum { "polyak-ihs" } else { "ihs" };
     let mut report = SolveReport::new(format!("{label}-{}", config.kind));
     report.final_m = config.m;
     report.peak_m = config.m;
 
     // Sketch + factor once.
     let t0 = Instant::now();
-    let s = sketch::sample(config.kind, config.m, problem.n(), rng);
+    let s = sketch::sample(config.kind, config.m, problem.n(), &mut rng);
     let sa = s.apply(&problem.a);
     report.sketch_time_s = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
@@ -92,10 +97,14 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &IhsConfig, rng: &mut X
     let mut x = x0.to_vec();
     let mut g = problem.gradient(&x);
     let g0_norm = norm2(&g);
-    let delta0 = match &config.stop {
+    let delta0 = match stop {
         StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
         _ => 0.0,
     };
+    if matches!(stop, StopRule::TrueError { .. }) {
+        // Shared trace convention: entry t is delta_t / delta_0.
+        report.error_trace.push(1.0);
+    }
 
     let (mu, beta) = if config.momentum {
         (config.params.mu_p, config.params.beta_p)
@@ -108,7 +117,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &IhsConfig, rng: &mut X
         if config.refresh && t > 0 {
             // Refreshed-embedding ablation: new S, new factorization.
             let t0 = Instant::now();
-            let s = sketch::sample(config.kind, config.m, problem.n(), rng);
+            let s = sketch::sample(config.kind, config.m, problem.n(), &mut rng);
             let sa = s.apply(&problem.a);
             report.sketch_time_s += t0.elapsed().as_secs_f64();
             let t0 = Instant::now();
@@ -128,7 +137,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &IhsConfig, rng: &mut X
         g = problem.gradient(&x);
         report.iterations = t + 1;
 
-        let stop_now = match &config.stop {
+        let stop_now = match stop {
             StopRule::TrueError { x_star, eps } => {
                 let delta = problem.prediction_error(&x, x_star);
                 report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
@@ -142,7 +151,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &IhsConfig, rng: &mut X
         }
     }
 
-    if let StopRule::TrueError { x_star, eps } = &config.stop {
+    if let StopRule::TrueError { x_star, eps } = stop {
         let delta = problem.prediction_error(&x, x_star);
         report.final_rel_error = Some(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
         if delta0 > 0.0 && delta <= eps * delta0 {
@@ -166,26 +175,27 @@ pub fn solve_with_estimated_de(
     kind: SketchKind,
     rho: f64,
     probes: usize,
-    stop: StopRule,
-    rng: &mut Xoshiro256,
+    stop: &StopRule,
+    seed: u64,
 ) -> (Solution, f64) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
     let t0 = Instant::now();
     let de_hat = crate::theory::effective_dim::hutchinson_effective_dimension(
         &problem.a,
         problem.nu,
         probes,
-        rng,
+        &mut rng,
     )
     .max(1.0);
     let estimate_time = t0.elapsed().as_secs_f64();
     let m = ((de_hat / rho).ceil() as usize)
         .clamp(1, crate::sketch::srht::next_pow2(problem.n()));
     let mut cfg = match kind {
-        SketchKind::Gaussian => IhsConfig::gaussian(m, rho.min(0.18), stop),
-        _ => IhsConfig::srht(m, rho, stop),
+        SketchKind::Gaussian => IhsConfig::gaussian(m, rho.min(0.18)),
+        _ => IhsConfig::srht(m, rho),
     };
     cfg.kind = kind;
-    let mut sol = solve(problem, x0, &cfg, rng);
+    let mut sol = solve(problem, x0, &cfg, stop, seed.wrapping_add(1));
     sol.report.solver = format!("hutchinson-ihs-{kind}");
     // Charge the estimation phase to the factor bucket (it plays the same
     // role: pre-iteration setup).
@@ -213,10 +223,10 @@ mod tests {
         let d_e = de_of(&p);
         let rho = 0.15;
         let m = ((d_e / rho).ceil() as usize).max(8);
-        let mut cfg = IhsConfig::gaussian(m, rho, StopRule::TrueError { x_star, eps: 1e-10 });
+        let mut cfg = IhsConfig::gaussian(m, rho);
         cfg.momentum = false;
-        let mut rng = Xoshiro256::seed_from_u64(2);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        let stop = StopRule::TrueError { x_star, eps: 1e-10 };
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop, 2);
         assert!(sol.report.converged, "gradient-IHS failed (m={m}, d_e={d_e:.1})");
     }
 
@@ -228,13 +238,11 @@ mod tests {
         let rho = 0.15;
         let m = ((d_e / rho).ceil() as usize).max(8);
         let stop = StopRule::TrueError { x_star, eps: 1e-10 };
-        let mut rng1 = Xoshiro256::seed_from_u64(4);
-        let mut rng2 = Xoshiro256::seed_from_u64(4);
-        let mut grad_cfg = IhsConfig::gaussian(m, rho, stop.clone());
+        let mut grad_cfg = IhsConfig::gaussian(m, rho);
         grad_cfg.momentum = false;
-        let polyak_cfg = IhsConfig::gaussian(m, rho, stop);
-        let grad = solve(&p, &vec![0.0; 32], &grad_cfg, &mut rng1);
-        let polyak = solve(&p, &vec![0.0; 32], &polyak_cfg, &mut rng2);
+        let polyak_cfg = IhsConfig::gaussian(m, rho);
+        let grad = solve(&p, &vec![0.0; 32], &grad_cfg, &stop, 4);
+        let polyak = solve(&p, &vec![0.0; 32], &polyak_cfg, &stop, 4);
         assert!(grad.report.converged && polyak.report.converged);
         assert!(
             polyak.report.iterations <= grad.report.iterations,
@@ -252,10 +260,9 @@ mod tests {
         let stop = StopRule::TrueError { x_star, eps: 1e-9 };
         let d_e = de_of(&p);
         let run = |m: usize, seed: u64| {
-            let mut cfg = IhsConfig::gaussian(m, 0.15, stop.clone());
+            let mut cfg = IhsConfig::gaussian(m, 0.15);
             cfg.momentum = false;
-            let mut rng = Xoshiro256::seed_from_u64(seed);
-            solve(&p, &vec![0.0; 16], &cfg, &mut rng).report.iterations
+            solve(&p, &vec![0.0; 16], &cfg, &stop, seed).report.iterations
         };
         let m_small = ((d_e / 0.15).ceil() as usize).max(8);
         let iters_small = run(m_small, 6);
@@ -269,10 +276,11 @@ mod tests {
         let x_star = direct::solve(&p);
         let d_e = de_of(&p);
         let m = ((d_e * 4.0).ceil() as usize).clamp(16, 256);
-        let cfg = IhsConfig::srht(m, 0.25, StopRule::TrueError { x_star, eps: 1e-9 });
-        let mut rng = Xoshiro256::seed_from_u64(8);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        let cfg = IhsConfig::srht(m, 0.25);
+        let stop = StopRule::TrueError { x_star, eps: 1e-9 };
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop, 8);
         assert!(sol.report.converged, "SRHT IHS failed with m={m}");
+        assert_eq!(sol.report.solver, "polyak-ihs-srht");
     }
 
     #[test]
@@ -281,11 +289,11 @@ mod tests {
         // exactly the failure mode the adaptive algorithm exists to fix.
         let p = small_problem(256, 32, 0.05, 9);
         let x_star = direct::solve(&p);
-        let mut cfg = IhsConfig::gaussian(1, 0.15, StopRule::TrueError { x_star, eps: 1e-10 });
+        let mut cfg = IhsConfig::gaussian(1, 0.15);
         cfg.momentum = false;
         cfg.max_iters = 60;
-        let mut rng = Xoshiro256::seed_from_u64(10);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        let stop = StopRule::TrueError { x_star, eps: 1e-10 };
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop, 10);
         assert!(!sol.report.converged, "m=1 should not converge in 60 iters");
     }
 
@@ -296,14 +304,12 @@ mod tests {
         let d_e = de_of(&p);
         let m = ((d_e / 0.15).ceil() as usize).max(8);
         let stop = StopRule::TrueError { x_star, eps: 1e-9 };
-        let mut fixed_cfg = IhsConfig::gaussian(m, 0.15, stop.clone());
+        let mut fixed_cfg = IhsConfig::gaussian(m, 0.15);
         fixed_cfg.momentum = false;
         let mut refresh_cfg = fixed_cfg.clone();
         refresh_cfg.refresh = true;
-        let mut r1 = Xoshiro256::seed_from_u64(12);
-        let mut r2 = Xoshiro256::seed_from_u64(12);
-        let fixed = solve(&p, &vec![0.0; 32], &fixed_cfg, &mut r1);
-        let refreshed = solve(&p, &vec![0.0; 32], &refresh_cfg, &mut r2);
+        let fixed = solve(&p, &vec![0.0; 32], &fixed_cfg, &stop, 12);
+        let refreshed = solve(&p, &vec![0.0; 32], &refresh_cfg, &stop, 12);
         assert!(fixed.report.converged && refreshed.report.converged);
         // Section 1.3 ablation: refreshing buys no iteration advantage
         // worth its cost — sketch+factor time must be strictly larger.
@@ -319,9 +325,8 @@ mod tests {
         let x_star = direct::solve(&p);
         let d_e = de_of(&p);
         let stop = StopRule::TrueError { x_star, eps: 1e-9 };
-        let mut rng = Xoshiro256::seed_from_u64(14);
         let (sol, de_hat) =
-            solve_with_estimated_de(&p, &vec![0.0; 32], SketchKind::Gaussian, 0.15, 50, stop, &mut rng);
+            solve_with_estimated_de(&p, &vec![0.0; 32], SketchKind::Gaussian, 0.15, 50, &stop, 14);
         assert!(sol.report.converged, "hutchinson baseline failed");
         assert!((de_hat - d_e).abs() < 0.5 * d_e.max(2.0), "estimate {de_hat} vs {d_e}");
         assert!(sol.report.solver.starts_with("hutchinson"));

@@ -12,8 +12,12 @@
 //! * [`dual`] — the underdetermined case `d >= n` via the dual problem
 //!   (Appendix A.2).
 //! * [`path`] — regularization-path driver with warm starts (Figures 1, 3).
+//! * [`api`] — the unified dispatch surface: the [`api::Solver`] trait,
+//!   round-trippable [`api::SolverSpec`] strings, and the solver
+//!   [`api::registry`]. New callers should go through this module.
 
 pub mod adaptive;
+pub mod api;
 pub mod cg;
 pub mod direct;
 pub mod dual;
@@ -21,6 +25,8 @@ pub mod ihs;
 pub mod path;
 pub mod pcg;
 pub mod woodbury;
+
+pub use api::{registry, Solver, SolverSpec};
 
 use crate::linalg::{axpy, dot, norm2, Matrix};
 

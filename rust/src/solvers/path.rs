@@ -5,38 +5,15 @@
 //! paper argues is the practically relevant one (model selection /
 //! inverse problems). Every solver runs the same protocol so cumulative
 //! times are comparable.
+//!
+//! Solvers are named by [`SolverSpec`] — the same spec strings the CLI,
+//! the coordinator and the bench harness use — and dispatched through the
+//! unified [`Solver`](crate::solvers::api::Solver) trait; there is no
+//! path-specific solver enumeration.
 
-use super::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
-use super::cg::{self, CgConfig};
-use super::pcg::{self, PcgConfig};
-use super::{direct, RidgeProblem, SolveReport, StopRule};
+use super::api::{Solver as _, SolverSpec};
+use super::{RidgeProblem, SolveReport};
 use crate::linalg::Matrix;
-use crate::rng::Xoshiro256;
-use crate::sketch::SketchKind;
-
-/// Which algorithm runs the path.
-#[derive(Clone, Debug, PartialEq)]
-pub enum PathSolver {
-    Cg,
-    Pcg { kind: SketchKind, rho: f64 },
-    Adaptive { kind: SketchKind, variant: AdaptiveVariant },
-}
-
-impl PathSolver {
-    pub fn label(&self) -> String {
-        match self {
-            PathSolver::Cg => "cg".into(),
-            PathSolver::Pcg { kind, .. } => format!("pcg-{kind}"),
-            PathSolver::Adaptive { kind, variant } => format!(
-                "adaptive-{}-{kind}",
-                match variant {
-                    AdaptiveVariant::PolyakFirst => "polyak",
-                    AdaptiveVariant::GradientOnly => "gd",
-                }
-            ),
-        }
-    }
-}
 
 /// Result of one path point.
 #[derive(Clone, Debug)]
@@ -50,6 +27,7 @@ pub struct PathPoint {
 /// Full path result.
 #[derive(Clone, Debug)]
 pub struct PathResult {
+    /// Canonical spec string of the solver that ran the path.
     pub solver: String,
     pub points: Vec<PathPoint>,
 }
@@ -67,19 +45,22 @@ impl PathResult {
 /// Run a regularization path on `(a, b)` over `nus` (must be decreasing) to
 /// relative precision `eps` per point (measured against the exact solution,
 /// as in the paper's figures).
+///
+/// Randomized solvers draw independent sketches per path point
+/// (`seed + i`); warm starts carry the previous solution into solvers
+/// whose spec [`supports_warm_start`](crate::solvers::api::Solver::supports_warm_start).
 pub fn run_path(
     a: &Matrix,
     b: &[f64],
     nus: &[f64],
     eps: f64,
-    solver: &PathSolver,
+    spec: &SolverSpec,
     seed: u64,
 ) -> PathResult {
     assert!(!nus.is_empty());
     for w in nus.windows(2) {
         assert!(w[0] > w[1], "nu sequence must be strictly decreasing");
     }
-    let mut rng = Xoshiro256::seed_from_u64(seed);
     let d = a.cols();
     let mut x = vec![0.0; d];
     let mut points = Vec::with_capacity(nus.len());
@@ -88,35 +69,28 @@ pub fn run_path(
     for (i, &nu) in nus.iter().enumerate() {
         let problem = RidgeProblem::new(a.clone(), b.to_vec(), nu);
         // Oracle for the stop rule: exact solution at this nu (excluded
-        // from timing — the paper measures solver time only).
-        let x_star = direct::solve(&problem);
-        let stop = StopRule::TrueError { x_star, eps };
+        // from timing — the paper measures solver time only; dual specs
+        // substitute their own dual-space oracle).
+        let stop = spec.true_error_stop(&problem, eps);
 
-        let solution = match solver {
-            PathSolver::Cg => cg::solve(&problem, &x, &CgConfig { max_iters: 100_000, stop }),
-            PathSolver::Pcg { kind, rho } => {
-                let cfg = PcgConfig::new(*kind, *rho, stop);
-                pcg::solve(&problem, &x, &cfg, &mut rng)
-            }
-            PathSolver::Adaptive { kind, variant } => {
-                let mut cfg = AdaptiveConfig::new(*kind, stop);
-                cfg.variant = *variant;
-                adaptive::solve(&problem, &x, &cfg, seed.wrapping_add(i as u64))
-            }
-        };
+        let solver = spec.build(seed.wrapping_add(i as u64));
+        let x0 = if solver.supports_warm_start() { x.clone() } else { vec![0.0; d] };
+        let solution = solver.solve(&problem, &x0, &stop);
 
         cumulative += solution.report.wall_time_s;
         points.push(PathPoint { nu, report: solution.report, cumulative_time_s: cumulative });
         x = solution.x;
     }
 
-    PathResult { solver: solver.label(), points }
+    PathResult { solver: spec.to_string(), points }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::sketch::SketchKind;
+    use crate::solvers::adaptive::AdaptiveVariant;
 
     fn small_path_data() -> (Matrix, Vec<f64>) {
         let ds = synthetic::exponential_decay(256, 32, 1);
@@ -127,7 +101,7 @@ mod tests {
     fn cg_path_converges_everywhere() {
         let (a, b) = small_path_data();
         let nus = [1.0, 0.1, 0.01];
-        let res = run_path(&a, &b, &nus, 1e-8, &PathSolver::Cg, 1);
+        let res = run_path(&a, &b, &nus, 1e-8, &SolverSpec::Cg, 1);
         assert_eq!(res.points.len(), 3);
         assert!(res.points.iter().all(|p| p.report.converged));
     }
@@ -136,11 +110,11 @@ mod tests {
     fn adaptive_path_converges_and_reuses_growth() {
         let (a, b) = small_path_data();
         let nus = [1.0, 0.1, 0.01];
-        let solver = PathSolver::Adaptive {
+        let spec = SolverSpec::Adaptive {
             kind: SketchKind::Gaussian,
             variant: AdaptiveVariant::PolyakFirst,
         };
-        let res = run_path(&a, &b, &nus, 1e-8, &solver, 2);
+        let res = run_path(&a, &b, &nus, 1e-8, &spec, 2);
         assert!(res.points.iter().all(|p| p.report.converged));
         // d_e grows as nu shrinks: peak m should be nondecreasing in i
         // *typically*; at minimum the final point must have m >= 1.
@@ -151,7 +125,7 @@ mod tests {
     fn cumulative_time_monotone() {
         let (a, b) = small_path_data();
         let nus = [10.0, 1.0, 0.1];
-        let res = run_path(&a, &b, &nus, 1e-6, &PathSolver::Cg, 3);
+        let res = run_path(&a, &b, &nus, 1e-6, &SolverSpec::Cg, 3);
         for w in res.points.windows(2) {
             assert!(w[1].cumulative_time_s >= w[0].cumulative_time_s);
         }
@@ -162,25 +136,43 @@ mod tests {
     #[should_panic(expected = "strictly decreasing")]
     fn rejects_unsorted_path() {
         let (a, b) = small_path_data();
-        run_path(&a, &b, &[0.1, 1.0], 1e-6, &PathSolver::Cg, 4);
+        run_path(&a, &b, &[0.1, 1.0], 1e-6, &SolverSpec::Cg, 4);
     }
 
     #[test]
     fn pcg_path_converges() {
         let (a, b) = small_path_data();
         let nus = [1.0, 0.1];
-        let solver = PathSolver::Pcg { kind: SketchKind::Srht, rho: 0.5 };
-        let res = run_path(&a, &b, &nus, 1e-8, &solver, 5);
+        let spec: SolverSpec = "pcg-srht".parse().unwrap();
+        let res = run_path(&a, &b, &nus, 1e-8, &spec, 5);
         assert!(res.points.iter().all(|p| p.report.converged));
     }
 
     #[test]
-    fn labels_stable() {
-        assert_eq!(PathSolver::Cg.label(), "cg");
-        let s = PathSolver::Adaptive {
-            kind: SketchKind::Srht,
-            variant: AdaptiveVariant::GradientOnly,
-        };
-        assert_eq!(s.label(), "adaptive-gd-srht");
+    fn any_registry_spec_runs_a_path() {
+        // The path driver must accept every solver the registry exposes
+        // that applies to overdetermined data (i.e. all but the dual).
+        let (a, b) = small_path_data();
+        let nus = [10.0, 1.0];
+        for spec in crate::solvers::api::registry() {
+            if matches!(spec, SolverSpec::DualAdaptive { .. }) {
+                continue;
+            }
+            let res = run_path(&a, &b, &nus, 1e-6, &spec, 6);
+            assert!(
+                res.points.iter().all(|p| p.report.converged),
+                "{spec} failed on the path"
+            );
+            assert_eq!(res.solver, spec.to_string());
+        }
+    }
+
+    #[test]
+    fn labels_are_spec_strings() {
+        let (a, b) = small_path_data();
+        let spec: SolverSpec = "adaptive-gd-srht".parse().unwrap();
+        let res = run_path(&a, &b, &[1.0], 1e-6, &spec, 7);
+        assert_eq!(res.solver, "adaptive-gd-srht");
+        assert_eq!(res.points[0].report.solver, "adaptive-gd-srht");
     }
 }

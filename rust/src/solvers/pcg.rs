@@ -16,11 +16,11 @@ use crate::rng::Xoshiro256;
 use crate::sketch::{self, SketchKind};
 use std::time::Instant;
 
-/// pCG configuration.
+/// pCG configuration. Stop rule and seed are per-solve arguments of the
+/// unified [`crate::solvers::api::Solver`] call.
 #[derive(Clone, Debug)]
 pub struct PcgConfig {
     pub max_iters: usize,
-    pub stop: StopRule,
     pub kind: SketchKind,
     /// Aspect-ratio parameter `rho`; the preconditioner sketch size is
     /// `d/rho` (Gaussian) or `d log d / rho` (SRHT), capped at `n`.
@@ -28,8 +28,8 @@ pub struct PcgConfig {
 }
 
 impl PcgConfig {
-    pub fn new(kind: SketchKind, rho: f64, stop: StopRule) -> Self {
-        Self { max_iters: 10_000, stop, kind, rho }
+    pub fn new(kind: SketchKind, rho: f64) -> Self {
+        Self { max_iters: 10_000, kind, rho }
     }
 }
 
@@ -43,17 +43,24 @@ pub fn pcg_sketch_size(kind: SketchKind, n: usize, d: usize, rho: f64) -> usize 
     (m.ceil() as usize).clamp(d, n.max(d))
 }
 
-/// Run pCG from `x0`.
-pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &PcgConfig, rng: &mut Xoshiro256) -> Solution {
+/// Run pCG from `x0`; the preconditioner sketch is drawn from `seed`.
+pub fn solve(
+    problem: &RidgeProblem,
+    x0: &[f64],
+    config: &PcgConfig,
+    stop: &StopRule,
+    seed: u64,
+) -> Solution {
     let start = Instant::now();
     let (n, d) = (problem.n(), problem.d());
     assert_eq!(x0.len(), d);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
     let mut report = SolveReport::new(format!("pcg-{}", config.kind));
 
     // --- Sketch ---
     let m = pcg_sketch_size(config.kind, n, d, config.rho);
     let t0 = Instant::now();
-    let s = sketch::sample(config.kind, m, n, rng);
+    let s = sketch::sample(config.kind, m, n, &mut rng);
     let sa = s.apply(&problem.a);
     report.sketch_time_s = t0.elapsed().as_secs_f64();
     report.final_m = m;
@@ -78,10 +85,14 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &PcgConfig, rng: &mut X
     let mut res = problem.gradient(&x);
     crate::linalg::scale(-1.0, &mut res);
     let g0_norm = norm2(&res);
-    let delta0 = match &config.stop {
+    let delta0 = match stop {
         StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
         _ => 0.0,
     };
+    if matches!(stop, StopRule::TrueError { .. }) {
+        // Shared trace convention: entry t is delta_t / delta_0.
+        report.error_trace.push(1.0);
+    }
 
     let apply_pinv = |v: &[f64]| -> Vec<f64> {
         // P^{-1} v = R^{-1} R^{-T} v.
@@ -104,7 +115,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &PcgConfig, rng: &mut X
         axpy(-alpha, &hp, &mut res);
         report.iterations = t + 1;
 
-        let stop_now = match &config.stop {
+        let stop_now = match stop {
             StopRule::TrueError { x_star, eps } => {
                 let delta = problem.prediction_error(&x, x_star);
                 report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
@@ -126,7 +137,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &PcgConfig, rng: &mut X
         rz_old = rz_new;
     }
 
-    if let StopRule::TrueError { x_star, eps } = &config.stop {
+    if let StopRule::TrueError { x_star, eps } = stop {
         let delta = problem.prediction_error(&x, x_star);
         report.final_rel_error = Some(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
         if delta0 > 0.0 && delta <= eps * delta0 {
@@ -149,13 +160,9 @@ mod tests {
     fn converges_to_direct_solution() {
         let p = small_problem(256, 16, 0.3, 1);
         let x_star = direct::solve(&p);
-        let mut rng = Xoshiro256::seed_from_u64(1);
-        let cfg = PcgConfig::new(
-            SketchKind::Srht,
-            0.5,
-            StopRule::TrueError { x_star: x_star.clone(), eps: 1e-10 },
-        );
-        let sol = solve(&p, &vec![0.0; 16], &cfg, &mut rng);
+        let cfg = PcgConfig::new(SketchKind::Srht, 0.5);
+        let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-10 };
+        let sol = solve(&p, &vec![0.0; 16], &cfg, &stop, 1);
         assert!(sol.report.converged, "pcg failed to converge");
         assert!(sol.report.final_rel_error.unwrap() <= 1e-10);
     }
@@ -165,10 +172,9 @@ mod tests {
         let p = small_problem(512, 64, 1e-3, 2);
         let x_star = direct::solve(&p);
         let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-10 };
-        let cg_sol = cg::solve(&p, &vec![0.0; 64], &CgConfig { max_iters: 5000, stop: stop.clone() });
-        let mut rng = Xoshiro256::seed_from_u64(3);
-        let pcg_cfg = PcgConfig::new(SketchKind::Srht, 0.5, stop);
-        let pcg_sol = solve(&p, &vec![0.0; 64], &pcg_cfg, &mut rng);
+        let cg_sol = cg::solve(&p, &vec![0.0; 64], &CgConfig { max_iters: 5000 }, &stop);
+        let pcg_cfg = PcgConfig::new(SketchKind::Srht, 0.5);
+        let pcg_sol = solve(&p, &vec![0.0; 64], &pcg_cfg, &stop, 3);
         assert!(
             pcg_sol.report.iterations < cg_sol.report.iterations,
             "pcg {} vs cg {}",
@@ -190,24 +196,30 @@ mod tests {
     fn gaussian_preconditioner_also_works() {
         let p = small_problem(256, 32, 0.1, 4);
         let x_star = direct::solve(&p);
-        let mut rng = Xoshiro256::seed_from_u64(5);
-        let cfg = PcgConfig::new(
-            SketchKind::Gaussian,
-            0.5,
-            StopRule::TrueError { x_star, eps: 1e-9 },
-        );
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &mut rng);
+        let cfg = PcgConfig::new(SketchKind::Gaussian, 0.5);
+        let stop = StopRule::TrueError { x_star, eps: 1e-9 };
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop, 5);
         assert!(sol.report.converged);
     }
 
     #[test]
     fn reports_time_breakdown() {
         let p = small_problem(128, 16, 0.5, 6);
-        let mut rng = Xoshiro256::seed_from_u64(7);
-        let cfg = PcgConfig::new(SketchKind::Srht, 0.5, StopRule::GradientNorm { tol: 1e-10 });
-        let sol = solve(&p, &vec![0.0; 16], &cfg, &mut rng);
+        let cfg = PcgConfig::new(SketchKind::Srht, 0.5);
+        let stop = StopRule::GradientNorm { tol: 1e-10 };
+        let sol = solve(&p, &vec![0.0; 16], &cfg, &stop, 7);
         let r = &sol.report;
         assert!(r.sketch_time_s >= 0.0 && r.factor_time_s > 0.0 && r.wall_time_s > 0.0);
         assert!(r.final_m >= 16);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = small_problem(128, 16, 0.5, 7);
+        let cfg = PcgConfig::new(SketchKind::Gaussian, 0.5);
+        let stop = StopRule::GradientNorm { tol: 1e-10 };
+        let a = solve(&p, &vec![0.0; 16], &cfg, &stop, 11);
+        let b = solve(&p, &vec![0.0; 16], &cfg, &stop, 11);
+        assert_eq!(a.x, b.x);
     }
 }

@@ -2,7 +2,8 @@
 //! has no proptest). Each property is checked over many randomized cases
 //! drawn from a seeded RNG; failures print the case for reproduction.
 
-use effdim::coordinator::job::{JobSpec, SolverChoice, Workload};
+use effdim::coordinator::job::{JobSpec, Workload};
+use effdim::solvers::SolverSpec;
 use effdim::coordinator::scheduler::Scheduler;
 use effdim::linalg::cholesky::Cholesky;
 use effdim::linalg::{norm2, Matrix};
@@ -149,8 +150,9 @@ fn prop_adaptive_m_monotone_and_bounded() {
         let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
         let x_star = direct::solve(&p);
         let kind = if case % 2 == 0 { SketchKind::Gaussian } else { SketchKind::Srht };
-        let cfg = AdaptiveConfig::new(kind, StopRule::TrueError { x_star, eps: 1e-8 });
-        let sol = adaptive::solve(&p, &vec![0.0; d], &cfg, 0xabc + case);
+        let cfg = AdaptiveConfig::new(kind);
+        let stop = StopRule::TrueError { x_star, eps: 1e-8 };
+        let sol = adaptive::solve(&p, &vec![0.0; d], &cfg, &stop, 0xabc + case);
         assert!(sol.report.converged, "n={n} d={d} nu={nu} {kind}");
         for w in sol.report.m_trace.windows(2) {
             assert!(w[1] >= w[0], "m must never shrink");
@@ -182,7 +184,7 @@ fn prop_scheduler_never_loses_or_duplicates_jobs() {
                     seed: case * 100 + i as u64,
                 },
                 nu: 1.0,
-                solver: SolverChoice::Cg,
+                solver: SolverSpec::Cg,
                 eps: 1e-6,
                 seed: i as u64,
                 path_nus: Vec::new(),

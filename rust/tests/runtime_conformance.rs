@@ -66,8 +66,8 @@ fn adaptive_solve_with_xla_gradient_converges() {
     let x_star = direct::solve(&problem);
     // f32 artifact: target a tolerance above the mixed-precision floor.
     let stop = StopRule::TrueError { x_star, eps: 1e-5 };
-    let cfg = AdaptiveConfig::new(SketchKind::Srht, stop);
-    let mut solver = AdaptiveSolver::new(&problem, &vec![0.0; problem.d()], cfg, 7);
+    let cfg = AdaptiveConfig::new(SketchKind::Srht);
+    let mut solver = AdaptiveSolver::new(&problem, &vec![0.0; problem.d()], cfg, stop, 7);
     solver.set_gradient_fn(|x| oracle.gradient(x));
     let sol = solver.run();
     assert!(

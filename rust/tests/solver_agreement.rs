@@ -1,15 +1,20 @@
 //! Integration: every solver in the stack agrees with the direct solution
 //! on shared problems, including across embeddings and the dual path.
+//!
+//! The first two tests iterate the [`effdim::solvers::registry`]: every
+//! spec the library advertises must round-trip through its string form
+//! and converge to the direct solution through the unified
+//! [`Solver`](effdim::solvers::Solver) dispatch — there is no separate
+//! per-solver plumbing to keep in sync.
 
 use effdim::data::synthetic;
 use effdim::linalg::norm2;
-use effdim::rng::Xoshiro256;
 use effdim::sketch::SketchKind;
 use effdim::solvers::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
 use effdim::solvers::cg::{self, CgConfig};
 use effdim::solvers::dual::{dual_stop, solve_direct, DualRidge};
 use effdim::solvers::pcg::{self, PcgConfig};
-use effdim::solvers::{direct, RidgeProblem, StopRule};
+use effdim::solvers::{direct, registry, RidgeProblem, Solver as _, SolverSpec, StopRule};
 
 fn rel_err(x: &[f64], x_star: &[f64]) -> f64 {
     let mut diff = x.to_vec();
@@ -17,6 +22,48 @@ fn rel_err(x: &[f64], x_star: &[f64]) -> f64 {
         diff[i] -= x_star[i];
     }
     norm2(&diff) / norm2(x_star).max(1e-300)
+}
+
+#[test]
+fn spec_strings_roundtrip_for_every_registry_entry() {
+    for spec in registry() {
+        let s = spec.to_string();
+        let back: SolverSpec = s.parse().unwrap_or_else(|e| panic!("parse {s:?}: {e}"));
+        assert_eq!(back, spec, "Display/FromStr round-trip broke for {s:?}");
+        // The built solver's label is the spec string itself.
+        assert_eq!(spec.build(1).label(), s);
+    }
+}
+
+#[test]
+fn every_registry_solver_agrees_with_direct() {
+    // Square problem (n = d) so the dual reduction applies alongside the
+    // overdetermined solvers; nu = 1.0 keeps d_e small, the regime every
+    // family handles.
+    let ds = synthetic::exponential_decay(64, 64, 1);
+    let nu = 1.0;
+    let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
+    let x_star = direct::solve(&p);
+    let stop = StopRule::TrueError { x_star: x_star.clone(), eps: 1e-8 };
+    let x0 = vec![0.0; p.d()];
+
+    for spec in registry() {
+        let solver = spec.build(3);
+        let sol = solver.solve(&p, &x0, &stop);
+        assert!(
+            sol.report.converged,
+            "{spec} did not converge (rel {:?})",
+            sol.report.final_rel_error
+        );
+        assert_eq!(sol.report.solver, spec.to_string(), "label drift for {spec}");
+        // The paper's criterion is the prediction norm; the x-space
+        // translation is weaker by the conditioning, so check loosely.
+        assert!(
+            rel_err(&sol.x, &x_star) < 1e-2,
+            "{spec} x-space error {}",
+            rel_err(&sol.x, &x_star)
+        );
+    }
 }
 
 #[test]
@@ -31,20 +78,19 @@ fn all_solvers_agree_on_mnist_like() {
     // The paper's criterion is the prediction norm delta_t/delta_0; the
     // x-space translation is weaker by the conditioning (sigma_1/nu ~ 80
     // here), so check delta-convergence exactly and x-space loosely.
-    let cg_sol = cg::solve(&p, &x0, &CgConfig { max_iters: 50_000, stop: stop.clone() });
+    let cg_sol = cg::solve(&p, &x0, &CgConfig { max_iters: 50_000 }, &stop);
     assert!(cg_sol.report.converged && cg_sol.report.final_rel_error.unwrap() <= 1e-10, "cg");
     assert!(rel_err(&cg_sol.x, &x_star) < 1e-2, "cg x-space");
 
-    let mut rng = Xoshiro256::seed_from_u64(2);
-    let pcg_sol = pcg::solve(&p, &x0, &PcgConfig::new(SketchKind::Srht, 0.5, stop.clone()), &mut rng);
+    let pcg_sol = pcg::solve(&p, &x0, &PcgConfig::new(SketchKind::Srht, 0.5), &stop, 2);
     assert!(pcg_sol.report.converged, "pcg");
     assert!(rel_err(&pcg_sol.x, &x_star) < 1e-2, "pcg x-space");
 
     for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
         for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
-            let mut cfg = AdaptiveConfig::new(kind, stop.clone());
+            let mut cfg = AdaptiveConfig::new(kind);
             cfg.variant = variant;
-            let sol = adaptive::solve(&p, &x0, &cfg, 3);
+            let sol = adaptive::solve(&p, &x0, &cfg, &stop, 3);
             assert!(
                 sol.report.converged && rel_err(&sol.x, &x_star) < 1e-2,
                 "adaptive {kind} {variant:?}: rel {}",
@@ -60,17 +106,28 @@ fn primal_and_dual_agree_on_square_ish_problem() {
     // with the primal direct solve applied to the transpose formulation.
     let base = synthetic::exponential_decay(128, 32, 4);
     let a_wide = base.a.transpose(); // 32 x 128
-    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut rng = effdim::rng::Xoshiro256::seed_from_u64(5);
     let mut b = vec![0.0; 32];
     rng.fill_gaussian(&mut b, 1.0);
     let nu = 0.7;
 
     let x_exact = solve_direct(&a_wide, &b, nu);
+
+    // Low-level dual API...
     let dr = DualRidge::new(a_wide.clone(), b.clone(), nu);
-    let cfg = AdaptiveConfig::new(SketchKind::Gaussian, dual_stop(&dr.dual, 1e-12));
-    let sol = dr.solve_adaptive(&cfg, 6);
+    let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+    let sol = dr.solve_adaptive(&cfg, &dual_stop(&dr.dual, 1e-12), 6);
     assert!(sol.report.converged);
     assert!(rel_err(&sol.x, &x_exact) < 1e-4);
+
+    // ...and the same through the unified spec dispatch.
+    let p_wide = RidgeProblem::new(a_wide, b, nu);
+    let spec: SolverSpec = "dual-adaptive-gaussian".parse().unwrap();
+    let stop = StopRule::TrueError { x_star: x_exact.clone(), eps: 1e-12 };
+    let sol2 = spec.build(6).solve(&p_wide, &vec![0.0; p_wide.d()], &stop);
+    assert!(sol2.report.converged);
+    assert_eq!(sol2.report.solver, "dual-adaptive-gaussian");
+    assert!(rel_err(&sol2.x, &x_exact) < 1e-4);
 }
 
 #[test]
@@ -98,15 +155,18 @@ fn adaptive_rate_matches_theorem_6_envelope() {
     let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
     let x_star = direct::solve(&p);
     let stop = StopRule::TrueError { x_star, eps: 1e-12 };
-    let cfg = AdaptiveConfig::new(SketchKind::Srht, stop);
-    let sol = adaptive::solve(&p, &vec![0.0; 32], &cfg, 9);
+    let cfg = AdaptiveConfig::new(SketchKind::Srht);
+    let sol = adaptive::solve(&p, &vec![0.0; 32], &cfg, &stop, 9);
     let c_gd = cfg.params().c_gd;
     let prefactor = effdim::theory::bounds::srht_error_prefactor(ds.sigma[0], nu);
-    for (i, rel) in sol.report.error_trace.iter().enumerate() {
-        let envelope = prefactor * c_gd.powi(i as i32);
+    // Trace convention: entry 0 is the trivial 1.0 starting point; entry
+    // t >= 1 is delta_t / delta_0, bounded by prefactor * c_gd^(t-1).
+    assert_eq!(sol.report.error_trace[0], 1.0);
+    for (t, rel) in sol.report.error_trace.iter().enumerate().skip(1) {
+        let envelope = prefactor * c_gd.powi(t as i32 - 1);
         assert!(
             *rel <= envelope.max(1e-12) * 1.001,
-            "iteration {i}: rel {rel} above Theorem-6 envelope {envelope}"
+            "iteration {t}: rel {rel} above Theorem-6 envelope {envelope}"
         );
     }
 }
