@@ -84,6 +84,7 @@ fn main() {
         eps: 1e-8,
         seed: 505,
         path_nus: Vec::new(),
+        threads: None,
     };
     let outcome = execute(&spec).expect("coordinator job");
     report("coordinator job (adaptive-gd-srht)", &outcome.report);

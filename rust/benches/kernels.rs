@@ -1,75 +1,311 @@
-//! Microbenchmarks of the native hot-path kernels (the §Perf targets):
-//! blocked GEMM, FWHT, ridge gradient, Woodbury factor + apply.
+//! Microbenchmarks of the native hot-path kernels, covering the §Perf
+//! targets (EXPERIMENTS.md): blocked GEMM (single- vs multi-threaded),
+//! FWHT, sketch apply, *incremental sketch growth* vs from-scratch
+//! resampling, Woodbury factor growth, ridge gradient, and the CountSketch
+//! CSR fast path.
+//!
+//! Emits `BENCH_kernels.json` at the repository root (falling back to the
+//! working directory) so the perf trajectory of the incremental-growth and
+//! parallel-kernel work is recorded run over run. Key derived ratios:
+//!
+//! * `gemm_parallel_speedup_*` — multi-threaded over single-threaded GEMM;
+//! * `srht_grow_speedup_*` / `gaussian_grow_speedup_*` — per-growth sketch
+//!   time of the cached engine path over from-scratch resample+apply at
+//!   the same target size (the adaptive solver's rejection-round cost);
+//! * `woodbury_grow_speedup_*` — incremental factor growth over a full
+//!   rebuild.
 
 use effdim::bench_harness::bench;
-use effdim::linalg::Matrix;
+use effdim::linalg::sparse::CsrMatrix;
+use effdim::linalg::{threads, Matrix};
 use effdim::rng::Xoshiro256;
+use effdim::sketch::engine::SketchEngine;
 use effdim::sketch::srht::fwht_rows;
-use effdim::sketch::{gaussian::GaussianSketch, srht::SrhtSketch, Sketch};
+use effdim::sketch::{gaussian::GaussianSketch, sparse::SparseSketch, srht::SrhtSketch, Sketch, SketchKind};
 use effdim::solvers::woodbury::WoodburyCache;
 use effdim::solvers::RidgeProblem;
+use effdim::util::json::Json;
+use effdim::util::stats::summarize;
+use std::time::Instant;
+
+/// One benchmark case destined for the JSON report.
+struct Case {
+    name: String,
+    n: usize,
+    d: usize,
+    m: usize,
+    threads: usize,
+    mean_s: f64,
+    min_s: f64,
+}
+
+impl Case {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.clone())),
+            ("n", Json::from(self.n)),
+            ("d", Json::from(self.d)),
+            ("m", Json::from(self.m)),
+            ("threads", Json::from(self.threads)),
+            ("mean_s", Json::from(self.mean_s)),
+            ("min_s", Json::from(self.min_s)),
+        ])
+    }
+}
+
+/// Time `f` (after one warmup) and record a case.
+fn timed(
+    cases: &mut Vec<Case>,
+    name: &str,
+    (n, d, m): (usize, usize, usize),
+    thread_count: usize,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> f64 {
+    let mut run = || {
+        std::hint::black_box(f());
+    };
+    run(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        run();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let s = summarize(&times);
+    println!(
+        "{name:<44} {:>10.3} ms (min {:>10.3} ms, n={n}, d={d}, m={m}, threads={thread_count})",
+        s.mean * 1e3,
+        s.min * 1e3
+    );
+    cases.push(Case {
+        name: name.into(),
+        n,
+        d,
+        m,
+        threads: thread_count,
+        mean_s: s.mean,
+        min_s: s.min,
+    });
+    s.mean
+}
 
 fn main() {
-    let mut rng = Xoshiro256::seed_from_u64(1);
-    let (n, d, m) = (2048usize, 256usize, 128usize);
-    let a = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
-    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
-    let problem = RidgeProblem::new(a.clone(), b, 0.5);
-    let x: Vec<f64> = (0..d).map(|i| (i as f64 * 0.02).cos()).collect();
+    let default_threads = threads::current();
+    println!("native kernel benches (default threads = {default_threads})\n");
 
-    println!("native kernel benches (n={n}, d={d}, m={m})\n");
+    let mut cases: Vec<Case> = Vec::new();
+    let mut derived: Vec<(String, Json)> = Vec::new();
 
-    // GEMM flops: 2 m n d.
-    let gs = GaussianSketch::sample(m, n, &mut rng);
-    let r = bench("gaussian sketch S*A (GEMM)", 1, 5, || gs.apply(&a));
-    let gflops = 2.0 * (m * n * d) as f64 / r.summary.mean / 1e9;
-    println!("{}   [{:.2} GFLOP/s]", r.report_line(), gflops);
+    for &(n, d) in &[(1024usize, 128usize), (4096, 256), (8192, 256)] {
+        let m = d / 2; // adaptive regime: m <= d
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
+        println!("--- n = {n}, d = {d}, m = {m} ---");
 
-    let hs = SrhtSketch::sample(m, n, &mut rng);
-    let r = bench("SRHT sketch S*A (FWHT path)", 1, 5, || hs.apply(&a));
-    println!("{}", r.report_line());
-
-    let mut work = Matrix::from_fn(n, d, |_, _| 1.0);
-    let r = bench("FWHT rows (2048 x 256)", 1, 5, || fwht_rows(&mut work));
-    let fwht_flops = (n as f64) * (n as f64).log2() * d as f64;
-    println!("{}   [{:.2} GFLOP/s]", r.report_line(), fwht_flops / r.summary.mean / 1e9);
-
-    let r = bench("ridge gradient A^T(Ax-b)+nu^2 x", 2, 10, || problem.gradient(&x));
-    let grad_flops = 4.0 * (n * d) as f64;
-    println!("{}   [{:.2} GFLOP/s]", r.report_line(), grad_flops / r.summary.mean / 1e9);
-
-    let sa = gs.apply(&a);
-    let r = bench("woodbury factor (m x m chol)", 1, 5, || WoodburyCache::new(sa.clone(), 0.5));
-    println!("{}", r.report_line());
-
-    let cache = WoodburyCache::new(sa, 0.5);
-    let g = problem.gradient(&x);
-    let r = bench("woodbury apply H_S^-1 g", 2, 20, || cache.apply_inverse(&g));
-    println!("{}", r.report_line());
-
-    // Remark 4.1 fast path: O(nnz) CountSketch on CSR data. Time should
-    // scale with density, not with n*d.
-    use effdim::linalg::sparse::CsrMatrix;
-    use effdim::sketch::sparse::SparseSketch;
-    println!();
-    let mut prev = f64::INFINITY;
-    for density in [0.01, 0.1, 1.0] {
-        let dense = Matrix::from_fn(n, d, |_, _| {
-            if rng.next_f64() < density { rng.next_gaussian() } else { 0.0 }
+        // GEMM (gaussian sketch apply): single- vs multi-threaded.
+        let gs = GaussianSketch::sample(m, n, &mut rng);
+        let t1 = timed(&mut cases, "gemm S*A", (n, d, m), 1, 3, || {
+            threads::with_threads(1, || std::hint::black_box(gs.apply(&a)));
         });
-        let csr = CsrMatrix::from_dense(&dense);
-        let cs = SparseSketch::sample(m, n, &mut rng);
-        let r = bench(
-            &format!("countsketch CSR apply (density {density})"),
-            1,
-            5,
-            || cs.apply_csr(&csr),
-        );
-        println!("{}   [nnz = {}]", r.report_line(), csr.nnz());
-        if density <= 0.1 {
-            prev = r.summary.mean;
-        } else {
-            assert!(prev < r.summary.mean, "O(nnz): sparser must be faster");
+        let tp = timed(&mut cases, "gemm S*A parallel", (n, d, m), default_threads, 3, || {
+            std::hint::black_box(gs.apply(&a));
+        });
+        derived.push((format!("gemm_parallel_speedup_n{n}"), Json::from(t1 / tp)));
+        println!("    gemm parallel speedup: {:.2}x", t1 / tp);
+
+        // FWHT over the padded row dimension.
+        let mut work = Matrix::from_fn(n, d, |_, _| 1.0);
+        timed(&mut cases, "fwht rows", (n, d, 0), default_threads, 3, || {
+            fwht_rows(std::hint::black_box(&mut work));
+        });
+
+        // SRHT resample + apply from scratch (what a non-incremental
+        // growth pays: a fresh FWHT over all of A).
+        let t_scratch = timed(&mut cases, "srht resample+apply (scratch)", (n, d, m), default_threads, 3, || {
+            let mut srng = Xoshiro256::seed_from_u64(17);
+            let hs = SrhtSketch::sample(m, n, &mut srng);
+            std::hint::black_box(hs.apply(&a));
+        });
+
+        // SRHT growth m/2 -> m through the cached engine: per-growth cost
+        // is row selection only. Engines are rebuilt outside the timer.
+        let t_grow = {
+            let mut times = Vec::new();
+            for i in 0..5 {
+                let mut erng = Xoshiro256::seed_from_u64(10 + i);
+                let mut engine = SketchEngine::new(SketchKind::Srht, m / 2, &a, &mut erng);
+                let t0 = Instant::now();
+                std::hint::black_box(engine.grow(m, &a, &mut erng));
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let s = summarize(&times);
+            println!(
+                "{:<44} {:>10.3} ms (min {:>10.3} ms)",
+                "srht grow m/2 -> m (cached)",
+                s.mean * 1e3,
+                s.min * 1e3
+            );
+            cases.push(Case {
+                name: "srht grow m/2 -> m (cached)".into(),
+                n,
+                d,
+                m,
+                threads: default_threads,
+                mean_s: s.mean,
+                min_s: s.min,
+            });
+            s.mean
+        };
+        derived.push((format!("srht_grow_speedup_n{n}"), Json::from(t_scratch / t_grow)));
+        println!("    srht cached-growth speedup vs scratch: {:.1}x", t_scratch / t_grow);
+
+        // Gaussian growth m/2 -> m: pays only the appended-row GEMM.
+        let t_gauss_scratch = timed(&mut cases, "gaussian resample+apply (scratch)", (n, d, m), default_threads, 3, || {
+            let mut srng = Xoshiro256::seed_from_u64(33);
+            let s = GaussianSketch::sample(m, n, &mut srng);
+            std::hint::black_box(s.apply(&a));
+        });
+        let t_gauss_grow = {
+            let mut times = Vec::new();
+            for i in 0..3 {
+                let mut erng = Xoshiro256::seed_from_u64(20 + i);
+                let mut engine = SketchEngine::new(SketchKind::Gaussian, m / 2, &a, &mut erng);
+                let t0 = Instant::now();
+                std::hint::black_box(engine.grow(m, &a, &mut erng));
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let s = summarize(&times);
+            cases.push(Case {
+                name: "gaussian grow m/2 -> m (cached)".into(),
+                n,
+                d,
+                m,
+                threads: default_threads,
+                mean_s: s.mean,
+                min_s: s.min,
+            });
+            println!(
+                "{:<44} {:>10.3} ms",
+                "gaussian grow m/2 -> m (cached)",
+                s.mean * 1e3
+            );
+            s.mean
+        };
+        derived.push((
+            format!("gaussian_grow_speedup_n{n}"),
+            Json::from(t_gauss_scratch / t_gauss_grow),
+        ));
+
+        // Woodbury factor growth vs full rebuild at the same final size.
+        let mut erng = Xoshiro256::seed_from_u64(44);
+        let engine_full = SketchEngine::new(SketchKind::Gaussian, m, &a, &mut erng);
+        let sa_full = engine_full.sa_unnormalized().clone();
+        let half_rows = Matrix::from_fn(m / 2, d, |i, j| sa_full.get(i, j));
+        let new_rows = Matrix::from_fn(m - m / 2, d, |i, j| sa_full.get(m / 2 + i, j));
+        let scale_half = 1.0 / ((m / 2) as f64).sqrt();
+        let scale_full = 1.0 / (m as f64).sqrt();
+        let t_factor_full = timed(&mut cases, "woodbury factor (full rebuild)", (n, d, m), default_threads, 3, || {
+            std::hint::black_box(WoodburyCache::new_scaled(sa_full.clone(), 0.5, scale_full));
+        });
+        let t_factor_grow = {
+            let mut times = Vec::new();
+            for _ in 0..5 {
+                let mut cache = WoodburyCache::new_scaled(half_rows.clone(), 0.5, scale_half);
+                let t0 = Instant::now();
+                cache.grow(&new_rows, scale_full);
+                std::hint::black_box(&cache);
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let s = summarize(&times);
+            cases.push(Case {
+                name: "woodbury grow m/2 -> m".into(),
+                n,
+                d,
+                m,
+                threads: default_threads,
+                mean_s: s.mean,
+                min_s: s.min,
+            });
+            println!("{:<44} {:>10.3} ms", "woodbury grow m/2 -> m", s.mean * 1e3);
+            s.mean
+        };
+        derived.push((
+            format!("woodbury_grow_speedup_n{n}"),
+            Json::from(t_factor_full / t_factor_grow),
+        ));
+        println!();
+    }
+
+    // Ridge gradient (memory-bound fused kernel) at one mid size.
+    {
+        let (n, d) = (4096usize, 256usize);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+        let problem = RidgeProblem::new(a, b, 0.5);
+        let x: Vec<f64> = (0..d).map(|i| (i as f64 * 0.02).cos()).collect();
+        let r = bench("ridge gradient A^T(Ax-b)+nu^2 x", 2, 10, || problem.gradient(&x));
+        println!("{}", r.report_line());
+        cases.push(Case {
+            name: "ridge gradient".into(),
+            n,
+            d,
+            m: 0,
+            threads: 1,
+            mean_s: r.summary.mean,
+            min_s: r.summary.min,
+        });
+    }
+
+    // Remark 4.1 fast path: O(nnz) CountSketch on CSR data. Time scales
+    // with density, not with n*d.
+    {
+        let (n, d, m) = (2048usize, 256usize, 128usize);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut prev = f64::INFINITY;
+        for density in [0.01, 0.1, 1.0] {
+            let dense = Matrix::from_fn(n, d, |_, _| {
+                if rng.next_f64() < density { rng.next_gaussian() } else { 0.0 }
+            });
+            let csr = CsrMatrix::from_dense(&dense);
+            let cs = SparseSketch::sample(m, n, &mut rng);
+            let r = bench(
+                &format!("countsketch CSR apply (density {density})"),
+                1,
+                5,
+                || cs.apply_csr(&csr),
+            );
+            println!("{}   [nnz = {}]", r.report_line(), csr.nnz());
+            cases.push(Case {
+                name: format!("countsketch csr density {density}"),
+                n,
+                d,
+                m,
+                threads: 1,
+                mean_s: r.summary.mean,
+                min_s: r.summary.min,
+            });
+            if density <= 0.1 {
+                prev = r.summary.mean;
+            } else {
+                assert!(prev < r.summary.mean, "O(nnz): sparser must be faster");
+            }
         }
     }
+
+    // Emit the JSON trajectory at the repo root (benches run from rust/).
+    let out = Json::obj(vec![
+        ("generated_by", Json::from("cargo bench --bench kernels")),
+        ("threads_default", Json::from(default_threads)),
+        ("cases", Json::Arr(cases.iter().map(Case::to_json).collect())),
+        ("derived", Json::Obj(derived.into_iter().collect())),
+    ]);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_kernels.json"
+    } else {
+        "BENCH_kernels.json"
+    };
+    std::fs::write(path, out.to_string()).expect("write BENCH_kernels.json");
+    println!("\nwrote {path}");
 }

@@ -29,6 +29,15 @@ pub struct ComplexityRow {
     /// Modeled flops for forming `SA` at the peak sketch size
     /// ([`crate::sketch::sketch_cost_flops`], Theorem 7's sketch term).
     pub ada_sketch_flops: f64,
+    /// Modeled *cumulative* sketch flops if every growth re-applied `S`
+    /// from scratch (the pre-incremental behavior: one full application
+    /// per doubling along the observed schedule).
+    pub ada_sketch_flops_regrow: f64,
+    /// Modeled cumulative sketch flops down the incremental growth path
+    /// actually taken ([`crate::sketch::incremental_sketch_cost_flops`]):
+    /// FWHT once + row selection for SRHT, appended rows only for
+    /// Gaussian.
+    pub ada_sketch_flops_incremental: f64,
     // pCG decomposition.
     pub pcg_sketch_s: f64,
     pub pcg_factor_s: f64,
@@ -67,8 +76,9 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
     let ada_spec = SolverSpec::Adaptive {
         kind: SketchKind::Srht,
         variant: AdaptiveVariant::PolyakFirst,
+        threads: None,
     };
-    let pcg_spec = SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO };
+    let pcg_spec = SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO, threads: None };
     let mut rows = Vec::new();
     for &nu in nus {
         let problem = RidgeProblem::new(ds.a.clone(), ds.b.clone(), nu);
@@ -84,6 +94,16 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
         let kind = SketchKind::Srht;
         let ada_sketch_flops =
             sketch::sketch_cost_flops(kind, ada.report.peak_m, cfg.n, cfg.d, None);
+        let ada_sketch_flops_regrow =
+            cumulative_regrow_flops(kind, &ada.report, cfg.n, cfg.d, None);
+        let ada_sketch_flops_incremental = sketch::incremental_sketch_cost_flops(
+            kind,
+            ada.report.peak_m,
+            cfg.n,
+            cfg.d,
+            None,
+            ada.report.doublings,
+        );
         let pcg_sketch_flops =
             sketch::sketch_cost_flops(kind, pcg_sol.report.peak_m, cfg.n, cfg.d, None);
 
@@ -97,6 +117,8 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
             ada_total_s: ada.report.wall_time_s,
             ada_m: ada.report.peak_m,
             ada_sketch_flops,
+            ada_sketch_flops_regrow,
+            ada_sketch_flops_incremental,
             pcg_sketch_s: pcg_sol.report.sketch_time_s,
             pcg_factor_s: pcg_sol.report.factor_time_s,
             pcg_iter_s: pcg_sol.report.iter_time_s,
@@ -107,6 +129,26 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
         });
     }
     rows
+}
+
+/// Modeled cumulative sketch flops if each doubling re-applied `S` from
+/// scratch: one full application per size along the observed growth
+/// schedule `m_0 * 2^i` up to `peak_m` (the report's `doublings` fixes the
+/// schedule length).
+fn cumulative_regrow_flops(
+    kind: SketchKind,
+    report: &crate::solvers::SolveReport,
+    n: usize,
+    d: usize,
+    nnz: Option<usize>,
+) -> f64 {
+    let mut total = 0.0;
+    let mut m = report.peak_m;
+    for _ in 0..=report.doublings {
+        total += sketch::sketch_cost_flops(kind, m.max(1), n, d, nnz);
+        m /= 2;
+    }
+    total
 }
 
 /// Text table.
@@ -141,16 +183,17 @@ pub fn dump_csv(name: &str, rows: &[ComplexityRow]) -> std::io::Result<()> {
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.nu, r.d_e, r.de_over_d, r.ada_sketch_s, r.ada_factor_s, r.ada_iter_s,
-                r.ada_total_s, r.ada_m, r.ada_sketch_flops, r.pcg_sketch_s, r.pcg_factor_s,
-                r.pcg_iter_s, r.pcg_total_s, r.pcg_m, r.pcg_sketch_flops, r.adaptive_wins
+                r.ada_total_s, r.ada_m, r.ada_sketch_flops, r.ada_sketch_flops_regrow,
+                r.ada_sketch_flops_incremental, r.pcg_sketch_s, r.pcg_factor_s, r.pcg_iter_s,
+                r.pcg_total_s, r.pcg_m, r.pcg_sketch_flops, r.adaptive_wins
             )
         })
         .collect();
     write_csv(
         format!("results/{name}.csv"),
-        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,ada_sketch_flops,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,pcg_sketch_flops,adaptive_wins",
+        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,ada_sketch_flops,ada_sketch_flops_regrow,ada_sketch_flops_incremental,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,pcg_sketch_flops,adaptive_wins",
         &lines,
     )
 }
@@ -179,5 +222,24 @@ mod tests {
         // The Theorem-7 cost model must order with m (same kind, same n/d).
         assert!(r.ada_sketch_flops <= r.pcg_sketch_flops);
         assert!(r.ada_sketch_flops > 0.0);
+    }
+
+    #[test]
+    fn incremental_model_never_exceeds_regrow() {
+        let cfg = ComplexityConfig { n: 512, d: 64, eps: 1e-6, seed: 3 };
+        let rows = run(&cfg, &[1.0, 0.1]);
+        for r in &rows {
+            assert!(
+                r.ada_sketch_flops_incremental <= r.ada_sketch_flops_regrow,
+                "incremental {:.3e} must not exceed regrow {:.3e}",
+                r.ada_sketch_flops_incremental,
+                r.ada_sketch_flops_regrow
+            );
+            // With at least one doubling, re-applying from scratch pays
+            // the FWHT multiple times; the cached path pays it once.
+            if r.ada_m > 1 {
+                assert!(r.ada_sketch_flops_incremental < r.ada_sketch_flops_regrow);
+            }
+        }
     }
 }

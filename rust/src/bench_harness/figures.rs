@@ -58,9 +58,17 @@ pub struct PathSeries {
 pub fn figure_solvers() -> Vec<SolverSpec> {
     vec![
         SolverSpec::Cg,
-        SolverSpec::Pcg { kind: SketchKind::Srht, rho: 0.5 },
-        SolverSpec::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::PolyakFirst },
-        SolverSpec::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly },
+        SolverSpec::Pcg { kind: SketchKind::Srht, rho: 0.5, threads: None },
+        SolverSpec::Adaptive {
+            kind: SketchKind::Srht,
+            variant: AdaptiveVariant::PolyakFirst,
+            threads: None,
+        },
+        SolverSpec::Adaptive {
+            kind: SketchKind::Srht,
+            variant: AdaptiveVariant::GradientOnly,
+            threads: None,
+        },
     ]
 }
 
@@ -138,8 +146,9 @@ pub fn fig3(cfg: &FigureConfig) -> Vec<PathSeries> {
     solvers.push(SolverSpec::Adaptive {
         kind: SketchKind::Gaussian,
         variant: AdaptiveVariant::PolyakFirst,
+        threads: None,
     });
-    solvers.push(SolverSpec::Pcg { kind: SketchKind::Gaussian, rho: 0.5 });
+    solvers.push(SolverSpec::Pcg { kind: SketchKind::Gaussian, rho: 0.5, threads: None });
     let mut out = Vec::new();
     for ds in &datasets {
         for spec in &solvers {

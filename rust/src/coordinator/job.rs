@@ -65,6 +65,11 @@ pub struct JobSpec {
     /// (strictly decreasing) nu values instead of the single solve at
     /// `nu` — the Figure-1 workload as a service.
     pub path_nus: Vec<f64>,
+    /// Pin the parallel dense kernels to this many threads for the whole
+    /// job (oracle solve included). `None` = ambient default; a
+    /// `@threads=k` param on the solver spec still overrides during the
+    /// solver's own `solve` call.
+    pub threads: Option<usize>,
 }
 
 /// Lifecycle states. Jobs only ever move forward.
@@ -152,6 +157,15 @@ impl SolveOutcome {
 
 /// Execute a job spec to completion (runs on a scheduler worker).
 pub fn execute(spec: &JobSpec) -> Result<SolveOutcome, String> {
+    match spec.threads {
+        // The override is thread-local, so concurrent workers with
+        // different settings cannot interfere.
+        Some(k) => crate::linalg::threads::with_threads(k, || execute_inner(spec)),
+        None => execute_inner(spec),
+    }
+}
+
+fn execute_inner(spec: &JobSpec) -> Result<SolveOutcome, String> {
     let (a, b) = spec.workload.materialize()?;
     // Shape/solver compatibility: the dual reduction handles d >= n and
     // nothing else; every other solver needs n >= d.
@@ -219,7 +233,21 @@ mod tests {
             eps: 1e-8,
             seed: 7,
             path_nus: Vec::new(),
+            threads: None,
         }
+    }
+
+    #[test]
+    fn execute_honors_job_threads() {
+        let mut sp = spec("adaptive-srht");
+        sp.threads = Some(2);
+        let pinned = execute(&sp).unwrap();
+        assert!(pinned.report.converged);
+        // Same job without the pin produces the same solution (the knob
+        // changes scheduling, not semantics).
+        sp.threads = None;
+        let free = execute(&sp).unwrap();
+        assert_eq!(pinned.report.iterations, free.report.iterations);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Requests (one JSON object per line):
 //! ```json
 //! {"cmd":"solve","profile":"mnist-like","n":1024,"d":128,"nu":1.0,
-//!  "solver":"adaptive-srht","eps":1e-8,"seed":7}
+//!  "solver":"adaptive-srht","eps":1e-8,"seed":7,"threads":8}
 //! {"cmd":"status","job":3}
 //! {"cmd":"wait","job":3,"timeout_s":60}
 //! {"cmd":"result","job":3,"include_x":true}
@@ -16,7 +16,10 @@
 //!
 //! The `"solver"` field of a solve request is a [`SolverSpec`] string
 //! (`"cg"`, `"adaptive-srht"`, `"ihs-sparse@m=256"`, ...); `"solvers"`
-//! returns the full registry for client-side discovery.
+//! returns the full registry for client-side discovery. An optional
+//! `"threads"` field pins the parallel dense kernels for the whole job
+//! (equivalent to the `@threads=k` spec param, but also covering the
+//! oracle solve).
 
 use super::job::{JobSpec, Workload};
 use crate::solvers::api::SolverSpec;
@@ -56,6 +59,10 @@ pub fn decode(line: &str) -> Result<Request, String> {
                 .and_then(Json::as_arr)
                 .map(|arr| arr.iter().filter_map(Json::as_f64).collect())
                 .unwrap_or_default();
+            let threads = match v.get("threads").and_then(Json::as_usize) {
+                Some(0) => return Err("threads must be >= 1".into()),
+                t => t,
+            };
             Ok(Request::Solve(JobSpec {
                 workload: Workload::Synthetic { profile, n, d, seed },
                 nu,
@@ -63,6 +70,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
                 eps,
                 seed,
                 path_nus,
+                threads,
             }))
         }
         "status" => Ok(Request::Status { job: require_job(&v)? }),
@@ -135,6 +143,26 @@ mod tests {
         let r = decode(r#"{"cmd":"solve","solver":"ihs-sparse@m=256"}"#).unwrap();
         match r {
             Request::Solve(spec) => assert_eq!(spec.solver.to_string(), "ihs-sparse@m=256"),
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decode_threads_field() {
+        match decode(r#"{"cmd":"solve","threads":8}"#).unwrap() {
+            Request::Solve(spec) => assert_eq!(spec.threads, Some(8)),
+            _ => panic!("wrong variant"),
+        }
+        match decode(r#"{"cmd":"solve"}"#).unwrap() {
+            Request::Solve(spec) => assert_eq!(spec.threads, None),
+            _ => panic!("wrong variant"),
+        }
+        assert!(decode(r#"{"cmd":"solve","threads":0}"#).is_err());
+        // The spec-level param also survives the wire.
+        match decode(r#"{"cmd":"solve","solver":"adaptive-srht@threads=4"}"#).unwrap() {
+            Request::Solve(spec) => {
+                assert_eq!(spec.solver.to_string(), "adaptive-srht@threads=4")
+            }
             _ => panic!("wrong variant"),
         }
     }

@@ -219,6 +219,7 @@ mod tests {
             eps: 1e-6,
             seed,
             path_nus: Vec::new(),
+            threads: None,
         }
     }
 

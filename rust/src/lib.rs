@@ -34,15 +34,36 @@
 //! ```
 //!
 //! Spec strings follow `name[@key=value,...]` — `"cg"`, `"pcg-gaussian"`,
-//! `"ihs-sparse@m=256"`, `"dual-adaptive-gaussian"` — and round-trip
-//! through `Display`/`FromStr`. [`solvers::registry`] lists every entry;
+//! `"ihs-sparse@m=256"`, `"dual-adaptive-gaussian"`,
+//! `"adaptive-srht@threads=8"` — and round-trip through
+//! `Display`/`FromStr`. [`solvers::registry`] lists every entry;
 //! the CLI (`effdim solvers`), the coordinator (`{"cmd":"solvers"}`), the
 //! regularization-path driver and the bench harness all dispatch through
 //! this one surface.
 //!
+//! ## Performance: parallel kernels and incremental sketch growth
+//!
+//! The dense hot paths (GEMM, Gram products, row-FWHT) are row-parallel
+//! over `std::thread::scope` workers behind the [`linalg::threads`] knob:
+//! per-solve `@threads=k` spec param > [`linalg::threads::set_global_threads`]
+//! > `PALLAS_THREADS` env var > hardware parallelism. See
+//! `EXPERIMENTS.md` §Perf for the measured numbers (`cargo bench --bench
+//! kernels` refreshes `BENCH_kernels.json`).
+//!
+//! Adaptive sketch growth is *incremental*: [`sketch::engine::SketchEngine`]
+//! appends `Δm` rows (Gaussian: fresh rows, `O(Δm n d)`; SRHT: rows of a
+//! once-per-problem FWHT buffer, `O(Δm d)`; sparse: a size-weighted
+//! CountSketch block, `O(nnz)`) and
+//! [`solvers::woodbury::WoodburyCache::grow`] reuses the cached Gram
+//! blocks, so a rejection round of Algorithm 1 pays `O(Δm)`-proportional
+//! work — the regime Theorem 7's cost decomposition assumes. Grown
+//! sketches are prefix-consistent (old rows are never rescaled; the
+//! `1/sqrt(m)` normalization is folded into the Woodbury solve).
+//!
 //! ## Layout
-//! * [`linalg`] — dense linear-algebra substrate (blocked GEMM, Cholesky,
-//!   Householder QR, Golub–Kahan SVD, triangular solves).
+//! * [`linalg`] — dense linear-algebra substrate (blocked row-parallel
+//!   GEMM, Cholesky, Householder QR, Golub–Kahan SVD, triangular solves,
+//!   the [`linalg::threads`] knob).
 //! * [`rng`] — deterministic xoshiro256++ RNG with Gaussian / Rademacher
 //!   streams.
 //! * [`sketch`] — Gaussian, SRHT (fast Walsh–Hadamard) and sparse
@@ -61,6 +82,12 @@
 //! * [`coordinator`] — the L3 service: job scheduler, solve state machine,
 //!   metrics, TCP server speaking line-delimited JSON.
 //! * [`bench_harness`] — regenerates every figure/table of the paper.
+
+// Index-based loops are the house style for the dense kernels (indices
+// frequently address two or three buffers in lockstep, and the explicit
+// form mirrors the Pallas kernels this crate shadows); div_ceil is avoided
+// to hold the 1.70 MSRV.
+#![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
 
 pub mod bench_harness;
 pub mod coordinator;

@@ -90,6 +90,49 @@ impl Cholesky {
         &self.l
     }
 
+    /// Bordered extension: given the factor `L` of an `n x n` block `K`,
+    /// extend it to the factor of
+    /// `[[K, C^T], [C, D]]` (`C` is `p x n`, `D` is `p x p` symmetric)
+    /// without touching the existing block — `O(p n^2)` instead of the
+    /// `O((n+p)^3)` full refactor. This is the growth step the Woodbury
+    /// cache takes when appended rows keep the embedding scale unchanged
+    /// (fixed-scale streaming; the adaptive solver's `1/sqrt(m)` rescale
+    /// shifts the whole diagonal and must refactor instead):
+    /// `W = C L^{-T}`, then `L_D = chol(D - W W^T)` and
+    /// `L_new = [[L, 0], [W, L_D]]`.
+    ///
+    /// Fails (leaving `self` unchanged) when the Schur complement
+    /// `D - W W^T` is not positive definite; callers fall back to a full
+    /// refactor with jitter.
+    pub fn extend_bordered(&mut self, c: &Matrix, d_block: &Matrix) -> Result<(), NotPositiveDefinite> {
+        let n = self.l.rows();
+        let p = c.rows();
+        assert_eq!(c.cols(), n, "cross block must have {n} columns");
+        assert_eq!((d_block.rows(), d_block.cols()), (p, p), "corner must be {p} x {p}");
+        // W = C L^{-T}: row i of W solves L w = c_i.
+        let mut w = Matrix::zeros(p, n);
+        for i in 0..p {
+            let wi = solve_lower(&self.l, c.row(i));
+            w.row_mut(i).copy_from_slice(&wi);
+        }
+        // Schur complement S = D - W W^T, factored in place.
+        let mut s = d_block.clone();
+        let ww = w.gram_outer();
+        s.add_scaled(-1.0, &ww);
+        let ls = Cholesky::factor(&s)?;
+        // Assemble [[L, 0], [W, L_S]].
+        let mut l_new = Matrix::zeros(n + p, n + p);
+        for i in 0..n {
+            l_new.row_mut(i)[..n].copy_from_slice(self.l.row(i));
+        }
+        for i in 0..p {
+            l_new.row_mut(n + i)[..n].copy_from_slice(w.row(i));
+            l_new.row_mut(n + i)[n..].copy_from_slice(ls.l.row(i));
+        }
+        self.l = l_new;
+        Ok(())
+    }
+
     /// Solve `M x = b` via the two triangular solves.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let y = solve_lower(&self.l, b);
@@ -187,5 +230,38 @@ mod tests {
     fn log_det_identity_is_zero() {
         let c = Cholesky::factor(&Matrix::eye(5)).unwrap();
         assert!(c.log_det().abs() < 1e-14);
+    }
+
+    #[test]
+    fn extend_bordered_matches_full_factor() {
+        // Factor the leading 9x9 block of a 12x12 SPD matrix, extend by
+        // the remaining 3 rows, compare against factoring the whole thing.
+        let m = spd(12, 8);
+        let (n, p) = (9, 3);
+        let top = Matrix::from_fn(n, n, |i, j| m.get(i, j));
+        let cross = Matrix::from_fn(p, n, |i, j| m.get(n + i, j));
+        let corner = Matrix::from_fn(p, p, |i, j| m.get(n + i, n + j));
+        let mut c = Cholesky::factor(&top).unwrap();
+        c.extend_bordered(&cross, &corner).unwrap();
+        let full = Cholesky::factor(&m).unwrap();
+        assert!(c.l().max_abs_diff(full.l()) < 1e-9);
+        // And it solves the full system.
+        let b: Vec<f64> = (0..12).map(|i| (i as f64 * 0.3).cos()).collect();
+        let x = c.solve(&b);
+        let r = m.matvec(&x);
+        for i in 0..12 {
+            assert!((r[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn extend_bordered_rejects_indefinite_schur_and_keeps_factor() {
+        let top = Matrix::eye(2);
+        let mut c = Cholesky::factor(&top).unwrap();
+        // Corner equal to W W^T - 1: Schur complement is negative.
+        let cross = Matrix::from_vec(1, 2, vec![2.0, 0.0]);
+        let corner = Matrix::from_vec(1, 1, vec![3.0]);
+        assert!(c.extend_bordered(&cross, &corner).is_err());
+        assert_eq!(c.l().rows(), 2, "failed extension must leave L intact");
     }
 }

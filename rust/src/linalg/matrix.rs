@@ -1,10 +1,14 @@
-//! Row-major dense matrix with cache-blocked multiplication.
+//! Row-major dense matrix with cache-blocked, row-parallel multiplication.
 //!
 //! The hot operations in this repository are `S * A` (sketching),
 //! `A^T (A x - b)` (ridge gradient) and small Gram products
 //! `(SA)(SA)^T`; all of them reduce to the GEMM / GEMV kernels here.
+//! The GEMM and Gram kernels split their output rows across scoped
+//! threads when the operation is large enough to amortize the spawns;
+//! the thread count comes from [`super::threads`] (solver `@threads=k`
+//! override, `PALLAS_THREADS`, or the hardware default).
 
-use super::{axpy, dot};
+use super::{axpy, dot, threads};
 
 /// Dense row-major `rows x cols` matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]
@@ -146,11 +150,41 @@ impl Matrix {
         y
     }
 
-    /// Blocked GEMM: `C = self * other`.
+    /// Blocked GEMM: `C = self * other`. Output rows are split across
+    /// scoped threads for large products; every element is computed with
+    /// the same operation order as the serial kernel, so the result is
+    /// bitwise identical at any thread count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul dimension mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut c = Matrix::zeros(m, n);
+        if m == 0 || n == 0 {
+            return c;
+        }
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let t = if threads::worth_parallelizing(flops) { threads::current().min(m) } else { 1 };
+        if t <= 1 {
+            self.matmul_rows_into(other, 0, &mut c.data);
+            return c;
+        }
+        // Contiguous row chunks: GEMM work is uniform per row.
+        let chunk_rows = (m + t - 1) / t;
+        let jobs: Vec<(usize, &mut [f64])> = c
+            .data
+            .chunks_mut(chunk_rows * n)
+            .enumerate()
+            .map(|(i, rows)| (i * chunk_rows, rows))
+            .collect();
+        threads::run_jobs(t, jobs, |(r0, rows)| self.matmul_rows_into(other, r0, rows));
+        c
+    }
+
+    /// Serial blocked-GEMM kernel for one output row chunk: writes
+    /// `self[r0.., :] * other` into `c_rows` (`c_rows.len() / other.cols()`
+    /// rows, row-major, zero-initialized).
+    fn matmul_rows_into(&self, other: &Matrix, r0: usize, c_rows: &mut [f64]) {
+        let (k, n) = (self.cols, other.cols);
+        let m = c_rows.len() / n;
         // Packed panel of A (MC x KC), contiguous by row.
         let mut apack = vec![0.0; MC * KC];
         for jc in (0..n).step_by(NC) {
@@ -159,19 +193,19 @@ impl Matrix {
                 let kb = KC.min(k - pc);
                 for ic in (0..m).step_by(MC) {
                     let mb = MC.min(m - ic);
-                    // Pack A[ic..ic+mb, pc..pc+kb].
+                    // Pack A[r0+ic..r0+ic+mb, pc..pc+kb].
                     for i in 0..mb {
-                        let src = &self.data[(ic + i) * k + pc..(ic + i) * k + pc + kb];
-                        apack[i * kb..(i + 1) * kb].copy_from_slice(src);
+                        let base = (r0 + ic + i) * k + pc;
+                        apack[i * kb..(i + 1) * kb].copy_from_slice(&self.data[base..base + kb]);
                     }
                     // Micro loops: for each packed row of A, stream rows of
-                    // B. Four rank-1 updates are fused per pass so each
-                    // C-row element is loaded/stored once per 8 flops
+                    // B. Eight rank-1 updates are fused per pass so each
+                    // C-row element is loaded/stored once per 16 flops
                     // instead of once per 2 (the op would otherwise be
                     // store-bound; see EXPERIMENTS.md §Perf).
                     for i in 0..mb {
                         let arow = &apack[i * kb..(i + 1) * kb];
-                        let crow = &mut c.data[(ic + i) * n + jc..(ic + i) * n + jc + nb];
+                        let crow = &mut c_rows[(ic + i) * n + jc..(ic + i) * n + jc + nb];
                         let kq = kb / 8 * 8;
                         let mut p = 0;
                         while p < kq {
@@ -205,27 +239,70 @@ impl Matrix {
                 }
             }
         }
+    }
+
+    /// `C = self * other^T` without materializing the transpose: both
+    /// operands stream row-major and entry `(i, j)` is a single row dot.
+    /// Used by the Woodbury growth path for the `Δm x m` cross-Gram.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dimension mismatch");
+        let (p, q, k) = (self.rows, other.rows, self.cols);
+        let mut c = Matrix::zeros(p, q);
+        if p == 0 || q == 0 {
+            return c;
+        }
+        let flops = 2.0 * p as f64 * q as f64 * k as f64;
+        let t = if threads::worth_parallelizing(flops) { threads::current().min(p) } else { 1 };
+        let chunk_rows = (p + t - 1) / t;
+        let jobs: Vec<(usize, &mut [f64])> = c
+            .data
+            .chunks_mut(chunk_rows * q)
+            .enumerate()
+            .map(|(i, rows)| (i * chunk_rows, rows))
+            .collect();
+        threads::run_jobs(t, jobs, |(r0, rows)| {
+            for i in 0..rows.len() / q {
+                let ri = self.row(r0 + i);
+                for j in 0..q {
+                    rows[i * q + j] = dot(ri, other.row(j));
+                }
+            }
+        });
         c
     }
 
     /// `C = self^T * self` (Gram matrix), exploiting symmetry: only the
-    /// upper triangle is computed, then mirrored.
+    /// upper triangle is computed, then mirrored. Large inputs split their
+    /// rows across threads with per-thread partial Grams reduced in a
+    /// fixed order — deterministic for a given thread count, but the last
+    /// ulp may differ across thread counts (the only kernel here with a
+    /// cross-thread reduction).
     pub fn gram(&self) -> Matrix {
         let (n, d) = (self.rows, self.cols);
         let mut g = Matrix::zeros(d, d);
-        // Accumulate rank-1 updates row by row (sequential access to A).
-        for i in 0..n {
-            let r = &self.data[i * d..(i + 1) * d];
-            for a in 0..d {
-                let ra = r[a];
-                if ra == 0.0 {
-                    continue;
+        let flops = n as f64 * d as f64 * d as f64;
+        let t = if threads::worth_parallelizing(flops) { threads::current().min(n.max(1)) } else { 1 };
+        if t <= 1 {
+            self.gram_rows_upper(0, n, &mut g.data);
+        } else {
+            let chunk = (n + t - 1) / t;
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                let mut r0 = chunk; // chunk 0 runs on the calling thread
+                while r0 < n {
+                    let r1 = (r0 + chunk).min(n);
+                    handles.push(s.spawn(move || {
+                        let mut partial = vec![0.0; d * d];
+                        self.gram_rows_upper(r0, r1, &mut partial);
+                        partial
+                    }));
+                    r0 = r1;
                 }
-                let grow = &mut g.data[a * d..(a + 1) * d];
-                for b in a..d {
-                    grow[b] += ra * r[b];
+                self.gram_rows_upper(0, chunk.min(n), &mut g.data);
+                for h in handles {
+                    axpy(1.0, &h.join().expect("gram worker panicked"), &mut g.data);
                 }
-            }
+            });
         }
         for a in 0..d {
             for b in 0..a {
@@ -235,19 +312,57 @@ impl Matrix {
         g
     }
 
-    /// `C = self * self^T` (outer Gram), symmetric.
+    /// Accumulate the upper triangle of `self[r0..r1, :]^T self[r0..r1, :]`
+    /// into `g` (`d x d`, row-major).
+    fn gram_rows_upper(&self, r0: usize, r1: usize, g: &mut [f64]) {
+        let d = self.cols;
+        // Accumulate rank-1 updates row by row (sequential access to A).
+        for i in r0..r1 {
+            let r = &self.data[i * d..(i + 1) * d];
+            for a in 0..d {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = &mut g[a * d..(a + 1) * d];
+                for b in a..d {
+                    grow[b] += ra * r[b];
+                }
+            }
+        }
+    }
+
+    /// `C = self * self^T` (outer Gram), symmetric. Upper-triangle rows
+    /// are dealt round-robin across threads (earlier rows carry more
+    /// dots), then mirrored; entries are single row dots, so the result
+    /// is bitwise identical at any thread count.
     pub fn gram_outer(&self) -> Matrix {
         let n = self.rows;
         let mut g = Matrix::zeros(n, n);
-        for i in 0..n {
+        let flops = n as f64 * n as f64 * self.cols as f64;
+        let t = if threads::worth_parallelizing(flops) { threads::current().min(n.max(1)) } else { 1 };
+        let jobs: Vec<(usize, &mut [f64])> = g.data.chunks_mut(n.max(1)).enumerate().collect();
+        threads::run_jobs(t, jobs, |(i, grow)| {
             let ri = self.row(i);
             for j in i..n {
-                let v = dot(ri, self.row(j));
-                g.data[i * n + j] = v;
-                g.data[j * n + i] = v;
+                grow[j] = dot(ri, self.row(j));
+            }
+        });
+        for i in 0..n {
+            for j in 0..i {
+                g.data[i * n + j] = g.data[j * n + i];
             }
         }
         g
+    }
+
+    /// Append the rows of `other` below `self` — in-place growth, the
+    /// primitive the incremental sketch engine and the growable Woodbury
+    /// cache build on. Existing rows are never moved or rescaled.
+    pub fn append_rows(&mut self, other: &Matrix) {
+        assert_eq!(self.cols, other.cols, "append_rows column mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
     }
 
     /// Frobenius norm.
@@ -374,6 +489,69 @@ mod tests {
         a.add_diag(2.5);
         for i in 0..3 {
             assert_eq!(a.get(i, i), 2.5);
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let a = test_mat(9, 21, 10);
+        let b = test_mat(14, 21, 11);
+        let c = a.matmul_nt(&b);
+        let c0 = a.matmul(&b.transpose());
+        assert!(c.max_abs_diff(&c0) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_matmul_bitwise_matches_serial() {
+        // Big enough to cross the parallel threshold.
+        let a = test_mat(130, 96, 12);
+        let b = test_mat(96, 70, 13);
+        let serial = crate::linalg::threads::with_threads(1, || a.matmul(&b));
+        for t in [2, 3, 8] {
+            let par = crate::linalg::threads::with_threads(t, || a.matmul(&b));
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_gram_outer_and_nt_bitwise_match_serial() {
+        let a = test_mat(96, 80, 14);
+        let go1 = crate::linalg::threads::with_threads(1, || a.gram_outer());
+        let go4 = crate::linalg::threads::with_threads(4, || a.gram_outer());
+        assert_eq!(go1, go4);
+        let b = test_mat(64, 80, 15);
+        let nt1 = crate::linalg::threads::with_threads(1, || a.matmul_nt(&b));
+        let nt4 = crate::linalg::threads::with_threads(4, || a.matmul_nt(&b));
+        assert_eq!(nt1, nt4);
+    }
+
+    #[test]
+    fn parallel_gram_matches_serial_within_roundoff() {
+        // gram reduces per-thread partials: equal up to last-ulp noise.
+        let a = test_mat(300, 48, 16);
+        let g1 = crate::linalg::threads::with_threads(1, || a.gram());
+        let g4 = crate::linalg::threads::with_threads(4, || a.gram());
+        assert!(g1.max_abs_diff(&g4) < 1e-10);
+        // And symmetric either way.
+        for i in 0..48 {
+            for j in 0..i {
+                assert_eq!(g4.get(i, j), g4.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn append_rows_grows_in_place() {
+        let top = test_mat(5, 7, 17);
+        let bottom = test_mat(3, 7, 18);
+        let mut grown = top.clone();
+        grown.append_rows(&bottom);
+        assert_eq!((grown.rows(), grown.cols()), (8, 7));
+        for i in 0..5 {
+            assert_eq!(grown.row(i), top.row(i), "prefix row {i} must be untouched");
+        }
+        for i in 0..3 {
+            assert_eq!(grown.row(5 + i), bottom.row(i));
         }
     }
 }

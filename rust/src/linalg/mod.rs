@@ -12,12 +12,16 @@
 //!   and test oracles).
 //! * [`triangular`] — forward/back substitution.
 //! * [`sparse`] — CSR storage + `O(nnz)` kernels (paper Remark 4.1).
+//! * [`threads`] — the thread-count knob behind the row-parallel GEMM,
+//!   FWHT and Gram kernels (`@threads=k` solver param, `PALLAS_THREADS`
+//!   env var, hardware default).
 
 pub mod cholesky;
 pub mod matrix;
 pub mod sparse;
 pub mod qr;
 pub mod svd;
+pub mod threads;
 pub mod triangular;
 
 pub use matrix::Matrix;

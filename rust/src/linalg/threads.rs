@@ -1,0 +1,202 @@
+//! Thread-count knob and scoped-thread helpers for the parallel dense
+//! kernels (GEMM, FWHT, Gram products).
+//!
+//! Resolution order for the effective thread count, highest priority
+//! first:
+//!
+//! 1. a per-thread override installed with [`with_threads`] — this is what
+//!    the `@threads=k` solver-spec parameter and the coordinator's
+//!    `"threads"` request field use, so concurrent jobs on different
+//!    worker threads cannot trample each other's setting;
+//! 2. the process-wide value set with [`set_global_threads`];
+//! 3. the `PALLAS_THREADS` environment variable;
+//! 4. [`std::thread::available_parallelism`].
+//!
+//! Kernels spawn plain `std::thread::scope` workers (no pool, no external
+//! crates); each parallel region costs a few spawns, so the kernels only
+//! split work above a minimum size ([`worth_parallelizing`]).
+//!
+//! Determinism note: the parallel GEMM, `gram_outer`, `matmul_nt` and FWHT
+//! partitions compute every output element with the same operation order
+//! as the serial kernels, so their results are bitwise identical at any
+//! thread count. `Matrix::gram` reduces per-thread partial sums and is
+//! deterministic for a *fixed* thread count but may differ in the last ulp
+//! across different thread counts.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Process-wide thread count; 0 = unset (fall through to env / hardware).
+static GLOBAL: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override; 0 = unset.
+    static OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// `PALLAS_THREADS` env var if valid, else the hardware parallelism.
+fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("PALLAS_THREADS") {
+            if let Ok(k) = v.trim().parse::<usize>() {
+                if k >= 1 {
+                    return k;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// The thread count the kernels will use right now on this thread.
+pub fn current() -> usize {
+    let local = OVERRIDE.with(Cell::get);
+    if local != 0 {
+        return local;
+    }
+    let global = GLOBAL.load(Ordering::Relaxed);
+    if global != 0 {
+        return global;
+    }
+    default_threads()
+}
+
+/// Set the process-wide thread count (`0` resets to the env/hardware
+/// default). Per-thread [`with_threads`] overrides still win.
+pub fn set_global_threads(k: usize) {
+    GLOBAL.store(k, Ordering::Relaxed);
+}
+
+/// Run `f` with the kernels pinned to `k` threads on the calling thread
+/// (restored on exit, including on panic). `k = 0` means "default".
+pub fn with_threads<R>(k: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(OVERRIDE.with(|c| c.replace(k)));
+    f()
+}
+
+/// Whether a kernel of roughly `flops` floating-point operations is worth
+/// splitting across threads: below this, spawn overhead (~tens of
+/// microseconds per scoped thread) dominates the work itself.
+pub fn worth_parallelizing(flops: f64) -> bool {
+    flops >= 4e5
+}
+
+/// Run `jobs` on up to `threads` scoped threads; the calling thread works
+/// too, so `threads = 1` never spawns. Jobs are dealt round-robin, which
+/// balances triangular workloads (e.g. `gram_outer` rows) without a queue.
+/// A panic in any job propagates to the caller when the scope joins.
+pub fn run_jobs<J, F>(threads: usize, jobs: Vec<J>, f: F)
+where
+    J: Send,
+    F: Fn(J) + Sync,
+{
+    let t = threads.clamp(1, jobs.len().max(1));
+    if t == 1 {
+        for job in jobs {
+            f(job);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<J>> = (0..t).map(|_| Vec::new()).collect();
+    for (i, job) in jobs.into_iter().enumerate() {
+        buckets[i % t].push(job);
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut buckets = buckets.into_iter();
+        let own = buckets.next().unwrap();
+        for bucket in buckets {
+            s.spawn(move || {
+                for job in bucket {
+                    f(job);
+                }
+            });
+        }
+        for job in own {
+            f(job);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_at_least_one() {
+        assert!(current() >= 1);
+    }
+
+    #[test]
+    fn with_threads_scopes_and_restores() {
+        let before = current();
+        let inside = with_threads(3, current);
+        assert_eq!(inside, 3);
+        assert_eq!(current(), before);
+        // Nesting: innermost wins.
+        let nested = with_threads(2, || with_threads(5, current));
+        assert_eq!(nested, 5);
+    }
+
+    #[test]
+    fn with_threads_restores_on_panic() {
+        let before = current();
+        let result = std::panic::catch_unwind(|| with_threads(7, || panic!("boom")));
+        assert!(result.is_err());
+        assert_eq!(current(), before);
+    }
+
+    #[test]
+    fn override_is_per_thread() {
+        with_threads(4, || {
+            let other = std::thread::spawn(current).join().unwrap();
+            // The spawned thread sees the default, not this thread's 4.
+            assert_ne!(other, 0);
+            assert_eq!(current(), 4);
+        });
+    }
+
+    #[test]
+    fn run_jobs_executes_every_job_once() {
+        use std::sync::atomic::AtomicU64;
+        for threads in [1, 2, 5, 16] {
+            let hits = AtomicU64::new(0);
+            let jobs: Vec<u64> = (0..37).collect();
+            run_jobs(threads, jobs, |j| {
+                hits.fetch_add(1 << (j % 63), Ordering::Relaxed);
+            });
+            // 37 distinct jobs, each adding a distinct power of two
+            // (mod 63): the sum is independent of scheduling.
+            let expect: u64 = (0..37u64).map(|j| 1 << (j % 63)).sum();
+            assert_eq!(hits.load(Ordering::Relaxed), expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_jobs_mutable_slices() {
+        let mut data = vec![0.0f64; 64];
+        let jobs: Vec<(usize, &mut [f64])> = data.chunks_mut(8).enumerate().collect();
+        run_jobs(4, jobs, |(i, chunk)| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = (i * 8 + k) as f64;
+            }
+        });
+        for (k, x) in data.iter().enumerate() {
+            assert_eq!(*x, k as f64);
+        }
+    }
+
+    #[test]
+    fn worth_parallelizing_thresholds() {
+        assert!(!worth_parallelizing(1e3));
+        assert!(worth_parallelizing(1e7));
+    }
+}

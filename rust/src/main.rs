@@ -20,12 +20,15 @@
 //!            | "polyak-ihs-<kind>" | "adaptive-<kind>"
 //!            | "adaptive-gd-<kind>" | "dual-adaptive-<kind>"
 //! kind      := "gaussian" | "srht" | "sparse"
-//! param     := "m=<usize>"   (ihs sketch size)
-//!            | "rho=<f64>"   (pcg preconditioner aspect ratio)
+//! param     := "m=<usize>"       (ihs sketch size)
+//!            | "rho=<f64>"       (pcg preconditioner aspect ratio)
+//!            | "threads=<usize>" (pin the parallel dense kernels)
 //! ```
 //!
 //! e.g. `cg`, `pcg-gaussian`, `adaptive-srht`, `ihs-sparse@m=256`,
-//! `pcg-srht@rho=0.25`. `effdim solvers` prints the full registry.
+//! `pcg-srht@rho=0.25`, `adaptive-srht@threads=8`. `effdim solvers`
+//! prints the full registry. `--threads k` (or `PALLAS_THREADS`) pins
+//! the kernels for the whole command instead of one solver.
 
 use effdim::coordinator::job::{self, JobSpec, Workload};
 use effdim::coordinator::server::{Client, Server};
@@ -39,9 +42,11 @@ const USAGE: &str = "usage: effdim <solve|path|serve|request|info|solvers> [--fl
     names : direct | cg | pcg-<kind> | ihs-<kind> | polyak-ihs-<kind>
             | adaptive-<kind> | adaptive-gd-<kind> | dual-adaptive-<kind>
     kinds : gaussian | srht | sparse
-    params: m=<usize> (ihs), rho=<f64> (pcg)
+    params: m=<usize> (ihs), rho=<f64> (pcg), threads=<usize> (any randomized)
     bare aliases 'adaptive', 'adaptive-gd', 'dual' default to gaussian;
     'pcg' defaults to srht — name the kind explicitly in scripts
+  --threads k pins the parallel dense kernels for the whole command
+    (default: PALLAS_THREADS env var, else all hardware threads)
   run `effdim solvers` for the registry; see rust/src/main.rs docs for flags";
 
 fn main() {
@@ -81,6 +86,22 @@ fn parse_solver(args: &Args, default: &str) -> Result<SolverSpec, i32> {
     }
 }
 
+/// `--threads k` with the same validation as the wire protocol and the
+/// `@threads=k` spec param: present means a positive integer, anything
+/// else is a usage error (exit code via `Err`).
+fn threads_flag(args: &Args) -> Result<Option<usize>, i32> {
+    match args.get("threads") {
+        None => Ok(None),
+        Some(v) => match v.trim().parse::<usize>() {
+            Ok(k) if k >= 1 => Ok(Some(k)),
+            _ => {
+                eprintln!("--threads must be a positive integer, got {v:?}");
+                Err(2)
+            }
+        },
+    }
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let spec = JobSpec {
         workload: workload_from(args),
@@ -92,6 +113,10 @@ fn cmd_solve(args: &Args) -> i32 {
         eps: args.get_f64("eps", 1e-8),
         seed: args.get_u64("seed", 1),
         path_nus: args.get_f64_list("path-nus", &[]),
+        threads: match threads_flag(args) {
+            Ok(t) => t,
+            Err(code) => return code,
+        },
     };
     match job::execute(&spec) {
         Ok(outcome) => {
@@ -129,7 +154,14 @@ fn cmd_path(args: &Args) -> i32 {
         Ok(s) => s,
         Err(code) => return code,
     };
-    let res = run_path(&ds.a, &ds.b, &nus, args.get_f64("eps", 1e-8), &spec, seed);
+    let eps = args.get_f64("eps", 1e-8);
+    let res = match threads_flag(args) {
+        Ok(Some(k)) => effdim::linalg::threads::with_threads(k, || {
+            run_path(&ds.a, &ds.b, &nus, eps, &spec, seed)
+        }),
+        Ok(None) => run_path(&ds.a, &ds.b, &nus, eps, &spec, seed),
+        Err(code) => return code,
+    };
     println!("solver: {}", res.solver);
     println!(
         "{:<12} {:>10} {:>12} {:>10} {:>8} {:>6}",
@@ -235,6 +267,8 @@ fn cmd_solvers() -> i32 {
             spec.describe()
         );
     }
-    println!("\nspec grammar: name[@key=value,...]  (m=<usize> for ihs, rho=<f64> for pcg)");
+    println!(
+        "\nspec grammar: name[@key=value,...]  (m=<usize> for ihs, rho=<f64> for pcg, threads=<usize> for any randomized solver)"
+    );
     0
 }

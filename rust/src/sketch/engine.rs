@@ -1,0 +1,458 @@
+//! Incremental sketch-growth engine: grow `m` by paying only for the new
+//! rows.
+//!
+//! Algorithm 1's whole point is that `m` grows from 1 toward the
+//! effective dimension, yet resampling `S` and re-applying it to all of
+//! `A` on every rejection costs `O(m n d)` (Gaussian) or
+//! `O(ñ d log ñ)` (SRHT) *per growth* — re-doing work the previous sketch
+//! already paid for. [`SketchEngine`] owns per-problem cached state so a
+//! growth step costs only `O(Δm)` worth of new work:
+//!
+//! * **Gaussian** — appends `Δm` fresh i.i.d. rows and multiplies only
+//!   those against `A`: `O(Δm n d)` instead of `O(m n d)`.
+//! * **SRHT** — computes the FWHT'd, sign-flipped buffer
+//!   `H · diag(eps) · A` *once* per problem (`O(ñ d log ñ)`, where
+//!   `ñ = next_pow2(n)`); growing is then just continuing the without-
+//!   replacement row sample and copying `Δm` cached rows: `O(Δm d)`.
+//!   Extending a partial Fisher–Yates shuffle keeps the selected row set
+//!   a uniform without-replacement sample at every size, so each grown
+//!   sketch is distributed exactly like a fresh SRHT of that size.
+//! * **Sparse** — appends an independent CountSketch block of `Δm` rows
+//!   (`O(nnz(A))` scatter per growth). Block `i` carries the fixed weight
+//!   `sqrt(m_i)` baked into its unnormalized rows, so the effective
+//!   embedding `(1/sqrt(m)) * [sqrt(m_1) Ŝ_1; ...; sqrt(m_k) Ŝ_k]`
+//!   satisfies `E[S^T S] = (1/m) Σ m_i I = I` with the *same* `O(d/m)`
+//!   Gram variance as a fresh size-`m` CountSketch (size-weighting is
+//!   what keeps the early tiny blocks from dominating); per-column
+//!   sparsity is one entry per block — an SJLT.
+//!
+//! # Normalization contract
+//!
+//! Stored rows are **unnormalized**: the effective embedding is
+//! `scale() * sa_unnormalized()` with `scale = 1/sqrt(m)` for every
+//! family. Keeping the `1/sqrt(m)` factor out of the stored rows is what
+//! makes growth append-only — previously computed rows of `S̃A` are never
+//! rescaled or moved (prefix consistency), and the scale is folded into
+//! the solve by
+//! [`crate::solvers::woodbury::WoodburyCache::new_scaled`].
+//!
+//! The engine consumes the RNG in exactly the order
+//! [`super::sample`] does, so the *initial* sketch (before any growth)
+//! reproduces the one-shot sampling path draw for draw.
+
+use super::srht::{fwht_rows, hadamard_entry, next_pow2};
+use super::SketchKind;
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+
+/// Per-problem incremental sketch state plus the unnormalized applied
+/// sketch `S̃A`.
+pub struct SketchEngine {
+    kind: SketchKind,
+    n: usize,
+    /// Unnormalized applied sketch (`m x d`), grown append-only.
+    sa: Matrix,
+    state: State,
+}
+
+enum State {
+    Gaussian {
+        /// One entry per growth block: the RNG snapshot taken *before*
+        /// drawing the block plus its row count. `S̃` itself is never
+        /// retained (it would double the solver's memory at `m x n`);
+        /// [`SketchEngine::to_dense`] replays the snapshots instead.
+        draws: Vec<(Xoshiro256, usize)>,
+    },
+    Srht {
+        /// Rademacher signs, length `n`.
+        signs: Vec<f64>,
+        /// Cached `H · diag(signs) · A` (`ñ x d`, unnormalized FWHT) —
+        /// computed once; growth only reads more of its rows.
+        work: Matrix,
+        /// Partial Fisher–Yates state over `0..ñ`; `order[..taken]` are
+        /// the selected Hadamard rows, in selection order.
+        order: Vec<usize>,
+        taken: usize,
+    },
+    Sparse {
+        /// Independent CountSketch blocks, stacked top to bottom.
+        blocks: Vec<SparseBlock>,
+    },
+}
+
+/// One CountSketch block: one (row, sign) pair per ambient coordinate,
+/// with the size weight `sqrt(rows)` baked into its unnormalized output
+/// (fixed at creation — growth never revisits it).
+struct SparseBlock {
+    rows: usize,
+    hash: Vec<u32>,
+    signs: Vec<f64>,
+    /// `sqrt(rows)` — cancels the engine-level `1/sqrt(m)` down to the
+    /// size-weighted block scale `sqrt(rows/m)`.
+    weight: f64,
+}
+
+impl SparseBlock {
+    fn sample(rows: usize, n: usize, rng: &mut Xoshiro256) -> Self {
+        let mut hash = Vec::with_capacity(n);
+        let mut signs = vec![0.0; n];
+        for _ in 0..n {
+            hash.push(rng.next_below(rows as u64) as u32);
+        }
+        rng.fill_rademacher(&mut signs);
+        Self { rows, hash, signs, weight: (rows as f64).sqrt() }
+    }
+
+    /// Unnormalized (weighted) scatter-apply to `a`.
+    fn apply(&self, a: &Matrix) -> Matrix {
+        let d = a.cols();
+        let mut out = Matrix::zeros(self.rows, d);
+        for j in 0..a.rows() {
+            let r = self.hash[j] as usize;
+            let s = self.weight * self.signs[j];
+            let src = a.row(j);
+            let dst = out.row_mut(r);
+            for k in 0..d {
+                dst[k] += s * src[k];
+            }
+        }
+        out
+    }
+}
+
+impl SketchEngine {
+    /// Build the engine at initial size `m`, applying the sketch to `a`
+    /// (`n x d`). `rng` is advanced exactly as [`super::sample`] would.
+    pub fn new(kind: SketchKind, m: usize, a: &Matrix, rng: &mut Xoshiro256) -> Self {
+        let n = a.rows();
+        assert!(m > 0 && n > 0);
+        match kind {
+            SketchKind::Gaussian => {
+                let snapshot = rng.clone();
+                let mut s = Matrix::zeros(m, n);
+                rng.fill_gaussian(s.as_mut_slice(), 1.0);
+                let sa = s.matmul(a);
+                Self { kind, n, sa, state: State::Gaussian { draws: vec![(snapshot, m)] } }
+            }
+            SketchKind::Srht => {
+                let n_pad = next_pow2(n);
+                assert!(m <= n_pad, "SRHT sketch size {m} exceeds padded dim {n_pad}");
+                let mut signs = vec![0.0; n];
+                rng.fill_rademacher(&mut signs);
+                let d = a.cols();
+                let mut work = Matrix::zeros(n_pad, d);
+                for i in 0..n {
+                    let sign = signs[i];
+                    let src = a.row(i);
+                    let dst = work.row_mut(i);
+                    for k in 0..d {
+                        dst[k] = sign * src[k];
+                    }
+                }
+                fwht_rows(&mut work);
+                let mut state = State::Srht { signs, work, order: (0..n_pad).collect(), taken: 0 };
+                let sa = match &mut state {
+                    State::Srht { work, order, taken, .. } => {
+                        let rows = take_without_replacement(order, taken, m, rng);
+                        copy_rows(work, rows)
+                    }
+                    _ => unreachable!(),
+                };
+                Self { kind, n, sa, state }
+            }
+            SketchKind::Sparse => {
+                let block = SparseBlock::sample(m, n, rng);
+                let sa = block.apply(a);
+                Self { kind, n, sa, state: State::Sparse { blocks: vec![block] } }
+            }
+        }
+    }
+
+    /// Grow to `new_m` rows, appending only `Δm = new_m - m` rows of new
+    /// work (`O(Δm n d)` Gaussian, `O(Δm d)` SRHT, `O(nnz(A))` sparse).
+    /// Returns the appended *unnormalized* rows of `S̃A` (what
+    /// [`crate::solvers::woodbury::WoodburyCache::grow`] consumes); the
+    /// existing prefix of [`Self::sa_unnormalized`] is untouched.
+    pub fn grow(&mut self, new_m: usize, a: &Matrix, rng: &mut Xoshiro256) -> Matrix {
+        let m_old = self.m();
+        assert!(new_m > m_old, "grow needs new_m {new_m} > m {m_old}");
+        assert_eq!(a.rows(), self.n, "grow must reuse the engine's problem matrix");
+        let dm = new_m - m_old;
+        let new_rows = match &mut self.state {
+            State::Gaussian { draws } => {
+                draws.push((rng.clone(), dm));
+                let mut g_new = Matrix::zeros(dm, self.n);
+                rng.fill_gaussian(g_new.as_mut_slice(), 1.0);
+                g_new.matmul(a)
+            }
+            State::Srht { work, order, taken, .. } => {
+                assert!(
+                    new_m <= work.rows(),
+                    "SRHT sketch size {new_m} exceeds padded dim {}",
+                    work.rows()
+                );
+                let rows = take_without_replacement(order, taken, dm, rng);
+                copy_rows(work, rows)
+            }
+            State::Sparse { blocks } => {
+                let block = SparseBlock::sample(dm, self.n, rng);
+                let rows = block.apply(a);
+                blocks.push(block);
+                rows
+            }
+        };
+        self.sa.append_rows(&new_rows);
+        new_rows
+    }
+
+    /// Current sketch size `m`.
+    pub fn m(&self) -> usize {
+        self.sa.rows()
+    }
+
+    /// Ambient dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Embedding family.
+    pub fn kind(&self) -> SketchKind {
+        self.kind
+    }
+
+    /// The unnormalized applied sketch `S̃A` (`m x d`). Rows are
+    /// append-only across [`Self::grow`] calls.
+    pub fn sa_unnormalized(&self) -> &Matrix {
+        &self.sa
+    }
+
+    /// Normalization of the effective embedding `scale * S̃`:
+    /// `1/sqrt(m)` for every family (sparse blocks carry their
+    /// `sqrt(m_i)` size weight in the stored rows).
+    pub fn scale(&self) -> f64 {
+        1.0 / (self.m() as f64).sqrt()
+    }
+
+    /// Materialize the effective (normalized) `m x n` embedding — tests
+    /// and diagnostics only.
+    pub fn to_dense(&self) -> Matrix {
+        let scale = self.scale();
+        match &self.state {
+            State::Gaussian { draws } => {
+                let mut out = Matrix::zeros(self.m(), self.n);
+                let mut r0 = 0;
+                for (snapshot, rows) in draws {
+                    let mut rng = snapshot.clone();
+                    let block = &mut out.as_mut_slice()[r0 * self.n..(r0 + rows) * self.n];
+                    rng.fill_gaussian(block, 1.0);
+                    r0 += rows;
+                }
+                crate::linalg::scale(scale, out.as_mut_slice());
+                out
+            }
+            State::Srht { signs, order, taken, .. } => {
+                Matrix::from_fn(*taken, self.n, |r, j| scale * signs[j] * hadamard_entry(order[r], j))
+            }
+            State::Sparse { blocks } => {
+                let mut out = Matrix::zeros(self.m(), self.n);
+                let mut r0 = 0;
+                for block in blocks {
+                    for j in 0..self.n {
+                        out.set(
+                            r0 + block.hash[j] as usize,
+                            j,
+                            scale * block.weight * block.signs[j],
+                        );
+                    }
+                    r0 += block.rows;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Continue a partial Fisher–Yates shuffle: select `k` more indices
+/// without replacement, returning the newly selected slice. Consuming the
+/// RNG exactly like [`Xoshiro256::sample_without_replacement`] does, the
+/// first `m` selections of an incrementally grown sample match a one-shot
+/// sample of size `m` draw for draw.
+fn take_without_replacement<'a>(
+    order: &'a mut [usize],
+    taken: &mut usize,
+    k: usize,
+    rng: &mut Xoshiro256,
+) -> &'a [usize] {
+    let n = order.len();
+    let start = *taken;
+    assert!(start + k <= n, "cannot select {k} more of {n} without replacement");
+    for i in start..start + k {
+        let j = i + rng.next_below((n - i) as u64) as usize;
+        order.swap(i, j);
+    }
+    *taken += k;
+    &order[start..*taken]
+}
+
+/// Copy the given rows of `src` into a fresh matrix, preserving order.
+fn copy_rows(src: &Matrix, rows: &[usize]) -> Matrix {
+    let d = src.cols();
+    let mut out = Matrix::zeros(rows.len(), d);
+    for (oi, &ri) in rows.iter().enumerate() {
+        out.row_mut(oi).copy_from_slice(src.row(ri));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{self, Sketch as _};
+
+    fn test_a(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Matrix::from_fn(n, d, |_, _| rng.next_gaussian())
+    }
+
+    const KINDS: [SketchKind; 3] = [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse];
+
+    #[test]
+    fn initial_sketch_matches_one_shot_sampling() {
+        // Same seed, same draws: the engine's effective embedding equals
+        // the non-incremental sample before any growth.
+        let a = test_a(24, 5, 1);
+        for kind in KINDS {
+            let mut r1 = Xoshiro256::seed_from_u64(42);
+            let mut r2 = Xoshiro256::seed_from_u64(42);
+            let engine = SketchEngine::new(kind, 6, &a, &mut r1);
+            let one_shot = sketch::sample(kind, 6, 24, &mut r2);
+            assert!(
+                engine.to_dense().max_abs_diff(&one_shot.to_dense()) < 1e-12,
+                "{kind} initial mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn grow_keeps_prefix_bitwise_identical() {
+        let a = test_a(30, 7, 2);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            let mut engine = SketchEngine::new(kind, 4, &a, &mut rng);
+            let before = engine.sa_unnormalized().clone();
+            engine.grow(11, &a, &mut rng);
+            assert_eq!(engine.m(), 11);
+            for i in 0..4 {
+                assert_eq!(
+                    engine.sa_unnormalized().row(i),
+                    before.row(i),
+                    "{kind} row {i} changed under growth"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grown_sketch_matches_dense_composition() {
+        // scale * S̃A == to_dense() * A after multiple growths.
+        let a = test_a(20, 6, 4); // n = 20 pads to 32
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(5);
+            let mut engine = SketchEngine::new(kind, 2, &a, &mut rng);
+            engine.grow(5, &a, &mut rng);
+            engine.grow(13, &a, &mut rng);
+            let mut sa = engine.sa_unnormalized().clone();
+            crate::linalg::scale(engine.scale(), sa.as_mut_slice());
+            let composed = engine.to_dense().matmul(&a);
+            assert!(sa.max_abs_diff(&composed) < 1e-10, "{kind} grow/apply drift");
+        }
+    }
+
+    #[test]
+    fn grow_returns_exactly_the_appended_rows() {
+        let a = test_a(16, 4, 6);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(7);
+            let mut engine = SketchEngine::new(kind, 3, &a, &mut rng);
+            let new_rows = engine.grow(8, &a, &mut rng);
+            assert_eq!((new_rows.rows(), new_rows.cols()), (5, 4), "{kind}");
+            for i in 0..5 {
+                assert_eq!(new_rows.row(i), engine.sa_unnormalized().row(3 + i), "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn srht_rows_stay_distinct_across_growth() {
+        let a = test_a(24, 3, 8); // pads to 32
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut engine = SketchEngine::new(SketchKind::Srht, 8, &a, &mut rng);
+        engine.grow(20, &a, &mut rng);
+        engine.grow(32, &a, &mut rng); // full padded dimension
+        match &engine.state {
+            State::Srht { order, taken, .. } => {
+                let mut sel = order[..*taken].to_vec();
+                sel.sort_unstable();
+                sel.dedup();
+                assert_eq!(sel.len(), 32, "rows must be without replacement");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn sparse_growth_stacks_size_weighted_blocks() {
+        let a = test_a(18, 4, 10);
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut engine = SketchEngine::new(SketchKind::Sparse, 3, &a, &mut rng);
+        engine.grow(6, &a, &mut rng);
+        engine.grow(10, &a, &mut rng);
+        assert!((engine.scale() - 1.0 / 10f64.sqrt()).abs() < 1e-15);
+        // Each column of the dense embedding has one entry per block,
+        // with magnitude sqrt(m_i / m) — the size weighting that keeps
+        // E[S^T S] = I with fresh-CountSketch variance.
+        let dense = engine.to_dense();
+        for j in 0..18 {
+            let mags: Vec<f64> = (0..10).map(|i| dense.get(i, j).abs()).filter(|&v| v != 0.0).collect();
+            assert_eq!(mags.len(), 3, "column {j}: one entry per block");
+            let mut expect: Vec<f64> =
+                [3f64, 3.0, 4.0].iter().map(|mi| (mi / 10.0).sqrt()).collect();
+            let mut got = mags.clone();
+            expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (g, e) in got.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-12, "column {j}: {got:?} vs {expect:?}");
+            }
+        }
+        // E[S^T S] = I structurally: column norms are exactly 1.
+        for j in 0..18 {
+            let norm2: f64 = (0..10).map(|i| dense.get(i, j).powi(2)).sum();
+            assert!((norm2 - 1.0).abs() < 1e-12, "column {j} norm {norm2}");
+        }
+    }
+
+    #[test]
+    fn gaussian_scale_tracks_m() {
+        let a = test_a(12, 3, 12);
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let mut engine = SketchEngine::new(SketchKind::Gaussian, 2, &a, &mut rng);
+        assert!((engine.scale() - 1.0 / 2f64.sqrt()).abs() < 1e-15);
+        engine.grow(9, &a, &mut rng);
+        assert!((engine.scale() - 1.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deterministic_given_stream() {
+        let a = test_a(20, 5, 14);
+        for kind in KINDS {
+            let run = || {
+                let mut rng = Xoshiro256::seed_from_u64(15);
+                let mut e = SketchEngine::new(kind, 3, &a, &mut rng);
+                e.grow(7, &a, &mut rng);
+                e.sa_unnormalized().clone()
+            };
+            let (s1, s2) = (run(), run());
+            assert_eq!(s1, s2, "{kind}");
+        }
+    }
+}

@@ -12,7 +12,21 @@
 //! All embeddings implement [`Sketch`], which exposes the only operation
 //! the solvers need — *apply to a matrix* — plus metadata. Sketches are
 //! deterministic given an RNG stream, so experiments are reproducible.
+//!
+//! # Incremental growth
+//!
+//! The adaptive solver grows `m` by doubling; re-sampling and re-applying
+//! `S` from scratch on every growth would cost `O(m n d)` / `O(ñ d log ñ)`
+//! per rejection round. [`engine::SketchEngine`] instead keeps per-problem
+//! state (Gaussian RNG block snapshots, the FWHT'd SRHT work buffer, the
+//! CountSketch blocks) and appends only `Δm` rows per growth. Its contract: stored
+//! rows of `S̃A` are *unnormalized* and append-only (a grown sketch agrees
+//! bitwise with its own pre-growth prefix), while the `1/sqrt(m)`-style
+//! normalization is reported separately via `SketchEngine::scale` and
+//! folded into the Woodbury solve. See the engine docs for the per-family
+//! growth costs and distribution guarantees.
 
+pub mod engine;
 pub mod gaussian;
 pub mod sparse;
 pub mod srht;
@@ -74,8 +88,10 @@ pub fn sample(kind: SketchKind, m: usize, n: usize, rng: &mut Xoshiro256) -> Box
     }
 }
 
-/// Flop-count model for forming `SA` (used by the complexity harness,
-/// Theorem 7): Gaussian `2mnd`, SRHT `nd log2(n~) + md`, sparse
+/// Flop-count model for forming `SA` from scratch (used by the complexity
+/// harness, Theorem 7): Gaussian `2mnd`, SRHT `ñ d log2(ñ) + m d` with
+/// `ñ = next_pow2(n)` (the FWHT runs over the *padded* row dimension — a
+/// non-power-of-two `n` pays for the zero-padded transform), sparse
 /// `2 nnz(A)`. The sparse model needs the input's nonzero count; pass
 /// `nnz = None` for dense data (where `nnz(A) = n d`).
 pub fn sketch_cost_flops(kind: SketchKind, m: usize, n: usize, d: usize, nnz: Option<usize>) -> f64 {
@@ -83,10 +99,41 @@ pub fn sketch_cost_flops(kind: SketchKind, m: usize, n: usize, d: usize, nnz: Op
     match kind {
         SketchKind::Gaussian => 2.0 * mf * nf * df,
         SketchKind::Srht => {
-            let np = (n.max(2) as f64).log2().ceil();
-            nf * df * np + mf * df
+            let n_pad = srht::next_pow2(n.max(2)) as f64;
+            n_pad * df * n_pad.log2() + mf * df
         }
         SketchKind::Sparse => 2.0 * nnz.map(|z| z as f64).unwrap_or(nf * df),
+    }
+}
+
+/// Flop-count model for building `SA` *incrementally* up to size `m`
+/// through [`engine::SketchEngine`] growth (the cached path the adaptive
+/// solver takes), over `growth_steps` growth rounds:
+///
+/// * Gaussian — appended rows sum to `m`, so the total equals the
+///   one-shot cost `2 m n d` (but each *round* paid only for its `Δm`);
+/// * SRHT — the FWHT work buffer is paid once (`ñ d log2 ñ`), growth
+///   rounds only select rows: `+ m d` total;
+/// * sparse — one `2 nnz(A)` scatter per block (`growth_steps + 1`
+///   blocks).
+pub fn incremental_sketch_cost_flops(
+    kind: SketchKind,
+    m: usize,
+    n: usize,
+    d: usize,
+    nnz: Option<usize>,
+    growth_steps: usize,
+) -> f64 {
+    let (mf, nf, df) = (m as f64, n as f64, d as f64);
+    match kind {
+        SketchKind::Gaussian => 2.0 * mf * nf * df,
+        SketchKind::Srht => {
+            let n_pad = srht::next_pow2(n.max(2)) as f64;
+            n_pad * df * n_pad.log2() + mf * df
+        }
+        SketchKind::Sparse => {
+            2.0 * nnz.map(|z| z as f64).unwrap_or(nf * df) * (growth_steps + 1) as f64
+        }
     }
 }
 
@@ -125,6 +172,48 @@ mod tests {
         let s = sketch_cost_flops(SketchKind::Sparse, m, n, d, None);
         assert!(h < g);
         assert!(s < h);
+    }
+
+    #[test]
+    fn srht_cost_uses_padded_dimension() {
+        // n = 4097 pads to 8192: the FWHT term must jump accordingly, not
+        // track the raw n.
+        let (m, d) = (128, 64);
+        let at_pow2 = sketch_cost_flops(SketchKind::Srht, m, 4096, d, None);
+        let just_past = sketch_cost_flops(SketchKind::Srht, m, 4097, d, None);
+        let expect_past = 8192.0 * d as f64 * 13.0 + (m * d) as f64;
+        assert_eq!(just_past, expect_past);
+        assert!(just_past > 1.9 * at_pow2, "padding to 2n doubles the FWHT term");
+        // Same padded cost across the whole bracket.
+        assert_eq!(just_past, sketch_cost_flops(SketchKind::Srht, m, 8192, d, None));
+    }
+
+    #[test]
+    fn incremental_cost_beats_cumulative_regrow_for_srht() {
+        // Doubling 1 -> 512 with re-apply pays the FWHT ~10 times; the
+        // cached path pays it once.
+        let (n, d) = (4096usize, 256usize);
+        let schedule: Vec<usize> = (0..10).map(|i| 1usize << i).collect();
+        let regrow: f64 =
+            schedule.iter().map(|&m| sketch_cost_flops(SketchKind::Srht, m, n, d, None)).sum();
+        let incremental =
+            incremental_sketch_cost_flops(SketchKind::Srht, 512, n, d, None, schedule.len() - 1);
+        assert!(
+            incremental * 5.0 < regrow,
+            "incremental {incremental:.3e} should be >= 5x below regrow {regrow:.3e}"
+        );
+    }
+
+    #[test]
+    fn incremental_gaussian_totals_one_shot() {
+        // Appended Gaussian rows sum to m: total flops equal the one-shot
+        // application at the final size, regardless of the growth count.
+        let g1 = incremental_sketch_cost_flops(SketchKind::Gaussian, 256, 2048, 64, None, 8);
+        let g2 = sketch_cost_flops(SketchKind::Gaussian, 256, 2048, 64, None);
+        assert_eq!(g1, g2);
+        // Sparse pays one scatter per block.
+        let s = incremental_sketch_cost_flops(SketchKind::Sparse, 256, 2048, 64, Some(1000), 3);
+        assert_eq!(s, 2.0 * 1000.0 * 4.0);
     }
 
     #[test]

@@ -32,31 +32,68 @@ pub fn next_pow2(n: usize) -> usize {
     n.next_power_of_two()
 }
 
+/// Entry `(i, j)` of the *unnormalized* Sylvester Hadamard matrix:
+/// `(-1)^popcount(i & j)`. Used to materialize SRHT rows without running
+/// a transform (tests / `SketchEngine::to_dense`).
+pub fn hadamard_entry(i: usize, j: usize) -> f64 {
+    if (i & j).count_ones() % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
 /// In-place *unnormalized* fast Walsh–Hadamard transform over the row
 /// dimension of an `n_pad x d` matrix (each butterfly operates on whole
 /// rows, so the inner loops stream contiguous memory).
+///
+/// Large transforms run stage-by-stage on scoped threads (the
+/// [`crate::linalg::threads`] knob): at each stage the `n/2` butterfly
+/// row pairs are disjoint, so the matrix splits into equal-length
+/// `(lo, hi)` half-slices processed independently. Every element sees the
+/// same `(u+v, u-v)` update regardless of the partition, so results are
+/// bitwise identical at any thread count.
 pub fn fwht_rows(work: &mut Matrix) {
     let n = work.rows();
     assert!(n.is_power_of_two(), "FWHT needs power-of-two rows");
     let d = work.cols();
+    if n <= 1 {
+        return;
+    }
+    let stages = n.trailing_zeros() as f64;
+    let flops = 2.0 * n as f64 * d as f64 * stages;
+    let threads = if crate::linalg::threads::worth_parallelizing(flops) {
+        crate::linalg::threads::current()
+    } else {
+        1
+    };
+    // Aim for a few jobs per thread so the round-robin deal stays balanced
+    // even when group boundaries leave ragged tails.
+    let pair_rows_per_job = if threads > 1 {
+        ((n / 2 + 4 * threads - 1) / (4 * threads)).max(1)
+    } else {
+        n / 2
+    };
+    let data = work.as_mut_slice();
     let mut len = 1;
     while len < n {
         let stride = len * 2;
-        for base in (0..n).step_by(stride) {
-            for i in base..base + len {
-                let j = i + len;
-                // Split borrow: rows i and j are disjoint.
-                let (head, tail) = work.as_mut_slice().split_at_mut(j * d);
-                let ri = &mut head[i * d..i * d + d];
-                let rj = &mut tail[..d];
-                for k in 0..d {
-                    let u = ri[k];
-                    let v = rj[k];
-                    ri[k] = u + v;
-                    rj[k] = u - v;
-                }
-            }
+        let mut jobs: Vec<(&mut [f64], &mut [f64])> =
+            Vec::with_capacity(n / 2 / pair_rows_per_job + 1);
+        for group in data.chunks_mut(stride * d) {
+            // Rows [0, len) of the group pair with rows [len, stride).
+            let (lo, hi) = group.split_at_mut(len * d);
+            let per = pair_rows_per_job.min(len) * d;
+            jobs.extend(lo.chunks_mut(per).zip(hi.chunks_mut(per)));
         }
+        crate::linalg::threads::run_jobs(threads, jobs, |(lo, hi)| {
+            for k in 0..lo.len() {
+                let u = lo[k];
+                let v = hi[k];
+                lo[k] = u + v;
+                hi[k] = u - v;
+            }
+        });
         len = stride;
     }
 }
@@ -158,6 +195,33 @@ mod tests {
         for i in 0..4 {
             let expect: f64 = (0..4).map(|j| h4[i][j] * x[j]).sum();
             assert!((y[i] - expect).abs() < 1e-12, "row {i}");
+        }
+    }
+
+    #[test]
+    fn hadamard_entry_matches_fwht() {
+        // FWHT of the i-th unit vector is the i-th Hadamard row.
+        for i in 0..8 {
+            let mut e = vec![0.0; 8];
+            e[i] = 1.0;
+            fwht_vec(&mut e);
+            for j in 0..8 {
+                assert_eq!(e[j], hadamard_entry(i, j), "H[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_rows_parallel_bitwise_matches_serial() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        // 512 x 128 crosses the parallel threshold (512*128*9*2 ~ 1.2e6).
+        let m0 = Matrix::from_fn(512, 128, |_, _| rng.next_gaussian());
+        let mut serial = m0.clone();
+        crate::linalg::threads::with_threads(1, || fwht_rows(&mut serial));
+        for t in [2, 4] {
+            let mut par = m0.clone();
+            crate::linalg::threads::with_threads(t, || fwht_rows(&mut par));
+            assert_eq!(par, serial, "threads={t}");
         }
     }
 

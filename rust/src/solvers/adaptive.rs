@@ -16,6 +16,14 @@
 //! `O(d_e log d_e / rho)` (SRHT), with at most `O(log(d_e/rho))` rejected
 //! rounds, and overall error `delta_t / delta_1 <= O(c_gd(rho)^{t-1})`.
 //!
+//! Growth is *incremental* (the premise of Theorem 7's cost model): a
+//! [`SketchEngine`] appends `Δm` new rows of `S̃A` — `O(Δm n d)` Gaussian,
+//! `O(Δm d)` SRHT after a one-time FWHT, `O(nnz)` sparse — and
+//! [`WoodburyCache::grow`] reuses the old `(S̃A)(S̃A)^T` block, so a
+//! rejection round pays only for the new rows instead of re-sketching and
+//! re-factoring from scratch. `sketch_time_s` / `factor_time_s` in the
+//! [`SolveReport`] measure exactly this reduced per-growth work.
+//!
 //! The `GradientOnly` variant (also evaluated in the paper's §5) skips the
 //! Polyak candidate — same guarantees, and faster in practice when the
 //! Polyak step is frequently rejected (one gradient evaluation per
@@ -25,7 +33,8 @@ use super::woodbury::WoodburyCache;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{axpy, dot, norm2};
 use crate::rng::Xoshiro256;
-use crate::sketch::{self, SketchKind};
+use crate::sketch::engine::SketchEngine;
+use crate::sketch::SketchKind;
 use crate::theory::rates::IhsParams;
 use crate::theory::{gaussian_bounds, srht_bounds};
 use std::time::Instant;
@@ -107,6 +116,9 @@ pub struct AdaptiveSolver<'p> {
 
     // Iteration state.
     pub m: usize,
+    /// Incremental sketch state; dropped once `m` hits the cap (the cache
+    /// then holds the exact Hessian and no further growth is possible).
+    engine: Option<SketchEngine>,
     cache: WoodburyCache,
     x_prev: Vec<f64>,
     x: Vec<f64>,
@@ -144,11 +156,11 @@ impl<'p> AdaptiveSolver<'p> {
         });
 
         let t0 = Instant::now();
-        let s = sketch::sample(config.kind, m, problem.n(), &mut rng);
-        let sa = s.apply(&problem.a);
+        let engine = SketchEngine::new(config.kind, m, &problem.a, &mut rng);
         report.sketch_time_s += t0.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        let cache = WoodburyCache::new(sa, problem.nu);
+        let cache =
+            WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), problem.nu, engine.scale());
         report.factor_time_s += t0.elapsed().as_secs_f64();
 
         let x = x0.to_vec();
@@ -167,6 +179,7 @@ impl<'p> AdaptiveSolver<'p> {
             grad_fn: Box::new(move |x| problem.gradient(x)),
             m_cap,
             m,
+            engine: Some(engine),
             cache,
             x_prev: x.clone(),
             x,
@@ -205,8 +218,11 @@ impl<'p> AdaptiveSolver<'p> {
         self.r_t
     }
 
-    /// Double the sketch size, resample, re-factor, and refresh the
-    /// decrement state (step 14–15 of Algorithm 1).
+    /// Double the sketch size *in place* — append `Δm` rows through the
+    /// incremental engine, extend the Woodbury factorization, and refresh
+    /// the decrement state (step 14–15 of Algorithm 1). The growth round
+    /// costs `O(Δm)`-proportional work (new rows + cross-Gram), not the
+    /// from-scratch `O(m)` re-sketch/re-factor.
     fn grow_sketch(&mut self) {
         let new_m = (self.m * self.config.growth).min(self.m_cap);
         self.report.doublings += 1;
@@ -214,22 +230,28 @@ impl<'p> AdaptiveSolver<'p> {
         self.report.peak_m = self.report.peak_m.max(new_m);
         self.report.final_m = new_m;
 
-        let t0 = Instant::now();
-        let sa = if new_m >= self.m_cap {
+        if new_m >= self.m_cap {
             // At the cap, drop sketching entirely: with S = I the cache
             // holds the exact Hessian (H_S = A^T A + nu^2 I), so forced
             // steps are damped exact-Newton and cannot stall. (An
             // orthogonal SRHT at m = n_pad is exact anyway; a Gaussian
             // sketch at m = n is not, hence the explicit fallback.)
-            self.problem.a.clone()
+            let t0 = Instant::now();
+            let sa = self.problem.a.clone();
+            self.report.sketch_time_s += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            self.cache = WoodburyCache::new(sa, self.problem.nu);
+            self.report.factor_time_s += t0.elapsed().as_secs_f64();
+            self.engine = None;
         } else {
-            let s = sketch::sample(self.config.kind, new_m, self.problem.n(), &mut self.rng);
-            s.apply(&self.problem.a)
-        };
-        self.report.sketch_time_s += t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
-        self.cache = WoodburyCache::new(sa, self.problem.nu);
-        self.report.factor_time_s += t0.elapsed().as_secs_f64();
+            let engine = self.engine.as_mut().expect("engine lives until the cap");
+            let t0 = Instant::now();
+            let new_rows = engine.grow(new_m, &self.problem.a, &mut self.rng);
+            self.report.sketch_time_s += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            self.cache.grow(&new_rows, engine.scale());
+            self.report.factor_time_s += t0.elapsed().as_secs_f64();
+        }
 
         // g_t is unchanged; the preconditioned direction and decrement are
         // re-evaluated under the new sketch geometry.

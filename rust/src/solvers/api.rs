@@ -11,8 +11,12 @@
 //!   that is `FromStr`/`Display` round-trippable. Spec strings follow the
 //!   grammar `name[@key=value[,key=value...]]`, e.g. `"cg"`,
 //!   `"pcg-gaussian"`, `"adaptive-srht"`, `"ihs-sparse@m=256"`,
-//!   `"pcg-srht@rho=0.25"`. Specs travel over the wire (coordinator
-//!   protocol), across the CLI, and through the bench harness.
+//!   `"pcg-srht@rho=0.25"`, `"adaptive-srht@threads=8"`. Specs travel
+//!   over the wire (coordinator protocol), across the CLI, and through
+//!   the bench harness. The `threads` param pins the parallel dense
+//!   kernels ([`crate::linalg::threads`]) for the duration of that
+//!   solver's `solve` call; without it the kernels use the global /
+//!   `PALLAS_THREADS` / hardware default.
 //! * [`SolverSpec::build`] — turn a spec plus an explicit `seed` into a
 //!   boxed [`Solver`]. Seeding is part of construction; no `&mut rng`
 //!   threads through call sites, and a built solver is deterministic:
@@ -67,22 +71,31 @@ pub enum SolverSpec {
     /// Conjugate gradient baseline.
     Cg,
     /// Randomized-preconditioned CG (Rokhlin–Tygert style).
-    Pcg { kind: SketchKind, rho: f64 },
+    Pcg { kind: SketchKind, rho: f64, threads: Option<usize> },
     /// Fixed-sketch-size IHS (Theorems 1–2). `m = None` defaults to `d`
     /// at solve time — a memory budget matching pCG's minimum, adequate
     /// whenever `d_e << d`. The fixed-size step parameters assume aspect
     /// ratio `d_e/m ~ rho`; when `d_e` approaches `d` (tiny `nu`) pick an
     /// explicit `@m=...` or use an `Adaptive` spec, which needs no `m` at
     /// all. `momentum` selects the Polyak heavy-ball update.
-    Ihs { kind: SketchKind, m: Option<usize>, momentum: bool },
+    Ihs { kind: SketchKind, m: Option<usize>, momentum: bool, threads: Option<usize> },
     /// Algorithm 1, the paper's adaptive solver.
-    Adaptive { kind: SketchKind, variant: AdaptiveVariant },
+    Adaptive { kind: SketchKind, variant: AdaptiveVariant, threads: Option<usize> },
     /// Underdetermined problems (`d >= n`) via the dual reduction
     /// (Appendix A.2), solved with Algorithm 1. The built solver panics
     /// if the problem lacks raw observations `b` (normal-form problems)
     /// or is overdetermined (`n > d`) — the coordinator pre-checks this;
     /// library callers must too.
-    DualAdaptive { kind: SketchKind },
+    DualAdaptive { kind: SketchKind, threads: Option<usize> },
+}
+
+/// Run `f` with the dense kernels pinned to `threads` threads (no-op for
+/// `None`) — the per-solve hook behind the `@threads=k` spec param.
+fn with_spec_threads<R>(threads: Option<usize>, f: impl FnOnce() -> R) -> R {
+    match threads {
+        Some(k) => crate::linalg::threads::with_threads(k, f),
+        None => f(),
+    }
 }
 
 /// Default aspect-ratio parameter `rho` for pCG preconditioner sizing.
@@ -138,59 +151,90 @@ impl SolverSpec {
         match self {
             SolverSpec::Direct => Box::new(DirectSolver),
             SolverSpec::Cg => Box::new(CgSolver { config: CgConfig { max_iters: 200_000 } }),
-            SolverSpec::Pcg { kind, rho } => Box::new(PcgSolver {
+            SolverSpec::Pcg { kind, rho, threads } => Box::new(PcgSolver {
                 config: PcgConfig::new(*kind, *rho),
                 label: self.to_string(),
                 seed,
+                threads: *threads,
             }),
-            SolverSpec::Ihs { kind, m, momentum } => Box::new(IhsSolver {
+            SolverSpec::Ihs { kind, m, momentum, threads } => Box::new(IhsSolver {
                 kind: *kind,
                 m: *m,
                 momentum: *momentum,
                 label: self.to_string(),
                 seed,
+                threads: *threads,
             }),
-            SolverSpec::Adaptive { kind, variant } => {
+            SolverSpec::Adaptive { kind, variant, threads } => {
                 let mut config = AdaptiveConfig::new(*kind);
                 config.variant = *variant;
-                Box::new(AdaptiveIhsSolver { config, label: self.to_string(), seed })
+                Box::new(AdaptiveIhsSolver {
+                    config,
+                    label: self.to_string(),
+                    seed,
+                    threads: *threads,
+                })
             }
-            SolverSpec::DualAdaptive { kind } => {
-                Box::new(DualAdaptiveSolver { kind: *kind, label: self.to_string(), seed })
-            }
+            SolverSpec::DualAdaptive { kind, threads } => Box::new(DualAdaptiveSolver {
+                kind: *kind,
+                label: self.to_string(),
+                seed,
+                threads: *threads,
+            }),
         }
     }
 }
 
 impl fmt::Display for SolverSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Base name + ordered `key=value` params (only non-defaults are
+        // emitted, keeping canonical labels minimal and round-trippable).
+        let mut params: Vec<String> = Vec::new();
         match self {
-            SolverSpec::Direct => write!(f, "direct"),
-            SolverSpec::Cg => write!(f, "cg"),
-            SolverSpec::Pcg { kind, rho } => {
+            SolverSpec::Direct => write!(f, "direct")?,
+            SolverSpec::Cg => write!(f, "cg")?,
+            SolverSpec::Pcg { kind, rho, threads } => {
                 write!(f, "pcg-{kind}")?;
                 if *rho != DEFAULT_PCG_RHO {
-                    write!(f, "@rho={rho}")?;
+                    params.push(format!("rho={rho}"));
                 }
-                Ok(())
+                if let Some(t) = threads {
+                    params.push(format!("threads={t}"));
+                }
             }
-            SolverSpec::Ihs { kind, m, momentum } => {
+            SolverSpec::Ihs { kind, m, momentum, threads } => {
                 if *momentum {
                     write!(f, "polyak-ihs-{kind}")?;
                 } else {
                     write!(f, "ihs-{kind}")?;
                 }
                 if let Some(m) = m {
-                    write!(f, "@m={m}")?;
+                    params.push(format!("m={m}"));
                 }
-                Ok(())
+                if let Some(t) = threads {
+                    params.push(format!("threads={t}"));
+                }
             }
-            SolverSpec::Adaptive { kind, variant } => match variant {
-                AdaptiveVariant::PolyakFirst => write!(f, "adaptive-{kind}"),
-                AdaptiveVariant::GradientOnly => write!(f, "adaptive-gd-{kind}"),
-            },
-            SolverSpec::DualAdaptive { kind } => write!(f, "dual-adaptive-{kind}"),
+            SolverSpec::Adaptive { kind, variant, threads } => {
+                match variant {
+                    AdaptiveVariant::PolyakFirst => write!(f, "adaptive-{kind}")?,
+                    AdaptiveVariant::GradientOnly => write!(f, "adaptive-gd-{kind}")?,
+                }
+                if let Some(t) = threads {
+                    params.push(format!("threads={t}"));
+                }
+            }
+            SolverSpec::DualAdaptive { kind, threads } => {
+                write!(f, "dual-adaptive-{kind}")?;
+                if let Some(t) = threads {
+                    params.push(format!("threads={t}"));
+                }
+            }
         }
+        if !params.is_empty() {
+            write!(f, "@{}", params.join(","))?;
+        }
+        Ok(())
     }
 }
 
@@ -210,14 +254,20 @@ impl FromStr for SolverSpec {
         let mut spec = match base {
             "direct" => SolverSpec::Direct,
             "cg" => SolverSpec::Cg,
-            "pcg" => SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO },
-            "adaptive" => {
-                SolverSpec::Adaptive { kind: SketchKind::Gaussian, variant: AdaptiveVariant::PolyakFirst }
+            "pcg" => {
+                SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO, threads: None }
             }
-            "adaptive-gd" => {
-                SolverSpec::Adaptive { kind: SketchKind::Gaussian, variant: AdaptiveVariant::GradientOnly }
-            }
-            "dual" => SolverSpec::DualAdaptive { kind: SketchKind::Gaussian },
+            "adaptive" => SolverSpec::Adaptive {
+                kind: SketchKind::Gaussian,
+                variant: AdaptiveVariant::PolyakFirst,
+                threads: None,
+            },
+            "adaptive-gd" => SolverSpec::Adaptive {
+                kind: SketchKind::Gaussian,
+                variant: AdaptiveVariant::GradientOnly,
+                threads: None,
+            },
+            "dual" => SolverSpec::DualAdaptive { kind: SketchKind::Gaussian, threads: None },
             _ => {
                 // `<family>-<kind>` with the sketch kind as the last
                 // '-'-separated token.
@@ -228,16 +278,22 @@ impl FromStr for SolverSpec {
                     format!("unknown solver: {base} (bad sketch kind {kind_str:?})")
                 })?;
                 match family {
-                    "pcg" => SolverSpec::Pcg { kind, rho: DEFAULT_PCG_RHO },
-                    "ihs" => SolverSpec::Ihs { kind, m: None, momentum: false },
-                    "polyak-ihs" => SolverSpec::Ihs { kind, m: None, momentum: true },
-                    "adaptive" => {
-                        SolverSpec::Adaptive { kind, variant: AdaptiveVariant::PolyakFirst }
+                    "pcg" => SolverSpec::Pcg { kind, rho: DEFAULT_PCG_RHO, threads: None },
+                    "ihs" => SolverSpec::Ihs { kind, m: None, momentum: false, threads: None },
+                    "polyak-ihs" => {
+                        SolverSpec::Ihs { kind, m: None, momentum: true, threads: None }
                     }
-                    "adaptive-gd" => {
-                        SolverSpec::Adaptive { kind, variant: AdaptiveVariant::GradientOnly }
-                    }
-                    "dual-adaptive" => SolverSpec::DualAdaptive { kind },
+                    "adaptive" => SolverSpec::Adaptive {
+                        kind,
+                        variant: AdaptiveVariant::PolyakFirst,
+                        threads: None,
+                    },
+                    "adaptive-gd" => SolverSpec::Adaptive {
+                        kind,
+                        variant: AdaptiveVariant::GradientOnly,
+                        threads: None,
+                    },
+                    "dual-adaptive" => SolverSpec::DualAdaptive { kind, threads: None },
                     _ => return Err(format!("unknown solver: {base}")),
                 }
             }
@@ -269,6 +325,22 @@ impl FromStr for SolverSpec {
                         }
                         *rho = v;
                     }
+                    (
+                        "threads",
+                        SolverSpec::Pcg { threads, .. }
+                        | SolverSpec::Ihs { threads, .. }
+                        | SolverSpec::Adaptive { threads, .. }
+                        | SolverSpec::DualAdaptive { threads, .. },
+                    ) => {
+                        let v: usize = value
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("bad threads value {value:?}"))?;
+                        if v == 0 {
+                            return Err("threads must be >= 1".into());
+                        }
+                        *threads = Some(v);
+                    }
                     (other, _) => {
                         return Err(format!("param {other:?} not supported by solver {base:?}"))
                     }
@@ -288,19 +360,19 @@ pub fn registry() -> Vec<SolverSpec> {
     vec![
         SolverSpec::Direct,
         SolverSpec::Cg,
-        SolverSpec::Pcg { kind: Gaussian, rho: DEFAULT_PCG_RHO },
-        SolverSpec::Pcg { kind: Srht, rho: DEFAULT_PCG_RHO },
-        SolverSpec::Ihs { kind: Gaussian, m: None, momentum: false },
-        SolverSpec::Ihs { kind: Srht, m: None, momentum: false },
-        SolverSpec::Ihs { kind: Sparse, m: None, momentum: false },
-        SolverSpec::Ihs { kind: Gaussian, m: None, momentum: true },
-        SolverSpec::Ihs { kind: Srht, m: None, momentum: true },
-        SolverSpec::Adaptive { kind: Gaussian, variant: PolyakFirst },
-        SolverSpec::Adaptive { kind: Srht, variant: PolyakFirst },
-        SolverSpec::Adaptive { kind: Sparse, variant: PolyakFirst },
-        SolverSpec::Adaptive { kind: Gaussian, variant: GradientOnly },
-        SolverSpec::Adaptive { kind: Srht, variant: GradientOnly },
-        SolverSpec::DualAdaptive { kind: Gaussian },
+        SolverSpec::Pcg { kind: Gaussian, rho: DEFAULT_PCG_RHO, threads: None },
+        SolverSpec::Pcg { kind: Srht, rho: DEFAULT_PCG_RHO, threads: None },
+        SolverSpec::Ihs { kind: Gaussian, m: None, momentum: false, threads: None },
+        SolverSpec::Ihs { kind: Srht, m: None, momentum: false, threads: None },
+        SolverSpec::Ihs { kind: Sparse, m: None, momentum: false, threads: None },
+        SolverSpec::Ihs { kind: Gaussian, m: None, momentum: true, threads: None },
+        SolverSpec::Ihs { kind: Srht, m: None, momentum: true, threads: None },
+        SolverSpec::Adaptive { kind: Gaussian, variant: PolyakFirst, threads: None },
+        SolverSpec::Adaptive { kind: Srht, variant: PolyakFirst, threads: None },
+        SolverSpec::Adaptive { kind: Sparse, variant: PolyakFirst, threads: None },
+        SolverSpec::Adaptive { kind: Gaussian, variant: GradientOnly, threads: None },
+        SolverSpec::Adaptive { kind: Srht, variant: GradientOnly, threads: None },
+        SolverSpec::DualAdaptive { kind: Gaussian, threads: None },
     ]
 }
 
@@ -399,6 +471,7 @@ struct PcgSolver {
     config: PcgConfig,
     label: String,
     seed: u64,
+    threads: Option<usize>,
 }
 
 impl Solver for PcgSolver {
@@ -415,7 +488,9 @@ impl Solver for PcgSolver {
     }
 
     fn solve(&self, problem: &RidgeProblem, x0: &[f64], stop: &StopRule) -> Solution {
-        let mut sol = pcg::solve(problem, x0, &self.config, stop, self.seed);
+        let mut sol = with_spec_threads(self.threads, || {
+            pcg::solve(problem, x0, &self.config, stop, self.seed)
+        });
         sol.report.solver = self.label();
         sol
     }
@@ -427,6 +502,7 @@ struct IhsSolver {
     momentum: bool,
     label: String,
     seed: u64,
+    threads: Option<usize>,
 }
 
 impl Solver for IhsSolver {
@@ -458,7 +534,8 @@ impl Solver for IhsSolver {
         };
         config.kind = self.kind;
         config.momentum = self.momentum;
-        let mut sol = ihs::solve(problem, x0, &config, stop, self.seed);
+        let mut sol =
+            with_spec_threads(self.threads, || ihs::solve(problem, x0, &config, stop, self.seed));
         // The label is the spec string as requested (the trait invariant
         // callers key results by); when the SRHT ceiling clamped an
         // explicit m, the effective size is what `final_m`/`peak_m`
@@ -472,6 +549,7 @@ struct AdaptiveIhsSolver {
     config: AdaptiveConfig,
     label: String,
     seed: u64,
+    threads: Option<usize>,
 }
 
 impl Solver for AdaptiveIhsSolver {
@@ -488,7 +566,9 @@ impl Solver for AdaptiveIhsSolver {
     }
 
     fn solve(&self, problem: &RidgeProblem, x0: &[f64], stop: &StopRule) -> Solution {
-        let mut sol = adaptive::solve(problem, x0, &self.config, stop, self.seed);
+        let mut sol = with_spec_threads(self.threads, || {
+            adaptive::solve(problem, x0, &self.config, stop, self.seed)
+        });
         sol.report.solver = self.label();
         sol
     }
@@ -498,6 +578,7 @@ struct DualAdaptiveSolver {
     kind: SketchKind,
     label: String,
     seed: u64,
+    threads: Option<usize>,
 }
 
 impl Solver for DualAdaptiveSolver {
@@ -533,7 +614,8 @@ impl Solver for DualAdaptiveSolver {
             StopRule::GradientNorm { tol } => StopRule::GradientNorm { tol: *tol },
         };
         let config = AdaptiveConfig::new(self.kind);
-        let mut sol = dr.solve_adaptive(&config, &dual_stop, self.seed);
+        let mut sol =
+            with_spec_threads(self.threads, || dr.solve_adaptive(&config, &dual_stop, self.seed));
         sol.report.solver = self.label();
         sol
     }
@@ -555,35 +637,78 @@ mod tests {
 
     #[test]
     fn param_strings_roundtrip() {
-        for s in ["ihs-sparse@m=256", "polyak-ihs-gaussian@m=32", "pcg-srht@rho=0.25"] {
+        for s in [
+            "ihs-sparse@m=256",
+            "polyak-ihs-gaussian@m=32",
+            "pcg-srht@rho=0.25",
+            "adaptive-srht@threads=8",
+            "ihs-sparse@m=256,threads=4",
+            "pcg-srht@rho=0.25,threads=2",
+            "dual-adaptive-gaussian@threads=3",
+        ] {
             let spec: SolverSpec = s.parse().unwrap();
             assert_eq!(spec.to_string(), s);
         }
     }
 
     #[test]
+    fn threads_param_parses_into_spec() {
+        match "adaptive-srht@threads=8".parse::<SolverSpec>().unwrap() {
+            SolverSpec::Adaptive { threads, .. } => assert_eq!(threads, Some(8)),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // And the built solver still runs (the override is scoped to the
+        // solve call, so this must not leak into the ambient config).
+        let p = small_problem(64, 8, 0.5, 9);
+        let stop = StopRule::TrueError { x_star: direct::solve(&p), eps: 1e-8 };
+        let spec: SolverSpec = "adaptive-gaussian@threads=2".parse().unwrap();
+        let sol = spec.build(5).solve(&p, &vec![0.0; 8], &stop);
+        assert!(sol.report.converged);
+        assert_eq!(sol.report.solver, "adaptive-gaussian@threads=2");
+    }
+
+    #[test]
     fn legacy_aliases_parse() {
         assert_eq!(
             "adaptive".parse::<SolverSpec>().unwrap(),
-            SolverSpec::Adaptive { kind: SketchKind::Gaussian, variant: AdaptiveVariant::PolyakFirst }
+            SolverSpec::Adaptive {
+                kind: SketchKind::Gaussian,
+                variant: AdaptiveVariant::PolyakFirst,
+                threads: None
+            }
         );
         assert_eq!(
             "adaptive-gd-srht".parse::<SolverSpec>().unwrap(),
-            SolverSpec::Adaptive { kind: SketchKind::Srht, variant: AdaptiveVariant::GradientOnly }
+            SolverSpec::Adaptive {
+                kind: SketchKind::Srht,
+                variant: AdaptiveVariant::GradientOnly,
+                threads: None
+            }
         );
         assert_eq!(
             "pcg".parse::<SolverSpec>().unwrap(),
-            SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO }
+            SolverSpec::Pcg { kind: SketchKind::Srht, rho: DEFAULT_PCG_RHO, threads: None }
         );
         assert_eq!(
             "dual".parse::<SolverSpec>().unwrap(),
-            SolverSpec::DualAdaptive { kind: SketchKind::Gaussian }
+            SolverSpec::DualAdaptive { kind: SketchKind::Gaussian, threads: None }
         );
     }
 
     #[test]
     fn bad_specs_rejected() {
-        for s in ["nope", "adaptive-fourier", "cg@m=3", "ihs-srht@m=0", "ihs-srht@m", "pcg-srht@rho=-1"] {
+        for s in [
+            "nope",
+            "adaptive-fourier",
+            "cg@m=3",
+            "ihs-srht@m=0",
+            "ihs-srht@m",
+            "pcg-srht@rho=-1",
+            "cg@threads=2",
+            "direct@threads=2",
+            "adaptive-srht@threads=0",
+            "adaptive-srht@threads=x",
+        ] {
             assert!(s.parse::<SolverSpec>().is_err(), "{s:?} should not parse");
         }
     }

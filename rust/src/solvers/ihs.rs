@@ -31,7 +31,11 @@ pub struct IhsConfig {
     /// ([25, 26]): refreshing does not improve on a fixed embedding
     /// (same Gaussian rate, slower SRHT rate) while paying the full
     /// sketch+factor cost each step; this flag exists to reproduce that
-    /// ablation (`benches/ablations`).
+    /// ablation (`benches/ablations`). Deliberately *not* routed through
+    /// the incremental `SketchEngine`: a refresh draws an independent
+    /// embedding at the same size (nothing to reuse), which is exactly
+    /// the cost the ablation measures — though the re-apply itself now
+    /// runs on the parallel GEMM/FWHT kernels like everything else.
     pub refresh: bool,
     pub max_iters: usize,
 }

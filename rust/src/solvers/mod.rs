@@ -175,9 +175,12 @@ pub struct SolveReport {
     pub peak_m: usize,
     /// Total wall time in seconds.
     pub wall_time_s: f64,
-    /// Time spent forming `SA` (or the preconditioner sketch).
+    /// Time spent forming `SA` (or the preconditioner sketch). Adaptive
+    /// solvers grow incrementally, so each growth adds only the
+    /// appended-rows cost here, not a from-scratch re-apply.
     pub sketch_time_s: f64,
-    /// Time spent factoring (`Woodbury` / QR / Cholesky).
+    /// Time spent factoring (`Woodbury` / QR / Cholesky). Adaptive growth
+    /// adds the cross-Gram + factor-update cost, reusing prior blocks.
     pub factor_time_s: f64,
     /// Time in the iteration loop proper.
     pub iter_time_s: f64,

@@ -113,6 +113,7 @@ mod tests {
         let spec = SolverSpec::Adaptive {
             kind: SketchKind::Gaussian,
             variant: AdaptiveVariant::PolyakFirst,
+            threads: None,
         };
         let res = run_path(&a, &b, &nus, 1e-8, &spec, 2);
         assert!(res.points.iter().all(|p| p.report.converged));

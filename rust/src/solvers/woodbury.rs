@@ -1,4 +1,5 @@
-//! Cached application of `H_S^{-1} = ((SA)^T SA + nu^2 I_d)^{-1}`.
+//! Cached application of `H_S^{-1} = ((SA)^T SA + nu^2 I_d)^{-1}`,
+//! growable in place when the adaptive solver appends sketch rows.
 //!
 //! Theorem 7's cost model hinges on this: with `m <= d` one factors the
 //! *small* `m x m` matrix `K = nu^2 I_m + (SA)(SA)^T` once per sketch
@@ -7,9 +8,34 @@
 //! `H_S^{-1} = (1/nu^2) (I - (SA)^T K^{-1} (SA))`.
 //! When `m > d` the direct `d x d` factorization is cheaper and we switch
 //! automatically.
+//!
+//! # Growth reuse
+//!
+//! Algorithm 1 grows `m` by appending rows; rebuilding the cache from
+//! scratch on every growth re-pays the whole `O(m^2 d)` Gram. Instead the
+//! cache accepts the sketch rows *unnormalized* together with the scalar
+//! `scale` such that the effective embedding is `scale * S̃` (the sketch
+//! engine keeps `1/sqrt(m)` out of the stored rows exactly so prior rows
+//! survive growth). [`WoodburyCache::grow`] then:
+//!
+//! * keeps the cached unnormalized Gram `U = (S̃A)(S̃A)^T` and computes only
+//!   the `Δm x m` cross block and `Δm x Δm` corner — `O(Δm m d)` instead of
+//!   `O(m^2 d)`;
+//! * when the scale is unchanged, extends the Cholesky factor with a
+//!   bordered update (`O(Δm m^2)`, [`Cholesky::extend_bordered`]). Note
+//!   the adaptive solver's growth always rescales (`1/sqrt(m)` ->
+//!   `1/sqrt(m+Δm)`), which shifts the *entire* `K = nu^2 I + c U`
+//!   diagonal, so that caller always takes the refactor branch — the
+//!   bordered path serves fixed-scale row streaming (pre-normalized rows
+//!   appended at `scale = 1`, e.g. mini-batch Gram updates) and is kept
+//!   exact under test for that use. When growth rescales, the `m x m`
+//!   factor is rebuilt from the cached Gram at `O(m^3)` — still free of
+//!   the `O(m^2 d)` Gram term that dominates for `m <= d`;
+//! * past `m > d` it maintains the `d x d` inner Gram incrementally
+//!   (`O(Δm d^2)` per growth) and refactors at `O(d^3)`.
 
 use crate::linalg::cholesky::Cholesky;
-use crate::linalg::{axpy, Matrix};
+use crate::linalg::{axpy, scale as scale_vec, Matrix};
 
 /// Which factorization branch is active.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -22,28 +48,62 @@ pub enum WoodburyMode {
 
 /// Cached factorization of the sketched Hessian.
 pub struct WoodburyCache {
+    /// Sketch rows as provided — unnormalized when `scale != 1`.
     sa: Matrix,
+    /// `scale^2` for the effective embedding `scale * sa`.
+    scale2: f64,
     nu2: f64,
     mode: WoodburyMode,
     chol: Cholesky,
+    /// SmallSketch: unnormalized outer Gram `sa sa^T` (`m x m`), kept so
+    /// growth only computes the new cross/corner blocks.
+    outer_gram: Option<Matrix>,
+    /// Direct: unnormalized inner Gram `sa^T sa` (`d x d`), updated by
+    /// `O(Δm d^2)` rank-`Δm` additions on growth.
+    inner_gram: Option<Matrix>,
 }
 
 impl WoodburyCache {
-    /// Factor for the given sketched matrix `SA` (`m x d`) and `nu`.
+    /// Factor for an already-normalized sketched matrix `SA` (`m x d`)
+    /// and `nu` — the one-shot path used by the fixed-size solvers.
     pub fn new(sa: Matrix, nu: f64) -> Self {
+        Self::new_scaled(sa, nu, 1.0)
+    }
+
+    /// Factor for unnormalized sketch rows `sa` whose effective embedding
+    /// is `scale * sa` (the incremental growth path: the `1/sqrt(m)`
+    /// normalization is folded into the solve so growth never rescales
+    /// stored rows).
+    pub fn new_scaled(sa: Matrix, nu: f64, scale: f64) -> Self {
         assert!(nu > 0.0);
+        assert!(scale > 0.0 && scale.is_finite());
         let (m, d) = (sa.rows(), sa.cols());
         let nu2 = nu * nu;
+        let scale2 = scale * scale;
         if m <= d {
-            let mut k = sa.gram_outer(); // (SA)(SA)^T, m x m
-            k.add_diag(nu2);
-            let (chol, _) = Cholesky::factor_with_jitter(&k, 8).expect("K = nu^2 I + GG^T is PD");
-            Self { sa, nu2, mode: WoodburyMode::SmallSketch, chol }
+            let u = sa.gram_outer(); // unnormalized (S̃A)(S̃A)^T, m x m
+            let chol = factor_small(&u, scale2, nu2);
+            Self {
+                sa,
+                scale2,
+                nu2,
+                mode: WoodburyMode::SmallSketch,
+                chol,
+                outer_gram: Some(u),
+                inner_gram: None,
+            }
         } else {
-            let mut h = sa.gram(); // (SA)^T(SA), d x d
-            h.add_diag(nu2);
-            let (chol, _) = Cholesky::factor_with_jitter(&h, 8).expect("H_S is PD");
-            Self { sa, nu2, mode: WoodburyMode::Direct, chol }
+            let inner = sa.gram(); // unnormalized (S̃A)^T(S̃A), d x d
+            let chol = factor_direct(&inner, scale2, nu2);
+            Self {
+                sa,
+                scale2,
+                nu2,
+                mode: WoodburyMode::Direct,
+                chol,
+                outer_gram: None,
+                inner_gram: Some(inner),
+            }
         }
     }
 
@@ -57,18 +117,108 @@ impl WoodburyCache {
         self.mode
     }
 
+    /// Effective embedding scale (`1.0` for pre-normalized rows).
+    pub fn scale(&self) -> f64 {
+        self.scale2.sqrt()
+    }
+
+    /// Append `Δm` unnormalized sketch rows and update the factorization,
+    /// reusing all previously computed Gram blocks. `new_scale` is the
+    /// normalization of the *grown* embedding (`1/sqrt(m + Δm)`); passing
+    /// the current scale unchanged takes the bordered-Cholesky fast path
+    /// (fixed-scale row streaming — the adaptive solver's `1/sqrt(m)`
+    /// rescale always lands in the Gram-reusing refactor branch instead).
+    pub fn grow(&mut self, new_rows: &Matrix, new_scale: f64) {
+        assert_eq!(new_rows.cols(), self.sa.cols(), "grow: column mismatch");
+        assert!(new_scale > 0.0 && new_scale.is_finite());
+        if new_rows.rows() == 0 {
+            return;
+        }
+        let d = self.sa.cols();
+        let m_new = self.sa.rows() + new_rows.rows();
+        let new_scale2 = new_scale * new_scale;
+
+        match self.mode {
+            WoodburyMode::SmallSketch if m_new <= d => {
+                // O(Δm m d) cross + O(Δm^2 d) corner; the old m x m block
+                // of U is reused verbatim.
+                let cross = new_rows.matmul_nt(&self.sa); // Δm x m
+                let corner = new_rows.gram_outer(); // Δm x Δm
+                let u_old = self.outer_gram.take().expect("SmallSketch keeps outer_gram");
+                let m_old = u_old.rows();
+                let dm = cross.rows();
+                let mut u = Matrix::zeros(m_new, m_new);
+                for i in 0..m_old {
+                    u.row_mut(i)[..m_old].copy_from_slice(u_old.row(i));
+                    for j in 0..dm {
+                        u.row_mut(i)[m_old + j] = cross.get(j, i);
+                    }
+                }
+                for i in 0..dm {
+                    u.row_mut(m_old + i)[..m_old].copy_from_slice(cross.row(i));
+                    u.row_mut(m_old + i)[m_old..].copy_from_slice(corner.row(i));
+                }
+
+                let bordered = if new_scale2 == self.scale2 {
+                    // Scale unchanged: K grows by a plain border — extend
+                    // the factor in O(Δm m^2).
+                    let mut cross_k = cross.clone();
+                    scale_vec(self.scale2, cross_k.as_mut_slice());
+                    let mut corner_k = corner.clone();
+                    scale_vec(self.scale2, corner_k.as_mut_slice());
+                    corner_k.add_diag(self.nu2);
+                    self.chol.extend_bordered(&cross_k, &corner_k).is_ok()
+                } else {
+                    false
+                };
+                if !bordered {
+                    // Rescaled (or borderline-indefinite corner): rebuild
+                    // K = nu^2 I + scale^2 U from the cached Gram — O(m^3)
+                    // factor, but no O(m^2 d) Gram recompute.
+                    self.chol = factor_small(&u, new_scale2, self.nu2);
+                }
+                self.outer_gram = Some(u);
+                self.sa.append_rows(new_rows);
+                self.scale2 = new_scale2;
+            }
+            WoodburyMode::SmallSketch => {
+                // Crossing m > d: switch branches. The d x d inner Gram is
+                // built once here (O(m d^2)) and maintained incrementally
+                // afterwards.
+                self.sa.append_rows(new_rows);
+                self.scale2 = new_scale2;
+                let inner = self.sa.gram();
+                self.chol = factor_direct(&inner, self.scale2, self.nu2);
+                self.inner_gram = Some(inner);
+                self.outer_gram = None;
+                self.mode = WoodburyMode::Direct;
+            }
+            WoodburyMode::Direct => {
+                // Rank-Δm update of the inner Gram: O(Δm d^2) + O(d^3)
+                // refactor, independent of the accumulated m.
+                let mut inner = self.inner_gram.take().expect("Direct keeps inner_gram");
+                inner.add_scaled(1.0, &new_rows.gram());
+                self.sa.append_rows(new_rows);
+                self.scale2 = new_scale2;
+                self.chol = factor_direct(&inner, self.scale2, self.nu2);
+                self.inner_gram = Some(inner);
+            }
+        }
+    }
+
     /// Apply `H_S^{-1} g`. Cost: `O(m d + m^2)` (small-sketch branch) or
     /// `O(d^2)` (direct branch).
     pub fn apply_inverse(&self, g: &[f64]) -> Vec<f64> {
         match self.mode {
             WoodburyMode::SmallSketch => {
-                // (1/nu^2) (g - (SA)^T K^{-1} (SA) g)
+                // (1/nu^2) (g - scale^2 (S̃A)^T K^{-1} (S̃A) g) with
+                // K = nu^2 I + scale^2 (S̃A)(S̃A)^T.
                 let sag = self.sa.matvec(g);
                 let kinv = self.chol.solve(&sag);
                 let mut out = g.to_vec();
                 let corr = self.sa.matvec_t(&kinv);
-                axpy(-1.0, &corr, &mut out);
-                crate::linalg::scale(1.0 / self.nu2, &mut out);
+                axpy(-self.scale2, &corr, &mut out);
+                scale_vec(1.0 / self.nu2, &mut out);
                 out
             }
             WoodburyMode::Direct => self.chol.solve(g),
@@ -78,9 +228,28 @@ impl WoodburyCache {
     /// Explicit `H_S` (tests / diagnostics only).
     pub fn h_s(&self) -> Matrix {
         let mut h = self.sa.gram();
+        scale_vec(self.scale2, h.as_mut_slice());
         h.add_diag(self.nu2);
         h
     }
+}
+
+/// Factor `K = nu^2 I + scale2 * U` for the small-sketch branch.
+fn factor_small(u: &Matrix, scale2: f64, nu2: f64) -> Cholesky {
+    let mut k = u.clone();
+    scale_vec(scale2, k.as_mut_slice());
+    k.add_diag(nu2);
+    let (chol, _) = Cholesky::factor_with_jitter(&k, 8).expect("K = nu^2 I + GG^T is PD");
+    chol
+}
+
+/// Factor `H = scale2 * inner + nu^2 I` for the direct branch.
+fn factor_direct(inner: &Matrix, scale2: f64, nu2: f64) -> Cholesky {
+    let mut h = inner.clone();
+    scale_vec(scale2, h.as_mut_slice());
+    h.add_diag(nu2);
+    let (chol, _) = Cholesky::factor_with_jitter(&h, 8).expect("H_S is PD");
+    chol
 }
 
 #[cfg(test)]
@@ -93,19 +262,21 @@ mod tests {
         Matrix::from_fn(m, d, |_, _| rng.next_gaussian() * 0.7)
     }
 
+    fn check_inverse(cache: &WoodburyCache, d: usize, tol: f64) {
+        let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.31).sin()).collect();
+        let z = cache.apply_inverse(&g);
+        let hz = cache.h_s().matvec(&z);
+        for i in 0..d {
+            assert!((hz[i] - g[i]).abs() < tol, "coord {i}: {} vs {}", hz[i], g[i]);
+        }
+    }
+
     #[test]
     fn small_sketch_branch_matches_direct_inverse() {
         let sa = random_sa(4, 12, 1);
-        let nu = 0.8;
-        let cache = WoodburyCache::new(sa, nu);
+        let cache = WoodburyCache::new(sa, 0.8);
         assert_eq!(cache.mode(), WoodburyMode::SmallSketch);
-        let g: Vec<f64> = (0..12).map(|i| (i as f64 * 0.31).sin()).collect();
-        let z = cache.apply_inverse(&g);
-        // Check H_S z == g.
-        let hz = cache.h_s().matvec(&z);
-        for i in 0..12 {
-            assert!((hz[i] - g[i]).abs() < 1e-9, "coord {i}");
-        }
+        check_inverse(&cache, 12, 1e-9);
     }
 
     #[test]
@@ -113,12 +284,7 @@ mod tests {
         let sa = random_sa(20, 6, 2);
         let cache = WoodburyCache::new(sa, 0.5);
         assert_eq!(cache.mode(), WoodburyMode::Direct);
-        let g: Vec<f64> = (0..6).map(|i| (i as f64 + 1.0) * 0.2).collect();
-        let z = cache.apply_inverse(&g);
-        let hz = cache.h_s().matvec(&z);
-        for i in 0..6 {
-            assert!((hz[i] - g[i]).abs() < 1e-9);
-        }
+        check_inverse(&cache, 6, 1e-9);
     }
 
     #[test]
@@ -163,5 +329,106 @@ mod tests {
         let z = cache.apply_inverse(&g);
         let r = 0.5 * crate::linalg::dot(&g, &z);
         assert!(r > 0.0);
+    }
+
+    #[test]
+    fn scaled_cache_equals_prenormalized() {
+        // new_scaled(S̃A, nu, 1/sqrt(m)) must act exactly like
+        // new((1/sqrt(m)) S̃A, nu).
+        let m = 6;
+        let sa = random_sa(m, 16, 6);
+        let scale = 1.0 / (m as f64).sqrt();
+        let scaled_rows = {
+            let mut s = sa.clone();
+            scale_vec(scale, s.as_mut_slice());
+            s
+        };
+        let a = WoodburyCache::new_scaled(sa, 0.7, scale);
+        let b = WoodburyCache::new(scaled_rows, 0.7);
+        let g: Vec<f64> = (0..16).map(|i| (i as f64 * 0.2).sin()).collect();
+        let za = a.apply_inverse(&g);
+        let zb = b.apply_inverse(&g);
+        for i in 0..16 {
+            assert!((za[i] - zb[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn grow_matches_fresh_cache_small_sketch() {
+        // Grow 2 -> 4 -> 8 rows (rescaling each time, like the adaptive
+        // solver); every state must agree with a from-scratch cache on the
+        // same rows.
+        let d = 24;
+        let full = random_sa(8, d, 7);
+        let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
+        let nu = 0.9;
+        let mut cache = WoodburyCache::new_scaled(rows(0, 2), nu, 1.0 / (2f64).sqrt());
+        for &(m0, m1) in &[(2usize, 4usize), (4, 8)] {
+            let new_scale = 1.0 / (m1 as f64).sqrt();
+            cache.grow(&rows(m0, m1), new_scale);
+            assert_eq!(cache.m(), m1);
+            assert_eq!(cache.mode(), WoodburyMode::SmallSketch);
+            let fresh = WoodburyCache::new_scaled(rows(0, m1), nu, new_scale);
+            let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.17).cos()).collect();
+            let zg = cache.apply_inverse(&g);
+            let zf = fresh.apply_inverse(&g);
+            for i in 0..d {
+                assert!((zg[i] - zf[i]).abs() < 1e-9, "m={m1} coord {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn grow_fixed_scale_takes_bordered_path_exactly() {
+        // Unchanged scale: the bordered Cholesky must reproduce the fresh
+        // factorization to roundoff.
+        let d = 20;
+        let full = random_sa(10, d, 8);
+        let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
+        let mut cache = WoodburyCache::new_scaled(rows(0, 6), 0.5, 1.0);
+        cache.grow(&rows(6, 10), 1.0);
+        let fresh = WoodburyCache::new_scaled(rows(0, 10), 0.5, 1.0);
+        let g: Vec<f64> = (0..d).map(|i| ((i * i) as f64 * 0.05).sin()).collect();
+        let zg = cache.apply_inverse(&g);
+        let zf = fresh.apply_inverse(&g);
+        for i in 0..d {
+            assert!((zg[i] - zf[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn grow_crosses_into_direct_mode_and_keeps_growing() {
+        // d = 6: growth 4 -> 8 crosses m > d, then 8 -> 12 exercises the
+        // incremental inner-Gram update.
+        let d = 6;
+        let full = random_sa(12, d, 9);
+        let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
+        let nu = 0.8;
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), nu, 0.5);
+        assert_eq!(cache.mode(), WoodburyMode::SmallSketch);
+        cache.grow(&rows(4, 8), 0.35);
+        assert_eq!(cache.mode(), WoodburyMode::Direct);
+        cache.grow(&rows(8, 12), 0.29);
+        assert_eq!(cache.m(), 12);
+        let fresh = WoodburyCache::new_scaled(rows(0, 12), nu, 0.29);
+        let g: Vec<f64> = (0..d).map(|i| (i as f64 + 0.5) * 0.3).collect();
+        let zg = cache.apply_inverse(&g);
+        let zf = fresh.apply_inverse(&g);
+        for i in 0..d {
+            assert!((zg[i] - zf[i]).abs() < 1e-9);
+        }
+        check_inverse(&cache, d, 1e-8);
+    }
+
+    #[test]
+    fn grow_by_zero_rows_is_a_noop() {
+        let sa = random_sa(3, 10, 10);
+        let mut cache = WoodburyCache::new_scaled(sa, 0.6, 0.5);
+        let g: Vec<f64> = (0..10).map(|i| i as f64 * 0.1).collect();
+        let before = cache.apply_inverse(&g);
+        cache.grow(&Matrix::zeros(0, 10), 0.5);
+        assert_eq!(cache.m(), 3);
+        let after = cache.apply_inverse(&g);
+        assert_eq!(before, after);
     }
 }

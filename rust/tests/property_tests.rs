@@ -188,6 +188,7 @@ fn prop_scheduler_never_loses_or_duplicates_jobs() {
                 eps: 1e-6,
                 seed: i as u64,
                 path_nus: Vec::new(),
+                threads: None,
             };
             ids.push(s.submit(spec).unwrap());
         }
