@@ -1,29 +1,37 @@
-//! Microbenchmarks of the native hot-path kernels, covering the §Perf
-//! targets (EXPERIMENTS.md): blocked GEMM (single- vs multi-threaded),
-//! FWHT, sketch apply, *incremental sketch growth* vs from-scratch
-//! resampling, Woodbury factor growth, ridge gradient, and the CountSketch
-//! CSR fast path.
+//! Microbenchmarks of the native hot-path kernels, covering the §Perf and
+//! §Sparse targets (EXPERIMENTS.md): blocked GEMM (single- vs
+//! multi-threaded), FWHT, sketch apply, *incremental sketch growth* vs
+//! from-scratch resampling, Woodbury factor growth, ridge gradient, and a
+//! dense-vs-CSR density sweep (sketch apply, sketch growth, CG matvec,
+//! adaptive end-to-end solve).
 //!
 //! Emits `BENCH_kernels.json` at the repository root (falling back to the
 //! working directory) so the perf trajectory of the incremental-growth and
-//! parallel-kernel work is recorded run over run. Key derived ratios:
+//! sparse-operand work is recorded run over run. Key derived ratios:
 //!
 //! * `gemm_parallel_speedup_*` — multi-threaded over single-threaded GEMM;
 //! * `srht_grow_speedup_*` / `gaussian_grow_speedup_*` — per-growth sketch
 //!   time of the cached engine path over from-scratch resample+apply at
 //!   the same target size (the adaptive solver's rejection-round cost);
 //! * `woodbury_grow_speedup_*` — incremental factor growth over a full
-//!   rebuild.
+//!   rebuild;
+//! * `csr_speedup_*` — the dense-path time over the CSR-path time for the
+//!   same operation on the same matrix at a given density (sketch apply /
+//!   sketch grow / CG matvec / `adaptive-sparse` end-to-end solve).
+//!
+//! `cargo bench --bench kernels -- --smoke` runs a seconds-scale variant
+//! (shrunken shapes, fewer repeats) so CI *executes* every kernel path on
+//! each PR instead of merely compiling it.
 
 use effdim::bench_harness::bench;
 use effdim::linalg::sparse::CsrMatrix;
-use effdim::linalg::{threads, Matrix};
+use effdim::linalg::{threads, Matrix, Operand};
 use effdim::rng::Xoshiro256;
 use effdim::sketch::engine::SketchEngine;
 use effdim::sketch::srht::fwht_rows;
 use effdim::sketch::{gaussian::GaussianSketch, sparse::SparseSketch, srht::SrhtSketch, Sketch, SketchKind};
 use effdim::solvers::woodbury::WoodburyCache;
-use effdim::solvers::RidgeProblem;
+use effdim::solvers::{RidgeProblem, Solver as _, SolverSpec, StopRule};
 use effdim::util::json::Json;
 use effdim::util::stats::summarize;
 use std::time::Instant;
@@ -91,13 +99,23 @@ fn timed(
 }
 
 fn main() {
+    // `-- --smoke`: CI fast path — every kernel executes, nothing at scale.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let default_threads = threads::current();
-    println!("native kernel benches (default threads = {default_threads})\n");
+    println!(
+        "native kernel benches (default threads = {default_threads}{})\n",
+        if smoke { ", SMOKE mode" } else { "" }
+    );
 
     let mut cases: Vec<Case> = Vec::new();
     let mut derived: Vec<(String, Json)> = Vec::new();
 
-    for &(n, d) in &[(1024usize, 128usize), (4096, 256), (8192, 256)] {
+    let dense_shapes: &[(usize, usize)] = if smoke {
+        &[(512, 64)]
+    } else {
+        &[(1024, 128), (4096, 256), (8192, 256)]
+    };
+    for &(n, d) in dense_shapes {
         let m = d / 2; // adaptive regime: m <= d
         let mut rng = Xoshiro256::seed_from_u64(1);
         let a = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
@@ -239,7 +257,7 @@ fn main() {
 
     // Ridge gradient (memory-bound fused kernel) at one mid size.
     {
-        let (n, d) = (4096usize, 256usize);
+        let (n, d) = if smoke { (512usize, 64usize) } else { (4096usize, 256usize) };
         let mut rng = Xoshiro256::seed_from_u64(2);
         let a = Matrix::from_fn(n, d, |_, _| rng.next_gaussian());
         let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
@@ -258,40 +276,160 @@ fn main() {
         });
     }
 
-    // Remark 4.1 fast path: O(nnz) CountSketch on CSR data. Time scales
-    // with density, not with n*d.
-    {
-        let (n, d, m) = (2048usize, 256usize, 128usize);
-        let mut rng = Xoshiro256::seed_from_u64(3);
-        let mut prev = f64::INFINITY;
-        for density in [0.01, 0.1, 1.0] {
+    // Dense-vs-CSR density sweep (§Sparse acceptance): the same matrix at
+    // 1% / 5% / 20% / 100% fill, stored both ways, through CountSketch
+    // apply, sparse sketch *growth*, the CG matvec (Hessian product), and
+    // an `adaptive-sparse` end-to-end solve. `csr_speedup_*` = dense-path
+    // time / CSR-path time. The whole sweep is pinned to ONE thread so
+    // the ratios measure storage (O(nnz) vs O(n d)) and nothing else —
+    // the CSR kernels would otherwise go row-parallel above the threading
+    // threshold while the dense GEMV baseline stays serial, inflating the
+    // ratios by up to the core count. O(nnz) predicts ~1/density.
+    for density in [0.01, 0.05, 0.2, 1.0] {
+        threads::with_threads(1, || {
+            let (n, d, m) = if smoke { (512usize, 64usize, 32usize) } else { (4096, 512, 256) };
+            let reps = if smoke { 2 } else { 5 };
+            let pct = density.to_string();
+            let mut rng = Xoshiro256::seed_from_u64(3);
             let dense = Matrix::from_fn(n, d, |_, _| {
                 if rng.next_f64() < density { rng.next_gaussian() } else { 0.0 }
             });
             let csr = CsrMatrix::from_dense(&dense);
+            let nnz = csr.nnz();
+            let op_dense = Operand::Dense(dense);
+            let op_csr = Operand::Sparse(csr);
+            println!("--- density {density} (n = {n}, d = {d}, nnz = {nnz}) ---");
+
+            // CountSketch apply: dense scatter vs O(nnz) CSR scatter.
             let cs = SparseSketch::sample(m, n, &mut rng);
-            let r = bench(
-                &format!("countsketch CSR apply (density {density})"),
+            let t_dense = timed(
+                &mut cases,
+                &format!("countsketch apply dense (density {pct})"),
+                (n, d, m),
                 1,
-                5,
-                || cs.apply_csr(&csr),
+                reps,
+                || {
+                    std::hint::black_box(cs.apply_operand(&op_dense));
+                },
             );
-            println!("{}   [nnz = {}]", r.report_line(), csr.nnz());
+            let t_csr = timed(
+                &mut cases,
+                &format!("countsketch apply csr (density {pct})"),
+                (n, d, m),
+                1,
+                reps,
+                || {
+                    std::hint::black_box(cs.apply_operand(&op_csr));
+                },
+            );
+            derived.push((
+                format!("csr_speedup_sketch_apply_density{pct}"),
+                Json::from(t_dense / t_csr),
+            ));
+
+            // Sparse sketch growth m/2 -> m through the engine, per operand.
+            let grow_time = |op: &Operand| {
+                let mut times = Vec::new();
+                for i in 0..reps {
+                    let mut erng = Xoshiro256::seed_from_u64(40 + i as u64);
+                    let mut engine = SketchEngine::new(SketchKind::Sparse, m / 2, op, &mut erng);
+                    let t0 = Instant::now();
+                    std::hint::black_box(engine.grow(m, op, &mut erng));
+                    times.push(t0.elapsed().as_secs_f64());
+                }
+                summarize(&times).mean
+            };
+            let tg_dense = grow_time(&op_dense);
+            let tg_csr = grow_time(&op_csr);
+            println!(
+                "{:<44} {:>10.3} ms dense vs {:>10.3} ms csr",
+                "sparse sketch grow m/2 -> m",
+                tg_dense * 1e3,
+                tg_csr * 1e3
+            );
+            derived.push((
+                format!("csr_speedup_sketch_grow_density{pct}"),
+                Json::from(tg_dense / tg_csr),
+            ));
+
+            // CG matvec: the Hessian product (A^T A + nu^2 I) v.
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+            let p_dense = RidgeProblem::new(op_dense.clone(), b.clone(), 0.5);
+            let p_csr = RidgeProblem::new(op_csr.clone(), b.clone(), 0.5);
+            let v: Vec<f64> = (0..d).map(|i| (i as f64 * 0.02).cos()).collect();
+            let tm_dense = timed(
+                &mut cases,
+                &format!("cg matvec dense (density {pct})"),
+                (n, d, 0),
+                1,
+                reps * 3,
+                || {
+                    std::hint::black_box(p_dense.hessian_vec(&v));
+                },
+            );
+            let tm_csr = timed(
+                &mut cases,
+                &format!("cg matvec csr (density {pct})"),
+                (n, d, 0),
+                1,
+                reps * 3,
+                || {
+                    std::hint::black_box(p_csr.hessian_vec(&v));
+                },
+            );
+            derived.push((
+                format!("csr_speedup_matvec_density{pct}"),
+                Json::from(tm_dense / tm_csr),
+            ));
+
+            // End-to-end: adaptive-sparse solve on both storages (cheap
+            // gradient-norm stop — no oracle solve in the timing).
+            let spec: SolverSpec = "adaptive-sparse".parse().unwrap();
+            let stop = StopRule::GradientNorm { tol: 1e-8 };
+            let x0 = vec![0.0; d];
+            let solve_time = |p: &RidgeProblem| {
+                let mut times = Vec::new();
+                for i in 0..reps {
+                    let solver = spec.build(60 + i as u64);
+                    let t0 = Instant::now();
+                    let sol = solver.solve(p, &x0, &stop);
+                    times.push(t0.elapsed().as_secs_f64());
+                    assert!(sol.report.converged, "adaptive-sparse must converge in the bench");
+                }
+                summarize(&times)
+            };
+            let ts_dense = solve_time(&p_dense);
+            let ts_csr = solve_time(&p_csr);
+            println!(
+                "{:<44} {:>10.3} ms dense vs {:>10.3} ms csr",
+                "adaptive-sparse end-to-end solve",
+                ts_dense.mean * 1e3,
+                ts_csr.mean * 1e3
+            );
             cases.push(Case {
-                name: format!("countsketch csr density {density}"),
+                name: format!("adaptive-sparse solve dense (density {pct})"),
                 n,
                 d,
-                m,
+                m: 0,
                 threads: 1,
-                mean_s: r.summary.mean,
-                min_s: r.summary.min,
+                mean_s: ts_dense.mean,
+                min_s: ts_dense.min,
             });
-            if density <= 0.1 {
-                prev = r.summary.mean;
-            } else {
-                assert!(prev < r.summary.mean, "O(nnz): sparser must be faster");
-            }
-        }
+            cases.push(Case {
+                name: format!("adaptive-sparse solve csr (density {pct})"),
+                n,
+                d,
+                m: 0,
+                threads: 1,
+                mean_s: ts_csr.mean,
+                min_s: ts_csr.min,
+            });
+            derived.push((
+                format!("csr_speedup_adaptive_solve_density{pct}"),
+                Json::from(ts_dense.mean / ts_csr.mean),
+            ));
+            println!();
+        });
     }
 
     // Emit the JSON trajectory at the repo root (benches run from rust/).

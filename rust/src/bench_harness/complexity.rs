@@ -47,6 +47,12 @@ pub struct ComplexityRow {
     /// Modeled flops for pCG's preconditioner sketch.
     pub pcg_sketch_flops: f64,
     pub adaptive_wins: bool,
+    /// Stored entries of the data operand (`n*d` dense, `nnz` CSR).
+    pub nnz: usize,
+    /// Modeled flops for a CountSketch application at the adaptive peak
+    /// size with the operand's actual `nnz` — the Remark 4.1 sparse-path
+    /// cost the dense families are compared against.
+    pub sparse_sketch_flops: f64,
 }
 
 /// Config.
@@ -89,11 +95,20 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
         let ada = ada_spec.build(cfg.seed).solve(&problem, &vec![0.0; cfg.d], &stop);
         let pcg_sol = pcg_spec.build(cfg.seed + 1).solve(&problem, &vec![0.0; cfg.d], &stop);
 
-        // Theorem 7 cost model alongside the measured times (dense data:
-        // nnz = None; a sparse workload would thread its nnz through).
+        // Theorem 7 cost model alongside the measured times. The operand's
+        // stored-entry count feeds the nnz-aware columns (n*d here — the
+        // sweep data is dense — but CSR workloads thread their true nnz).
+        let nnz = problem.nnz();
         let kind = SketchKind::Srht;
         let ada_sketch_flops =
             sketch::sketch_cost_flops(kind, ada.report.peak_m, cfg.n, cfg.d, None);
+        let sparse_sketch_flops = sketch::sketch_cost_flops(
+            SketchKind::Sparse,
+            ada.report.peak_m,
+            cfg.n,
+            cfg.d,
+            Some(nnz),
+        );
         let ada_sketch_flops_regrow =
             cumulative_regrow_flops(kind, &ada.report, cfg.n, cfg.d, None);
         let ada_sketch_flops_incremental = sketch::incremental_sketch_cost_flops(
@@ -126,6 +141,8 @@ pub fn run(cfg: &ComplexityConfig, nus: &[f64]) -> Vec<ComplexityRow> {
             pcg_m: pcg_sol.report.peak_m,
             pcg_sketch_flops,
             adaptive_wins: ada.report.wall_time_s < pcg_sol.report.wall_time_s,
+            nnz,
+            sparse_sketch_flops,
         });
     }
     rows
@@ -183,17 +200,18 @@ pub fn dump_csv(name: &str, rows: &[ComplexityRow]) -> std::io::Result<()> {
         .iter()
         .map(|r| {
             format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.nu, r.d_e, r.de_over_d, r.ada_sketch_s, r.ada_factor_s, r.ada_iter_s,
                 r.ada_total_s, r.ada_m, r.ada_sketch_flops, r.ada_sketch_flops_regrow,
                 r.ada_sketch_flops_incremental, r.pcg_sketch_s, r.pcg_factor_s, r.pcg_iter_s,
-                r.pcg_total_s, r.pcg_m, r.pcg_sketch_flops, r.adaptive_wins
+                r.pcg_total_s, r.pcg_m, r.pcg_sketch_flops, r.adaptive_wins, r.nnz,
+                r.sparse_sketch_flops
             )
         })
         .collect();
     write_csv(
         format!("results/{name}.csv"),
-        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,ada_sketch_flops,ada_sketch_flops_regrow,ada_sketch_flops_incremental,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,pcg_sketch_flops,adaptive_wins",
+        "nu,d_e,de_over_d,ada_sketch_s,ada_factor_s,ada_iter_s,ada_total_s,ada_m,ada_sketch_flops,ada_sketch_flops_regrow,ada_sketch_flops_incremental,pcg_sketch_s,pcg_factor_s,pcg_iter_s,pcg_total_s,pcg_m,pcg_sketch_flops,adaptive_wins,nnz,sparse_sketch_flops",
         &lines,
     )
 }
@@ -210,6 +228,10 @@ mod tests {
         // Phases must not exceed the total (within timer noise).
         assert!(r.ada_sketch_s + r.ada_factor_s <= r.ada_total_s + 0.05);
         assert!(r.pcg_factor_s > 0.0, "pcg always factors");
+        // nnz-aware columns: dense sweep data stores n*d entries, and the
+        // CountSketch model is 2*nnz regardless of m.
+        assert_eq!(r.nnz, 256 * 32);
+        assert_eq!(r.sparse_sketch_flops, 2.0 * (256 * 32) as f64);
     }
 
     #[test]

@@ -85,7 +85,7 @@ pub fn run(kind: SketchKind, rhos: &[f64], cfg: &ConcentrationConfig) -> Vec<Con
         let mut inside = 0usize;
         for _ in 0..cfg.trials {
             let s = sketch::sample(kind, m, cfg.n, &mut rng);
-            let cs = c_s_matrix(&ds.a, cfg.nu, s.as_ref());
+            let cs = c_s_matrix(&ds.a.dense(), cfg.nu, s.as_ref());
             let (lo, hi) = extreme_eigenvalues(&cs);
             if lo >= lambda - 1e-9 && hi <= big_lambda + 1e-9 {
                 inside += 1;

@@ -20,8 +20,16 @@
 //! `"threads"` field pins the parallel dense kernels for the whole job
 //! (equivalent to the `@threads=k` spec param, but also covering the
 //! oracle solve).
+//!
+//! Sparse inputs: `"profile":"sparse"` plus an optional `"density"` field
+//! generates a density-controlled CSR workload server-side, and small
+//! real problems ship inline as CSR triplets —
+//! `{"cmd":"solve","rows":3,"cols":2,"triplets":[[0,0,1.5],...],"b":[...]}`
+//! — which bypass the synthetic profile entirely.
 
 use super::job::{JobSpec, Workload};
+use crate::linalg::sparse::CsrMatrix;
+use crate::linalg::Operand;
 use crate::solvers::api::SolverSpec;
 use crate::util::json::{self, Json};
 
@@ -44,7 +52,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
     let cmd = v.get("cmd").and_then(Json::as_str).ok_or("missing cmd")?;
     match cmd {
         "solve" => {
-            let profile = v.get("profile").and_then(Json::as_str).unwrap_or("exp").to_string();
+            let mut profile = v.get("profile").and_then(Json::as_str).unwrap_or("exp").to_string();
             let n = v.get("n").and_then(Json::as_usize).unwrap_or(1024);
             let d = v.get("d").and_then(Json::as_usize).unwrap_or(128);
             let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
@@ -52,6 +60,24 @@ pub fn decode(line: &str) -> Result<Request, String> {
             let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let solver_name = v.get("solver").and_then(Json::as_str).unwrap_or("adaptive");
             let solver: SolverSpec = solver_name.parse()?;
+            // Optional "density": only meaningful for the sparse profile.
+            if let Some(dens) = v.get("density").and_then(Json::as_f64) {
+                if profile != "sparse" {
+                    return Err(format!(
+                        "\"density\" requires \"profile\":\"sparse\" (got {profile:?})"
+                    ));
+                }
+                if !(dens > 0.0 && dens <= 1.0) {
+                    return Err(format!("density must be in (0, 1], got {dens}"));
+                }
+                profile = format!("sparse:{dens}");
+            }
+            // Optional inline CSR payload: triplets + rows/cols + b.
+            let workload = if let Some(trips) = v.get("triplets").and_then(Json::as_arr) {
+                decode_triplet_workload(&v, trips)?
+            } else {
+                Workload::Synthetic { profile, n, d, seed }
+            };
             // Optional "nus": [..] turns the job into a warm-started
             // regularization path (Figure-1 workload as a service).
             let path_nus: Vec<f64> = v
@@ -63,15 +89,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
                 Some(0) => return Err("threads must be >= 1".into()),
                 t => t,
             };
-            Ok(Request::Solve(JobSpec {
-                workload: Workload::Synthetic { profile, n, d, seed },
-                nu,
-                solver,
-                eps,
-                seed,
-                path_nus,
-                threads,
-            }))
+            Ok(Request::Solve(JobSpec { workload, nu, solver, eps, seed, path_nus, threads }))
         }
         "status" => Ok(Request::Status { job: require_job(&v)? }),
         "wait" => Ok(Request::Wait {
@@ -88,6 +106,47 @@ pub fn decode(line: &str) -> Result<Request, String> {
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!("unknown cmd: {other}")),
     }
+}
+
+/// Decode an inline CSR workload: `"rows"`, `"cols"`, `"triplets"` (array
+/// of `[row, col, value]`) and `"b"` (length `rows`).
+fn decode_triplet_workload(v: &Json, trips: &[Json]) -> Result<Workload, String> {
+    let rows = v.get("rows").and_then(Json::as_usize).ok_or("triplets need \"rows\"")?;
+    let cols = v.get("cols").and_then(Json::as_usize).ok_or("triplets need \"cols\"")?;
+    if rows == 0 || cols == 0 {
+        return Err("triplet workload needs rows > 0 and cols > 0".into());
+    }
+    let b_json = v.get("b").and_then(Json::as_arr).ok_or("triplets need \"b\"")?;
+    let mut b = Vec::with_capacity(b_json.len());
+    for x in b_json {
+        let bv = x.as_f64().ok_or("non-numeric entry in \"b\"")?;
+        if !bv.is_finite() {
+            return Err("non-finite entry in \"b\"".into());
+        }
+        b.push(bv);
+    }
+    if b.len() != rows {
+        return Err(format!("\"b\" has {} entries, expected rows = {rows}", b.len()));
+    }
+    let mut triplets = Vec::with_capacity(trips.len());
+    for (k, t) in trips.iter().enumerate() {
+        let t = t.as_arr().ok_or_else(|| format!("triplet {k} must be [row, col, value]"))?;
+        if t.len() != 3 {
+            return Err(format!("triplet {k} must have exactly 3 entries"));
+        }
+        let r = t[0].as_usize().ok_or_else(|| format!("bad row in triplet {k}"))?;
+        let c = t[1].as_usize().ok_or_else(|| format!("bad col in triplet {k}"))?;
+        let val = t[2].as_f64().ok_or_else(|| format!("bad value in triplet {k}"))?;
+        if r >= rows || c >= cols {
+            return Err(format!("triplet {k} ({r},{c}) out of bounds for {rows} x {cols}"));
+        }
+        if !val.is_finite() {
+            return Err(format!("triplet {k} has non-finite value"));
+        }
+        triplets.push((r, c, val));
+    }
+    let a = Operand::Sparse(CsrMatrix::from_triplets(rows, cols, &triplets));
+    Ok(Workload::Inline { a, b })
 }
 
 fn require_job(v: &Json) -> Result<u64, String> {
@@ -170,6 +229,57 @@ mod tests {
     #[test]
     fn decode_solvers_command() {
         assert!(matches!(decode(r#"{"cmd":"solvers"}"#).unwrap(), Request::Solvers));
+    }
+
+    #[test]
+    fn decode_sparse_profile_and_density() {
+        match decode(r#"{"cmd":"solve","profile":"sparse","density":0.05}"#).unwrap() {
+            Request::Solve(spec) => match spec.workload {
+                Workload::Synthetic { profile, .. } => assert_eq!(profile, "sparse:0.05"),
+                other => panic!("wrong workload {other:?}"),
+            },
+            _ => panic!("wrong variant"),
+        }
+        // density without the sparse profile is rejected, as are bad values.
+        assert!(decode(r#"{"cmd":"solve","density":0.05}"#).is_err());
+        assert!(decode(r#"{"cmd":"solve","profile":"exp","density":0.05}"#).is_err());
+        assert!(decode(r#"{"cmd":"solve","profile":"sparse","density":0}"#).is_err());
+        assert!(decode(r#"{"cmd":"solve","profile":"sparse","density":1.5}"#).is_err());
+    }
+
+    #[test]
+    fn decode_inline_triplets() {
+        let line = r#"{"cmd":"solve","rows":3,"cols":2,
+                       "triplets":[[0,0,1.5],[1,1,-2.0],[2,0,0.5]],
+                       "b":[1.0,2.0,3.0],"solver":"cg"}"#;
+        match decode(&line.replace('\n', " ")).unwrap() {
+            Request::Solve(spec) => match spec.workload {
+                Workload::Inline { a, b } => {
+                    assert!(a.is_sparse());
+                    assert_eq!((a.rows(), a.cols(), a.nnz()), (3, 2, 3));
+                    assert_eq!(b, vec![1.0, 2.0, 3.0]);
+                }
+                other => panic!("wrong workload {other:?}"),
+            },
+            _ => panic!("wrong variant"),
+        }
+        // Malformed payloads are rejected with specific errors.
+        assert!(decode(r#"{"cmd":"solve","triplets":[[0,0,1.0]],"b":[1.0]}"#).is_err(), "no rows");
+        assert!(
+            decode(r#"{"cmd":"solve","rows":2,"cols":2,"triplets":[[5,0,1.0]],"b":[1.0,1.0]}"#)
+                .is_err(),
+            "out of bounds"
+        );
+        assert!(
+            decode(r#"{"cmd":"solve","rows":2,"cols":2,"triplets":[[0,0,1.0]],"b":[1.0]}"#)
+                .is_err(),
+            "b length"
+        );
+        assert!(
+            decode(r#"{"cmd":"solve","rows":2,"cols":2,"triplets":[[0,0]],"b":[1.0,1.0]}"#)
+                .is_err(),
+            "triplet arity"
+        );
     }
 
     #[test]

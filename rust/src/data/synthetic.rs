@@ -1,6 +1,9 @@
-//! Synthetic ridge-regression workloads with controlled spectra.
+//! Synthetic ridge-regression workloads with controlled spectra, plus
+//! density-controlled sparse workloads (CSR-backed [`Operand`]s) for the
+//! `O(nnz)` fast paths.
 
-use crate::linalg::Matrix;
+use crate::linalg::sparse::CsrMatrix;
+use crate::linalg::{Matrix, Operand};
 use crate::rng::Xoshiro256;
 use crate::sketch::srht::{fwht_rows, next_pow2};
 use crate::theory::effective_dimension_from_spectrum;
@@ -43,14 +46,19 @@ impl SpectrumProfile {
     }
 }
 
-/// A generated ridge workload.
+/// A generated ridge workload. The data matrix is an [`Operand`] — the
+/// spectral generators produce dense matrices, the [`sparse_gaussian`]
+/// family produces CSR — so every downstream consumer (solvers, sketch
+/// engine, CLI, coordinator) gets the storage-appropriate kernels.
 #[derive(Clone, Debug)]
 pub struct Dataset {
-    /// Data matrix, `n x d`.
-    pub a: Matrix,
+    /// Data matrix, `n x d` (dense or CSR).
+    pub a: Operand,
     /// Observations, length `n`.
     pub b: Vec<f64>,
-    /// Exact singular values of `a` (descending) — free `d_e` computation.
+    /// Exact singular values of `a` (descending) — free `d_e`
+    /// computation. Empty for workloads without a constructed spectrum
+    /// (the sparse generators): spectrum-derived quantities return NaN.
     pub sigma: Vec<f64>,
     /// Human-readable name for reports.
     pub name: String,
@@ -66,13 +74,20 @@ impl Dataset {
     }
 
     /// Effective dimension at regularization `nu` (exact, from the stored
-    /// spectrum).
+    /// spectrum; NaN when no spectrum was constructed — sparse workloads).
     pub fn effective_dimension(&self, nu: f64) -> f64 {
+        if self.sigma.is_empty() {
+            return f64::NAN;
+        }
         effective_dimension_from_spectrum(&self.sigma, nu)
     }
 
-    /// Condition number of the augmented matrix `[A; nu I]`.
+    /// Condition number of the augmented matrix `[A; nu I]` (NaN when no
+    /// spectrum was constructed).
     pub fn condition_number(&self, nu: f64) -> f64 {
+        if self.sigma.is_empty() {
+            return f64::NAN;
+        }
         let s1 = self.sigma[0];
         let sd = *self.sigma.last().unwrap();
         ((s1 * s1 + nu * nu) / (sd * sd + nu * nu)).sqrt()
@@ -160,7 +175,70 @@ pub fn generate(n: usize, d: usize, profile: &SpectrumProfile, seed: u64, name: 
         *bi += noise_sigma * rng.next_gaussian();
     }
 
-    Dataset { a, b, sigma, name: name.to_string() }
+    Dataset { a: Operand::Dense(a), b, sigma, name: name.to_string() }
+}
+
+/// Shared draw sequence for the sparse twins: Bernoulli(`density`) mask
+/// with `N(0, 1)` values, then planted observations as in [`generate`].
+/// Built directly as triplets — `O(nnz)` memory; only the dense *twin*
+/// ever materializes the `n x d` matrix — and the observations are
+/// computed from the CSR form in both variants, so
+/// [`sparse_gaussian`] and [`sparse_gaussian_dense`] at the same seed are
+/// the *same problem* bit for bit (the dense-vs-CSR agreement tests and
+/// the benchmark twins rely on this).
+fn sparse_parts(n: usize, d: usize, density: f64, seed: u64) -> (CsrMatrix, Vec<f64>) {
+    assert!(n > 0 && d > 0);
+    assert!(
+        density > 0.0 && density <= 1.0,
+        "density must be in (0, 1], got {density}"
+    );
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut triplets = Vec::new();
+    for i in 0..n {
+        for j in 0..d {
+            if rng.next_f64() < density {
+                triplets.push((i, j, rng.next_gaussian()));
+            }
+        }
+    }
+    let a = CsrMatrix::from_triplets(n, d, &triplets);
+    let mut x_pl = vec![0.0; d];
+    rng.fill_gaussian(&mut x_pl, 1.0 / (d as f64).sqrt());
+    let mut b = a.matvec(&x_pl);
+    let noise_sigma = 1.0 / (n as f64).sqrt();
+    for bi in b.iter_mut() {
+        *bi += noise_sigma * rng.next_gaussian();
+    }
+    (a, b)
+}
+
+/// Density-controlled sparse workload (rcv1-style bag-of-words regime):
+/// each entry is nonzero with probability `density`, values `N(0, 1)`,
+/// built and stored CSR (`O(nnz)` memory) so the whole pipeline runs its
+/// `O(nnz)` paths. Unlike the spectral generators, `n`/`d` need not be
+/// powers of two and no exact spectrum is recorded (`sigma` is empty).
+pub fn sparse_gaussian(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let (a, b) = sparse_parts(n, d, density, seed);
+    Dataset {
+        a: Operand::Sparse(a),
+        b,
+        sigma: Vec::new(),
+        name: format!("sparse-{density}"),
+    }
+}
+
+/// Dense-storage twin of [`sparse_gaussian`]: same seed ⇒ entrywise
+/// identical matrix and bitwise-identical observations, stored densely —
+/// the "before" side of every dense-vs-CSR benchmark and agreement test.
+/// (This one does pay the `O(n d)` densification; that is its purpose.)
+pub fn sparse_gaussian_dense(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let (a, b) = sparse_parts(n, d, density, seed);
+    Dataset {
+        a: Operand::Dense(a.to_dense()),
+        b,
+        sigma: Vec::new(),
+        name: format!("sparse-dense-{density}"),
+    }
 }
 
 /// Appendix A.1 exponential-decay workload (`sigma_j = 0.95^j`).
@@ -198,7 +276,7 @@ mod tests {
     #[test]
     fn generated_spectrum_matches_request() {
         let ds = exponential_decay(64, 16, 1);
-        let measured = singular_values(&ds.a);
+        let measured = singular_values(&ds.a.dense());
         for (m, e) in measured.iter().zip(&ds.sigma) {
             assert!((m - e).abs() < 1e-9, "measured {m} expected {e}");
         }
@@ -207,7 +285,7 @@ mod tests {
     #[test]
     fn polynomial_spectrum_matches() {
         let ds = polynomial_decay(64, 8, 2);
-        let measured = singular_values(&ds.a);
+        let measured = singular_values(&ds.a.dense());
         for (j, m) in measured.iter().enumerate() {
             assert!((m - 1.0 / (j as f64 + 1.0)).abs() < 1e-9);
         }
@@ -252,8 +330,28 @@ mod tests {
     fn deterministic_given_seed() {
         let d1 = exponential_decay(64, 8, 42);
         let d2 = exponential_decay(64, 8, 42);
-        assert!(d1.a.max_abs_diff(&d2.a) == 0.0);
+        assert_eq!(d1.a, d2.a);
         assert_eq!(d1.b, d2.b);
+    }
+
+    #[test]
+    fn sparse_twins_are_the_same_problem() {
+        let s = sparse_gaussian(50, 12, 0.2, 7);
+        let d = sparse_gaussian_dense(50, 12, 0.2, 7);
+        assert_eq!(s.b, d.b);
+        assert!(s.a.is_sparse() && !d.a.is_sparse());
+        assert!(s.a.dense().max_abs_diff(&d.a.dense()) == 0.0);
+        // Density lands in the right ballpark and the spectrum is absent.
+        let dens = s.a.density();
+        assert!(dens > 0.05 && dens < 0.4, "density {dens}");
+        assert!(s.effective_dimension(1.0).is_nan());
+        assert!(s.condition_number(1.0).is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "density must be in (0, 1]")]
+    fn sparse_rejects_bad_density() {
+        sparse_gaussian(8, 4, 0.0, 1);
     }
 
     #[test]

@@ -41,6 +41,36 @@
 //! regularization-path driver and the bench harness all dispatch through
 //! this one surface.
 //!
+//! ## Sparse operands: `O(nnz)` end to end
+//!
+//! The data matrix inside a [`RidgeProblem`] is an
+//! [`Operand`](linalg::Operand) — dense [`Matrix`] or CSR
+//! [`CsrMatrix`](linalg::sparse::CsrMatrix) — and *every* layer
+//! dispatches on the variant: gradients / Hessian products / prediction
+//! errors, CountSketch application (`O(nnz)`), Gaussian sketching
+//! (`O(m·nnz)` sparse row-axpy), SRHT (an `O(nnz)` scatter into the
+//! cached FWHT buffer), the incremental growth engine, the CLI
+//! (`--profile sparse --density 0.01`, `--data <triplet file>`) and the
+//! coordinator (`"profile":"sparse"`, `"density"`, inline `"triplets"`).
+//! On a 1%-dense matrix the dominant per-iteration and per-sketch terms
+//! drop by ~100x, while dense inputs keep the exact kernels they always
+//! had:
+//!
+//! ```no_run
+//! use effdim::data::synthetic;
+//! use effdim::solvers::{direct, RidgeProblem, Solver as _, SolverSpec, StopRule};
+//! // 1%-dense CSR workload; same API as the dense generators.
+//! let ds = synthetic::sparse_gaussian(4096, 512, 0.01, 7);
+//! let problem = RidgeProblem::new(ds.a, ds.b, 0.5);
+//! let stop = StopRule::GradientNorm { tol: 1e-8 };
+//! let spec: SolverSpec = "adaptive-sparse".parse().unwrap();
+//! let solution = spec.build(1).solve(&problem, &vec![0.0; problem.d()], &stop);
+//! assert!(solution.report.converged);
+//! ```
+//!
+//! See EXPERIMENTS.md §Sparse for the measured dense-vs-CSR speedups
+//! (`csr_speedup_*` in `BENCH_kernels.json`).
+//!
 //! ## Performance: parallel kernels and incremental sketch growth
 //!
 //! The dense hot paths (GEMM, Gram products, row-FWHT) are row-parallel
@@ -60,10 +90,21 @@
 //! sketches are prefix-consistent (old rows are never rescaled; the
 //! `1/sqrt(m)` normalization is folded into the Woodbury solve).
 //!
+//! All iterative inner loops (`cg`, `pcg`, `ihs`, `adaptive`) run on
+//! preallocated workspace buffers: the solver-level code performs zero
+//! heap allocation per steady-state iteration (pinned by the counting-
+//! allocator test `tests/alloc_free.rs`). Exceptions, by design: sketch
+//! growth rounds, external PJRT oracles, and — above the
+//! [`linalg::threads::worth_parallelizing`] threshold — the parallel
+//! kernels' internal scratch (scoped-thread stacks and the fixed-chunk
+//! reduction partials), which trades a few allocations for the
+//! multi-core win on large operands.
+//!
 //! ## Layout
-//! * [`linalg`] — dense linear-algebra substrate (blocked row-parallel
-//!   GEMM, Cholesky, Householder QR, Golub–Kahan SVD, triangular solves,
-//!   the [`linalg::threads`] knob).
+//! * [`linalg`] — linear-algebra substrate (blocked row-parallel GEMM,
+//!   CSR kernels, the [`linalg::Operand`] dense|CSR enum, Cholesky,
+//!   Householder QR, Golub–Kahan SVD, triangular solves, the
+//!   [`linalg::threads`] knob).
 //! * [`rng`] — deterministic xoshiro256++ RNG with Gaussian / Rademacher
 //!   streams.
 //! * [`sketch`] — Gaussian, SRHT (fast Walsh–Hadamard) and sparse
@@ -101,5 +142,6 @@ pub mod theory;
 pub mod util;
 
 pub use linalg::matrix::Matrix;
+pub use linalg::operand::Operand;
 pub use solvers::adaptive::{AdaptiveConfig, AdaptiveSolver, AdaptiveVariant};
 pub use solvers::{registry, RidgeProblem, SolveReport, Solver, SolverSpec};

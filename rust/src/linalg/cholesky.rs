@@ -7,7 +7,7 @@
 //! for matrices at the edge of positive definiteness.
 
 use super::matrix::Matrix;
-use super::triangular::{solve_lower, solve_lower_transpose};
+use super::triangular::solve_lower;
 
 /// A lower-triangular Cholesky factor `L` with `L L^T = M`.
 #[derive(Clone, Debug)]
@@ -133,10 +133,19 @@ impl Cholesky {
         Ok(())
     }
 
+    /// Solve `M x = b` in place (`x` holds `b` on entry, the solution on
+    /// exit) — the allocation-free primitive the per-iteration hot loops
+    /// call ([`crate::solvers::woodbury::WoodburyCache::apply_inverse_into`]).
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        super::triangular::solve_lower_in_place(&self.l, x);
+        super::triangular::solve_lower_transpose_in_place(&self.l, x);
+    }
+
     /// Solve `M x = b` via the two triangular solves.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let y = solve_lower(&self.l, b);
-        solve_lower_transpose(&self.l, &y)
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
     }
 
     /// Solve for several right-hand sides stacked as matrix columns.

@@ -130,23 +130,42 @@ impl Matrix {
         t
     }
 
-    /// `y = self * x` (GEMV). Row-major layout makes this a stream of dots.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+    /// `y = self * x` (GEMV) into a caller buffer — the allocation-free
+    /// primitive behind the iterative solvers' workspace loops.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols, "matvec dimension mismatch");
-        let mut y = vec![0.0; self.rows];
+        assert_eq!(y.len(), self.rows, "matvec output length mismatch");
         for i in 0..self.rows {
             y[i] = dot(self.row(i), x);
         }
+    }
+
+    /// `y = self * x` (GEMV). Row-major layout makes this a stream of dots.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
         y
+    }
+
+    /// `y += self^T * x` without forming the transpose (axpy over rows).
+    pub fn matvec_t_add(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "matvec_t dimension mismatch");
+        assert_eq!(y.len(), self.cols, "matvec_t output length mismatch");
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// `y = self^T * x` into a caller buffer.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.matvec_t_add(x, y);
     }
 
     /// `y = self^T * x` without forming the transpose (axpy over rows).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows, "matvec_t dimension mismatch");
         let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            axpy(x[i], self.row(i), &mut y);
-        }
+        self.matvec_t_add(x, &mut y);
         y
     }
 
@@ -272,37 +291,36 @@ impl Matrix {
     }
 
     /// `C = self^T * self` (Gram matrix), exploiting symmetry: only the
-    /// upper triangle is computed, then mirrored. Large inputs split their
-    /// rows across threads with per-thread partial Grams reduced in a
-    /// fixed order — deterministic for a given thread count, but the last
-    /// ulp may differ across thread counts (the only kernel here with a
-    /// cross-thread reduction).
+    /// upper triangle is computed, then mirrored. Above the parallel
+    /// threshold the rows always split into [`threads::REDUCE_PARTS`]
+    /// *fixed* chunks whose partial Grams are reduced in chunk order: the
+    /// summation tree is a function of the matrix shape alone, so the
+    /// result is bitwise identical at any thread count (the chunks are
+    /// merely *executed* by however many threads are configured).
     pub fn gram(&self) -> Matrix {
         let (n, d) = (self.rows, self.cols);
         let mut g = Matrix::zeros(d, d);
+        if n == 0 || d == 0 {
+            return g;
+        }
         let flops = n as f64 * d as f64 * d as f64;
-        let t = if threads::worth_parallelizing(flops) { threads::current().min(n.max(1)) } else { 1 };
-        if t <= 1 {
+        let parts = threads::REDUCE_PARTS;
+        if !threads::worth_parallelizing(flops) || n < 2 * parts {
             self.gram_rows_upper(0, n, &mut g.data);
         } else {
-            let chunk = (n + t - 1) / t;
-            std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                let mut r0 = chunk; // chunk 0 runs on the calling thread
-                while r0 < n {
-                    let r1 = (r0 + chunk).min(n);
-                    handles.push(s.spawn(move || {
-                        let mut partial = vec![0.0; d * d];
-                        self.gram_rows_upper(r0, r1, &mut partial);
-                        partial
-                    }));
-                    r0 = r1;
-                }
-                self.gram_rows_upper(0, chunk.min(n), &mut g.data);
-                for h in handles {
-                    axpy(1.0, &h.join().expect("gram worker panicked"), &mut g.data);
-                }
+            let chunk = (n + parts - 1) / parts;
+            let mut partials = vec![0.0; parts * d * d];
+            let jobs: Vec<(usize, &mut [f64])> =
+                partials.chunks_mut(d * d).enumerate().collect();
+            let t = threads::current().min(parts);
+            threads::run_jobs(t, jobs, |(p, buf)| {
+                let r0 = (p * chunk).min(n);
+                let r1 = (r0 + chunk).min(n);
+                self.gram_rows_upper(r0, r1, buf);
             });
+            for p in 0..parts {
+                axpy(1.0, &partials[p * d * d..(p + 1) * d * d], &mut g.data);
+            }
         }
         for a in 0..d {
             for b in 0..a {
@@ -526,16 +544,20 @@ mod tests {
     }
 
     #[test]
-    fn parallel_gram_matches_serial_within_roundoff() {
-        // gram reduces per-thread partials: equal up to last-ulp noise.
+    fn parallel_gram_bitwise_matches_any_thread_count() {
+        // gram reduces fixed-chunk partials in chunk order: the summation
+        // tree depends on the shape only, so every thread count agrees
+        // bitwise (300 * 48 * 48 ~ 6.9e5 crosses the parallel threshold).
         let a = test_mat(300, 48, 16);
         let g1 = crate::linalg::threads::with_threads(1, || a.gram());
-        let g4 = crate::linalg::threads::with_threads(4, || a.gram());
-        assert!(g1.max_abs_diff(&g4) < 1e-10);
-        // And symmetric either way.
+        for t in [2, 3, 4, 8] {
+            let gt = crate::linalg::threads::with_threads(t, || a.gram());
+            assert_eq!(g1, gt, "threads={t}");
+        }
+        // And symmetric.
         for i in 0..48 {
             for j in 0..i {
-                assert_eq!(g4.get(i, j), g4.get(j, i));
+                assert_eq!(g1.get(i, j), g1.get(j, i));
             }
         }
     }

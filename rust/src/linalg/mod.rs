@@ -11,13 +11,18 @@
 //! * [`svd`] — one-sided Jacobi SVD (singular values for `d_e`, spectra,
 //!   and test oracles).
 //! * [`triangular`] — forward/back substitution.
-//! * [`sparse`] — CSR storage + `O(nnz)` kernels (paper Remark 4.1).
+//! * [`sparse`] — CSR storage + row-parallel `O(nnz)` kernels (paper
+//!   Remark 4.1).
+//! * [`operand`] — the [`operand::Operand`] enum (dense | CSR) that every
+//!   solver, sketch, and I/O layer consumes, so sparse inputs keep their
+//!   `O(nnz)` cost end to end.
 //! * [`threads`] — the thread-count knob behind the row-parallel GEMM,
-//!   FWHT and Gram kernels (`@threads=k` solver param, `PALLAS_THREADS`
-//!   env var, hardware default).
+//!   FWHT, CSR and Gram kernels (`@threads=k` solver param,
+//!   `PALLAS_THREADS` env var, hardware default).
 
 pub mod cholesky;
 pub mod matrix;
+pub mod operand;
 pub mod sparse;
 pub mod qr;
 pub mod svd;
@@ -25,6 +30,7 @@ pub mod threads;
 pub mod triangular;
 
 pub use matrix::Matrix;
+pub use operand::{Operand, OperandRef};
 
 /// Euclidean norm of a vector.
 pub fn norm2(v: &[f64]) -> f64 {

@@ -1,0 +1,314 @@
+//! The data-matrix operand: dense or CSR, one type for every layer.
+//!
+//! The paper's complexity claims are stated per *operation on `A`* —
+//! sketch application, matvec, gradient — and its experimental regime
+//! (bag-of-words / one-hot features) is overwhelmingly sparse. [`Operand`]
+//! is the enum every subsystem consumes ([`crate::solvers::RidgeProblem`]
+//! owns one; the sketch engine, solvers, coordinator and CLI dispatch on
+//! it), so a 1%-dense input pays `O(nnz)` instead of `O(n d)` on every
+//! hot operation while dense inputs keep the exact dense kernels they had
+//! before (`Operand::Dense` is a transparent wrapper — same code paths,
+//! same results).
+//!
+//! [`OperandRef`] is the borrowed view used at API boundaries: functions
+//! that only *read* the matrix accept `impl Into<OperandRef>` so callers
+//! can pass `&Matrix`, `&CsrMatrix`, or `&Operand` without cloning.
+
+use super::matrix::Matrix;
+use super::sparse::CsrMatrix;
+use std::borrow::Cow;
+
+/// Owned data matrix: dense row-major or CSR.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Operand {
+    Dense(Matrix),
+    Sparse(CsrMatrix),
+}
+
+/// Borrowed view of an [`Operand`] (or of a bare `Matrix` / `CsrMatrix`).
+#[derive(Clone, Copy)]
+pub enum OperandRef<'a> {
+    Dense(&'a Matrix),
+    Sparse(&'a CsrMatrix),
+}
+
+impl From<Matrix> for Operand {
+    fn from(m: Matrix) -> Self {
+        Operand::Dense(m)
+    }
+}
+
+impl From<CsrMatrix> for Operand {
+    fn from(c: CsrMatrix) -> Self {
+        Operand::Sparse(c)
+    }
+}
+
+impl<'a> From<&'a Matrix> for OperandRef<'a> {
+    fn from(m: &'a Matrix) -> Self {
+        OperandRef::Dense(m)
+    }
+}
+
+impl<'a> From<&'a CsrMatrix> for OperandRef<'a> {
+    fn from(c: &'a CsrMatrix) -> Self {
+        OperandRef::Sparse(c)
+    }
+}
+
+impl<'a> From<&'a Operand> for OperandRef<'a> {
+    fn from(o: &'a Operand) -> Self {
+        o.as_ref()
+    }
+}
+
+impl Operand {
+    /// Borrowed view for read-only kernel dispatch.
+    pub fn as_ref(&self) -> OperandRef<'_> {
+        match self {
+            Operand::Dense(m) => OperandRef::Dense(m),
+            Operand::Sparse(c) => OperandRef::Sparse(c),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.as_ref().rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.as_ref().cols()
+    }
+
+    /// Stored entries: `nnz` for CSR, `rows * cols` for dense.
+    pub fn nnz(&self) -> usize {
+        self.as_ref().nnz()
+    }
+
+    /// `nnz / (rows * cols)`; 1.0 for dense storage.
+    pub fn density(&self) -> f64 {
+        self.as_ref().density()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Operand::Sparse(_))
+    }
+
+    /// The dense matrix: borrowed for `Dense`, an `O(n d)` densification
+    /// for `Sparse` — oracle / diagnostic paths only (SVD spectra, the
+    /// at-cap exact-Hessian fallback), never the per-iteration hot loop.
+    pub fn dense(&self) -> Cow<'_, Matrix> {
+        match self {
+            Operand::Dense(m) => Cow::Borrowed(m),
+            Operand::Sparse(c) => Cow::Owned(c.to_dense()),
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&Matrix> {
+        match self {
+            Operand::Dense(m) => Some(m),
+            Operand::Sparse(_) => None,
+        }
+    }
+
+    pub fn as_csr(&self) -> Option<&CsrMatrix> {
+        match self {
+            Operand::Dense(_) => None,
+            Operand::Sparse(c) => Some(c),
+        }
+    }
+
+    /// `A^T` — `O(rows * cols)` dense, `O(nnz)` CSR counting sort.
+    pub fn transpose(&self) -> Operand {
+        match self {
+            Operand::Dense(m) => Operand::Dense(m.transpose()),
+            Operand::Sparse(c) => Operand::Sparse(c.transpose()),
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        self.as_ref().matvec(x)
+    }
+
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        self.as_ref().matvec_t(x)
+    }
+
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        self.as_ref().matvec_into(x, y)
+    }
+
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        self.as_ref().matvec_t_into(x, y)
+    }
+
+    pub fn matvec_t_add(&self, x: &[f64], y: &mut [f64]) {
+        self.as_ref().matvec_t_add(x, y)
+    }
+
+    /// `A^T A` (`cols x cols`).
+    pub fn gram(&self) -> Matrix {
+        self.as_ref().gram()
+    }
+
+    /// `A A^T` (`rows x rows`).
+    pub fn gram_outer(&self) -> Matrix {
+        self.as_ref().gram_outer()
+    }
+}
+
+impl<'a> OperandRef<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            OperandRef::Dense(m) => m.rows(),
+            OperandRef::Sparse(c) => c.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            OperandRef::Dense(m) => m.cols(),
+            OperandRef::Sparse(c) => c.cols(),
+        }
+    }
+
+    /// Stored entries: `nnz` for CSR, `rows * cols` for dense.
+    pub fn nnz(&self) -> usize {
+        match self {
+            OperandRef::Dense(m) => m.rows() * m.cols(),
+            OperandRef::Sparse(c) => c.nnz(),
+        }
+    }
+
+    /// `nnz / (rows * cols)`; 1.0 for dense storage.
+    pub fn density(&self) -> f64 {
+        match self {
+            OperandRef::Dense(_) => 1.0,
+            OperandRef::Sparse(c) => c.density(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, OperandRef::Sparse(_))
+    }
+
+    /// `y = A x` into a caller buffer (`O(nd)` dense, `O(nnz)` CSR).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            OperandRef::Dense(m) => m.matvec_into(x, y),
+            OperandRef::Sparse(c) => c.matvec_into(x, y),
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows()];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// `y = A^T x` into a caller buffer.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            OperandRef::Dense(m) => m.matvec_t_into(x, y),
+            OperandRef::Sparse(c) => c.matvec_t_into(x, y),
+        }
+    }
+
+    /// `y += A^T x`.
+    pub fn matvec_t_add(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            OperandRef::Dense(m) => m.matvec_t_add(x, y),
+            OperandRef::Sparse(c) => c.matvec_t_add(x, y),
+        }
+    }
+
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols()];
+        self.matvec_t_add(x, &mut y);
+        y
+    }
+
+    /// `A^T A` (`cols x cols`).
+    pub fn gram(&self) -> Matrix {
+        match self {
+            OperandRef::Dense(m) => m.gram(),
+            OperandRef::Sparse(c) => c.gram(),
+        }
+    }
+
+    /// `A A^T` (`rows x rows`).
+    pub fn gram_outer(&self) -> Matrix {
+        match self {
+            OperandRef::Dense(m) => m.gram_outer(),
+            OperandRef::Sparse(c) => c.gram_outer(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn twin(rows: usize, cols: usize, density: f64, seed: u64) -> (Operand, Operand) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let dense = Matrix::from_fn(rows, cols, |_, _| {
+            if rng.next_f64() < density {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        });
+        let csr = CsrMatrix::from_dense(&dense);
+        (Operand::Dense(dense), Operand::Sparse(csr))
+    }
+
+    #[test]
+    fn variants_agree_on_every_kernel() {
+        let (od, os) = twin(21, 9, 0.3, 1);
+        assert_eq!((od.rows(), od.cols()), (os.rows(), os.cols()));
+        assert!(os.nnz() < od.nnz());
+        assert!(os.density() < 1.0 && od.density() == 1.0);
+        let x: Vec<f64> = (0..9).map(|i| (i as f64 * 0.4).sin()).collect();
+        let xt: Vec<f64> = (0..21).map(|i| (i as f64 * 0.2).cos()).collect();
+        let (mvd, mvs) = (od.matvec(&x), os.matvec(&x));
+        let (mtd, mts) = (od.matvec_t(&xt), os.matvec_t(&xt));
+        for i in 0..21 {
+            assert!((mvd[i] - mvs[i]).abs() < 1e-12);
+        }
+        for j in 0..9 {
+            assert!((mtd[j] - mts[j]).abs() < 1e-12);
+        }
+        assert!(od.gram().max_abs_diff(&os.gram()) < 1e-12);
+        assert!(od.gram_outer().max_abs_diff(&os.gram_outer()) < 1e-12);
+        assert!(od
+            .transpose()
+            .dense()
+            .max_abs_diff(&os.transpose().dense()) < 1e-12);
+    }
+
+    #[test]
+    fn dense_view_borrows_for_dense_and_densifies_csr() {
+        let (od, os) = twin(7, 5, 0.4, 2);
+        assert!(matches!(od.dense(), Cow::Borrowed(_)));
+        assert!(matches!(os.dense(), Cow::Owned(_)));
+        assert!(od.dense().max_abs_diff(&os.dense()) == 0.0);
+        assert!(od.as_dense().is_some() && od.as_csr().is_none());
+        assert!(os.as_csr().is_some() && os.as_dense().is_none());
+    }
+
+    #[test]
+    fn operand_ref_conversions() {
+        let (od, os) = twin(6, 4, 0.5, 3);
+        let m = od.as_dense().unwrap();
+        let c = os.as_csr().unwrap();
+        // All three &-conversions produce working views.
+        let x = vec![1.0, -1.0, 0.5, 2.0];
+        let via_matrix = OperandRef::from(m).matvec(&x);
+        let via_csr = OperandRef::from(c).matvec(&x);
+        let via_operand = OperandRef::from(&od).matvec(&x);
+        for i in 0..6 {
+            assert!((via_matrix[i] - via_operand[i]).abs() == 0.0);
+            assert!((via_matrix[i] - via_csr[i]).abs() < 1e-12);
+        }
+    }
+}

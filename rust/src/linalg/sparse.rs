@@ -2,10 +2,31 @@
 //! Remark 4.1: with sparse data, embeddings whose application costs
 //! `O(nnz(A))` (CountSketch, [`crate::sketch::sparse`]) replace the dense
 //! `O(mnd)` / `O(nd log n)` sketches. This module provides the storage and
-//! the `O(nnz)` matvec/sketch building blocks; the deviation analysis for
-//! sparse embeddings is future work in the paper and out of scope here.
+//! the `O(nnz)` matvec / gram / sketch building blocks; the deviation
+//! analysis for sparse embeddings is future work in the paper and out of
+//! scope here.
+//!
+//! As of the end-to-end sparse operand path
+//! ([`crate::linalg::operand::Operand`]), these kernels sit on the solver
+//! hot paths, so the large ones are row-parallel over the
+//! [`super::threads`] scoped-thread infrastructure:
+//!
+//! * `matvec` / `left_mul` split independent *output* rows across threads —
+//!   bitwise identical at any thread count (each output element keeps its
+//!   serial accumulation order).
+//! * `matvec_t` / `gram` are reductions: input rows are split into
+//!   [`super::threads::REDUCE_PARTS`] *fixed* chunks whose partial results
+//!   are combined in chunk order. The partition depends only on the matrix
+//!   shape — never on the thread count — so these are bitwise identical at
+//!   any thread count too (same policy as the dense [`Matrix::gram`]).
+//!
+//! Invariant: within each row, column indices are strictly increasing
+//! (`from_triplets` sorts and merges; `from_dense` emits in order;
+//! `transpose` preserves it). `gram_outer` relies on this for its
+//! merge-based row dot products.
 
 use super::matrix::Matrix;
+use super::{axpy, threads};
 
 /// CSR matrix: `indptr[i]..indptr[i+1]` indexes row `i`'s entries.
 #[derive(Clone, Debug, PartialEq)]
@@ -90,7 +111,7 @@ impl CsrMatrix {
         (&self.indices[span.clone()], &self.values[span])
     }
 
-    /// Densify (tests / small matrices only).
+    /// Densify (tests / small matrices / oracle paths only).
     pub fn to_dense(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
         for i in 0..self.rows {
@@ -103,26 +124,83 @@ impl CsrMatrix {
         out
     }
 
-    /// `y = A x` in `O(nnz)`.
-    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
-        let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let (cols, vals) = self.row(i);
-            let mut s = 0.0;
-            for (&c, &v) in cols.iter().zip(vals) {
-                s += v * x[c as usize];
-            }
-            y[i] = s;
+    /// `A^T` in `O(nnz)` via a counting sort over columns. Row-sorted
+    /// column order is preserved (ascending original row indices).
+    pub fn transpose(&self) -> CsrMatrix {
+        let (n, d) = (self.rows, self.cols);
+        let nnz = self.nnz();
+        let mut indptr = vec![0usize; d + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
         }
+        for j in 1..=d {
+            indptr[j] += indptr[j - 1];
+        }
+        let mut next = indptr.clone();
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0; nnz];
+        for i in 0..n {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let pos = next[c as usize];
+                indices[pos] = i as u32;
+                values[pos] = v;
+                next[c as usize] += 1;
+            }
+        }
+        CsrMatrix { rows: d, cols: n, indptr, indices, values }
+    }
+
+    #[inline]
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let (cols, vals) = self.row(i);
+        let mut s = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            s += v * x[c as usize];
+        }
+        s
+    }
+
+    /// `y = A x` in `O(nnz)`, row-parallel (each output element keeps the
+    /// serial accumulation order — bitwise identical at any thread count).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec dimension mismatch");
+        assert_eq!(y.len(), self.rows, "matvec output length mismatch");
+        let flops = 2.0 * self.nnz() as f64;
+        let t = if threads::worth_parallelizing(flops) {
+            threads::current().min(self.rows.max(1))
+        } else {
+            1
+        };
+        if t <= 1 {
+            for i in 0..self.rows {
+                y[i] = self.row_dot(i, x);
+            }
+            return;
+        }
+        let chunk = (self.rows + t - 1) / t;
+        let jobs: Vec<(usize, &mut [f64])> = y
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(i, c)| (i * chunk, c))
+            .collect();
+        threads::run_jobs(t, jobs, |(r0, out)| {
+            for (k, yi) in out.iter_mut().enumerate() {
+                *yi = self.row_dot(r0 + k, x);
+            }
+        });
+    }
+
+    /// `y = A x` in `O(nnz)` (allocating wrapper).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
         y
     }
 
-    /// `y = A^T x` in `O(nnz)` (scatter over rows).
-    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows);
-        let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
+    /// Scatter rows `r0..r1` of `A^T x` into `y` (`y[c] += v * x[row]`).
+    fn scatter_rows_t(&self, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) {
+        for i in r0..r1 {
             let xi = x[i];
             if xi == 0.0 {
                 continue;
@@ -132,7 +210,168 @@ impl CsrMatrix {
                 y[c as usize] += v * xi;
             }
         }
+    }
+
+    /// `y += A^T x` in `O(nnz)`. Above the parallel threshold, rows split
+    /// into [`threads::REDUCE_PARTS`] fixed chunks whose partials reduce in
+    /// chunk order — the partition depends on the shape only, so the result
+    /// is bitwise identical at any thread count.
+    pub fn matvec_t_add(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "matvec_t dimension mismatch");
+        assert_eq!(y.len(), self.cols, "matvec_t output length mismatch");
+        let flops = 2.0 * self.nnz() as f64;
+        let parts = threads::REDUCE_PARTS;
+        if !threads::worth_parallelizing(flops) || self.rows < 2 * parts || self.cols == 0 {
+            self.scatter_rows_t(0, self.rows, x, y);
+            return;
+        }
+        let d = self.cols;
+        let chunk = (self.rows + parts - 1) / parts;
+        let mut partials = vec![0.0; parts * d];
+        let jobs: Vec<(usize, &mut [f64])> = partials.chunks_mut(d).enumerate().collect();
+        let t = threads::current().min(parts);
+        threads::run_jobs(t, jobs, |(p, buf)| {
+            let r0 = (p * chunk).min(self.rows);
+            let r1 = (r0 + chunk).min(self.rows);
+            self.scatter_rows_t(r0, r1, x, buf);
+        });
+        for p in 0..parts {
+            axpy(1.0, &partials[p * d..(p + 1) * d], y);
+        }
+    }
+
+    /// `y = A^T x` in `O(nnz)` into a caller buffer.
+    pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
+        y.fill(0.0);
+        self.matvec_t_add(x, y);
+    }
+
+    /// `y = A^T x` in `O(nnz)` (allocating wrapper).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.matvec_t_add(x, &mut y);
         y
+    }
+
+    /// Accumulate the upper triangle of the Gram contribution of rows
+    /// `r0..r1` into `g` (`d x d`, row-major): `g[c1][c2] += v1 * v2` for
+    /// each within-row entry pair with `c1 <= c2`.
+    fn gram_rows_upper(&self, r0: usize, r1: usize, g: &mut [f64]) {
+        let d = self.cols;
+        for i in r0..r1 {
+            let (cols, vals) = self.row(i);
+            for (p, (&ca, &va)) in cols.iter().zip(vals).enumerate() {
+                let base = ca as usize * d;
+                for (&cb, &vb) in cols[p..].iter().zip(&vals[p..]) {
+                    g[base + cb as usize] += va * vb;
+                }
+            }
+        }
+    }
+
+    /// `A^T A` (`d x d`) in `O(sum_i nnz_i^2)` — within-row entry-pair
+    /// scatter, upper triangle mirrored. Fixed-chunk partial reduction as
+    /// in [`Self::matvec_t_add`] (bitwise thread-count invariant).
+    pub fn gram(&self) -> Matrix {
+        let d = self.cols;
+        let mut g = Matrix::zeros(d, d);
+        if d == 0 || self.rows == 0 {
+            return g;
+        }
+        // Work model: average row fill times nnz pair-products.
+        let flops = self.nnz() as f64 / self.rows as f64 * self.nnz() as f64;
+        let parts = threads::REDUCE_PARTS;
+        if !threads::worth_parallelizing(flops) || self.rows < 2 * parts {
+            self.gram_rows_upper(0, self.rows, g.as_mut_slice());
+        } else {
+            let chunk = (self.rows + parts - 1) / parts;
+            let mut partials = vec![0.0; parts * d * d];
+            let jobs: Vec<(usize, &mut [f64])> =
+                partials.chunks_mut(d * d).enumerate().collect();
+            let t = threads::current().min(parts);
+            threads::run_jobs(t, jobs, |(p, buf)| {
+                let r0 = (p * chunk).min(self.rows);
+                let r1 = (r0 + chunk).min(self.rows);
+                self.gram_rows_upper(r0, r1, buf);
+            });
+            for p in 0..parts {
+                axpy(1.0, &partials[p * d * d..(p + 1) * d * d], g.as_mut_slice());
+            }
+        }
+        for a in 0..d {
+            for b in 0..a {
+                let v = g.get(b, a);
+                g.set(a, b, v);
+            }
+        }
+        g
+    }
+
+    /// `A A^T` (`rows x rows`), entry `(i, j)` a merge dot over the two
+    /// sorted rows — `O(rows * nnz)` worst case. Oracle/diagnostic path
+    /// (dual ground truth); not on the iterative hot loops.
+    pub fn gram_outer(&self) -> Matrix {
+        let n = self.rows;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            let (ci, vi) = self.row(i);
+            for j in i..n {
+                let (cj, vj) = self.row(j);
+                let (mut p, mut q, mut s) = (0usize, 0usize, 0.0);
+                while p < ci.len() && q < cj.len() {
+                    match ci[p].cmp(&cj[q]) {
+                        std::cmp::Ordering::Less => p += 1,
+                        std::cmp::Ordering::Greater => q += 1,
+                        std::cmp::Ordering::Equal => {
+                            s += vi[p] * vj[q];
+                            p += 1;
+                            q += 1;
+                        }
+                    }
+                }
+                g.set(i, j, s);
+                g.set(j, i, s);
+            }
+        }
+        g
+    }
+
+    /// `G * A` for a dense left operand `G` (`p x rows`) in `O(p * nnz)` —
+    /// the sparse fast path for applying a dense (Gaussian) sketch block.
+    /// Row-parallel over the independent output rows (bitwise thread-count
+    /// invariant).
+    pub fn left_mul(&self, g: &Matrix) -> Matrix {
+        assert_eq!(g.cols(), self.rows, "left_mul dimension mismatch");
+        let (p, d) = (g.rows(), self.cols);
+        let mut out = Matrix::zeros(p, d);
+        if p == 0 || d == 0 {
+            return out;
+        }
+        let flops = 2.0 * p as f64 * self.nnz() as f64;
+        let t = if threads::worth_parallelizing(flops) { threads::current().min(p) } else { 1 };
+        let chunk = (p + t - 1) / t;
+        let jobs: Vec<(usize, &mut [f64])> = out
+            .as_mut_slice()
+            .chunks_mut(chunk * d)
+            .enumerate()
+            .map(|(i, rows)| (i * chunk, rows))
+            .collect();
+        threads::run_jobs(t, jobs, |(g0, rows)| {
+            for (k, orow) in rows.chunks_mut(d).enumerate() {
+                let grow = g.row(g0 + k);
+                for j in 0..self.rows {
+                    let coeff = grow[j];
+                    if coeff == 0.0 {
+                        continue;
+                    }
+                    let (cols, vals) = self.row(j);
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        orow[c as usize] += coeff * v;
+                    }
+                }
+            }
+        });
+        out
     }
 
     /// Ridge gradient on sparse data: `A^T(Ax - b) + nu^2 x`, `O(nnz)`.
@@ -153,6 +392,7 @@ impl CsrMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::threads::with_threads;
     use crate::rng::Xoshiro256;
 
     fn random_sparse(rows: usize, cols: usize, density: f64, seed: u64) -> (CsrMatrix, Matrix) {
@@ -197,6 +437,61 @@ mod tests {
     }
 
     #[test]
+    fn transpose_matches_dense_transpose() {
+        let (csr, dense) = random_sparse(19, 13, 0.3, 8);
+        let t = csr.transpose();
+        assert_eq!((t.rows(), t.cols()), (13, 19));
+        assert!(t.to_dense().max_abs_diff(&dense.transpose()) == 0.0);
+        // Double transpose is the identity (including the sorted-column
+        // invariant).
+        assert_eq!(t.transpose(), csr);
+    }
+
+    #[test]
+    fn gram_matches_dense_gram() {
+        let (csr, dense) = random_sparse(40, 12, 0.35, 9);
+        assert!(csr.gram().max_abs_diff(&dense.gram()) < 1e-12);
+    }
+
+    #[test]
+    fn gram_outer_matches_dense() {
+        let (csr, dense) = random_sparse(14, 25, 0.3, 10);
+        assert!(csr.gram_outer().max_abs_diff(&dense.gram_outer()) < 1e-12);
+    }
+
+    #[test]
+    fn left_mul_matches_dense_matmul() {
+        let (csr, dense) = random_sparse(22, 9, 0.3, 11);
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let g = Matrix::from_fn(6, 22, |_, _| rng.next_gaussian());
+        assert!(csr.left_mul(&g).max_abs_diff(&g.matmul(&dense)) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_thread_invariant() {
+        // Large enough that 2*nnz and the gram work model cross the
+        // parallel threshold (~4e5): nnz ~ 0.5 * 1024 * 96 ~ 49k is short
+        // of it for matvec, so scale rows up via density 1.0 on the
+        // reduction kernels' own threshold instead: use a denser block.
+        let (csr, _) = random_sparse(1024, 256, 0.8, 13);
+        assert!(2 * csr.nnz() >= 400_000, "test premise: above threshold");
+        let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.13).sin()).collect();
+        let xt: Vec<f64> = (0..1024).map(|i| (i as f64 * 0.011).cos()).collect();
+        let mv1 = with_threads(1, || csr.matvec(&x));
+        let mt1 = with_threads(1, || csr.matvec_t(&xt));
+        let g1 = with_threads(1, || csr.gram());
+        let mut glx = Xoshiro256::seed_from_u64(14);
+        let gl = Matrix::from_fn(8, 1024, |_, _| glx.next_gaussian());
+        let lm1 = with_threads(1, || csr.left_mul(&gl));
+        for t in [2, 3, 8] {
+            assert_eq!(with_threads(t, || csr.matvec(&x)), mv1, "matvec t={t}");
+            assert_eq!(with_threads(t, || csr.matvec_t(&xt)), mt1, "matvec_t t={t}");
+            assert_eq!(with_threads(t, || csr.gram()), g1, "gram t={t}");
+            assert_eq!(with_threads(t, || csr.left_mul(&gl)), lm1, "left_mul t={t}");
+        }
+    }
+
+    #[test]
     fn ridge_gradient_matches_dense_problem() {
         let (csr, dense) = random_sparse(32, 8, 0.3, 4);
         let mut rng = Xoshiro256::seed_from_u64(5);
@@ -230,5 +525,7 @@ mod tests {
         let csr = CsrMatrix::from_triplets(3, 3, &[]);
         assert_eq!(csr.nnz(), 0);
         assert_eq!(csr.matvec(&[1.0, 1.0, 1.0]), vec![0.0; 3]);
+        assert_eq!(csr.transpose().nnz(), 0);
+        assert_eq!(csr.gram().fro_norm(), 0.0);
     }
 }

@@ -16,16 +16,30 @@
 //! crates); each parallel region costs a few spawns, so the kernels only
 //! split work above a minimum size ([`worth_parallelizing`]).
 //!
-//! Determinism note: the parallel GEMM, `gram_outer`, `matmul_nt` and FWHT
-//! partitions compute every output element with the same operation order
-//! as the serial kernels, so their results are bitwise identical at any
-//! thread count. `Matrix::gram` reduces per-thread partial sums and is
-//! deterministic for a *fixed* thread count but may differ in the last ulp
-//! across different thread counts.
+//! Determinism note: *every* parallel kernel is bitwise identical at any
+//! thread count. Partition-style kernels (GEMM, `gram_outer`, `matmul_nt`,
+//! FWHT, CSR matvec / `left_mul`) compute each output element with the
+//! same operation order as the serial kernels. Reduction-style kernels
+//! (`Matrix::gram`, CSR `matvec_t` / `gram`) split their input rows into
+//! [`REDUCE_PARTS`] *fixed* chunks — a partition of the data, not of the
+//! workers — and combine the per-chunk partials in chunk order, so the
+//! summation tree depends only on the matrix shape, never on how many
+//! threads executed the chunks.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+/// Fixed chunk count for reduction-style parallel kernels
+/// (`Matrix::gram`, CSR `matvec_t` / `gram`): inputs above the
+/// [`worth_parallelizing`] threshold always split into this many row
+/// chunks (regardless of the thread count executing them), and the
+/// per-chunk partials are reduced in chunk order — making the floating-
+/// point summation tree a function of the matrix shape alone, hence
+/// bitwise identical at any thread count. Also caps those kernels'
+/// parallelism; 8 balances spawn overhead against partial-buffer memory
+/// (`REDUCE_PARTS * d^2` for the Gram kernels).
+pub const REDUCE_PARTS: usize = 8;
 
 /// Process-wide thread count; 0 = unset (fall through to env / hardware).
 static GLOBAL: AtomicUsize = AtomicUsize::new(0);

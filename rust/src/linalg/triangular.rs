@@ -6,33 +6,39 @@
 
 use super::matrix::Matrix;
 
-/// Solve `L y = b` with `L` lower-triangular (entries above the diagonal
-/// are ignored). Panics if a diagonal entry is exactly zero.
-pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+/// Solve `L y = b` in place (`x` holds `b` on entry, the solution on
+/// exit), `L` lower-triangular (entries above the diagonal are ignored).
+/// Panics if a diagonal entry is exactly zero. The in-place forms are the
+/// allocation-free primitives the iterative hot loops call.
+pub fn solve_lower_in_place(l: &Matrix, x: &mut [f64]) {
     let n = l.rows();
     assert_eq!(l.cols(), n);
-    assert_eq!(b.len(), n);
-    let mut y = b.to_vec();
+    assert_eq!(x.len(), n);
     for i in 0..n {
         let row = l.row(i);
-        let mut s = y[i];
-        // Contiguous prefix of row i times the solved prefix of y.
+        let mut s = x[i];
+        // Contiguous prefix of row i times the solved prefix of x.
         for j in 0..i {
-            s -= row[j] * y[j];
+            s -= row[j] * x[j];
         }
         let d = row[i];
         assert!(d != 0.0, "singular lower-triangular matrix at {i}");
-        y[i] = s / d;
+        x[i] = s / d;
     }
+}
+
+/// Solve `L y = b` with `L` lower-triangular (allocating wrapper).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut y = b.to_vec();
+    solve_lower_in_place(l, &mut y);
     y
 }
 
-/// Solve `U x = b` with `U` upper-triangular.
-pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+/// Solve `U x = b` in place with `U` upper-triangular.
+pub fn solve_upper_in_place(u: &Matrix, x: &mut [f64]) {
     let n = u.rows();
     assert_eq!(u.cols(), n);
-    assert_eq!(b.len(), n);
-    let mut x = b.to_vec();
+    assert_eq!(x.len(), n);
     for i in (0..n).rev() {
         let row = u.row(i);
         let mut s = x[i];
@@ -43,35 +49,45 @@ pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
         assert!(d != 0.0, "singular upper-triangular matrix at {i}");
         x[i] = s / d;
     }
+}
+
+/// Solve `U x = b` with `U` upper-triangular (allocating wrapper).
+pub fn solve_upper(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut x = b.to_vec();
+    solve_upper_in_place(u, &mut x);
     x
 }
 
-/// Solve `L^T x = b` with `L` lower-triangular, without forming `L^T`.
-pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+/// Solve `L^T x = b` in place, without forming `L^T`.
+pub fn solve_lower_transpose_in_place(l: &Matrix, x: &mut [f64]) {
     let n = l.rows();
     assert_eq!(l.cols(), n);
-    assert_eq!(b.len(), n);
-    let mut x = b.to_vec();
+    assert_eq!(x.len(), n);
     for i in (0..n).rev() {
         let d = l.get(i, i);
         assert!(d != 0.0, "singular matrix at {i}");
         x[i] /= d;
         let xi = x[i];
-        // Column i of L below the diagonal == row entries l[j][i], j > i;
-        // here we iterate rows to stay contiguous in memory.
+        // Column i of L below the diagonal == row entries l[i][j], j < i;
+        // iterate the row to stay contiguous in memory.
         for j in 0..i {
             x[j] -= l.get(i, j) * xi;
         }
     }
+}
+
+/// Solve `L^T x = b` with `L` lower-triangular (allocating wrapper).
+pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut x = b.to_vec();
+    solve_lower_transpose_in_place(l, &mut x);
     x
 }
 
-/// Solve `U^T y = b` with `U` upper-triangular, without forming `U^T`.
-pub fn solve_upper_transpose(u: &Matrix, b: &[f64]) -> Vec<f64> {
+/// Solve `U^T y = b` in place, without forming `U^T`.
+pub fn solve_upper_transpose_in_place(u: &Matrix, y: &mut [f64]) {
     let n = u.rows();
     assert_eq!(u.cols(), n);
-    assert_eq!(b.len(), n);
-    let mut y = b.to_vec();
+    assert_eq!(y.len(), n);
     for i in 0..n {
         let d = u.get(i, i);
         assert!(d != 0.0, "singular matrix at {i}");
@@ -82,6 +98,12 @@ pub fn solve_upper_transpose(u: &Matrix, b: &[f64]) -> Vec<f64> {
             y[j] -= row[j] * yi;
         }
     }
+}
+
+/// Solve `U^T y = b` with `U` upper-triangular (allocating wrapper).
+pub fn solve_upper_transpose(u: &Matrix, b: &[f64]) -> Vec<f64> {
+    let mut y = b.to_vec();
+    solve_upper_transpose_in_place(u, &mut y);
     y
 }
 

@@ -29,10 +29,18 @@
 //! `pcg-srht@rho=0.25`, `adaptive-srht@threads=8`. `effdim solvers`
 //! prints the full registry. `--threads k` (or `PALLAS_THREADS`) pins
 //! the kernels for the whole command instead of one solver.
+//!
+//! Sparse inputs: `--profile sparse --density 0.01` generates a
+//! density-controlled CSR workload (the whole pipeline then runs its
+//! `O(nnz)` paths), and `--data <file>` loads a real problem from the
+//! plain-text triplet format (header `n d nnz`, `nnz` lines of
+//! `row col value`, then `n` observation lines; `#` comments allowed —
+//! see [`effdim::data::parse_triplet_problem`]).
 
-use effdim::coordinator::job::{self, JobSpec, Workload};
+use effdim::coordinator::job::{self, JobSpec, Workload, DEFAULT_SPARSE_DENSITY};
 use effdim::coordinator::server::{Client, Server};
-use effdim::data::synthetic;
+use effdim::data::synthetic::{self, Dataset};
+use effdim::linalg::Operand;
 use effdim::solvers::path::run_path;
 use effdim::solvers::{Solver as _, SolverSpec};
 use effdim::util::cli::Args;
@@ -45,6 +53,10 @@ const USAGE: &str = "usage: effdim <solve|path|serve|request|info|solvers> [--fl
     params: m=<usize> (ihs), rho=<f64> (pcg), threads=<usize> (any randomized)
     bare aliases 'adaptive', 'adaptive-gd', 'dual' default to gaussian;
     'pcg' defaults to srht — name the kind explicitly in scripts
+  --profile exp|poly|mnist-like|cifar-like|exp:<rate>|sparse|sparse:<density>
+    (sparse profiles are CSR-backed; pair with --density)
+  --density x sets the sparse profile's fill fraction (requires --profile sparse)
+  --data file loads a CSR problem from triplet text (n d nnz / i j v / b lines)
   --threads k pins the parallel dense kernels for the whole command
     (default: PALLAS_THREADS env var, else all hardware threads)
   run `effdim solvers` for the registry; see rust/src/main.rs docs for flags";
@@ -66,13 +78,46 @@ fn main() {
     std::process::exit(code);
 }
 
-fn workload_from(args: &Args) -> Workload {
-    Workload::Synthetic {
-        profile: args.get_or("profile", "exp").to_string(),
+/// Resolve `--profile` + `--density` into the profile string the
+/// coordinator's workload layer understands (`sparse` -> `sparse:<d>`).
+fn profile_from(args: &Args) -> Result<String, i32> {
+    let profile = args.get_or("profile", "exp").to_string();
+    match args.get("density") {
+        None => Ok(profile),
+        Some(v) => {
+            if profile != "sparse" {
+                eprintln!("--density requires --profile sparse (got {profile:?})");
+                return Err(2);
+            }
+            match v.trim().parse::<f64>() {
+                Ok(dens) if dens > 0.0 && dens <= 1.0 => Ok(format!("sparse:{dens}")),
+                _ => {
+                    eprintln!("--density must be in (0, 1], got {v:?}");
+                    Err(2)
+                }
+            }
+        }
+    }
+}
+
+fn workload_from(args: &Args) -> Result<Workload, i32> {
+    if let Some(path) = args.get("data") {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            eprintln!("cannot read {path}: {e}");
+            2
+        })?;
+        let (a, b) = effdim::data::parse_triplet_problem(&text).map_err(|e| {
+            eprintln!("{path}: {e}");
+            2
+        })?;
+        return Ok(Workload::Inline { a: Operand::Sparse(a), b });
+    }
+    Ok(Workload::Synthetic {
+        profile: profile_from(args)?,
         n: args.get_usize("n", 1024),
         d: args.get_usize("d", 128),
         seed: args.get_u64("seed", 1),
-    }
+    })
 }
 
 fn parse_solver(args: &Args, default: &str) -> Result<SolverSpec, i32> {
@@ -103,8 +148,12 @@ fn threads_flag(args: &Args) -> Result<Option<usize>, i32> {
 }
 
 fn cmd_solve(args: &Args) -> i32 {
+    let workload = match workload_from(args) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
     let spec = JobSpec {
-        workload: workload_from(args),
+        workload,
         nu: args.get_f64("nu", 1.0),
         solver: match parse_solver(args, "adaptive-srht") {
             Ok(s) => s,
@@ -134,19 +183,76 @@ fn cmd_solve(args: &Args) -> i32 {
     }
 }
 
+/// Build a dataset from a resolved profile string (the `path` subcommand
+/// needs the `Dataset` itself for the per-point `d_e` column; sparse
+/// profiles have no stored spectrum, so that column prints NaN).
+fn dataset_for(profile: &str, n: usize, d: usize, seed: u64) -> Result<Dataset, String> {
+    match profile {
+        "exp" => Ok(synthetic::exponential_decay(n, d, seed)),
+        "poly" => Ok(synthetic::polynomial_decay(n, d, seed)),
+        "mnist-like" => Ok(synthetic::mnist_like(n, d, seed)),
+        "cifar-like" => Ok(synthetic::cifar_like(n, d, seed)),
+        "sparse" => Ok(synthetic::sparse_gaussian(n, d, DEFAULT_SPARSE_DENSITY, seed)),
+        other => {
+            if let Some(rate) = other.strip_prefix("exp:") {
+                let rate: f64 = rate.parse().map_err(|_| format!("bad rate in {other}"))?;
+                Ok(synthetic::generate(
+                    n,
+                    d,
+                    &effdim::data::SpectrumProfile::Exponential { rate },
+                    seed,
+                    other,
+                ))
+            } else if let Some(dens) = other.strip_prefix("sparse:") {
+                let dens: f64 = dens.parse().map_err(|_| format!("bad density in {other}"))?;
+                if !(dens > 0.0 && dens <= 1.0) {
+                    return Err(format!("density must be in (0, 1], got {dens}"));
+                }
+                Ok(synthetic::sparse_gaussian(n, d, dens, seed))
+            } else {
+                Err(format!("unknown profile {other}"))
+            }
+        }
+    }
+}
+
 fn cmd_path(args: &Args) -> i32 {
     let n = args.get_usize("n", 1024);
     let d = args.get_usize("d", 128);
     let seed = args.get_u64("seed", 1);
-    let profile = args.get_or("profile", "exp");
-    let ds = match profile {
-        "exp" => synthetic::exponential_decay(n, d, seed),
-        "poly" => synthetic::polynomial_decay(n, d, seed),
-        "mnist-like" => synthetic::mnist_like(n, d, seed),
-        "cifar-like" => synthetic::cifar_like(n, d, seed),
-        other => {
-            eprintln!("unknown profile {other}");
-            return 2;
+    // `--data` drives the path on a triplet file (d_e column prints NaN
+    // — no spectrum is known for external data); otherwise a profile.
+    let ds = if let Some(path) = args.get("data") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 2;
+            }
+        };
+        match effdim::data::parse_triplet_problem(&text) {
+            Ok((a, b)) => Dataset {
+                a: Operand::Sparse(a),
+                b,
+                sigma: Vec::new(),
+                name: path.to_string(),
+            },
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let profile = match profile_from(args) {
+            Ok(p) => p,
+            Err(code) => return code,
+        };
+        match dataset_for(&profile, n, d, seed) {
+            Ok(ds) => ds,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
         }
     };
     let nus = args.get_f64_list("nus", &[100.0, 10.0, 1.0, 0.1, 0.01]);
@@ -231,7 +337,10 @@ fn cmd_request(args: &Args) -> i32 {
 }
 
 fn cmd_info(args: &Args) -> i32 {
-    let workload = workload_from(args);
+    let workload = match workload_from(args) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
     let (a, _b) = match workload.materialize() {
         Ok(x) => x,
         Err(e) => {
@@ -240,9 +349,11 @@ fn cmd_info(args: &Args) -> i32 {
         }
     };
     let nu = args.get_f64("nu", 1.0);
-    let sigma = effdim::linalg::svd::singular_values(&a);
+    // Exact spectrum via SVD — densifies CSR operands (info is an
+    // offline diagnostic; the solve path never does this).
+    let sigma = effdim::linalg::svd::singular_values(&a.dense());
     let d_e = effdim::theory::effective_dimension_from_spectrum(&sigma, nu);
-    println!("n = {}, d = {}", a.rows(), a.cols());
+    println!("n = {}, d = {}, nnz = {} (density {:.4})", a.rows(), a.cols(), a.nnz(), a.density());
     println!("sigma_1 = {:.4e}, sigma_d = {:.4e}", sigma[0], sigma.last().unwrap());
     println!("nu = {nu:.3e}");
     println!("effective dimension d_e = {d_e:.2}  (d_e/d = {:.3})", d_e / a.cols() as f64);

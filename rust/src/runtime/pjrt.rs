@@ -102,9 +102,10 @@ impl PjrtRuntime {
         let name = format!("gradient_n{n}_d{d}");
         let exe = self.executable(&name)?;
 
-        // Device-resident constants: A (f32), b (f32), nu^2.
+        // Device-resident constants: A (f32), b (f32), nu^2. The artifact
+        // is a dense kernel, so CSR operands densify once at upload time.
         let to_f32 = |v: &[f64]| v.iter().map(|&x| x as f32).collect::<Vec<f32>>();
-        let a32 = to_f32(problem.a.as_slice());
+        let a32 = to_f32(problem.a.dense().as_slice());
         let b32 = to_f32(problem.b.as_ref().expect("XLA oracle needs raw b"));
         let a_buf = self
             .client

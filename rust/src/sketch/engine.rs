@@ -9,22 +9,32 @@
 //! growth step costs only `O(Δm)` worth of new work:
 //!
 //! * **Gaussian** — appends `Δm` fresh i.i.d. rows and multiplies only
-//!   those against `A`: `O(Δm n d)` instead of `O(m n d)`.
+//!   those against `A`: `O(Δm n d)` instead of `O(m n d)` — or
+//!   `O(Δm nnz)` on a CSR operand via sparse row-axpy.
 //! * **SRHT** — computes the FWHT'd, sign-flipped buffer
 //!   `H · diag(eps) · A` *once* per problem (`O(ñ d log ñ)`, where
-//!   `ñ = next_pow2(n)`); growing is then just continuing the without-
-//!   replacement row sample and copying `Δm` cached rows: `O(Δm d)`.
-//!   Extending a partial Fisher–Yates shuffle keeps the selected row set
-//!   a uniform without-replacement sample at every size, so each grown
-//!   sketch is distributed exactly like a fresh SRHT of that size.
+//!   `ñ = next_pow2(n)`; building the pre-FWHT buffer is an `O(nnz)`
+//!   scatter on CSR operands); growing is then just continuing the
+//!   without-replacement row sample and copying `Δm` cached rows:
+//!   `O(Δm d)`. Extending a partial Fisher–Yates shuffle keeps the
+//!   selected row set a uniform without-replacement sample at every size,
+//!   so each grown sketch is distributed exactly like a fresh SRHT of
+//!   that size.
 //! * **Sparse** — appends an independent CountSketch block of `Δm` rows
-//!   (`O(nnz(A))` scatter per growth). Block `i` carries the fixed weight
-//!   `sqrt(m_i)` baked into its unnormalized rows, so the effective
-//!   embedding `(1/sqrt(m)) * [sqrt(m_1) Ŝ_1; ...; sqrt(m_k) Ŝ_k]`
+//!   (`O(nnz(A))` scatter per growth — on CSR operands this touches only
+//!   the stored entries, the headline Remark 4.1 cost). Block `i` carries
+//!   the fixed weight `sqrt(m_i)` baked into its unnormalized rows, so
+//!   the effective embedding
+//!   `(1/sqrt(m)) * [sqrt(m_1) Ŝ_1; ...; sqrt(m_k) Ŝ_k]`
 //!   satisfies `E[S^T S] = (1/m) Σ m_i I = I` with the *same* `O(d/m)`
 //!   Gram variance as a fresh size-`m` CountSketch (size-weighting is
 //!   what keeps the early tiny blocks from dominating); per-column
 //!   sparsity is one entry per block — an SJLT.
+//!
+//! The engine takes its problem matrix as an [`OperandRef`] — `&Matrix`,
+//! `&CsrMatrix`, or `&Operand` all work — and every family has an exact
+//! sparse arm: the dense and CSR paths of the same RNG stream produce the
+//! same `S̃A` up to roundoff.
 //!
 //! # Normalization contract
 //!
@@ -40,9 +50,9 @@
 //! [`super::sample`] does, so the *initial* sketch (before any growth)
 //! reproduces the one-shot sampling path draw for draw.
 
-use super::srht::{fwht_rows, hadamard_entry, next_pow2};
+use super::srht::{fwht_rows, hadamard_entry, next_pow2, signed_work};
 use super::SketchKind;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, OperandRef};
 use crate::rng::Xoshiro256;
 
 /// Per-problem incremental sketch state plus the unnormalized applied
@@ -103,27 +113,58 @@ impl SparseBlock {
         Self { rows, hash, signs, weight: (rows as f64).sqrt() }
     }
 
-    /// Unnormalized (weighted) scatter-apply to `a`.
-    fn apply(&self, a: &Matrix) -> Matrix {
+    /// Unnormalized (weighted) scatter-apply: `O(n d)` dense, `O(nnz)` CSR.
+    fn apply(&self, a: OperandRef<'_>) -> Matrix {
         let d = a.cols();
         let mut out = Matrix::zeros(self.rows, d);
-        for j in 0..a.rows() {
-            let r = self.hash[j] as usize;
-            let s = self.weight * self.signs[j];
-            let src = a.row(j);
-            let dst = out.row_mut(r);
-            for k in 0..d {
-                dst[k] += s * src[k];
+        match a {
+            OperandRef::Dense(am) => {
+                for j in 0..am.rows() {
+                    let r = self.hash[j] as usize;
+                    let s = self.weight * self.signs[j];
+                    let src = am.row(j);
+                    let dst = out.row_mut(r);
+                    for k in 0..d {
+                        dst[k] += s * src[k];
+                    }
+                }
+            }
+            OperandRef::Sparse(c) => {
+                for j in 0..c.rows() {
+                    let r = self.hash[j] as usize;
+                    let s = self.weight * self.signs[j];
+                    let (cols, vals) = c.row(j);
+                    let dst = out.row_mut(r);
+                    for (&cc, &v) in cols.iter().zip(vals) {
+                        dst[cc as usize] += s * v;
+                    }
+                }
             }
         }
         out
     }
 }
 
+/// `g * a` for a dense block `g` (`p x n`): blocked GEMM on dense
+/// operands, `O(p * nnz)` sparse row-axpy on CSR.
+fn dense_block_times(g: &Matrix, a: OperandRef<'_>) -> Matrix {
+    match a {
+        OperandRef::Dense(am) => g.matmul(am),
+        OperandRef::Sparse(c) => c.left_mul(g),
+    }
+}
+
 impl SketchEngine {
-    /// Build the engine at initial size `m`, applying the sketch to `a`
-    /// (`n x d`). `rng` is advanced exactly as [`super::sample`] would.
-    pub fn new(kind: SketchKind, m: usize, a: &Matrix, rng: &mut Xoshiro256) -> Self {
+    /// Build the engine at initial size `m`, applying the sketch to the
+    /// operand `a` (`n x d`, dense or CSR). `rng` is advanced exactly as
+    /// [`super::sample`] would.
+    pub fn new<'a>(
+        kind: SketchKind,
+        m: usize,
+        a: impl Into<OperandRef<'a>>,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let a: OperandRef<'a> = a.into();
         let n = a.rows();
         assert!(m > 0 && n > 0);
         match kind {
@@ -131,7 +172,7 @@ impl SketchEngine {
                 let snapshot = rng.clone();
                 let mut s = Matrix::zeros(m, n);
                 rng.fill_gaussian(s.as_mut_slice(), 1.0);
-                let sa = s.matmul(a);
+                let sa = dense_block_times(&s, a);
                 Self { kind, n, sa, state: State::Gaussian { draws: vec![(snapshot, m)] } }
             }
             SketchKind::Srht => {
@@ -139,16 +180,7 @@ impl SketchEngine {
                 assert!(m <= n_pad, "SRHT sketch size {m} exceeds padded dim {n_pad}");
                 let mut signs = vec![0.0; n];
                 rng.fill_rademacher(&mut signs);
-                let d = a.cols();
-                let mut work = Matrix::zeros(n_pad, d);
-                for i in 0..n {
-                    let sign = signs[i];
-                    let src = a.row(i);
-                    let dst = work.row_mut(i);
-                    for k in 0..d {
-                        dst[k] = sign * src[k];
-                    }
-                }
+                let mut work = signed_work(a, &signs, n_pad);
                 fwht_rows(&mut work);
                 let mut state = State::Srht { signs, work, order: (0..n_pad).collect(), taken: 0 };
                 let sa = match &mut state {
@@ -169,11 +201,18 @@ impl SketchEngine {
     }
 
     /// Grow to `new_m` rows, appending only `Δm = new_m - m` rows of new
-    /// work (`O(Δm n d)` Gaussian, `O(Δm d)` SRHT, `O(nnz(A))` sparse).
-    /// Returns the appended *unnormalized* rows of `S̃A` (what
-    /// [`crate::solvers::woodbury::WoodburyCache::grow`] consumes); the
-    /// existing prefix of [`Self::sa_unnormalized`] is untouched.
-    pub fn grow(&mut self, new_m: usize, a: &Matrix, rng: &mut Xoshiro256) -> Matrix {
+    /// work (`O(Δm n d)` / `O(Δm nnz)` Gaussian, `O(Δm d)` SRHT,
+    /// `O(nnz(A))` sparse). Returns the appended *unnormalized* rows of
+    /// `S̃A` (what [`crate::solvers::woodbury::WoodburyCache::grow`]
+    /// consumes); the existing prefix of [`Self::sa_unnormalized`] is
+    /// untouched.
+    pub fn grow<'a>(
+        &mut self,
+        new_m: usize,
+        a: impl Into<OperandRef<'a>>,
+        rng: &mut Xoshiro256,
+    ) -> Matrix {
+        let a: OperandRef<'a> = a.into();
         let m_old = self.m();
         assert!(new_m > m_old, "grow needs new_m {new_m} > m {m_old}");
         assert_eq!(a.rows(), self.n, "grow must reuse the engine's problem matrix");
@@ -183,7 +222,7 @@ impl SketchEngine {
                 draws.push((rng.clone(), dm));
                 let mut g_new = Matrix::zeros(dm, self.n);
                 rng.fill_gaussian(g_new.as_mut_slice(), 1.0);
-                g_new.matmul(a)
+                dense_block_times(&g_new, a)
             }
             State::Srht { work, order, taken, .. } => {
                 assert!(
@@ -307,6 +346,7 @@ fn copy_rows(src: &Matrix, rows: &[usize]) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::sparse::CsrMatrix;
     use crate::sketch::{self, Sketch as _};
 
     fn test_a(n: usize, d: usize, seed: u64) -> Matrix {
@@ -365,6 +405,33 @@ mod tests {
             crate::linalg::scale(engine.scale(), sa.as_mut_slice());
             let composed = engine.to_dense().matmul(&a);
             assert!(sa.max_abs_diff(&composed) < 1e-10, "{kind} grow/apply drift");
+        }
+    }
+
+    #[test]
+    fn csr_operand_matches_dense_operand() {
+        // Same RNG stream, same matrix stored two ways: the engine's S̃A
+        // must agree through construction and growth for every family.
+        let mut rng0 = Xoshiro256::seed_from_u64(21);
+        let dense = Matrix::from_fn(26, 6, |_, _| {
+            if rng0.next_f64() < 0.3 { rng0.next_gaussian() } else { 0.0 }
+        });
+        let csr = CsrMatrix::from_dense(&dense);
+        for kind in KINDS {
+            let mut ra = Xoshiro256::seed_from_u64(22);
+            let mut rb = Xoshiro256::seed_from_u64(22);
+            let mut ed = SketchEngine::new(kind, 3, &dense, &mut ra);
+            let mut es = SketchEngine::new(kind, 3, &csr, &mut rb);
+            assert!(
+                ed.sa_unnormalized().max_abs_diff(es.sa_unnormalized()) < 1e-10,
+                "{kind} initial dense/CSR drift"
+            );
+            ed.grow(9, &dense, &mut ra);
+            es.grow(9, &csr, &mut rb);
+            assert!(
+                ed.sa_unnormalized().max_abs_diff(es.sa_unnormalized()) < 1e-10,
+                "{kind} grown dense/CSR drift"
+            );
         }
     }
 

@@ -44,6 +44,13 @@ impl Sketch for GaussianSketch {
         self.s.matmul(a)
     }
 
+    /// `S * A` for CSR input in `O(m * nnz)` via sparse row-axpy
+    /// (each stored entry of `A` is touched once per sketch row).
+    fn apply_csr(&self, a: &crate::linalg::sparse::CsrMatrix) -> Matrix {
+        assert_eq!(a.rows(), self.n(), "sketch/matrix dimension mismatch");
+        a.left_mul(&self.s)
+    }
+
     fn to_dense(&self) -> Matrix {
         self.s.clone()
     }

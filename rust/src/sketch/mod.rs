@@ -10,8 +10,11 @@
 //!   the paper): `SA` costs `O(nnz(A))`.
 //!
 //! All embeddings implement [`Sketch`], which exposes the only operation
-//! the solvers need — *apply to a matrix* — plus metadata. Sketches are
-//! deterministic given an RNG stream, so experiments are reproducible.
+//! the solvers need — *apply to an operand* (dense `O(mnd)` /
+//! `O(ñ d log ñ)` / `O(nd)` per family, CSR `O(m nnz)` /
+//! `O(nnz + ñ d log ñ)` / `O(nnz)`) — plus metadata. Sketches are
+//! deterministic given an RNG stream, so experiments are reproducible,
+//! and the dense and CSR paths of one sampled sketch agree to roundoff.
 //!
 //! # Incremental growth
 //!
@@ -31,7 +34,8 @@ pub mod gaussian;
 pub mod sparse;
 pub mod srht;
 
-use crate::linalg::Matrix;
+use crate::linalg::sparse::CsrMatrix;
+use crate::linalg::{Matrix, Operand};
 use crate::rng::Xoshiro256;
 
 /// Which embedding family to use. Mirrors the paper's two analyzed sketches
@@ -73,6 +77,18 @@ pub trait Sketch {
     fn n(&self) -> usize;
     /// Compute `S * a` for an `n x d` matrix `a`.
     fn apply(&self, a: &Matrix) -> Matrix;
+    /// Compute `S * a` for CSR input at the family's sparse cost:
+    /// `O(m * nnz)` Gaussian (sparse row-axpy), `O(nnz + ñ d log ñ)` SRHT
+    /// (scatter the sign-flipped rows once, then the usual FWHT),
+    /// `O(nnz)` CountSketch. Never densifies the operand.
+    fn apply_csr(&self, a: &CsrMatrix) -> Matrix;
+    /// Dispatch on the operand variant — what the solvers call.
+    fn apply_operand(&self, a: &Operand) -> Matrix {
+        match a {
+            Operand::Dense(m) => self.apply(m),
+            Operand::Sparse(c) => self.apply_csr(c),
+        }
+    }
     /// Materialize `S` as a dense matrix (tests / diagnostics only).
     fn to_dense(&self) -> Matrix {
         self.apply(&Matrix::eye(self.n()))

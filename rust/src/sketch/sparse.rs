@@ -59,13 +59,11 @@ impl Sketch for SparseSketch {
         }
         out
     }
-}
 
-impl SparseSketch {
     /// `S * A` for CSR input in `O(nnz(A))` — the Remark 4.1 fast path:
     /// each stored entry is visited once and scatter-added into its hashed
     /// output row.
-    pub fn apply_csr(&self, a: &crate::linalg::sparse::CsrMatrix) -> Matrix {
+    fn apply_csr(&self, a: &crate::linalg::sparse::CsrMatrix) -> Matrix {
         assert_eq!(a.rows(), self.n(), "sketch/matrix dimension mismatch");
         let d = a.cols();
         let mut out = Matrix::zeros(self.m, d);

@@ -12,8 +12,40 @@
 //! uses on TPU (stage-by-stage stride halving over a VMEM-resident block).
 
 use super::Sketch;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, OperandRef};
 use crate::rng::Xoshiro256;
+
+/// Sign-flipped, zero-padded SRHT work buffer (`n_pad x d`, pre-FWHT):
+/// an `O(n d)` dense copy or an `O(nnz)` CSR scatter. Shared by the
+/// one-shot [`SrhtSketch`] application and the incremental
+/// [`super::engine::SketchEngine`], so the two paths cannot drift.
+pub(crate) fn signed_work(a: OperandRef<'_>, signs: &[f64], n_pad: usize) -> Matrix {
+    let (n, d) = (a.rows(), a.cols());
+    let mut work = Matrix::zeros(n_pad, d);
+    match a {
+        OperandRef::Dense(am) => {
+            for i in 0..n {
+                let sign = signs[i];
+                let src = am.row(i);
+                let dst = work.row_mut(i);
+                for k in 0..d {
+                    dst[k] = sign * src[k];
+                }
+            }
+        }
+        OperandRef::Sparse(c) => {
+            for i in 0..n {
+                let sign = signs[i];
+                let (cols, vals) = c.row(i);
+                let dst = work.row_mut(i);
+                for (&cc, &v) in cols.iter().zip(vals) {
+                    dst[cc as usize] = sign * v;
+                }
+            }
+        }
+    }
+    work
+}
 
 /// SRHT embedding: stores only the sign vector and the selected rows.
 #[derive(Clone, Debug)]
@@ -136,6 +168,27 @@ impl SrhtSketch {
     }
 }
 
+impl SrhtSketch {
+    /// FWHT the sign-flipped work buffer, select the sampled rows and
+    /// apply the net scaling: normalized H contributes 1/sqrt(n_pad), the
+    /// sqrt(n_pad/m) embedding scale cancels it to 1/sqrt(m) on the
+    /// unnormalized transform output.
+    fn transform_and_select(&self, mut work: Matrix) -> Matrix {
+        let d = work.cols();
+        fwht_rows(&mut work);
+        let scale = 1.0 / (self.rows.len() as f64).sqrt();
+        let mut out = Matrix::zeros(self.rows.len(), d);
+        for (oi, &ri) in self.rows.iter().enumerate() {
+            let src = work.row(ri);
+            let dst = out.row_mut(oi);
+            for k in 0..d {
+                dst[k] = scale * src[k];
+            }
+        }
+        out
+    }
+}
+
 impl Sketch for SrhtSketch {
     fn m(&self) -> usize {
         self.rows.len()
@@ -147,31 +200,17 @@ impl Sketch for SrhtSketch {
 
     fn apply(&self, a: &Matrix) -> Matrix {
         assert_eq!(a.rows(), self.n, "sketch/matrix dimension mismatch");
-        let d = a.cols();
-        // Work buffer: sign-flipped rows of A, zero-padded.
-        let mut work = Matrix::zeros(self.n_pad, d);
-        for i in 0..self.n {
-            let sign = self.signs[i];
-            let src = a.row(i);
-            let dst = work.row_mut(i);
-            for k in 0..d {
-                dst[k] = sign * src[k];
-            }
-        }
-        fwht_rows(&mut work);
-        // Select rows and apply the net scaling: normalized H contributes
-        // 1/sqrt(n_pad), the sqrt(n_pad/m) embedding scale cancels it to
-        // 1/sqrt(m) on the unnormalized transform output.
-        let scale = 1.0 / (self.rows.len() as f64).sqrt();
-        let mut out = Matrix::zeros(self.rows.len(), d);
-        for (oi, &ri) in self.rows.iter().enumerate() {
-            let src = work.row(ri);
-            let dst = out.row_mut(oi);
-            for k in 0..d {
-                dst[k] = scale * src[k];
-            }
-        }
-        out
+        let work = signed_work(OperandRef::Dense(a), &self.signs, self.n_pad);
+        self.transform_and_select(work)
+    }
+
+    /// `S * A` for CSR input: the sign-flipped work buffer is built with an
+    /// `O(nnz)` scatter (the padding rows stay untouched zeros), then the
+    /// usual `O(ñ d log ñ)` FWHT + row selection run on it.
+    fn apply_csr(&self, a: &crate::linalg::sparse::CsrMatrix) -> Matrix {
+        assert_eq!(a.rows(), self.n, "sketch/matrix dimension mismatch");
+        let work = signed_work(OperandRef::Sparse(a), &self.signs, self.n_pad);
+        self.transform_and_select(work)
     }
 }
 

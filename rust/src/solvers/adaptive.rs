@@ -31,7 +31,7 @@
 
 use super::woodbury::WoodburyCache;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
-use crate::linalg::{axpy, dot, norm2};
+use crate::linalg::{dot, norm2};
 use crate::rng::Xoshiro256;
 use crate::sketch::engine::SketchEngine;
 use crate::sketch::SketchKind;
@@ -99,17 +99,24 @@ impl AdaptiveConfig {
 
 /// One solver with explicit state — used directly by the coordinator's
 /// state machine; [`solve`] is the plain-function wrapper.
+///
+/// All per-iteration state lives in preallocated buffers (candidate
+/// iterate/gradient, Woodbury scratch, gradient scratch): a steady-state
+/// [`AdaptiveSolver::step`] performs no heap allocation — only growth
+/// rounds (O(log) many) and external oracles allocate
+/// (`tests/alloc_free.rs`).
 pub struct AdaptiveSolver<'p> {
     problem: &'p RidgeProblem,
     config: AdaptiveConfig,
     stop: StopRule,
     params: IhsParams,
     rng: Xoshiro256,
-    /// Gradient oracle. Defaults to the native `problem.gradient`; the
-    /// PJRT runtime swaps in an AOT-compiled artifact via
-    /// [`AdaptiveSolver::set_gradient_fn`] — the O(nd) per-iteration hot
-    /// op is the only thing that changes backend.
-    grad_fn: Box<dyn Fn(&[f64]) -> Vec<f64> + 'p>,
+    /// Gradient oracle writing into a caller buffer. Defaults to the
+    /// allocation-free native `problem.gradient_into`; the PJRT runtime
+    /// swaps in an AOT-compiled artifact via
+    /// [`AdaptiveSolver::set_gradient_fn`] — the `O(nd)` / `O(nnz)`
+    /// per-iteration hot op is the only thing that changes backend.
+    grad_fn: Box<dyn FnMut(&[f64], &mut Vec<f64>) + 'p>,
     /// Cap on m: padded row count (SRHT cannot exceed it; for the others
     /// growing past n stops helping).
     m_cap: usize,
@@ -124,6 +131,11 @@ pub struct AdaptiveSolver<'p> {
     x: Vec<f64>,
     g: Vec<f64>,
     g_tilde: Vec<f64>,
+    // Candidate + scratch buffers (steady-state allocation-free step()).
+    x_cand: Vec<f64>,
+    g_cand: Vec<f64>,
+    gt_cand: Vec<f64>,
+    ws_m: Vec<f64>,
     r_t: f64,
     r_1: f64,
     t: usize,
@@ -141,7 +153,8 @@ impl<'p> AdaptiveSolver<'p> {
         stop: StopRule,
         seed: u64,
     ) -> Self {
-        assert_eq!(x0.len(), problem.d());
+        let d = problem.d();
+        assert_eq!(x0.len(), d);
         assert!(config.m_initial >= 1 && config.growth >= 2);
         let params = config.params();
         let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -154,6 +167,7 @@ impl<'p> AdaptiveSolver<'p> {
             AdaptiveVariant::PolyakFirst => format!("adaptive-{}", config.kind),
             AdaptiveVariant::GradientOnly => format!("adaptive-gd-{}", config.kind),
         });
+        report.m_trace.reserve(config.max_iters.min(65_536));
 
         let t0 = Instant::now();
         let engine = SketchEngine::new(config.kind, m, &problem.a, &mut rng);
@@ -163,9 +177,22 @@ impl<'p> AdaptiveSolver<'p> {
             WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), problem.nu, engine.scale());
         report.factor_time_s += t0.elapsed().as_secs_f64();
 
+        // Native oracle: gradient_into with its own length-n scratch,
+        // allocation-free after the first call.
+        let mut grad_fn: Box<dyn FnMut(&[f64], &mut Vec<f64>) + 'p> = {
+            let mut scratch: Vec<f64> = Vec::new();
+            Box::new(move |x, out| {
+                out.resize(x.len(), 0.0);
+                problem.gradient_into(x, &mut scratch, out);
+            })
+        };
+
         let x = x0.to_vec();
-        let g = problem.gradient(&x);
-        let g_tilde = cache.apply_inverse(&g);
+        let mut g = vec![0.0; d];
+        grad_fn(&x, &mut g);
+        let mut ws_m: Vec<f64> = Vec::new();
+        let mut g_tilde = vec![0.0; d];
+        cache.apply_inverse_into(&g, &mut ws_m, &mut g_tilde);
         let r_1 = 0.5 * dot(&g, &g_tilde);
         report.final_m = m;
         report.peak_m = m;
@@ -176,7 +203,7 @@ impl<'p> AdaptiveSolver<'p> {
             stop,
             params,
             rng,
-            grad_fn: Box::new(move |x| problem.gradient(x)),
+            grad_fn,
             m_cap,
             m,
             engine: Some(engine),
@@ -185,6 +212,10 @@ impl<'p> AdaptiveSolver<'p> {
             x,
             g,
             g_tilde,
+            x_cand: vec![0.0; d],
+            g_cand: vec![0.0; d],
+            gt_cand: vec![0.0; d],
+            ws_m,
             r_t: r_1,
             r_1,
             t: 1,
@@ -195,13 +226,19 @@ impl<'p> AdaptiveSolver<'p> {
     /// Replace the gradient oracle (e.g. with a PJRT-executed artifact).
     /// The oracle must compute `A^T A x + nu^2 x - A^T b` for the same
     /// problem; everything else (sketching, factorization, acceptance
-    /// logic) is unchanged.
+    /// logic) is unchanged. External oracles keep the simple
+    /// `&[f64] -> Vec<f64>` shape (they allocate per call; the
+    /// allocation-free guarantee applies to the native default only).
     pub fn set_gradient_fn(&mut self, f: impl Fn(&[f64]) -> Vec<f64> + 'p) {
-        self.grad_fn = Box::new(f);
+        self.grad_fn = Box::new(move |x, out| {
+            let g = f(x);
+            out.clear();
+            out.extend_from_slice(&g);
+        });
         // Refresh cached gradient state under the new oracle so mixed
         // precision cannot leave a stale high-precision g.
-        self.g = (self.grad_fn)(&self.x);
-        self.g_tilde = self.cache.apply_inverse(&self.g);
+        (self.grad_fn)(&self.x, &mut self.g);
+        self.cache.apply_inverse_into(&self.g, &mut self.ws_m, &mut self.g_tilde);
         self.r_t = 0.5 * dot(&self.g, &self.g_tilde);
         if self.t == 1 {
             self.r_1 = self.r_t;
@@ -235,9 +272,11 @@ impl<'p> AdaptiveSolver<'p> {
             // holds the exact Hessian (H_S = A^T A + nu^2 I), so forced
             // steps are damped exact-Newton and cannot stall. (An
             // orthogonal SRHT at m = n_pad is exact anyway; a Gaussian
-            // sketch at m = n is not, hence the explicit fallback.)
+            // sketch at m = n is not, hence the explicit fallback.) CSR
+            // operands densify here — at the cap the "sketch" is as large
+            // as the data, so the O(n d) copy is already paid for.
             let t0 = Instant::now();
-            let sa = self.problem.a.clone();
+            let sa = self.problem.a.dense().into_owned();
             self.report.sketch_time_s += t0.elapsed().as_secs_f64();
             let t0 = Instant::now();
             self.cache = WoodburyCache::new(sa, self.problem.nu);
@@ -255,7 +294,7 @@ impl<'p> AdaptiveSolver<'p> {
 
         // g_t is unchanged; the preconditioned direction and decrement are
         // re-evaluated under the new sketch geometry.
-        self.g_tilde = self.cache.apply_inverse(&self.g);
+        self.cache.apply_inverse_into(&self.g, &mut self.ws_m, &mut self.g_tilde);
         self.r_t = 0.5 * dot(&self.g, &self.g_tilde);
         if self.t == 1 {
             // No step accepted yet: the reference decrement belongs to the
@@ -264,19 +303,24 @@ impl<'p> AdaptiveSolver<'p> {
         }
     }
 
-    /// Evaluate a candidate `x^+`: returns `(g^+, g_tilde^+, r^+)`.
-    fn evaluate(&self, x_plus: &[f64]) -> (Vec<f64>, Vec<f64>, f64) {
-        let g_plus = (self.grad_fn)(x_plus);
-        let gt_plus = self.cache.apply_inverse(&g_plus);
-        let r_plus = 0.5 * dot(&g_plus, &gt_plus);
-        (g_plus, gt_plus, r_plus)
+    /// Evaluate the candidate sitting in `self.x_cand`: fills
+    /// `self.g_cand` / `self.gt_cand` and returns `r^+` — no allocation,
+    /// all three buffers are preallocated state.
+    fn evaluate_candidate(&mut self) -> f64 {
+        (self.grad_fn)(&self.x_cand, &mut self.g_cand);
+        self.cache.apply_inverse_into(&self.g_cand, &mut self.ws_m, &mut self.gt_cand);
+        0.5 * dot(&self.g_cand, &self.gt_cand)
     }
 
-    /// Accept a candidate as `x_{t+1}`.
-    fn accept(&mut self, x_plus: Vec<f64>, g_plus: Vec<f64>, gt_plus: Vec<f64>, r_plus: f64) {
-        self.x_prev = std::mem::replace(&mut self.x, x_plus);
-        self.g = g_plus;
-        self.g_tilde = gt_plus;
+    /// Accept the candidate in `x_cand`/`g_cand`/`gt_cand` as `x_{t+1}` by
+    /// rotating buffers (the displaced buffers become the next scratch).
+    fn accept_candidate(&mut self, r_plus: f64) {
+        // x_prev <- x, x <- x_cand; the old x_prev lands in x_cand and is
+        // fully overwritten at the next candidate formation.
+        std::mem::swap(&mut self.x_prev, &mut self.x);
+        std::mem::swap(&mut self.x, &mut self.x_cand);
+        std::mem::swap(&mut self.g, &mut self.g_cand);
+        std::mem::swap(&mut self.g_tilde, &mut self.gt_cand);
         self.r_t = r_plus;
         self.t += 1;
         self.report.iterations += 1;
@@ -284,41 +328,42 @@ impl<'p> AdaptiveSolver<'p> {
     }
 
     /// One outer iteration of Algorithm 1 (may internally grow the sketch
-    /// several times). Returns `false` if the sketch is already at its cap
-    /// and neither candidate passes — then the accept thresholds are waived
-    /// for the final (exact-Hessian-quality) step.
+    /// several times). When the sketch is already at its cap and neither
+    /// candidate passes, the accept thresholds are waived for the final
+    /// (exact-Hessian-quality) step.
     pub fn step(&mut self) {
+        let d = self.x.len();
         loop {
             // --- Polyak candidate (steps 4–7) ---
             if self.config.variant == AdaptiveVariant::PolyakFirst {
-                let mut x_p = self.x.clone();
-                axpy(-self.params.mu_p, &self.g_tilde, &mut x_p);
-                for i in 0..x_p.len() {
-                    x_p[i] += self.params.beta_p * (self.x[i] - self.x_prev[i]);
+                for i in 0..d {
+                    self.x_cand[i] = self.x[i] - self.params.mu_p * self.g_tilde[i]
+                        + self.params.beta_p * (self.x[i] - self.x_prev[i]);
                 }
-                let (g_p, gt_p, r_p) = self.evaluate(&x_p);
+                let r_p = self.evaluate_candidate();
                 let c_p_plus = if self.r_1 > 0.0 {
                     (r_p / self.r_1).powf(1.0 / self.t as f64)
                 } else {
                     0.0
                 };
                 if c_p_plus <= self.params.c_p {
-                    self.accept(x_p, g_p, gt_p, r_p);
+                    self.accept_candidate(r_p);
                     return;
                 }
                 self.report.rejections += 1;
             }
 
             // --- Gradient candidate (steps 9–12) ---
-            let mut x_gd = self.x.clone();
-            axpy(-self.params.mu_gd, &self.g_tilde, &mut x_gd);
-            let (g_gd, gt_gd, r_gd) = self.evaluate(&x_gd);
+            for i in 0..d {
+                self.x_cand[i] = self.x[i] - self.params.mu_gd * self.g_tilde[i];
+            }
+            let r_gd = self.evaluate_candidate();
             let c_gd_plus = if self.r_t > 0.0 { r_gd / self.r_t } else { 0.0 };
             if c_gd_plus <= self.params.c_gd || self.m >= self.m_cap {
                 // At the cap H_S is (near-)exact: the step is a damped
                 // Newton step and is always productive; accept it so the
                 // solver cannot live-lock.
-                self.accept(x_gd, g_gd, gt_gd, r_gd);
+                self.accept_candidate(r_gd);
                 return;
             }
             self.report.rejections += 1;
@@ -332,12 +377,18 @@ impl<'p> AdaptiveSolver<'p> {
     pub fn run(mut self) -> Solution {
         let start = Instant::now();
         let g0_norm = norm2(&self.g);
+        // Stop-rule scratch, reused across iterations.
+        let mut ws_d: Vec<f64> = Vec::new();
+        let mut ws_n: Vec<f64> = Vec::new();
         let delta0 = match &self.stop {
-            StopRule::TrueError { x_star, .. } => self.problem.prediction_error(&self.x, x_star),
+            StopRule::TrueError { x_star, .. } => {
+                self.problem.prediction_error_ws(&self.x, x_star, &mut ws_d, &mut ws_n)
+            }
             _ => 0.0,
         };
         if matches!(self.stop, StopRule::TrueError { .. }) {
             // Shared trace convention: entry t is delta_t / delta_0.
+            self.report.error_trace.reserve(self.config.max_iters.min(65_536) + 1);
             self.report.error_trace.push(1.0);
         }
 
@@ -347,7 +398,8 @@ impl<'p> AdaptiveSolver<'p> {
             self.step();
             let stop_now = match &stop {
                 StopRule::TrueError { x_star, eps } => {
-                    let delta = self.problem.prediction_error(&self.x, x_star);
+                    let delta =
+                        self.problem.prediction_error_ws(&self.x, x_star, &mut ws_d, &mut ws_n);
                     let rel = if delta0 > 0.0 { delta / delta0 } else { 0.0 };
                     self.report.error_trace.push(rel);
                     delta <= eps * delta0
@@ -394,7 +446,7 @@ mod tests {
     use crate::theory::effective_dimension_from_spectrum;
 
     fn de_of(p: &RidgeProblem) -> f64 {
-        let s = crate::linalg::svd::singular_values(&p.a);
+        let s = crate::linalg::svd::singular_values(&p.a.dense());
         effective_dimension_from_spectrum(&s, p.nu)
     }
 

@@ -1,8 +1,9 @@
 //! Conjugate gradient on the ridge normal equations (baseline).
 //!
-//! Per-iteration cost `O(nd)` (one `A` and one `A^T` GEMV); iteration count
-//! scales with `sqrt(kappa)` of the augmented matrix — this is the solver
-//! the paper beats except at very large `nu` (Figures 1–3).
+//! Per-iteration cost `O(nd)` dense / `O(nnz)` CSR (one `A` and one `A^T`
+//! matvec through the [`crate::linalg::Operand`] dispatch); iteration
+//! count scales with `sqrt(kappa)` of the augmented matrix — this is the
+//! solver the paper beats except at very large `nu` (Figures 1–3).
 
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{axpy, dot, norm2};
@@ -23,6 +24,11 @@ impl Default for CgConfig {
 }
 
 /// Run CG from `x0` on `(A^T A + nu^2 I) x = A^T b`.
+///
+/// The inner loop is allocation-free: the Hessian product, the stop-rule
+/// prediction error and the direction update all write into workspace
+/// buffers allocated once before the loop (`tests/alloc_free.rs` pins
+/// this with a counting allocator).
 pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig, stop: &StopRule) -> Solution {
     let start = Instant::now();
     let d = problem.d();
@@ -34,13 +40,20 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig, stop: &StopR
     let mut r = problem.gradient(&x);
     crate::linalg::scale(-1.0, &mut r);
     let g0_norm = norm2(&r);
+    // Workspace buffers reused across iterations.
+    let mut ws_n: Vec<f64> = Vec::new();
+    let mut ws_d: Vec<f64> = Vec::new();
+    let mut hp = vec![0.0; d];
     let delta0 = match stop {
-        StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
+        StopRule::TrueError { x_star, .. } => {
+            problem.prediction_error_ws(&x, x_star, &mut ws_d, &mut ws_n)
+        }
         _ => 0.0,
     };
     if matches!(stop, StopRule::TrueError { .. }) {
         // Trace convention shared with the sketching solvers: entry t is
         // delta_t / delta_0, starting at the (trivially 1.0) initial point.
+        report.error_trace.reserve(config.max_iters.min(65_536) + 1);
         report.error_trace.push(1.0);
     }
 
@@ -52,7 +65,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig, stop: &StopR
             report.converged = true;
             break;
         }
-        let hp = problem.hessian_vec(&p);
+        problem.hessian_vec_into(&p, &mut ws_n, &mut hp);
         let alpha = rs_old / dot(&p, &hp);
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &hp, &mut r);
@@ -62,7 +75,7 @@ pub fn solve(problem: &RidgeProblem, x0: &[f64], config: &CgConfig, stop: &StopR
         // Stop checks (negated residual == gradient up to sign).
         let stop_now = match stop {
             StopRule::TrueError { x_star, eps } => {
-                let delta = problem.prediction_error(&x, x_star);
+                let delta = problem.prediction_error_ws(&x, x_star, &mut ws_d, &mut ws_n);
                 report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
                 delta <= eps * delta0
             }

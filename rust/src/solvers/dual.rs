@@ -10,19 +10,23 @@
 
 use super::adaptive::{self, AdaptiveConfig};
 use super::{RidgeProblem, Solution, StopRule};
-use crate::linalg::Matrix;
+use crate::linalg::{Operand, OperandRef};
 
 /// An underdetermined ridge instance (`d >= n`) and its dual reduction.
 pub struct DualRidge {
     /// The dual, overdetermined problem in `z in R^n` with data `A^T`.
     pub dual: RidgeProblem,
-    /// Original data matrix (`n x d`), kept for the primal map.
-    a: Matrix,
+    /// Original data matrix (`n x d`, dense or CSR), kept for the primal
+    /// map.
+    a: Operand,
 }
 
 impl DualRidge {
     /// Build the dual reduction of `(A, b, nu)` with `A: n x d`, `d >= n`.
-    pub fn new(a: Matrix, b: Vec<f64>, nu: f64) -> Self {
+    /// `A` may be dense or CSR; the CSR transpose costs `O(nnz)` and the
+    /// dual solve inherits every sparse fast path.
+    pub fn new(a: impl Into<Operand>, b: Vec<f64>, nu: f64) -> Self {
+        let a = a.into();
         assert!(a.cols() >= a.rows(), "dual path is for underdetermined problems (d >= n)");
         assert_eq!(a.rows(), b.len());
         let dual = RidgeProblem::from_normal(a.transpose(), b, nu);
@@ -50,9 +54,11 @@ impl DualRidge {
 
 /// Exact primal solution of an underdetermined ridge problem through the
 /// dual normal equations (`(A A^T + nu^2 I_n) z = b`, `x = A^T z`) —
-/// `O(d n^2)`, the ground truth for the dual experiments.
-pub fn solve_direct(a: &Matrix, b: &[f64], nu: f64) -> Vec<f64> {
+/// `O(d n^2)`, the ground truth for the dual experiments. Accepts
+/// `&Matrix`, `&CsrMatrix`, or `&Operand`.
+pub fn solve_direct<'a>(a: impl Into<OperandRef<'a>>, b: &[f64], nu: f64) -> Vec<f64> {
     use crate::linalg::cholesky::Cholesky;
+    let a: OperandRef<'a> = a.into();
     let mut k = a.gram_outer(); // A A^T, n x n
     k.add_diag(nu * nu);
     let chol = Cholesky::factor(&k).expect("A A^T + nu^2 I is PD");
@@ -73,7 +79,7 @@ mod tests {
     use crate::sketch::SketchKind;
 
     /// Wide random matrix (d >= n) with decaying row space.
-    fn wide_problem(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    fn wide_problem(n: usize, d: usize, seed: u64) -> (Operand, Vec<f64>) {
         // Transpose of an overdetermined synthetic dataset.
         let ds = crate::data::synthetic::exponential_decay(d, n, seed);
         let a = ds.a.transpose(); // n x d

@@ -87,26 +87,36 @@ pub fn solve(
     report.final_m = config.m;
     report.peak_m = config.m;
 
-    // Sketch + factor once.
+    // Sketch + factor once (dense or CSR operand at the family's cost).
     let t0 = Instant::now();
     let s = sketch::sample(config.kind, config.m, problem.n(), &mut rng);
-    let sa = s.apply(&problem.a);
+    let sa = s.apply_operand(&problem.a);
     report.sketch_time_s = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
     let cache = WoodburyCache::new(sa, problem.nu);
     report.factor_time_s = t0.elapsed().as_secs_f64();
 
+    // Inner loop is allocation-free (workspace buffers below); only the
+    // `refresh` ablation re-allocates, since it re-sketches wholesale.
     let t_iter = Instant::now();
     let mut x_prev = x0.to_vec();
     let mut x = x0.to_vec();
+    let mut x_next = vec![0.0; d];
     let mut g = problem.gradient(&x);
+    let mut gt = vec![0.0; d];
+    let mut ws_m: Vec<f64> = Vec::new();
+    let mut ws_n: Vec<f64> = Vec::new();
+    let mut ws_d: Vec<f64> = Vec::new();
     let g0_norm = norm2(&g);
     let delta0 = match stop {
-        StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
+        StopRule::TrueError { x_star, .. } => {
+            problem.prediction_error_ws(&x, x_star, &mut ws_d, &mut ws_n)
+        }
         _ => 0.0,
     };
     if matches!(stop, StopRule::TrueError { .. }) {
         // Shared trace convention: entry t is delta_t / delta_0.
+        report.error_trace.reserve(config.max_iters.min(65_536) + 1);
         report.error_trace.push(1.0);
     }
 
@@ -122,28 +132,31 @@ pub fn solve(
             // Refreshed-embedding ablation: new S, new factorization.
             let t0 = Instant::now();
             let s = sketch::sample(config.kind, config.m, problem.n(), &mut rng);
-            let sa = s.apply(&problem.a);
+            let sa = s.apply_operand(&problem.a);
             report.sketch_time_s += t0.elapsed().as_secs_f64();
             let t0 = Instant::now();
             cache = WoodburyCache::new(sa, problem.nu);
             report.factor_time_s += t0.elapsed().as_secs_f64();
         }
-        let gt = cache.apply_inverse(&g);
+        cache.apply_inverse_into(&g, &mut ws_m, &mut gt);
         // x_next = x - mu * gt + beta * (x - x_prev)
-        let mut x_next = x.clone();
+        x_next.copy_from_slice(&x);
         axpy(-mu, &gt, &mut x_next);
         if beta != 0.0 {
             for i in 0..d {
                 x_next[i] += beta * (x[i] - x_prev[i]);
             }
         }
-        x_prev = std::mem::replace(&mut x, x_next);
-        g = problem.gradient(&x);
+        // Rotate buffers: x_prev <- x, x <- x_next (old x_prev becomes
+        // the next x_next scratch — fully overwritten above).
+        std::mem::swap(&mut x_prev, &mut x);
+        std::mem::swap(&mut x, &mut x_next);
+        problem.gradient_into(&x, &mut ws_n, &mut g);
         report.iterations = t + 1;
 
         let stop_now = match stop {
             StopRule::TrueError { x_star, eps } => {
-                let delta = problem.prediction_error(&x, x_star);
+                let delta = problem.prediction_error_ws(&x, x_star, &mut ws_d, &mut ws_n);
                 report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
                 delta <= eps * delta0
             }
@@ -185,7 +198,7 @@ pub fn solve_with_estimated_de(
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let t0 = Instant::now();
     let de_hat = crate::theory::effective_dim::hutchinson_effective_dimension(
-        &problem.a,
+        &problem.a.dense(),
         problem.nu,
         probes,
         &mut rng,
@@ -216,7 +229,7 @@ mod tests {
     use crate::theory::effective_dimension_from_spectrum;
 
     fn de_of(p: &RidgeProblem) -> f64 {
-        let s = crate::linalg::svd::singular_values(&p.a);
+        let s = crate::linalg::svd::singular_values(&p.a.dense());
         effective_dimension_from_spectrum(&s, p.nu)
     }
 

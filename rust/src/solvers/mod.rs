@@ -28,19 +28,32 @@ pub mod woodbury;
 
 pub use api::{registry, Solver, SolverSpec};
 
-use crate::linalg::{axpy, dot, norm2, Matrix};
+use crate::linalg::{axpy, dot, norm2, Operand};
 
 /// A ridge-regression problem instance. Owns the data; solvers borrow it.
+///
+/// The data matrix is an [`Operand`] — dense or CSR — and every method
+/// here dispatches on the variant, so a sparse problem pays `O(nnz)`
+/// instead of `O(n d)` for gradients, Hessian products and prediction
+/// errors. The constructors take `impl Into<Operand>`: a bare `Matrix`,
+/// a `CsrMatrix`, or an `Operand` all work.
 ///
 /// Built either from raw observations (`new`) or from the normal-equations
 /// right-hand side directly (`from_normal`). The latter is what the dual /
 /// underdetermined path (Appendix A.2) uses: the dual objective's gradient
 /// is `A A^T z + nu^2 z - b`, i.e. the "observations" `b_hat = A^† b` are
 /// never needed — only `A_tilde^T b_hat = b` is.
+///
+/// The `*_into` / `*_ws` variants write into caller-owned workspace
+/// buffers (`&mut Vec<f64>` scratch is resized on first use, then reused)
+/// — the iterative solvers call these from their inner loops so a steady-
+/// state iteration performs no solver-level heap allocation (above the
+/// parallel-kernel threshold, the kernels' own scoped-thread scratch is
+/// the one documented exception — see the lib.rs overview).
 #[derive(Clone, Debug)]
 pub struct RidgeProblem {
-    /// Data matrix, `n x d` (overdetermined: `n >= d`).
-    pub a: Matrix,
+    /// Data matrix, `n x d` (overdetermined: `n >= d`), dense or CSR.
+    pub a: Operand,
     /// Observations, length `n` (absent for normal-form / dual problems).
     pub b: Option<Vec<f64>>,
     /// Precomputed right-hand side `A^T b`, length `d`.
@@ -50,7 +63,8 @@ pub struct RidgeProblem {
 }
 
 impl RidgeProblem {
-    pub fn new(a: Matrix, b: Vec<f64>, nu: f64) -> Self {
+    pub fn new(a: impl Into<Operand>, b: Vec<f64>, nu: f64) -> Self {
+        let a = a.into();
         assert_eq!(a.rows(), b.len(), "A and b row mismatch");
         assert!(nu > 0.0, "regularized problem needs nu > 0");
         let atb = a.matvec_t(&b);
@@ -59,7 +73,8 @@ impl RidgeProblem {
 
     /// Build from the normal-equations RHS `atb = A^T b` when `b` itself is
     /// unavailable (dual problems).
-    pub fn from_normal(a: Matrix, atb: Vec<f64>, nu: f64) -> Self {
+    pub fn from_normal(a: impl Into<Operand>, atb: Vec<f64>, nu: f64) -> Self {
+        let a = a.into();
         assert_eq!(a.cols(), atb.len(), "A and atb column mismatch");
         assert!(nu > 0.0, "regularized problem needs nu > 0");
         Self { a, b: None, atb, nu }
@@ -73,6 +88,11 @@ impl RidgeProblem {
         self.a.cols()
     }
 
+    /// Stored entries of the data matrix (`nnz` for CSR, `n*d` dense).
+    pub fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
     /// Objective `f(x) = 1/2 ||Ax - b||^2 + nu^2/2 ||x||^2`. Requires raw
     /// observations; normal-form problems only expose gradients/errors.
     pub fn objective(&self, x: &[f64]) -> f64 {
@@ -82,46 +102,99 @@ impl RidgeProblem {
         0.5 * dot(&r, &r) + 0.5 * self.nu * self.nu * dot(x, x)
     }
 
-    /// Gradient `∇f(x) = A^T A x + nu^2 x - A^T b`, `O(nd)`.
+    /// Gradient `∇f(x) = A^T A x + nu^2 x - A^T b` into `out` (length
+    /// `d`), `O(nd)` dense / `O(nnz)` CSR. `ws_n` is length-`n` scratch,
+    /// used only by the CSR arm (resized on first use, reused after).
     ///
-    /// Fused single pass over `A` (mirroring the L1 Pallas kernel): each
-    /// row panel computes its residual slice and immediately accumulates
-    /// `A_i^T r_i`, so the 8·n·d bytes of `A` stream through cache once
-    /// instead of twice — the op is memory-bound, and the fusion is worth
-    /// ~1.7x (EXPERIMENTS.md §Perf).
-    pub fn gradient(&self, x: &[f64]) -> Vec<f64> {
-        let (n, d) = (self.a.rows(), self.a.cols());
+    /// Dense arm: fused single pass over `A` (mirroring the L1 Pallas
+    /// kernel) — each row computes its residual element and immediately
+    /// accumulates `A_i^T r_i`, so the 8·n·d bytes of `A` stream through
+    /// cache once instead of twice; the op is memory-bound and the fusion
+    /// is worth ~1.7x (EXPERIMENTS.md §Perf). The CSR arm instead does
+    /// the two-pass `A^T (A x)` at `O(nnz)` each — on sparse data the
+    /// matrix fits cache far more often, and the asymptotics dominate.
+    pub fn gradient_into(&self, x: &[f64], ws_n: &mut Vec<f64>, out: &mut [f64]) {
+        let d = self.d();
         assert_eq!(x.len(), d);
-        let mut g = vec![0.0; d];
-        // g starts as nu^2 x - A^T b.
-        axpy(self.nu * self.nu, x, &mut g);
-        axpy(-1.0, &self.atb, &mut g);
-        // Panel pass: r_i = <a_i, x>; g += r_i * a_i.
-        for i in 0..n {
-            let row = self.a.row(i);
-            let r = dot(row, x);
-            if r != 0.0 {
-                axpy(r, row, &mut g);
+        assert_eq!(out.len(), d);
+        // out starts as nu^2 x - A^T b.
+        for i in 0..d {
+            out[i] = self.nu * self.nu * x[i] - self.atb[i];
+        }
+        match &self.a {
+            Operand::Dense(a) => {
+                // Panel pass: r_i = <a_i, x>; out += r_i * a_i.
+                for i in 0..a.rows() {
+                    let row = a.row(i);
+                    let r = dot(row, x);
+                    if r != 0.0 {
+                        axpy(r, row, out);
+                    }
+                }
+            }
+            Operand::Sparse(c) => {
+                ws_n.resize(self.n(), 0.0);
+                c.matvec_into(x, ws_n);
+                c.matvec_t_add(ws_n, out);
             }
         }
+    }
+
+    /// Gradient `∇f(x) = A^T A x + nu^2 x - A^T b` (allocating wrapper).
+    pub fn gradient(&self, x: &[f64]) -> Vec<f64> {
+        let mut ws_n = Vec::new();
+        let mut g = vec![0.0; self.d()];
+        self.gradient_into(x, &mut ws_n, &mut g);
         g
+    }
+
+    /// Hessian-vector product `(A^T A + nu^2 I) v` into `out` (length
+    /// `d`); `ws_n` is length-`n` scratch.
+    pub fn hessian_vec_into(&self, v: &[f64], ws_n: &mut Vec<f64>, out: &mut [f64]) {
+        assert_eq!(out.len(), self.d());
+        ws_n.resize(self.n(), 0.0);
+        self.a.matvec_into(v, ws_n);
+        self.a.matvec_t_into(ws_n, out);
+        axpy(self.nu * self.nu, v, out);
     }
 
     /// Hessian-vector product `(A^T A + nu^2 I) v`.
     pub fn hessian_vec(&self, v: &[f64]) -> Vec<f64> {
-        let av = self.a.matvec(v);
-        let mut hv = self.a.matvec_t(&av);
-        axpy(self.nu * self.nu, v, &mut hv);
+        let mut ws_n = Vec::new();
+        let mut hv = vec![0.0; self.d()];
+        self.hessian_vec_into(v, &mut ws_n, &mut hv);
         hv
+    }
+
+    /// Prediction-norm error with caller scratch (`ws_d` length-`d`,
+    /// `ws_n` length-`n`; both resized on first use) — the allocation-free
+    /// form the solver loops call on every stop-rule check.
+    pub fn prediction_error_ws(
+        &self,
+        x: &[f64],
+        x_star: &[f64],
+        ws_d: &mut Vec<f64>,
+        ws_n: &mut Vec<f64>,
+    ) -> f64 {
+        let d = self.d();
+        assert_eq!(x.len(), d);
+        assert_eq!(x_star.len(), d);
+        ws_d.resize(d, 0.0);
+        for i in 0..d {
+            ws_d[i] = x[i] - x_star[i];
+        }
+        ws_n.resize(self.n(), 0.0);
+        self.a.matvec_into(ws_d, ws_n);
+        let (wd, wn) = (ws_d.as_slice(), ws_n.as_slice());
+        0.5 * dot(wn, wn) + 0.5 * self.nu * self.nu * dot(wd, wd)
     }
 
     /// Prediction-norm error `delta = 1/2 ||Abar (x - x*)||^2`
     /// `= 1/2 ||A(x-x*)||^2 + nu^2/2 ||x-x*||^2` — the paper's criterion.
     pub fn prediction_error(&self, x: &[f64], x_star: &[f64]) -> f64 {
-        let mut diff = x.to_vec();
-        axpy(-1.0, x_star, &mut diff);
-        let adiff = self.a.matvec(&diff);
-        0.5 * dot(&adiff, &adiff) + 0.5 * self.nu * self.nu * dot(&diff, &diff)
+        let mut ws_d = Vec::new();
+        let mut ws_n = Vec::new();
+        self.prediction_error_ws(x, x_star, &mut ws_d, &mut ws_n)
     }
 }
 

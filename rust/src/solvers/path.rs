@@ -13,7 +13,7 @@
 
 use super::api::{Solver as _, SolverSpec};
 use super::{RidgeProblem, SolveReport};
-use crate::linalg::Matrix;
+use crate::linalg::Operand;
 
 /// Result of one path point.
 #[derive(Clone, Debug)]
@@ -50,7 +50,7 @@ impl PathResult {
 /// (`seed + i`); warm starts carry the previous solution into solvers
 /// whose spec [`supports_warm_start`](crate::solvers::api::Solver::supports_warm_start).
 pub fn run_path(
-    a: &Matrix,
+    a: &Operand,
     b: &[f64],
     nus: &[f64],
     eps: f64,
@@ -92,7 +92,7 @@ mod tests {
     use crate::sketch::SketchKind;
     use crate::solvers::adaptive::AdaptiveVariant;
 
-    fn small_path_data() -> (Matrix, Vec<f64>) {
+    fn small_path_data() -> (Operand, Vec<f64>) {
         let ds = synthetic::exponential_decay(256, 32, 1);
         (ds.a, ds.b)
     }

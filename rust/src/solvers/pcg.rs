@@ -10,7 +10,7 @@
 
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::qr::QR;
-use crate::linalg::triangular::{solve_upper, solve_upper_transpose};
+use crate::linalg::triangular::{solve_upper_in_place, solve_upper_transpose_in_place};
 use crate::linalg::{axpy, dot, norm2, Matrix};
 use crate::rng::Xoshiro256;
 use crate::sketch::{self, SketchKind};
@@ -57,11 +57,11 @@ pub fn solve(
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let mut report = SolveReport::new(format!("pcg-{}", config.kind));
 
-    // --- Sketch ---
+    // --- Sketch (dense or CSR operand at the family's sparse cost) ---
     let m = pcg_sketch_size(config.kind, n, d, config.rho);
     let t0 = Instant::now();
     let s = sketch::sample(config.kind, m, n, &mut rng);
-    let sa = s.apply(&problem.a);
+    let sa = s.apply_operand(&problem.a);
     report.sketch_time_s = t0.elapsed().as_secs_f64();
     report.final_m = m;
     report.peak_m = m;
@@ -80,27 +80,37 @@ pub fn solve(
     report.factor_time_s = t0.elapsed().as_secs_f64();
 
     // --- Preconditioned CG on H x = A^T b with P = R^T R ---
+    // Inner loop is allocation-free: Hessian products, preconditioner
+    // solves and stop checks reuse the workspace buffers below.
     let t_iter = Instant::now();
     let mut x = x0.to_vec();
     let mut res = problem.gradient(&x);
     crate::linalg::scale(-1.0, &mut res);
     let g0_norm = norm2(&res);
+    let mut ws_n: Vec<f64> = Vec::new();
+    let mut ws_d: Vec<f64> = Vec::new();
+    let mut hp = vec![0.0; d];
     let delta0 = match stop {
-        StopRule::TrueError { x_star, .. } => problem.prediction_error(&x, x_star),
+        StopRule::TrueError { x_star, .. } => {
+            problem.prediction_error_ws(&x, x_star, &mut ws_d, &mut ws_n)
+        }
         _ => 0.0,
     };
     if matches!(stop, StopRule::TrueError { .. }) {
         // Shared trace convention: entry t is delta_t / delta_0.
+        report.error_trace.reserve(config.max_iters.min(65_536) + 1);
         report.error_trace.push(1.0);
     }
 
-    let apply_pinv = |v: &[f64]| -> Vec<f64> {
-        // P^{-1} v = R^{-1} R^{-T} v.
-        let y = solve_upper_transpose(&r, v);
-        solve_upper(&r, &y)
+    // P^{-1} v = R^{-1} R^{-T} v, in place on `z`.
+    let apply_pinv = |v: &[f64], z: &mut [f64]| {
+        z.copy_from_slice(v);
+        solve_upper_transpose_in_place(&r, z);
+        solve_upper_in_place(&r, z);
     };
 
-    let mut z = apply_pinv(&res);
+    let mut z = vec![0.0; d];
+    apply_pinv(&res, &mut z);
     let mut p = z.clone();
     let mut rz_old = dot(&res, &z);
 
@@ -109,7 +119,7 @@ pub fn solve(
             report.converged = true;
             break;
         }
-        let hp = problem.hessian_vec(&p);
+        problem.hessian_vec_into(&p, &mut ws_n, &mut hp);
         let alpha = rz_old / dot(&p, &hp);
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &hp, &mut res);
@@ -117,7 +127,7 @@ pub fn solve(
 
         let stop_now = match stop {
             StopRule::TrueError { x_star, eps } => {
-                let delta = problem.prediction_error(&x, x_star);
+                let delta = problem.prediction_error_ws(&x, x_star, &mut ws_d, &mut ws_n);
                 report.error_trace.push(if delta0 > 0.0 { delta / delta0 } else { 0.0 });
                 delta <= eps * delta0
             }
@@ -128,7 +138,7 @@ pub fn solve(
             break;
         }
 
-        z = apply_pinv(&res);
+        apply_pinv(&res, &mut z);
         let rz_new = dot(&res, &z);
         let beta = rz_new / rz_old;
         for i in 0..d {

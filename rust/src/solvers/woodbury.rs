@@ -206,23 +206,44 @@ impl WoodburyCache {
         }
     }
 
-    /// Apply `H_S^{-1} g`. Cost: `O(m d + m^2)` (small-sketch branch) or
-    /// `O(d^2)` (direct branch).
-    pub fn apply_inverse(&self, g: &[f64]) -> Vec<f64> {
+    /// Apply `H_S^{-1} g` into `out` (length `d`), allocation-free in the
+    /// steady state: `ws_m` is length-`m` scratch resized only when the
+    /// sketch grows. Cost: `O(m d + m^2)` (small-sketch branch) or
+    /// `O(d^2)` (direct branch). This is the per-iteration primitive of
+    /// the IHS solvers' workspace loops.
+    pub fn apply_inverse_into(&self, g: &[f64], ws_m: &mut Vec<f64>, out: &mut [f64]) {
+        assert_eq!(g.len(), self.sa.cols(), "apply_inverse dimension mismatch");
+        assert_eq!(out.len(), self.sa.cols(), "apply_inverse output mismatch");
         match self.mode {
             WoodburyMode::SmallSketch => {
                 // (1/nu^2) (g - scale^2 (S̃A)^T K^{-1} (S̃A) g) with
                 // K = nu^2 I + scale^2 (S̃A)(S̃A)^T.
-                let sag = self.sa.matvec(g);
-                let kinv = self.chol.solve(&sag);
-                let mut out = g.to_vec();
-                let corr = self.sa.matvec_t(&kinv);
-                axpy(-self.scale2, &corr, &mut out);
-                scale_vec(1.0 / self.nu2, &mut out);
-                out
+                ws_m.resize(self.sa.rows(), 0.0);
+                self.sa.matvec_into(g, ws_m);
+                self.chol.solve_in_place(ws_m);
+                out.copy_from_slice(g);
+                // out -= scale^2 (S̃A)^T kinv, fused as per-row axpys.
+                for i in 0..self.sa.rows() {
+                    let c = self.scale2 * ws_m[i];
+                    if c != 0.0 {
+                        axpy(-c, self.sa.row(i), out);
+                    }
+                }
+                scale_vec(1.0 / self.nu2, out);
             }
-            WoodburyMode::Direct => self.chol.solve(g),
+            WoodburyMode::Direct => {
+                out.copy_from_slice(g);
+                self.chol.solve_in_place(out);
+            }
         }
+    }
+
+    /// Apply `H_S^{-1} g` (allocating wrapper).
+    pub fn apply_inverse(&self, g: &[f64]) -> Vec<f64> {
+        let mut ws_m = Vec::new();
+        let mut out = vec![0.0; self.sa.cols()];
+        self.apply_inverse_into(g, &mut ws_m, &mut out);
+        out
     }
 
     /// Explicit `H_S` (tests / diagnostics only).
