@@ -16,16 +16,27 @@ use crate::theory::bounds::{
 /// One check row.
 #[derive(Clone, Debug)]
 pub struct BoundsRow {
+    /// Dataset name.
     pub dataset: String,
+    /// Sketch family checked.
     pub kind: SketchKind,
+    /// Regularization level.
     pub nu: f64,
+    /// Exact effective dimension at `nu`.
     pub d_e: f64,
+    /// Largest sketch size the solver reached.
     pub peak_m: usize,
+    /// Theorem 5 sketch-size bound.
     pub m_bound: f64,
+    /// Rejected candidate updates.
     pub rejections: usize,
+    /// Sketch-size doublings.
     pub doublings: usize,
+    /// Theorem 6 rejection-count bound.
     pub k_bound: f64,
+    /// Accepted iterations.
     pub iterations: usize,
+    /// Whether the stop rule was met.
     pub converged: bool,
     /// Whether both Theorem-5/6 inequalities held on this run.
     pub within_bounds: bool,
@@ -34,13 +45,18 @@ pub struct BoundsRow {
 /// Config for the bounds sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct BoundsConfig {
+    /// Workload rows.
     pub n: usize,
+    /// Workload columns.
     pub d: usize,
+    /// Relative precision target.
     pub eps: f64,
+    /// Workload + sketch seed.
     pub seed: u64,
 }
 
 impl BoundsConfig {
+    /// Seconds-scale configuration for CI-sized runs.
     pub fn quick() -> Self {
         Self { n: 1024, d: 128, eps: 1e-8, seed: 5 }
     }

@@ -17,14 +17,21 @@ use crate::solvers::{direct, RidgeProblem, StopRule};
 /// One sweep point.
 #[derive(Clone, Debug)]
 pub struct ComplexityRow {
+    /// Regularization level.
     pub nu: f64,
+    /// Exact effective dimension at `nu`.
     pub d_e: f64,
+    /// `d_e / d` — the regime axis of the crossover.
     pub de_over_d: f64,
-    // Adaptive decomposition.
+    /// Adaptive: measured sketch-phase seconds.
     pub ada_sketch_s: f64,
+    /// Adaptive: measured factorization seconds.
     pub ada_factor_s: f64,
+    /// Adaptive: measured iteration-loop seconds.
     pub ada_iter_s: f64,
+    /// Adaptive: total wall seconds.
     pub ada_total_s: f64,
+    /// Adaptive: peak sketch size.
     pub ada_m: usize,
     /// Modeled flops for forming `SA` at the peak sketch size
     /// ([`crate::sketch::sketch_cost_flops`], Theorem 7's sketch term).
@@ -38,14 +45,19 @@ pub struct ComplexityRow {
     /// FWHT once + row selection for SRHT, appended rows only for
     /// Gaussian.
     pub ada_sketch_flops_incremental: f64,
-    // pCG decomposition.
+    /// pCG: measured sketch-phase seconds.
     pub pcg_sketch_s: f64,
+    /// pCG: measured factorization (QR) seconds.
     pub pcg_factor_s: f64,
+    /// pCG: measured iteration-loop seconds.
     pub pcg_iter_s: f64,
+    /// pCG: total wall seconds.
     pub pcg_total_s: f64,
+    /// pCG: preconditioner sketch size.
     pub pcg_m: usize,
     /// Modeled flops for pCG's preconditioner sketch.
     pub pcg_sketch_flops: f64,
+    /// Whether the adaptive total beat pCG's at this point.
     pub adaptive_wins: bool,
     /// Stored entries of the data operand (`n*d` dense, `nnz` CSR).
     pub nnz: usize,
@@ -58,17 +70,23 @@ pub struct ComplexityRow {
 /// Config.
 #[derive(Clone, Copy, Debug)]
 pub struct ComplexityConfig {
+    /// Workload rows.
     pub n: usize,
+    /// Workload columns.
     pub d: usize,
+    /// Relative precision target.
     pub eps: f64,
+    /// Workload + sketch seed.
     pub seed: u64,
 }
 
 impl ComplexityConfig {
+    /// Seconds-scale configuration for CI-sized runs.
     pub fn quick() -> Self {
         Self { n: 1024, d: 128, eps: 1e-8, seed: 11 }
     }
 
+    /// Paper-scale configuration (§5 shapes).
     pub fn paper() -> Self {
         Self { n: 8192, d: 512, eps: 1e-10, seed: 11 }
     }

@@ -19,18 +19,25 @@ use crate::util::stats::summarize;
 /// One row of the concentration experiment.
 #[derive(Clone, Debug)]
 pub struct ConcentrationRow {
+    /// Sketch family sampled.
     pub kind: SketchKind,
+    /// Aspect ratio `d_e / m` of this point.
     pub rho: f64,
+    /// Sketch size.
     pub m: usize,
+    /// Effective dimension of the test matrix.
     pub d_e: f64,
-    /// Mean measured extreme eigenvalues over trials.
+    /// Mean measured smallest eigenvalue over trials.
     pub gamma_min_mean: f64,
+    /// Mean measured largest eigenvalue over trials.
     pub gamma_max_mean: f64,
-    /// Worst-case measured over trials.
+    /// Worst-case (smallest) measured minimum over trials.
     pub gamma_min_worst: f64,
+    /// Worst-case (largest) measured maximum over trials.
     pub gamma_max_worst: f64,
-    /// Theoretical bracket (Definition 3.1 / 3.2, ||D|| <= 1 form).
+    /// Theoretical lower bound (Definition 3.1 / 3.2, `||D|| <= 1` form).
     pub lambda_bound: f64,
+    /// Theoretical upper bound.
     pub big_lambda_bound: f64,
     /// Fraction of trials inside the bracket.
     pub inside_frac: f64,
@@ -39,18 +46,25 @@ pub struct ConcentrationRow {
 /// Configuration of the sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct ConcentrationConfig {
+    /// Test-matrix rows.
     pub n: usize,
+    /// Test-matrix columns.
     pub d: usize,
+    /// Regularization level (sets `d_e`).
     pub nu: f64,
+    /// Independent sketch draws per point.
     pub trials: usize,
+    /// Base RNG seed.
     pub seed: u64,
 }
 
 impl ConcentrationConfig {
+    /// Seconds-scale configuration for CI-sized runs.
     pub fn quick() -> Self {
         Self { n: 512, d: 32, nu: 0.5, trials: 10, seed: 3 }
     }
 
+    /// Paper-scale configuration.
     pub fn paper() -> Self {
         Self { n: 2048, d: 64, nu: 0.5, trials: 50, seed: 3 }
     }

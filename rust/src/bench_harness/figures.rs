@@ -20,18 +20,25 @@ use crate::util::stats::summarize;
 /// paper's protocol (eps 1e-10, 30 trials) at surrogate sizes.
 #[derive(Clone, Copy, Debug)]
 pub struct FigureConfig {
+    /// Workload rows.
     pub n: usize,
+    /// Workload columns.
     pub d: usize,
+    /// Independent trials per series.
     pub trials: usize,
+    /// Relative precision target per path point.
     pub eps: f64,
+    /// Base seed (trials offset it).
     pub seed: u64,
 }
 
 impl FigureConfig {
+    /// Seconds-scale configuration for CI-sized runs.
     pub fn quick() -> Self {
         Self { n: 1024, d: 128, trials: 3, eps: 1e-8, seed: 1 }
     }
 
+    /// Paper-protocol configuration (eps 1e-10, 30 trials).
     pub fn paper() -> Self {
         Self { n: 8192, d: 512, trials: 30, eps: 1e-10, seed: 1 }
     }
@@ -40,8 +47,11 @@ impl FigureConfig {
 /// One (dataset, solver) series over a nu-path, aggregated over trials.
 #[derive(Clone, Debug)]
 pub struct PathSeries {
+    /// Dataset name.
     pub dataset: String,
+    /// Canonical solver spec string.
     pub solver: String,
+    /// The nu-path swept (decreasing).
     pub nus: Vec<f64>,
     /// Mean cumulative time at each nu.
     pub cum_time_mean: Vec<f64>,
@@ -51,6 +61,7 @@ pub struct PathSeries {
     pub m_mean: Vec<f64>,
     /// Effective dimension at each nu (dataset property, for context).
     pub d_e: Vec<f64>,
+    /// Whether every trial converged at every point.
     pub all_converged: bool,
 }
 

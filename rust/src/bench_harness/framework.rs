@@ -7,11 +7,14 @@ use std::time::Instant;
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label.
     pub name: String,
+    /// Timing statistics over the measured iterations.
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// One aligned human-readable table line.
     pub fn report_line(&self) -> String {
         let s = &self.summary;
         format!(

@@ -70,13 +70,17 @@ impl Workload {
 /// dispatch of its own.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
+    /// The data to solve on.
     pub workload: Workload,
+    /// Regularization level.
     pub nu: f64,
+    /// Solver spec string resolved at decode time.
     pub solver: SolverSpec,
     /// Relative precision target; measured against the direct solution
     /// (the coordinator computes the oracle, mirroring the paper's
     /// experimental protocol).
     pub eps: f64,
+    /// Seed for the solver's sketch stream.
     pub seed: u64,
     /// Non-empty: run a warm-started regularization path over these
     /// (strictly decreasing) nu values instead of the single solve at
@@ -92,13 +96,18 @@ pub struct JobSpec {
 /// Lifecycle states. Jobs only ever move forward.
 #[derive(Clone, Debug)]
 pub enum JobState {
+    /// Accepted, waiting for a worker.
     Queued,
+    /// Executing on a worker.
     Running,
+    /// Finished successfully.
     Done(Box<SolveOutcome>),
+    /// Finished with an error (message preserved).
     Failed(String),
 }
 
 impl JobState {
+    /// Wire label: `queued` / `running` / `done` / `failed`.
     pub fn label(&self) -> &'static str {
         match self {
             JobState::Queued => "queued",
@@ -108,6 +117,7 @@ impl JobState {
         }
     }
 
+    /// Whether the job can no longer change state.
     pub fn is_terminal(&self) -> bool {
         matches!(self, JobState::Done(_) | JobState::Failed(_))
     }
@@ -126,26 +136,32 @@ pub struct SolveOutcome {
     pub path_points: Vec<(f64, f64, usize, usize, bool)>,
 }
 
+/// Shared wire encoding of a [`SolveReport`] — the field set both job
+/// results and registry query responses carry.
+pub fn report_fields(r: &SolveReport) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        ("solver", Json::from(r.solver.clone())),
+        ("iterations", Json::from(r.iterations)),
+        ("rejections", Json::from(r.rejections)),
+        ("doublings", Json::from(r.doublings)),
+        ("final_m", Json::from(r.final_m)),
+        ("peak_m", Json::from(r.peak_m)),
+        ("wall_time_s", Json::from(r.wall_time_s)),
+        ("sketch_time_s", Json::from(r.sketch_time_s)),
+        ("factor_time_s", Json::from(r.factor_time_s)),
+        ("iter_time_s", Json::from(r.iter_time_s)),
+        ("converged", Json::from(r.converged)),
+    ];
+    if let Some(e) = r.final_rel_error {
+        fields.push(("final_rel_error", Json::from(e)));
+    }
+    fields
+}
+
 impl SolveOutcome {
     /// Wire representation (without the solution vector unless asked).
     pub fn to_json(&self, include_x: bool) -> Json {
-        let r = &self.report;
-        let mut fields = vec![
-            ("solver", Json::from(r.solver.clone())),
-            ("iterations", Json::from(r.iterations)),
-            ("rejections", Json::from(r.rejections)),
-            ("doublings", Json::from(r.doublings)),
-            ("final_m", Json::from(r.final_m)),
-            ("peak_m", Json::from(r.peak_m)),
-            ("wall_time_s", Json::from(r.wall_time_s)),
-            ("sketch_time_s", Json::from(r.sketch_time_s)),
-            ("factor_time_s", Json::from(r.factor_time_s)),
-            ("iter_time_s", Json::from(r.iter_time_s)),
-            ("converged", Json::from(r.converged)),
-        ];
-        if let Some(e) = r.final_rel_error {
-            fields.push(("final_rel_error", Json::from(e)));
-        }
+        let mut fields = report_fields(&self.report);
         if include_x {
             fields.push(("x", Json::Arr(self.x.iter().map(|&v| Json::from(v)).collect())));
         }

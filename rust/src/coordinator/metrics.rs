@@ -7,8 +7,11 @@ use std::sync::Mutex;
 /// Counters are lock-free; the latency aggregate takes a short mutex.
 #[derive(Debug)]
 pub struct Metrics {
+    /// Jobs accepted onto the queue.
     pub submitted: AtomicU64,
+    /// Jobs finished successfully.
     pub completed: AtomicU64,
+    /// Jobs that errored or panicked.
     pub failed: AtomicU64,
     /// Submissions rejected by backpressure.
     pub rejected: AtomicU64,
@@ -25,6 +28,7 @@ struct LatencyAgg {
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self {
             submitted: AtomicU64::new(0),

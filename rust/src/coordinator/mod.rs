@@ -2,24 +2,42 @@
 //!
 //! The paper's contribution is an algorithm, so L3 is a *thin but real*
 //! service around it (per DESIGN.md §2): a job queue + worker pool that
-//! runs ridge solves and regularization paths, a metrics registry, and a
-//! TCP server speaking line-delimited JSON. The event loop, process
-//! topology, and metrics live in Rust; solves call into the solver stack
-//! and (optionally) the PJRT runtime for the AOT hot path.
+//! runs ridge solves and regularization paths, a model registry that
+//! keeps per-problem sketch/factorization state hot across requests, a
+//! metrics registry, and a TCP server speaking line-delimited JSON. The
+//! event loop, process topology, and metrics live in Rust; solves call
+//! into the solver stack and (optionally) the PJRT runtime for the AOT
+//! hot path.
 //!
 //! * [`job`] — job specifications (workload x solver x stop rule) and the
 //!   job state machine.
-//! * [`scheduler`] — worker pool with a bounded queue and backpressure.
+//! * [`registry`] — the model registry: register a problem once, then
+//!   serve warm-started solves / paths / predictions from cached
+//!   [`crate::solvers::session::ModelSession`] state, bounded by an LRU
+//!   byte budget.
+//! * [`scheduler`] — worker pool with a bounded queue, backpressure, and
+//!   bounded terminal-state retention.
 //! * [`metrics`] — process-wide counters and latency aggregates.
 //! * [`protocol`] — wire encoding of requests/responses.
 //! * [`server`] — `std::net` TCP front end (thread per connection).
+//!
+//! The wire protocol is documented command by command in **`PROTOCOL.md`**
+//! at the repository root, rendered into rustdoc as [`protocol_doc`].
 
 pub mod job;
 pub mod metrics;
 pub mod protocol;
+pub mod registry;
 pub mod scheduler;
 pub mod server;
 
+/// Rendered copy of the repository's `PROTOCOL.md` — the complete wire
+/// protocol reference (every command with request/response examples,
+/// error shapes, and backpressure/retention semantics).
+#[doc = include_str!("../../../PROTOCOL.md")]
+pub mod protocol_doc {}
+
 pub use job::{JobId, JobSpec, JobState, Workload};
+pub use registry::{ModelId, Registry};
 pub use scheduler::Scheduler;
 pub use server::Server;

@@ -1,12 +1,23 @@
 //! Wire protocol: line-delimited JSON over TCP.
 //!
-//! Requests (one JSON object per line):
+//! The complete command reference — request/response examples, error
+//! shapes, backpressure and retention semantics — lives in
+//! **`PROTOCOL.md`** at the repository root (also rendered into rustdoc
+//! as [`crate::coordinator::protocol_doc`]). Summary of the requests
+//! (one JSON object per line):
 //! ```json
 //! {"cmd":"solve","profile":"mnist-like","n":1024,"d":128,"nu":1.0,
 //!  "solver":"adaptive-srht","eps":1e-8,"seed":7,"threads":8}
 //! {"cmd":"status","job":3}
 //! {"cmd":"wait","job":3,"timeout_s":60}
 //! {"cmd":"result","job":3,"include_x":true}
+//! {"cmd":"register","profile":"exp","n":1024,"d":128,"seed":7,
+//!  "sketch":"gaussian","name":"exp-1k"}
+//! {"cmd":"query","model":1,"nu":0.5,"eps":1e-8,"include_x":true}
+//! {"cmd":"query","model":1,"nus":[10,1,0.1]}
+//! {"cmd":"predict","model":1,"nu":0.5,"rows":[[0.1,0.2],[0.3,0.4]]}
+//! {"cmd":"evict","model":1}
+//! {"cmd":"models"}
 //! {"cmd":"metrics"}
 //! {"cmd":"solvers"}
 //! {"cmd":"ping"}
@@ -25,24 +36,95 @@
 //! generates a density-controlled CSR workload server-side, and small
 //! real problems ship inline as CSR triplets —
 //! `{"cmd":"solve","rows":3,"cols":2,"triplets":[[0,0,1.5],...],"b":[...]}`
-//! — which bypass the synthetic profile entirely.
+//! — which bypass the synthetic profile entirely. `register` accepts the
+//! same workload fields as `solve` (synthetic profiles and inline
+//! triplets alike).
 
 use super::job::{JobSpec, Workload};
 use crate::linalg::sparse::CsrMatrix;
 use crate::linalg::Operand;
+use crate::sketch::SketchKind;
 use crate::solvers::api::SolverSpec;
 use crate::util::json::{self, Json};
 
 /// A decoded client request.
 #[derive(Clone, Debug)]
 pub enum Request {
+    /// Submit an asynchronous solve job (returns a job id).
     Solve(JobSpec),
-    Status { job: u64 },
-    Wait { job: u64, timeout_s: f64 },
-    Result { job: u64, include_x: bool },
+    /// Poll a job's lifecycle state.
+    Status {
+        /// Job id from a `solve` response.
+        job: u64,
+    },
+    /// Block until the job is terminal or the timeout elapses.
+    Wait {
+        /// Job id from a `solve` response.
+        job: u64,
+        /// Maximum seconds to block.
+        timeout_s: f64,
+    },
+    /// Fetch a terminal job's result.
+    Result {
+        /// Job id from a `solve` response.
+        job: u64,
+        /// Whether to include the solution vector.
+        include_x: bool,
+    },
+    /// Register a model: same workload fields as `solve`, plus the sketch
+    /// family to grow and an optional display name.
+    Register {
+        /// The data to register (synthetic profile or inline triplets).
+        workload: Workload,
+        /// Sketch family the model's session grows (`"sketch"` field).
+        kind: SketchKind,
+        /// Seed for the session's sketch stream.
+        seed: u64,
+        /// Optional display name (defaults to a workload description).
+        name: Option<String>,
+    },
+    /// Query a registered model: a solve at `nu` (or a batched path over
+    /// `nus`), optionally against an alternate right-hand side.
+    Query {
+        /// Model id from a `register` response.
+        model: u64,
+        /// Regularization level (ignored when `nus` is non-empty).
+        nu: f64,
+        /// Non-empty: batched warm-started path over these strictly
+        /// decreasing values.
+        nus: Vec<f64>,
+        /// Gradient-norm tolerance (sessions are oracle-free).
+        eps: f64,
+        /// Whether to include solution vectors in the response.
+        include_x: bool,
+        /// Alternate right-hand side (length `n`); exclusive with `nus`.
+        b: Option<Vec<f64>>,
+    },
+    /// Predict on new rows with a registered model's solution at `nu`.
+    Predict {
+        /// Model id from a `register` response.
+        model: u64,
+        /// Regularization level whose solution to use.
+        nu: f64,
+        /// Rows to score, each of length `d`.
+        rows: Vec<Vec<f64>>,
+        /// Tolerance for the underlying solve if not already cached.
+        eps: f64,
+    },
+    /// Drop a registered model, freeing its cached state.
+    Evict {
+        /// Model id from a `register` response.
+        model: u64,
+    },
+    /// List the registered models.
+    Models,
+    /// Process metrics snapshot (scheduler + registry).
     Metrics,
+    /// List every available solver spec.
     Solvers,
+    /// Liveness check.
     Ping,
+    /// Stop the server after in-flight work completes.
     Shutdown,
 }
 
@@ -52,45 +134,63 @@ pub fn decode(line: &str) -> Result<Request, String> {
     let cmd = v.get("cmd").and_then(Json::as_str).ok_or("missing cmd")?;
     match cmd {
         "solve" => {
-            let mut profile = v.get("profile").and_then(Json::as_str).unwrap_or("exp").to_string();
-            let n = v.get("n").and_then(Json::as_usize).unwrap_or(1024);
-            let d = v.get("d").and_then(Json::as_usize).unwrap_or(128);
             let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
             let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
             let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let solver_name = v.get("solver").and_then(Json::as_str).unwrap_or("adaptive");
             let solver: SolverSpec = solver_name.parse()?;
-            // Optional "density": only meaningful for the sparse profile.
-            if let Some(dens) = v.get("density").and_then(Json::as_f64) {
-                if profile != "sparse" {
-                    return Err(format!(
-                        "\"density\" requires \"profile\":\"sparse\" (got {profile:?})"
-                    ));
-                }
-                if !(dens > 0.0 && dens <= 1.0) {
-                    return Err(format!("density must be in (0, 1], got {dens}"));
-                }
-                profile = format!("sparse:{dens}");
-            }
-            // Optional inline CSR payload: triplets + rows/cols + b.
-            let workload = if let Some(trips) = v.get("triplets").and_then(Json::as_arr) {
-                decode_triplet_workload(&v, trips)?
-            } else {
-                Workload::Synthetic { profile, n, d, seed }
-            };
+            let workload = decode_workload(&v, seed)?;
             // Optional "nus": [..] turns the job into a warm-started
             // regularization path (Figure-1 workload as a service).
-            let path_nus: Vec<f64> = v
-                .get("nus")
-                .and_then(Json::as_arr)
-                .map(|arr| arr.iter().filter_map(Json::as_f64).collect())
-                .unwrap_or_default();
+            let path_nus = decode_nus(&v)?;
             let threads = match v.get("threads").and_then(Json::as_usize) {
                 Some(0) => return Err("threads must be >= 1".into()),
                 t => t,
             };
             Ok(Request::Solve(JobSpec { workload, nu, solver, eps, seed, path_nus, threads }))
         }
+        "register" => {
+            let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            let kind: SketchKind = match v.get("sketch").and_then(Json::as_str) {
+                Some(s) => s.parse()?,
+                None => SketchKind::Gaussian,
+            };
+            let workload = decode_workload(&v, seed)?;
+            let name = v.get("name").and_then(Json::as_str).map(str::to_string);
+            Ok(Request::Register { workload, kind, seed, name })
+        }
+        "query" => {
+            let model = require_id(&v, "model")?;
+            let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
+            let nus = decode_nus(&v)?;
+            let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
+            let include_x = v.get("include_x").and_then(Json::as_bool).unwrap_or(false);
+            let b = match v.get("b").and_then(Json::as_arr) {
+                Some(arr) => Some(decode_f64_vec(arr, "b")?),
+                None => None,
+            };
+            if b.is_some() && !nus.is_empty() {
+                return Err("\"b\" and \"nus\" cannot be combined in one query".into());
+            }
+            Ok(Request::Query { model, nu, nus, eps, include_x, b })
+        }
+        "predict" => {
+            let model = require_id(&v, "model")?;
+            let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
+            let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
+            let rows_json = v.get("rows").and_then(Json::as_arr).ok_or("predict needs \"rows\"")?;
+            let mut rows = Vec::with_capacity(rows_json.len());
+            for (i, r) in rows_json.iter().enumerate() {
+                let r = r.as_arr().ok_or_else(|| format!("predict row {i} must be an array"))?;
+                rows.push(decode_f64_vec(r, "rows")?);
+            }
+            if rows.is_empty() {
+                return Err("predict needs at least one row".into());
+            }
+            Ok(Request::Predict { model, nu, rows, eps })
+        }
+        "evict" => Ok(Request::Evict { model: require_id(&v, "model")? }),
+        "models" => Ok(Request::Models),
         "status" => Ok(Request::Status { job: require_job(&v)? }),
         "wait" => Ok(Request::Wait {
             job: require_job(&v)?,
@@ -106,6 +206,54 @@ pub fn decode(line: &str) -> Result<Request, String> {
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!("unknown cmd: {other}")),
     }
+}
+
+/// Decode the workload fields shared by `solve` and `register`: either a
+/// synthetic `"profile"` (+ optional `"density"` for the sparse family)
+/// or an inline CSR triplet payload.
+fn decode_workload(v: &Json, seed: u64) -> Result<Workload, String> {
+    let mut profile = v.get("profile").and_then(Json::as_str).unwrap_or("exp").to_string();
+    let n = v.get("n").and_then(Json::as_usize).unwrap_or(1024);
+    let d = v.get("d").and_then(Json::as_usize).unwrap_or(128);
+    // Optional "density": only meaningful for the sparse profile.
+    if let Some(dens) = v.get("density").and_then(Json::as_f64) {
+        if profile != "sparse" {
+            return Err(format!("\"density\" requires \"profile\":\"sparse\" (got {profile:?})"));
+        }
+        if !(dens > 0.0 && dens <= 1.0) {
+            return Err(format!("density must be in (0, 1], got {dens}"));
+        }
+        profile = format!("sparse:{dens}");
+    }
+    // Optional inline CSR payload: triplets + rows/cols + b.
+    if let Some(trips) = v.get("triplets").and_then(Json::as_arr) {
+        decode_triplet_workload(v, trips)
+    } else {
+        Ok(Workload::Synthetic { profile, n, d, seed })
+    }
+}
+
+/// Optional `"nus"` array (empty when absent). Strict: a non-numeric
+/// entry is an error, not a silently shorter (or empty) path — an empty
+/// result must mean the client did not ask for a path.
+fn decode_nus(v: &Json) -> Result<Vec<f64>, String> {
+    match v.get("nus").and_then(Json::as_arr) {
+        Some(arr) => decode_f64_vec(arr, "nus"),
+        None => Ok(Vec::new()),
+    }
+}
+
+/// Decode an array of finite numbers, naming the field in errors.
+fn decode_f64_vec(arr: &[Json], field: &str) -> Result<Vec<f64>, String> {
+    let mut out = Vec::with_capacity(arr.len());
+    for x in arr {
+        let v = x.as_f64().ok_or_else(|| format!("non-numeric entry in {field:?}"))?;
+        if !v.is_finite() {
+            return Err(format!("non-finite entry in {field:?}"));
+        }
+        out.push(v);
+    }
+    Ok(out)
 }
 
 /// Decode an inline CSR workload: `"rows"`, `"cols"`, `"triplets"` (array
@@ -150,10 +298,22 @@ fn decode_triplet_workload(v: &Json, trips: &[Json]) -> Result<Workload, String>
 }
 
 fn require_job(v: &Json) -> Result<u64, String> {
-    v.get("job")
+    require_id(v, "job")
+}
+
+/// Required numeric id field (`"job"` / `"model"`). Strict: fractional,
+/// negative, or non-integral values are rejected instead of being cast —
+/// a truncated/saturated id would silently address a *different* job or
+/// model than the client named.
+fn require_id(v: &Json, field: &str) -> Result<u64, String> {
+    let x = v
+        .get(field)
         .and_then(Json::as_f64)
-        .map(|x| x as u64)
-        .ok_or_else(|| "missing job id".to_string())
+        .ok_or_else(|| format!("missing {field} id"))?;
+    if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x < 9_007_199_254_740_992.0) {
+        return Err(format!("{field} id must be a non-negative integer, got {x}"));
+    }
+    Ok(x as u64)
 }
 
 /// Encode a success response.
@@ -280,6 +440,90 @@ mod tests {
                 .is_err(),
             "triplet arity"
         );
+    }
+
+    #[test]
+    fn decode_register() {
+        let r = decode(
+            r#"{"cmd":"register","profile":"exp","n":256,"d":32,"seed":9,
+                "sketch":"srht","name":"demo"}"#
+                .replace('\n', " ")
+                .as_str(),
+        )
+        .unwrap();
+        match r {
+            Request::Register { workload, kind, seed, name } => {
+                assert!(matches!(workload, Workload::Synthetic { ref profile, n: 256, d: 32, .. }
+                    if profile == "exp"));
+                assert_eq!(kind, SketchKind::Srht);
+                assert_eq!(seed, 9);
+                assert_eq!(name.as_deref(), Some("demo"));
+            }
+            _ => panic!("wrong variant"),
+        }
+        // Defaults: gaussian sketch, no name. Inline triplets also accepted.
+        match decode(r#"{"cmd":"register","rows":2,"cols":1,"triplets":[[0,0,1.0],[1,0,2.0]],"b":[1.0,2.0]}"#).unwrap() {
+            Request::Register { workload, kind, name, .. } => {
+                assert!(matches!(workload, Workload::Inline { .. }));
+                assert_eq!(kind, SketchKind::Gaussian);
+                assert!(name.is_none());
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(decode(r#"{"cmd":"register","sketch":"fourier"}"#).is_err());
+    }
+
+    #[test]
+    fn decode_query_and_predict() {
+        match decode(r#"{"cmd":"query","model":3,"nu":0.5,"eps":1e-6,"include_x":true}"#).unwrap()
+        {
+            Request::Query { model, nu, nus, eps, include_x, b } => {
+                assert_eq!(model, 3);
+                assert_eq!(nu, 0.5);
+                assert!(nus.is_empty());
+                assert_eq!(eps, 1e-6);
+                assert!(include_x);
+                assert!(b.is_none());
+            }
+            _ => panic!("wrong variant"),
+        }
+        match decode(r#"{"cmd":"query","model":1,"nus":[10,1,0.1]}"#).unwrap() {
+            Request::Query { nus, .. } => assert_eq!(nus, vec![10.0, 1.0, 0.1]),
+            _ => panic!("wrong variant"),
+        }
+        match decode(r#"{"cmd":"query","model":1,"b":[1.0,2.0]}"#).unwrap() {
+            Request::Query { b, .. } => assert_eq!(b, Some(vec![1.0, 2.0])),
+            _ => panic!("wrong variant"),
+        }
+        match decode(r#"{"cmd":"predict","model":2,"nu":1.5,"rows":[[1.0,2.0],[3.0,4.0]]}"#)
+            .unwrap()
+        {
+            Request::Predict { model, nu, rows, .. } => {
+                assert_eq!(model, 2);
+                assert_eq!(nu, 1.5);
+                assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(matches!(decode(r#"{"cmd":"evict","model":4}"#).unwrap(),
+            Request::Evict { model: 4 }));
+        assert!(matches!(decode(r#"{"cmd":"models"}"#).unwrap(), Request::Models));
+        // Malformed registry requests.
+        assert!(decode(r#"{"cmd":"query"}"#).is_err(), "missing model id");
+        assert!(decode(r#"{"cmd":"query","model":1,"b":[1.0],"nus":[1.0,0.1]}"#).is_err());
+        assert!(decode(r#"{"cmd":"query","model":1,"b":["x"]}"#).is_err());
+        // Non-numeric path entries are an error, not a silent single solve.
+        assert!(decode(r#"{"cmd":"query","model":1,"nus":["10","1"]}"#).is_err());
+        assert!(decode(r#"{"cmd":"solve","nus":[10,"1",0.1]}"#).is_err());
+        assert!(decode(r#"{"cmd":"predict","model":1}"#).is_err(), "missing rows");
+        assert!(decode(r#"{"cmd":"predict","model":1,"rows":[]}"#).is_err());
+        assert!(decode(r#"{"cmd":"predict","model":1,"rows":[1.0]}"#).is_err());
+        assert!(decode(r#"{"cmd":"evict"}"#).is_err());
+        // Ids must be non-negative integers — no silent truncation onto a
+        // different model.
+        assert!(decode(r#"{"cmd":"query","model":1.9}"#).is_err());
+        assert!(decode(r#"{"cmd":"evict","model":-1}"#).is_err());
+        assert!(decode(r#"{"cmd":"status","job":2.5}"#).is_err());
     }
 
     #[test]

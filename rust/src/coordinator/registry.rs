@@ -1,0 +1,372 @@
+//! Model registry: named problems with cached cross-query solver state.
+//!
+//! A client registers a problem once (`{"cmd":"register", ...}`) and then
+//! issues many cheap queries against the returned model id — solves at
+//! any `nu` (warm-started), batched regularization paths, alternate
+//! right-hand sides, and predictions — all served from one
+//! [`ModelSession`] per model: the data operand is held once in an `Arc`,
+//! the grown sketch and the Woodbury/Cholesky factors survive between
+//! queries, and repeat queries cost `O(m^2 d)` or less instead of the
+//! from-scratch `O(n d m)`.
+//!
+//! Memory is bounded by a **byte budget**: every model's approximate
+//! footprint ([`ModelSession::approx_bytes`]) is tracked, and when the
+//! total exceeds the budget the least-recently-used models are evicted
+//! (the model being registered or queried is never the victim of its own
+//! request; a single model larger than the whole budget is admitted and
+//! simply never shares the registry). Evicted ids return a clean
+//! `unknown model` error — clients re-register.
+//!
+//! Locking: the registry map is one mutex held only for id lookup /
+//! insert / evict bookkeeping; each model's session has its own mutex, so
+//! queries against different models run fully in parallel while queries
+//! against one model serialize (the session mutates its sketch state).
+//! Eviction only removes the map entry — an in-flight query holds an
+//! `Arc` to the entry and completes normally.
+
+use crate::linalg::Operand;
+use crate::sketch::SketchKind;
+use crate::solvers::session::ModelSession;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic model identifier (shares the id space style of
+/// [`super::job::JobId`] but counts independently).
+pub type ModelId = u64;
+
+/// Default registry byte budget: 512 MiB of model state.
+pub const DEFAULT_BYTE_BUDGET: usize = 512 << 20;
+
+/// One registered model: metadata plus its mutex-guarded session.
+pub struct ModelEntry {
+    /// Registry-assigned id.
+    pub id: ModelId,
+    /// Client-supplied name (defaults to the workload description).
+    pub name: String,
+    /// The reusable solver session; lock to query.
+    pub session: Mutex<ModelSession>,
+    /// Logical LRU clock value of the last touch.
+    last_used: AtomicU64,
+    /// Cached `approx_bytes` of the session, refreshed after each query
+    /// (sessions grow); reading it must not require the session lock.
+    bytes: AtomicUsize,
+}
+
+struct Inner {
+    models: HashMap<ModelId, Arc<ModelEntry>>,
+    next_id: ModelId,
+    clock: u64,
+}
+
+/// The registry itself. Cheap to share behind an `Arc`.
+pub struct Registry {
+    inner: Mutex<Inner>,
+    byte_budget: usize,
+    /// Running sum of the live models' byte estimates, maintained on
+    /// register / evict / byte refresh so the per-query budget check is
+    /// O(1) instead of an O(models) re-sum under the shared lock.
+    bytes_total: AtomicUsize,
+    /// Models registered over the registry's lifetime.
+    pub registered: AtomicU64,
+    /// Models evicted (explicitly or by byte-budget pressure).
+    pub evicted: AtomicU64,
+    /// Queries answered (solve/path/rhs/predict, cache hits included).
+    pub queries: AtomicU64,
+}
+
+impl Registry {
+    /// Create a registry with the given byte budget (see
+    /// [`DEFAULT_BYTE_BUDGET`]).
+    pub fn new(byte_budget: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner { models: HashMap::new(), next_id: 1, clock: 0 }),
+            byte_budget,
+            bytes_total: AtomicUsize::new(0),
+            registered: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a problem; returns the model entry (its `id` goes back to
+    /// the client). May evict LRU models to fit the budget.
+    pub fn register(
+        &self,
+        name: String,
+        a: Operand,
+        b: Vec<f64>,
+        kind: SketchKind,
+        seed: u64,
+    ) -> Result<Arc<ModelEntry>, String> {
+        let session = ModelSession::new(Arc::new(a), b, kind, seed)?;
+        let bytes = session.approx_bytes();
+        let entry = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = inner.next_id;
+            inner.next_id += 1;
+            inner.clock += 1;
+            let entry = Arc::new(ModelEntry {
+                id,
+                name,
+                session: Mutex::new(session),
+                last_used: AtomicU64::new(inner.clock),
+                bytes: AtomicUsize::new(bytes),
+            });
+            inner.models.insert(id, Arc::clone(&entry));
+            self.bytes_total.fetch_add(bytes, Ordering::Relaxed);
+            entry
+        };
+        self.registered.fetch_add(1, Ordering::Relaxed);
+        self.enforce_budget(entry.id);
+        Ok(entry)
+    }
+
+    /// Look up a model and bump its LRU position. `None` for unknown /
+    /// evicted ids.
+    pub fn touch(&self, id: ModelId) -> Option<Arc<ModelEntry>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.models.get(&id).map(|e| {
+            e.last_used.store(clock, Ordering::Relaxed);
+            Arc::clone(e)
+        })
+    }
+
+    /// The standard "no such model" error (registration expired or never
+    /// happened).
+    pub fn unknown(id: ModelId) -> String {
+        format!("unknown model {id} (never registered, or evicted — re-register)")
+    }
+
+    /// Record a finished query against `entry`: refresh its byte estimate
+    /// (sessions grow) and re-enforce the budget, never evicting `entry`
+    /// itself. The brief map-lock hold is a membership check plus an O(1)
+    /// delta update — solves themselves run outside this lock.
+    pub fn note_query(&self, entry: &ModelEntry, session: &ModelSession) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let new = session.approx_bytes();
+        {
+            let inner = self.inner.lock().unwrap();
+            // A concurrently evicted model must not perturb the running
+            // total its removal already subtracted.
+            if inner.models.contains_key(&entry.id) {
+                let old = entry.bytes.swap(new, Ordering::Relaxed);
+                if new >= old {
+                    self.bytes_total.fetch_add(new - old, Ordering::Relaxed);
+                } else {
+                    self.bytes_total.fetch_sub(old - new, Ordering::Relaxed);
+                }
+            }
+        }
+        self.enforce_budget(entry.id);
+    }
+
+    /// Explicitly remove a model. Returns `false` for unknown ids.
+    pub fn evict(&self, id: ModelId) -> bool {
+        let removed = self.inner.lock().unwrap().models.remove(&id);
+        match removed {
+            Some(e) => {
+                self.bytes_total.fetch_sub(e.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of live models.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().models.len()
+    }
+
+    /// Whether no models are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sum of the models' approximate byte footprints (running total;
+    /// O(1)).
+    pub fn total_bytes(&self) -> usize {
+        self.bytes_total.load(Ordering::Relaxed)
+    }
+
+    /// Evict least-recently-used models until the total fits the budget.
+    /// `protect` (the model serving the current request) is never
+    /// evicted. Under budget this is a lock-free O(1) check; the LRU
+    /// scan only runs while actually evicting.
+    fn enforce_budget(&self, protect: ModelId) {
+        if self.bytes_total.load(Ordering::Relaxed) <= self.byte_budget {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut evicted = 0u64;
+        while self.bytes_total.load(Ordering::Relaxed) > self.byte_budget {
+            let victim = inner
+                .models
+                .values()
+                .filter(|e| e.id != protect)
+                .min_by_key(|e| e.last_used.load(Ordering::Relaxed))
+                .map(|e| e.id);
+            match victim {
+                Some(id) => {
+                    if let Some(e) = inner.models.remove(&id) {
+                        self.bytes_total
+                            .fetch_sub(e.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+                    }
+                    evicted += 1;
+                }
+                // Only the protected model is left; a single over-budget
+                // model is admitted (documented in the module docs).
+                None => break,
+            }
+        }
+        if evicted > 0 {
+            self.evicted.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Listing for the `models` wire command.
+    pub fn models_json(&self) -> Json {
+        let mut entries: Vec<Arc<ModelEntry>> =
+            self.inner.lock().unwrap().models.values().cloned().collect();
+        entries.sort_by_key(|e| e.id);
+        Json::Arr(
+            entries
+                .iter()
+                .map(|e| {
+                    // Shape/stat fields come from the session; skip (rather
+                    // than block on) models busy with a long query.
+                    let detail = e.session.try_lock().ok().map(|s| {
+                        let (queries, hits) = s.query_stats();
+                        (s.n(), s.d(), s.m(), s.kind(), queries, hits)
+                    });
+                    let mut fields = vec![
+                        ("model", Json::from(e.id)),
+                        ("name", Json::from(e.name.clone())),
+                        ("bytes", Json::from(e.bytes.load(Ordering::Relaxed))),
+                    ];
+                    if let Some((n, d, m, kind, queries, hits)) = detail {
+                        fields.extend([
+                            ("n", Json::from(n)),
+                            ("d", Json::from(d)),
+                            ("m", Json::from(m)),
+                            ("sketch", Json::from(kind.to_string())),
+                            ("queries", Json::from(queries)),
+                            ("cache_hits", Json::from(hits)),
+                        ]);
+                    }
+                    Json::obj(fields)
+                })
+                .collect(),
+        )
+    }
+
+    /// Counter snapshot merged into the `metrics` wire response.
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("models", Json::from(self.len())),
+            ("model_bytes", Json::from(self.total_bytes())),
+            ("byte_budget", Json::from(self.byte_budget)),
+            ("registered", Json::from(self.registered.load(Ordering::Relaxed))),
+            ("evicted", Json::from(self.evicted.load(Ordering::Relaxed))),
+            ("queries", Json::from(self.queries.load(Ordering::Relaxed))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn register_one(reg: &Registry, n: usize, d: usize, seed: u64) -> ModelId {
+        let ds = synthetic::exponential_decay(n, d, seed);
+        reg.register(format!("m{seed}"), ds.a, ds.b, SketchKind::Gaussian, seed)
+            .unwrap()
+            .id
+    }
+
+    #[test]
+    fn register_touch_query_evict_roundtrip() {
+        let reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        let id = register_one(&reg, 128, 16, 1);
+        assert_eq!(reg.len(), 1);
+        let entry = reg.touch(id).expect("registered model");
+        let sol = {
+            let mut s = entry.session.lock().unwrap();
+            let sol = s.solve(0.5, 1e-8).unwrap();
+            reg.note_query(&entry, &s);
+            sol
+        };
+        assert!(sol.report.converged);
+        assert_eq!(reg.queries.load(Ordering::Relaxed), 1);
+        assert!(reg.evict(id));
+        assert!(reg.touch(id).is_none());
+        assert!(!reg.evict(id));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn lru_eviction_under_byte_pressure() {
+        // Budget fits roughly two 64x16 dense models (~8 KiB operand each
+        // plus session state); a third registration must evict the LRU.
+        let one_model = {
+            let probe = Registry::new(usize::MAX);
+            let id = register_one(&probe, 64, 16, 9);
+            probe.touch(id).unwrap().bytes.load(Ordering::Relaxed)
+        };
+        let reg = Registry::new(one_model * 2 + one_model / 2);
+        let a = register_one(&reg, 64, 16, 1);
+        let b = register_one(&reg, 64, 16, 2);
+        // Touch `a` so `b` is the LRU victim.
+        reg.touch(a).unwrap();
+        let c = register_one(&reg, 64, 16, 3);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.touch(a).is_some(), "recently used model survived");
+        assert!(reg.touch(b).is_none(), "LRU model evicted");
+        assert!(reg.touch(c).is_some(), "new model admitted");
+        assert_eq!(reg.evicted.load(Ordering::Relaxed), 1);
+        assert!(reg.total_bytes() <= one_model * 2 + one_model / 2);
+    }
+
+    #[test]
+    fn single_over_budget_model_is_admitted() {
+        let reg = Registry::new(1); // absurdly small budget
+        let id = register_one(&reg, 64, 8, 4);
+        assert!(reg.touch(id).is_some(), "lone model must not evict itself");
+        assert_eq!(reg.len(), 1);
+        // A second registration makes the first the victim.
+        let id2 = register_one(&reg, 64, 8, 5);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.touch(id).is_none());
+        assert!(reg.touch(id2).is_some());
+    }
+
+    #[test]
+    fn listing_and_stats_shapes() {
+        let reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        register_one(&reg, 64, 8, 6);
+        register_one(&reg, 64, 8, 7);
+        let listing = reg.models_json();
+        let arr = listing.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!(arr[0].get("model").unwrap().as_usize().unwrap() <
+                arr[1].get("model").unwrap().as_usize().unwrap());
+        assert_eq!(arr[0].get("sketch").unwrap().as_str(), Some("gaussian"));
+        let stats = reg.stats_json();
+        assert_eq!(stats.get("models").unwrap().as_usize(), Some(2));
+        assert_eq!(stats.get("registered").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn ids_are_never_reused_after_eviction() {
+        let reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        let a = register_one(&reg, 64, 8, 1);
+        reg.evict(a);
+        let b = register_one(&reg, 64, 8, 2);
+        assert!(b > a, "model ids must stay monotonic");
+    }
+}

@@ -5,7 +5,14 @@
 //! * job ids are unique and monotonically increasing;
 //! * at most `workers` jobs run concurrently;
 //! * `submit` returns `QueueFull` instead of blocking when the backlog
-//!   reaches `queue_cap` (backpressure, never unbounded memory).
+//!   reaches `queue_cap` (backpressure, never unbounded memory);
+//! * terminal job states are retained for at most
+//!   [`DEFAULT_TERMINAL_RETENTION`] jobs (oldest-first eviction; jobs
+//!   with a client blocked in `wait` are exempt until the waiter has
+//!   observed the result), so a long-lived server's state map cannot
+//!   grow without bound — clients that fetch results promptly never
+//!   notice; a `status`/`result` for an evicted id reports
+//!   `unknown job`.
 
 use super::job::{self, JobId, JobSpec, JobState};
 use super::metrics::Metrics;
@@ -18,7 +25,9 @@ use std::time::{Duration, Instant};
 /// Submission error.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
+    /// The backlog is at `queue_cap`; back off and resubmit.
     QueueFull,
+    /// The scheduler is shutting down and accepts no new jobs.
     ShuttingDown,
 }
 
@@ -31,15 +40,77 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+/// How many terminal (done/failed) job states a scheduler retains by
+/// default before evicting the oldest. Results are a fetch-once protocol:
+/// clients `wait`/`result` shortly after submitting, so the window only
+/// needs to cover bursts, not history.
+pub const DEFAULT_TERMINAL_RETENTION: usize = 1024;
+
+/// Job-state map plus the FIFO of terminal ids that bounds it.
+struct StateStore {
+    states: HashMap<JobId, JobState>,
+    /// Terminal ids in completion order; drained oldest-first once the
+    /// retention cap is exceeded.
+    terminal_order: VecDeque<JobId>,
+    /// Jobs a client is currently blocked in [`Scheduler::wait`] on,
+    /// with waiter counts — exempt from retention eviction so a result
+    /// cannot vanish between its completion notification and the
+    /// waiter's wake-up. Bounded by the number of concurrent waiters
+    /// (connections), so the retained map stays
+    /// `retention + active waiters` at worst.
+    active_waits: HashMap<JobId, usize>,
+}
+
+impl StateStore {
+    /// Record a terminal state and evict the oldest terminal entries
+    /// beyond `retention`, skipping ids with active waiters.
+    /// Queued/running entries are never evicted.
+    fn insert_terminal(&mut self, id: JobId, state: JobState, retention: usize) {
+        debug_assert!(state.is_terminal());
+        self.states.insert(id, state);
+        self.terminal_order.push_back(id);
+        let mut excess = self.terminal_order.len().saturating_sub(retention);
+        // Common case: the oldest terminals have no waiter — pop them
+        // without touching the rest of the deque.
+        while excess > 0 {
+            let front_evictable = self
+                .terminal_order
+                .front()
+                .is_some_and(|old| !self.active_waits.contains_key(old));
+            if !front_evictable {
+                break;
+            }
+            let old = self.terminal_order.pop_front().unwrap();
+            self.states.remove(&old);
+            excess -= 1;
+        }
+        // Rare case: the front is actively waited on — scan past it.
+        if excess > 0 {
+            let mut kept = VecDeque::with_capacity(self.terminal_order.len());
+            for old in std::mem::take(&mut self.terminal_order) {
+                if excess > 0 && !self.active_waits.contains_key(&old) {
+                    self.states.remove(&old);
+                    excess -= 1;
+                } else {
+                    kept.push_back(old);
+                }
+            }
+            self.terminal_order = kept;
+        }
+    }
+}
+
 struct Inner {
     queue: Mutex<VecDeque<(JobId, JobSpec)>>,
-    states: Mutex<HashMap<JobId, JobState>>,
+    states: Mutex<StateStore>,
     /// Signals workers (new job / shutdown) and waiters (state change).
     cv: Condvar,
     state_cv: Condvar,
     shutdown: AtomicBool,
     next_id: AtomicU64,
     queue_cap: usize,
+    terminal_retention: usize,
+    /// Process-wide counters (shared with the public handle).
     pub metrics: Metrics,
 }
 
@@ -50,17 +121,34 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// Start a scheduler with `workers` threads and a queue bound.
+    /// Start a scheduler with `workers` threads and a queue bound
+    /// (terminal states retained per [`DEFAULT_TERMINAL_RETENTION`]).
     pub fn start(workers: usize, queue_cap: usize) -> Self {
+        Self::start_with_retention(workers, queue_cap, DEFAULT_TERMINAL_RETENTION)
+    }
+
+    /// [`Scheduler::start`] with an explicit terminal-state retention cap
+    /// (must be >= 1; tests use small values to exercise eviction).
+    pub fn start_with_retention(
+        workers: usize,
+        queue_cap: usize,
+        terminal_retention: usize,
+    ) -> Self {
         assert!(workers >= 1);
+        assert!(terminal_retention >= 1);
         let inner = Arc::new(Inner {
             queue: Mutex::new(VecDeque::new()),
-            states: Mutex::new(HashMap::new()),
+            states: Mutex::new(StateStore {
+                states: HashMap::new(),
+                terminal_order: VecDeque::new(),
+                active_waits: HashMap::new(),
+            }),
             cv: Condvar::new(),
             state_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
             queue_cap,
+            terminal_retention,
             metrics: Metrics::new(),
         });
         let handles = (0..workers)
@@ -86,7 +174,7 @@ impl Scheduler {
             return Err(SubmitError::QueueFull);
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::SeqCst);
-        self.inner.states.lock().unwrap().insert(id, JobState::Queued);
+        self.inner.states.lock().unwrap().states.insert(id, JobState::Queued);
         queue.push_back((id, spec));
         self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         drop(queue);
@@ -94,34 +182,53 @@ impl Scheduler {
         Ok(id)
     }
 
-    /// Snapshot of a job's state (`None` for unknown ids).
+    /// Snapshot of a job's state (`None` for unknown ids — never
+    /// submitted, or terminal long enough ago that retention evicted it).
     pub fn status(&self, id: JobId) -> Option<JobState> {
-        self.inner.states.lock().unwrap().get(&id).cloned()
+        self.inner.states.lock().unwrap().states.get(&id).cloned()
+    }
+
+    /// Number of job states currently retained (all lifecycle stages).
+    pub fn retained_states(&self) -> usize {
+        self.inner.states.lock().unwrap().states.len()
     }
 
     /// Block until the job is terminal (or `timeout` elapses). Returns the
-    /// final state if it terminated in time.
+    /// final state if it terminated in time. While a waiter is blocked
+    /// here, the job's terminal state is exempt from retention eviction,
+    /// so completing during the wait always hands the result over.
     pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobState> {
         let deadline = Instant::now() + timeout;
-        let mut states = self.inner.states.lock().unwrap();
-        loop {
-            match states.get(&id) {
-                None => return None,
-                Some(s) if s.is_terminal() => return Some(s.clone()),
+        let mut store = self.inner.states.lock().unwrap();
+        if !store.states.contains_key(&id) {
+            return None;
+        }
+        *store.active_waits.entry(id).or_insert(0) += 1;
+        let result = loop {
+            match store.states.get(&id) {
+                None => break None,
+                Some(s) if s.is_terminal() => break Some(s.clone()),
                 Some(_) => {
                     let now = Instant::now();
                     if now >= deadline {
-                        return states.get(&id).cloned();
+                        break store.states.get(&id).cloned();
                     }
                     let (guard, _) = self
                         .inner
                         .state_cv
-                        .wait_timeout(states, deadline - now)
+                        .wait_timeout(store, deadline - now)
                         .unwrap();
-                    states = guard;
+                    store = guard;
                 }
             }
+        };
+        match store.active_waits.get_mut(&id) {
+            Some(c) if *c > 1 => *c -= 1,
+            _ => {
+                store.active_waits.remove(&id);
+            }
         }
+        result
     }
 
     /// Number of queued (not yet running) jobs.
@@ -171,8 +278,8 @@ fn worker_loop(inner: &Inner) {
         let Some((id, spec)) = next else { return };
 
         {
-            let mut states = inner.states.lock().unwrap();
-            states.insert(id, JobState::Running);
+            let mut store = inner.states.lock().unwrap();
+            store.states.insert(id, JobState::Running);
         }
         inner.state_cv.notify_all();
 
@@ -181,28 +288,40 @@ fn worker_loop(inner: &Inner) {
         let elapsed = start.elapsed().as_secs_f64();
 
         let state = match result {
-            Ok(Ok(outcome)) => {
+            Ok(Ok(outcome)) => JobState::Done(Box::new(outcome)),
+            Ok(Err(msg)) => JobState::Failed(msg),
+            Err(panic) => JobState::Failed(panic_message(&*panic)),
+        };
+        let done = matches!(state, JobState::Done(_));
+        {
+            // State insert and counter increments share one critical
+            // section (insert first): a waiter that observed the terminal
+            // state can rely on the counters being updated, and a metrics
+            // poller that observed `completed + failed == N` can rely on
+            // all N terminal states having been inserted — the retention
+            // tests poll exactly this.
+            let mut store = inner.states.lock().unwrap();
+            store.insert_terminal(id, state, inner.terminal_retention);
+            if done {
                 inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
                 inner.metrics.record_solve_time(elapsed);
-                JobState::Done(Box::new(outcome))
-            }
-            Ok(Err(msg)) => {
+            } else {
                 inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                JobState::Failed(msg)
             }
-            Err(panic) => {
-                inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let msg = panic
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| panic.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "worker panicked".into());
-                JobState::Failed(format!("panic: {msg}"))
-            }
-        };
-        inner.states.lock().unwrap().insert(id, state);
+        }
         inner.state_cv.notify_all();
     }
+}
+
+/// Human-readable payload of a caught panic (shared by the worker loop
+/// and the server's synchronous registry path).
+pub(crate) fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    let msg = panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "worker panicked".into());
+    format!("panic: {msg}")
 }
 
 #[cfg(test)]
@@ -283,6 +402,58 @@ mod tests {
         assert!(s.status(999).is_none());
         assert!(s.wait(999, Duration::from_millis(10)).is_none());
         s.shutdown();
+    }
+
+    #[test]
+    fn terminal_states_are_bounded_by_retention() {
+        // Retention 4: after 12 sequential jobs only the 4 newest
+        // terminal states survive; older ids answer like unknown jobs.
+        // Drain by polling metrics rather than waiting on individual ids:
+        // with retention this small, a result can be evicted before a
+        // per-id wait gets scheduled (results are fetch-once — see the
+        // module docs).
+        let s = Scheduler::start_with_retention(1, 64, 4);
+        let ids: Vec<JobId> = (0..12).map(|i| s.submit(quick_spec(i)).unwrap()).collect();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let m = s.metrics();
+        while (m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed)) < 12 {
+            assert!(Instant::now() < deadline, "jobs did not finish in time");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(s.retained_states() <= 4, "retained {}", s.retained_states());
+        assert!(s.status(ids[0]).is_none(), "oldest terminal state must be evicted");
+        // One worker completes in FIFO order, so the newest id is the most
+        // recent terminal and must still be retained.
+        let newest = *ids.last().unwrap();
+        assert!(matches!(s.status(newest), Some(JobState::Done(_))));
+        s.shutdown();
+    }
+
+    #[test]
+    fn waiting_client_never_loses_result_to_retention() {
+        // Retention 1 and a pile of later jobs: the job a client is
+        // blocked in wait() on must survive eviction until observed.
+        let s = Arc::new(Scheduler::start_with_retention(1, 64, 1));
+        let a = s.submit(quick_spec(1)).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s2 = Arc::clone(&s);
+        let waiter = std::thread::spawn(move || {
+            tx.send(()).unwrap();
+            s2.wait(a, Duration::from_secs(60))
+        });
+        // Give the waiter time to register, then flood the retention
+        // window with newer terminals.
+        rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        for i in 0..6 {
+            s.submit(quick_spec(i + 2)).unwrap();
+        }
+        let state = waiter
+            .join()
+            .unwrap()
+            .expect("a waited-on result must not be evicted out from under the waiter");
+        assert!(state.is_terminal());
+        drop(s); // last handle: Drop shuts the workers down
     }
 
     #[test]

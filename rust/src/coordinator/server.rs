@@ -3,6 +3,7 @@
 
 use super::job::JobState;
 use super::protocol::{self, Request};
+use super::registry::{Registry, DEFAULT_BYTE_BUDGET};
 use super::scheduler::Scheduler;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
@@ -11,22 +12,41 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// The coordinator server. Owns the scheduler.
+/// How long the nonblocking accept loop sleeps between polls. Bounds both
+/// the shutdown latency (a `shutdown` command or stop-handle store is
+/// honored within one interval) and the idle-server wakeup rate; accepted
+/// connections are never delayed by it beyond one interval.
+pub const ACCEPT_POLL_INTERVAL: Duration = Duration::from_millis(10);
+
+/// The coordinator server. Owns the scheduler (async solve jobs) and the
+/// model registry (synchronous register/query/predict traffic).
 pub struct Server {
     scheduler: Arc<Scheduler>,
+    registry: Arc<Registry>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) with a
-    /// worker pool of the given size.
+    /// worker pool of the given size and the default registry byte budget.
     pub fn bind(addr: &str, workers: usize) -> std::io::Result<Self> {
+        Self::bind_with_budget(addr, workers, DEFAULT_BYTE_BUDGET)
+    }
+
+    /// [`Server::bind`] with an explicit model-registry byte budget (the
+    /// LRU eviction threshold across all registered models).
+    pub fn bind_with_budget(
+        addr: &str,
+        workers: usize,
+        model_byte_budget: usize,
+    ) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         // Poll for shutdown between accepts.
         listener.set_nonblocking(true)?;
         Ok(Self {
             scheduler: Arc::new(Scheduler::start(workers, 256)),
+            registry: Arc::new(Registry::new(model_byte_budget)),
             listener,
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -50,13 +70,14 @@ impl Server {
             match self.listener.accept() {
                 Ok((stream, _addr)) => {
                     let scheduler = Arc::clone(&self.scheduler);
+                    let registry = Arc::clone(&self.registry);
                     let stop = Arc::clone(&self.stop);
                     conns.push(std::thread::spawn(move || {
-                        handle_connection(stream, &scheduler, &stop);
+                        handle_connection(stream, &scheduler, &registry, &stop);
                     }));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(10));
+                    std::thread::sleep(ACCEPT_POLL_INTERVAL);
                 }
                 Err(_) => break,
             }
@@ -68,7 +89,12 @@ impl Server {
     }
 }
 
-fn handle_connection(stream: TcpStream, scheduler: &Scheduler, stop: &AtomicBool) {
+fn handle_connection(
+    stream: TcpStream,
+    scheduler: &Scheduler,
+    registry: &Registry,
+    stop: &AtomicBool,
+) {
     // Short read timeout so the thread re-checks the stop flag instead of
     // blocking forever on an idle client (run() joins these threads at
     // shutdown; an indefinite blocking read would deadlock the server).
@@ -102,7 +128,7 @@ fn handle_connection(stream: TcpStream, scheduler: &Scheduler, stop: &AtomicBool
         }
         let response = match protocol::decode(&request) {
             Err(e) => protocol::err(&e),
-            Ok(req) => respond(req, scheduler, stop),
+            Ok(req) => respond(req, scheduler, registry, stop),
         };
         if writer.write_all(response.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -113,13 +139,116 @@ fn handle_connection(stream: TcpStream, scheduler: &Scheduler, stop: &AtomicBool
     }
 }
 
-fn respond(req: Request, scheduler: &Scheduler, stop: &AtomicBool) -> String {
+/// Scheduler-style panic isolation for the synchronous registry path: a
+/// panicking solve (e.g. a factorization failing on pathological but
+/// wire-valid data) must produce a clean `{"ok":false}` — not a dead
+/// connection. Catching *inside* the session-lock scope also keeps the
+/// mutex unpoisoned (the unwind never crosses the guard), so the model
+/// stays usable afterwards.
+fn catch_panic<R>(f: impl FnOnce() -> Result<R, String>) -> Result<R, String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(panic) => Err(super::scheduler::panic_message(&*panic)),
+    }
+}
+
+fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &AtomicBool) -> String {
     match req {
         Request::Ping => protocol::ok(vec![("pong", Json::Bool(true))]),
         Request::Metrics => protocol::ok(vec![
             ("metrics", scheduler.metrics().to_json()),
             ("backlog", Json::from(scheduler.backlog())),
+            ("registry", registry.stats_json()),
         ]),
+        Request::Register { workload, kind, seed, name } => {
+            let name = name.unwrap_or_else(|| match &workload {
+                super::job::Workload::Synthetic { profile, n, d, .. } => {
+                    format!("{profile}-{n}x{d}")
+                }
+                super::job::Workload::Inline { a, .. } => {
+                    format!("inline-{}x{}", a.rows(), a.cols())
+                }
+            });
+            // materialize() can panic on shapes the generators assert on
+            // (e.g. non-power-of-two synthetic dims) — isolate like the
+            // scheduler's workers do.
+            match catch_panic(|| {
+                workload.materialize().and_then(|(a, b)| registry.register(name, a, b, kind, seed))
+            }) {
+                Ok(entry) => {
+                    let s = entry.session.lock().unwrap();
+                    protocol::ok(vec![
+                        ("model", Json::from(entry.id)),
+                        ("name", Json::from(entry.name.clone())),
+                        ("n", Json::from(s.n())),
+                        ("d", Json::from(s.d())),
+                        ("sketch", Json::from(s.kind().to_string())),
+                        ("bytes", Json::from(s.approx_bytes())),
+                    ])
+                }
+                Err(e) => protocol::err(&e),
+            }
+        }
+        Request::Query { model, nu, nus, eps, include_x, b } => {
+            let Some(entry) = registry.touch(model) else {
+                return protocol::err(&Registry::unknown(model));
+            };
+            let mut session = entry.session.lock().unwrap();
+            let outcome = if let Some(b) = b {
+                catch_panic(|| session.solve_rhs(nu, &b, eps)).map(|sol| {
+                    vec![("result", solution_json(nu, &sol, include_x))]
+                })
+            } else if !nus.is_empty() {
+                catch_panic(|| session.solve_path(&nus, eps)).map(|sols| {
+                    let points = nus
+                        .iter()
+                        .zip(&sols)
+                        .map(|(&nu, sol)| solution_json(nu, sol, include_x))
+                        .collect();
+                    vec![("path", Json::Arr(points))]
+                })
+            } else {
+                catch_panic(|| session.solve(nu, eps)).map(|sol| {
+                    vec![("result", solution_json(nu, &sol, include_x))]
+                })
+            };
+            // Byte accounting must see partial growth too: a path query
+            // that errors halfway (e.g. an unsorted nu) may already have
+            // grown the cached sketch on its solved points.
+            registry.note_query(&entry, &session);
+            match outcome {
+                Ok(mut fields) => {
+                    fields.insert(0, ("model", Json::from(model)));
+                    fields.push(("m", Json::from(session.m())));
+                    protocol::ok(fields)
+                }
+                Err(e) => protocol::err(&e),
+            }
+        }
+        Request::Predict { model, nu, rows, eps } => {
+            let Some(entry) = registry.touch(model) else {
+                return protocol::err(&Registry::unknown(model));
+            };
+            let mut session = entry.session.lock().unwrap();
+            let outcome = catch_panic(|| session.predict(nu, &rows, eps));
+            registry.note_query(&entry, &session);
+            match outcome {
+                Ok(y) => protocol::ok(vec![
+                    ("model", Json::from(model)),
+                    ("nu", Json::from(nu)),
+                    ("y", Json::Arr(y.into_iter().map(Json::from).collect())),
+                ]),
+                Err(e) => protocol::err(&e),
+            }
+        }
+        Request::Evict { model } => {
+            if registry.evict(model) {
+                protocol::ok(vec![("evicted", Json::from(model))])
+            } else {
+                protocol::err(&Registry::unknown(model))
+            }
+        }
+        Request::Models => protocol::ok(vec![("models", registry.models_json())]),
         Request::Solvers => {
             let entries = crate::solvers::api::registry()
                 .into_iter()
@@ -136,8 +265,10 @@ fn respond(req: Request, scheduler: &Scheduler, stop: &AtomicBool) -> String {
             stop.store(true, Ordering::SeqCst);
             protocol::ok(vec![("stopping", Json::Bool(true))])
         }
+        // Job ids are u64: encode them as such — `id as usize` would
+        // truncate above 2^32 on 32-bit targets.
         Request::Solve(spec) => match scheduler.submit(spec) {
-            Ok(id) => protocol::ok(vec![("job", Json::from(id as usize))]),
+            Ok(id) => protocol::ok(vec![("job", Json::from(id))]),
             Err(e) => protocol::err(&e.to_string()),
         },
         Request::Status { job } => match scheduler.status(job) {
@@ -155,6 +286,18 @@ fn respond(req: Request, scheduler: &Scheduler, stop: &AtomicBool) -> String {
             Some(state) => state_response(state, include_x),
         },
     }
+}
+
+/// One query result: `nu` + the usual report fields (+ `x` on request).
+/// Shares the job-outcome field encoding so `solve` and `query`
+/// responses stay field-compatible, without cloning the solution.
+fn solution_json(nu: f64, sol: &crate::solvers::Solution, include_x: bool) -> Json {
+    let mut fields = super::job::report_fields(&sol.report);
+    fields.push(("nu", Json::from(nu)));
+    if include_x {
+        fields.push(("x", Json::Arr(sol.x.iter().map(|&v| Json::from(v)).collect())));
+    }
+    Json::obj(fields)
 }
 
 fn state_response(state: JobState, include_x: bool) -> String {
@@ -178,6 +321,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Open a connection to a running coordinator.
     pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
@@ -252,6 +396,52 @@ mod tests {
         for (entry, spec) in listed.iter().zip(&registry) {
             assert_eq!(entry.get("spec").unwrap().as_str(), Some(spec.to_string().as_str()));
         }
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn register_query_predict_evict_over_tcp() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let reg = client
+            .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":3,"name":"t"}"#)
+            .unwrap();
+        assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+        let model = reg.get("model").unwrap().as_usize().unwrap();
+        assert_eq!(reg.get("n").unwrap().as_usize(), Some(128));
+
+        let q = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5,"include_x":true}}"#))
+            .unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true), "{q:?}");
+        let result = q.get("result").unwrap();
+        assert_eq!(result.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(result.get("x").unwrap().as_arr().unwrap().len(), 16);
+
+        let p = client
+            .call(&format!(
+                r#"{{"cmd":"predict","model":{model},"nu":0.5,"rows":[{:?}]}}"#,
+                vec![0.5f64; 16]
+            ))
+            .unwrap();
+        assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+        assert_eq!(p.get("y").unwrap().as_arr().unwrap().len(), 1);
+
+        let listing = client.call(r#"{"cmd":"models"}"#).unwrap();
+        assert_eq!(listing.get("models").unwrap().as_arr().unwrap().len(), 1);
+
+        let ev = client.call(&format!(r#"{{"cmd":"evict","model":{model}}}"#)).unwrap();
+        assert_eq!(ev.get("ok").unwrap().as_bool(), Some(true));
+        let gone = client.call(&format!(r#"{{"cmd":"query","model":{model},"nu":1.0}}"#)).unwrap();
+        assert_eq!(gone.get("ok").unwrap().as_bool(), Some(false));
+        assert!(gone.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+
+        let metrics = client.call(r#"{"cmd":"metrics"}"#).unwrap();
+        let reg_stats = metrics.get("registry").unwrap();
+        assert_eq!(reg_stats.get("registered").unwrap().as_usize(), Some(1));
+        assert_eq!(reg_stats.get("evicted").unwrap().as_usize(), Some(1));
+
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();
     }

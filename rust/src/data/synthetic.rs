@@ -65,10 +65,12 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Row count `n`.
     pub fn n(&self) -> usize {
         self.a.rows()
     }
 
+    /// Column count `d`.
     pub fn d(&self) -> usize {
         self.a.cols()
     }

@@ -121,14 +121,37 @@
 //! * [`runtime`] — PJRT executor for AOT-compiled JAX/Pallas artifacts plus
 //!   a shape-generic native backend.
 //! * [`coordinator`] — the L3 service: job scheduler, solve state machine,
-//!   metrics, TCP server speaking line-delimited JSON.
+//!   model registry with cross-request sketch/factorization reuse,
+//!   metrics, TCP server speaking line-delimited JSON (wire reference:
+//!   `PROTOCOL.md`, rendered as [`coordinator::protocol_doc`]).
 //! * [`bench_harness`] — regenerates every figure/table of the paper.
+//!
+//! ## Serving: register once, query many times
+//!
+//! [`solvers::session::ModelSession`] keeps the grown sketch, the
+//! Woodbury/Cholesky factors and the last solution alive *between*
+//! solves: a repeat solve at a new `nu` applies no sketch at all
+//! (`sketch_time_s == 0.0`) and warm-starts from the previous solution.
+//! The coordinator's [`coordinator::registry::Registry`] exposes this
+//! over the wire (`register` / `query` / `predict` / `evict`) with LRU
+//! byte-budget eviction — see `README.md` (rendered as [`readme`]) and
+//! `PROTOCOL.md` for the walkthrough.
 
 // Index-based loops are the house style for the dense kernels (indices
 // frequently address two or three buffers in lockstep, and the explicit
 // form mirrors the Pallas kernels this crate shadows); div_ceil is avoided
 // to hold the 1.70 MSRV.
 #![allow(clippy::needless_range_loop, clippy::manual_div_ceil)]
+// Docs are a first-class surface: every public item documents itself, and
+// CI builds rustdoc with warnings denied (broken links included).
+#![warn(missing_docs)]
+
+/// Rendered copy of the repository's top-level `README.md`: project
+/// overview, paper → module mapping, architecture diagram, the
+/// `SolverSpec` grammar, quickstart, and the registry/serving
+/// walkthrough.
+#[doc = include_str!("../../README.md")]
+pub mod readme {}
 
 pub mod bench_harness;
 pub mod coordinator;

@@ -67,22 +67,26 @@ impl Matrix {
         m
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element `(i, j)` (bounds-checked in debug builds only).
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Set element `(i, j)` (bounds-checked in debug builds only).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);

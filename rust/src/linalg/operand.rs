@@ -21,14 +21,18 @@ use std::borrow::Cow;
 /// Owned data matrix: dense row-major or CSR.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Operand {
+    /// Dense row-major storage.
     Dense(Matrix),
+    /// Compressed sparse row storage.
     Sparse(CsrMatrix),
 }
 
 /// Borrowed view of an [`Operand`] (or of a bare `Matrix` / `CsrMatrix`).
 #[derive(Clone, Copy)]
 pub enum OperandRef<'a> {
+    /// Borrowed dense matrix.
     Dense(&'a Matrix),
+    /// Borrowed CSR matrix.
     Sparse(&'a CsrMatrix),
 }
 
@@ -71,10 +75,12 @@ impl Operand {
         }
     }
 
+    /// Row count `n`.
     pub fn rows(&self) -> usize {
         self.as_ref().rows()
     }
 
+    /// Column count `d`.
     pub fn cols(&self) -> usize {
         self.as_ref().cols()
     }
@@ -89,6 +95,7 @@ impl Operand {
         self.as_ref().density()
     }
 
+    /// Whether this operand uses CSR storage.
     pub fn is_sparse(&self) -> bool {
         matches!(self, Operand::Sparse(_))
     }
@@ -103,6 +110,7 @@ impl Operand {
         }
     }
 
+    /// The dense matrix, if this operand is dense.
     pub fn as_dense(&self) -> Option<&Matrix> {
         match self {
             Operand::Dense(m) => Some(m),
@@ -110,6 +118,7 @@ impl Operand {
         }
     }
 
+    /// The CSR matrix, if this operand is sparse.
     pub fn as_csr(&self) -> Option<&CsrMatrix> {
         match self {
             Operand::Dense(_) => None,
@@ -125,22 +134,27 @@ impl Operand {
         }
     }
 
+    /// `A x` (`O(nd)` dense, `O(nnz)` CSR).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         self.as_ref().matvec(x)
     }
 
+    /// `A^T x`.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         self.as_ref().matvec_t(x)
     }
 
+    /// `y = A x` into a caller buffer.
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         self.as_ref().matvec_into(x, y)
     }
 
+    /// `y = A^T x` into a caller buffer.
     pub fn matvec_t_into(&self, x: &[f64], y: &mut [f64]) {
         self.as_ref().matvec_t_into(x, y)
     }
 
+    /// `y += A^T x`.
     pub fn matvec_t_add(&self, x: &[f64], y: &mut [f64]) {
         self.as_ref().matvec_t_add(x, y)
     }
@@ -157,6 +171,7 @@ impl Operand {
 }
 
 impl<'a> OperandRef<'a> {
+    /// Row count `n`.
     pub fn rows(&self) -> usize {
         match self {
             OperandRef::Dense(m) => m.rows(),
@@ -164,6 +179,7 @@ impl<'a> OperandRef<'a> {
         }
     }
 
+    /// Column count `d`.
     pub fn cols(&self) -> usize {
         match self {
             OperandRef::Dense(m) => m.cols(),
@@ -187,6 +203,7 @@ impl<'a> OperandRef<'a> {
         }
     }
 
+    /// Whether the viewed operand uses CSR storage.
     pub fn is_sparse(&self) -> bool {
         matches!(self, OperandRef::Sparse(_))
     }
@@ -199,6 +216,7 @@ impl<'a> OperandRef<'a> {
         }
     }
 
+    /// `A x` (allocating wrapper around [`OperandRef::matvec_into`]).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.rows()];
         self.matvec_into(x, &mut y);
@@ -221,6 +239,7 @@ impl<'a> OperandRef<'a> {
         }
     }
 
+    /// `A^T x` (allocating wrapper around [`OperandRef::matvec_t_add`]).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.cols()];
         self.matvec_t_add(x, &mut y);

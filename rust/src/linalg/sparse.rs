@@ -87,10 +87,12 @@ impl CsrMatrix {
         Self { rows, cols, indptr, indices, values }
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }

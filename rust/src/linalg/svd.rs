@@ -15,8 +15,11 @@ use super::{dot, norm2};
 /// `k = min(m, n)`, singular values descending.
 #[derive(Clone, Debug)]
 pub struct Svd {
+    /// Left singular vectors, `m x k`.
     pub u: Matrix,
+    /// Singular values, descending.
     pub s: Vec<f64>,
+    /// Right singular vectors transposed, `k x n`.
     pub vt: Matrix,
 }
 

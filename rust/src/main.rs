@@ -5,11 +5,22 @@
 //!                --solver adaptive-srht --eps 1e-8 --seed 7
 //! effdim path    --profile exp --n 1024 --d 128 --nus 1e2,1e1,1,0.1 \
 //!                --solver adaptive-srht --eps 1e-8
-//! effdim serve   --addr 127.0.0.1:7199 --workers 2
+//! effdim serve   --addr 127.0.0.1:7199 --workers 2 --model-budget-mb 512
 //! effdim request --addr 127.0.0.1:7199 --json '{"cmd":"ping"}'
+//! effdim client register --addr 127.0.0.1:7199 --profile exp --n 4096 --d 256 \
+//!                --sketch srht --name exp-4k
+//! effdim client query   --addr 127.0.0.1:7199 --model 1 --nu 0.5 --include-x
+//! effdim client query   --addr 127.0.0.1:7199 --model 1 --nus 10,1,0.1
+//! effdim client predict --addr 127.0.0.1:7199 --model 1 --nu 0.5 --row 0.1,0.2,...
+//! effdim client evict   --addr 127.0.0.1:7199 --model 1
+//! effdim client models  --addr 127.0.0.1:7199
 //! effdim info    --profile cifar-like --n 1024 --d 128 --nu 1.0
 //! effdim solvers
 //! ```
+//!
+//! `effdim client` builds registry requests (see `PROTOCOL.md`) from
+//! flags: register a problem once, then issue many cheap queries that
+//! reuse the server-side cached sketch/factorization state.
 //!
 //! Every `--solver` value is a spec string parsed by
 //! [`SolverSpec`](effdim::solvers::SolverSpec) with the grammar
@@ -44,8 +55,13 @@ use effdim::linalg::Operand;
 use effdim::solvers::path::run_path;
 use effdim::solvers::{Solver as _, SolverSpec};
 use effdim::util::cli::Args;
+use effdim::util::json::Json;
 
-const USAGE: &str = "usage: effdim <solve|path|serve|request|info|solvers> [--flags]
+const USAGE: &str = "usage: effdim <solve|path|serve|request|client|info|solvers> [--flags]
+  client <register|query|predict|evict|models> drives a server's model
+    registry: --model id, --nu x | --nus a,b,c, --eps x, --include-x,
+    --sketch gaussian|srht|sparse, --name s, --row v1,v2,... (predict);
+    register accepts the same workload flags as solve (--profile/--data)
   --solver takes a spec string: name[@key=value,...]
     names : direct | cg | pcg-<kind> | ihs-<kind> | polyak-ihs-<kind>
             | adaptive-<kind> | adaptive-gd-<kind> | dual-adaptive-<kind>
@@ -68,6 +84,7 @@ fn main() {
         Some("path") => cmd_path(&args),
         Some("serve") => cmd_serve(&args),
         Some("request") => cmd_request(&args),
+        Some("client") => cmd_client(&args),
         Some("info") => cmd_info(&args),
         Some("solvers") => cmd_solvers(),
         _ => {
@@ -161,7 +178,10 @@ fn cmd_solve(args: &Args) -> i32 {
         },
         eps: args.get_f64("eps", 1e-8),
         seed: args.get_u64("seed", 1),
-        path_nus: args.get_f64_list("path-nus", &[]),
+        path_nus: match strict_f64_list(args, "path-nus") {
+            Ok(nus) => nus.unwrap_or_default(),
+            Err(code) => return code,
+        },
         threads: match threads_flag(args) {
             Ok(t) => t,
             Err(code) => return code,
@@ -255,7 +275,10 @@ fn cmd_path(args: &Args) -> i32 {
             }
         }
     };
-    let nus = args.get_f64_list("nus", &[100.0, 10.0, 1.0, 0.1, 0.01]);
+    let nus = match strict_f64_list(args, "nus") {
+        Ok(nus) => nus.unwrap_or_else(|| vec![100.0, 10.0, 1.0, 0.1, 0.01]),
+        Err(code) => return code,
+    };
     let spec = match parse_solver(args, "adaptive-srht") {
         Ok(s) => s,
         Err(code) => return code,
@@ -294,7 +317,14 @@ fn cmd_path(args: &Args) -> i32 {
 fn cmd_serve(args: &Args) -> i32 {
     let addr = args.get_or("addr", "127.0.0.1:7199");
     let workers = args.get_usize("workers", 2);
-    match Server::bind(addr, workers) {
+    // Model-registry byte budget (LRU eviction threshold), in MiB.
+    // Saturating: an absurd flag value caps at usize::MAX bytes instead
+    // of overflowing the shift into a tiny (evict-everything) budget.
+    let budget_mb = args.get_usize(
+        "model-budget-mb",
+        effdim::coordinator::registry::DEFAULT_BYTE_BUDGET >> 20,
+    );
+    match Server::bind_with_budget(addr, workers, budget_mb.saturating_mul(1 << 20)) {
         Ok(server) => {
             println!("effdim coordinator listening on {}", server.local_addr());
             server.run();
@@ -306,6 +336,154 @@ fn cmd_serve(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `effdim client <register|query|predict|evict|models>` — build a model-
+/// registry request (PROTOCOL.md) from flags, send it, print the JSON
+/// response. Exit code 1 when the server answered `"ok":false`.
+fn cmd_client(args: &Args) -> i32 {
+    let action = ["register", "query", "predict", "evict", "models"]
+        .into_iter()
+        .find(|a| args.has(a));
+    let Some(action) = action else {
+        eprintln!("client needs one of: register | query | predict | evict | models");
+        eprintln!("{USAGE}");
+        return 2;
+    };
+    let payload = match build_client_request(args, action) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7199");
+    let addr: std::net::SocketAddr = match addr.parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad addr {addr}: {e}");
+            return 2;
+        }
+    };
+    match Client::connect(addr) {
+        Ok(mut client) => match client.call(&payload) {
+            Ok(resp) => {
+                println!("{}", resp.to_string());
+                if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                    0
+                } else {
+                    1
+                }
+            }
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            1
+        }
+    }
+}
+
+/// Strict comma-list parse for values that go on the wire: any
+/// unparseable or non-finite entry is a usage error (the server-side
+/// decoder is strict too — a silently shortened list would change the
+/// request's meaning, e.g. a dropped path point or a shorter predict
+/// row). Returns `None` when the flag is absent.
+fn strict_f64_list(args: &Args, key: &str) -> Result<Option<Vec<f64>>, i32> {
+    let Some(raw) = args.get(key) else { return Ok(None) };
+    let mut out = Vec::new();
+    for tok in raw.split(',') {
+        match tok.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() => out.push(v),
+            _ => {
+                eprintln!("--{key} has a bad entry {:?} (want comma-separated numbers)", tok.trim());
+                return Err(2);
+            }
+        }
+    }
+    Ok(Some(out))
+}
+
+/// Assemble the JSON line for one client action.
+fn build_client_request(args: &Args, action: &str) -> Result<String, i32> {
+    let mut fields: Vec<(&str, Json)> = vec![("cmd", Json::from(action))];
+    let model = || {
+        args.get("model").and_then(|v| v.trim().parse::<u64>().ok()).ok_or_else(|| {
+            eprintln!("--model <id> is required (from a register response)");
+            2
+        })
+    };
+    match action {
+        "register" => {
+            match workload_from(args)? {
+                Workload::Synthetic { profile, n, d, seed } => {
+                    fields.push(("profile", Json::from(profile)));
+                    fields.push(("n", Json::from(n)));
+                    fields.push(("d", Json::from(d)));
+                    fields.push(("seed", Json::from(seed)));
+                }
+                Workload::Inline { a, b } => {
+                    // Re-encode a --data triplet file as the inline CSR
+                    // payload the wire protocol accepts.
+                    let c = a.as_csr().expect("--data loads CSR");
+                    let mut trips = Vec::with_capacity(c.nnz());
+                    for i in 0..c.rows() {
+                        let (cols, vals) = c.row(i);
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            trips.push(Json::Arr(vec![
+                                Json::from(i),
+                                Json::from(j as usize),
+                                Json::from(v),
+                            ]));
+                        }
+                    }
+                    fields.push(("rows", Json::from(a.rows())));
+                    fields.push(("cols", Json::from(a.cols())));
+                    fields.push(("triplets", Json::Arr(trips)));
+                    fields.push(("b", Json::Arr(b.iter().map(|&v| Json::from(v)).collect())));
+                    // Inline workloads carry no seed of their own, but the
+                    // model's sketch stream still needs one.
+                    fields.push(("seed", Json::from(args.get_u64("seed", 0))));
+                }
+            }
+            if let Some(kind) = args.get("sketch") {
+                fields.push(("sketch", Json::from(kind)));
+            }
+            if let Some(name) = args.get("name") {
+                fields.push(("name", Json::from(name)));
+            }
+        }
+        "query" => {
+            fields.push(("model", Json::from(model()?)));
+            match strict_f64_list(args, "nus")? {
+                Some(nus) if !nus.is_empty() => {
+                    fields.push(("nus", Json::Arr(nus.into_iter().map(Json::from).collect())));
+                }
+                _ => fields.push(("nu", Json::from(args.get_f64("nu", 1.0)))),
+            }
+            fields.push(("eps", Json::from(args.get_f64("eps", 1e-8))));
+            if args.has("include-x") {
+                fields.push(("include_x", Json::from(true)));
+            }
+        }
+        "predict" => {
+            fields.push(("model", Json::from(model()?)));
+            fields.push(("nu", Json::from(args.get_f64("nu", 1.0))));
+            fields.push(("eps", Json::from(args.get_f64("eps", 1e-8))));
+            let Some(row) = strict_f64_list(args, "row")? else {
+                eprintln!("--row v1,v2,... is required for predict");
+                return Err(2);
+            };
+            fields.push((
+                "rows",
+                Json::Arr(vec![Json::Arr(row.into_iter().map(Json::from).collect())]),
+            ));
+        }
+        "evict" => fields.push(("model", Json::from(model()?))),
+        "models" => {}
+        _ => unreachable!("validated above"),
+    }
+    Ok(Json::obj(fields).to_string())
 }
 
 fn cmd_request(args: &Args) -> i32 {

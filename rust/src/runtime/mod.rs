@@ -27,6 +27,7 @@ pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
 
 /// A gradient oracle: computes `∇f(x) = A^T A x + nu^2 x - A^T b`.
 pub trait GradientOracle {
+    /// Evaluate the gradient at `x`.
     fn gradient(&self, x: &[f64]) -> Vec<f64>;
     /// Human-readable backend label for reports.
     fn backend(&self) -> &'static str;

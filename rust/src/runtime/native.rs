@@ -10,6 +10,7 @@ pub struct NativeGradient<'p> {
 }
 
 impl<'p> NativeGradient<'p> {
+    /// Wrap a problem's gradient as an oracle.
     pub fn new(problem: &'p RidgeProblem) -> Self {
         Self { problem }
     }

@@ -21,13 +21,18 @@ use std::path::{Path, PathBuf};
 /// Parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactManifest {
+    /// Problem rows the artifacts were compiled for.
     pub n: usize,
+    /// Problem columns the artifacts were compiled for.
     pub d: usize,
+    /// Sketch sizes with a compiled artifact.
     pub m_list: Vec<usize>,
+    /// Artifact file names, parallel to `m_list`.
     pub artifacts: Vec<String>,
 }
 
 impl ArtifactManifest {
+    /// Parse the manifest JSON (see `python/` for the generator).
     pub fn parse(text: &str) -> Result<Self, String> {
         let v = json::parse(text).map_err(|e| e.to_string())?;
         let n = v.get("n").and_then(Json::as_usize).ok_or("manifest missing n")?;
@@ -58,6 +63,7 @@ impl ArtifactManifest {
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The artifact manifest loaded from the directory.
     pub manifest: ArtifactManifest,
 }
 

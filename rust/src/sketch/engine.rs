@@ -265,6 +265,26 @@ impl SketchEngine {
         &self.sa
     }
 
+    /// Approximate heap footprint in bytes: the applied sketch `S̃A` plus
+    /// the per-family growth state (SRHT's cached FWHT work buffer is the
+    /// dominant term, `ñ x d`). Used by registry byte budgets; excludes
+    /// the problem operand itself, which the engine never owns.
+    pub fn approx_bytes(&self) -> usize {
+        let f64s = std::mem::size_of::<f64>();
+        let mat = |m: &Matrix| m.rows() * m.cols() * f64s;
+        let state = match &self.state {
+            State::Gaussian { draws } => draws.len() * (std::mem::size_of::<Xoshiro256>() + 8),
+            State::Srht { signs, work, order, .. } => {
+                signs.len() * f64s + mat(work) + order.len() * std::mem::size_of::<usize>()
+            }
+            State::Sparse { blocks } => blocks
+                .iter()
+                .map(|b| b.hash.len() * 4 + b.signs.len() * f64s)
+                .sum(),
+        };
+        mat(&self.sa) + state
+    }
+
     /// Normalization of the effective embedding `scale * S̃`:
     /// `1/sqrt(m)` for every family (sparse blocks carry their
     /// `sqrt(m_i)` size weight in the stored rows).

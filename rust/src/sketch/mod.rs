@@ -42,8 +42,11 @@ use crate::rng::Xoshiro256;
 /// plus the sparse extension.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SketchKind {
+    /// i.i.d. `N(0, 1/m)` entries (§3.1, Theorem 3).
     Gaussian,
+    /// Subsampled Randomized Hadamard Transform (§3.2, Theorem 4).
     Srht,
+    /// CountSketch / SJLT (Remark 4.1).
     Sparse,
 }
 

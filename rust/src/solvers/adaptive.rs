@@ -39,6 +39,54 @@ use crate::theory::rates::IhsParams;
 use crate::theory::{gaussian_bounds, srht_bounds};
 use std::time::Instant;
 
+/// Reusable sketch/factorization state extracted from a finished
+/// [`AdaptiveSolver`] run and fed back into the next one
+/// ([`AdaptiveSolver::resume`]).
+///
+/// The sketch rows of `S̃A` depend only on `(A, seed)` — not on `nu` or
+/// `b` — so a session that solves the *same* data at many regularization
+/// levels (or right-hand sides) can keep the grown [`SketchEngine`] and
+/// the [`WoodburyCache`] alive across solves: a resumed solve performs
+/// **zero** sketch application (its `SolveReport::sketch_time_s` stays
+/// exactly `0.0` unless the new problem forces further growth) and pays
+/// only an `O(m^3)` / `O(d^3)` re-factor via [`WoodburyCache::set_nu`]
+/// when `nu` changed. This is the state behind
+/// [`crate::solvers::session::ModelSession`] and the coordinator's model
+/// registry; the observation that one sketch-based preconditioner stays
+/// valid across regularization levels is Lacotte & Pilanci's
+/// adaptive-preconditioning follow-up (arXiv:2104.14101).
+pub struct AdaptiveSessionState {
+    /// Incremental sketch state; `None` once growth hit the cap (the
+    /// cache then holds the exact Hessian — see
+    /// [`AdaptiveSolver::step`]).
+    engine: Option<SketchEngine>,
+    /// Factorization of the sketched Hessian at the *last solved* `nu`;
+    /// re-keyed cheaply on resume.
+    cache: WoodburyCache,
+    /// RNG mid-stream, so future growth rows continue the same draw
+    /// sequence a single uninterrupted solve would have used.
+    rng: Xoshiro256,
+}
+
+impl AdaptiveSessionState {
+    /// Current sketch size `m` (the row count future solves start from).
+    pub fn m(&self) -> usize {
+        self.cache.m()
+    }
+
+    /// Whether growth already hit the `next_pow2(n)` cap (the cache holds
+    /// the exact Hessian; no engine is retained).
+    pub fn at_cap(&self) -> bool {
+        self.engine.is_none()
+    }
+
+    /// Approximate heap footprint in bytes (engine buffers + cached
+    /// factorization) — what registries charge against their byte budget.
+    pub fn approx_bytes(&self) -> usize {
+        self.engine.as_ref().map_or(0, SketchEngine::approx_bytes) + self.cache.approx_bytes()
+    }
+}
+
 /// Which candidate schedule Algorithm 1 runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdaptiveVariant {
@@ -53,7 +101,9 @@ pub enum AdaptiveVariant {
 /// [`crate::solvers::api::Solver`] call.
 #[derive(Clone, Debug)]
 pub struct AdaptiveConfig {
+    /// Sketch family to grow.
     pub kind: SketchKind,
+    /// Candidate schedule (Polyak-first or gradient-only).
     pub variant: AdaptiveVariant,
     /// Initial sketch size (paper default: 1).
     pub m_initial: usize,
@@ -64,6 +114,7 @@ pub struct AdaptiveConfig {
     pub eta: f64,
     /// Growth factor applied on rejection (paper: 2).
     pub growth: usize,
+    /// Accepted-iteration cap (safety net; the stop rule fires first).
     pub max_iters: usize,
 }
 
@@ -121,7 +172,14 @@ pub struct AdaptiveSolver<'p> {
     /// growing past n stops helping).
     m_cap: usize,
 
+    /// When construction began — [`AdaptiveSolver::run`]'s wall clock
+    /// starts here so the constructor's sketch/factor phases (including a
+    /// resume's `set_nu` refactor) are inside the reported wall time and
+    /// `iter_time_s = wall - sketch - factor` cannot go negative.
+    created: Instant,
+
     // Iteration state.
+    /// Current sketch size (monotone nondecreasing across the solve).
     pub m: usize,
     /// Incremental sketch state; dropped once `m` hits the cap (the cache
     /// then holds the exact Hessian and no further growth is possible).
@@ -140,6 +198,7 @@ pub struct AdaptiveSolver<'p> {
     r_1: f64,
     t: usize,
 
+    /// Work/time breakdown, updated as the solve progresses.
     pub report: SolveReport,
 }
 
@@ -153,13 +212,47 @@ impl<'p> AdaptiveSolver<'p> {
         stop: StopRule,
         seed: u64,
     ) -> Self {
+        Self::build(problem, x0, config, stop, None, Xoshiro256::seed_from_u64(seed))
+    }
+
+    /// Initialize from a previous run's [`AdaptiveSessionState`]: the grown
+    /// sketch rows are reused verbatim (no sketch application at all) and
+    /// the cached factorization is re-keyed to the new problem's `nu`
+    /// ([`WoodburyCache::set_nu`], `O(m^3)`/`O(d^3)` from the cached Gram).
+    /// The problem must be the *same data* the state was built on (same
+    /// `n`; callers are responsible for not mixing operands) and the config
+    /// must request the same sketch family.
+    pub fn resume(
+        problem: &'p RidgeProblem,
+        x0: &[f64],
+        config: AdaptiveConfig,
+        stop: StopRule,
+        state: AdaptiveSessionState,
+    ) -> Self {
+        let AdaptiveSessionState { engine, cache, rng } = state;
+        if let Some(e) = &engine {
+            assert_eq!(e.kind(), config.kind, "resume: sketch family changed");
+            assert_eq!(e.n(), problem.n(), "resume: problem shape changed");
+            assert_eq!(e.m(), cache.m(), "resume: engine/cache row counts diverged");
+        }
+        assert_eq!(cache.d(), problem.d(), "resume: problem shape changed");
+        Self::build(problem, x0, config, stop, Some((engine, cache)), rng)
+    }
+
+    fn build(
+        problem: &'p RidgeProblem,
+        x0: &[f64],
+        config: AdaptiveConfig,
+        stop: StopRule,
+        resume: Option<(Option<SketchEngine>, WoodburyCache)>,
+        mut rng: Xoshiro256,
+    ) -> Self {
+        let created = Instant::now();
         let d = problem.d();
         assert_eq!(x0.len(), d);
         assert!(config.m_initial >= 1 && config.growth >= 2);
         let params = config.params();
-        let mut rng = Xoshiro256::seed_from_u64(seed);
         let m_cap = crate::sketch::srht::next_pow2(problem.n());
-        let m = config.m_initial.min(m_cap);
 
         // Canonical spec-string labels (see `solvers::api`): the Polyak
         // variant is the default and carries no infix.
@@ -169,13 +262,31 @@ impl<'p> AdaptiveSolver<'p> {
         });
         report.m_trace.reserve(config.max_iters.min(65_536));
 
-        let t0 = Instant::now();
-        let engine = SketchEngine::new(config.kind, m, &problem.a, &mut rng);
-        report.sketch_time_s += t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
-        let cache =
-            WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), problem.nu, engine.scale());
-        report.factor_time_s += t0.elapsed().as_secs_f64();
+        let (m, engine, cache) = match resume {
+            Some((engine, mut cache)) => {
+                // Session resume: zero sketch work. Only the factorization
+                // is re-keyed when nu changed (a no-op otherwise).
+                let m = engine.as_ref().map_or(m_cap, SketchEngine::m);
+                let t0 = Instant::now();
+                cache.set_nu(problem.nu);
+                report.factor_time_s += t0.elapsed().as_secs_f64();
+                (m, engine, cache)
+            }
+            None => {
+                let m = config.m_initial.min(m_cap);
+                let t0 = Instant::now();
+                let engine = SketchEngine::new(config.kind, m, &*problem.a, &mut rng);
+                report.sketch_time_s += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let cache = WoodburyCache::new_scaled(
+                    engine.sa_unnormalized().clone(),
+                    problem.nu,
+                    engine.scale(),
+                );
+                report.factor_time_s += t0.elapsed().as_secs_f64();
+                (m, Some(engine), cache)
+            }
+        };
 
         // Native oracle: gradient_into with its own length-n scratch,
         // allocation-free after the first call.
@@ -205,8 +316,9 @@ impl<'p> AdaptiveSolver<'p> {
             rng,
             grad_fn,
             m_cap,
+            created,
             m,
-            engine: Some(engine),
+            engine,
             cache,
             x_prev: x.clone(),
             x,
@@ -285,7 +397,7 @@ impl<'p> AdaptiveSolver<'p> {
         } else {
             let engine = self.engine.as_mut().expect("engine lives until the cap");
             let t0 = Instant::now();
-            let new_rows = engine.grow(new_m, &self.problem.a, &mut self.rng);
+            let new_rows = engine.grow(new_m, &*self.problem.a, &mut self.rng);
             self.report.sketch_time_s += t0.elapsed().as_secs_f64();
             let t0 = Instant::now();
             self.cache.grow(&new_rows, engine.scale());
@@ -375,7 +487,22 @@ impl<'p> AdaptiveSolver<'p> {
 
     /// Run to completion under the stop rule given at construction.
     pub fn run(mut self) -> Solution {
-        let start = Instant::now();
+        self.run_inner();
+        Solution { x: self.x, report: self.report }
+    }
+
+    /// Like [`AdaptiveSolver::run`], additionally handing back the
+    /// [`AdaptiveSessionState`] (grown sketch + factorization + RNG) so the
+    /// next solve on the same data can [`AdaptiveSolver::resume`] instead
+    /// of re-sketching from scratch.
+    pub fn run_with_state(mut self) -> (Solution, AdaptiveSessionState) {
+        self.run_inner();
+        let state =
+            AdaptiveSessionState { engine: self.engine, cache: self.cache, rng: self.rng };
+        (Solution { x: self.x, report: self.report }, state)
+    }
+
+    fn run_inner(&mut self) {
         let g0_norm = norm2(&self.g);
         // Stop-rule scratch, reused across iterations.
         let mut ws_d: Vec<f64> = Vec::new();
@@ -420,10 +547,11 @@ impl<'p> AdaptiveSolver<'p> {
                 self.report.converged = true;
             }
         }
-        let total = start.elapsed().as_secs_f64();
+        // Wall time is measured from construction so the initial (or
+        // resumed) sketch/factor phases are included — see `created`.
+        let total = self.created.elapsed().as_secs_f64();
         self.report.wall_time_s = total;
         self.report.iter_time_s = total - self.report.sketch_time_s - self.report.factor_time_s;
-        Solution { x: self.x, report: self.report }
     }
 }
 
@@ -561,5 +689,37 @@ mod tests {
         let s2 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77);
         assert_eq!(s1.x, s2.x);
         assert_eq!(s1.report.iterations, s2.report.iterations);
+    }
+
+    #[test]
+    fn resume_reuses_sketch_across_nu() {
+        // Solve at nu = 0.3 (grows the sketch), hand the state to a solve
+        // at nu = 1.0 on the same data: the resumed run must converge with
+        // zero sketch time, no growth, and the same m.
+        let ds = crate::data::synthetic::exponential_decay(256, 32, 20);
+        let p1 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 0.3);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let stop1 = stop_for(&p1, 1e-9);
+        let solver = AdaptiveSolver::new(&p1, &vec![0.0; 32], cfg.clone(), stop1, 21);
+        let (sol1, state) = solver.run_with_state();
+        assert!(sol1.report.converged);
+        let m1 = state.m();
+        assert!(!state.at_cap());
+        assert!(state.approx_bytes() > 0);
+
+        let p2 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 1.0);
+        let stop2 = stop_for(&p2, 1e-9);
+        let resumed = AdaptiveSolver::resume(&p2, &sol1.x, cfg, stop2, state);
+        let (sol2, state2) = resumed.run_with_state();
+        assert!(sol2.report.converged);
+        assert_eq!(sol2.report.sketch_time_s, 0.0, "resume must not re-sketch");
+        assert_eq!(sol2.report.doublings, 0);
+        assert_eq!(state2.m(), m1);
+
+        // And the resumed solution is the true optimum at nu = 1.0.
+        let x_star = direct::solve(&p2);
+        let rel = p2.prediction_error(&sol2.x, &x_star)
+            / p2.prediction_error(&vec![0.0; 32], &x_star);
+        assert!(rel < 1e-8, "relative error {rel}");
     }
 }

@@ -601,7 +601,7 @@ impl Solver for DualAdaptiveSolver {
             .as_ref()
             .expect("dual solver needs raw observations b")
             .clone();
-        let dr = DualRidge::new(problem.a.clone(), b, problem.nu);
+        let dr = DualRidge::new_shared(std::sync::Arc::clone(&problem.a), b, problem.nu);
         // Translate the primal stop rule into the dual space: the paper's
         // TrueError criterion needs the dual optimum (one n x n direct
         // solve); the incoming primal `x_star` is never consulted — only

@@ -14,6 +14,7 @@ use std::time::Instant;
 /// call.
 #[derive(Clone, Debug)]
 pub struct CgConfig {
+    /// Iteration cap (safety net; the stop rule fires first).
     pub max_iters: usize,
 }
 

@@ -11,14 +11,15 @@
 use super::adaptive::{self, AdaptiveConfig};
 use super::{RidgeProblem, Solution, StopRule};
 use crate::linalg::{Operand, OperandRef};
+use std::sync::Arc;
 
 /// An underdetermined ridge instance (`d >= n`) and its dual reduction.
 pub struct DualRidge {
     /// The dual, overdetermined problem in `z in R^n` with data `A^T`.
     pub dual: RidgeProblem,
     /// Original data matrix (`n x d`, dense or CSR), kept for the primal
-    /// map.
-    a: Operand,
+    /// map; shared (not cloned) when the caller already holds an `Arc`.
+    a: Arc<Operand>,
 }
 
 impl DualRidge {
@@ -26,7 +27,12 @@ impl DualRidge {
     /// `A` may be dense or CSR; the CSR transpose costs `O(nnz)` and the
     /// dual solve inherits every sparse fast path.
     pub fn new(a: impl Into<Operand>, b: Vec<f64>, nu: f64) -> Self {
-        let a = a.into();
+        Self::new_shared(Arc::new(a.into()), b, nu)
+    }
+
+    /// [`DualRidge::new`] for an operand that is already shared — avoids
+    /// cloning the data when the primal problem keeps using it.
+    pub fn new_shared(a: Arc<Operand>, b: Vec<f64>, nu: f64) -> Self {
         assert!(a.cols() >= a.rows(), "dual path is for underdetermined problems (d >= n)");
         assert_eq!(a.rows(), b.len());
         let dual = RidgeProblem::from_normal(a.transpose(), b, nu);

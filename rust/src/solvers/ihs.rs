@@ -18,6 +18,7 @@ use std::time::Instant;
 /// arguments of the unified [`crate::solvers::api::Solver`] call.
 #[derive(Clone, Debug)]
 pub struct IhsConfig {
+    /// Sketch family to draw.
     pub kind: SketchKind,
     /// Sketch size `m`.
     pub m: usize,
@@ -37,6 +38,7 @@ pub struct IhsConfig {
     /// the cost the ablation measures — though the re-apply itself now
     /// runs on the parallel GEMM/FWHT kernels like everything else.
     pub refresh: bool,
+    /// Iteration cap (safety net; the stop rule fires first).
     pub max_iters: usize,
 }
 

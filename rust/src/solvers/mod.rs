@@ -12,6 +12,10 @@
 //! * [`dual`] — the underdetermined case `d >= n` via the dual problem
 //!   (Appendix A.2).
 //! * [`path`] — regularization-path driver with warm starts (Figures 1, 3).
+//! * [`session`] — cross-solve reuse: a [`session::ModelSession`] keeps the
+//!   grown sketch, the factorization cache and the last solution alive
+//!   between solves at different regularization levels / right-hand sides
+//!   (the state behind the coordinator's model registry).
 //! * [`api`] — the unified dispatch surface: the [`api::Solver`] trait,
 //!   round-trippable [`api::SolverSpec`] strings, and the solver
 //!   [`api::registry`]. New callers should go through this module.
@@ -24,11 +28,13 @@ pub mod dual;
 pub mod ihs;
 pub mod path;
 pub mod pcg;
+pub mod session;
 pub mod woodbury;
 
 pub use api::{registry, Solver, SolverSpec};
 
 use crate::linalg::{axpy, dot, norm2, Operand};
+use std::sync::Arc;
 
 /// A ridge-regression problem instance. Owns the data; solvers borrow it.
 ///
@@ -52,8 +58,12 @@ use crate::linalg::{axpy, dot, norm2, Operand};
 /// the one documented exception — see the lib.rs overview).
 #[derive(Clone, Debug)]
 pub struct RidgeProblem {
-    /// Data matrix, `n x d` (overdetermined: `n >= d`), dense or CSR.
-    pub a: Operand,
+    /// Data matrix, `n x d` (overdetermined: `n >= d`), dense or CSR. Held
+    /// in an [`Arc`] so sessions and registries can share one operand
+    /// across many problems (one per `nu` / right-hand side) without
+    /// cloning the data; `RidgeProblem::clone` is correspondingly cheap on
+    /// the matrix itself.
+    pub a: Arc<Operand>,
     /// Observations, length `n` (absent for normal-form / dual problems).
     pub b: Option<Vec<f64>>,
     /// Precomputed right-hand side `A^T b`, length `d`.
@@ -63,8 +73,15 @@ pub struct RidgeProblem {
 }
 
 impl RidgeProblem {
+    /// Build from raw observations; computes `atb = A^T b` once.
     pub fn new(a: impl Into<Operand>, b: Vec<f64>, nu: f64) -> Self {
-        let a = a.into();
+        Self::new_shared(Arc::new(a.into()), b, nu)
+    }
+
+    /// Like [`RidgeProblem::new`] but reusing an already-shared operand —
+    /// the per-query constructor of [`session::ModelSession`]: no data
+    /// copy, only the `O(nnz)` `A^T b` product.
+    pub fn new_shared(a: Arc<Operand>, b: Vec<f64>, nu: f64) -> Self {
         assert_eq!(a.rows(), b.len(), "A and b row mismatch");
         assert!(nu > 0.0, "regularized problem needs nu > 0");
         let atb = a.matvec_t(&b);
@@ -77,13 +94,28 @@ impl RidgeProblem {
         let a = a.into();
         assert_eq!(a.cols(), atb.len(), "A and atb column mismatch");
         assert!(nu > 0.0, "regularized problem needs nu > 0");
-        Self { a, b: None, atb, nu }
+        Self { a: Arc::new(a), b: None, atb, nu }
     }
 
+    /// Assemble a problem from precomputed parts: a shared operand, an
+    /// already-formed `atb`, and optional raw observations. This is the
+    /// zero-recompute path sessions use when `atb` is cached across `nu`
+    /// changes (it depends on `(A, b)` only).
+    pub fn from_parts(a: Arc<Operand>, b: Option<Vec<f64>>, atb: Vec<f64>, nu: f64) -> Self {
+        assert_eq!(a.cols(), atb.len(), "A and atb column mismatch");
+        if let Some(b) = &b {
+            assert_eq!(a.rows(), b.len(), "A and b row mismatch");
+        }
+        assert!(nu > 0.0, "regularized problem needs nu > 0");
+        Self { a, b, atb, nu }
+    }
+
+    /// Row count `n` of the data matrix.
     pub fn n(&self) -> usize {
         self.a.rows()
     }
 
+    /// Column count `d` (the solution dimension).
     pub fn d(&self) -> usize {
         self.a.cols()
     }
@@ -121,7 +153,7 @@ impl RidgeProblem {
         for i in 0..d {
             out[i] = self.nu * self.nu * x[i] - self.atb[i];
         }
-        match &self.a {
+        match &*self.a {
             Operand::Dense(a) => {
                 // Panel pass: r_i = <a_i, x>; out += r_i * a_i.
                 for i in 0..a.rows() {
@@ -268,6 +300,7 @@ pub struct SolveReport {
 }
 
 impl SolveReport {
+    /// Empty report carrying only the solver label.
     pub fn new(solver: impl Into<String>) -> Self {
         Self { solver: solver.into(), ..Default::default() }
     }
@@ -276,7 +309,9 @@ impl SolveReport {
 /// Outcome of a solve: the iterate plus its report.
 #[derive(Clone, Debug)]
 pub struct Solution {
+    /// The final iterate.
     pub x: Vec<f64>,
+    /// Work/time breakdown of the solve that produced it.
     pub report: SolveReport,
 }
 

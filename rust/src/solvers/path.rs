@@ -18,7 +18,9 @@ use crate::linalg::Operand;
 /// Result of one path point.
 #[derive(Clone, Debug)]
 pub struct PathPoint {
+    /// Regularization level of this point.
     pub nu: f64,
+    /// The solve's work/time breakdown.
     pub report: SolveReport,
     /// Cumulative wall time up to and including this point.
     pub cumulative_time_s: f64,
@@ -29,14 +31,17 @@ pub struct PathPoint {
 pub struct PathResult {
     /// Canonical spec string of the solver that ran the path.
     pub solver: String,
+    /// One entry per `nu`, in solve order.
     pub points: Vec<PathPoint>,
 }
 
 impl PathResult {
+    /// Total wall time across the path (the last cumulative time).
     pub fn total_time_s(&self) -> f64 {
         self.points.last().map(|p| p.cumulative_time_s).unwrap_or(0.0)
     }
 
+    /// Largest sketch size any point reached.
     pub fn peak_m(&self) -> usize {
         self.points.iter().map(|p| p.report.peak_m).max().unwrap_or(0)
     }
@@ -65,9 +70,19 @@ pub fn run_path(
     let mut x = vec![0.0; d];
     let mut points = Vec::with_capacity(nus.len());
     let mut cumulative = 0.0;
+    // One shared operand — and one A^T b — for the whole path: each
+    // per-nu problem clones the Arc and the length-d right-hand side,
+    // not the data or the O(nnz) product.
+    let shared = std::sync::Arc::new(a.clone());
+    let atb = shared.matvec_t(b);
 
     for (i, &nu) in nus.iter().enumerate() {
-        let problem = RidgeProblem::new(a.clone(), b.to_vec(), nu);
+        let problem = RidgeProblem::from_parts(
+            std::sync::Arc::clone(&shared),
+            Some(b.to_vec()),
+            atb.clone(),
+            nu,
+        );
         // Oracle for the stop rule: exact solution at this nu (excluded
         // from timing — the paper measures solver time only; dual specs
         // substitute their own dual-space oracle).

@@ -20,7 +20,9 @@ use std::time::Instant;
 /// unified [`crate::solvers::api::Solver`] call.
 #[derive(Clone, Debug)]
 pub struct PcgConfig {
+    /// Iteration cap (safety net; the stop rule fires first).
     pub max_iters: usize,
+    /// Sketch family for the preconditioner.
     pub kind: SketchKind,
     /// Aspect-ratio parameter `rho`; the preconditioner sketch size is
     /// `d/rho` (Gaussian) or `d log d / rho` (SRHT), capped at `n`.
@@ -28,6 +30,7 @@ pub struct PcgConfig {
 }
 
 impl PcgConfig {
+    /// Config with the default iteration cap.
     pub fn new(kind: SketchKind, rho: f64) -> Self {
         Self { max_iters: 10_000, kind, rho }
     }

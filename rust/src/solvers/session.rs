@@ -1,0 +1,447 @@
+//! Cross-solve sessions: register a problem once, query it many times.
+//!
+//! The paper's economy — build one effective-dimension-sized sketch, then
+//! amortize it over the whole solve — extends across *solves*: the sketch
+//! rows `S̃A` depend only on `(A, seed)`, never on the regularization
+//! level `nu` or the observations `b`. Lacotte & Pilanci's
+//! adaptive-preconditioning follow-up (arXiv:2104.14101) makes this
+//! explicit for regularization paths, and the SRHT analysis of Lacotte &
+//! Dobriban (arXiv:2002.00864) shows the step-size/quality parameters
+//! depend only on `(n, d, m)`. [`ModelSession`] is that reuse as an API:
+//!
+//! * the data operand lives in one [`Arc<Operand>`] shared by every
+//!   per-query [`RidgeProblem`] (no data clone per solve);
+//! * the grown [`SketchEngine`](crate::sketch::engine::SketchEngine) and
+//!   [`WoodburyCache`](crate::solvers::woodbury::WoodburyCache) survive
+//!   between solves as an [`AdaptiveSessionState`]: a repeat query at a
+//!   new `nu` performs **zero** sketch application (`sketch_time_s ==
+//!   0.0` unless the smaller `nu` forces further growth) and pays only
+//!   the `O(m^3)`/`O(d^3)` re-factor of
+//!   [`WoodburyCache::set_nu`](crate::solvers::woodbury::WoodburyCache::set_nu);
+//! * solves warm-start from the previous solution, batched
+//!   regularization paths and alternate right-hand sides reuse the same
+//!   state, and exact-repeat queries are answered from a bounded
+//!   per-session solution cache (which also makes concurrent identical
+//!   queries bitwise-identical);
+//! * `A^T b` is computed once at construction and reused for every `nu`.
+//!
+//! Sessions use the oracle-free [`StopRule::GradientNorm`] criterion —
+//! a serving layer cannot afford the `O(n d^2)` exact solve per query
+//! that the paper's experimental `TrueError` protocol pays. The `eps`
+//! of every query is cold-referenced (`||g|| <= eps * ||A^T b||`), so
+//! the convergence target does not depend on where the warm start
+//! happened to land (see `run_adaptive`).
+//!
+//! The coordinator's model registry
+//! ([`crate::coordinator::registry::Registry`]) wraps one `ModelSession`
+//! per registered model behind a mutex and adds LRU byte-budget eviction.
+
+use super::adaptive::{AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver};
+use super::{RidgeProblem, Solution, SolveReport, StopRule};
+use crate::linalg::Operand;
+use crate::sketch::SketchKind;
+use std::sync::Arc;
+
+/// Maximum number of `(nu, eps) -> solution` entries retained per session
+/// (evicted least-recently-used; each entry is one length-`d` vector plus
+/// its report).
+pub const SOLUTION_CACHE_CAP: usize = 32;
+
+/// One cached solve keyed by the exact `(nu, eps)` bit patterns.
+struct CachedSolution {
+    nu_bits: u64,
+    eps_bits: u64,
+    x: Vec<f64>,
+    report: SolveReport,
+}
+
+/// A registered problem plus everything reusable across queries.
+///
+/// See the [module docs](self) for the reuse contract. A session is
+/// single-threaded by design (solves mutate the sketch state); wrap it in
+/// a mutex — as [`crate::coordinator::registry::Registry`] does — to
+/// serve it from multiple connections.
+pub struct ModelSession {
+    a: Arc<Operand>,
+    b: Vec<f64>,
+    /// `A^T b`, computed once — independent of `nu`.
+    atb: Vec<f64>,
+    config: AdaptiveConfig,
+    seed: u64,
+    /// Grown sketch + factorization + RNG; `None` until the first solve.
+    state: Option<AdaptiveSessionState>,
+    /// Last primary-RHS solution, used to warm-start the next solve.
+    warm: Option<Vec<f64>>,
+    /// Bounded exact-repeat cache, most recently used last.
+    solutions: Vec<CachedSolution>,
+    /// Total solves answered (cache hits included).
+    queries: u64,
+    /// Queries answered from the solution cache.
+    cache_hits: u64,
+}
+
+impl ModelSession {
+    /// Register `(A, b)` with an adaptive solver of the given sketch
+    /// family. Fails on underdetermined data (`n < d`) — the dual
+    /// reduction has no session path yet — and on shape mismatches.
+    pub fn new(
+        a: Arc<Operand>,
+        b: Vec<f64>,
+        kind: SketchKind,
+        seed: u64,
+    ) -> Result<Self, String> {
+        if a.rows() < a.cols() {
+            return Err(format!(
+                "session needs an overdetermined problem (n {} < d {}); \
+                 use a dual-adaptive solve job instead",
+                a.rows(),
+                a.cols()
+            ));
+        }
+        if a.rows() != b.len() {
+            return Err(format!("A has {} rows but b has {} entries", a.rows(), b.len()));
+        }
+        if b.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite entry in b".into());
+        }
+        let atb = a.matvec_t(&b);
+        Ok(Self {
+            a,
+            b,
+            atb,
+            config: AdaptiveConfig::new(kind),
+            seed,
+            state: None,
+            warm: None,
+            solutions: Vec::new(),
+            queries: 0,
+            cache_hits: 0,
+        })
+    }
+
+    /// The shared data operand.
+    pub fn operand(&self) -> &Arc<Operand> {
+        &self.a
+    }
+
+    /// Rows `n` of the registered data.
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Columns `d` of the registered data.
+    pub fn d(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Current cached sketch size (0 before the first solve).
+    pub fn m(&self) -> usize {
+        self.state.as_ref().map_or(0, AdaptiveSessionState::m)
+    }
+
+    /// Sketch family this session grows.
+    pub fn kind(&self) -> SketchKind {
+        self.config.kind
+    }
+
+    /// Total solves answered, and how many came from the solution cache.
+    pub fn query_stats(&self) -> (u64, u64) {
+        (self.queries, self.cache_hits)
+    }
+
+    /// Approximate heap footprint in bytes: operand + observations +
+    /// session sketch/factor state + cached solutions. Registries charge
+    /// this against their byte budget.
+    pub fn approx_bytes(&self) -> usize {
+        let f64s = std::mem::size_of::<f64>();
+        let operand = match &*self.a {
+            Operand::Dense(m) => m.rows() * m.cols() * f64s,
+            // CSR: values (f64) + column indices (u32) + row pointers.
+            Operand::Sparse(c) => c.nnz() * (f64s + 4) + (c.rows() + 1) * f64s,
+        };
+        let cached: usize =
+            self.solutions.iter().map(|s| (s.x.len() + s.report.error_trace.len()) * f64s).sum();
+        operand
+            + (self.b.len() + self.atb.len()) * f64s
+            + self.state.as_ref().map_or(0, AdaptiveSessionState::approx_bytes)
+            + cached
+    }
+
+    /// Solve at `nu` to gradient-norm tolerance `eps`, reusing the grown
+    /// sketch, the factorization cache, and the previous solution as a
+    /// warm start. Exact repeats (same `(nu, eps)` bit patterns) are
+    /// answered from the solution cache without running the solver at
+    /// all, so they are bitwise-reproducible.
+    pub fn solve(&mut self, nu: f64, eps: f64) -> Result<Solution, String> {
+        check_nu_eps(nu, eps)?;
+        self.queries += 1;
+        if let Some(idx) = self
+            .solutions
+            .iter()
+            .position(|s| s.nu_bits == nu.to_bits() && s.eps_bits == eps.to_bits())
+        {
+            // Refresh LRU position and answer from the cache.
+            let hit = self.solutions.remove(idx);
+            let sol = Solution { x: hit.x.clone(), report: hit.report.clone() };
+            self.solutions.push(hit);
+            self.cache_hits += 1;
+            return Ok(sol);
+        }
+
+        let problem =
+            RidgeProblem::from_parts(Arc::clone(&self.a), None, self.atb.clone(), nu);
+        let x0 = self.warm.clone().unwrap_or_else(|| vec![0.0; problem.d()]);
+        let sol = self.run_adaptive(&problem, &x0, eps);
+
+        self.warm = Some(sol.x.clone());
+        self.solutions.push(CachedSolution {
+            nu_bits: nu.to_bits(),
+            eps_bits: eps.to_bits(),
+            x: sol.x.clone(),
+            report: sol.report.clone(),
+        });
+        if self.solutions.len() > SOLUTION_CACHE_CAP {
+            self.solutions.remove(0);
+        }
+        Ok(sol)
+    }
+
+    /// Batched regularization path: one warm-started solve per `nu`
+    /// (strictly decreasing, matching [`crate::solvers::path`]'s
+    /// convention), all through the same cached sketch state.
+    pub fn solve_path(&mut self, nus: &[f64], eps: f64) -> Result<Vec<Solution>, String> {
+        if nus.is_empty() {
+            return Err("empty nu list".into());
+        }
+        for w in nus.windows(2) {
+            if w[0] <= w[1] {
+                return Err("path nus must be strictly decreasing".into());
+            }
+        }
+        nus.iter().map(|&nu| self.solve(nu, eps)).collect()
+    }
+
+    /// Solve at `nu` against an alternate right-hand side. The sketch and
+    /// factorization caches apply unchanged (they depend only on `A`);
+    /// the warm start and solution cache do not (different objective), so
+    /// the solve starts from zero and is not cached.
+    pub fn solve_rhs(&mut self, nu: f64, b: &[f64], eps: f64) -> Result<Solution, String> {
+        check_nu_eps(nu, eps)?;
+        if b.len() != self.n() {
+            return Err(format!("b has {} entries, expected n = {}", b.len(), self.n()));
+        }
+        if b.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite entry in b".into());
+        }
+        self.queries += 1;
+        let atb = self.a.matvec_t(b);
+        let problem = RidgeProblem::from_parts(Arc::clone(&self.a), None, atb, nu);
+        let x0 = vec![0.0; problem.d()];
+        Ok(self.run_adaptive(&problem, &x0, eps))
+    }
+
+    /// Predict on new rows (each of length `d`): returns `row · x(nu)`
+    /// per row, solving at `(nu, eps)` first if that solution is not
+    /// already cached.
+    pub fn predict(
+        &mut self,
+        nu: f64,
+        rows: &[Vec<f64>],
+        eps: f64,
+    ) -> Result<Vec<f64>, String> {
+        let d = self.d();
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != d {
+                return Err(format!("predict row {i} has {} entries, expected d = {d}", row.len()));
+            }
+            if row.iter().any(|v| !v.is_finite()) {
+                return Err(format!("non-finite entry in predict row {i}"));
+            }
+        }
+        let sol = self.solve(nu, eps)?;
+        Ok(rows.iter().map(|row| crate::linalg::dot(row, &sol.x)).collect())
+    }
+
+    /// Run one adaptive solve, resuming from (and then re-depositing) the
+    /// session state.
+    ///
+    /// The gradient-norm stop is *cold-referenced*: `eps` always means
+    /// `||g|| <= eps * ||A^T b||` — the criterion a from-zero solve with
+    /// `GradientNorm { tol: eps }` would use — regardless of the warm
+    /// start. The raw rule measures `||g||` relative to the gradient at
+    /// `x0`; warm starts sit near an optimum where that gradient is
+    /// almost zero, which would make the target history-dependent and
+    /// effectively unattainable (the solver would grow to the cap and
+    /// spin to `max_iters`). Rescaling the tolerance by
+    /// `||A^T b|| / ||g(x0)||` pins the absolute target instead.
+    fn run_adaptive(&mut self, problem: &RidgeProblem, x0: &[f64], eps: f64) -> Solution {
+        // Cold starts need no rescale: g(0) = -A^T b, so the raw relative
+        // rule already measures against `cold_scale` and the extra O(nnz)
+        // gradient pass is skipped. Warm starts pay one extra gradient to
+        // pin the absolute target — cheap next to the solve itself.
+        let tol = if x0.iter().all(|&v| v == 0.0) {
+            eps
+        } else {
+            let g0_norm = crate::linalg::norm2(&problem.gradient(x0));
+            let cold_scale = crate::linalg::norm2(&problem.atb);
+            if g0_norm > 0.0 && cold_scale > 0.0 {
+                eps * cold_scale / g0_norm
+            } else {
+                // g(x0) == 0: x0 is already optimal and any tolerance
+                // stops immediately; degenerate atb keeps the plain
+                // relative rule.
+                eps
+            }
+        };
+        let stop = StopRule::GradientNorm { tol };
+        let solver = match self.state.take() {
+            Some(state) => {
+                AdaptiveSolver::resume(problem, x0, self.config.clone(), stop, state)
+            }
+            None => AdaptiveSolver::new(problem, x0, self.config.clone(), stop, self.seed),
+        };
+        let (sol, state) = solver.run_with_state();
+        self.state = Some(state);
+        sol
+    }
+}
+
+fn check_nu_eps(nu: f64, eps: f64) -> Result<(), String> {
+    if !(nu > 0.0 && nu.is_finite()) {
+        return Err(format!("nu must be positive and finite, got {nu}"));
+    }
+    if !(eps > 0.0 && eps.is_finite()) {
+        return Err(format!("eps must be positive and finite, got {eps}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::solvers::direct;
+
+    fn session(n: usize, d: usize, seed: u64) -> ModelSession {
+        let ds = synthetic::exponential_decay(n, d, seed);
+        ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 7).unwrap()
+    }
+
+    fn exact(sess: &ModelSession, nu: f64) -> Vec<f64> {
+        let p = RidgeProblem::from_parts(
+            Arc::clone(sess.operand()),
+            None,
+            sess.operand().matvec_t(&sess.b),
+            nu,
+        );
+        direct::solve(&p)
+    }
+
+    #[test]
+    fn repeat_nu_query_reuses_sketch_without_reapplying() {
+        let mut s = session(256, 32, 1);
+        let first = s.solve(0.5, 1e-9).unwrap();
+        assert!(first.report.converged);
+        let m_after_first = s.m();
+        assert!(m_after_first >= 1);
+        // Second query at a *larger* nu (smaller effective dimension): the
+        // cached m suffices, so no sketch work at all and no growth.
+        let second = s.solve(1.0, 1e-9).unwrap();
+        assert!(second.report.converged);
+        assert_eq!(second.report.sketch_time_s, 0.0, "resumed solve re-applied the sketch");
+        assert_eq!(second.report.doublings, 0);
+        assert_eq!(s.m(), m_after_first, "cached rows must be reused in full");
+    }
+
+    #[test]
+    fn session_solutions_match_direct() {
+        let mut s = session(192, 24, 2);
+        for nu in [2.0, 0.7, 0.2] {
+            let sol = s.solve(nu, 1e-10).unwrap();
+            let x_star = exact(&s, nu);
+            let p = RidgeProblem::from_parts(
+                Arc::clone(s.operand()),
+                None,
+                s.operand().matvec_t(&s.b),
+                nu,
+            );
+            let rel = p.prediction_error(&sol.x, &x_star)
+                / p.prediction_error(&vec![0.0; 24], &x_star);
+            assert!(rel < 1e-6, "nu {nu}: relative error {rel}");
+        }
+    }
+
+    #[test]
+    fn exact_repeat_is_bitwise_identical_via_cache() {
+        let mut s = session(128, 16, 3);
+        let a = s.solve(0.5, 1e-8).unwrap();
+        let (q0, h0) = s.query_stats();
+        let b = s.solve(0.5, 1e-8).unwrap();
+        let (q1, h1) = s.query_stats();
+        assert_eq!(a.x, b.x);
+        assert_eq!(q1, q0 + 1);
+        assert_eq!(h1, h0 + 1, "exact repeat must come from the solution cache");
+    }
+
+    #[test]
+    fn path_and_rhs_queries_share_state() {
+        let mut s = session(128, 16, 4);
+        let sols = s.solve_path(&[1.0, 0.5, 0.1], 1e-8).unwrap();
+        assert_eq!(sols.len(), 3);
+        assert!(sols.iter().all(|x| x.report.converged));
+        let m_after_path = s.m();
+        // Alternate RHS at a known nu: no sketch work either.
+        let b2: Vec<f64> = (0..128).map(|i| (i as f64 * 0.1).sin()).collect();
+        let alt = s.solve_rhs(0.5, &b2, 1e-8).unwrap();
+        assert!(alt.report.converged);
+        assert_eq!(alt.report.sketch_time_s, 0.0);
+        assert!(s.m() >= m_after_path);
+        // And the alternate solution actually solves the alternate system.
+        let p = RidgeProblem::new_shared(Arc::clone(s.operand()), b2, 0.5);
+        let g = p.gradient(&alt.x);
+        let scale = crate::linalg::norm2(&p.atb);
+        assert!(crate::linalg::norm2(&g) <= 1e-6 * scale);
+        // Unsorted paths are rejected.
+        assert!(s.solve_path(&[0.1, 1.0], 1e-8).is_err());
+    }
+
+    #[test]
+    fn predict_matches_manual_dot() {
+        let mut s = session(96, 12, 5);
+        let rows: Vec<Vec<f64>> =
+            (0..3).map(|r| (0..12).map(|j| ((r * 12 + j) as f64 * 0.17).cos()).collect()).collect();
+        let y = s.predict(0.8, &rows, 1e-9).unwrap();
+        let x = s.solve(0.8, 1e-9).unwrap().x; // cache hit: identical x
+        for (i, row) in rows.iter().enumerate() {
+            let expect = crate::linalg::dot(row, &x);
+            assert!((y[i] - expect).abs() < 1e-12);
+        }
+        // Wrong-width rows are a clean error.
+        assert!(s.predict(0.8, &[vec![1.0; 5]], 1e-9).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let ds = synthetic::exponential_decay(16, 8, 6);
+        // Underdetermined registration refused.
+        let wide = ds.a.transpose();
+        let err = ModelSession::new(Arc::new(wide), ds.b[..8].to_vec(), SketchKind::Srht, 1)
+            .unwrap_err();
+        assert!(err.contains("overdetermined"), "{err}");
+        // Bad query parameters refused.
+        let mut s = session(64, 8, 7);
+        assert!(s.solve(0.0, 1e-8).is_err());
+        assert!(s.solve(1.0, 0.0).is_err());
+        assert!(s.solve_rhs(1.0, &[1.0; 3], 1e-8).is_err());
+    }
+
+    #[test]
+    fn solution_cache_is_bounded() {
+        let mut s = session(64, 8, 8);
+        for i in 0..(SOLUTION_CACHE_CAP + 10) {
+            s.solve(10.0 / (i as f64 + 1.0), 1e-6).unwrap();
+        }
+        assert!(s.solutions.len() <= SOLUTION_CACHE_CAP);
+        assert!(s.approx_bytes() > 0);
+    }
+}

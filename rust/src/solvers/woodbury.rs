@@ -112,9 +112,60 @@ impl WoodburyCache {
         self.sa.rows()
     }
 
+    /// Column dimension `d` of the sketched matrix.
+    pub fn d(&self) -> usize {
+        self.sa.cols()
+    }
+
     /// Active branch.
     pub fn mode(&self) -> WoodburyMode {
         self.mode
+    }
+
+    /// Regularization level the current factorization is keyed to.
+    pub fn nu(&self) -> f64 {
+        self.nu2.sqrt()
+    }
+
+    /// Re-key the cached factorization to a new regularization level.
+    ///
+    /// The Gram blocks (`(S̃A)(S̃A)^T` or `(S̃A)^T(S̃A)`) do not depend on
+    /// `nu`, so switching regularization costs only the `O(m^3)` (small-
+    /// sketch) or `O(d^3)` (direct) re-factor — never the `O(m^2 d)` Gram
+    /// recompute, and never any sketch work. This is what lets a session
+    /// reuse one grown sketch across a whole regularization path
+    /// (arXiv:2104.14101's cross-`nu` preconditioner reuse). A no-op when
+    /// `nu` is unchanged.
+    pub fn set_nu(&mut self, nu: f64) {
+        assert!(nu > 0.0 && nu.is_finite());
+        let nu2 = nu * nu;
+        if nu2 == self.nu2 {
+            return;
+        }
+        self.nu2 = nu2;
+        match self.mode {
+            WoodburyMode::SmallSketch => {
+                let u = self.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
+                self.chol = factor_small(u, self.scale2, nu2);
+            }
+            WoodburyMode::Direct => {
+                let inner = self.inner_gram.as_ref().expect("Direct keeps inner_gram");
+                self.chol = factor_direct(inner, self.scale2, nu2);
+            }
+        }
+    }
+
+    /// Approximate heap footprint in bytes (sketch rows + cached Gram +
+    /// Cholesky factor) — used by registry byte budgets.
+    pub fn approx_bytes(&self) -> usize {
+        let mat = |m: &Matrix| m.rows() * m.cols() * std::mem::size_of::<f64>();
+        let gram = self.outer_gram.as_ref().map_or(0, mat)
+            + self.inner_gram.as_ref().map_or(0, mat);
+        let factor_dim = match self.mode {
+            WoodburyMode::SmallSketch => self.sa.rows(),
+            WoodburyMode::Direct => self.sa.cols(),
+        };
+        mat(&self.sa) + gram + factor_dim * factor_dim * std::mem::size_of::<f64>()
     }
 
     /// Effective embedding scale (`1.0` for pre-normalized rows).
@@ -439,6 +490,46 @@ mod tests {
             assert!((zg[i] - zf[i]).abs() < 1e-9);
         }
         check_inverse(&cache, d, 1e-8);
+    }
+
+    #[test]
+    fn set_nu_matches_fresh_factorization() {
+        // Re-keying across nu must agree with a from-scratch cache at the
+        // new nu, in both branches, with zero Gram recompute (structural:
+        // the cached Gram objects are reused — asserted via agreement).
+        for (m, d) in [(5usize, 14usize), (18, 6)] {
+            let sa = random_sa(m, d, 21);
+            let scale = 0.4;
+            let mut cache = WoodburyCache::new_scaled(sa.clone(), 0.9, scale);
+            let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.11).cos()).collect();
+            for nu in [0.9, 0.3, 2.5, 0.3] {
+                cache.set_nu(nu);
+                assert!((cache.nu() - nu).abs() < 1e-15);
+                let fresh = WoodburyCache::new_scaled(sa.clone(), nu, scale);
+                let za = cache.apply_inverse(&g);
+                let zf = fresh.apply_inverse(&g);
+                for i in 0..d {
+                    assert!((za[i] - zf[i]).abs() < 1e-10, "m={m} nu={nu} coord {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_nu_then_grow_stays_consistent() {
+        let d = 10;
+        let full = random_sa(8, d, 22);
+        let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 1.2, 0.5);
+        cache.set_nu(0.6);
+        cache.grow(&rows(4, 8), 0.35);
+        let fresh = WoodburyCache::new_scaled(rows(0, 8), 0.6, 0.35);
+        let g: Vec<f64> = (0..d).map(|i| (i as f64 + 1.0) * 0.07).collect();
+        let za = cache.apply_inverse(&g);
+        let zf = fresh.apply_inverse(&g);
+        for i in 0..d {
+            assert!((za[i] - zf[i]).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -12,7 +12,9 @@
 /// Eigenvalue bracket `[lambda, Lambda]` for `C_S`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Rates {
+    /// Lower eigenvalue bound `lambda`.
     pub lambda: f64,
+    /// Upper eigenvalue bound `Lambda`.
     pub big_lambda: f64,
 }
 

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 /// Parsed arguments: one optional subcommand plus flags.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First positional argument (`effdim <subcommand> ...`).
     pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
     /// Flags present without a value (`--paper`).
@@ -43,22 +44,27 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key value` / `--key=value`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// [`Args::get`] with a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse a `usize` flag; unparseable or absent values yield `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Parse an `f64` flag; unparseable or absent values yield `default`.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Parse a `u64` flag; unparseable or absent values yield `default`.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

@@ -11,15 +11,22 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always f64 — exact for integers below `2^53`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for stable output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -27,10 +34,12 @@ impl Json {
         }
     }
 
+    /// The number truncated to `usize`, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -38,6 +47,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -45,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -52,6 +63,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (`None` for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -125,6 +137,17 @@ impl From<usize> for Json {
     }
 }
 
+impl From<u64> for Json {
+    /// Numbers are f64 on the wire: exact for values below `2^53`, which
+    /// covers the coordinator's monotonic job/model ids. Unlike a
+    /// `usize` round-trip, this is independent of the target's pointer
+    /// width (a `u64` id must not be narrowed through `usize` on 32-bit
+    /// targets).
+    fn from(x: u64) -> Self {
+        Json::Num(x as f64)
+    }
+}
+
 impl From<bool> for Json {
     fn from(b: bool) -> Self {
         Json::Bool(b)
@@ -164,7 +187,9 @@ fn write_escaped(s: &str, out: &mut String) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 

@@ -4,11 +4,17 @@
 /// Aggregate of a set of measurements.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Summary {
+    /// Number of measurements.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (0 for fewer than two measurements).
     pub std: f64,
+    /// Smallest measurement.
     pub min: f64,
+    /// Largest measurement.
     pub max: f64,
+    /// Median (midpoint average for even `n`).
     pub median: f64,
 }
 
