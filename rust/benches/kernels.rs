@@ -19,21 +19,28 @@
 //!   same operation on the same matrix at a given density (sketch apply /
 //!   sketch grow / CG matvec / `adaptive-sparse` end-to-end solve).
 //!
+//! * `block_rhs_speedup_k{8,64}` — `k` alternate right-hand sides served
+//!   as one `solve_block` (BLAS-3 block iteration) over `k` looped
+//!   `solve_rhs` calls against the same cached session sketch.
+//!
 //! `cargo bench --bench kernels -- --smoke` runs a seconds-scale variant
 //! (shrunken shapes, fewer repeats) so CI *executes* every kernel path on
 //! each PR instead of merely compiling it.
 
 use effdim::bench_harness::bench;
+use effdim::data::synthetic;
 use effdim::linalg::sparse::CsrMatrix;
 use effdim::linalg::{threads, Matrix, Operand};
 use effdim::rng::Xoshiro256;
 use effdim::sketch::engine::SketchEngine;
 use effdim::sketch::srht::fwht_rows;
 use effdim::sketch::{gaussian::GaussianSketch, sparse::SparseSketch, srht::SrhtSketch, Sketch, SketchKind};
+use effdim::solvers::session::ModelSession;
 use effdim::solvers::woodbury::WoodburyCache;
 use effdim::solvers::{RidgeProblem, Solver as _, SolverSpec, StopRule};
 use effdim::util::json::Json;
 use effdim::util::stats::summarize;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One benchmark case destined for the JSON report.
@@ -430,6 +437,62 @@ fn main() {
             ));
             println!();
         });
+    }
+
+    // Block multi-RHS serving throughput (§Serving acceptance): k
+    // alternate right-hand sides against one registered model — k looped
+    // `solve_rhs` calls (matvec / BLAS-2 intensity) vs one `solve_block`
+    // (GEMM over the d x k panel / BLAS-3). Both paths resume the SAME
+    // grown session sketch (one warmup solve builds it), so the ratio
+    // isolates the iteration arithmetic intensity, not sketch growth.
+    {
+        let (n, d) = if smoke { (512usize, 64usize) } else { (4096usize, 256usize) };
+        let reps = if smoke { 2 } else { 5 };
+        let ds = synthetic::exponential_decay(n, d, 5);
+        let (nu, eps) = (0.5, 1e-8);
+        println!("--- block multi-RHS (n = {n}, d = {d}) ---");
+        for &k in &[8usize, 64] {
+            let bs: Vec<Vec<f64>> = (0..k)
+                .map(|j| {
+                    (0..n).map(|i| ((i as f64 * 0.013 + j as f64) * 0.37).sin()).collect()
+                })
+                .collect();
+            let mut sess =
+                ModelSession::new(Arc::new(ds.a.clone()), ds.b.clone(), SketchKind::Gaussian, 7)
+                    .unwrap();
+            sess.solve(nu, eps).unwrap(); // grow the shared sketch once
+            let m = sess.m();
+            let t_loop = timed(
+                &mut cases,
+                &format!("rhs looped solve_rhs (k={k})"),
+                (n, d, m),
+                default_threads,
+                reps,
+                || {
+                    for b in &bs {
+                        std::hint::black_box(sess.solve_rhs(nu, b, eps).unwrap());
+                    }
+                },
+            );
+            let t_block = timed(
+                &mut cases,
+                &format!("rhs block solve_block (k={k})"),
+                (n, d, m),
+                default_threads,
+                reps,
+                || {
+                    let sols = sess.solve_block(nu, &bs, eps).unwrap();
+                    assert!(
+                        sols.iter().all(|s| s.report.converged),
+                        "block solve must converge in the bench"
+                    );
+                    std::hint::black_box(sols);
+                },
+            );
+            derived.push((format!("block_rhs_speedup_k{k}"), Json::from(t_loop / t_block)));
+            println!("    block multi-RHS speedup (k={k}): {:.2}x", t_loop / t_block);
+        }
+        println!();
     }
 
     // Emit the JSON trajectory at the repo root (benches run from rust/).

@@ -15,6 +15,7 @@
 //!  "sketch":"gaussian","name":"exp-1k"}
 //! {"cmd":"query","model":1,"nu":0.5,"eps":1e-8,"include_x":true}
 //! {"cmd":"query","model":1,"nus":[10,1,0.1]}
+//! {"cmd":"query","model":1,"nu":0.5,"bs":[[...],[...]]}
 //! {"cmd":"predict","model":1,"nu":0.5,"rows":[[0.1,0.2],[0.3,0.4]]}
 //! {"cmd":"evict","model":1}
 //! {"cmd":"models"}
@@ -84,7 +85,8 @@ pub enum Request {
         name: Option<String>,
     },
     /// Query a registered model: a solve at `nu` (or a batched path over
-    /// `nus`), optionally against an alternate right-hand side.
+    /// `nus`), optionally against one alternate right-hand side (`b`) or
+    /// a whole batch of them (`bs`, the block multi-RHS path).
     Query {
         /// Model id from a `register` response.
         model: u64,
@@ -97,8 +99,13 @@ pub enum Request {
         eps: f64,
         /// Whether to include solution vectors in the response.
         include_x: bool,
-        /// Alternate right-hand side (length `n`); exclusive with `nus`.
+        /// Alternate right-hand side (length `n`); exclusive with `nus`
+        /// and `bs`.
         b: Option<Vec<f64>>,
+        /// Batch of alternate right-hand sides (each length `n`), solved
+        /// jointly through one BLAS-3 block iteration
+        /// ([`crate::solvers::block`]); exclusive with `b` and `nus`.
+        bs: Option<Vec<Vec<f64>>>,
     },
     /// Predict on new rows with a registered model's solution at `nu`.
     Predict {
@@ -165,14 +172,45 @@ pub fn decode(line: &str) -> Result<Request, String> {
             let nus = decode_nus(&v)?;
             let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
             let include_x = v.get("include_x").and_then(Json::as_bool).unwrap_or(false);
-            let b = match v.get("b").and_then(Json::as_arr) {
-                Some(arr) => Some(decode_f64_vec(arr, "b")?),
-                None => None,
+            // A present-but-non-array "b" must be an error, not a silent
+            // fall-through to a state-mutating solve of the registered b.
+            // `null` unambiguously means absent (serializers commonly
+            // emit it for unset optionals) and stays accepted.
+            let b = match v.get("b") {
+                None | Some(Json::Null) => None,
+                Some(raw) => {
+                    let arr = raw.as_arr().ok_or("\"b\" must be an array of numbers")?;
+                    Some(decode_f64_vec(arr, "b")?)
+                }
+            };
+            // Batched right-hand sides: an array of length-n arrays.
+            // Strict like "nus": a non-array value, an empty batch or a
+            // malformed entry is an error, never a silently smaller
+            // batch (or, worse, a silently *ignored* one).
+            let bs = match v.get("bs") {
+                None | Some(Json::Null) => None,
+                Some(raw) => {
+                    let arr = raw.as_arr().ok_or("\"bs\" must be an array of arrays")?;
+                    if arr.is_empty() {
+                        return Err("\"bs\" must contain at least one right-hand side".into());
+                    }
+                    let mut out = Vec::with_capacity(arr.len());
+                    for (i, row) in arr.iter().enumerate() {
+                        let row = row
+                            .as_arr()
+                            .ok_or_else(|| format!("\"bs\" entry {i} must be an array"))?;
+                        out.push(decode_f64_vec(row, "bs")?);
+                    }
+                    Some(out)
+                }
             };
             if b.is_some() && !nus.is_empty() {
                 return Err("\"b\" and \"nus\" cannot be combined in one query".into());
             }
-            Ok(Request::Query { model, nu, nus, eps, include_x, b })
+            if bs.is_some() && (b.is_some() || !nus.is_empty()) {
+                return Err("\"bs\" cannot be combined with \"b\" or \"nus\" in one query".into());
+            }
+            Ok(Request::Query { model, nu, nus, eps, include_x, b, bs })
         }
         "predict" => {
             let model = require_id(&v, "model")?;
@@ -233,13 +271,17 @@ fn decode_workload(v: &Json, seed: u64) -> Result<Workload, String> {
     }
 }
 
-/// Optional `"nus"` array (empty when absent). Strict: a non-numeric
-/// entry is an error, not a silently shorter (or empty) path — an empty
-/// result must mean the client did not ask for a path.
+/// Optional `"nus"` array (empty when absent or `null`). Strict: a
+/// non-array value or a non-numeric entry is an error, not a silently
+/// shorter (or empty) path — an empty result must mean the client did
+/// not ask for a path.
 fn decode_nus(v: &Json) -> Result<Vec<f64>, String> {
-    match v.get("nus").and_then(Json::as_arr) {
-        Some(arr) => decode_f64_vec(arr, "nus"),
-        None => Ok(Vec::new()),
+    match v.get("nus") {
+        None | Some(Json::Null) => Ok(Vec::new()),
+        Some(raw) => {
+            let arr = raw.as_arr().ok_or("\"nus\" must be an array of numbers")?;
+            decode_f64_vec(arr, "nus")
+        }
     }
 }
 
@@ -477,13 +519,14 @@ mod tests {
     fn decode_query_and_predict() {
         match decode(r#"{"cmd":"query","model":3,"nu":0.5,"eps":1e-6,"include_x":true}"#).unwrap()
         {
-            Request::Query { model, nu, nus, eps, include_x, b } => {
+            Request::Query { model, nu, nus, eps, include_x, b, bs } => {
                 assert_eq!(model, 3);
                 assert_eq!(nu, 0.5);
                 assert!(nus.is_empty());
                 assert_eq!(eps, 1e-6);
                 assert!(include_x);
                 assert!(b.is_none());
+                assert!(bs.is_none());
             }
             _ => panic!("wrong variant"),
         }
@@ -493,6 +536,14 @@ mod tests {
         }
         match decode(r#"{"cmd":"query","model":1,"b":[1.0,2.0]}"#).unwrap() {
             Request::Query { b, .. } => assert_eq!(b, Some(vec![1.0, 2.0])),
+            _ => panic!("wrong variant"),
+        }
+        // Batched right-hand sides decode as a block query.
+        match decode(r#"{"cmd":"query","model":1,"nu":0.5,"bs":[[1.0,2.0],[3.0,4.0]]}"#).unwrap()
+        {
+            Request::Query { bs, .. } => {
+                assert_eq!(bs, Some(vec![vec![1.0, 2.0], vec![3.0, 4.0]]))
+            }
             _ => panic!("wrong variant"),
         }
         match decode(r#"{"cmd":"predict","model":2,"nu":1.5,"rows":[[1.0,2.0],[3.0,4.0]]}"#)
@@ -512,6 +563,28 @@ mod tests {
         assert!(decode(r#"{"cmd":"query"}"#).is_err(), "missing model id");
         assert!(decode(r#"{"cmd":"query","model":1,"b":[1.0],"nus":[1.0,0.1]}"#).is_err());
         assert!(decode(r#"{"cmd":"query","model":1,"b":["x"]}"#).is_err());
+        // Malformed batches: empty, non-array values/entries, non-finite
+        // values, or combined with the exclusive forms. A present "bs"
+        // must NEVER silently degrade to a plain (state-mutating) solve.
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":[]}"#).is_err(), "empty batch");
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":[1.0]}"#).is_err());
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":"[[1.0]]"}"#).is_err(), "string bs");
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":5}"#).is_err(), "scalar bs");
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":[["x"]]}"#).is_err());
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":[[1.0]],"b":[1.0]}"#).is_err());
+        assert!(decode(r#"{"cmd":"query","model":1,"bs":[[1.0]],"nus":[1.0,0.1]}"#).is_err());
+        // Same strictness for the scalar forms: a present-but-non-array
+        // "b" or "nus" is an error, not an ignored field.
+        assert!(decode(r#"{"cmd":"query","model":1,"b":"[1.0]"}"#).is_err());
+        assert!(decode(r#"{"cmd":"query","model":1,"nus":1.0}"#).is_err());
+        // But JSON null unambiguously means absent (serializers emit it
+        // for unset optionals) and keeps the old behavior.
+        match decode(r#"{"cmd":"query","model":1,"b":null,"bs":null,"nus":null}"#).unwrap() {
+            Request::Query { b, bs, nus, .. } => {
+                assert!(b.is_none() && bs.is_none() && nus.is_empty());
+            }
+            _ => panic!("wrong variant"),
+        }
         // Non-numeric path entries are an error, not a silent single solve.
         assert!(decode(r#"{"cmd":"query","model":1,"nus":["10","1"]}"#).is_err());
         assert!(decode(r#"{"cmd":"solve","nus":[10,"1",0.1]}"#).is_err());

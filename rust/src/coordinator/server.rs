@@ -189,12 +189,21 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                 Err(e) => protocol::err(&e),
             }
         }
-        Request::Query { model, nu, nus, eps, include_x, b } => {
+        Request::Query { model, nu, nus, eps, include_x, b, bs } => {
             let Some(entry) = registry.touch(model) else {
                 return protocol::err(&Registry::unknown(model));
             };
             let mut session = entry.session.lock().unwrap();
-            let outcome = if let Some(b) = b {
+            let outcome = if let Some(bs) = bs {
+                // Block multi-RHS: all columns through one BLAS-3
+                // iteration against the session's cached sketch; one
+                // result object per input column, in order.
+                catch_panic(|| session.solve_block(nu, &bs, eps)).map(|sols| {
+                    let entries =
+                        sols.iter().map(|sol| solution_json(nu, sol, include_x)).collect();
+                    vec![("batch", Json::Arr(entries))]
+                })
+            } else if let Some(b) = b {
                 catch_panic(|| session.solve_rhs(nu, &b, eps)).map(|sol| {
                     vec![("result", solution_json(nu, &sol, include_x))]
                 })
@@ -441,6 +450,47 @@ mod tests {
         let reg_stats = metrics.get("registry").unwrap();
         assert_eq!(reg_stats.get("registered").unwrap().as_usize(), Some(1));
         assert_eq!(reg_stats.get("evicted").unwrap().as_usize(), Some(1));
+
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn batched_rhs_query_over_tcp() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let reg = client
+            .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":4,"name":"blk"}"#)
+            .unwrap();
+        assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+        let model = reg.get("model").unwrap().as_usize().unwrap();
+
+        let b1: Vec<f64> = (0..128).map(|i| (i as f64 * 0.05).sin()).collect();
+        let b2: Vec<f64> = (0..128).map(|i| (i as f64 * 0.03).cos()).collect();
+        let q = client
+            .call(&format!(
+                r#"{{"cmd":"query","model":{model},"nu":0.5,"bs":[{b1:?},{b2:?}],"include_x":true}}"#
+            ))
+            .unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true), "{q:?}");
+        let batch = q.get("batch").unwrap().as_arr().unwrap();
+        assert_eq!(batch.len(), 2);
+        for entry in batch {
+            assert_eq!(entry.get("converged").unwrap().as_bool(), Some(true));
+            assert_eq!(entry.get("nu").unwrap().as_f64(), Some(0.5));
+            assert_eq!(entry.get("x").unwrap().as_arr().unwrap().len(), 16);
+        }
+        assert!(q.get("m").unwrap().as_usize().unwrap() >= 1);
+
+        // Malformed batches answer the standard error shape.
+        let bad = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"bs":[[1.0,2.0]]}}"#))
+            .unwrap();
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "short rhs rejected");
+        let combined = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"bs":[{b1:?}],"nus":[1.0,0.1]}}"#))
+            .unwrap();
+        assert_eq!(combined.get("ok").unwrap().as_bool(), Some(false));
 
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();

@@ -132,10 +132,15 @@
 //! Woodbury/Cholesky factors and the last solution alive *between*
 //! solves: a repeat solve at a new `nu` applies no sketch at all
 //! (`sketch_time_s == 0.0`) and warm-starts from the previous solution.
-//! The coordinator's [`coordinator::registry::Registry`] exposes this
-//! over the wire (`register` / `query` / `predict` / `evict`) with LRU
-//! byte-budget eviction — see `README.md` (rendered as [`readme`]) and
-//! `PROTOCOL.md` for the walkthrough.
+//! Batches of right-hand sides go through
+//! [`solve_block`](solvers::session::ModelSession::solve_block) — one
+//! BLAS-3 block iteration ([`solvers::block`]) over all `k` columns,
+//! with per-column convergence and active-set shrinking — instead of
+//! `k` independent matvec-bound solves. The coordinator's
+//! [`coordinator::registry::Registry`] exposes both over the wire
+//! (`register` / `query` (incl. the `"bs"` batch) / `predict` /
+//! `evict`) with LRU byte-budget eviction — see `README.md` (rendered
+//! as [`readme`]) and `PROTOCOL.md` for the walkthrough.
 
 // Index-based loops are the house style for the dense kernels (indices
 // frequently address two or three buffers in lockstep, and the explicit

@@ -294,6 +294,60 @@ impl Matrix {
         c
     }
 
+    /// `C = self^T * other` without materializing the transpose: `C` is
+    /// accumulated as a sum of per-row outer products (`c += a_i ⊗ b_i`),
+    /// streaming both operands row-major. This is the dense arm of the
+    /// block kernels (`Operand::matmul_t` over an `n x k` right-hand-side
+    /// block; the Woodbury block apply's `(S̃A)^T W` term). Above the
+    /// parallel threshold the input rows split into
+    /// [`threads::REDUCE_PARTS`] *fixed* chunks whose partial products
+    /// reduce in chunk order — the summation tree is a function of the
+    /// shapes alone, so the result is bitwise identical at any thread
+    /// count (same policy as [`Matrix::gram`]).
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn row mismatch");
+        let (n, d, k) = (self.rows, self.cols, other.cols);
+        let mut c = Matrix::zeros(d, k);
+        if n == 0 || d == 0 || k == 0 {
+            return c;
+        }
+        let flops = 2.0 * n as f64 * d as f64 * k as f64;
+        let parts = threads::REDUCE_PARTS;
+        if !threads::worth_parallelizing(flops) || n < 2 * parts {
+            self.tn_rows_into(other, 0, n, &mut c.data);
+        } else {
+            let chunk = (n + parts - 1) / parts;
+            let mut partials = vec![0.0; parts * d * k];
+            let jobs: Vec<(usize, &mut [f64])> =
+                partials.chunks_mut(d * k).enumerate().collect();
+            let t = threads::current().min(parts);
+            threads::run_jobs(t, jobs, |(p, buf)| {
+                let r0 = (p * chunk).min(n);
+                let r1 = (r0 + chunk).min(n);
+                self.tn_rows_into(other, r0, r1, buf);
+            });
+            for p in 0..parts {
+                axpy(1.0, &partials[p * d * k..(p + 1) * d * k], &mut c.data);
+            }
+        }
+        c
+    }
+
+    /// Accumulate `self[r0..r1, :]^T other[r0..r1, :]` into `c` (`d x k`,
+    /// row-major): one length-`k` axpy per element of `self` — no
+    /// zero-skip, so the kernel stays exactly equivalent to
+    /// `transpose().matmul()` even on non-finite operands.
+    fn tn_rows_into(&self, other: &Matrix, r0: usize, r1: usize, c: &mut [f64]) {
+        let k = other.cols;
+        for i in r0..r1 {
+            let a_row = self.row(i);
+            let b_row = other.row(i);
+            for (j, &aij) in a_row.iter().enumerate() {
+                axpy(aij, b_row, &mut c[j * k..(j + 1) * k]);
+            }
+        }
+    }
+
     /// `C = self^T * self` (Gram matrix), exploiting symmetry: only the
     /// upper triangle is computed, then mirrored. Above the parallel
     /// threshold the rows always split into [`threads::REDUCE_PARTS`]
@@ -521,6 +575,36 @@ mod tests {
         let c = a.matmul_nt(&b);
         let c0 = a.matmul(&b.transpose());
         assert!(c.max_abs_diff(&c0) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let a = test_mat(23, 9, 20);
+        let b = test_mat(23, 6, 21);
+        let c = a.matmul_tn(&b);
+        let c0 = a.transpose().matmul(&b);
+        assert!(c.max_abs_diff(&c0) < 1e-12);
+        // Consistency with the column vector op.
+        let x: Vec<f64> = (0..23).map(|i| (i as f64 * 0.3).sin()).collect();
+        let xm = Matrix::from_vec(23, 1, x.clone());
+        let y = a.matvec_t(&x);
+        let ym = a.matmul_tn(&xm);
+        for j in 0..9 {
+            assert!((y[j] - ym.get(j, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_tn_bitwise_matches_any_thread_count() {
+        // 2 * 300 * 48 * 16 ~ 4.6e5 crosses the parallel threshold; the
+        // fixed-chunk reduction makes every thread count agree bitwise.
+        let a = test_mat(300, 48, 22);
+        let b = test_mat(300, 16, 23);
+        let c1 = crate::linalg::threads::with_threads(1, || a.matmul_tn(&b));
+        for t in [2, 3, 4, 8] {
+            let ct = crate::linalg::threads::with_threads(t, || a.matmul_tn(&b));
+            assert_eq!(c1, ct, "threads={t}");
+        }
     }
 
     #[test]

@@ -168,6 +168,19 @@ impl Operand {
     pub fn gram_outer(&self) -> Matrix {
         self.as_ref().gram_outer()
     }
+
+    /// Block product `A * X` for a dense `cols x k` block: blocked GEMM
+    /// on dense operands, `O(nnz * k)` SpMM on CSR. The BLAS-3 primitive
+    /// of the multi-RHS solve path ([`crate::solvers::block`]).
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        self.as_ref().matmul(x)
+    }
+
+    /// Block product `A^T * Y` for a dense `rows x k` block (`O(n d k)`
+    /// dense, `O(nnz * k)` CSR), without forming the transpose.
+    pub fn matmul_t(&self, y: &Matrix) -> Matrix {
+        self.as_ref().matmul_t(y)
+    }
 }
 
 impl<'a> OperandRef<'a> {
@@ -261,6 +274,22 @@ impl<'a> OperandRef<'a> {
             OperandRef::Sparse(c) => c.gram_outer(),
         }
     }
+
+    /// Block product `A * X` (`cols x k` block; GEMM dense, SpMM CSR).
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        match self {
+            OperandRef::Dense(m) => m.matmul(x),
+            OperandRef::Sparse(c) => c.matmul(x),
+        }
+    }
+
+    /// Block product `A^T * Y` (`rows x k` block), transpose-free.
+    pub fn matmul_t(&self, y: &Matrix) -> Matrix {
+        match self {
+            OperandRef::Dense(m) => m.matmul_tn(y),
+            OperandRef::Sparse(c) => c.matmul_t(y),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +328,11 @@ mod tests {
         }
         assert!(od.gram().max_abs_diff(&os.gram()) < 1e-12);
         assert!(od.gram_outer().max_abs_diff(&os.gram_outer()) < 1e-12);
+        // Block kernels agree across storage too.
+        let xb = Matrix::from_fn(9, 4, |i, j| ((i * 4 + j) as f64 * 0.21).sin());
+        let yb = Matrix::from_fn(21, 3, |i, j| ((i * 3 + j) as f64 * 0.13).cos());
+        assert!(od.matmul(&xb).max_abs_diff(&os.matmul(&xb)) < 1e-12);
+        assert!(od.matmul_t(&yb).max_abs_diff(&os.matmul_t(&yb)) < 1e-12);
         assert!(od
             .transpose()
             .dense()

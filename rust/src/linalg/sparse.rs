@@ -338,6 +338,90 @@ impl CsrMatrix {
         g
     }
 
+    /// SpMM `A * X` for a dense `cols x k` block `X`, in `O(nnz * k)`:
+    /// output row `i` accumulates one length-`k` axpy per stored entry of
+    /// row `i`, so every loaded CSR element does `2k` flops (BLAS-3
+    /// arithmetic intensity — the block-RHS hot path). Row-parallel over
+    /// the independent output rows; each output row keeps its serial
+    /// accumulation order, so the result is bitwise identical at any
+    /// thread count.
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows(), self.cols, "matmul dimension mismatch");
+        let k = x.cols();
+        let mut out = Matrix::zeros(self.rows, k);
+        if k == 0 || self.rows == 0 {
+            return out;
+        }
+        let flops = 2.0 * self.nnz() as f64 * k as f64;
+        let t = if threads::worth_parallelizing(flops) {
+            threads::current().min(self.rows)
+        } else {
+            1
+        };
+        let chunk = (self.rows + t - 1) / t;
+        let jobs: Vec<(usize, &mut [f64])> = out
+            .as_mut_slice()
+            .chunks_mut(chunk * k)
+            .enumerate()
+            .map(|(i, rows)| (i * chunk, rows))
+            .collect();
+        threads::run_jobs(t, jobs, |(r0, rows)| {
+            for (i, orow) in rows.chunks_mut(k).enumerate() {
+                let (cols, vals) = self.row(r0 + i);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    axpy(v, x.row(c as usize), orow);
+                }
+            }
+        });
+        out
+    }
+
+    /// Scatter rows `r0..r1` of the SpMM `A^T Y` into `out` (`cols x k`
+    /// row-major): `out[c][:] += v * y[row][:]` per stored entry.
+    fn scatter_rows_t_block(&self, r0: usize, r1: usize, y: &Matrix, out: &mut [f64]) {
+        let k = y.cols();
+        for i in r0..r1 {
+            let yrow = y.row(i);
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                axpy(v, yrow, &mut out[c as usize * k..(c as usize + 1) * k]);
+            }
+        }
+    }
+
+    /// SpMM `A^T * Y` for a dense `rows x k` block `Y`, in `O(nnz * k)`.
+    /// A reduction over input rows: above the parallel threshold the rows
+    /// split into [`threads::REDUCE_PARTS`] fixed chunks whose partial
+    /// blocks reduce in chunk order — bitwise identical at any thread
+    /// count (same policy as [`CsrMatrix::matvec_t_add`]).
+    pub fn matmul_t(&self, y: &Matrix) -> Matrix {
+        assert_eq!(y.rows(), self.rows, "matmul_t dimension mismatch");
+        let (d, k) = (self.cols, y.cols());
+        let mut out = Matrix::zeros(d, k);
+        if d == 0 || k == 0 || self.rows == 0 {
+            return out;
+        }
+        let flops = 2.0 * self.nnz() as f64 * k as f64;
+        let parts = threads::REDUCE_PARTS;
+        if !threads::worth_parallelizing(flops) || self.rows < 2 * parts {
+            self.scatter_rows_t_block(0, self.rows, y, out.as_mut_slice());
+            return out;
+        }
+        let chunk = (self.rows + parts - 1) / parts;
+        let mut partials = vec![0.0; parts * d * k];
+        let jobs: Vec<(usize, &mut [f64])> = partials.chunks_mut(d * k).enumerate().collect();
+        let t = threads::current().min(parts);
+        threads::run_jobs(t, jobs, |(p, buf)| {
+            let r0 = (p * chunk).min(self.rows);
+            let r1 = (r0 + chunk).min(self.rows);
+            self.scatter_rows_t_block(r0, r1, y, buf);
+        });
+        for p in 0..parts {
+            axpy(1.0, &partials[p * d * k..(p + 1) * d * k], out.as_mut_slice());
+        }
+        out
+    }
+
     /// `G * A` for a dense left operand `G` (`p x rows`) in `O(p * nnz)` —
     /// the sparse fast path for applying a dense (Gaussian) sketch block.
     /// Row-parallel over the independent output rows (bitwise thread-count
@@ -467,6 +551,53 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(12);
         let g = Matrix::from_fn(6, 22, |_, _| rng.next_gaussian());
         assert!(csr.left_mul(&g).max_abs_diff(&g.matmul(&dense)) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_block_matches_dense() {
+        let (csr, dense) = random_sparse(26, 10, 0.3, 20);
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let x = Matrix::from_fn(10, 5, |_, _| rng.next_gaussian());
+        assert!(csr.matmul(&x).max_abs_diff(&dense.matmul(&x)) < 1e-12);
+        // Consistency with the vector kernel on a one-column block.
+        let v: Vec<f64> = (0..10).map(|i| (i as f64 * 0.4).cos()).collect();
+        let vm = Matrix::from_vec(10, 1, v.clone());
+        let y = csr.matvec(&v);
+        let ym = csr.matmul(&vm);
+        for i in 0..26 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmul_t_block_matches_dense() {
+        let (csr, dense) = random_sparse(24, 8, 0.35, 22);
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let y = Matrix::from_fn(24, 4, |_, _| rng.next_gaussian());
+        assert!(csr.matmul_t(&y).max_abs_diff(&dense.matmul_tn(&y)) < 1e-12);
+        let v: Vec<f64> = (0..24).map(|i| (i as f64 * 0.2).sin()).collect();
+        let vm = Matrix::from_vec(24, 1, v.clone());
+        let w = csr.matvec_t(&v);
+        let wm = csr.matmul_t(&vm);
+        for j in 0..8 {
+            assert!((w[j] - wm.get(j, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_kernels_bitwise_thread_invariant() {
+        // 2 * nnz * k ~ 2 * 0.5*512*96 * 16 ~ 7.9e5 crosses the threshold.
+        let (csr, _) = random_sparse(512, 96, 0.5, 24);
+        assert!(2 * csr.nnz() * 16 >= 400_000, "test premise: above threshold");
+        let mut rng = Xoshiro256::seed_from_u64(25);
+        let x = Matrix::from_fn(96, 16, |_, _| rng.next_gaussian());
+        let y = Matrix::from_fn(512, 16, |_, _| rng.next_gaussian());
+        let mm1 = with_threads(1, || csr.matmul(&x));
+        let mt1 = with_threads(1, || csr.matmul_t(&y));
+        for t in [2, 3, 8] {
+            assert_eq!(with_threads(t, || csr.matmul(&x)), mm1, "matmul t={t}");
+            assert_eq!(with_threads(t, || csr.matmul_t(&y)), mt1, "matmul_t t={t}");
+        }
     }
 
     #[test]

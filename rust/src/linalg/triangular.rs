@@ -3,8 +3,20 @@
 //! These back the Cholesky-based ridge solves and the pCG baseline's
 //! R-factor preconditioner applications — both on the per-iteration hot
 //! path, so the loops are written over contiguous rows only.
+//!
+//! The `*_matrix_in_place` forms solve against an `n x k` block of
+//! right-hand sides at once (row `i` of the block is updated by streams
+//! of length-`k` fused loops — BLAS-3 arithmetic intensity instead of
+//! `k` separate BLAS-2 sweeps over `L`). Above the
+//! [`super::threads::worth_parallelizing`] threshold the `k` columns
+//! split across scoped threads (one transpose puts each column
+//! contiguous); every column is computed with the exact per-element
+//! operation order of the serial vector kernels, so the block solves are
+//! bitwise identical at any thread count *and* bitwise identical to `k`
+//! independent vector solves.
 
 use super::matrix::Matrix;
+use super::threads;
 
 /// Solve `L y = b` in place (`x` holds `b` on entry, the solution on
 /// exit), `L` lower-triangular (entries above the diagonal are ignored).
@@ -107,6 +119,108 @@ pub fn solve_upper_transpose(u: &Matrix, b: &[f64]) -> Vec<f64> {
     y
 }
 
+/// Effective thread count for an `n x n` triangular solve against `k`
+/// right-hand sides (`0` work stays serial; parallelism is over columns).
+fn block_threads(n: usize, k: usize) -> usize {
+    let flops = n as f64 * n as f64 * k as f64;
+    if k > 1 && threads::worth_parallelizing(flops) {
+        threads::current().min(k)
+    } else {
+        1
+    }
+}
+
+/// Run one vector triangular solve per column of `b` (`n x k`) across
+/// threads: transpose once so each column is a contiguous row, deal the
+/// columns to scoped workers, transpose back. Each column runs the exact
+/// serial vector kernel, so the result is bitwise identical to `k`
+/// sequential vector solves regardless of the thread count. Shared with
+/// [`crate::linalg::cholesky::Cholesky::solve_matrix_in_place`], whose
+/// fused forward+back per-column closure rides the same column dealing —
+/// the determinism guarantee lives in exactly one place.
+pub(super) fn solve_columns_parallel(b: &mut Matrix, t: usize, f: impl Fn(&mut [f64]) + Sync) {
+    let n = b.rows();
+    let mut bt = b.transpose();
+    let jobs: Vec<&mut [f64]> = bt.as_mut_slice().chunks_mut(n).collect();
+    threads::run_jobs(t, jobs, f);
+    *b = bt.transpose();
+}
+
+/// Solve `L Y = B` in place for an `n x k` block `b` (`B` on entry, `Y`
+/// on exit), `L` lower-triangular. Each element follows the serial
+/// [`solve_lower_in_place`] operation order (subtract `l[i][j] * y[j]`
+/// for `j` ascending, then divide), so the block solve is bitwise
+/// identical to `k` vector solves at any thread count.
+pub fn solve_lower_matrix_in_place(l: &Matrix, b: &mut Matrix) {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n, "solve_lower_matrix dimension mismatch");
+    let k = b.cols();
+    if n == 0 || k == 0 {
+        return;
+    }
+    let t = block_threads(n, k);
+    if t > 1 {
+        solve_columns_parallel(b, t, |col| solve_lower_in_place(l, col));
+        return;
+    }
+    let data = b.as_mut_slice();
+    for i in 0..n {
+        let row = l.row(i);
+        let (solved, rest) = data.split_at_mut(i * k);
+        let bi = &mut rest[..k];
+        for j in 0..i {
+            let lij = row[j];
+            let bj = &solved[j * k..(j + 1) * k];
+            for (x, y) in bi.iter_mut().zip(bj) {
+                *x -= lij * *y;
+            }
+        }
+        let d = row[i];
+        assert!(d != 0.0, "singular lower-triangular matrix at {i}");
+        for x in bi.iter_mut() {
+            *x /= d;
+        }
+    }
+}
+
+/// Solve `L^T Y = B` in place for an `n x k` block, without forming
+/// `L^T`. Same per-element operation order as
+/// [`solve_lower_transpose_in_place`], hence bitwise identical to `k`
+/// vector solves at any thread count.
+pub fn solve_lower_transpose_matrix_in_place(l: &Matrix, b: &mut Matrix) {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n, "solve_lower_transpose_matrix dimension mismatch");
+    let k = b.cols();
+    if n == 0 || k == 0 {
+        return;
+    }
+    let t = block_threads(n, k);
+    if t > 1 {
+        solve_columns_parallel(b, t, |col| solve_lower_transpose_in_place(l, col));
+        return;
+    }
+    let data = b.as_mut_slice();
+    for i in (0..n).rev() {
+        let d = l.get(i, i);
+        assert!(d != 0.0, "singular matrix at {i}");
+        let (prefix, rest) = data.split_at_mut(i * k);
+        let bi = &mut rest[..k];
+        for x in bi.iter_mut() {
+            *x /= d;
+        }
+        let lrow = l.row(i);
+        for j in 0..i {
+            let lij = lrow[j];
+            let bj = &mut prefix[j * k..(j + 1) * k];
+            for (x, y) in bj.iter_mut().zip(bi.iter()) {
+                *x -= lij * *y;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,5 +289,63 @@ mod tests {
         let mut l = Matrix::eye(3);
         l.set(1, 1, 0.0);
         solve_lower(&l, &[1.0, 1.0, 1.0]);
+    }
+
+    fn random_block(n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Matrix::from_fn(n, k, |_, _| rng.next_gaussian())
+    }
+
+    #[test]
+    fn block_lower_solve_bitwise_matches_vector_solves() {
+        let l = random_lower(13, 5);
+        let b = random_block(13, 7, 6);
+        let mut blk = b.clone();
+        solve_lower_matrix_in_place(&l, &mut blk);
+        for j in 0..7 {
+            let col: Vec<f64> = (0..13).map(|i| b.get(i, j)).collect();
+            let x = solve_lower(&l, &col);
+            for i in 0..13 {
+                assert_eq!(blk.get(i, j), x[i], "col {j} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_lower_transpose_solve_bitwise_matches_vector_solves() {
+        let l = random_lower(11, 7);
+        let b = random_block(11, 4, 8);
+        let mut blk = b.clone();
+        solve_lower_transpose_matrix_in_place(&l, &mut blk);
+        for j in 0..4 {
+            let col: Vec<f64> = (0..11).map(|i| b.get(i, j)).collect();
+            let x = solve_lower_transpose(&l, &col);
+            for i in 0..11 {
+                assert_eq!(blk.get(i, j), x[i], "col {j} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_solves_bitwise_thread_invariant() {
+        use crate::linalg::threads::with_threads;
+        // 512^2 * 8 ~ 2e6 flops crosses the parallel threshold.
+        let l = random_lower(512, 9);
+        let b = random_block(512, 8, 10);
+        let serial = with_threads(1, || {
+            let mut x = b.clone();
+            solve_lower_matrix_in_place(&l, &mut x);
+            solve_lower_transpose_matrix_in_place(&l, &mut x);
+            x
+        });
+        for t in [2, 3, 8] {
+            let par = with_threads(t, || {
+                let mut x = b.clone();
+                solve_lower_matrix_in_place(&l, &mut x);
+                solve_lower_transpose_matrix_in_place(&l, &mut x);
+                x
+            });
+            assert_eq!(par, serial, "threads={t}");
+        }
     }
 }

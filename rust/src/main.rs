@@ -11,6 +11,7 @@
 //!                --sketch srht --name exp-4k
 //! effdim client query   --addr 127.0.0.1:7199 --model 1 --nu 0.5 --include-x
 //! effdim client query   --addr 127.0.0.1:7199 --model 1 --nus 10,1,0.1
+//! effdim client query   --addr 127.0.0.1:7199 --model 1 --nu 0.5 --rhs-file batch.txt
 //! effdim client predict --addr 127.0.0.1:7199 --model 1 --nu 0.5 --row 0.1,0.2,...
 //! effdim client evict   --addr 127.0.0.1:7199 --model 1
 //! effdim client models  --addr 127.0.0.1:7199
@@ -61,6 +62,9 @@ const USAGE: &str = "usage: effdim <solve|path|serve|request|client|info|solvers
   client <register|query|predict|evict|models> drives a server's model
     registry: --model id, --nu x | --nus a,b,c, --eps x, --include-x,
     --sketch gaussian|srht|sparse, --name s, --row v1,v2,... (predict);
+    query --rhs-file f sends a batched block multi-RHS query: one
+    right-hand side per line (comma/space separated, # comments), all
+    solved jointly against the model's cached sketch;
     register accepts the same workload flags as solve (--profile/--data)
   --solver takes a spec string: name[@key=value,...]
     names : direct | cg | pcg-<kind> | ihs-<kind> | polyak-ihs-<kind>
@@ -404,6 +408,44 @@ fn strict_f64_list(args: &Args, key: &str) -> Result<Option<Vec<f64>>, i32> {
     Ok(Some(out))
 }
 
+/// Parse a `--rhs-file` batch: one right-hand side per non-empty line,
+/// entries separated by commas and/or whitespace, `#` starts a comment.
+/// Strict like the wire decoder: any unparseable or non-finite entry is
+/// an error (a silently shortened right-hand side would solve a
+/// different system than the caller named).
+fn parse_rhs_file(text: &str) -> Result<Vec<Vec<f64>>, String> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut row = Vec::new();
+        for tok in line.split(|c: char| c == ',' || c.is_whitespace()).filter(|t| !t.is_empty()) {
+            match tok.parse::<f64>() {
+                Ok(v) if v.is_finite() => row.push(v),
+                _ => {
+                    return Err(format!(
+                        "line {}: bad entry {tok:?} (want finite numbers)",
+                        lineno + 1
+                    ))
+                }
+            }
+        }
+        if row.is_empty() {
+            // A non-empty line of bare separators (e.g. a stray ",")
+            // must fail here with file context, not as a server-side
+            // zero-length-rhs rejection.
+            return Err(format!("line {}: no entries", lineno + 1));
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        return Err("no right-hand sides in file".into());
+    }
+    Ok(rows)
+}
+
 /// Assemble the JSON line for one client action.
 fn build_client_request(args: &Args, action: &str) -> Result<String, i32> {
     let mut fields: Vec<(&str, Json)> = vec![("cmd", Json::from(action))];
@@ -455,11 +497,43 @@ fn build_client_request(args: &Args, action: &str) -> Result<String, i32> {
         }
         "query" => {
             fields.push(("model", Json::from(model()?)));
-            match strict_f64_list(args, "nus")? {
-                Some(nus) if !nus.is_empty() => {
-                    fields.push(("nus", Json::Arr(nus.into_iter().map(Json::from).collect())));
+            let rhs_batch = match args.get("rhs-file") {
+                Some(path) => {
+                    if args.get("nus").is_some() {
+                        eprintln!("--rhs-file cannot be combined with --nus (the block batch solves at one nu)");
+                        return Err(2);
+                    }
+                    let text = std::fs::read_to_string(path).map_err(|e| {
+                        eprintln!("cannot read {path}: {e}");
+                        2
+                    })?;
+                    let rows = parse_rhs_file(&text).map_err(|e| {
+                        eprintln!("{path}: {e}");
+                        2
+                    })?;
+                    Some(rows)
                 }
-                _ => fields.push(("nu", Json::from(args.get_f64("nu", 1.0)))),
+                None => None,
+            };
+            match rhs_batch {
+                Some(rows) => {
+                    // Block multi-RHS query: one nu, k right-hand sides.
+                    fields.push(("nu", Json::from(args.get_f64("nu", 1.0))));
+                    fields.push((
+                        "bs",
+                        Json::Arr(
+                            rows.into_iter()
+                                .map(|r| Json::Arr(r.into_iter().map(Json::from).collect()))
+                                .collect(),
+                        ),
+                    ));
+                }
+                None => match strict_f64_list(args, "nus")? {
+                    Some(nus) if !nus.is_empty() => {
+                        fields.push(("nus", Json::Arr(nus.into_iter().map(Json::from).collect())));
+                    }
+                    _ => fields.push(("nu", Json::from(args.get_f64("nu", 1.0)))),
+                },
             }
             fields.push(("eps", Json::from(args.get_f64("eps", 1e-8))));
             if args.has("include-x") {
@@ -530,7 +604,14 @@ fn cmd_info(args: &Args) -> i32 {
     // Exact spectrum via SVD — densifies CSR operands (info is an
     // offline diagnostic; the solve path never does this).
     let sigma = effdim::linalg::svd::singular_values(&a.dense());
-    let d_e = effdim::theory::effective_dimension_from_spectrum(&sigma, nu);
+    // User-provided nu: validate instead of printing NaN columns.
+    let d_e = match effdim::theory::try_effective_dimension_from_spectrum(&sigma, nu) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     println!("n = {}, d = {}, nnz = {} (density {:.4})", a.rows(), a.cols(), a.nnz(), a.density());
     println!("sigma_1 = {:.4e}, sigma_d = {:.4e}", sigma[0], sigma.last().unwrap());
     println!("nu = {nu:.3e}");

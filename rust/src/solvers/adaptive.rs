@@ -85,6 +85,26 @@ impl AdaptiveSessionState {
     pub fn approx_bytes(&self) -> usize {
         self.engine.as_ref().map_or(0, SketchEngine::approx_bytes) + self.cache.approx_bytes()
     }
+
+    /// Decompose into `(engine, cache, rng)` — the block multi-RHS solver
+    /// ([`crate::solvers::block`]) drives these directly instead of going
+    /// through [`AdaptiveSolver::resume`].
+    pub(crate) fn into_parts(self) -> (Option<SketchEngine>, WoodburyCache, Xoshiro256) {
+        (self.engine, self.cache, self.rng)
+    }
+
+    /// Reassemble after a block solve. The engine and cache must describe
+    /// the same sketch rows (the block solver grows them in lockstep).
+    pub(crate) fn from_parts(
+        engine: Option<SketchEngine>,
+        cache: WoodburyCache,
+        rng: Xoshiro256,
+    ) -> Self {
+        if let Some(e) = &engine {
+            debug_assert_eq!(e.m(), cache.m(), "engine/cache row counts diverged");
+        }
+        Self { engine, cache, rng }
+    }
 }
 
 /// Which candidate schedule Algorithm 1 runs.

@@ -1,0 +1,413 @@
+//! Block multi-RHS IHS: solve `k` ridge systems that share one `A` (and
+//! one `nu`) through a single BLAS-3 iteration.
+//!
+//! The sketched Hessian `H_S = (S̃A)^T (S̃A) + nu^2 I` depends only on
+//! `(A, seed, nu)` — never on the right-hand side — so `k` systems
+//! `H x_j = A^T b_j` can share one grown
+//! [`SketchEngine`](crate::sketch::engine::SketchEngine) and one
+//! [`WoodburyCache`]. Solving them jointly moves every hot operation
+//! from matvec arithmetic intensity to a block product over a `d x k`
+//! (or `n x k`) panel:
+//!
+//! * the gradient block `G = A^T (A X) + nu^2 X - A^T B` is two
+//!   [`Operand::matmul`]/[`Operand::matmul_t`] calls (GEMM dense,
+//!   `O(nnz k)` SpMM on CSR) instead of `k` GEMV sweeps;
+//! * the preconditioned direction is one
+//!   [`WoodburyCache::apply_inverse_block`] (GEMM + multi-column
+//!   Cholesky solve) instead of `k` vector applies.
+//!
+//! The iteration is the gradient-IHS schedule (the paper's §5
+//! gradient-only variant — per-column Polyak histories would need
+//! per-column geometric-mean bookkeeping for no measured gain in the
+//! serving regime): every active column takes `x_j <- x_j - mu_gd g̃_j`,
+//! and the sketched Newton decrement `r_j = 1/2 g_j^T H_S^{-1} g_j` is
+//! monitored **per column**. When any active column misses the `c_gd`
+//! one-step target the shared sketch grows (all columns benefit from the
+//! extra rows; at the `next_pow2(n)` cap the cache holds the exact
+//! Hessian and steps are damped Newton, so the block cannot live-lock).
+//! Convergence is tracked per column with the same *cold-referenced*
+//! gradient-norm stop the session's single-RHS path uses
+//! (`||g_j|| <= eps * ||A^T b_j||`); converged columns are retired from
+//! the active set immediately — they drop out of every subsequent GEMM —
+//! so a batch with a few hard columns narrows instead of paying `k`-wide
+//! iterations to the end.
+//!
+//! Amortizing one factorization across many solves is the regime of
+//! Lacotte & Pilanci's adaptive sketching preconditioners
+//! (arXiv:2104.14101); reusing a single embedding across all columns is
+//! justified by the SRHT analysis of Lacotte, Dobriban & Liu
+//! (arXiv:2002.00864), whose quality parameters depend only on
+//! `(n, d, m)`, not on the right-hand side.
+//!
+//! Surfaced as [`ModelSession::solve_block`] and, over the wire, as the
+//! `query` command's `"bs"` batch (PROTOCOL.md).
+//!
+//! [`ModelSession::solve_block`]: crate::solvers::session::ModelSession::solve_block
+
+use super::adaptive::{AdaptiveConfig, AdaptiveSessionState};
+use super::woodbury::WoodburyCache;
+use super::{Solution, SolveReport};
+use crate::linalg::{Matrix, Operand};
+use crate::rng::Xoshiro256;
+use crate::sketch::engine::SketchEngine;
+use std::time::Instant;
+
+/// Result of a block solve: one [`Solution`] per right-hand-side column
+/// (input order) plus the possibly-grown session state, handed back so
+/// the next solve on the same data resumes instead of re-sketching.
+pub struct BlockOutcome {
+    /// Per-column solutions, in input column order.
+    pub solutions: Vec<Solution>,
+    /// Sketch / factorization / RNG state for the next resumed solve.
+    pub state: AdaptiveSessionState,
+}
+
+/// Per-column dot products of two equal-shape row-major blocks:
+/// `out[j] = sum_i a[i][j] * b[i][j]` — one cache-friendly pass over the
+/// rows accumulates all `k` column dots at once.
+fn column_dots(a: &Matrix, b: &Matrix) -> Vec<f64> {
+    debug_assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let k = a.cols();
+    let mut out = vec![0.0; k];
+    for i in 0..a.rows() {
+        let (ra, rb) = (a.row(i), b.row(i));
+        for j in 0..k {
+            out[j] += ra[j] * rb[j];
+        }
+    }
+    out
+}
+
+/// Copy the selected columns of `src` into a fresh (narrower) block.
+fn gather_columns(src: &Matrix, cols: &[usize]) -> Matrix {
+    Matrix::from_fn(src.rows(), cols.len(), |i, jj| src.get(i, cols[jj]))
+}
+
+/// Block ridge gradient `G = A^T (A X) + nu^2 X - AtB` over the active
+/// `d x k` panel: two block products plus one fused row pass.
+fn block_gradient(a: &Operand, nu2: f64, x: &Matrix, atb: &Matrix) -> Matrix {
+    let r = a.matmul(x); // n x k
+    let mut g = a.matmul_t(&r); // d x k
+    for i in 0..g.rows() {
+        let xr = x.row(i);
+        let br = atb.row(i);
+        let gr = g.row_mut(i);
+        for j in 0..gr.len() {
+            gr[j] += nu2 * xr[j] - br[j];
+        }
+    }
+    g
+}
+
+/// Solve the `k` systems `(A^T A + nu^2 I) x_j = atb_j` (columns of the
+/// `d x k` block `atb`) jointly, from zero starts, to the cold-referenced
+/// per-column tolerance `||g_j|| <= eps * ||atb_j||`.
+///
+/// `state` resumes a previous solve's sketch (zero sketch application;
+/// only [`WoodburyCache::set_nu`]'s re-factor is paid when `nu` changed);
+/// `None` builds a fresh engine at `config.m_initial` from `seed`. The
+/// returned per-column [`SolveReport`]s share the block's sketch/factor/
+/// wall time buckets (the work is genuinely shared — the buckets are not
+/// additive across columns) while `iterations`, `rejections`,
+/// `doublings` and `converged` are tracked per column.
+pub fn solve_block(
+    a: &Operand,
+    nu: f64,
+    atb: &Matrix,
+    eps: f64,
+    config: &AdaptiveConfig,
+    state: Option<AdaptiveSessionState>,
+    seed: u64,
+) -> BlockOutcome {
+    let created = Instant::now();
+    let d = a.cols();
+    let k = atb.cols();
+    assert_eq!(atb.rows(), d, "atb block must be d x k");
+    assert!(nu > 0.0 && nu.is_finite(), "block solve needs a positive finite nu");
+    assert!(eps > 0.0 && eps.is_finite(), "block solve needs a positive finite eps");
+    let nu2 = nu * nu;
+    let params = config.params();
+    let m_cap = crate::sketch::srht::next_pow2(a.rows());
+
+    let mut sketch_time = 0.0f64;
+    let mut factor_time = 0.0f64;
+
+    let (mut engine, mut cache, mut rng, mut m) = match state {
+        Some(st) => {
+            let (engine, mut cache, rng) = st.into_parts();
+            if let Some(e) = &engine {
+                assert_eq!(e.kind(), config.kind, "resume: sketch family changed");
+                assert_eq!(e.n(), a.rows(), "resume: problem shape changed");
+                assert_eq!(e.m(), cache.m(), "resume: engine/cache row counts diverged");
+            }
+            assert_eq!(cache.d(), d, "resume: problem shape changed");
+            let m = engine.as_ref().map_or(m_cap, SketchEngine::m);
+            let t0 = Instant::now();
+            cache.set_nu(nu);
+            factor_time += t0.elapsed().as_secs_f64();
+            (engine, cache, rng, m)
+        }
+        None => {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let m = config.m_initial.min(m_cap);
+            let t0 = Instant::now();
+            let engine = SketchEngine::new(config.kind, m, a, &mut rng);
+            sketch_time += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let cache = WoodburyCache::new_scaled(
+                engine.sa_unnormalized().clone(),
+                nu,
+                engine.scale(),
+            );
+            factor_time += t0.elapsed().as_secs_f64();
+            (Some(engine), cache, rng, m)
+        }
+    };
+
+    let label = format!("block-adaptive-{}", config.kind);
+    let mut reports: Vec<SolveReport> =
+        (0..k).map(|_| SolveReport::new(label.clone())).collect();
+    // Final iterates; column j is written when it retires (or at the cap).
+    let mut x_full = Matrix::zeros(d, k);
+
+    // Cold-referenced per-column targets: ||g_j|| <= eps * ||atb_j|| — the
+    // criterion a from-zero single-RHS session solve uses (g(0) = -atb).
+    let atb_norms: Vec<f64> = column_dots(atb, atb).iter().map(|v| v.sqrt()).collect();
+    let tols: Vec<f64> = atb_norms.iter().map(|&v| eps * v).collect();
+
+    // Columns whose gradient at zero already meets the target (b_j with
+    // A^T b_j = 0, or eps >= 1) are optimal at x = 0 and never enter the
+    // active set.
+    let mut active: Vec<usize> = Vec::new();
+    for (j, (&norm, &tol)) in atb_norms.iter().zip(&tols).enumerate() {
+        if norm <= tol {
+            reports[j].converged = true;
+        } else {
+            active.push(j);
+        }
+    }
+
+    // Active-panel state (gathered columns of the full problem).
+    let mut x_act = Matrix::zeros(d, active.len());
+    let mut atb_act = gather_columns(atb, &active);
+    // g(0) = -atb.
+    let mut g_act = {
+        let mut g = atb_act.clone();
+        crate::linalg::scale(-1.0, g.as_mut_slice());
+        g
+    };
+    let mut gt_act = cache.apply_inverse_block(&g_act);
+    let mut r_act: Vec<f64> =
+        column_dots(&g_act, &gt_act).iter().map(|v| 0.5 * v).collect();
+
+    let mut iter = 0usize;
+    while !active.is_empty() && iter < config.max_iters {
+        // --- gradient-IHS candidate over the whole active panel ---
+        let mut x_cand = x_act.clone();
+        x_cand.add_scaled(-params.mu_gd, &gt_act);
+        let mut g_cand = block_gradient(a, nu2, &x_cand, &atb_act);
+        let mut gt_cand = cache.apply_inverse_block(&g_cand);
+        let mut r_cand: Vec<f64> =
+            column_dots(&g_cand, &gt_cand).iter().map(|v| 0.5 * v).collect();
+        let gnorm_cand: Vec<f64> =
+            column_dots(&g_cand, &g_cand).iter().map(|v| v.sqrt()).collect();
+
+        // --- retire columns whose candidate already meets its target:
+        // they accept their step immediately (per-column acceptance) and
+        // drop out of every subsequent block product — including any
+        // growth re-evaluation and retried candidate below, which they
+        // must neither pay for nor be billed rejections/doublings for.
+        let keep_local: Vec<usize> = {
+            let mut keep = Vec::with_capacity(active.len());
+            for (jj, &j) in active.iter().enumerate() {
+                if gnorm_cand[jj] <= tols[j] {
+                    reports[j].converged = true;
+                    reports[j].iterations += 1;
+                    for i in 0..d {
+                        x_full.set(i, j, x_cand.get(i, jj));
+                    }
+                } else {
+                    keep.push(jj);
+                }
+            }
+            keep
+        };
+        if keep_local.len() != active.len() {
+            active = keep_local.iter().map(|&jj| active[jj]).collect();
+            if active.is_empty() {
+                break;
+            }
+            x_act = gather_columns(&x_act, &keep_local);
+            x_cand = gather_columns(&x_cand, &keep_local);
+            g_act = gather_columns(&g_act, &keep_local);
+            g_cand = gather_columns(&g_cand, &keep_local);
+            gt_cand = gather_columns(&gt_cand, &keep_local);
+            atb_act = gather_columns(&atb_act, &keep_local);
+            r_act = keep_local.iter().map(|&jj| r_act[jj]).collect();
+            r_cand = keep_local.iter().map(|&jj| r_cand[jj]).collect();
+            // gt_act is not regathered: the accept path replaces it with
+            // gt_cand and the grow path recomputes it from g_act.
+        }
+
+        // --- acceptance over the surviving panel: every column's
+        // one-step decrement ratio must meet c_gd (a decrement at
+        // floating-point zero passes trivially) ---
+        let all_pass = (0..active.len())
+            .all(|jj| r_act[jj] <= 0.0 || r_cand[jj] <= params.c_gd * r_act[jj]);
+        if !(all_pass || m >= m_cap) {
+            // --- grow the shared sketch (steps 14-15, block-wide) ---
+            for &j in &active {
+                reports[j].rejections += 1;
+                reports[j].doublings += 1;
+            }
+            let new_m = (m * config.growth).min(m_cap);
+            if new_m >= m_cap {
+                // At the cap, drop sketching: the cache holds the exact
+                // Hessian and forced steps are damped exact-Newton (same
+                // fallback as the single-RHS adaptive solver).
+                let t0 = Instant::now();
+                let sa = a.dense().into_owned();
+                sketch_time += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                cache = WoodburyCache::new(sa, nu);
+                factor_time += t0.elapsed().as_secs_f64();
+                engine = None;
+            } else {
+                let e = engine.as_mut().expect("engine lives until the cap");
+                let t0 = Instant::now();
+                let rows = e.grow(new_m, a, &mut rng);
+                sketch_time += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                cache.grow(&rows, e.scale());
+                factor_time += t0.elapsed().as_secs_f64();
+            }
+            m = new_m;
+            // Unchanged gradients, new geometry: re-evaluate the
+            // preconditioned panel and retry the same iteration.
+            gt_act = cache.apply_inverse_block(&g_act);
+            r_act = column_dots(&g_act, &gt_act).iter().map(|v| 0.5 * v).collect();
+            continue;
+        }
+
+        // --- accept the block step for the remaining columns ---
+        iter += 1;
+        x_act = x_cand;
+        g_act = g_cand;
+        gt_act = gt_cand;
+        r_act = r_cand;
+        for &j in &active {
+            reports[j].iterations += 1;
+        }
+    }
+
+    // Iteration-cap leftovers: record the current iterates, unconverged.
+    for (jj, &j) in active.iter().enumerate() {
+        for i in 0..d {
+            x_full.set(i, j, x_act.get(i, jj));
+        }
+    }
+
+    let wall = created.elapsed().as_secs_f64();
+    for rep in &mut reports {
+        rep.final_m = m;
+        rep.peak_m = m;
+        rep.sketch_time_s = sketch_time;
+        rep.factor_time_s = factor_time;
+        rep.wall_time_s = wall;
+        rep.iter_time_s = wall - sketch_time - factor_time;
+    }
+
+    let solutions = reports
+        .into_iter()
+        .enumerate()
+        .map(|(j, report)| Solution {
+            x: (0..d).map(|i| x_full.get(i, j)).collect(),
+            report,
+        })
+        .collect();
+
+    BlockOutcome {
+        solutions,
+        state: AdaptiveSessionState::from_parts(engine, cache, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::sketch::SketchKind;
+    use crate::solvers::{direct, RidgeProblem};
+
+    fn batch(n: usize, k: usize) -> (Matrix, Vec<Vec<f64>>) {
+        let bs: Vec<Vec<f64>> = (0..k)
+            .map(|j| (0..n).map(|i| ((i as f64 + 1.0) * (j as f64 + 0.7) * 0.11).sin()).collect())
+            .collect();
+        let mut bmat = Matrix::zeros(n, k);
+        for (j, b) in bs.iter().enumerate() {
+            for (i, &v) in b.iter().enumerate() {
+                bmat.set(i, j, v);
+            }
+        }
+        (bmat, bs)
+    }
+
+    #[test]
+    fn cold_block_solve_matches_direct_per_column() {
+        let ds = synthetic::exponential_decay(256, 32, 1);
+        let a = Operand::from(ds.a.dense().into_owned());
+        let (bmat, bs) = batch(256, 4);
+        let atb = a.matmul_t(&bmat);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let out = solve_block(&a, 0.5, &atb, 1e-10, &cfg, None, 3);
+        assert_eq!(out.solutions.len(), 4);
+        for (j, sol) in out.solutions.iter().enumerate() {
+            assert!(sol.report.converged, "column {j} did not converge");
+            assert_eq!(sol.report.solver, "block-adaptive-gaussian");
+            let p = RidgeProblem::new(a.clone(), bs[j].clone(), 0.5);
+            let x_star = direct::solve(&p);
+            let rel = p.prediction_error(&sol.x, &x_star)
+                / p.prediction_error(&vec![0.0; 32], &x_star);
+            assert!(rel < 1e-8, "column {j}: relative error {rel}");
+        }
+        assert!(out.state.m() >= 1);
+    }
+
+    #[test]
+    fn zero_rhs_column_is_immediately_optimal() {
+        let ds = synthetic::exponential_decay(128, 16, 2);
+        let a = Operand::from(ds.a.dense().into_owned());
+        let (mut bmat, _) = batch(128, 3);
+        for i in 0..128 {
+            bmat.set(i, 1, 0.0); // middle column: b = 0 -> x* = 0
+        }
+        let atb = a.matmul_t(&bmat);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let out = solve_block(&a, 0.8, &atb, 1e-9, &cfg, None, 5);
+        assert!(out.solutions[1].report.converged);
+        assert_eq!(out.solutions[1].report.iterations, 0);
+        assert!(out.solutions[1].x.iter().all(|&v| v == 0.0));
+        assert!(out.solutions[0].report.converged && out.solutions[2].report.converged);
+    }
+
+    #[test]
+    fn resumed_block_solve_applies_zero_sketch() {
+        let ds = synthetic::exponential_decay(256, 32, 4);
+        let a = Operand::from(ds.a.dense().into_owned());
+        let (bmat, _) = batch(256, 3);
+        let atb = a.matmul_t(&bmat);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        // First block solve grows the sketch from m_initial.
+        let first = solve_block(&a, 0.3, &atb, 1e-9, &cfg, None, 7);
+        assert!(first.solutions.iter().all(|s| s.report.converged));
+        let m1 = first.state.m();
+        // Resume at a larger nu: cached rows suffice — zero sketch work.
+        let second = solve_block(&a, 1.0, &atb, 1e-9, &cfg, Some(first.state), 7);
+        for sol in &second.solutions {
+            assert!(sol.report.converged);
+            assert_eq!(sol.report.sketch_time_s, 0.0, "resume must not re-sketch");
+            assert_eq!(sol.report.doublings, 0);
+        }
+        assert_eq!(second.state.m(), m1);
+    }
+}

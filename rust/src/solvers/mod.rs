@@ -9,6 +9,10 @@
 //!   `O(m d)` per iteration (Theorem 7's cost model).
 //! * [`ihs`] — fixed-sketch-size gradient-/Polyak-IHS (Theorems 1–2).
 //! * [`adaptive`] — **Algorithm 1** and its gradient-only variant.
+//! * [`block`] — the block multi-RHS path: `k` systems sharing one `A`
+//!   solved jointly through one grown sketch at BLAS-3 intensity, with
+//!   per-column convergence tracking and active-set shrinking (the
+//!   serving layer's batched-throughput primitive).
 //! * [`dual`] — the underdetermined case `d >= n` via the dual problem
 //!   (Appendix A.2).
 //! * [`path`] — regularization-path driver with warm starts (Figures 1, 3).
@@ -22,6 +26,7 @@
 
 pub mod adaptive;
 pub mod api;
+pub mod block;
 pub mod cg;
 pub mod direct;
 pub mod dual;

@@ -37,8 +37,9 @@
 //! per registered model behind a mutex and adds LRU byte-budget eviction.
 
 use super::adaptive::{AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver};
+use super::block;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
-use crate::linalg::Operand;
+use crate::linalg::{Matrix, Operand};
 use crate::sketch::SketchKind;
 use std::sync::Arc;
 
@@ -150,8 +151,12 @@ impl ModelSession {
     }
 
     /// Approximate heap footprint in bytes: operand + observations +
-    /// session sketch/factor state + cached solutions. Registries charge
-    /// this against their byte budget.
+    /// warm-start vector + session sketch/factor state + cached
+    /// solutions (each charged for its vectors *and* the fixed scalar
+    /// footprint of its entry — key bits plus the inline [`SolveReport`]
+    /// counters/label). Registries charge this against their byte
+    /// budget; undercounting here means the LRU budget admits more live
+    /// state than the operator configured.
     pub fn approx_bytes(&self) -> usize {
         let f64s = std::mem::size_of::<f64>();
         let operand = match &*self.a {
@@ -159,10 +164,19 @@ impl ModelSession {
             // CSR: values (f64) + column indices (u32) + row pointers.
             Operand::Sparse(c) => c.nnz() * (f64s + 4) + (c.rows() + 1) * f64s,
         };
-        let cached: usize =
-            self.solutions.iter().map(|s| (s.x.len() + s.report.error_trace.len()) * f64s).sum();
+        let cached: usize = self
+            .solutions
+            .iter()
+            .map(|s| {
+                (s.x.len() + s.report.error_trace.len()) * f64s
+                    + s.report.m_trace.len() * std::mem::size_of::<usize>()
+                    + s.report.solver.len()
+                    + std::mem::size_of::<CachedSolution>()
+            })
+            .sum();
         operand
             + (self.b.len() + self.atb.len()) * f64s
+            + self.warm.as_ref().map_or(0, |w| w.len() * f64s)
             + self.state.as_ref().map_or(0, AdaptiveSessionState::approx_bytes)
             + cached
     }
@@ -213,6 +227,14 @@ impl ModelSession {
         if nus.is_empty() {
             return Err("empty nu list".into());
         }
+        // Validate the whole request before ANY solve runs: a NaN slips
+        // past the pairwise ordering check below (`w[0] <= w[1]` is false
+        // when either side is NaN) and would otherwise only fail inside
+        // `check_nu_eps` mid-path, after earlier points already mutated
+        // the session's sketch/warm-start state.
+        for &nu in nus {
+            check_nu_eps(nu, eps)?;
+        }
         for w in nus.windows(2) {
             if w[0] <= w[1] {
                 return Err("path nus must be strictly decreasing".into());
@@ -238,6 +260,70 @@ impl ModelSession {
         let problem = RidgeProblem::from_parts(Arc::clone(&self.a), None, atb, nu);
         let x0 = vec![0.0; problem.d()];
         Ok(self.run_adaptive(&problem, &x0, eps))
+    }
+
+    /// Solve at `nu` against a *batch* of `k` alternate right-hand sides
+    /// in one block pass ([`crate::solvers::block`]): the gradient and
+    /// preconditioner applications run as `d x k` block products (GEMM /
+    /// SpMM) instead of `k` matvec sweeps, all columns share the
+    /// session's grown sketch (a resumed batch applies **zero** fresh
+    /// sketch — `sketch_time_s == 0.0` unless growth was forced), and
+    /// each column stops at the same cold-referenced criterion a
+    /// [`ModelSession::solve_rhs`] call would use
+    /// (`||g_j|| <= eps * ||A^T b_j||`). Converged columns retire from
+    /// the iteration immediately. Returns one [`Solution`] per input, in
+    /// order; like `solve_rhs`, the batch starts from zero and is not
+    /// cached (the warm start and solution cache belong to the
+    /// registered `b`). Counts `k` solves in [`ModelSession::query_stats`].
+    pub fn solve_block(
+        &mut self,
+        nu: f64,
+        bs: &[Vec<f64>],
+        eps: f64,
+    ) -> Result<Vec<Solution>, String> {
+        check_nu_eps(nu, eps)?;
+        if bs.is_empty() {
+            return Err("empty right-hand-side batch".into());
+        }
+        let n = self.n();
+        for (j, b) in bs.iter().enumerate() {
+            if b.len() != n {
+                return Err(format!("rhs {j} has {} entries, expected n = {n}", b.len()));
+            }
+            if b.iter().any(|v| !v.is_finite()) {
+                return Err(format!("non-finite entry in rhs {j}"));
+            }
+        }
+        self.queries += bs.len() as u64;
+        // One SpMM forms every A^T b_j at once; column j then feeds
+        // column j's cold-referenced stop target.
+        let k = bs.len();
+        let mut bmat = Matrix::zeros(n, k);
+        for (j, b) in bs.iter().enumerate() {
+            for (i, &v) in b.iter().enumerate() {
+                bmat.set(i, j, v);
+            }
+        }
+        let atb = self.a.matmul_t(&bmat);
+        // `state.take()` without an unwind guard is deliberate (same
+        // policy as `run_adaptive`): if the solver panics mid-growth the
+        // engine/cache pair may be inconsistent (rows appended to one
+        // but not the other), and resuming it would fail the resume
+        // invariants on every later query. A server-side `catch_panic`
+        // therefore leaves the session with `state == None` — the next
+        // query safely re-sketches from scratch instead of poisoning
+        // the model.
+        let outcome = block::solve_block(
+            &self.a,
+            nu,
+            &atb,
+            eps,
+            &self.config,
+            self.state.take(),
+            self.seed,
+        );
+        self.state = Some(outcome.state);
+        Ok(outcome.solutions)
     }
 
     /// Predict on new rows (each of length `d`): returns `row · x(nu)`
@@ -294,6 +380,11 @@ impl ModelSession {
             }
         };
         let stop = StopRule::GradientNorm { tol };
+        // No unwind guard on the taken state, deliberately: a panicking
+        // solve may leave the sketch/factor pair inconsistent, so a
+        // caught panic (coordinator `catch_panic`) drops the cached
+        // state and the next query re-sketches from scratch rather than
+        // resuming a corrupt pair.
         let solver = match self.state.take() {
             Some(state) => {
                 AdaptiveSolver::resume(problem, x0, self.config.clone(), stop, state)
@@ -443,5 +534,88 @@ mod tests {
         }
         assert!(s.solutions.len() <= SOLUTION_CACHE_CAP);
         assert!(s.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn approx_bytes_counts_warm_start_and_cached_report_footprint() {
+        // Regression for the registry byte-budget undercount: after one
+        // solve the session holds the warm-start vector (d f64s), one
+        // cached solution vector (d f64s), that entry's fixed scalar
+        // footprint, and the grown sketch state — all of which must be
+        // charged against the LRU budget.
+        let mut s = session(64, 8, 11);
+        let before = s.approx_bytes();
+        s.solve(0.5, 1e-8).unwrap();
+        let after = s.approx_bytes();
+        let d_bytes = 8 * std::mem::size_of::<f64>();
+        let floor = 2 * d_bytes + std::mem::size_of::<CachedSolution>();
+        assert!(
+            after >= before + floor,
+            "post-solve footprint {after} must grow by at least warm + cached-x + \
+             fixed report footprint ({floor}) over {before}"
+        );
+    }
+
+    #[test]
+    fn path_nan_is_rejected_up_front_without_mutating_state() {
+        let mut s = session(64, 8, 12);
+        // NaN in the middle: the old pairwise check let this through
+        // (`w[0] <= w[1]` is false for NaN) and failed mid-path after the
+        // first solve had already grown the session.
+        let err = s.solve_path(&[1.0, f64::NAN, 0.1], 1e-8).unwrap_err();
+        assert!(err.contains("nu"), "{err}");
+        assert_eq!(s.m(), 0, "no solve may run before the path validates");
+        assert_eq!(s.query_stats().0, 0);
+        // Leading and trailing NaN / infinities are rejected identically.
+        assert!(s.solve_path(&[f64::NAN, 1.0], 1e-8).is_err());
+        assert!(s.solve_path(&[f64::INFINITY, 1.0], 1e-8).is_err());
+        assert!(s.solve_path(&[1.0, 0.5, f64::NAN], 1e-8).is_err());
+        assert_eq!(s.m(), 0);
+        // A valid path still works afterwards.
+        assert!(s.solve_path(&[1.0, 0.5], 1e-8).is_ok());
+    }
+
+    #[test]
+    fn solve_block_matches_looped_solve_rhs() {
+        let ds = synthetic::exponential_decay(192, 24, 13);
+        let bs: Vec<Vec<f64>> = (0..5)
+            .map(|j| (0..192).map(|i| ((i as f64 + 1.0) * (j as f64 + 0.6) * 0.07).sin()).collect())
+            .collect();
+        let mk = || {
+            ModelSession::new(Arc::new(ds.a.clone()), ds.b.clone(), SketchKind::Gaussian, 9)
+                .unwrap()
+        };
+        let mut s_block = mk();
+        let sols = s_block.solve_block(0.5, &bs, 1e-12).unwrap();
+        assert_eq!(sols.len(), 5);
+        let mut s_loop = mk();
+        for (j, b) in bs.iter().enumerate() {
+            let lone = s_loop.solve_rhs(0.5, b, 1e-12).unwrap();
+            assert!(lone.report.converged && sols[j].report.converged, "col {j}");
+            let scale = lone.x.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..24 {
+                assert!(
+                    (sols[j].x[i] - lone.x[i]).abs() <= 1e-10 * scale,
+                    "col {j} coord {i}: {} vs {}",
+                    sols[j].x[i],
+                    lone.x[i]
+                );
+            }
+        }
+        // The batch counts k solves.
+        assert_eq!(s_block.query_stats().0, 5);
+    }
+
+    #[test]
+    fn solve_block_rejects_bad_batches() {
+        let mut s = session(64, 8, 14);
+        assert!(s.solve_block(0.5, &[], 1e-8).is_err(), "empty batch");
+        assert!(s.solve_block(0.5, &[vec![1.0; 3]], 1e-8).is_err(), "short rhs");
+        assert!(
+            s.solve_block(0.5, &[vec![f64::NAN; 64]], 1e-8).is_err(),
+            "non-finite rhs"
+        );
+        assert!(s.solve_block(f64::NAN, &[vec![1.0; 64]], 1e-8).is_err());
+        assert_eq!(s.m(), 0, "rejected batches must not touch session state");
     }
 }

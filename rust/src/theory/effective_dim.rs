@@ -18,15 +18,37 @@ use crate::rng::Xoshiro256;
 use crate::sketch::Sketch;
 
 /// `d_e` from the singular values of `A` at regularization `nu`.
+///
+/// Total: a zero singular value contributes 0 even at `nu = 0` (the
+/// term is `0/0` termwise, but `lim_{s->0} s^2/(s^2) = 0` is the only
+/// consistent continuation — a zero mode never adds effective
+/// dimension), and an invalid `nu` (negative or non-finite) yields NaN
+/// instead of panicking. Callers holding wire- or CLI-provided input
+/// should prefer [`try_effective_dimension_from_spectrum`] and surface
+/// the error.
 pub fn effective_dimension_from_spectrum(sigma: &[f64], nu: f64) -> f64 {
-    assert!(nu >= 0.0);
-    sigma
+    try_effective_dimension_from_spectrum(sigma, nu).unwrap_or(f64::NAN)
+}
+
+/// Validating form of [`effective_dimension_from_spectrum`]: errors on a
+/// negative or non-finite `nu` (server-reachable input must produce a
+/// clean error, not an assertion panic); zero singular values contribute
+/// 0 (total at `sigma_i = nu = 0`).
+pub fn try_effective_dimension_from_spectrum(sigma: &[f64], nu: f64) -> Result<f64, String> {
+    if !nu.is_finite() || nu < 0.0 {
+        return Err(format!("effective dimension needs a finite nu >= 0, got {nu}"));
+    }
+    Ok(sigma
         .iter()
         .map(|&s| {
             let s2 = s * s;
-            s2 / (s2 + nu * nu)
+            if s2 > 0.0 {
+                s2 / (s2 + nu * nu)
+            } else {
+                0.0
+            }
         })
-        .sum()
+        .sum())
 }
 
 /// `d_e` computed exactly from `A` (Jacobi SVD; test/diagnostic use).
@@ -35,8 +57,15 @@ pub fn effective_dimension(a: &Matrix, nu: f64) -> f64 {
 }
 
 /// The diagonal of `D = diag(sigma_i / sqrt(sigma_i^2 + nu^2))`.
+///
+/// Total: a zero singular value maps to 0 even at `nu = 0` (otherwise a
+/// `0/0` NaN — the deviation matrix `C_S` treats a zero mode as
+/// contributing nothing, matching [`effective_dimension_from_spectrum`]).
 pub fn d_diagonal(sigma: &[f64], nu: f64) -> Vec<f64> {
-    sigma.iter().map(|&s| s / (s * s + nu * nu).sqrt()).collect()
+    sigma
+        .iter()
+        .map(|&s| if s == 0.0 { 0.0 } else { s / (s * s + nu * nu).sqrt() })
+        .collect()
 }
 
 /// Hutchinson trace estimator for
@@ -112,6 +141,36 @@ mod tests {
         // nu -> 0: d_e -> rank; nu -> inf: d_e -> 0.
         assert!((effective_dimension_from_spectrum(&sigma, 0.0) - 3.0).abs() < 1e-12);
         assert!(effective_dimension_from_spectrum(&sigma, 1e6) < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_spectrum_terms_are_total() {
+        // sigma_i = 0 at nu = 0 used to be 0/0 = NaN; a zero mode must
+        // contribute zero effective dimension (d_e -> rank, not NaN).
+        let sigma = vec![2.0, 1.0, 0.0];
+        let de = effective_dimension_from_spectrum(&sigma, 0.0);
+        assert!((de - 2.0).abs() < 1e-12, "d_e at nu=0 must equal the rank, got {de}");
+        // And the D diagonal's 0/0 term is likewise pinned to 0.
+        let d = d_diagonal(&sigma, 0.0);
+        assert_eq!(d[2], 0.0);
+        assert!((d[0] - 1.0).abs() < 1e-12 && (d[1] - 1.0).abs() < 1e-12);
+        // s = 0 with nu > 0 stays 0 (was already well-defined).
+        assert_eq!(d_diagonal(&[0.0], 0.5)[0], 0.0);
+    }
+
+    #[test]
+    fn invalid_nu_errors_instead_of_panicking() {
+        let sigma = vec![1.0, 0.5];
+        // The plain form is total: NaN, never a panic.
+        assert!(effective_dimension_from_spectrum(&sigma, -1.0).is_nan());
+        assert!(effective_dimension_from_spectrum(&sigma, f64::NAN).is_nan());
+        assert!(effective_dimension_from_spectrum(&sigma, f64::INFINITY).is_nan());
+        // The validating form names the problem.
+        let err = try_effective_dimension_from_spectrum(&sigma, -1.0).unwrap_err();
+        assert!(err.contains("nu"), "{err}");
+        assert!(try_effective_dimension_from_spectrum(&sigma, f64::NAN).is_err());
+        let ok = try_effective_dimension_from_spectrum(&sigma, 0.5).unwrap();
+        assert!((ok - effective_dimension_from_spectrum(&sigma, 0.5)).abs() == 0.0);
     }
 
     #[test]

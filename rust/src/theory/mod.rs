@@ -14,5 +14,7 @@ pub mod effective_dim;
 pub mod rates;
 
 pub use bounds::{gaussian_bounds, srht_bounds, EigenBounds};
-pub use effective_dim::{effective_dimension, effective_dimension_from_spectrum};
+pub use effective_dim::{
+    effective_dimension, effective_dimension_from_spectrum, try_effective_dimension_from_spectrum,
+};
 pub use rates::{IhsParams, Rates};

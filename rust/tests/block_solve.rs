@@ -1,0 +1,207 @@
+//! Integration: the block multi-RHS solve path's acceptance contract.
+//!
+//! Pins the PR's acceptance criteria:
+//! * `solve_block(nu, B, eps)` over `k` right-hand sides agrees
+//!   column-wise with `k` independent `solve_rhs` calls (dense and CSR
+//!   operands, Gaussian and SRHT sketches);
+//! * a block query resumed against an already-grown session applies
+//!   **zero** fresh sketch (`sketch_time_s == 0.0`, no doublings, `m`
+//!   unchanged);
+//! * per-column convergence tracking retires easy columns early while
+//!   hard columns keep iterating;
+//! * the corrected session byte accounting feeds the registry's LRU
+//!   budget: query-driven state growth (warm start + cached solutions +
+//!   sketch state) triggers eviction at the right totals.
+
+use effdim::coordinator::registry::Registry;
+use effdim::data::synthetic;
+use effdim::sketch::SketchKind;
+use effdim::solvers::session::ModelSession;
+use effdim::Operand;
+use std::sync::Arc;
+
+fn rhs_batch(n: usize, k: usize) -> Vec<Vec<f64>> {
+    (0..k)
+        .map(|j| {
+            (0..n)
+                .map(|i| ((i as f64 + 1.0) * (j as f64 * 0.83 + 0.41)).sin())
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_columns_agree(block: &[effdim::solvers::Solution], looped: &[Vec<f64>], tag: &str) {
+    assert_eq!(block.len(), looped.len());
+    for (j, (sol, lone)) in block.iter().zip(looped).enumerate() {
+        assert!(sol.report.converged, "{tag}: column {j} did not converge");
+        let scale = lone.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (i, (&xb, &xl)) in sol.x.iter().zip(lone).enumerate() {
+            assert!(
+                (xb - xl).abs() <= 1e-10 * scale,
+                "{tag}: column {j} coord {i}: block {xb} vs looped {xl}"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_agrees_with_looped_solves_dense_operand() {
+    for kind in [SketchKind::Gaussian, SketchKind::Srht] {
+        let ds = synthetic::exponential_decay(256, 32, 3);
+        let bs = rhs_batch(256, 5);
+        let mk = || {
+            ModelSession::new(Arc::new(ds.a.clone()), ds.b.clone(), kind, 11).unwrap()
+        };
+        let mut s_block = mk();
+        let sols = s_block.solve_block(0.5, &bs, 1e-12).unwrap();
+        let mut s_loop = mk();
+        let looped: Vec<Vec<f64>> = bs
+            .iter()
+            .map(|b| {
+                let sol = s_loop.solve_rhs(0.5, b, 1e-12).unwrap();
+                assert!(sol.report.converged);
+                sol.x
+            })
+            .collect();
+        assert_columns_agree(&sols, &looped, &format!("dense/{kind}"));
+    }
+}
+
+#[test]
+fn block_agrees_with_looped_solves_csr_operand() {
+    for kind in [SketchKind::Gaussian, SketchKind::Srht] {
+        let ds = synthetic::sparse_gaussian(256, 32, 0.2, 7);
+        assert!(ds.a.is_sparse(), "test premise: CSR operand");
+        let bs = rhs_batch(256, 4);
+        let mk = || {
+            ModelSession::new(Arc::new(ds.a.clone()), ds.b.clone(), kind, 13).unwrap()
+        };
+        let mut s_block = mk();
+        let sols = s_block.solve_block(0.4, &bs, 1e-12).unwrap();
+        let mut s_loop = mk();
+        let looped: Vec<Vec<f64>> = bs
+            .iter()
+            .map(|b| {
+                let sol = s_loop.solve_rhs(0.4, b, 1e-12).unwrap();
+                assert!(sol.report.converged);
+                sol.x
+            })
+            .collect();
+        assert_columns_agree(&sols, &looped, &format!("csr/{kind}"));
+    }
+}
+
+#[test]
+fn resumed_block_query_applies_zero_sketch() {
+    let ds = synthetic::exponential_decay(256, 32, 5);
+    let mut s =
+        ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 17).unwrap();
+    // Grow the sketch with a demanding single solve first.
+    let first = s.solve(0.3, 1e-9).unwrap();
+    assert!(first.report.converged);
+    let m = s.m();
+    assert!(m >= 1);
+    // A block batch at a larger nu (smaller effective dimension): the
+    // cached rows must be reused in full — the pinned reuse contract.
+    let bs = rhs_batch(256, 4);
+    let sols = s.solve_block(1.0, &bs, 1e-9).unwrap();
+    for (j, sol) in sols.iter().enumerate() {
+        assert!(sol.report.converged, "column {j}");
+        assert_eq!(
+            sol.report.sketch_time_s, 0.0,
+            "resumed block query applied a fresh sketch (column {j})"
+        );
+        assert_eq!(sol.report.doublings, 0, "column {j} re-grew the sketch");
+    }
+    assert_eq!(s.m(), m, "cached sketch rows must be reused in full");
+    // And the block solutions actually solve their systems.
+    for (b, sol) in bs.iter().zip(&sols) {
+        let p = effdim::solvers::RidgeProblem::new_shared(
+            Arc::clone(s.operand()),
+            b.clone(),
+            1.0,
+        );
+        let g = p.gradient(&sol.x);
+        let scale = effdim::linalg::norm2(&p.atb);
+        assert!(effdim::linalg::norm2(&g) <= 1e-7 * scale);
+    }
+}
+
+#[test]
+fn easy_columns_retire_before_hard_ones() {
+    // Column 0 is the zero RHS (optimal at x = 0, retires instantly);
+    // the others are generic. Per-column iteration counts must reflect
+    // the active-set shrinking.
+    let ds = synthetic::exponential_decay(192, 24, 9);
+    let n = 192;
+    let mut bs = rhs_batch(n, 3);
+    bs[0] = vec![0.0; n];
+    let mut s =
+        ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 19).unwrap();
+    let sols = s.solve_block(0.5, &bs, 1e-10).unwrap();
+    assert!(sols.iter().all(|sol| sol.report.converged));
+    assert_eq!(sols[0].report.iterations, 0, "zero RHS must retire immediately");
+    assert!(sols[0].x.iter().all(|&v| v == 0.0));
+    assert!(sols[1].report.iterations >= 1 && sols[2].report.iterations >= 1);
+}
+
+#[test]
+fn query_growth_triggers_eviction_under_corrected_byte_totals() {
+    // Regression for the approx_bytes undercount: the post-query session
+    // footprint (warm start + cached solution incl. its fixed report
+    // footprint + grown sketch state) must reach the registry's running
+    // total so LRU eviction fires at the right time.
+    let mk_ds = |seed: u64| synthetic::exponential_decay(128, 16, seed);
+
+    // Probe: fresh footprint vs post-query footprint of one model. The
+    // probe is an exact twin of model `a` below (same data seed, same
+    // sketch seed, same query), so the grown byte total is identical.
+    let (fresh, grown) = {
+        let probe = Registry::new(usize::MAX);
+        let ds = mk_ds(2);
+        let entry = probe
+            .register("probe".into(), ds.a, ds.b, SketchKind::Gaussian, 2)
+            .unwrap();
+        let fresh = probe.total_bytes();
+        let mut session = entry.session.lock().unwrap();
+        session.solve(0.5, 1e-9).unwrap();
+        probe.note_query(&entry, &session);
+        drop(session);
+        (fresh, probe.total_bytes())
+    };
+    assert!(
+        grown > fresh,
+        "a solve must grow the charged footprint (warm start, cached \
+         solution, sketch state): {fresh} -> {grown}"
+    );
+
+    // Budget admits two fresh models but NOT one fresh + one grown: the
+    // growth reported by note_query must evict the idle LRU model.
+    let reg = Registry::new(fresh + grown - 1);
+    let ds_a = mk_ds(2);
+    let a = reg.register("a".into(), ds_a.a, ds_a.b, SketchKind::Gaussian, 2).unwrap().id;
+    let ds_b = mk_ds(3);
+    let b = reg.register("b".into(), ds_b.a, ds_b.b, SketchKind::Gaussian, 3).unwrap().id;
+    assert_eq!(reg.len(), 2, "two fresh models fit the budget");
+
+    let entry = reg.touch(a).unwrap();
+    let mut session = entry.session.lock().unwrap();
+    session.solve(0.5, 1e-9).unwrap();
+    reg.note_query(&entry, &session);
+    drop(session);
+
+    assert_eq!(reg.len(), 1, "query growth must push the total over budget");
+    assert!(reg.touch(b).is_none(), "the idle model is the LRU victim");
+    assert!(reg.touch(a).is_some(), "the model serving the query is protected");
+}
+
+#[test]
+fn block_solve_coexists_with_dual_of_operand_shapes() {
+    // Underdetermined data still refuses a session (and hence the block
+    // path) with the documented error.
+    let ds = synthetic::exponential_decay(32, 16, 21);
+    let wide: Operand = ds.a.transpose();
+    let err = ModelSession::new(Arc::new(wide), vec![1.0; 16], SketchKind::Gaussian, 1)
+        .unwrap_err();
+    assert!(err.contains("overdetermined"), "{err}");
+}
