@@ -6,6 +6,8 @@ exercised) and asserts allclose against ``kernels/ref.py``.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -23,6 +23,11 @@
 //!   as one `solve_block` (BLAS-3 block iteration) over `k` looped
 //!   `solve_rhs` calls against the same cached session sketch.
 //!
+//! * `append_speedup_{gaussian,srht,sparse}` — streaming `dn` new rows
+//!   into a warmed session (`ModelSession::append`: sketch only the delta,
+//!   refactor, warm-started re-solve) over a full re-register + cold query
+//!   of the concatenated data. For `dn << n` these must land above 1.
+//!
 //! `cargo bench --bench kernels -- --smoke` runs a seconds-scale variant
 //! (shrunken shapes, fewer repeats) so CI *executes* every kernel path on
 //! each PR instead of merely compiling it.
@@ -35,7 +40,7 @@ use effdim::rng::Xoshiro256;
 use effdim::sketch::engine::SketchEngine;
 use effdim::sketch::srht::fwht_rows;
 use effdim::sketch::{gaussian::GaussianSketch, sparse::SparseSketch, srht::SrhtSketch, Sketch, SketchKind};
-use effdim::solvers::session::ModelSession;
+use effdim::solvers::session::{AppendRefresh, ModelSession};
 use effdim::solvers::woodbury::WoodburyCache;
 use effdim::solvers::{RidgeProblem, Solver as _, SolverSpec, StopRule};
 use effdim::util::json::Json;
@@ -491,6 +496,102 @@ fn main() {
             );
             derived.push((format!("block_rhs_speedup_k{k}"), Json::from(t_loop / t_block)));
             println!("    block multi-RHS speedup (k={k}): {:.2}x", t_loop / t_block);
+        }
+        println!();
+    }
+
+    // Streaming-append serving cost (§Streaming acceptance): `dn` new
+    // rows arrive at a warmed model. The append path pays sketch-the-delta
+    // + factor refresh + a warm-started re-solve; the scratch path pays a
+    // full re-register (operand copy, sketch grown from m = 1) + cold
+    // query of the concatenated data. For dn << n the ratio must exceed 1
+    // for every sketch family (CI greps the derived columns). Sessions
+    // are built and warmed OUTSIDE the append timer so it measures the
+    // incremental update, never the initial growth.
+    {
+        let (n, d, dn) = if smoke { (512usize, 64usize, 32usize) } else { (8192, 256, 64) };
+        let reps = if smoke { 2 } else { 5 };
+        let (nu, eps) = (0.5, 1e-8);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let full = Matrix::from_fn(n + dn, d, |_, _| rng.next_gaussian());
+        let b_full: Vec<f64> = (0..n + dn).map(|i| (i as f64 * 0.011).sin()).collect();
+        let base = Matrix::from_fn(n, d, |i, j| full.get(i, j));
+        let delta = Matrix::from_fn(dn, d, |i, j| full.get(n + i, j));
+        let b_base = b_full[..n].to_vec();
+        let b_delta = b_full[n..].to_vec();
+        println!("--- streaming append (n = {n}, d = {d}, dn = {dn}) ---");
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+            let t_append = {
+                let mut times = Vec::new();
+                for i in 0..reps {
+                    let mut sess = ModelSession::new(
+                        Arc::new(Operand::Dense(base.clone())),
+                        b_base.clone(),
+                        kind,
+                        70 + i as u64,
+                    )
+                    .unwrap();
+                    sess.solve(nu, eps).unwrap(); // warm: grow the sketch once
+                    let t0 = Instant::now();
+                    sess.append(
+                        Operand::Dense(delta.clone()),
+                        b_delta.clone(),
+                        AppendRefresh::Eager,
+                    )
+                    .unwrap();
+                    std::hint::black_box(sess.solve(nu, eps).unwrap());
+                    times.push(t0.elapsed().as_secs_f64());
+                }
+                let s = summarize(&times);
+                cases.push(Case {
+                    name: format!("append {dn} rows + query ({kind})"),
+                    n,
+                    d,
+                    m: 0,
+                    threads: default_threads,
+                    mean_s: s.mean,
+                    min_s: s.min,
+                });
+                println!(
+                    "{:<44} {:>10.3} ms",
+                    format!("append {dn} rows + query ({kind})"),
+                    s.mean * 1e3
+                );
+                s.mean
+            };
+            let t_scratch = {
+                let mut times = Vec::new();
+                for i in 0..reps {
+                    let t0 = Instant::now();
+                    let mut sess = ModelSession::new(
+                        Arc::new(Operand::Dense(full.clone())),
+                        b_full.clone(),
+                        kind,
+                        70 + i as u64,
+                    )
+                    .unwrap();
+                    std::hint::black_box(sess.solve(nu, eps).unwrap());
+                    times.push(t0.elapsed().as_secs_f64());
+                }
+                let s = summarize(&times);
+                cases.push(Case {
+                    name: format!("re-register + query ({kind})"),
+                    n: n + dn,
+                    d,
+                    m: 0,
+                    threads: default_threads,
+                    mean_s: s.mean,
+                    min_s: s.min,
+                });
+                println!(
+                    "{:<44} {:>10.3} ms",
+                    format!("re-register + query ({kind})"),
+                    s.mean * 1e3
+                );
+                s.mean
+            };
+            derived.push((format!("append_speedup_{kind}"), Json::from(t_scratch / t_append)));
+            println!("    append speedup ({kind}): {:.2}x", t_scratch / t_append);
         }
         println!();
     }

@@ -17,6 +17,8 @@
 //! {"cmd":"query","model":1,"nus":[10,1,0.1]}
 //! {"cmd":"query","model":1,"nu":0.5,"bs":[[...],[...]]}
 //! {"cmd":"predict","model":1,"nu":0.5,"rows":[[0.1,0.2],[0.3,0.4]]}
+//! {"cmd":"append","model":1,"rows":2,"cols":2,
+//!  "triplets":[[0,0,1.0],[1,1,2.0]],"b":[0.5,0.25],"refresh":"eager"}
 //! {"cmd":"evict","model":1}
 //! {"cmd":"models"}
 //! {"cmd":"metrics"}
@@ -117,6 +119,26 @@ pub enum Request {
         rows: Vec<Vec<f64>>,
         /// Tolerance for the underlying solve if not already cached.
         eps: f64,
+    },
+    /// Stream new observation rows into a registered model. The payload is
+    /// the inline-triplet shape (`"rows"`/`"cols"`/`"triplets"`/`"b"`)
+    /// describing the *delta* block: `rows` = number of appended rows,
+    /// `cols` must equal the model's `d`, `b` carries the new
+    /// observations. Retained rows are never re-sketched — the session
+    /// updates its sketch and factorization incrementally
+    /// ([`crate::solvers::session::ModelSession::append`]).
+    Append {
+        /// Model id from a `register` response.
+        model: u64,
+        /// The appended rows (decoded CSR delta block, `rows x d`).
+        a: Operand,
+        /// The appended observations (length `rows`).
+        b: Vec<f64>,
+        /// Staleness policy: `true` (`"refresh":"eager"`, the default)
+        /// refreshes sketch + factorization inside the append; `false`
+        /// (`"refresh":"lazy"`) defers the downstream update to the next
+        /// query.
+        eager: bool,
     },
     /// Drop a registered model, freeing its cached state.
     Evict {
@@ -226,6 +248,30 @@ pub fn decode(line: &str) -> Result<Request, String> {
                 return Err("predict needs at least one row".into());
             }
             Ok(Request::Predict { model, nu, rows, eps })
+        }
+        "append" => {
+            let model = require_id(&v, "model")?;
+            // The delta ships in the same inline-triplet shape register
+            // uses; synthetic profiles make no sense for an append.
+            let trips = v
+                .get("triplets")
+                .and_then(Json::as_arr)
+                .ok_or("append needs inline \"triplets\" (plus \"rows\"/\"cols\"/\"b\")")?;
+            let (a, b) = match decode_triplet_workload(&v, trips)? {
+                Workload::Inline { a, b } => (a, b),
+                _ => unreachable!("triplet decode always yields an inline workload"),
+            };
+            // Strict like every other optional: a present-but-unknown
+            // "refresh" is an error, never a silent eager refresh.
+            let eager = match v.get("refresh") {
+                None | Some(Json::Null) => true,
+                Some(raw) => match raw.as_str() {
+                    Some("eager") => true,
+                    Some("lazy") => false,
+                    _ => return Err("\"refresh\" must be \"eager\" or \"lazy\"".into()),
+                },
+            };
+            Ok(Request::Append { model, a, b, eager })
         }
         "evict" => Ok(Request::Evict { model: require_id(&v, "model")? }),
         "models" => Ok(Request::Models),
@@ -597,6 +643,69 @@ mod tests {
         assert!(decode(r#"{"cmd":"query","model":1.9}"#).is_err());
         assert!(decode(r#"{"cmd":"evict","model":-1}"#).is_err());
         assert!(decode(r#"{"cmd":"status","job":2.5}"#).is_err());
+    }
+
+    #[test]
+    fn decode_append() {
+        let line = r#"{"cmd":"append","model":7,"rows":2,"cols":2,
+                       "triplets":[[0,0,1.0],[1,1,2.0]],"b":[0.5,0.25]}"#;
+        match decode(&line.replace('\n', " ")).unwrap() {
+            Request::Append { model, a, b, eager } => {
+                assert_eq!(model, 7);
+                assert!(a.is_sparse());
+                assert_eq!((a.rows(), a.cols(), a.nnz()), (2, 2, 2));
+                assert_eq!(b, vec![0.5, 0.25]);
+                assert!(eager, "refresh defaults to eager");
+            }
+            _ => panic!("wrong variant"),
+        }
+        let lazy = r#"{"cmd":"append","model":7,"rows":1,"cols":2,
+                       "triplets":[[0,1,3.0]],"b":[1.0],"refresh":"lazy"}"#;
+        match decode(&lazy.replace('\n', " ")).unwrap() {
+            Request::Append { eager, .. } => assert!(!eager),
+            _ => panic!("wrong variant"),
+        }
+        // Missing pieces and malformed payloads are rejected outright.
+        assert!(
+            decode(r#"{"cmd":"append","rows":1,"cols":1,"triplets":[[0,0,1.0]],"b":[1.0]}"#)
+                .is_err(),
+            "missing model id"
+        );
+        assert!(decode(r#"{"cmd":"append","model":7}"#).is_err(), "missing triplets");
+        assert!(
+            decode(r#"{"cmd":"append","model":7,"profile":"exp","n":8,"d":2}"#).is_err(),
+            "synthetic profiles are not appendable"
+        );
+        assert!(
+            decode(r#"{"cmd":"append","model":7,"cols":2,"triplets":[[0,0,1.0]],"b":[1.0]}"#)
+                .is_err(),
+            "missing rows"
+        );
+        assert!(
+            decode(
+                r#"{"cmd":"append","model":7,"rows":2,"cols":2,"triplets":[[0,0,1.0]],"b":[1.0]}"#
+            )
+            .is_err(),
+            "b length must equal rows"
+        );
+        // A present-but-unknown refresh policy is an error, never a
+        // silent eager refresh; null means absent as everywhere else.
+        assert!(decode(
+            r#"{"cmd":"append","model":7,"rows":1,"cols":1,"triplets":[[0,0,1.0]],"b":[1.0],"refresh":"sometime"}"#
+        )
+        .is_err());
+        assert!(decode(
+            r#"{"cmd":"append","model":7,"rows":1,"cols":1,"triplets":[[0,0,1.0]],"b":[1.0],"refresh":7}"#
+        )
+        .is_err());
+        match decode(
+            r#"{"cmd":"append","model":7,"rows":1,"cols":1,"triplets":[[0,0,1.0]],"b":[1.0],"refresh":null}"#
+        )
+        .unwrap()
+        {
+            Request::Append { eager, .. } => assert!(eager),
+            _ => panic!("wrong variant"),
+        }
     }
 
     #[test]

@@ -74,6 +74,9 @@ pub struct Registry {
     pub evicted: AtomicU64,
     /// Queries answered (solve/path/rhs/predict, cache hits included).
     pub queries: AtomicU64,
+    /// Streaming appends applied (`{"cmd":"append"}`); counted separately
+    /// from queries — an ingest is not a solve.
+    pub appends: AtomicU64,
 }
 
 impl Registry {
@@ -87,6 +90,7 @@ impl Registry {
             registered: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
             queries: AtomicU64::new(0),
+            appends: AtomicU64::new(0),
         }
     }
 
@@ -147,6 +151,24 @@ impl Registry {
     /// delta update — solves themselves run outside this lock.
     pub fn note_query(&self, entry: &ModelEntry, session: &ModelSession) {
         self.queries.fetch_add(1, Ordering::Relaxed);
+        self.refresh_bytes(entry, session);
+    }
+
+    /// Record a finished streaming append against `entry`: the operand,
+    /// `A^T b`, sketch rows and (pending or refreshed) factorization all
+    /// grew, so the byte estimate is recharged and the LRU budget
+    /// re-evaluated immediately — an append can evict colder models, but
+    /// never the model being appended to. Counted as an ingest, not a
+    /// query.
+    pub fn note_append(&self, entry: &ModelEntry, session: &ModelSession) {
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        self.refresh_bytes(entry, session);
+    }
+
+    /// Shared byte re-accounting: swap in the session's fresh
+    /// `approx_bytes`, O(1)-update the running total under the map lock,
+    /// then enforce the budget without evicting `entry` itself.
+    fn refresh_bytes(&self, entry: &ModelEntry, session: &ModelSession) {
         let new = session.approx_bytes();
         {
             let inner = self.inner.lock().unwrap();
@@ -273,6 +295,7 @@ impl Registry {
             ("registered", Json::from(self.registered.load(Ordering::Relaxed))),
             ("evicted", Json::from(self.evicted.load(Ordering::Relaxed))),
             ("queries", Json::from(self.queries.load(Ordering::Relaxed))),
+            ("appends", Json::from(self.appends.load(Ordering::Relaxed))),
         ])
     }
 }
@@ -330,6 +353,43 @@ mod tests {
         assert!(reg.touch(c).is_some(), "new model admitted");
         assert_eq!(reg.evicted.load(Ordering::Relaxed), 1);
         assert!(reg.total_bytes() <= one_model * 2 + one_model / 2);
+    }
+
+    #[test]
+    fn append_can_evict_colder_model() {
+        use crate::solvers::session::AppendRefresh;
+        // Same probe/budget setup as the LRU test: two 64x16 models fit,
+        // with half a model of slack.
+        let one_model = {
+            let probe = Registry::new(usize::MAX);
+            let id = register_one(&probe, 64, 16, 9);
+            probe.touch(id).unwrap().bytes.load(Ordering::Relaxed)
+        };
+        let reg = Registry::new(one_model * 2 + one_model / 2);
+        let hot = register_one(&reg, 64, 16, 1);
+        let cold = register_one(&reg, 64, 16, 2);
+        assert_eq!(reg.len(), 2, "both models fit before the append");
+        // Stream a delta much larger than the slack into `hot`. The byte
+        // recharge in `note_append` must re-run the budget check and evict
+        // the colder model -- never the model being appended to.
+        let entry = reg.touch(hot).unwrap();
+        {
+            let ds = synthetic::exponential_decay(1024, 16, 3);
+            let mut s = entry.session.lock().unwrap();
+            s.append(ds.a.into(), ds.b, AppendRefresh::Eager).unwrap();
+            reg.note_append(&entry, &s);
+        }
+        assert!(reg.touch(hot).is_some(), "appended model survives");
+        assert!(reg.touch(cold).is_none(), "colder model evicted by append");
+        assert_eq!(reg.evicted.load(Ordering::Relaxed), 1);
+        assert_eq!(reg.appends.load(Ordering::Relaxed), 1);
+        assert_eq!(reg.queries.load(Ordering::Relaxed), 0, "append is not a query");
+        let stats = reg.stats_json();
+        assert_eq!(stats.get("appends").unwrap().as_usize(), Some(1));
+        assert!(
+            entry.bytes.load(Ordering::Relaxed) > one_model,
+            "append recharged the cached byte estimate"
+        );
     }
 
     #[test]

@@ -250,6 +250,33 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                 Err(e) => protocol::err(&e),
             }
         }
+        Request::Append { model, a, b, eager } => {
+            let Some(entry) = registry.touch(model) else {
+                return protocol::err(&Registry::unknown(model));
+            };
+            let refresh = if eager {
+                crate::solvers::session::AppendRefresh::Eager
+            } else {
+                crate::solvers::session::AppendRefresh::Lazy
+            };
+            let mut session = entry.session.lock().unwrap();
+            let outcome = catch_panic(|| session.append(a, b, refresh));
+            // Recharge the byte accounting even on error: validation
+            // rejects before mutating, but a panic unwound mid-refresh may
+            // still have grown the operand.
+            registry.note_append(&entry, &session);
+            match outcome {
+                Ok(out) => protocol::ok(vec![
+                    ("model", Json::from(model)),
+                    ("rows_added", Json::from(out.rows_added)),
+                    ("n", Json::from(out.n)),
+                    ("m", Json::from(out.m)),
+                    ("refreshed", Json::Bool(out.refreshed)),
+                    ("bytes", Json::from(session.approx_bytes())),
+                ]),
+                Err(e) => protocol::err(&e),
+            }
+        }
         Request::Evict { model } => {
             if registry.evict(model) {
                 protocol::ok(vec![("evicted", Json::from(model))])
@@ -491,6 +518,98 @@ mod tests {
             .call(&format!(r#"{{"cmd":"query","model":{model},"bs":[{b1:?}],"nus":[1.0,0.1]}}"#))
             .unwrap();
         assert_eq!(combined.get("ok").unwrap().as_bool(), Some(false));
+
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn append_roundtrip_over_tcp() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let reg = client
+            .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":5,"name":"app"}"#)
+            .unwrap();
+        assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+        let model = reg.get("model").unwrap().as_usize().unwrap();
+        let bytes0 = reg.get("bytes").unwrap().as_usize().unwrap();
+
+        // Warm the session so the append exercises the incremental
+        // sketch/factorization refresh, not just data growth.
+        let q = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5}}"#))
+            .unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true), "{q:?}");
+        let m0 = q.get("m").unwrap().as_usize().unwrap();
+
+        let app = client
+            .call(&format!(
+                r#"{{"cmd":"append","model":{model},"rows":2,"cols":16,
+                     "triplets":[[0,0,0.5],[0,5,1.0],[1,3,-0.25]],"b":[0.1,0.2]}}"#
+                    .replace('\n', " ")
+            ))
+            .unwrap();
+        assert_eq!(app.get("ok").unwrap().as_bool(), Some(true), "{app:?}");
+        assert_eq!(app.get("rows_added").unwrap().as_usize(), Some(2));
+        assert_eq!(app.get("n").unwrap().as_usize(), Some(130));
+        assert_eq!(app.get("m").unwrap().as_usize(), Some(m0), "append leaves m alone");
+        assert_eq!(app.get("refreshed").unwrap().as_bool(), Some(true));
+        assert!(app.get("bytes").unwrap().as_usize().unwrap() > bytes0);
+
+        // The model keeps answering queries against the grown data.
+        let q2 = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5}}"#))
+            .unwrap();
+        assert_eq!(q2.get("ok").unwrap().as_bool(), Some(true), "{q2:?}");
+        assert_eq!(
+            q2.get("result").unwrap().get("converged").unwrap().as_bool(),
+            Some(true)
+        );
+
+        // Lazy appends defer the refresh to the next query.
+        let lazy = client
+            .call(&format!(
+                r#"{{"cmd":"append","model":{model},"rows":1,"cols":16,
+                     "triplets":[[0,2,1.5]],"b":[0.3],"refresh":"lazy"}}"#
+                    .replace('\n', " ")
+            ))
+            .unwrap();
+        assert_eq!(lazy.get("ok").unwrap().as_bool(), Some(true), "{lazy:?}");
+        assert_eq!(lazy.get("n").unwrap().as_usize(), Some(131));
+        assert_eq!(lazy.get("refreshed").unwrap().as_bool(), Some(false));
+
+        // A shape-mismatched delta answers the standard error shape and
+        // leaves the model intact.
+        let bad = client
+            .call(&format!(
+                r#"{{"cmd":"append","model":{model},"rows":1,"cols":4,
+                     "triplets":[[0,0,1.0]],"b":[1.0]}}"#
+                    .replace('\n', " ")
+            ))
+            .unwrap();
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad:?}");
+        let q3 = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5}}"#))
+            .unwrap();
+        assert_eq!(q3.get("ok").unwrap().as_bool(), Some(true), "{q3:?}");
+
+        // Appends are counted separately from queries in the metrics.
+        let metrics = client.call(r#"{"cmd":"metrics"}"#).unwrap();
+        let reg_stats = metrics.get("registry").unwrap();
+        assert_eq!(reg_stats.get("appends").unwrap().as_usize(), Some(3));
+        assert_eq!(reg_stats.get("queries").unwrap().as_usize(), Some(3));
+
+        // Appending to an evicted model is an unknown-model error.
+        client.call(&format!(r#"{{"cmd":"evict","model":{model}}}"#)).unwrap();
+        let gone = client
+            .call(&format!(
+                r#"{{"cmd":"append","model":{model},"rows":1,"cols":16,
+                     "triplets":[[0,0,1.0]],"b":[1.0]}}"#
+                    .replace('\n', " ")
+            ))
+            .unwrap();
+        assert_eq!(gone.get("ok").unwrap().as_bool(), Some(false));
+        assert!(gone.get("error").unwrap().as_str().unwrap().contains("unknown model"));
 
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();

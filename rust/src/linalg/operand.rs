@@ -126,6 +126,22 @@ impl Operand {
         }
     }
 
+    /// Append `delta`'s rows below the existing ones — the streaming-ingest
+    /// primitive. Storage follows the *receiver*: dense + anything stacks
+    /// densely (`O(Δn · d)`), CSR + anything appends in CSR (`O(nnz(Δ))`
+    /// when `delta` is sparse). Retained rows are never rewritten.
+    pub fn append_rows(&mut self, delta: &Operand) {
+        assert_eq!(self.cols(), delta.cols(), "append_rows column mismatch");
+        match (&mut *self, delta) {
+            (Operand::Dense(m), Operand::Dense(dm)) => m.append_rows(dm),
+            (Operand::Dense(m), Operand::Sparse(dc)) => m.append_rows(&dc.to_dense()),
+            (Operand::Sparse(c), Operand::Sparse(dc)) => c.append_rows(dc),
+            (Operand::Sparse(c), Operand::Dense(dm)) => {
+                c.append_rows(&CsrMatrix::from_dense(dm))
+            }
+        }
+    }
+
     /// `A^T` — `O(rows * cols)` dense, `O(nnz)` CSR counting sort.
     pub fn transpose(&self) -> Operand {
         match self {
@@ -347,6 +363,24 @@ mod tests {
         assert!(od.dense().max_abs_diff(&os.dense()) == 0.0);
         assert!(od.as_dense().is_some() && od.as_csr().is_none());
         assert!(os.as_csr().is_some() && os.as_dense().is_none());
+    }
+
+    #[test]
+    fn append_rows_all_storage_pairs() {
+        let (base_d, base_s) = twin(11, 6, 0.4, 10);
+        let (delta_d, delta_s) = twin(4, 6, 0.5, 11);
+        let mut want = base_d.dense().into_owned();
+        want.append_rows(&delta_d.dense());
+        for base in [&base_d, &base_s] {
+            for delta in [&delta_d, &delta_s] {
+                let mut grown = base.clone();
+                grown.append_rows(delta);
+                assert_eq!(grown.rows(), 15);
+                // Storage kind follows the receiver.
+                assert_eq!(grown.is_sparse(), base.is_sparse());
+                assert!(grown.dense().max_abs_diff(&want) == 0.0);
+            }
+        }
     }
 
     #[test]

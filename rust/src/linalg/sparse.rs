@@ -126,6 +126,21 @@ impl CsrMatrix {
         out
     }
 
+    /// Append `other`'s rows below the existing ones in `O(nnz(other))`:
+    /// pure concatenation of the CSR arrays (row pointers shifted by the
+    /// current entry count), so the retained rows' storage — offsets,
+    /// column order, values — is untouched. This is the streaming-ingest
+    /// primitive: every invariant (`indptr` monotone, strictly increasing
+    /// columns within a row) carries over from the two inputs.
+    pub fn append_rows(&mut self, other: &CsrMatrix) {
+        assert_eq!(self.cols, other.cols, "append_rows column mismatch");
+        let base = self.values.len();
+        self.indices.extend_from_slice(&other.indices);
+        self.values.extend_from_slice(&other.values);
+        self.indptr.extend(other.indptr[1..].iter().map(|&p| base + p));
+        self.rows += other.rows;
+    }
+
     /// `A^T` in `O(nnz)` via a counting sort over columns. Row-sorted
     /// column order is preserved (ascending original row indices).
     pub fn transpose(&self) -> CsrMatrix {
@@ -637,6 +652,28 @@ mod tests {
         for i in 0..8 {
             assert!((gs[i] - gd[i]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn append_rows_matches_concatenation() {
+        let (mut csr, dense) = random_sparse(13, 7, 0.3, 30);
+        let (delta, ddense) = random_sparse(5, 7, 0.4, 31);
+        let before = csr.clone();
+        csr.append_rows(&delta);
+        assert_eq!((csr.rows(), csr.cols()), (18, 7));
+        assert_eq!(csr.nnz(), before.nnz() + delta.nnz());
+        // Retained rows' storage is bitwise untouched; new rows match.
+        for i in 0..13 {
+            assert_eq!(csr.row(i), before.row(i));
+        }
+        let mut full = dense.clone();
+        full.append_rows(&ddense);
+        assert!(csr.to_dense().max_abs_diff(&full) == 0.0);
+        // Appending an empty-row block (including all-zero rows) is fine.
+        let empty = CsrMatrix::from_triplets(2, 7, &[]);
+        csr.append_rows(&empty);
+        assert_eq!(csr.rows(), 20);
+        assert_eq!(csr.row(19), (&[][..], &[][..]));
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! effdim client query   --addr 127.0.0.1:7199 --model 1 --nus 10,1,0.1
 //! effdim client query   --addr 127.0.0.1:7199 --model 1 --nu 0.5 --rhs-file batch.txt
 //! effdim client predict --addr 127.0.0.1:7199 --model 1 --nu 0.5 --row 0.1,0.2,...
+//! effdim client append  --addr 127.0.0.1:7199 --model 1 --data delta.txt \
+//!                --refresh lazy
 //! effdim client evict   --addr 127.0.0.1:7199 --model 1
 //! effdim client models  --addr 127.0.0.1:7199
 //! effdim info    --profile cifar-like --n 1024 --d 128 --nu 1.0
@@ -59,13 +61,16 @@ use effdim::util::cli::Args;
 use effdim::util::json::Json;
 
 const USAGE: &str = "usage: effdim <solve|path|serve|request|client|info|solvers> [--flags]
-  client <register|query|predict|evict|models> drives a server's model
-    registry: --model id, --nu x | --nus a,b,c, --eps x, --include-x,
+  client <register|query|predict|append|evict|models> drives a server's
+    model registry: --model id, --nu x | --nus a,b,c, --eps x, --include-x,
     --sketch gaussian|srht|sparse, --name s, --row v1,v2,... (predict);
     query --rhs-file f sends a batched block multi-RHS query: one
     right-hand side per line (comma/space separated, # comments), all
     solved jointly against the model's cached sketch;
-    register accepts the same workload flags as solve (--profile/--data)
+    register accepts the same workload flags as solve (--profile/--data);
+    append streams --data <triplet-file> rows into a registered model
+    (the file's d must match the model; --refresh eager|lazy picks when
+    the cached sketch/factorization is updated, default eager)
   --solver takes a spec string: name[@key=value,...]
     names : direct | cg | pcg-<kind> | ihs-<kind> | polyak-ihs-<kind>
             | adaptive-<kind> | adaptive-gd-<kind> | dual-adaptive-<kind>
@@ -346,11 +351,11 @@ fn cmd_serve(args: &Args) -> i32 {
 /// registry request (PROTOCOL.md) from flags, send it, print the JSON
 /// response. Exit code 1 when the server answered `"ok":false`.
 fn cmd_client(args: &Args) -> i32 {
-    let action = ["register", "query", "predict", "evict", "models"]
+    let action = ["register", "query", "predict", "append", "evict", "models"]
         .into_iter()
         .find(|a| args.has(a));
     let Some(action) = action else {
-        eprintln!("client needs one of: register | query | predict | evict | models");
+        eprintln!("client needs one of: register | query | predict | append | evict | models");
         eprintln!("{USAGE}");
         return 2;
     };
@@ -465,24 +470,7 @@ fn build_client_request(args: &Args, action: &str) -> Result<String, i32> {
                     fields.push(("seed", Json::from(seed)));
                 }
                 Workload::Inline { a, b } => {
-                    // Re-encode a --data triplet file as the inline CSR
-                    // payload the wire protocol accepts.
-                    let c = a.as_csr().expect("--data loads CSR");
-                    let mut trips = Vec::with_capacity(c.nnz());
-                    for i in 0..c.rows() {
-                        let (cols, vals) = c.row(i);
-                        for (&j, &v) in cols.iter().zip(vals) {
-                            trips.push(Json::Arr(vec![
-                                Json::from(i),
-                                Json::from(j as usize),
-                                Json::from(v),
-                            ]));
-                        }
-                    }
-                    fields.push(("rows", Json::from(a.rows())));
-                    fields.push(("cols", Json::from(a.cols())));
-                    fields.push(("triplets", Json::Arr(trips)));
-                    fields.push(("b", Json::Arr(b.iter().map(|&v| Json::from(v)).collect())));
+                    push_inline_payload(&mut fields, &a, &b);
                     // Inline workloads carry no seed of their own, but the
                     // model's sketch stream still needs one.
                     fields.push(("seed", Json::from(args.get_u64("seed", 0))));
@@ -553,11 +541,61 @@ fn build_client_request(args: &Args, action: &str) -> Result<String, i32> {
                 Json::Arr(vec![Json::Arr(row.into_iter().map(Json::from).collect())]),
             ));
         }
+        "append" => {
+            fields.push(("model", Json::from(model()?)));
+            // The delta rows ship in the same triplet text format --data
+            // loads everywhere else; d must match the registered model.
+            let Some(path) = args.get("data") else {
+                eprintln!("--data <triplet-file> is required for append (the delta rows)");
+                return Err(2);
+            };
+            let text = std::fs::read_to_string(path).map_err(|e| {
+                eprintln!("cannot read {path}: {e}");
+                2
+            })?;
+            let (a, b) = effdim::data::parse_triplet_problem(&text).map_err(|e| {
+                eprintln!("{path}: {e}");
+                2
+            })?;
+            push_inline_payload(&mut fields, &Operand::Sparse(a), &b);
+            match args.get("refresh") {
+                None => {}
+                Some(policy @ ("eager" | "lazy")) => {
+                    fields.push(("refresh", Json::from(policy)));
+                }
+                Some(other) => {
+                    eprintln!("--refresh must be eager or lazy, got {other:?}");
+                    return Err(2);
+                }
+            }
+        }
         "evict" => fields.push(("model", Json::from(model()?))),
         "models" => {}
         _ => unreachable!("validated above"),
     }
     Ok(Json::obj(fields).to_string())
+}
+
+/// Re-encode a loaded triplet problem as the inline CSR payload the wire
+/// protocol accepts (shared by `client register --data` and
+/// `client append --data`).
+fn push_inline_payload(fields: &mut Vec<(&str, Json)>, a: &Operand, b: &[f64]) {
+    let c = a.as_csr().expect("--data loads CSR");
+    let mut trips = Vec::with_capacity(c.nnz());
+    for i in 0..c.rows() {
+        let (cols, vals) = c.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            trips.push(Json::Arr(vec![
+                Json::from(i),
+                Json::from(j as usize),
+                Json::from(v),
+            ]));
+        }
+    }
+    fields.push(("rows", Json::from(a.rows())));
+    fields.push(("cols", Json::from(a.cols())));
+    fields.push(("triplets", Json::Arr(trips)));
+    fields.push(("b", Json::Arr(b.iter().map(|&v| Json::from(v)).collect())));
 }
 
 fn cmd_request(args: &Args) -> i32 {

@@ -49,6 +49,37 @@
 //! The engine consumes the RNG in exactly the order
 //! [`super::sample`] does, so the *initial* sketch (before any growth)
 //! reproduces the one-shot sampling path draw for draw.
+//!
+//! # Row append (streaming ingest)
+//!
+//! [`SketchEngine::append_rows`] is the dual of [`SketchEngine::grow`]:
+//! `grow` adds sketch rows (`Δm`), `append_rows` adds *data* rows (`Δn`)
+//! without re-sketching any retained row of `A`:
+//!
+//! * **Gaussian** — `S̃ A' = S̃ [A; ΔA] = [S̃_old  G_new] [A; ΔA]
+//!   = S̃_old A + G_new ΔA`: draw the `m x Δn` column extension `G_new`
+//!   and add `G_new ΔA` into the existing rows — `O(m Δn d)` /
+//!   `O(m nnz(ΔA))`, independent of `n`. Each growth block keeps a list
+//!   of per-append RNG snapshots ("column segments") so
+//!   [`SketchEngine::to_dense`] can replay the full `m x n` embedding.
+//! * **SRHT** — the documented per-block stacked variant: the new rows
+//!   get their own independent signed-Hadamard block (padded to at least
+//!   twice the current `m` for growth headroom), FWHT'd over only the
+//!   `Δn` new rows; its without-replacement row sample is drawn to the
+//!   current depth `m` and added into `S̃A`. Per block
+//!   `E[s s^T] = I` on its row range and cross-block terms vanish in
+//!   expectation (independent signs), so the stacked embedding keeps
+//!   `E[S^T S] = I`. Appends bound future growth by the smallest block's
+//!   padded dimension — [`SketchEngine::max_m`] reports the cap and the
+//!   solvers fall back to the exact Hessian beyond it.
+//! * **Sparse** — each CountSketch block extends its `(row, sign)` pair
+//!   arrays by `Δn` and scatter-adds the new rows: `O(nnz(ΔA))` per
+//!   block, the same Remark 4.1 cost as construction.
+//!
+//! In every family the retained entries of `S̃A` change only by `+=` of
+//! new-row contributions and `m` is unchanged, so the normalization
+//! contract (append-only rows, scale folded into the solve) survives;
+//! the caller refreshes the factorization from the updated rows.
 
 use super::srht::{fwht_rows, hadamard_entry, next_pow2, signed_work};
 use super::SketchKind;
@@ -67,27 +98,54 @@ pub struct SketchEngine {
 
 enum State {
     Gaussian {
-        /// One entry per growth block: the RNG snapshot taken *before*
-        /// drawing the block plus its row count. `S̃` itself is never
-        /// retained (it would double the solver's memory at `m x n`);
-        /// [`SketchEngine::to_dense`] replays the snapshots instead.
-        draws: Vec<(Xoshiro256, usize)>,
+        /// One entry per *growth* block (a run of sketch rows), stacked
+        /// top to bottom.
+        blocks: Vec<GaussianBlock>,
     },
     Srht {
-        /// Rademacher signs, length `n`.
-        signs: Vec<f64>,
-        /// Cached `H · diag(signs) · A` (`ñ x d`, unnormalized FWHT) —
-        /// computed once; growth only reads more of its rows.
-        work: Matrix,
-        /// Partial Fisher–Yates state over `0..ñ`; `order[..taken]` are
-        /// the selected Hadamard rows, in selection order.
-        order: Vec<usize>,
+        /// One signed-Hadamard block per data segment: the original
+        /// problem rows plus one block per [`SketchEngine::append_rows`],
+        /// stacked left to right over the ambient coordinates.
+        blocks: Vec<SrhtBlock>,
+        /// Selection depth shared by every block: block `b`'s
+        /// `order[..taken]` are its selected Hadamard rows, in the
+        /// engine-wide selection order (sketch row `k` reads entry
+        /// `order[k]` of every block).
         taken: usize,
     },
     Sparse {
         /// Independent CountSketch blocks, stacked top to bottom.
         blocks: Vec<SparseBlock>,
     },
+}
+
+/// One Gaussian growth block: a run of `rows` sketch rows whose entries
+/// were drawn in column segments — one segment for the rows of `A`
+/// present at the block's creation, plus one per later data append. `S̃`
+/// itself is never retained (it would double the solver's memory at
+/// `m x n`); [`SketchEngine::to_dense`] replays the snapshots instead.
+struct GaussianBlock {
+    rows: usize,
+    /// `(RNG snapshot before the draw, column count)` per segment; the
+    /// segment's entries are drawn row-major over `rows x cols`.
+    segments: Vec<(Xoshiro256, usize)>,
+}
+
+/// One SRHT block covering ambient rows
+/// `row_offset..row_offset + n_rows`.
+struct SrhtBlock {
+    /// First ambient coordinate this block covers.
+    row_offset: usize,
+    /// Data rows covered (before padding).
+    n_rows: usize,
+    /// Rademacher signs, length `n_rows`.
+    signs: Vec<f64>,
+    /// Cached `H · diag(signs) · A_block` (`ñ_b x d`, unnormalized
+    /// FWHT) — computed once; growth only reads more of its rows.
+    work: Matrix,
+    /// Partial Fisher–Yates state over `0..ñ_b`; the shared engine
+    /// `taken` counts how many of its entries are selected.
+    order: Vec<usize>,
 }
 
 /// One CountSketch block: one (row, sign) pair per ambient coordinate,
@@ -173,7 +231,8 @@ impl SketchEngine {
                 let mut s = Matrix::zeros(m, n);
                 rng.fill_gaussian(s.as_mut_slice(), 1.0);
                 let sa = dense_block_times(&s, a);
-                Self { kind, n, sa, state: State::Gaussian { draws: vec![(snapshot, m)] } }
+                let block = GaussianBlock { rows: m, segments: vec![(snapshot, n)] };
+                Self { kind, n, sa, state: State::Gaussian { blocks: vec![block] } }
             }
             SketchKind::Srht => {
                 let n_pad = next_pow2(n);
@@ -182,15 +241,17 @@ impl SketchEngine {
                 rng.fill_rademacher(&mut signs);
                 let mut work = signed_work(a, &signs, n_pad);
                 fwht_rows(&mut work);
-                let mut state = State::Srht { signs, work, order: (0..n_pad).collect(), taken: 0 };
-                let sa = match &mut state {
-                    State::Srht { work, order, taken, .. } => {
-                        let rows = take_without_replacement(order, taken, m, rng);
-                        copy_rows(work, rows)
-                    }
-                    _ => unreachable!(),
+                let mut block = SrhtBlock {
+                    row_offset: 0,
+                    n_rows: n,
+                    signs,
+                    work,
+                    order: (0..n_pad).collect(),
                 };
-                Self { kind, n, sa, state }
+                let mut taken = 0;
+                let rows = take_without_replacement(&mut block.order, &mut taken, m, rng);
+                let sa = copy_rows(&block.work, rows);
+                Self { kind, n, sa, state: State::Srht { blocks: vec![block], taken } }
             }
             SketchKind::Sparse => {
                 let block = SparseBlock::sample(m, n, rng);
@@ -218,20 +279,34 @@ impl SketchEngine {
         assert_eq!(a.rows(), self.n, "grow must reuse the engine's problem matrix");
         let dm = new_m - m_old;
         let new_rows = match &mut self.state {
-            State::Gaussian { draws } => {
-                draws.push((rng.clone(), dm));
+            State::Gaussian { blocks } => {
+                blocks.push(GaussianBlock { rows: dm, segments: vec![(rng.clone(), self.n)] });
                 let mut g_new = Matrix::zeros(dm, self.n);
                 rng.fill_gaussian(g_new.as_mut_slice(), 1.0);
                 dense_block_times(&g_new, a)
             }
-            State::Srht { work, order, taken, .. } => {
-                assert!(
-                    new_m <= work.rows(),
-                    "SRHT sketch size {new_m} exceeds padded dim {}",
-                    work.rows()
-                );
-                let rows = take_without_replacement(order, taken, dm, rng);
-                copy_rows(work, rows)
+            State::Srht { blocks, taken } => {
+                // Deepen every block's without-replacement sample to the
+                // new depth; sketch row `k` sums entry `order[k]` of each
+                // block, so the blocks advance in lockstep from the
+                // shared `taken`.
+                let start = *taken;
+                let mut new_rows: Option<Matrix> = None;
+                for block in blocks.iter_mut() {
+                    assert!(
+                        new_m <= block.order.len(),
+                        "SRHT sketch size {new_m} exceeds padded block dim {}",
+                        block.order.len()
+                    );
+                    let mut t = start;
+                    let rows = take_without_replacement(&mut block.order, &mut t, dm, rng);
+                    match &mut new_rows {
+                        None => new_rows = Some(copy_rows(&block.work, rows)),
+                        Some(acc) => add_rows(acc, &block.work, rows),
+                    }
+                }
+                *taken = start + dm;
+                new_rows.expect("SRHT engine always has at least one block")
             }
             State::Sparse { blocks } => {
                 let block = SparseBlock::sample(dm, self.n, rng);
@@ -242,6 +317,115 @@ impl SketchEngine {
         };
         self.sa.append_rows(&new_rows);
         new_rows
+    }
+
+    /// Stream `Δn` new data rows into the sketch without re-sketching any
+    /// retained row: every entry of `S̃A` is updated by `+=` of new-row
+    /// contributions only (`O(m Δn d)` Gaussian, `O(Δn d log ñ_b + m d)`
+    /// SRHT, `O(nnz(ΔA))` per sparse block), `m` is unchanged, and the
+    /// stored rows stay append-only under later [`Self::grow`] calls. The
+    /// caller owns refreshing the downstream factorization from
+    /// [`Self::sa_unnormalized`].
+    pub fn append_rows<'a>(&mut self, delta: impl Into<OperandRef<'a>>, rng: &mut Xoshiro256) {
+        let delta: OperandRef<'a> = delta.into();
+        let dn = delta.rows();
+        assert!(dn > 0, "append_rows needs at least one new row");
+        assert_eq!(delta.cols(), self.sa.cols(), "append_rows column mismatch");
+        let d = self.sa.cols();
+        match &mut self.state {
+            State::Gaussian { blocks } => {
+                // S̃ [A; ΔA] = S̃_old A + G_new ΔA, one fresh m_b x Δn
+                // column segment per growth block.
+                let mut r0 = 0;
+                for block in blocks.iter_mut() {
+                    block.segments.push((rng.clone(), dn));
+                    let mut g_new = Matrix::zeros(block.rows, dn);
+                    rng.fill_gaussian(g_new.as_mut_slice(), 1.0);
+                    let contrib = dense_block_times(&g_new, delta);
+                    for i in 0..block.rows {
+                        crate::linalg::axpy(1.0, contrib.row(i), self.sa.row_mut(r0 + i));
+                    }
+                    r0 += block.rows;
+                }
+            }
+            State::Srht { blocks, taken } => {
+                // Stacked variant: the new rows get their own independent
+                // signed-Hadamard block, padded far enough to serve both
+                // the current selection depth and future growth.
+                let n_pad = next_pow2(dn).max(next_pow2(2 * *taken));
+                let mut signs = vec![0.0; dn];
+                rng.fill_rademacher(&mut signs);
+                let mut work = signed_work(delta, &signs, n_pad);
+                fwht_rows(&mut work);
+                let mut order: Vec<usize> = (0..n_pad).collect();
+                let mut t = 0;
+                let rows = take_without_replacement(&mut order, &mut t, *taken, rng);
+                for (k, &ri) in rows.iter().enumerate() {
+                    crate::linalg::axpy(1.0, work.row(ri), self.sa.row_mut(k));
+                }
+                blocks.push(SrhtBlock {
+                    row_offset: self.n,
+                    n_rows: dn,
+                    signs,
+                    work,
+                    order,
+                });
+            }
+            State::Sparse { blocks } => {
+                // Extend each block's per-coordinate (row, sign) arrays
+                // and scatter-add only the new data rows.
+                let mut r0 = 0;
+                for block in blocks.iter_mut() {
+                    let start = block.hash.len();
+                    for _ in 0..dn {
+                        block.hash.push(rng.next_below(block.rows as u64) as u32);
+                    }
+                    let mut new_signs = vec![0.0; dn];
+                    rng.fill_rademacher(&mut new_signs);
+                    block.signs.extend_from_slice(&new_signs);
+                    match delta {
+                        OperandRef::Dense(am) => {
+                            for j in 0..dn {
+                                let r = block.hash[start + j] as usize;
+                                let s = block.weight * block.signs[start + j];
+                                let src = am.row(j);
+                                let dst = self.sa.row_mut(r0 + r);
+                                for k in 0..d {
+                                    dst[k] += s * src[k];
+                                }
+                            }
+                        }
+                        OperandRef::Sparse(c) => {
+                            for j in 0..dn {
+                                let r = block.hash[start + j] as usize;
+                                let s = block.weight * block.signs[start + j];
+                                let (cols, vals) = c.row(j);
+                                let dst = self.sa.row_mut(r0 + r);
+                                for (&cc, &v) in cols.iter().zip(vals) {
+                                    dst[cc as usize] += s * v;
+                                }
+                            }
+                        }
+                    }
+                    r0 += block.rows;
+                }
+            }
+        }
+        self.n += dn;
+    }
+
+    /// Largest sketch size this engine can grow to. Unbounded for
+    /// Gaussian and sparse; for SRHT it is the smallest padded block
+    /// dimension — appends add blocks padded to `max(2^⌈lg Δn⌉, 2m)`, so
+    /// small appends can cap growth below `next_pow2(n)` and the solvers
+    /// must take the min (falling back to the exact Hessian at the cap).
+    pub fn max_m(&self) -> usize {
+        match &self.state {
+            State::Srht { blocks, .. } => {
+                blocks.iter().map(|b| b.order.len()).min().unwrap_or(usize::MAX)
+            }
+            _ => usize::MAX,
+        }
     }
 
     /// Current sketch size `m`.
@@ -273,10 +457,18 @@ impl SketchEngine {
         let f64s = std::mem::size_of::<f64>();
         let mat = |m: &Matrix| m.rows() * m.cols() * f64s;
         let state = match &self.state {
-            State::Gaussian { draws } => draws.len() * (std::mem::size_of::<Xoshiro256>() + 8),
-            State::Srht { signs, work, order, .. } => {
-                signs.len() * f64s + mat(work) + order.len() * std::mem::size_of::<usize>()
-            }
+            State::Gaussian { blocks } => blocks
+                .iter()
+                .map(|b| b.segments.len() * (std::mem::size_of::<Xoshiro256>() + 8))
+                .sum(),
+            State::Srht { blocks, .. } => blocks
+                .iter()
+                .map(|b| {
+                    b.signs.len() * f64s
+                        + mat(&b.work)
+                        + b.order.len() * std::mem::size_of::<usize>()
+                })
+                .sum(),
             State::Sparse { blocks } => blocks
                 .iter()
                 .map(|b| b.hash.len() * 4 + b.signs.len() * f64s)
@@ -297,20 +489,38 @@ impl SketchEngine {
     pub fn to_dense(&self) -> Matrix {
         let scale = self.scale();
         match &self.state {
-            State::Gaussian { draws } => {
+            State::Gaussian { blocks } => {
                 let mut out = Matrix::zeros(self.m(), self.n);
                 let mut r0 = 0;
-                for (snapshot, rows) in draws {
-                    let mut rng = snapshot.clone();
-                    let block = &mut out.as_mut_slice()[r0 * self.n..(r0 + rows) * self.n];
-                    rng.fill_gaussian(block, 1.0);
-                    r0 += rows;
+                for block in blocks {
+                    let mut c0 = 0;
+                    for (snapshot, cols) in &block.segments {
+                        let mut rng = snapshot.clone();
+                        let mut seg = Matrix::zeros(block.rows, *cols);
+                        rng.fill_gaussian(seg.as_mut_slice(), 1.0);
+                        for i in 0..block.rows {
+                            out.row_mut(r0 + i)[c0..c0 + cols].copy_from_slice(seg.row(i));
+                        }
+                        c0 += cols;
+                    }
+                    r0 += block.rows;
                 }
                 crate::linalg::scale(scale, out.as_mut_slice());
                 out
             }
-            State::Srht { signs, order, taken, .. } => {
-                Matrix::from_fn(*taken, self.n, |r, j| scale * signs[j] * hadamard_entry(order[r], j))
+            State::Srht { blocks, taken } => {
+                let mut out = Matrix::zeros(*taken, self.n);
+                for block in blocks {
+                    for r in 0..*taken {
+                        let hr = block.order[r];
+                        let row = out.row_mut(r);
+                        for j in 0..block.n_rows {
+                            row[block.row_offset + j] =
+                                scale * block.signs[j] * hadamard_entry(hr, j);
+                        }
+                    }
+                }
+                out
             }
             State::Sparse { blocks } => {
                 let mut out = Matrix::zeros(self.m(), self.n);
@@ -361,6 +571,14 @@ fn copy_rows(src: &Matrix, rows: &[usize]) -> Matrix {
         out.row_mut(oi).copy_from_slice(src.row(ri));
     }
     out
+}
+
+/// Add the given rows of `src` into `dst`'s rows, in order (the stacked
+/// SRHT accumulation: sketch row `k` sums one work row per block).
+fn add_rows(dst: &mut Matrix, src: &Matrix, rows: &[usize]) {
+    for (oi, &ri) in rows.iter().enumerate() {
+        crate::linalg::axpy(1.0, src.row(ri), dst.row_mut(oi));
+    }
 }
 
 #[cfg(test)]
@@ -477,13 +695,131 @@ mod tests {
         engine.grow(20, &a, &mut rng);
         engine.grow(32, &a, &mut rng); // full padded dimension
         match &engine.state {
-            State::Srht { order, taken, .. } => {
-                let mut sel = order[..*taken].to_vec();
+            State::Srht { blocks, taken } => {
+                let mut sel = blocks[0].order[..*taken].to_vec();
                 sel.sort_unstable();
                 sel.dedup();
                 assert_eq!(sel.len(), 32, "rows must be without replacement");
             }
             _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn append_matches_dense_composition() {
+        // After streaming Δn rows, scale * S̃A == to_dense() * [A; ΔA]
+        // for every family — the appended columns of the embedding act on
+        // exactly the new rows.
+        let a = test_a(20, 6, 40);
+        let delta = test_a(7, 6, 41);
+        let mut full = a.clone();
+        full.append_rows(&delta);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(42);
+            let mut engine = SketchEngine::new(kind, 3, &a, &mut rng);
+            engine.grow(6, &a, &mut rng);
+            engine.append_rows(&delta, &mut rng);
+            assert_eq!((engine.m(), engine.n()), (6, 27), "{kind}");
+            let mut sa = engine.sa_unnormalized().clone();
+            crate::linalg::scale(engine.scale(), sa.as_mut_slice());
+            let composed = engine.to_dense().matmul(&full);
+            assert!(sa.max_abs_diff(&composed) < 1e-10, "{kind} append/apply drift");
+        }
+    }
+
+    #[test]
+    fn append_then_grow_keeps_prefix_and_composition() {
+        // Growth after an append must stay append-only over the
+        // post-append rows and keep the embedding consistent.
+        let a = test_a(24, 5, 43);
+        let delta = test_a(9, 5, 44);
+        let mut full = a.clone();
+        full.append_rows(&delta);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(45);
+            let mut engine = SketchEngine::new(kind, 4, &a, &mut rng);
+            engine.append_rows(&delta, &mut rng);
+            let before = engine.sa_unnormalized().clone();
+            let new_rows = engine.grow(10, &full, &mut rng);
+            assert_eq!(engine.m(), 10, "{kind}");
+            assert_eq!(new_rows.rows(), 6, "{kind}");
+            for i in 0..4 {
+                assert_eq!(
+                    engine.sa_unnormalized().row(i),
+                    before.row(i),
+                    "{kind} row {i} changed by growth after append"
+                );
+            }
+            let mut sa = engine.sa_unnormalized().clone();
+            crate::linalg::scale(engine.scale(), sa.as_mut_slice());
+            let composed = engine.to_dense().matmul(&full);
+            assert!(sa.max_abs_diff(&composed) < 1e-10, "{kind} post-append grow drift");
+        }
+    }
+
+    #[test]
+    fn append_csr_matches_dense_delta() {
+        // Same RNG stream, same delta stored two ways: identical updates.
+        let mut rng0 = Xoshiro256::seed_from_u64(46);
+        let a = test_a(22, 6, 47);
+        let ddense = Matrix::from_fn(5, 6, |_, _| {
+            if rng0.next_f64() < 0.4 { rng0.next_gaussian() } else { 0.0 }
+        });
+        let dcsr = CsrMatrix::from_dense(&ddense);
+        for kind in KINDS {
+            let mut ra = Xoshiro256::seed_from_u64(48);
+            let mut rb = Xoshiro256::seed_from_u64(48);
+            let mut ed = SketchEngine::new(kind, 5, &a, &mut ra);
+            let mut es = SketchEngine::new(kind, 5, &a, &mut rb);
+            ed.append_rows(&ddense, &mut ra);
+            es.append_rows(&dcsr, &mut rb);
+            assert!(
+                ed.sa_unnormalized().max_abs_diff(es.sa_unnormalized()) < 1e-10,
+                "{kind} dense/CSR append drift"
+            );
+        }
+    }
+
+    #[test]
+    fn srht_append_caps_growth_at_smallest_block() {
+        let a = test_a(24, 4, 49); // pads to 32
+        let mut rng = Xoshiro256::seed_from_u64(50);
+        let mut engine = SketchEngine::new(SketchKind::Srht, 6, &a, &mut rng);
+        assert_eq!(engine.max_m(), 32);
+        let delta = test_a(3, 4, 51);
+        engine.append_rows(&delta, &mut rng);
+        // New block pads to max(next_pow2(3), next_pow2(2*6)) = 16.
+        assert_eq!(engine.max_m(), 16);
+        // Growth up to the cap works; beyond it must panic (solvers stop
+        // at max_m and fall back to the exact Hessian).
+        let mut full = a.clone();
+        full.append_rows(&delta);
+        engine.grow(16, &full, &mut rng);
+        assert_eq!(engine.m(), 16);
+        // Gaussian/sparse appends leave growth unbounded.
+        let mut rng2 = Xoshiro256::seed_from_u64(52);
+        for kind in [SketchKind::Gaussian, SketchKind::Sparse] {
+            let mut e = SketchEngine::new(kind, 2, &a, &mut rng2);
+            e.append_rows(&delta, &mut rng2);
+            assert_eq!(e.max_m(), usize::MAX, "{kind}");
+        }
+    }
+
+    #[test]
+    fn append_never_touches_sketch_size_or_scale() {
+        let a = test_a(16, 4, 53);
+        let delta = test_a(2, 4, 54);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(55);
+            let mut engine = SketchEngine::new(kind, 5, &a, &mut rng);
+            let scale = engine.scale();
+            let bytes = engine.approx_bytes();
+            engine.append_rows(&delta, &mut rng);
+            assert_eq!(engine.m(), 5, "{kind}");
+            assert_eq!(engine.n(), 18, "{kind}");
+            assert_eq!(engine.scale(), scale, "{kind}");
+            // State grew (segments / stacked block / extended hashes).
+            assert!(engine.approx_bytes() >= bytes, "{kind}");
         }
     }
 

@@ -272,7 +272,14 @@ impl<'p> AdaptiveSolver<'p> {
         assert_eq!(x0.len(), d);
         assert!(config.m_initial >= 1 && config.growth >= 2);
         let params = config.params();
-        let m_cap = crate::sketch::srht::next_pow2(problem.n());
+        // Sketch-size cap: the padded row count, further limited by a
+        // resumed engine's own sampling capacity (streamed SRHT appends
+        // add blocks with finite padded dims — see `SketchEngine::max_m`).
+        // Hitting the cap triggers the exact-Hessian fallback either way.
+        let mut m_cap = crate::sketch::srht::next_pow2(problem.n());
+        if let Some((Some(e), _)) = &resume {
+            m_cap = m_cap.min(e.max_m());
+        }
 
         // Canonical spec-string labels (see `solvers::api`): the Polyak
         // variant is the default and carries no infix.

@@ -127,7 +127,7 @@ pub fn solve_block(
     assert!(eps > 0.0 && eps.is_finite(), "block solve needs a positive finite eps");
     let nu2 = nu * nu;
     let params = config.params();
-    let m_cap = crate::sketch::srht::next_pow2(a.rows());
+    let mut m_cap = crate::sketch::srht::next_pow2(a.rows());
 
     let mut sketch_time = 0.0f64;
     let mut factor_time = 0.0f64;
@@ -135,6 +135,12 @@ pub fn solve_block(
     let (mut engine, mut cache, mut rng, mut m) = match state {
         Some(st) => {
             let (engine, mut cache, rng) = st.into_parts();
+            // A resumed engine may carry its own sampling capacity
+            // (streamed SRHT appends): cap growth at its max_m, with the
+            // same exact-Hessian fallback at the cap.
+            if let Some(e) = &engine {
+                m_cap = m_cap.min(e.max_m());
+            }
             if let Some(e) = &engine {
                 assert_eq!(e.kind(), config.kind, "resume: sketch family changed");
                 assert_eq!(e.n(), a.rows(), "resume: problem shape changed");

@@ -38,6 +38,7 @@
 
 use super::adaptive::{AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver};
 use super::block;
+use super::woodbury::WoodburyCache;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{Matrix, Operand};
 use crate::sketch::SketchKind;
@@ -56,6 +57,35 @@ struct CachedSolution {
     report: SolveReport,
 }
 
+/// Staleness policy for [`ModelSession::append`]: when the incremental
+/// sketch/factorization update is paid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppendRefresh {
+    /// Update the sketch and refresh the factorization inside the append
+    /// call — queries after the append pay nothing extra.
+    Eager,
+    /// Defer the update: appended rows accumulate in a pending buffer and
+    /// are streamed into the sketch right before the next solve (still
+    /// incrementally — retained rows are never re-sketched). Amortizes
+    /// the `O(m^3)` factorization refresh across a burst of appends.
+    Lazy,
+}
+
+/// What [`ModelSession::append`] did.
+#[derive(Clone, Copy, Debug)]
+pub struct AppendOutcome {
+    /// Rows streamed in by this call.
+    pub rows_added: usize,
+    /// Total rows `n` after the append.
+    pub n: usize,
+    /// Sketch size `m` (unchanged by appends; 0 before the first solve).
+    pub m: usize,
+    /// Whether the sketch/factorization was updated inside this call
+    /// (eager policy with live state). `false` means the work is deferred
+    /// to the next solve — or that there is no state to refresh yet.
+    pub refreshed: bool,
+}
+
 /// A registered problem plus everything reusable across queries.
 ///
 /// See the [module docs](self) for the reuse contract. A session is
@@ -71,6 +101,11 @@ pub struct ModelSession {
     seed: u64,
     /// Grown sketch + factorization + RNG; `None` until the first solve.
     state: Option<AdaptiveSessionState>,
+    /// Rows appended under [`AppendRefresh::Lazy`] that the sketch has
+    /// not absorbed yet; flushed incrementally before the next solve.
+    /// Only ever `Some` while `state` is `Some` (with no state, a fresh
+    /// sketch covers the whole operand anyway).
+    pending: Option<Operand>,
     /// Last primary-RHS solution, used to warm-start the next solve.
     warm: Option<Vec<f64>>,
     /// Bounded exact-repeat cache, most recently used last.
@@ -113,11 +148,132 @@ impl ModelSession {
             config: AdaptiveConfig::new(kind),
             seed,
             state: None,
+            pending: None,
             warm: None,
             solutions: Vec::new(),
             queries: 0,
             cache_hits: 0,
         })
+    }
+
+    /// Stream `Δn` new observations `(delta_a, delta_b)` into the model.
+    ///
+    /// Everything downstream updates *incrementally* — no retained row is
+    /// ever re-sketched and no full re-registration happens:
+    ///
+    /// * the operand grows by row append (dense stack / CSR concatenation,
+    ///   [`Operand::append_rows`]) and the cached `A^T b` is updated at
+    ///   `O(Δn d)` (`atb += ΔA^T Δb`);
+    /// * the grown sketch absorbs the new rows through
+    ///   [`SketchEngine::append_rows`](crate::sketch::engine::SketchEngine::append_rows)
+    ///   and the Woodbury factorization is rebuilt from the updated rows
+    ///   at the session's last `nu` — either inside this call
+    ///   ([`AppendRefresh::Eager`]) or right before the next solve
+    ///   ([`AppendRefresh::Lazy`]);
+    /// * at the sketch-size cap (exact-Hessian fallback, no engine) the
+    ///   cache grows by the `O(Δn d^2)` incremental inner-Gram update
+    ///   instead;
+    /// * cached solutions are dropped (they answered the old problem),
+    ///   while the warm-start vector is kept — the old optimum is a good
+    ///   initial iterate after a small append, so the next solve converges
+    ///   in fewer iterations than a cold start.
+    ///
+    /// Counts as an ingest, not a query, in [`ModelSession::query_stats`].
+    pub fn append(
+        &mut self,
+        delta_a: Operand,
+        delta_b: Vec<f64>,
+        refresh: AppendRefresh,
+    ) -> Result<AppendOutcome, String> {
+        let dn = delta_a.rows();
+        if dn == 0 {
+            return Err("append needs at least one new row".into());
+        }
+        if delta_a.cols() != self.d() {
+            return Err(format!(
+                "appended rows have {} columns, expected d = {}",
+                delta_a.cols(),
+                self.d()
+            ));
+        }
+        if delta_b.len() != dn {
+            return Err(format!(
+                "append has {} rows but {} b entries",
+                dn,
+                delta_b.len()
+            ));
+        }
+        if delta_b.iter().any(|v| !v.is_finite()) {
+            return Err("non-finite entry in appended b".into());
+        }
+        let finite = match &delta_a {
+            Operand::Dense(m) => (0..dn).all(|i| m.row(i).iter().all(|v| v.is_finite())),
+            Operand::Sparse(c) => (0..dn).all(|i| c.row(i).1.iter().all(|v| v.is_finite())),
+        };
+        if !finite {
+            return Err("non-finite entry in appended rows".into());
+        }
+
+        // O(Δn d) bookkeeping: atb += ΔA^T Δb, then grow the operand and
+        // observations in place.
+        delta_a.matvec_t_add(&delta_b, &mut self.atb);
+        self.b.extend_from_slice(&delta_b);
+        // Queue the delta for the sketch before growing the operand (the
+        // engine needs exactly the new rows). With no solver state yet
+        // there is nothing to refresh — the first solve sketches the full
+        // grown operand from scratch.
+        if self.state.is_some() {
+            match &mut self.pending {
+                Some(p) => p.append_rows(&delta_a),
+                None => self.pending = Some(delta_a.clone()),
+            }
+        }
+        Arc::make_mut(&mut self.a).append_rows(&delta_a);
+        // Cached solutions answered the pre-append problem.
+        self.solutions.clear();
+
+        let refreshed = refresh == AppendRefresh::Eager && self.pending.is_some();
+        if refresh == AppendRefresh::Eager {
+            self.flush_pending();
+        }
+        Ok(AppendOutcome { rows_added: dn, n: self.n(), m: self.m(), refreshed })
+    }
+
+    /// Absorb pending appended rows into the sketch/factorization —
+    /// incrementally: the engine streams only the pending `Δn` rows
+    /// ([`SketchEngine::append_rows`](crate::sketch::engine::SketchEngine::append_rows)),
+    /// then the Woodbury cache is rebuilt from the updated `S̃A` at the
+    /// cached `nu` (every entry changed additively, so the old Gram is
+    /// not reusable — but no sketch application is repeated). At the cap
+    /// (no engine) the exact-Hessian cache takes the `O(Δn d^2)`
+    /// incremental grow instead.
+    fn flush_pending(&mut self) {
+        let Some(delta) = self.pending.take() else { return };
+        let Some(state) = self.state.take() else {
+            // State was dropped (e.g. a caught panic): the next solve
+            // re-sketches the full operand, delta included.
+            return;
+        };
+        let (engine, cache, mut rng) = state.into_parts();
+        match engine {
+            Some(mut e) => {
+                e.append_rows(&delta, &mut rng);
+                let cache = WoodburyCache::new_scaled(
+                    e.sa_unnormalized().clone(),
+                    cache.nu(),
+                    e.scale(),
+                );
+                self.state = Some(AdaptiveSessionState::from_parts(Some(e), cache, rng));
+            }
+            None => {
+                // Exact-Hessian fallback: the cache rows are A itself at
+                // scale 1 — append the new rows through the incremental
+                // inner-Gram grow.
+                let mut cache = cache;
+                cache.grow(&delta.dense().into_owned(), 1.0);
+                self.state = Some(AdaptiveSessionState::from_parts(None, cache, rng));
+            }
+        }
     }
 
     /// The shared data operand.
@@ -159,11 +315,8 @@ impl ModelSession {
     /// state than the operator configured.
     pub fn approx_bytes(&self) -> usize {
         let f64s = std::mem::size_of::<f64>();
-        let operand = match &*self.a {
-            Operand::Dense(m) => m.rows() * m.cols() * f64s,
-            // CSR: values (f64) + column indices (u32) + row pointers.
-            Operand::Sparse(c) => c.nnz() * (f64s + 4) + (c.rows() + 1) * f64s,
-        };
+        let operand = operand_bytes(&self.a)
+            + self.pending.as_ref().map_or(0, operand_bytes);
         let cached: usize = self
             .solutions
             .iter()
@@ -295,6 +448,9 @@ impl ModelSession {
             }
         }
         self.queries += bs.len() as u64;
+        // Lazily appended rows must be in the sketch before the state can
+        // resume (same contract as `run_adaptive`).
+        self.flush_pending();
         // One SpMM forms every A^T b_j at once; column j then feeds
         // column j's cold-referenced stop target.
         let k = bs.len();
@@ -361,6 +517,9 @@ impl ModelSession {
     /// spin to `max_iters`). Rescaling the tolerance by
     /// `||A^T b|| / ||g(x0)||` pins the absolute target instead.
     fn run_adaptive(&mut self, problem: &RidgeProblem, x0: &[f64], eps: f64) -> Solution {
+        // Lazily appended rows must be in the sketch before the state can
+        // resume (the engine's n must match the grown problem).
+        self.flush_pending();
         // Cold starts need no rescale: g(0) = -A^T b, so the raw relative
         // rule already measures against `cold_scale` and the extra O(nnz)
         // gradient pass is skipped. Warm starts pay one extra gradient to
@@ -394,6 +553,16 @@ impl ModelSession {
         let (sol, state) = solver.run_with_state();
         self.state = Some(state);
         sol
+    }
+}
+
+/// Heap bytes of an operand's storage (dense entries, or CSR values +
+/// column indices + row pointers).
+fn operand_bytes(op: &Operand) -> usize {
+    let f64s = std::mem::size_of::<f64>();
+    match op {
+        Operand::Dense(m) => m.rows() * m.cols() * f64s,
+        Operand::Sparse(c) => c.nnz() * (f64s + 4) + (c.rows() + 1) * f64s,
     }
 }
 
@@ -604,6 +773,222 @@ mod tests {
         }
         // The batch counts k solves.
         assert_eq!(s_block.query_stats().0, 5);
+    }
+
+    fn split_last(a: &Matrix, b: &[f64], dn: usize) -> (Matrix, Vec<f64>, Matrix, Vec<f64>) {
+        let n = a.rows();
+        let base = Matrix::from_fn(n - dn, a.cols(), |i, j| a.get(i, j));
+        let delta = Matrix::from_fn(dn, a.cols(), |i, j| a.get(n - dn + i, j));
+        (base, b[..n - dn].to_vec(), delta, b[n - dn..].to_vec())
+    }
+
+    #[test]
+    fn append_matches_fresh_register_of_concatenated_data() {
+        // Stream the last Δn rows into a grown session; the answer must
+        // match a fresh registration of the full data to solver tolerance.
+        let ds = synthetic::exponential_decay(200, 24, 30);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 8);
+        for refresh in [AppendRefresh::Eager, AppendRefresh::Lazy] {
+            let mut grown = ModelSession::new(
+                Arc::new(Operand::from(base.clone())),
+                b_base.clone(),
+                SketchKind::Gaussian,
+                31,
+            )
+            .unwrap();
+            grown.solve(0.5, 1e-8).unwrap(); // grow the sketch pre-append
+            let out = grown
+                .append(Operand::from(delta.clone()), b_delta.clone(), refresh)
+                .unwrap();
+            assert_eq!((out.rows_added, out.n), (8, 200));
+            assert_eq!(out.refreshed, refresh == AppendRefresh::Eager);
+            let appended = grown.solve(0.5, 1e-12).unwrap();
+            assert!(appended.report.converged);
+
+            let mut fresh = ModelSession::new(
+                Arc::new(Operand::from(full.clone())),
+                ds.b.clone(),
+                SketchKind::Gaussian,
+                31,
+            )
+            .unwrap();
+            let reregistered = fresh.solve(0.5, 1e-12).unwrap();
+            let scale = reregistered.x.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+            for i in 0..24 {
+                assert!(
+                    (appended.x[i] - reregistered.x[i]).abs() <= 1e-10 * scale,
+                    "{refresh:?} coord {i}: {} vs {}",
+                    appended.x[i],
+                    reregistered.x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn append_never_resketches_retained_rows() {
+        let ds = synthetic::exponential_decay(192, 16, 32);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 4);
+        let mut s = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Gaussian,
+            33,
+        )
+        .unwrap();
+        s.solve(0.8, 1e-9).unwrap();
+        let m_before = s.m();
+        s.append(Operand::from(delta), b_delta, AppendRefresh::Eager).unwrap();
+        assert_eq!(s.m(), m_before, "append must not change the sketch size");
+        let sol = s.solve(0.8, 1e-9).unwrap();
+        assert!(sol.report.converged);
+        // The resumed solve applies zero fresh sketch unless it *grew* —
+        // appended models never pay a full re-sketch of retained rows.
+        assert!(
+            sol.report.sketch_time_s == 0.0 || sol.report.doublings > 0,
+            "sketch work without growth: {}s over {} doublings",
+            sol.report.sketch_time_s,
+            sol.report.doublings
+        );
+    }
+
+    #[test]
+    fn lazy_append_defers_and_flushes_before_next_solve() {
+        let ds = synthetic::exponential_decay(160, 12, 34);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 6);
+        let mut s = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Gaussian,
+            35,
+        )
+        .unwrap();
+        s.solve(0.6, 1e-8).unwrap();
+        let bytes_before = s.approx_bytes();
+        let out = s.append(Operand::from(delta), b_delta, AppendRefresh::Lazy).unwrap();
+        assert!(!out.refreshed, "lazy append must defer the refresh");
+        assert!(s.pending.is_some(), "delta must sit in the pending buffer");
+        // The grown operand and pending delta are charged immediately.
+        assert!(s.approx_bytes() > bytes_before);
+        let sol = s.solve(0.6, 1e-10).unwrap();
+        assert!(sol.report.converged);
+        assert!(s.pending.is_none(), "solve must flush the pending rows");
+        // And the answer solves the grown problem.
+        let x_star = exact(&s, 0.6);
+        let p = RidgeProblem::from_parts(
+            Arc::clone(s.operand()),
+            None,
+            s.operand().matvec_t(&s.b),
+            0.6,
+        );
+        let rel = p.prediction_error(&sol.x, &x_star)
+            / p.prediction_error(&vec![0.0; 12], &x_star);
+        assert!(rel < 1e-6, "relative error {rel}");
+    }
+
+    #[test]
+    fn append_warm_start_cuts_iterations_vs_cold_reregister() {
+        let ds = synthetic::exponential_decay(256, 32, 36);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 4);
+        let mut grown = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Gaussian,
+            37,
+        )
+        .unwrap();
+        grown.solve(0.5, 1e-10).unwrap();
+        grown.append(Operand::from(delta), b_delta, AppendRefresh::Eager).unwrap();
+        let warm = grown.solve(0.5, 1e-10).unwrap();
+        let mut fresh = ModelSession::new(
+            Arc::new(Operand::from(full)),
+            ds.b.clone(),
+            SketchKind::Gaussian,
+            37,
+        )
+        .unwrap();
+        let cold = fresh.solve(0.5, 1e-10).unwrap();
+        assert!(warm.report.converged && cold.report.converged);
+        assert!(
+            warm.report.iterations <= cold.report.iterations,
+            "warm post-append solve took {} iterations, cold re-register {}",
+            warm.report.iterations,
+            cold.report.iterations
+        );
+    }
+
+    #[test]
+    fn append_invalidates_solution_cache_but_counts_no_query() {
+        let ds = synthetic::exponential_decay(128, 16, 38);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 2);
+        let mut s = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Gaussian,
+            39,
+        )
+        .unwrap();
+        let before = s.solve(0.5, 1e-8).unwrap();
+        let (q0, h0) = s.query_stats();
+        s.append(Operand::from(delta), b_delta, AppendRefresh::Eager).unwrap();
+        assert_eq!(s.query_stats(), (q0, h0), "append must not count as a query");
+        let after = s.solve(0.5, 1e-8).unwrap();
+        let (_, h1) = s.query_stats();
+        assert_eq!(h1, h0, "post-append repeat must NOT hit the stale cache");
+        assert_ne!(before.x, after.x, "the grown problem has a different optimum");
+    }
+
+    #[test]
+    fn append_rejects_bad_inputs_without_mutating() {
+        let mut s = session(64, 8, 40);
+        s.solve(0.5, 1e-8).unwrap();
+        let (n0, bytes0) = (s.n(), s.approx_bytes());
+        let row = |v: f64| Operand::from(Matrix::from_fn(1, 8, |_, _| v));
+        // Wrong width, wrong b length, non-finite entries, empty append.
+        assert!(s
+            .append(Operand::from(Matrix::zeros(1, 5)), vec![1.0], AppendRefresh::Eager)
+            .is_err());
+        assert!(s.append(row(1.0), vec![1.0, 2.0], AppendRefresh::Eager).is_err());
+        assert!(s.append(row(f64::NAN), vec![1.0], AppendRefresh::Eager).is_err());
+        assert!(s.append(row(1.0), vec![f64::NAN], AppendRefresh::Eager).is_err());
+        assert!(s
+            .append(Operand::from(Matrix::zeros(0, 8)), vec![], AppendRefresh::Eager)
+            .is_err());
+        assert_eq!((s.n(), s.approx_bytes()), (n0, bytes0), "rejected appends must not mutate");
+    }
+
+    #[test]
+    fn append_before_first_solve_just_grows_the_data() {
+        let ds = synthetic::exponential_decay(96, 8, 41);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 3);
+        let mut s = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Srht,
+            42,
+        )
+        .unwrap();
+        let out = s.append(Operand::from(delta), b_delta, AppendRefresh::Eager).unwrap();
+        assert_eq!((out.n, out.m, out.refreshed), (96, 0, false));
+        assert!(s.pending.is_none(), "no state, nothing to defer");
+        let sol = s.solve(0.7, 1e-9).unwrap();
+        assert!(sol.report.converged);
+        let x_star = exact(&s, 0.7);
+        let p = RidgeProblem::from_parts(
+            Arc::clone(s.operand()),
+            None,
+            s.operand().matvec_t(&s.b),
+            0.7,
+        );
+        let rel = p.prediction_error(&sol.x, &x_star)
+            / p.prediction_error(&vec![0.0; 8], &x_star);
+        assert!(rel < 1e-6, "relative error {rel}");
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Streaming-ingest acceptance sweep (`ModelSession::append` + the
+//! engine's row-append path): an appended model must answer exactly like
+//! a model registered fresh on the concatenated data, for every sketch
+//! family and both operand storages, while never re-sketching the
+//! retained rows.
+
+use effdim::linalg::sparse::CsrMatrix;
+use effdim::linalg::{norm2, Matrix, Operand};
+use effdim::rng::Xoshiro256;
+use effdim::sketch::engine::SketchEngine;
+use effdim::sketch::SketchKind;
+use effdim::solvers::session::{AppendRefresh, ModelSession};
+use std::sync::Arc;
+
+const KINDS: [SketchKind; 3] = [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse];
+
+/// Deterministic full problem of `n + dn` rows, split into the base block
+/// and the streamed delta. `density < 1` zeroes entries so the CSR
+/// storage variants exercise genuinely sparse deltas.
+fn split_problem(
+    n: usize,
+    dn: usize,
+    d: usize,
+    density: f64,
+    seed: u64,
+) -> (Matrix, Vec<f64>, Matrix, Vec<f64>, Matrix, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let full = Matrix::from_fn(n + dn, d, |_, _| {
+        if rng.next_f64() < density {
+            rng.next_gaussian()
+        } else {
+            0.0
+        }
+    });
+    let b_full: Vec<f64> = (0..n + dn).map(|i| (i as f64 * 0.011).sin()).collect();
+    let base = Matrix::from_fn(n, d, |i, j| full.get(i, j));
+    let delta = Matrix::from_fn(dn, d, |i, j| full.get(n + i, j));
+    let b_base = b_full[..n].to_vec();
+    let b_delta = b_full[n..].to_vec();
+    (full, b_full, base, b_base, delta, b_delta)
+}
+
+/// Relative agreement between two solutions of the same problem.
+fn rel_diff(x: &[f64], y: &[f64]) -> f64 {
+    let diff: Vec<f64> = x.iter().zip(y).map(|(a, b)| a - b).collect();
+    norm2(&diff) / (1.0 + norm2(x))
+}
+
+#[test]
+fn appended_model_matches_fresh_register_for_every_kind_and_storage() {
+    let (n, dn, d) = (192, 12, 16);
+    let (nu, eps) = (0.7, 1e-12);
+    for kind in KINDS {
+        for sparse_storage in [false, true] {
+            let (full, b_full, base, b_base, delta, b_delta) =
+                split_problem(n, dn, d, if sparse_storage { 0.4 } else { 1.0 }, 9);
+            let wrap = |m: &Matrix| -> Operand {
+                if sparse_storage {
+                    Operand::Sparse(CsrMatrix::from_dense(m))
+                } else {
+                    Operand::Dense(m.clone())
+                }
+            };
+            let mut appended =
+                ModelSession::new(Arc::new(wrap(&base)), b_base, kind, 5).unwrap();
+            appended.solve(nu, eps).unwrap(); // warm: sketch grown on the base rows
+            let m_before = appended.m();
+            let out = appended
+                .append(wrap(&delta), b_delta, AppendRefresh::Eager)
+                .unwrap();
+            assert_eq!(out.rows_added, dn);
+            assert_eq!(out.n, n + dn);
+            assert_eq!(out.m, m_before, "append must not change the sketch size");
+            let x_app = appended.solve(nu, eps).unwrap().x;
+
+            let mut fresh = ModelSession::new(Arc::new(wrap(&full)), b_full, kind, 5).unwrap();
+            let x_fresh = fresh.solve(nu, eps).unwrap().x;
+            let diff = rel_diff(&x_app, &x_fresh);
+            assert!(
+                diff <= 1e-10,
+                "append vs fresh register disagree: {diff:.3e} \
+                 (kind {kind}, sparse_storage {sparse_storage})"
+            );
+        }
+    }
+}
+
+#[test]
+fn lazy_appends_accumulate_and_match_fresh_register() {
+    // Two lazy deltas (one dense, one CSR) then a solve: the deferred
+    // refresh must fold BOTH pending blocks in before answering, and the
+    // answer must match a fresh model on the full concatenation.
+    let (n, dn, d) = (160, 10, 12);
+    let (nu, eps) = (0.5, 1e-12);
+    for kind in KINDS {
+        let (full, b_full, base, b_base, delta, b_delta) = split_problem(n, 2 * dn, d, 1.0, 21);
+        let d1 = Matrix::from_fn(dn, d, |i, j| delta.get(i, j));
+        let d2 = Matrix::from_fn(dn, d, |i, j| delta.get(dn + i, j));
+        let mut sess = ModelSession::new(
+            Arc::new(Operand::Dense(base)),
+            b_base,
+            kind,
+            3,
+        )
+        .unwrap();
+        sess.solve(nu, eps).unwrap();
+        let out1 = sess
+            .append(Operand::Dense(d1), b_delta[..dn].to_vec(), AppendRefresh::Lazy)
+            .unwrap();
+        assert!(!out1.refreshed, "lazy append defers the downstream refresh");
+        let out2 = sess
+            .append(
+                Operand::Sparse(CsrMatrix::from_dense(&d2)),
+                b_delta[dn..].to_vec(),
+                AppendRefresh::Lazy,
+            )
+            .unwrap();
+        assert_eq!(out2.n, n + 2 * dn);
+        let x_app = sess.solve(nu, eps).unwrap().x;
+
+        let mut fresh =
+            ModelSession::new(Arc::new(Operand::Dense(full)), b_full, kind, 3).unwrap();
+        let x_fresh = fresh.solve(nu, eps).unwrap().x;
+        let diff = rel_diff(&x_app, &x_fresh);
+        assert!(diff <= 1e-10, "lazy appends disagree with fresh: {diff:.3e} (kind {kind})");
+    }
+}
+
+#[test]
+fn append_never_resketches_retained_rows() {
+    // The re-solve after an append may GROW the sketch (doublings > 0,
+    // which sketches only the new rows) but must never pay a from-scratch
+    // re-apply: with no growth, its sketch time is exactly zero, and the
+    // sketch size is untouched by the append itself.
+    let (n, dn, d) = (192, 8, 16);
+    let (nu, eps) = (0.5, 1e-8);
+    for kind in KINDS {
+        let (_, _, base, b_base, delta, b_delta) = split_problem(n, dn, d, 1.0, 4);
+        let mut sess =
+            ModelSession::new(Arc::new(Operand::Dense(base)), b_base, kind, 11).unwrap();
+        sess.solve(nu, eps).unwrap();
+        let m_before = sess.m();
+        sess.append(Operand::Dense(delta), b_delta, AppendRefresh::Eager).unwrap();
+        assert_eq!(sess.m(), m_before);
+        let report = sess.solve(nu, eps).unwrap().report;
+        assert!(
+            report.sketch_time_s == 0.0 || report.doublings > 0,
+            "solve after append paid sketch time without growing (kind {kind})"
+        );
+    }
+}
+
+#[test]
+fn engine_growth_after_append_keeps_the_sketch_prefix_bitwise() {
+    // Growing the sketch after a row append must only add rows: the
+    // retained `S~A` entries stay bitwise identical, for every family.
+    let (n, dn, d, m) = (192, 12, 16, 8);
+    for kind in KINDS {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let (full, _, base, _, delta, _) = split_problem(n, dn, d, 1.0, 13);
+        let mut engine = SketchEngine::new(kind, m, &base, &mut rng);
+        engine.append_rows(&delta, &mut rng);
+        assert_eq!(engine.n(), n + dn);
+        assert_eq!(engine.m(), m);
+        let before = engine.sa_unnormalized().clone();
+        let target = (2 * m).min(engine.max_m());
+        assert!(target > m, "growth target must exceed m for the test to bite");
+        engine.grow(target, &full, &mut rng);
+        assert_eq!(engine.m(), target);
+        let after = engine.sa_unnormalized();
+        for i in 0..m {
+            for j in 0..d {
+                assert!(
+                    before.get(i, j).to_bits() == after.get(i, j).to_bits(),
+                    "growth rewrote retained sketch row {i} (kind {kind})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn append_warm_start_cuts_iterations_vs_cold_register() {
+    // The appended session keeps its previous solution as the warm start;
+    // for dn << n the re-solve must take no more iterations than a cold
+    // model registered fresh on the concatenated data.
+    let (n, dn, d) = (256, 8, 16);
+    let (nu, eps) = (0.5, 1e-10);
+    let (full, b_full, base, b_base, delta, b_delta) = split_problem(n, dn, d, 1.0, 17);
+    let mut warm = ModelSession::new(
+        Arc::new(Operand::Dense(base)),
+        b_base,
+        SketchKind::Gaussian,
+        19,
+    )
+    .unwrap();
+    warm.solve(nu, eps).unwrap();
+    warm.append(Operand::Dense(delta), b_delta, AppendRefresh::Eager).unwrap();
+    let warm_iters = warm.solve(nu, eps).unwrap().report.iterations;
+
+    let mut cold =
+        ModelSession::new(Arc::new(Operand::Dense(full)), b_full, SketchKind::Gaussian, 19)
+            .unwrap();
+    let cold_iters = cold.solve(nu, eps).unwrap().report.iterations;
+    assert!(
+        warm_iters <= cold_iters,
+        "warm re-solve after append took {warm_iters} iterations vs {cold_iters} cold"
+    );
+}
