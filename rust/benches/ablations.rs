@@ -48,7 +48,7 @@ fn main() {
     let (hutch, de_hat) =
         ihs::solve_with_estimated_de(&p, &x0, SketchKind::Gaussian, 0.15, 30, &stop, 2);
     let acfg = AdaptiveConfig::new(SketchKind::Gaussian);
-    let ada = adaptive::solve(&p, &x0, &acfg, &stop, 3);
+    let ada = adaptive::solve(&p, &x0, &acfg, &stop, 3).unwrap();
     println!("\n[2] adaptive vs hutchinson-estimate ([31]) — d_e = {d_e:.1}, estimate {de_hat:.1}:");
     println!(
         "    hutchinson iters={:<4} m={:<5} time={:.4}s conv={}",
@@ -64,7 +64,7 @@ fn main() {
     for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
         let mut cfg = AdaptiveConfig::new(SketchKind::Srht);
         cfg.variant = variant;
-        let sol = adaptive::solve(&p, &x0, &cfg, &stop, 4);
+        let sol = adaptive::solve(&p, &x0, &cfg, &stop, 4).unwrap();
         println!(
             "    {:<24} iters={:<4} rejected={:<4} time={:.4}s conv={}",
             format!("{variant:?}"),

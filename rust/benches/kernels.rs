@@ -166,7 +166,7 @@ fn main() {
                 let mut erng = Xoshiro256::seed_from_u64(10 + i);
                 let mut engine = SketchEngine::new(SketchKind::Srht, m / 2, &a, &mut erng);
                 let t0 = Instant::now();
-                std::hint::black_box(engine.grow(m, &a, &mut erng));
+                std::hint::black_box(engine.grow(m, &a, &mut erng).unwrap());
                 times.push(t0.elapsed().as_secs_f64());
             }
             let s = summarize(&times);
@@ -202,7 +202,7 @@ fn main() {
                 let mut erng = Xoshiro256::seed_from_u64(20 + i);
                 let mut engine = SketchEngine::new(SketchKind::Gaussian, m / 2, &a, &mut erng);
                 let t0 = Instant::now();
-                std::hint::black_box(engine.grow(m, &a, &mut erng));
+                std::hint::black_box(engine.grow(m, &a, &mut erng).unwrap());
                 times.push(t0.elapsed().as_secs_f64());
             }
             let s = summarize(&times);
@@ -236,14 +236,15 @@ fn main() {
         let scale_half = 1.0 / ((m / 2) as f64).sqrt();
         let scale_full = 1.0 / (m as f64).sqrt();
         let t_factor_full = timed(&mut cases, "woodbury factor (full rebuild)", (n, d, m), default_threads, 3, || {
-            std::hint::black_box(WoodburyCache::new_scaled(sa_full.clone(), 0.5, scale_full));
+            std::hint::black_box(WoodburyCache::new_scaled(sa_full.clone(), 0.5, scale_full).unwrap());
         });
         let t_factor_grow = {
             let mut times = Vec::new();
             for _ in 0..5 {
-                let mut cache = WoodburyCache::new_scaled(half_rows.clone(), 0.5, scale_half);
+                let mut cache =
+                    WoodburyCache::new_scaled(half_rows.clone(), 0.5, scale_half).unwrap();
                 let t0 = Instant::now();
-                cache.grow(&new_rows, scale_full);
+                cache.grow(&new_rows, scale_full).unwrap();
                 std::hint::black_box(&cache);
                 times.push(t0.elapsed().as_secs_f64());
             }
@@ -346,7 +347,7 @@ fn main() {
                     let mut erng = Xoshiro256::seed_from_u64(40 + i as u64);
                     let mut engine = SketchEngine::new(SketchKind::Sparse, m / 2, op, &mut erng);
                     let t0 = Instant::now();
-                    std::hint::black_box(engine.grow(m, op, &mut erng));
+                    std::hint::black_box(engine.grow(m, op, &mut erng).unwrap());
                     times.push(t0.elapsed().as_secs_f64());
                 }
                 summarize(&times).mean
@@ -594,6 +595,67 @@ fn main() {
             println!("    append speedup ({kind}): {:.2}x", t_scratch / t_append);
         }
         println!();
+    }
+
+    // Degraded-mode serving overhead (§Robustness acceptance): the same
+    // re-key query answered once through the healthy path and once with
+    // an injected factor breakdown, so the recovery ladder's re-sketch
+    // rung carries the solve. `degraded_solve_overhead` = degraded mean /
+    // clean mean — the price of answering through the ladder instead of
+    // failing the query (CI greps the column; benches are single-
+    // threaded, so arming the process-global failpoint here is safe).
+    {
+        use effdim::solvers::error::RecoveryRung;
+        use effdim::util::failpoint::{self, Action};
+        let (n, d) = if smoke { (512usize, 64usize) } else { (2048usize, 256usize) };
+        let reps = if smoke { 2 } else { 5 };
+        let ds = synthetic::exponential_decay(n, d, 8);
+        let (nu0, nu1, eps) = (0.5, 1.0, 1e-8);
+        println!("--- degraded-mode overhead (n = {n}, d = {d}) ---");
+        let mut rekey_time = |degraded: bool, label: &str| {
+            let mut times = Vec::new();
+            for i in 0..reps {
+                let mut sess = ModelSession::new(
+                    Arc::new(ds.a.clone()),
+                    ds.b.clone(),
+                    SketchKind::Gaussian,
+                    80 + i as u64,
+                )
+                .unwrap();
+                sess.solve(nu0, eps).unwrap(); // grow the shared sketch once
+                if degraded {
+                    failpoint::arm("woodbury.factor", Action::Error, 1);
+                }
+                let t0 = Instant::now();
+                let sol = sess.solve(nu1, eps).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+                let want = if degraded { RecoveryRung::Resketch } else { RecoveryRung::None };
+                assert_eq!(
+                    sol.report.recovery, want,
+                    "degraded-mode bench must exercise the intended ladder rung"
+                );
+            }
+            failpoint::disarm_all();
+            let s = summarize(&times);
+            cases.push(Case {
+                name: label.into(),
+                n,
+                d,
+                m: 0,
+                threads: default_threads,
+                mean_s: s.mean,
+                min_s: s.min,
+            });
+            println!("{label:<44} {:>10.3} ms", s.mean * 1e3);
+            s.mean
+        };
+        let t_clean = rekey_time(false, "re-key query (healthy)");
+        let t_degraded = rekey_time(true, "re-key query (injected breakdown, resketch)");
+        derived.push(("degraded_solve_overhead".to_string(), Json::from(t_degraded / t_clean)));
+        println!(
+            "    degraded_solve_overhead (resketch vs healthy re-key): {:.2}x\n",
+            t_degraded / t_clean
+        );
     }
 
     // Emit the JSON trajectory at the repo root (benches run from rust/).

@@ -86,7 +86,8 @@ pub fn run(cfg: &BoundsConfig, nus: &[f64]) -> Vec<BoundsRow> {
                 // same paper-default config `SolverSpec::Adaptive` builds.)
                 let acfg = AdaptiveConfig::new(kind);
                 let sol =
-                    adaptive::solve(&problem, &vec![0.0; ds.d()], &acfg, &stop, cfg.seed + 9);
+                    adaptive::solve(&problem, &vec![0.0; ds.d()], &acfg, &stop, cfg.seed + 9)
+                        .expect("bench sweep problems are well-conditioned");
                 let (m_bound, k_bound) = match kind {
                     SketchKind::Gaussian => (
                         gaussian_sketch_size_bound(acfg.rho, d_e),

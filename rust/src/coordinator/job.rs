@@ -151,6 +151,9 @@ pub fn report_fields(r: &SolveReport) -> Vec<(&'static str, Json)> {
         ("factor_time_s", Json::from(r.factor_time_s)),
         ("iter_time_s", Json::from(r.iter_time_s)),
         ("converged", Json::from(r.converged)),
+        // Highest numerical-recovery rung the solve climbed: "none" for
+        // healthy solves, else "jitter" / "resketch" / "exact".
+        ("recovery", Json::from(r.recovery.label().to_string())),
     ];
     if let Some(e) = r.final_rel_error {
         fields.push(("final_rel_error", Json::from(e)));
@@ -226,7 +229,14 @@ fn execute_inner(spec: &JobSpec) -> Result<SolveOutcome, String> {
     let stop = spec.solver.true_error_stop(&problem, spec.eps);
     let x0 = vec![0.0; problem.d()];
 
-    let solution = spec.solver.build(spec.seed).solve(&problem, &x0, &stop);
+    // `try_solve` so solver-side failure (invalid input, numerical
+    // recovery exhausted, deadline) fails the job with a structured
+    // message instead of unwinding through the worker.
+    let solution = spec
+        .solver
+        .build(spec.seed)
+        .try_solve(&problem, &x0, &stop)
+        .map_err(String::from)?;
     Ok(SolveOutcome { report: solution.report, x: solution.x, path_points: Vec::new() })
 }
 
@@ -365,6 +375,7 @@ mod tests {
         let j = out.to_json(false);
         assert!(j.get("iterations").is_some());
         assert!(j.get("x").is_none());
+        assert_eq!(j.get("recovery").unwrap().as_str().unwrap(), "none");
         let jx = out.to_json(true);
         assert_eq!(jx.get("x").unwrap().as_arr().unwrap().len(), 16);
     }

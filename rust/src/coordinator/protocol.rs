@@ -22,11 +22,21 @@
 //! {"cmd":"evict","model":1}
 //! {"cmd":"models"}
 //! {"cmd":"metrics"}
+//! {"cmd":"health"}
 //! {"cmd":"solvers"}
 //! {"cmd":"ping"}
 //! {"cmd":"shutdown"}
 //! ```
 //! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//!
+//! Robustness contract (see `PROTOCOL.md` §Errors): `nu`/`eps` are
+//! validated *at decode* — non-positive or non-finite values answer
+//! `{"ok":false,"error":"invalid nu: ..."}` before any solver state is
+//! touched. `query`/`predict`/`append` accept an optional `"deadline_s"`
+//! (positive, finite seconds): a request that exceeds its wall deadline
+//! mid-solve rolls the session back and answers a
+//! `"deadline exceeded: ..."` error. `health` reports liveness plus
+//! scheduler/registry load without touching any model.
 //!
 //! The `"solver"` field of a solve request is a [`SolverSpec`] string
 //! (`"cg"`, `"adaptive-srht"`, `"ihs-sparse@m=256"`, ...); `"solvers"`
@@ -108,6 +118,9 @@ pub enum Request {
         /// jointly through one BLAS-3 block iteration
         /// ([`crate::solvers::block`]); exclusive with `b` and `nus`.
         bs: Option<Vec<Vec<f64>>>,
+        /// Optional per-request wall deadline in seconds; the solve rolls
+        /// back and errors if it runs past it.
+        deadline_s: Option<f64>,
     },
     /// Predict on new rows with a registered model's solution at `nu`.
     Predict {
@@ -119,6 +132,8 @@ pub enum Request {
         rows: Vec<Vec<f64>>,
         /// Tolerance for the underlying solve if not already cached.
         eps: f64,
+        /// Optional per-request wall deadline in seconds.
+        deadline_s: Option<f64>,
     },
     /// Stream new observation rows into a registered model. The payload is
     /// the inline-triplet shape (`"rows"`/`"cols"`/`"triplets"`/`"b"`)
@@ -139,6 +154,9 @@ pub enum Request {
         /// (`"refresh":"lazy"`) defers the downstream update to the next
         /// query.
         eager: bool,
+        /// Optional per-request wall deadline in seconds; on expiry the
+        /// append rolls back completely (no rows retained).
+        deadline_s: Option<f64>,
     },
     /// Drop a registered model, freeing its cached state.
     Evict {
@@ -149,6 +167,9 @@ pub enum Request {
     Models,
     /// Process metrics snapshot (scheduler + registry).
     Metrics,
+    /// Liveness/load probe: backlog, in-flight connections, registered
+    /// models, drain state — never touches a model session.
+    Health,
     /// List every available solver spec.
     Solvers,
     /// Liveness check.
@@ -163,8 +184,8 @@ pub fn decode(line: &str) -> Result<Request, String> {
     let cmd = v.get("cmd").and_then(Json::as_str).ok_or("missing cmd")?;
     match cmd {
         "solve" => {
-            let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
-            let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
+            let nu = decode_nu(&v)?;
+            let eps = decode_eps(&v)?;
             let seed = v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
             let solver_name = v.get("solver").and_then(Json::as_str).unwrap_or("adaptive");
             let solver: SolverSpec = solver_name.parse()?;
@@ -190,9 +211,10 @@ pub fn decode(line: &str) -> Result<Request, String> {
         }
         "query" => {
             let model = require_id(&v, "model")?;
-            let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
+            let nu = decode_nu(&v)?;
             let nus = decode_nus(&v)?;
-            let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
+            let eps = decode_eps(&v)?;
+            let deadline_s = decode_deadline(&v)?;
             let include_x = v.get("include_x").and_then(Json::as_bool).unwrap_or(false);
             // A present-but-non-array "b" must be an error, not a silent
             // fall-through to a state-mutating solve of the registered b.
@@ -232,12 +254,13 @@ pub fn decode(line: &str) -> Result<Request, String> {
             if bs.is_some() && (b.is_some() || !nus.is_empty()) {
                 return Err("\"bs\" cannot be combined with \"b\" or \"nus\" in one query".into());
             }
-            Ok(Request::Query { model, nu, nus, eps, include_x, b, bs })
+            Ok(Request::Query { model, nu, nus, eps, include_x, b, bs, deadline_s })
         }
         "predict" => {
             let model = require_id(&v, "model")?;
-            let nu = v.get("nu").and_then(Json::as_f64).unwrap_or(1.0);
-            let eps = v.get("eps").and_then(Json::as_f64).unwrap_or(1e-8);
+            let nu = decode_nu(&v)?;
+            let eps = decode_eps(&v)?;
+            let deadline_s = decode_deadline(&v)?;
             let rows_json = v.get("rows").and_then(Json::as_arr).ok_or("predict needs \"rows\"")?;
             let mut rows = Vec::with_capacity(rows_json.len());
             for (i, r) in rows_json.iter().enumerate() {
@@ -247,10 +270,11 @@ pub fn decode(line: &str) -> Result<Request, String> {
             if rows.is_empty() {
                 return Err("predict needs at least one row".into());
             }
-            Ok(Request::Predict { model, nu, rows, eps })
+            Ok(Request::Predict { model, nu, rows, eps, deadline_s })
         }
         "append" => {
             let model = require_id(&v, "model")?;
+            let deadline_s = decode_deadline(&v)?;
             // The delta ships in the same inline-triplet shape register
             // uses; synthetic profiles make no sense for an append.
             let trips = v
@@ -271,7 +295,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
                     _ => return Err("\"refresh\" must be \"eager\" or \"lazy\"".into()),
                 },
             };
-            Ok(Request::Append { model, a, b, eager })
+            Ok(Request::Append { model, a, b, eager, deadline_s })
         }
         "evict" => Ok(Request::Evict { model: require_id(&v, "model")? }),
         "models" => Ok(Request::Models),
@@ -285,6 +309,7 @@ pub fn decode(line: &str) -> Result<Request, String> {
             include_x: v.get("include_x").and_then(Json::as_bool).unwrap_or(false),
         }),
         "metrics" => Ok(Request::Metrics),
+        "health" => Ok(Request::Health),
         "solvers" => Ok(Request::Solvers),
         "ping" => Ok(Request::Ping),
         "shutdown" => Ok(Request::Shutdown),
@@ -317,6 +342,51 @@ fn decode_workload(v: &Json, seed: u64) -> Result<Workload, String> {
     }
 }
 
+/// Optional `"nu"` (default 1.0). Rejected at decode when non-positive or
+/// non-finite — the solver stack would refuse it anyway, but catching it
+/// here guarantees no session state is ever touched by an invalid level.
+fn decode_nu(v: &Json) -> Result<f64, String> {
+    match v.get("nu") {
+        None | Some(Json::Null) => Ok(1.0),
+        Some(raw) => {
+            let nu = raw.as_f64().ok_or("invalid nu: must be a number")?;
+            if !(nu.is_finite() && nu > 0.0) {
+                return Err(format!("invalid nu: must be positive and finite, got {nu}"));
+            }
+            Ok(nu)
+        }
+    }
+}
+
+/// Optional `"eps"` (default 1e-8), same strictness as [`decode_nu`].
+fn decode_eps(v: &Json) -> Result<f64, String> {
+    match v.get("eps") {
+        None | Some(Json::Null) => Ok(1e-8),
+        Some(raw) => {
+            let eps = raw.as_f64().ok_or("invalid eps: must be a number")?;
+            if !(eps.is_finite() && eps > 0.0) {
+                return Err(format!("invalid eps: must be positive and finite, got {eps}"));
+            }
+            Ok(eps)
+        }
+    }
+}
+
+/// Optional `"deadline_s"`: positive, finite seconds of wall budget for
+/// this request; `None`/`null` means the server-wide default (if any).
+fn decode_deadline(v: &Json) -> Result<Option<f64>, String> {
+    match v.get("deadline_s") {
+        None | Some(Json::Null) => Ok(None),
+        Some(raw) => {
+            let s = raw.as_f64().ok_or("invalid deadline_s: must be a number of seconds")?;
+            if !(s.is_finite() && s > 0.0) {
+                return Err(format!("invalid deadline_s: must be positive and finite, got {s}"));
+            }
+            Ok(Some(s))
+        }
+    }
+}
+
 /// Optional `"nus"` array (empty when absent or `null`). Strict: a
 /// non-array value or a non-numeric entry is an error, not a silently
 /// shorter (or empty) path — an empty result must mean the client did
@@ -326,7 +396,11 @@ fn decode_nus(v: &Json) -> Result<Vec<f64>, String> {
         None | Some(Json::Null) => Ok(Vec::new()),
         Some(raw) => {
             let arr = raw.as_arr().ok_or("\"nus\" must be an array of numbers")?;
-            decode_f64_vec(arr, "nus")
+            let nus = decode_f64_vec(arr, "nus")?;
+            if let Some(bad) = nus.iter().find(|&&x| x <= 0.0) {
+                return Err(format!("invalid nu: path entries must be positive, got {bad}"));
+            }
+            Ok(nus)
         }
     }
 }
@@ -413,6 +487,14 @@ pub fn ok(mut fields: Vec<(&str, Json)>) -> String {
 /// Encode an error response.
 pub fn err(message: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::from(message))]).to_string()
+}
+
+/// Encode an error response with extra machine-readable fields (e.g. the
+/// overload shed's `retry_after_s` hint).
+pub fn err_with(message: &str, mut fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("ok", Json::Bool(false)), ("error", Json::from(message))];
+    all.append(&mut fields);
+    Json::obj(all).to_string()
 }
 
 #[cfg(test)]
@@ -565,7 +647,7 @@ mod tests {
     fn decode_query_and_predict() {
         match decode(r#"{"cmd":"query","model":3,"nu":0.5,"eps":1e-6,"include_x":true}"#).unwrap()
         {
-            Request::Query { model, nu, nus, eps, include_x, b, bs } => {
+            Request::Query { model, nu, nus, eps, include_x, b, bs, deadline_s } => {
                 assert_eq!(model, 3);
                 assert_eq!(nu, 0.5);
                 assert!(nus.is_empty());
@@ -573,6 +655,7 @@ mod tests {
                 assert!(include_x);
                 assert!(b.is_none());
                 assert!(bs.is_none());
+                assert!(deadline_s.is_none());
             }
             _ => panic!("wrong variant"),
         }
@@ -650,7 +733,7 @@ mod tests {
         let line = r#"{"cmd":"append","model":7,"rows":2,"cols":2,
                        "triplets":[[0,0,1.0],[1,1,2.0]],"b":[0.5,0.25]}"#;
         match decode(&line.replace('\n', " ")).unwrap() {
-            Request::Append { model, a, b, eager } => {
+            Request::Append { model, a, b, eager, .. } => {
                 assert_eq!(model, 7);
                 assert!(a.is_sparse());
                 assert_eq!((a.rows(), a.cols(), a.nnz()), (2, 2, 2));
@@ -718,9 +801,65 @@ mod tests {
     }
 
     #[test]
+    fn decode_invalid_nu_eps_rejected_at_the_wire() {
+        // Non-positive / non-finite regularization or tolerance never
+        // reaches a solver — the decode answers a structured error.
+        for bad in ["0", "-1.0", "1e999", "\"x\""] {
+            let line = format!(r#"{{"cmd":"query","model":1,"nu":{bad}}}"#);
+            let e = decode(&line).unwrap_err();
+            assert!(e.starts_with("invalid nu"), "nu={bad}: {e}");
+            let line = format!(r#"{{"cmd":"solve","nu":{bad}}}"#);
+            assert!(decode(&line).unwrap_err().starts_with("invalid nu"));
+            let line = format!(r#"{{"cmd":"predict","model":1,"rows":[[1.0]],"nu":{bad}}}"#);
+            assert!(decode(&line).unwrap_err().starts_with("invalid nu"));
+        }
+        for bad in ["0", "-1e-9", "1e999"] {
+            let line = format!(r#"{{"cmd":"query","model":1,"eps":{bad}}}"#);
+            assert!(decode(&line).unwrap_err().starts_with("invalid eps"), "eps={bad}");
+        }
+        // Path entries get the same treatment.
+        assert!(decode(r#"{"cmd":"query","model":1,"nus":[1.0,-0.5]}"#)
+            .unwrap_err()
+            .starts_with("invalid nu"));
+        // null means absent and keeps the defaults.
+        match decode(r#"{"cmd":"query","model":1,"nu":null,"eps":null}"#).unwrap() {
+            Request::Query { nu, eps, .. } => {
+                assert_eq!(nu, 1.0);
+                assert_eq!(eps, 1e-8);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn decode_deadline_s() {
+        match decode(r#"{"cmd":"query","model":1,"deadline_s":2.5}"#).unwrap() {
+            Request::Query { deadline_s, .. } => assert_eq!(deadline_s, Some(2.5)),
+            _ => panic!("wrong variant"),
+        }
+        match decode(
+            r#"{"cmd":"append","model":1,"rows":1,"cols":1,"triplets":[[0,0,1.0]],"b":[1.0],"deadline_s":1}"#,
+        )
+        .unwrap()
+        {
+            Request::Append { deadline_s, .. } => assert_eq!(deadline_s, Some(1.0)),
+            _ => panic!("wrong variant"),
+        }
+        match decode(r#"{"cmd":"predict","model":1,"rows":[[1.0]],"deadline_s":null}"#).unwrap() {
+            Request::Predict { deadline_s, .. } => assert!(deadline_s.is_none()),
+            _ => panic!("wrong variant"),
+        }
+        for bad in ["0", "-3", "1e999", "\"soon\""] {
+            let line = format!(r#"{{"cmd":"query","model":1,"deadline_s":{bad}}}"#);
+            assert!(decode(&line).unwrap_err().starts_with("invalid deadline_s"), "{bad}");
+        }
+    }
+
+    #[test]
     fn decode_control_commands() {
         assert!(matches!(decode(r#"{"cmd":"ping"}"#).unwrap(), Request::Ping));
         assert!(matches!(decode(r#"{"cmd":"metrics"}"#).unwrap(), Request::Metrics));
+        assert!(matches!(decode(r#"{"cmd":"health"}"#).unwrap(), Request::Health));
         assert!(matches!(decode(r#"{"cmd":"shutdown"}"#).unwrap(), Request::Shutdown));
         assert!(matches!(
             decode(r#"{"cmd":"wait","job":3,"timeout_s":5}"#).unwrap(),

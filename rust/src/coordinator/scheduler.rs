@@ -314,14 +314,11 @@ fn worker_loop(inner: &Inner) {
 }
 
 /// Human-readable payload of a caught panic (shared by the worker loop
-/// and the server's synchronous registry path).
+/// and the server's synchronous registry path). Delegates to the
+/// solver-layer formatter so wire responses and job states agree on the
+/// `panic: ...` shape.
 pub(crate) fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
-    let msg = panic
-        .downcast_ref::<&str>()
-        .map(|s| s.to_string())
-        .or_else(|| panic.downcast_ref::<String>().cloned())
-        .unwrap_or_else(|| "worker panicked".into());
-    format!("panic: {msg}")
+    crate::solvers::error::panic_message(panic)
 }
 
 #[cfg(test)]

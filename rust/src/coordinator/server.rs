@@ -1,16 +1,42 @@
 //! TCP front end: `std::net` listener, one thread per connection,
 //! line-delimited JSON (see [`super::protocol`]).
+//!
+//! # Hardening
+//!
+//! The listener is built to keep answering structured errors under abuse
+//! and faults rather than hanging, leaking, or dying:
+//!
+//! * **Request-line cap** — a connection may never buffer more than
+//!   [`ServerConfig::max_line_bytes`] (default 16 MiB) of a single line;
+//!   an overlong request answers `{"ok":false,"error":"request too
+//!   large: ..."}` and the connection closes (resync mid-line is not
+//!   possible).
+//! * **Bounded connections** — at most [`ServerConfig::max_conns`]
+//!   concurrent connection threads; an accept beyond that is *shed* with
+//!   `{"ok":false,"error":"overloaded","retry_after_s":..}` instead of
+//!   queueing unboundedly.
+//! * **Wall deadlines** — registry requests honor a per-request
+//!   `"deadline_s"` (or the server-wide [`ServerConfig::request_timeout`]
+//!   default): a solve that runs past it rolls the session back and
+//!   answers a `"deadline exceeded: ..."` error.
+//! * **Graceful drain** — a `shutdown` command (or the stop handle) stops
+//!   accepting, lets in-flight requests finish writing their response,
+//!   and joins every connection thread before `run` returns.
+//! * **Fault injection** — `bind` arms [`crate::util::failpoint`] sites
+//!   from `EFFDIM_FAILPOINTS`, so the chaos suite can drive breakdowns
+//!   through a real server process deterministically.
 
 use super::job::JobState;
 use super::protocol::{self, Request};
 use super::registry::{Registry, DEFAULT_BYTE_BUDGET};
 use super::scheduler::Scheduler;
+use crate::util::failpoint;
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long the nonblocking accept loop sleeps between polls. Bounds both
 /// the shutdown latency (a `shutdown` command or stop-handle store is
@@ -18,20 +44,67 @@ use std::time::Duration;
 /// connections are never delayed by it beyond one interval.
 pub const ACCEPT_POLL_INTERVAL: Duration = Duration::from_millis(10);
 
+/// Default cap on one request (or response) line: 16 MiB, comfortably
+/// above the largest legitimate inline-triplet payload while bounding
+/// what a misbehaving client can make the server buffer.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 16 * 1024 * 1024;
+
+/// Default bound on concurrent connection threads.
+pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// Retry hint (seconds) in the overload-shed response.
+pub const RETRY_AFTER_S: f64 = 1.0;
+
+/// Tunables for a server instance. `Default` gives the production
+/// settings; tests shrink the limits to exercise the guard rails.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Scheduler worker threads for asynchronous `solve` jobs.
+    pub workers: usize,
+    /// Registry LRU byte budget across all registered models.
+    pub model_byte_budget: usize,
+    /// Per-connection cap on a single request line, in bytes.
+    pub max_line_bytes: usize,
+    /// Server-wide default wall deadline per registry request; a wire
+    /// `"deadline_s"` overrides it per request. `None` = unlimited.
+    pub request_timeout: Option<Duration>,
+    /// Maximum concurrent connections before accepts are shed.
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            model_byte_budget: DEFAULT_BYTE_BUDGET,
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            request_timeout: None,
+            max_conns: DEFAULT_MAX_CONNS,
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    scheduler: Scheduler,
+    registry: Registry,
+    stop: Arc<AtomicBool>,
+    active_conns: AtomicUsize,
+    config: ServerConfig,
+}
+
 /// The coordinator server. Owns the scheduler (async solve jobs) and the
 /// model registry (synchronous register/query/predict traffic).
 pub struct Server {
-    scheduler: Arc<Scheduler>,
-    registry: Arc<Registry>,
+    shared: Arc<Shared>,
     listener: TcpListener,
-    stop: Arc<AtomicBool>,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) with a
-    /// worker pool of the given size and the default registry byte budget.
+    /// worker pool of the given size and default limits.
     pub fn bind(addr: &str, workers: usize) -> std::io::Result<Self> {
-        Self::bind_with_budget(addr, workers, DEFAULT_BYTE_BUDGET)
+        Self::bind_with_config(addr, ServerConfig { workers, ..ServerConfig::default() })
     }
 
     /// [`Server::bind`] with an explicit model-registry byte budget (the
@@ -41,14 +114,30 @@ impl Server {
         workers: usize,
         model_byte_budget: usize,
     ) -> std::io::Result<Self> {
+        Self::bind_with_config(
+            addr,
+            ServerConfig { workers, model_byte_budget, ..ServerConfig::default() },
+        )
+    }
+
+    /// Bind with full control over the hardening knobs.
+    pub fn bind_with_config(addr: &str, config: ServerConfig) -> std::io::Result<Self> {
+        // Deterministic fault injection: a chaos harness arms sites for a
+        // whole server process through the environment.
+        failpoint::arm_from_env()
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         let listener = TcpListener::bind(addr)?;
         // Poll for shutdown between accepts.
         listener.set_nonblocking(true)?;
         Ok(Self {
-            scheduler: Arc::new(Scheduler::start(workers, 256)),
-            registry: Arc::new(Registry::new(model_byte_budget)),
+            shared: Arc::new(Shared {
+                scheduler: Scheduler::start(config.workers, 256),
+                registry: Registry::new(config.model_byte_budget),
+                stop: Arc::new(AtomicBool::new(false)),
+                active_conns: AtomicUsize::new(0),
+                config,
+            }),
             listener,
-            stop: Arc::new(AtomicBool::new(false)),
         })
     }
 
@@ -59,21 +148,26 @@ impl Server {
 
     /// Handle returned to request a stop from another thread.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
-        Arc::clone(&self.stop)
+        Arc::clone(&self.shared.stop)
     }
 
     /// Accept loop. Returns when `shutdown` is requested (via command or
-    /// the stop handle).
+    /// the stop handle), after draining in-flight connections.
     pub fn run(&self) {
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        while !self.stop.load(Ordering::SeqCst) {
+        while !self.shared.stop.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, _addr)) => {
-                    let scheduler = Arc::clone(&self.scheduler);
-                    let registry = Arc::clone(&self.registry);
-                    let stop = Arc::clone(&self.stop);
+                    conns.retain(|h| !h.is_finished());
+                    if conns.len() >= self.shared.config.max_conns {
+                        shed(stream);
+                        continue;
+                    }
+                    let shared = Arc::clone(&self.shared);
                     conns.push(std::thread::spawn(move || {
-                        handle_connection(stream, &scheduler, &registry, &stop);
+                        shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                        handle_connection(stream, &shared);
+                        shared.active_conns.fetch_sub(1, Ordering::SeqCst);
                     }));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -83,18 +177,29 @@ impl Server {
             }
             conns.retain(|h| !h.is_finished());
         }
+        // Graceful drain: every connection thread notices the stop flag
+        // within one read-timeout interval, finishes writing any in-flight
+        // response first, and returns.
         for h in conns {
             let _ = h.join();
         }
     }
 }
 
-fn handle_connection(
-    stream: TcpStream,
-    scheduler: &Scheduler,
-    registry: &Registry,
-    stop: &AtomicBool,
-) {
+/// Best-effort overload response on a connection we refuse to serve. The
+/// write gets a short timeout so a non-reading client cannot stall the
+/// accept loop.
+fn shed(mut stream: TcpStream) {
+    let line = protocol::err_with(
+        "overloaded",
+        vec![("retry_after_s", Json::from(RETRY_AFTER_S))],
+    );
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) {
     // Short read timeout so the thread re-checks the stop flag instead of
     // blocking forever on an idle client (run() joins these threads at
     // shutdown; an indefinite blocking read would deadlock the server).
@@ -104,31 +209,51 @@ fn handle_connection(
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let cap = shared.config.max_line_bytes;
+    let mut buf: Vec<u8> = Vec::new();
     loop {
-        if stop.load(Ordering::SeqCst) {
+        if shared.stop.load(Ordering::SeqCst) {
             return;
         }
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // client closed
-            Ok(_) => {}
-            Err(ref e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                // Timeout may leave a partial line buffered in `line`;
-                // keep it and retry.
-                continue;
+        if !buf.ends_with(b"\n") {
+            // Read up to the cap (+1 so overflow is detectable), keeping
+            // any partial line across timeouts. A slow client that
+            // trickles bytes makes progress; one that streams an unbounded
+            // line hits the cap instead of exhausting memory.
+            let room = (cap + 1 - buf.len()) as u64;
+            match (&mut reader).take(room).read_until(b'\n', &mut buf) {
+                Ok(0) => return, // client closed (possibly mid-line)
+                Ok(_) => {}
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Timeout leaves any partial line buffered; retry.
+                    continue;
+                }
+                Err(_) => return,
             }
-            Err(_) => return,
+            if !buf.ends_with(b"\n") {
+                if buf.len() > cap {
+                    let resp = protocol::err(&format!(
+                        "request too large: line exceeds {cap} bytes"
+                    ));
+                    let _ = writer.write_all(resp.as_bytes());
+                    let _ = writer.write_all(b"\n");
+                    let _ = writer.flush();
+                    return;
+                }
+                continue; // partial line: wait for the rest
+            }
         }
-        let request = std::mem::take(&mut line);
+        let request = String::from_utf8_lossy(&buf).into_owned();
+        buf.clear();
         if request.trim().is_empty() {
             continue;
         }
         let response = match protocol::decode(&request) {
             Err(e) => protocol::err(&e),
-            Ok(req) => respond(req, scheduler, registry, stop),
+            Ok(req) => respond(req, shared),
         };
         if writer.write_all(response.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -152,9 +277,32 @@ fn catch_panic<R>(f: impl FnOnce() -> Result<R, String>) -> Result<R, String> {
     }
 }
 
-fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &AtomicBool) -> String {
+/// Effective wall deadline for one registry request: the wire-level
+/// `"deadline_s"` wins; otherwise the server-wide `--request-timeout-s`
+/// default applies (if configured).
+fn wall_deadline(shared: &Shared, deadline_s: Option<f64>) -> Option<Instant> {
+    deadline_s
+        .map(Duration::from_secs_f64)
+        .or(shared.config.request_timeout)
+        .map(|d| Instant::now() + d)
+}
+
+fn respond(req: Request, shared: &Shared) -> String {
+    let scheduler = &shared.scheduler;
+    let registry = &shared.registry;
     match req {
         Request::Ping => protocol::ok(vec![("pong", Json::Bool(true))]),
+        Request::Health => {
+            let draining = shared.stop.load(Ordering::SeqCst);
+            protocol::ok(vec![
+                ("status", Json::from(if draining { "draining" } else { "ok" })),
+                ("backlog", Json::from(scheduler.backlog())),
+                ("models", Json::from(registry.len())),
+                ("model_bytes", Json::from(registry.total_bytes())),
+                ("connections", Json::from(shared.active_conns.load(Ordering::SeqCst))),
+                ("workers", Json::from(shared.config.workers)),
+            ])
+        }
         Request::Metrics => protocol::ok(vec![
             ("metrics", scheduler.metrics().to_json()),
             ("backlog", Json::from(scheduler.backlog())),
@@ -189,11 +337,12 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                 Err(e) => protocol::err(&e),
             }
         }
-        Request::Query { model, nu, nus, eps, include_x, b, bs } => {
+        Request::Query { model, nu, nus, eps, include_x, b, bs, deadline_s } => {
             let Some(entry) = registry.touch(model) else {
                 return protocol::err(&Registry::unknown(model));
             };
             let mut session = entry.session.lock().unwrap();
+            session.set_deadline(wall_deadline(shared, deadline_s));
             let outcome = if let Some(bs) = bs {
                 // Block multi-RHS: all columns through one BLAS-3
                 // iteration against the session's cached sketch; one
@@ -221,6 +370,7 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                     vec![("result", solution_json(nu, &sol, include_x))]
                 })
             };
+            session.set_deadline(None);
             // Byte accounting must see partial growth too: a path query
             // that errors halfway (e.g. an unsorted nu) may already have
             // grown the cached sketch on its solved points.
@@ -234,12 +384,14 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                 Err(e) => protocol::err(&e),
             }
         }
-        Request::Predict { model, nu, rows, eps } => {
+        Request::Predict { model, nu, rows, eps, deadline_s } => {
             let Some(entry) = registry.touch(model) else {
                 return protocol::err(&Registry::unknown(model));
             };
             let mut session = entry.session.lock().unwrap();
+            session.set_deadline(wall_deadline(shared, deadline_s));
             let outcome = catch_panic(|| session.predict(nu, &rows, eps));
+            session.set_deadline(None);
             registry.note_query(&entry, &session);
             match outcome {
                 Ok(y) => protocol::ok(vec![
@@ -250,7 +402,7 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                 Err(e) => protocol::err(&e),
             }
         }
-        Request::Append { model, a, b, eager } => {
+        Request::Append { model, a, b, eager, deadline_s } => {
             let Some(entry) = registry.touch(model) else {
                 return protocol::err(&Registry::unknown(model));
             };
@@ -260,10 +412,12 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
                 crate::solvers::session::AppendRefresh::Lazy
             };
             let mut session = entry.session.lock().unwrap();
+            session.set_deadline(wall_deadline(shared, deadline_s));
             let outcome = catch_panic(|| session.append(a, b, refresh));
-            // Recharge the byte accounting even on error: validation
-            // rejects before mutating, but a panic unwound mid-refresh may
-            // still have grown the operand.
+            session.set_deadline(None);
+            // Recharge the byte accounting even on error: the session
+            // rolls itself back, but the registry's cached size must track
+            // whatever state survived.
             registry.note_append(&entry, &session);
             match outcome {
                 Ok(out) => protocol::ok(vec![
@@ -298,7 +452,7 @@ fn respond(req: Request, scheduler: &Scheduler, registry: &Registry, stop: &Atom
             protocol::ok(vec![("solvers", Json::Arr(entries))])
         }
         Request::Shutdown => {
-            stop.store(true, Ordering::SeqCst);
+            shared.stop.store(true, Ordering::SeqCst);
             protocol::ok(vec![("stopping", Json::Bool(true))])
         }
         // Job ids are u64: encode them as such — `id as usize` would
@@ -354,6 +508,7 @@ fn state_response(state: JobState, include_x: bool) -> String {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    max_line_bytes: usize,
 }
 
 impl Client {
@@ -361,7 +516,18 @@ impl Client {
     pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
-        Ok(Self { reader: BufReader::new(stream), writer })
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+        })
+    }
+
+    /// Cap on a single response line (default
+    /// [`DEFAULT_MAX_LINE_BYTES`]); a longer response errors instead of
+    /// buffering without bound.
+    pub fn set_line_cap(&mut self, bytes: usize) {
+        self.max_line_bytes = bytes;
     }
 
     /// Send one request line, read one response line, parse it.
@@ -371,8 +537,19 @@ impl Client {
             .and_then(|_| self.writer.write_all(b"\n"))
             .and_then(|_| self.writer.flush())
             .map_err(|e| e.to_string())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let mut buf: Vec<u8> = Vec::new();
+        let cap = self.max_line_bytes;
+        let n = (&mut self.reader)
+            .take(cap as u64 + 1)
+            .read_until(b'\n', &mut buf)
+            .map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("connection closed by server".into());
+        }
+        if !buf.ends_with(b"\n") && buf.len() > cap {
+            return Err(format!("response too large: line exceeds {cap} bytes"));
+        }
+        let line = String::from_utf8_lossy(&buf);
         crate::util::json::parse(line.trim()).map_err(|e| e.to_string())
     }
 }
@@ -382,7 +559,13 @@ mod tests {
     use super::*;
 
     fn start_server() -> (std::net::SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
-        let server = Server::bind("127.0.0.1:0", 2).unwrap();
+        start_with_config(ServerConfig::default())
+    }
+
+    fn start_with_config(
+        config: ServerConfig,
+    ) -> (std::net::SocketAddr, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let server = Server::bind_with_config("127.0.0.1:0", config).unwrap();
         let addr = server.local_addr();
         let stop = server.stop_handle();
         let handle = std::thread::spawn(move || server.run());
@@ -402,6 +585,107 @@ mod tests {
     }
 
     #[test]
+    fn health_reports_load() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let h = client.call(r#"{"cmd":"health"}"#).unwrap();
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true), "{h:?}");
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(h.get("models").unwrap().as_usize(), Some(0));
+        assert!(h.get("connections").unwrap().as_usize().unwrap() >= 1);
+        assert!(h.get("backlog").is_some());
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn oversize_request_answers_structured_error() {
+        let (addr, stop, handle) =
+            start_with_config(ServerConfig { max_line_bytes: 1024, ..ServerConfig::default() });
+        let mut client = Client::connect(addr).unwrap();
+        let big = format!(r#"{{"cmd":"ping","pad":"{}"}}"#, "x".repeat(4096));
+        let resp = client.call(&big).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("request too large"));
+        // The oversize connection is closed, but the server keeps serving
+        // fresh connections normally.
+        let mut c2 = Client::connect(addr).unwrap();
+        let pong = c2.call(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn overload_sheds_with_retry_hint() {
+        let (addr, stop, handle) =
+            start_with_config(ServerConfig { max_conns: 1, ..ServerConfig::default() });
+        let mut c1 = Client::connect(addr).unwrap();
+        assert_eq!(c1.call(r#"{"cmd":"ping"}"#).unwrap().get("ok").unwrap().as_bool(), Some(true));
+        // Second concurrent connection: shed with a structured hint.
+        let mut c2 = Client::connect(addr).unwrap();
+        let resp = c2.call(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+        assert_eq!(resp.get("error").unwrap().as_str(), Some("overloaded"));
+        assert!(resp.get("retry_after_s").unwrap().as_f64().unwrap() > 0.0);
+        // Once the first client departs, the slot frees up again.
+        drop(c1);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let mut c3 = Client::connect(addr).unwrap();
+            match c3.call(r#"{"cmd":"ping"}"#) {
+                Ok(v) if v.get("ok").and_then(Json::as_bool) == Some(true) => break,
+                _ => {}
+            }
+            assert!(Instant::now() < deadline, "shed slot never freed");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_answers_clean_error_and_model_survives() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let reg = client
+            .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":6,"name":"dl"}"#)
+            .unwrap();
+        assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+        let model = reg.get("model").unwrap().as_usize().unwrap();
+        let late = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5,"deadline_s":1e-9}}"#))
+            .unwrap();
+        assert_eq!(late.get("ok").unwrap().as_bool(), Some(false), "{late:?}");
+        assert!(late.get("error").unwrap().as_str().unwrap().contains("deadline"));
+        // The rollback leaves the model fully usable.
+        let q = client.call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5}}"#)).unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true), "{q:?}");
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn invalid_nu_eps_answer_structured_errors_over_tcp() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        for (line, prefix) in [
+            (r#"{"cmd":"query","model":1,"nu":-1.0}"#, "invalid nu"),
+            (r#"{"cmd":"query","model":1,"nu":0}"#, "invalid nu"),
+            (r#"{"cmd":"query","model":1,"eps":0}"#, "invalid eps"),
+            (r#"{"cmd":"solve","nu":1e999}"#, "invalid nu"),
+            (r#"{"cmd":"query","model":1,"deadline_s":-1}"#, "invalid deadline_s"),
+        ] {
+            let resp = client.call(line).unwrap();
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{line}");
+            let err = resp.get("error").unwrap().as_str().unwrap();
+            assert!(err.starts_with(prefix), "{line}: {err}");
+        }
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
     fn solve_roundtrip_over_tcp() {
         let (addr, stop, handle) = start_server();
         let mut client = Client::connect(addr).unwrap();
@@ -416,6 +700,7 @@ mod tests {
         assert_eq!(done.get("state").unwrap().as_str(), Some("done"));
         let result = done.get("result").unwrap();
         assert_eq!(result.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(result.get("recovery").unwrap().as_str(), Some("none"));
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();
     }

@@ -441,6 +441,18 @@ impl Matrix {
         self.rows += other.rows;
     }
 
+    /// Drop every row past `rows` — the exact inverse of
+    /// [`Matrix::append_rows`], used by transactional rollback: retained
+    /// rows keep their storage bitwise (appends only ever extend the
+    /// tail), so truncating back to the pre-append count restores the
+    /// pre-append matrix exactly. `O(1)` bookkeeping plus the `Vec`
+    /// truncation.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        assert!(rows <= self.rows, "truncate_rows cannot grow the matrix");
+        self.data.truncate(rows * self.cols);
+        self.rows = rows;
+    }
+
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
         dot(&self.data, &self.data).sqrt()

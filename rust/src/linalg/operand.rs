@@ -142,6 +142,17 @@ impl Operand {
         }
     }
 
+    /// Drop every row past `rows` — the exact inverse of
+    /// [`Operand::append_rows`], used by the sessions' transactional
+    /// rollback: a failed append truncates back to the pre-append row
+    /// count and the retained rows are bitwise what they were.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        match self {
+            Operand::Dense(m) => m.truncate_rows(rows),
+            Operand::Sparse(c) => c.truncate_rows(rows),
+        }
+    }
+
     /// `A^T` — `O(rows * cols)` dense, `O(nnz)` CSR counting sort.
     pub fn transpose(&self) -> Operand {
         match self {

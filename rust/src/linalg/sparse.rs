@@ -141,6 +141,19 @@ impl CsrMatrix {
         self.rows += other.rows;
     }
 
+    /// Drop every row past `rows` — the exact inverse of
+    /// [`CsrMatrix::append_rows`] for transactional rollback. Appends are
+    /// pure tail concatenation, so truncating the three CSR arrays back
+    /// to the old row count restores the pre-append matrix bitwise.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        assert!(rows <= self.rows, "truncate_rows cannot grow the matrix");
+        let nnz = self.indptr[rows];
+        self.indices.truncate(nnz);
+        self.values.truncate(nnz);
+        self.indptr.truncate(rows + 1);
+        self.rows = rows;
+    }
+
     /// `A^T` in `O(nnz)` via a counting sort over columns. Row-sorted
     /// column order is preserved (ascending original row indices).
     pub fn transpose(&self) -> CsrMatrix {

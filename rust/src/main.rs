@@ -82,6 +82,11 @@ const USAGE: &str = "usage: effdim <solve|path|serve|request|client|info|solvers
     (sparse profiles are CSR-backed; pair with --density)
   --density x sets the sparse profile's fill fraction (requires --profile sparse)
   --data file loads a CSR problem from triplet text (n d nnz / i j v / b lines)
+  serve hardening: --max-request-mb n caps one request line (default 16),
+    --request-timeout-s x sets a default wall deadline per registry request
+    (wire \"deadline_s\" overrides per request), --max-conns n bounds
+    concurrent connections (excess accepts answer
+    {\"ok\":false,\"error\":\"overloaded\",\"retry_after_s\":..})
   --threads k pins the parallel dense kernels for the whole command
     (default: PALLAS_THREADS env var, else all hardware threads)
   run `effdim solvers` for the registry; see rust/src/main.rs docs for flags";
@@ -333,7 +338,37 @@ fn cmd_serve(args: &Args) -> i32 {
         "model-budget-mb",
         effdim::coordinator::registry::DEFAULT_BYTE_BUDGET >> 20,
     );
-    match Server::bind_with_budget(addr, workers, budget_mb.saturating_mul(1 << 20)) {
+    // Hardening knobs: request-line cap, default per-request wall
+    // deadline, concurrent-connection bound.
+    let max_request_mb =
+        args.get_usize("max-request-mb", effdim::coordinator::server::DEFAULT_MAX_LINE_BYTES >> 20);
+    if max_request_mb == 0 {
+        eprintln!("--max-request-mb must be >= 1");
+        return 2;
+    }
+    let request_timeout = if args.has("request-timeout-s") {
+        let s = args.get_f64("request-timeout-s", 0.0);
+        if !(s.is_finite() && s > 0.0) {
+            eprintln!("--request-timeout-s must be positive and finite");
+            return 2;
+        }
+        Some(std::time::Duration::from_secs_f64(s))
+    } else {
+        None
+    };
+    let max_conns = args.get_usize("max-conns", effdim::coordinator::server::DEFAULT_MAX_CONNS);
+    if max_conns == 0 {
+        eprintln!("--max-conns must be >= 1");
+        return 2;
+    }
+    let config = effdim::coordinator::server::ServerConfig {
+        workers,
+        model_byte_budget: budget_mb.saturating_mul(1 << 20),
+        max_line_bytes: max_request_mb.saturating_mul(1 << 20),
+        request_timeout,
+        max_conns,
+    };
+    match Server::bind_with_config(addr, config) {
         Ok(server) => {
             println!("effdim coordinator listening on {}", server.local_addr());
             server.run();

@@ -85,9 +85,12 @@ use super::srht::{fwht_rows, hadamard_entry, next_pow2, signed_work};
 use super::SketchKind;
 use crate::linalg::{Matrix, OperandRef};
 use crate::rng::Xoshiro256;
+use crate::solvers::error::SolverError;
+use crate::util::failpoint;
 
 /// Per-problem incremental sketch state plus the unnormalized applied
 /// sketch `S̃A`.
+#[derive(Clone)]
 pub struct SketchEngine {
     kind: SketchKind,
     n: usize,
@@ -96,6 +99,7 @@ pub struct SketchEngine {
     state: State,
 }
 
+#[derive(Clone)]
 enum State {
     Gaussian {
         /// One entry per *growth* block (a run of sketch rows), stacked
@@ -124,6 +128,7 @@ enum State {
 /// present at the block's creation, plus one per later data append. `S̃`
 /// itself is never retained (it would double the solver's memory at
 /// `m x n`); [`SketchEngine::to_dense`] replays the snapshots instead.
+#[derive(Clone)]
 struct GaussianBlock {
     rows: usize,
     /// `(RNG snapshot before the draw, column count)` per segment; the
@@ -133,6 +138,7 @@ struct GaussianBlock {
 
 /// One SRHT block covering ambient rows
 /// `row_offset..row_offset + n_rows`.
+#[derive(Clone)]
 struct SrhtBlock {
     /// First ambient coordinate this block covers.
     row_offset: usize,
@@ -151,6 +157,7 @@ struct SrhtBlock {
 /// One CountSketch block: one (row, sign) pair per ambient coordinate,
 /// with the size weight `sqrt(rows)` baked into its unnormalized output
 /// (fixed at creation — growth never revisits it).
+#[derive(Clone)]
 struct SparseBlock {
     rows: usize,
     hash: Vec<u32>,
@@ -267,16 +274,36 @@ impl SketchEngine {
     /// `S̃A` (what [`crate::solvers::woodbury::WoodburyCache::grow`]
     /// consumes); the existing prefix of [`Self::sa_unnormalized`] is
     /// untouched.
+    ///
+    /// Errors ([`SolverError::InvalidInput`] on shape/size misuse,
+    /// [`SolverError::Capacity`] past an SRHT padded-block cap) are
+    /// returned *before* any state is mutated, so a failed grow leaves
+    /// the engine exactly as it was.
     pub fn grow<'a>(
         &mut self,
         new_m: usize,
         a: impl Into<OperandRef<'a>>,
         rng: &mut Xoshiro256,
-    ) -> Matrix {
+    ) -> Result<Matrix, SolverError> {
         let a: OperandRef<'a> = a.into();
         let m_old = self.m();
-        assert!(new_m > m_old, "grow needs new_m {new_m} > m {m_old}");
-        assert_eq!(a.rows(), self.n, "grow must reuse the engine's problem matrix");
+        if new_m <= m_old {
+            return Err(SolverError::invalid(format!("grow needs new_m {new_m} > m {m_old}")));
+        }
+        if a.rows() != self.n {
+            return Err(SolverError::invalid(format!(
+                "grow must reuse the engine's problem matrix (got {} rows, engine has {})",
+                a.rows(),
+                self.n
+            )));
+        }
+        if new_m > self.max_m() {
+            return Err(SolverError::Capacity(format!(
+                "SRHT sketch size {new_m} exceeds padded block dim {}",
+                self.max_m()
+            )));
+        }
+        failpoint::check("sketch.grow").map_err(SolverError::Internal)?;
         let dm = new_m - m_old;
         let new_rows = match &mut self.state {
             State::Gaussian { blocks } => {
@@ -293,11 +320,6 @@ impl SketchEngine {
                 let start = *taken;
                 let mut new_rows: Option<Matrix> = None;
                 for block in blocks.iter_mut() {
-                    assert!(
-                        new_m <= block.order.len(),
-                        "SRHT sketch size {new_m} exceeds padded block dim {}",
-                        block.order.len()
-                    );
                     let mut t = start;
                     let rows = take_without_replacement(&mut block.order, &mut t, dm, rng);
                     match &mut new_rows {
@@ -316,7 +338,7 @@ impl SketchEngine {
             }
         };
         self.sa.append_rows(&new_rows);
-        new_rows
+        Ok(new_rows)
     }
 
     /// Stream `Δn` new data rows into the sketch without re-sketching any
@@ -326,11 +348,27 @@ impl SketchEngine {
     /// stored rows stay append-only under later [`Self::grow`] calls. The
     /// caller owns refreshing the downstream factorization from
     /// [`Self::sa_unnormalized`].
-    pub fn append_rows<'a>(&mut self, delta: impl Into<OperandRef<'a>>, rng: &mut Xoshiro256) {
+    ///
+    /// Errors are returned *before* any state is mutated, so a failed
+    /// append leaves the engine exactly as it was.
+    pub fn append_rows<'a>(
+        &mut self,
+        delta: impl Into<OperandRef<'a>>,
+        rng: &mut Xoshiro256,
+    ) -> Result<(), SolverError> {
         let delta: OperandRef<'a> = delta.into();
         let dn = delta.rows();
-        assert!(dn > 0, "append_rows needs at least one new row");
-        assert_eq!(delta.cols(), self.sa.cols(), "append_rows column mismatch");
+        if dn == 0 {
+            return Err(SolverError::invalid("append_rows needs at least one new row"));
+        }
+        if delta.cols() != self.sa.cols() {
+            return Err(SolverError::invalid(format!(
+                "append_rows column mismatch: delta has {} columns, engine has {}",
+                delta.cols(),
+                self.sa.cols()
+            )));
+        }
+        failpoint::check("sketch.append").map_err(SolverError::Internal)?;
         let d = self.sa.cols();
         match &mut self.state {
             State::Gaussian { blocks } => {
@@ -412,6 +450,7 @@ impl SketchEngine {
             }
         }
         self.n += dn;
+        Ok(())
     }
 
     /// Largest sketch size this engine can grow to. Unbounded for
@@ -618,7 +657,7 @@ mod tests {
             let mut rng = Xoshiro256::seed_from_u64(3);
             let mut engine = SketchEngine::new(kind, 4, &a, &mut rng);
             let before = engine.sa_unnormalized().clone();
-            engine.grow(11, &a, &mut rng);
+            engine.grow(11, &a, &mut rng).unwrap();
             assert_eq!(engine.m(), 11);
             for i in 0..4 {
                 assert_eq!(
@@ -637,8 +676,8 @@ mod tests {
         for kind in KINDS {
             let mut rng = Xoshiro256::seed_from_u64(5);
             let mut engine = SketchEngine::new(kind, 2, &a, &mut rng);
-            engine.grow(5, &a, &mut rng);
-            engine.grow(13, &a, &mut rng);
+            engine.grow(5, &a, &mut rng).unwrap();
+            engine.grow(13, &a, &mut rng).unwrap();
             let mut sa = engine.sa_unnormalized().clone();
             crate::linalg::scale(engine.scale(), sa.as_mut_slice());
             let composed = engine.to_dense().matmul(&a);
@@ -664,8 +703,8 @@ mod tests {
                 ed.sa_unnormalized().max_abs_diff(es.sa_unnormalized()) < 1e-10,
                 "{kind} initial dense/CSR drift"
             );
-            ed.grow(9, &dense, &mut ra);
-            es.grow(9, &csr, &mut rb);
+            ed.grow(9, &dense, &mut ra).unwrap();
+            es.grow(9, &csr, &mut rb).unwrap();
             assert!(
                 ed.sa_unnormalized().max_abs_diff(es.sa_unnormalized()) < 1e-10,
                 "{kind} grown dense/CSR drift"
@@ -679,7 +718,7 @@ mod tests {
         for kind in KINDS {
             let mut rng = Xoshiro256::seed_from_u64(7);
             let mut engine = SketchEngine::new(kind, 3, &a, &mut rng);
-            let new_rows = engine.grow(8, &a, &mut rng);
+            let new_rows = engine.grow(8, &a, &mut rng).unwrap();
             assert_eq!((new_rows.rows(), new_rows.cols()), (5, 4), "{kind}");
             for i in 0..5 {
                 assert_eq!(new_rows.row(i), engine.sa_unnormalized().row(3 + i), "{kind}");
@@ -692,8 +731,8 @@ mod tests {
         let a = test_a(24, 3, 8); // pads to 32
         let mut rng = Xoshiro256::seed_from_u64(9);
         let mut engine = SketchEngine::new(SketchKind::Srht, 8, &a, &mut rng);
-        engine.grow(20, &a, &mut rng);
-        engine.grow(32, &a, &mut rng); // full padded dimension
+        engine.grow(20, &a, &mut rng).unwrap();
+        engine.grow(32, &a, &mut rng).unwrap(); // full padded dimension
         match &engine.state {
             State::Srht { blocks, taken } => {
                 let mut sel = blocks[0].order[..*taken].to_vec();
@@ -717,8 +756,8 @@ mod tests {
         for kind in KINDS {
             let mut rng = Xoshiro256::seed_from_u64(42);
             let mut engine = SketchEngine::new(kind, 3, &a, &mut rng);
-            engine.grow(6, &a, &mut rng);
-            engine.append_rows(&delta, &mut rng);
+            engine.grow(6, &a, &mut rng).unwrap();
+            engine.append_rows(&delta, &mut rng).unwrap();
             assert_eq!((engine.m(), engine.n()), (6, 27), "{kind}");
             let mut sa = engine.sa_unnormalized().clone();
             crate::linalg::scale(engine.scale(), sa.as_mut_slice());
@@ -738,9 +777,9 @@ mod tests {
         for kind in KINDS {
             let mut rng = Xoshiro256::seed_from_u64(45);
             let mut engine = SketchEngine::new(kind, 4, &a, &mut rng);
-            engine.append_rows(&delta, &mut rng);
+            engine.append_rows(&delta, &mut rng).unwrap();
             let before = engine.sa_unnormalized().clone();
-            let new_rows = engine.grow(10, &full, &mut rng);
+            let new_rows = engine.grow(10, &full, &mut rng).unwrap();
             assert_eq!(engine.m(), 10, "{kind}");
             assert_eq!(new_rows.rows(), 6, "{kind}");
             for i in 0..4 {
@@ -771,8 +810,8 @@ mod tests {
             let mut rb = Xoshiro256::seed_from_u64(48);
             let mut ed = SketchEngine::new(kind, 5, &a, &mut ra);
             let mut es = SketchEngine::new(kind, 5, &a, &mut rb);
-            ed.append_rows(&ddense, &mut ra);
-            es.append_rows(&dcsr, &mut rb);
+            ed.append_rows(&ddense, &mut ra).unwrap();
+            es.append_rows(&dcsr, &mut rb).unwrap();
             assert!(
                 ed.sa_unnormalized().max_abs_diff(es.sa_unnormalized()) < 1e-10,
                 "{kind} dense/CSR append drift"
@@ -787,20 +826,28 @@ mod tests {
         let mut engine = SketchEngine::new(SketchKind::Srht, 6, &a, &mut rng);
         assert_eq!(engine.max_m(), 32);
         let delta = test_a(3, 4, 51);
-        engine.append_rows(&delta, &mut rng);
+        engine.append_rows(&delta, &mut rng).unwrap();
         // New block pads to max(next_pow2(3), next_pow2(2*6)) = 16.
         assert_eq!(engine.max_m(), 16);
-        // Growth up to the cap works; beyond it must panic (solvers stop
-        // at max_m and fall back to the exact Hessian).
+        // Growth up to the cap works; beyond it is a structured Capacity
+        // error that leaves the engine untouched (solvers stop at max_m
+        // and fall back to the exact Hessian).
         let mut full = a.clone();
         full.append_rows(&delta);
-        engine.grow(16, &full, &mut rng);
+        engine.grow(16, &full, &mut rng).unwrap();
         assert_eq!(engine.m(), 16);
+        let before = engine.sa_unnormalized().clone();
+        match engine.grow(17, &full, &mut rng) {
+            Err(SolverError::Capacity(_)) => {}
+            other => panic!("expected Capacity error, got {other:?}"),
+        }
+        assert_eq!(engine.m(), 16);
+        assert_eq!(engine.sa_unnormalized(), &before);
         // Gaussian/sparse appends leave growth unbounded.
         let mut rng2 = Xoshiro256::seed_from_u64(52);
         for kind in [SketchKind::Gaussian, SketchKind::Sparse] {
             let mut e = SketchEngine::new(kind, 2, &a, &mut rng2);
-            e.append_rows(&delta, &mut rng2);
+            e.append_rows(&delta, &mut rng2).unwrap();
             assert_eq!(e.max_m(), usize::MAX, "{kind}");
         }
     }
@@ -814,7 +861,7 @@ mod tests {
             let mut engine = SketchEngine::new(kind, 5, &a, &mut rng);
             let scale = engine.scale();
             let bytes = engine.approx_bytes();
-            engine.append_rows(&delta, &mut rng);
+            engine.append_rows(&delta, &mut rng).unwrap();
             assert_eq!(engine.m(), 5, "{kind}");
             assert_eq!(engine.n(), 18, "{kind}");
             assert_eq!(engine.scale(), scale, "{kind}");
@@ -828,8 +875,8 @@ mod tests {
         let a = test_a(18, 4, 10);
         let mut rng = Xoshiro256::seed_from_u64(11);
         let mut engine = SketchEngine::new(SketchKind::Sparse, 3, &a, &mut rng);
-        engine.grow(6, &a, &mut rng);
-        engine.grow(10, &a, &mut rng);
+        engine.grow(6, &a, &mut rng).unwrap();
+        engine.grow(10, &a, &mut rng).unwrap();
         assert!((engine.scale() - 1.0 / 10f64.sqrt()).abs() < 1e-15);
         // Each column of the dense embedding has one entry per block,
         // with magnitude sqrt(m_i / m) — the size weighting that keeps
@@ -860,7 +907,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(13);
         let mut engine = SketchEngine::new(SketchKind::Gaussian, 2, &a, &mut rng);
         assert!((engine.scale() - 1.0 / 2f64.sqrt()).abs() < 1e-15);
-        engine.grow(9, &a, &mut rng);
+        engine.grow(9, &a, &mut rng).unwrap();
         assert!((engine.scale() - 1.0 / 3.0).abs() < 1e-15);
     }
 
@@ -871,7 +918,7 @@ mod tests {
             let run = || {
                 let mut rng = Xoshiro256::seed_from_u64(15);
                 let mut e = SketchEngine::new(kind, 3, &a, &mut rng);
-                e.grow(7, &a, &mut rng);
+                e.grow(7, &a, &mut rng).unwrap();
                 e.sa_unnormalized().clone()
             };
             let (s1, s2) = (run(), run());

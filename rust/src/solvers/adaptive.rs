@@ -28,7 +28,20 @@
 //! Polyak candidate — same guarantees, and faster in practice when the
 //! Polyak step is frequently rejected (one gradient evaluation per
 //! iteration instead of two).
+//!
+//! # Fault recovery
+//!
+//! Every fallible numerical step (growth factorizations, `nu` re-keys)
+//! runs under the recovery ladder of [`super::error`]: diagonal jitter is
+//! already inside [`WoodburyCache`]'s factorizations; when a grow or
+//! re-key still fails the solver re-applies a **fresh sketch** of the
+//! same size (a new draw continuing the solver's RNG stream), and when
+//! that also fails it falls back to the **exact Hessian** — the same
+//! at-cap path the algorithm already owns. The highest rung used is
+//! recorded in [`SolveReport::recovery`]; only a failure of the exact
+//! fallback itself surfaces as [`SolverError::NumericalBreakdown`].
 
+use super::error::{RecoveryRung, SolverError};
 use super::woodbury::WoodburyCache;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{dot, norm2};
@@ -37,6 +50,7 @@ use crate::sketch::engine::SketchEngine;
 use crate::sketch::SketchKind;
 use crate::theory::rates::IhsParams;
 use crate::theory::{gaussian_bounds, srht_bounds};
+use crate::util::failpoint;
 use std::time::Instant;
 
 /// Reusable sketch/factorization state extracted from a finished
@@ -55,6 +69,11 @@ use std::time::Instant;
 /// registry; the observation that one sketch-based preconditioner stays
 /// valid across regularization levels is Lacotte & Pilanci's
 /// adaptive-preconditioning follow-up (arXiv:2104.14101).
+///
+/// `Clone` is what makes [`crate::solvers::session::ModelSession`]'s
+/// transactional rollback possible: a mutating call snapshots the state
+/// and restores it on any error or caught panic.
+#[derive(Clone)]
 pub struct AdaptiveSessionState {
     /// Incremental sketch state; `None` once growth hit the cap (the
     /// cache then holds the exact Hessian — see
@@ -136,6 +155,11 @@ pub struct AdaptiveConfig {
     pub growth: usize,
     /// Accepted-iteration cap (safety net; the stop rule fires first).
     pub max_iters: usize,
+    /// Cooperative wall deadline: checked once per outer iteration and
+    /// once per growth round; when it passes, the solve stops with
+    /// [`SolverError::DeadlineExceeded`] (the partial iterate is
+    /// discarded by transactional callers). `None` disables the check.
+    pub deadline: Option<Instant>,
 }
 
 impl AdaptiveConfig {
@@ -156,6 +180,7 @@ impl AdaptiveConfig {
             eta: 0.01,
             growth: 2,
             max_iters: 10_000,
+            deadline: None,
         }
     }
 
@@ -231,7 +256,7 @@ impl<'p> AdaptiveSolver<'p> {
         config: AdaptiveConfig,
         stop: StopRule,
         seed: u64,
-    ) -> Self {
+    ) -> Result<Self, SolverError> {
         Self::build(problem, x0, config, stop, None, Xoshiro256::seed_from_u64(seed))
     }
 
@@ -248,7 +273,7 @@ impl<'p> AdaptiveSolver<'p> {
         config: AdaptiveConfig,
         stop: StopRule,
         state: AdaptiveSessionState,
-    ) -> Self {
+    ) -> Result<Self, SolverError> {
         let AdaptiveSessionState { engine, cache, rng } = state;
         if let Some(e) = &engine {
             assert_eq!(e.kind(), config.kind, "resume: sketch family changed");
@@ -266,11 +291,18 @@ impl<'p> AdaptiveSolver<'p> {
         stop: StopRule,
         resume: Option<(Option<SketchEngine>, WoodburyCache)>,
         mut rng: Xoshiro256,
-    ) -> Self {
+    ) -> Result<Self, SolverError> {
         let created = Instant::now();
         let d = problem.d();
-        assert_eq!(x0.len(), d);
-        assert!(config.m_initial >= 1 && config.growth >= 2);
+        if x0.len() != d {
+            return Err(SolverError::invalid(format!(
+                "x0 has {} entries, problem has d = {d}",
+                x0.len()
+            )));
+        }
+        if config.m_initial < 1 || config.growth < 2 {
+            return Err(SolverError::invalid("adaptive config needs m_initial >= 1, growth >= 2"));
+        }
         let params = config.params();
         // Sketch-size cap: the padded row count, further limited by a
         // resumed engine's own sampling capacity (streamed SRHT appends
@@ -292,26 +324,48 @@ impl<'p> AdaptiveSolver<'p> {
         let (m, engine, cache) = match resume {
             Some((engine, mut cache)) => {
                 // Session resume: zero sketch work. Only the factorization
-                // is re-keyed when nu changed (a no-op otherwise).
+                // is re-keyed when nu changed (a no-op otherwise). A
+                // failed re-key climbs the ladder: fresh sketch at the
+                // same m, then the exact Hessian.
                 let m = engine.as_ref().map_or(m_cap, SketchEngine::m);
                 let t0 = Instant::now();
-                cache.set_nu(problem.nu);
+                let rekeyed = cache.set_nu(problem.nu);
                 report.factor_time_s += t0.elapsed().as_secs_f64();
-                (m, engine, cache)
+                match rekeyed {
+                    Ok(()) => {
+                        report.recovery.escalate(cache.recovery());
+                        (m, engine, cache)
+                    }
+                    Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                    Err(_) => match fresh_parts(problem, &config, m, &mut rng, &mut report) {
+                        Ok((engine, cache)) => {
+                            report.recovery.escalate(RecoveryRung::Resketch);
+                            (m, engine, cache)
+                        }
+                        Err(_) => {
+                            let (engine, cache) = exact_parts(problem, &mut report)?;
+                            report.recovery.escalate(RecoveryRung::Exact);
+                            (m_cap, engine, cache)
+                        }
+                    },
+                }
             }
             None => {
                 let m = config.m_initial.min(m_cap);
-                let t0 = Instant::now();
-                let engine = SketchEngine::new(config.kind, m, &*problem.a, &mut rng);
-                report.sketch_time_s += t0.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                let cache = WoodburyCache::new_scaled(
-                    engine.sa_unnormalized().clone(),
-                    problem.nu,
-                    engine.scale(),
-                );
-                report.factor_time_s += t0.elapsed().as_secs_f64();
-                (m, Some(engine), cache)
+                match fresh_parts(problem, &config, m, &mut rng, &mut report) {
+                    Ok((engine, cache)) => {
+                        report.recovery.escalate(cache.recovery());
+                        (m, engine, cache)
+                    }
+                    Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                    Err(_) => {
+                        // Initial sketch would not factor even with
+                        // jitter: skip straight to the exact Hessian.
+                        let (engine, cache) = exact_parts(problem, &mut report)?;
+                        report.recovery.escalate(RecoveryRung::Exact);
+                        (m_cap, engine, cache)
+                    }
+                }
             }
         };
 
@@ -335,7 +389,7 @@ impl<'p> AdaptiveSolver<'p> {
         report.final_m = m;
         report.peak_m = m;
 
-        Self {
+        Ok(Self {
             problem,
             config,
             stop,
@@ -359,7 +413,7 @@ impl<'p> AdaptiveSolver<'p> {
             r_1,
             t: 1,
             report,
-        }
+        })
     }
 
     /// Replace the gradient oracle (e.g. with a PJRT-executed artifact).
@@ -399,7 +453,11 @@ impl<'p> AdaptiveSolver<'p> {
     /// the decrement state (step 14–15 of Algorithm 1). The growth round
     /// costs `O(Δm)`-proportional work (new rows + cross-Gram), not the
     /// from-scratch `O(m)` re-sketch/re-factor.
-    fn grow_sketch(&mut self) {
+    ///
+    /// A failed incremental growth climbs the recovery ladder (fresh
+    /// sketch at the grown size, then the exact Hessian); only exhaustion
+    /// of the ladder returns `Err`.
+    fn grow_sketch(&mut self) -> Result<(), SolverError> {
         let new_m = (self.m * self.config.growth).min(self.m_cap);
         self.report.doublings += 1;
         self.m = new_m;
@@ -413,22 +471,60 @@ impl<'p> AdaptiveSolver<'p> {
             // orthogonal SRHT at m = n_pad is exact anyway; a Gaussian
             // sketch at m = n is not, hence the explicit fallback.) CSR
             // operands densify here — at the cap the "sketch" is as large
-            // as the data, so the O(n d) copy is already paid for.
-            let t0 = Instant::now();
-            let sa = self.problem.a.dense().into_owned();
-            self.report.sketch_time_s += t0.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            self.cache = WoodburyCache::new(sa, self.problem.nu);
-            self.report.factor_time_s += t0.elapsed().as_secs_f64();
-            self.engine = None;
+            // as the data, so the O(n d) copy is already paid for. This is
+            // the algorithm's own cap path, not a fault: no rung recorded.
+            let (engine, cache) = exact_parts(self.problem, &mut self.report)?;
+            self.engine = engine;
+            self.cache = cache;
         } else {
-            let engine = self.engine.as_mut().expect("engine lives until the cap");
-            let t0 = Instant::now();
-            let new_rows = engine.grow(new_m, &*self.problem.a, &mut self.rng);
-            self.report.sketch_time_s += t0.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            self.cache.grow(&new_rows, engine.scale());
-            self.report.factor_time_s += t0.elapsed().as_secs_f64();
+            let grown = {
+                let engine = self.engine.as_mut().expect("engine lives until the cap");
+                let t0 = Instant::now();
+                let new_rows = engine.grow(new_m, &*self.problem.a, &mut self.rng);
+                self.report.sketch_time_s += t0.elapsed().as_secs_f64();
+                let scale = engine.scale();
+                new_rows.and_then(|rows| {
+                    let t0 = Instant::now();
+                    let r = self.cache.grow(&rows, scale);
+                    self.report.factor_time_s += t0.elapsed().as_secs_f64();
+                    r
+                })
+            };
+            match grown {
+                Ok(()) => self.report.recovery.escalate(self.cache.recovery()),
+                Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                Err(_) => {
+                    // Rung 2: throw the sketch away and re-apply a fresh
+                    // draw of the same (grown) size; rung 3: exact.
+                    match fresh_parts(
+                        self.problem,
+                        &self.config,
+                        new_m,
+                        &mut self.rng,
+                        &mut self.report,
+                    ) {
+                        Ok((engine, cache)) => {
+                            self.engine = engine;
+                            self.cache = cache;
+                            self.report.recovery.escalate(RecoveryRung::Resketch);
+                        }
+                        Err(_) => {
+                            let (engine, cache) = exact_parts(self.problem, &mut self.report)
+                                .map_err(|e| {
+                                    SolverError::breakdown(format!(
+                                        "recovery ladder exhausted: {e}"
+                                    ))
+                                })?;
+                            self.engine = engine;
+                            self.cache = cache;
+                            self.m = self.m_cap;
+                            self.report.peak_m = self.report.peak_m.max(self.m_cap);
+                            self.report.final_m = self.m;
+                            self.report.recovery.escalate(RecoveryRung::Exact);
+                        }
+                    }
+                }
+            }
         }
 
         // g_t is unchanged; the preconditioned direction and decrement are
@@ -440,6 +536,20 @@ impl<'p> AdaptiveSolver<'p> {
             // new sketch.
             self.r_1 = self.r_t;
         }
+        Ok(())
+    }
+
+    /// Cooperative deadline check (see [`AdaptiveConfig::deadline`]).
+    fn check_deadline(&self) -> Result<(), SolverError> {
+        if let Some(deadline) = self.config.deadline {
+            if Instant::now() >= deadline {
+                return Err(SolverError::DeadlineExceeded(format!(
+                    "solve passed its wall deadline after {} accepted iterations",
+                    self.report.iterations
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Evaluate the candidate sitting in `self.x_cand`: fills
@@ -470,9 +580,15 @@ impl<'p> AdaptiveSolver<'p> {
     /// several times). When the sketch is already at its cap and neither
     /// candidate passes, the accept thresholds are waived for the final
     /// (exact-Hessian-quality) step.
-    pub fn step(&mut self) {
+    ///
+    /// `Err` means the iterate could not advance: the recovery ladder was
+    /// exhausted ([`SolverError::NumericalBreakdown`]) or the configured
+    /// deadline passed ([`SolverError::DeadlineExceeded`]).
+    pub fn step(&mut self) -> Result<(), SolverError> {
+        failpoint::check("adaptive.iterate").map_err(SolverError::Internal)?;
         let d = self.x.len();
         loop {
+            self.check_deadline()?;
             // --- Polyak candidate (steps 4–7) ---
             if self.config.variant == AdaptiveVariant::PolyakFirst {
                 for i in 0..d {
@@ -487,7 +603,7 @@ impl<'p> AdaptiveSolver<'p> {
                 };
                 if c_p_plus <= self.params.c_p {
                     self.accept_candidate(r_p);
-                    return;
+                    return Ok(());
                 }
                 self.report.rejections += 1;
             }
@@ -503,33 +619,34 @@ impl<'p> AdaptiveSolver<'p> {
                 // Newton step and is always productive; accept it so the
                 // solver cannot live-lock.
                 self.accept_candidate(r_gd);
-                return;
+                return Ok(());
             }
             self.report.rejections += 1;
 
             // --- Both rejected: grow (steps 14–15) ---
-            self.grow_sketch();
+            self.grow_sketch()?;
         }
     }
 
     /// Run to completion under the stop rule given at construction.
-    pub fn run(mut self) -> Solution {
-        self.run_inner();
-        Solution { x: self.x, report: self.report }
+    pub fn run(mut self) -> Result<Solution, SolverError> {
+        self.run_inner()?;
+        Ok(Solution { x: self.x, report: self.report })
     }
 
     /// Like [`AdaptiveSolver::run`], additionally handing back the
     /// [`AdaptiveSessionState`] (grown sketch + factorization + RNG) so the
     /// next solve on the same data can [`AdaptiveSolver::resume`] instead
-    /// of re-sketching from scratch.
-    pub fn run_with_state(mut self) -> (Solution, AdaptiveSessionState) {
-        self.run_inner();
+    /// of re-sketching from scratch. On `Err` the partial state is
+    /// dropped — transactional callers restore their own snapshot.
+    pub fn run_with_state(mut self) -> Result<(Solution, AdaptiveSessionState), SolverError> {
+        self.run_inner()?;
         let state =
             AdaptiveSessionState { engine: self.engine, cache: self.cache, rng: self.rng };
-        (Solution { x: self.x, report: self.report }, state)
+        Ok((Solution { x: self.x, report: self.report }, state))
     }
 
-    fn run_inner(&mut self) {
+    fn run_inner(&mut self) -> Result<(), SolverError> {
         let g0_norm = norm2(&self.g);
         // Stop-rule scratch, reused across iterations.
         let mut ws_d: Vec<f64> = Vec::new();
@@ -549,7 +666,7 @@ impl<'p> AdaptiveSolver<'p> {
         let max_iters = self.config.max_iters;
         let stop = self.stop.clone();
         while self.report.iterations < max_iters {
-            self.step();
+            self.step()?;
             let stop_now = match &stop {
                 StopRule::TrueError { x_star, eps } => {
                     let delta =
@@ -579,7 +696,42 @@ impl<'p> AdaptiveSolver<'p> {
         let total = self.created.elapsed().as_secs_f64();
         self.report.wall_time_s = total;
         self.report.iter_time_s = total - self.report.sketch_time_s - self.report.factor_time_s;
+        Ok(())
     }
+}
+
+/// Build a fresh engine + cache at size `m` (the initial sketch, and the
+/// ladder's *resketch* rung), charging sketch/factor time to `report`.
+fn fresh_parts(
+    problem: &RidgeProblem,
+    config: &AdaptiveConfig,
+    m: usize,
+    rng: &mut Xoshiro256,
+    report: &mut SolveReport,
+) -> Result<(Option<SketchEngine>, WoodburyCache), SolverError> {
+    let t0 = Instant::now();
+    let engine = SketchEngine::new(config.kind, m, &*problem.a, rng);
+    report.sketch_time_s += t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let cache =
+        WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), problem.nu, engine.scale());
+    report.factor_time_s += t0.elapsed().as_secs_f64();
+    Ok((Some(engine), cache?))
+}
+
+/// Build the exact-Hessian cache (`S = I`; the at-cap path and the
+/// ladder's final rung), charging sketch/factor time to `report`.
+fn exact_parts(
+    problem: &RidgeProblem,
+    report: &mut SolveReport,
+) -> Result<(Option<SketchEngine>, WoodburyCache), SolverError> {
+    let t0 = Instant::now();
+    let sa = problem.a.dense().into_owned();
+    report.sketch_time_s += t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let cache = WoodburyCache::new(sa, problem.nu);
+    report.factor_time_s += t0.elapsed().as_secs_f64();
+    Ok((None, cache?))
 }
 
 /// Convenience wrapper: run Algorithm 1 from `x0` with the given seed.
@@ -589,8 +741,8 @@ pub fn solve(
     config: &AdaptiveConfig,
     stop: &StopRule,
     seed: u64,
-) -> Solution {
-    AdaptiveSolver::new(problem, x0, config.clone(), stop.clone(), seed).run()
+) -> Result<Solution, SolverError> {
+    AdaptiveSolver::new(problem, x0, config.clone(), stop.clone(), seed)?.run()
 }
 
 #[cfg(test)]
@@ -613,7 +765,7 @@ mod tests {
     fn converges_from_m_equals_one_gaussian() {
         let p = small_problem(256, 32, 0.5, 1);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 11);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 11).unwrap();
         assert!(sol.report.converged, "adaptive failed: {:?}", sol.report.final_rel_error);
         assert!(sol.report.final_m >= 1);
         assert_eq!(sol.report.solver, "adaptive-gaussian");
@@ -623,7 +775,7 @@ mod tests {
     fn converges_from_m_equals_one_srht() {
         let p = small_problem(256, 32, 0.5, 2);
         let cfg = AdaptiveConfig::new(SketchKind::Srht);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 12);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 12).unwrap();
         assert!(sol.report.converged);
     }
 
@@ -631,7 +783,7 @@ mod tests {
     fn converges_with_sparse_sketch() {
         let p = small_problem(256, 32, 0.5, 3);
         let cfg = AdaptiveConfig::new(SketchKind::Sparse);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-8), 13);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-8), 13).unwrap();
         assert!(sol.report.converged);
     }
 
@@ -642,7 +794,7 @@ mod tests {
         let p = small_problem(1024, 64, 1.0, 4);
         let d_e = de_of(&p);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 14);
+        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 14).unwrap();
         let bound = crate::theory::bounds::gaussian_sketch_size_bound(cfg.rho, d_e);
         assert!(sol.report.converged);
         assert!(
@@ -658,7 +810,7 @@ mod tests {
     fn rejections_logarithmic() {
         let p = small_problem(512, 64, 0.5, 5);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 15);
+        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 15).unwrap();
         // Doublings from m=1 can't exceed log2(n_pad)+1, and should be
         // far fewer on this easy problem.
         assert!(sol.report.doublings <= 11, "doublings {}", sol.report.doublings);
@@ -669,7 +821,7 @@ mod tests {
         let p = small_problem(256, 32, 0.3, 6);
         let mut cfg = AdaptiveConfig::new(SketchKind::Srht);
         cfg.variant = AdaptiveVariant::GradientOnly;
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 16);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 16).unwrap();
         assert!(sol.report.converged);
         assert_eq!(sol.report.solver, "adaptive-gd-srht");
     }
@@ -682,7 +834,7 @@ mod tests {
         let d_e = de_of(&p);
         assert!(d_e < 2.0, "test premise: d_e = {d_e}");
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 17);
+        let sol = solve(&p, &vec![0.0; 64], &cfg, &stop_for(&p, 1e-10), 17).unwrap();
         assert!(sol.report.converged);
         assert!(sol.report.peak_m <= 64, "peak m {} should be << d", sol.report.peak_m);
     }
@@ -693,7 +845,7 @@ mod tests {
         let x_star = direct::solve(&p);
         let near: Vec<f64> = x_star.iter().map(|v| v * 0.99).collect();
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let sol = solve(&p, &near, &cfg, &StopRule::TrueError { x_star, eps: 1e-10 }, 18);
+        let sol = solve(&p, &near, &cfg, &StopRule::TrueError { x_star, eps: 1e-10 }, 18).unwrap();
         assert!(sol.report.converged);
     }
 
@@ -701,7 +853,7 @@ mod tests {
     fn m_trace_monotone_nondecreasing() {
         let p = small_problem(256, 32, 0.1, 9);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 19);
+        let sol = solve(&p, &vec![0.0; 32], &cfg, &stop_for(&p, 1e-10), 19).unwrap();
         for w in sol.report.m_trace.windows(2) {
             assert!(w[1] >= w[0], "m_trace must never shrink");
         }
@@ -712,10 +864,42 @@ mod tests {
         let p = small_problem(128, 16, 0.5, 10);
         let cfg = AdaptiveConfig::new(SketchKind::Srht);
         let stop = stop_for(&p, 1e-9);
-        let s1 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77);
-        let s2 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77);
+        let s1 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77).unwrap();
+        let s2 = solve(&p, &vec![0.0; 16], &cfg, &stop, 77).unwrap();
         assert_eq!(s1.x, s2.x);
         assert_eq!(s1.report.iterations, s2.report.iterations);
+    }
+
+    #[test]
+    fn healthy_solve_reports_no_recovery() {
+        let p = small_problem(128, 16, 0.5, 23);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let sol = solve(&p, &vec![0.0; 16], &cfg, &stop_for(&p, 1e-9), 24).unwrap();
+        assert_eq!(sol.report.recovery, RecoveryRung::None);
+        assert_eq!(sol.report.recovery.label(), "none");
+    }
+
+    #[test]
+    fn expired_deadline_is_a_structured_error() {
+        let p = small_problem(128, 16, 0.5, 25);
+        let mut cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        // `step` checks the deadline with `>=` before any work, so a
+        // deadline of "now" fires on the first iteration.
+        cfg.deadline = Some(Instant::now());
+        match solve(&p, &vec![0.0; 16], &cfg, &stop_for(&p, 1e-9), 26) {
+            Err(SolverError::DeadlineExceeded(_)) => {}
+            other => panic!("expected DeadlineExceeded, got {:?}", other.map(|s| s.report)),
+        }
+    }
+
+    #[test]
+    fn invalid_x0_is_a_structured_error() {
+        let p = small_problem(64, 8, 0.5, 27);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        match solve(&p, &vec![0.0; 9], &cfg, &stop_for(&p, 1e-9), 28) {
+            Err(SolverError::InvalidInput(_)) => {}
+            other => panic!("expected InvalidInput, got {:?}", other.map(|s| s.report)),
+        }
     }
 
     #[test]
@@ -727,8 +911,8 @@ mod tests {
         let p1 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 0.3);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
         let stop1 = stop_for(&p1, 1e-9);
-        let solver = AdaptiveSolver::new(&p1, &vec![0.0; 32], cfg.clone(), stop1, 21);
-        let (sol1, state) = solver.run_with_state();
+        let solver = AdaptiveSolver::new(&p1, &vec![0.0; 32], cfg.clone(), stop1, 21).unwrap();
+        let (sol1, state) = solver.run_with_state().unwrap();
         assert!(sol1.report.converged);
         let m1 = state.m();
         assert!(!state.at_cap());
@@ -736,8 +920,8 @@ mod tests {
 
         let p2 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 1.0);
         let stop2 = stop_for(&p2, 1e-9);
-        let resumed = AdaptiveSolver::resume(&p2, &sol1.x, cfg, stop2, state);
-        let (sol2, state2) = resumed.run_with_state();
+        let resumed = AdaptiveSolver::resume(&p2, &sol1.x, cfg, stop2, state).unwrap();
+        let (sol2, state2) = resumed.run_with_state().unwrap();
         assert!(sol2.report.converged);
         assert_eq!(sol2.report.sketch_time_s, 0.0, "resume must not re-sketch");
         assert_eq!(sol2.report.doublings, 0);

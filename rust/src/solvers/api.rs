@@ -33,6 +33,7 @@
 use super::adaptive::{self, AdaptiveConfig, AdaptiveVariant};
 use super::cg::{self, CgConfig};
 use super::dual::DualRidge;
+use super::error::SolverError;
 use super::ihs::{self, IhsConfig};
 use super::pcg::{self, PcgConfig};
 use super::{direct, RidgeProblem, Solution, SolveReport, StopRule};
@@ -58,6 +59,21 @@ pub trait Solver: Send + Sync {
 
     /// Run from `x0` under `stop`. Deterministic given the builder seed.
     fn solve(&self, problem: &RidgeProblem, x0: &[f64], stop: &StopRule) -> Solution;
+
+    /// [`Solver::solve`] with structured failure: invalid input, wall
+    /// deadlines and exhausted numerical recovery come back as
+    /// [`SolverError`] values instead of panics. The default wraps
+    /// `solve` for solver families whose inputs are pre-validated and
+    /// whose numerics cannot break down (direct, CG); fallible families
+    /// (adaptive, dual-adaptive) override it.
+    fn try_solve(
+        &self,
+        problem: &RidgeProblem,
+        x0: &[f64],
+        stop: &StopRule,
+    ) -> Result<Solution, SolverError> {
+        Ok(self.solve(problem, x0, stop))
+    }
 }
 
 /// Plain-data description of a solver configuration.
@@ -566,11 +582,21 @@ impl Solver for AdaptiveIhsSolver {
     }
 
     fn solve(&self, problem: &RidgeProblem, x0: &[f64], stop: &StopRule) -> Solution {
+        self.try_solve(problem, x0, stop)
+            .unwrap_or_else(|e| panic!("adaptive solve failed: {e}"))
+    }
+
+    fn try_solve(
+        &self,
+        problem: &RidgeProblem,
+        x0: &[f64],
+        stop: &StopRule,
+    ) -> Result<Solution, SolverError> {
         let mut sol = with_spec_threads(self.threads, || {
             adaptive::solve(problem, x0, &self.config, stop, self.seed)
-        });
+        })?;
         sol.report.solver = self.label();
-        sol
+        Ok(sol)
     }
 }
 
@@ -595,12 +621,27 @@ impl Solver for DualAdaptiveSolver {
         true
     }
 
-    fn solve(&self, problem: &RidgeProblem, _x0: &[f64], stop: &StopRule) -> Solution {
+    fn solve(&self, problem: &RidgeProblem, x0: &[f64], stop: &StopRule) -> Solution {
+        self.try_solve(problem, x0, stop)
+            .unwrap_or_else(|e| panic!("dual solver: {e}"))
+    }
+
+    fn try_solve(
+        &self,
+        problem: &RidgeProblem,
+        _x0: &[f64],
+        stop: &StopRule,
+    ) -> Result<Solution, SolverError> {
         let b = problem
             .b
             .as_ref()
-            .expect("dual solver needs raw observations b")
+            .ok_or_else(|| SolverError::invalid("dual solver needs raw observations b"))?
             .clone();
+        if problem.n() > problem.a.cols() {
+            return Err(SolverError::invalid(
+                "dual path is for underdetermined problems (d >= n)",
+            ));
+        }
         let dr = DualRidge::new_shared(std::sync::Arc::clone(&problem.a), b, problem.nu);
         // Translate the primal stop rule into the dual space: the paper's
         // TrueError criterion needs the dual optimum (one n x n direct
@@ -614,10 +655,11 @@ impl Solver for DualAdaptiveSolver {
             StopRule::GradientNorm { tol } => StopRule::GradientNorm { tol: *tol },
         };
         let config = AdaptiveConfig::new(self.kind);
-        let mut sol =
-            with_spec_threads(self.threads, || dr.solve_adaptive(&config, &dual_stop, self.seed));
+        let mut sol = with_spec_threads(self.threads, || {
+            dr.try_solve_adaptive(&config, &dual_stop, self.seed)
+        })?;
         sol.report.solver = self.label();
-        sol
+        Ok(sol)
     }
 }
 

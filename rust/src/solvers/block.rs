@@ -42,14 +42,30 @@
 //! Surfaced as [`ModelSession::solve_block`] and, over the wire, as the
 //! `query` command's `"bs"` batch (PROTOCOL.md).
 //!
+//! # Failure semantics
+//!
+//! [`solve_block`] never panics on bad input or numerical breakdown: it
+//! returns a structured [`SolverError`] instead. Malformed arguments
+//! (non-positive or non-finite `nu`/`eps`, shape mismatches, stale
+//! resume state) are [`SolverError::InvalidInput`] and are rejected
+//! before any work happens. Numerical breakdown mid-solve climbs the
+//! same recovery ladder as the single-RHS adaptive solver — retry with
+//! jitter (inside the Cholesky), re-sketch the offending block fresh,
+//! fall back to the exact Hessian — and the highest rung climbed is
+//! recorded in every per-column [`SolveReport::recovery`]. Only when the
+//! exact fallback itself fails does the solve return
+//! [`SolverError::NumericalBreakdown`].
+//!
 //! [`ModelSession::solve_block`]: crate::solvers::session::ModelSession::solve_block
 
 use super::adaptive::{AdaptiveConfig, AdaptiveSessionState};
+use super::error::{RecoveryRung, SolverError};
 use super::woodbury::WoodburyCache;
 use super::{Solution, SolveReport};
 use crate::linalg::{Matrix, Operand};
 use crate::rng::Xoshiro256;
 use crate::sketch::engine::SketchEngine;
+use crate::util::failpoint;
 use std::time::Instant;
 
 /// Result of a block solve: one [`Solution`] per right-hand-side column
@@ -99,6 +115,44 @@ fn block_gradient(a: &Operand, nu2: f64, x: &Matrix, atb: &Matrix) -> Matrix {
     g
 }
 
+/// Build a fresh sketch engine + factored cache at `m` rows — the
+/// cold-start path and the ladder's re-sketch rung share this.
+fn fresh_parts(
+    config: &AdaptiveConfig,
+    m: usize,
+    a: &Operand,
+    nu: f64,
+    rng: &mut Xoshiro256,
+    sketch_time: &mut f64,
+    factor_time: &mut f64,
+) -> Result<(Option<SketchEngine>, WoodburyCache), SolverError> {
+    let t0 = Instant::now();
+    let engine = SketchEngine::new(config.kind, m, a, rng);
+    *sketch_time += t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let cache =
+        WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), nu, engine.scale())?;
+    *factor_time += t0.elapsed().as_secs_f64();
+    Ok((Some(engine), cache))
+}
+
+/// Drop sketching entirely: factor the exact Hessian. Used both as the
+/// algorithm's own at-cap path and as the ladder's last rung.
+fn exact_parts(
+    a: &Operand,
+    nu: f64,
+    sketch_time: &mut f64,
+    factor_time: &mut f64,
+) -> Result<(Option<SketchEngine>, WoodburyCache), SolverError> {
+    let t0 = Instant::now();
+    let sa = a.dense().into_owned();
+    *sketch_time += t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let cache = WoodburyCache::new(sa, nu)?;
+    *factor_time += t0.elapsed().as_secs_f64();
+    Ok((None, cache))
+}
+
 /// Solve the `k` systems `(A^T A + nu^2 I) x_j = atb_j` (columns of the
 /// `d x k` block `atb`) jointly, from zero starts, to the cold-referenced
 /// per-column tolerance `||g_j|| <= eps * ||atb_j||`.
@@ -118,23 +172,33 @@ pub fn solve_block(
     config: &AdaptiveConfig,
     state: Option<AdaptiveSessionState>,
     seed: u64,
-) -> BlockOutcome {
+) -> Result<BlockOutcome, SolverError> {
     let created = Instant::now();
     let d = a.cols();
     let k = atb.cols();
-    assert_eq!(atb.rows(), d, "atb block must be d x k");
-    assert!(nu > 0.0 && nu.is_finite(), "block solve needs a positive finite nu");
-    assert!(eps > 0.0 && eps.is_finite(), "block solve needs a positive finite eps");
+    if atb.rows() != d {
+        return Err(SolverError::invalid(format!(
+            "atb block must be d x k: got {} rows for d = {d}",
+            atb.rows()
+        )));
+    }
+    if !(nu > 0.0 && nu.is_finite()) {
+        return Err(SolverError::invalid(format!("invalid nu: {nu}")));
+    }
+    if !(eps > 0.0 && eps.is_finite()) {
+        return Err(SolverError::invalid(format!("invalid eps: {eps}")));
+    }
     let nu2 = nu * nu;
     let params = config.params();
     let mut m_cap = crate::sketch::srht::next_pow2(a.rows());
 
     let mut sketch_time = 0.0f64;
     let mut factor_time = 0.0f64;
+    let mut recovery = RecoveryRung::None;
 
     let (mut engine, mut cache, mut rng, mut m) = match state {
         Some(st) => {
-            let (engine, mut cache, rng) = st.into_parts();
+            let (mut engine, mut cache, mut rng) = st.into_parts();
             // A resumed engine may carry its own sampling capacity
             // (streamed SRHT appends): cap growth at its max_m, with the
             // same exact-Hessian fallback at the cap.
@@ -142,31 +206,87 @@ pub fn solve_block(
                 m_cap = m_cap.min(e.max_m());
             }
             if let Some(e) = &engine {
-                assert_eq!(e.kind(), config.kind, "resume: sketch family changed");
-                assert_eq!(e.n(), a.rows(), "resume: problem shape changed");
-                assert_eq!(e.m(), cache.m(), "resume: engine/cache row counts diverged");
+                if e.kind() != config.kind {
+                    return Err(SolverError::invalid("resume: sketch family changed"));
+                }
+                if e.n() != a.rows() {
+                    return Err(SolverError::invalid("resume: problem shape changed"));
+                }
+                if e.m() != cache.m() {
+                    return Err(SolverError::invalid(
+                        "resume: engine/cache row counts diverged",
+                    ));
+                }
             }
-            assert_eq!(cache.d(), d, "resume: problem shape changed");
-            let m = engine.as_ref().map_or(m_cap, SketchEngine::m);
+            if cache.d() != d {
+                return Err(SolverError::invalid("resume: problem shape changed"));
+            }
+            let mut m = engine.as_ref().map_or(m_cap, SketchEngine::m);
             let t0 = Instant::now();
-            cache.set_nu(nu);
+            let rekeyed = cache.set_nu(nu);
             factor_time += t0.elapsed().as_secs_f64();
+            match rekeyed {
+                Ok(()) => recovery.escalate(cache.recovery()),
+                Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                Err(_) => {
+                    // Ladder: the resumed factorization broke — re-sketch
+                    // the block fresh at the same m, else go exact.
+                    match fresh_parts(
+                        config,
+                        m,
+                        a,
+                        nu,
+                        &mut rng,
+                        &mut sketch_time,
+                        &mut factor_time,
+                    ) {
+                        Ok((e2, c2)) => {
+                            engine = e2;
+                            cache = c2;
+                            recovery.escalate(RecoveryRung::Resketch);
+                        }
+                        Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                        Err(_) => {
+                            let (e2, c2) =
+                                exact_parts(a, nu, &mut sketch_time, &mut factor_time)
+                                    .map_err(|err| {
+                                        SolverError::breakdown(format!(
+                                            "recovery ladder exhausted: {err}"
+                                        ))
+                                    })?;
+                            engine = e2;
+                            cache = c2;
+                            m = m_cap;
+                            recovery.escalate(RecoveryRung::Exact);
+                        }
+                    }
+                }
+            }
             (engine, cache, rng, m)
         }
         None => {
             let mut rng = Xoshiro256::seed_from_u64(seed);
             let m = config.m_initial.min(m_cap);
-            let t0 = Instant::now();
-            let engine = SketchEngine::new(config.kind, m, a, &mut rng);
-            sketch_time += t0.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            let cache = WoodburyCache::new_scaled(
-                engine.sa_unnormalized().clone(),
-                nu,
-                engine.scale(),
-            );
-            factor_time += t0.elapsed().as_secs_f64();
-            (Some(engine), cache, rng, m)
+            match fresh_parts(config, m, a, nu, &mut rng, &mut sketch_time, &mut factor_time)
+            {
+                Ok((engine, cache)) => {
+                    recovery.escalate(cache.recovery());
+                    (engine, cache, rng, m)
+                }
+                Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                Err(_) => {
+                    let (engine, cache) =
+                        exact_parts(a, nu, &mut sketch_time, &mut factor_time).map_err(
+                            |err| {
+                                SolverError::breakdown(format!(
+                                    "recovery ladder exhausted: {err}"
+                                ))
+                            },
+                        )?;
+                    recovery.escalate(RecoveryRung::Exact);
+                    (engine, cache, rng, m_cap)
+                }
+            }
         }
     };
 
@@ -208,6 +328,14 @@ pub fn solve_block(
 
     let mut iter = 0usize;
     while !active.is_empty() && iter < config.max_iters {
+        failpoint::check("block.iterate").map_err(SolverError::Internal)?;
+        if let Some(deadline) = config.deadline {
+            if Instant::now() >= deadline {
+                return Err(SolverError::DeadlineExceeded(format!(
+                    "block solve passed its wall deadline after {iter} accepted iterations"
+                )));
+            }
+        }
         // --- gradient-IHS candidate over the whole active panel ---
         let mut x_cand = x_act.clone();
         x_cand.add_scaled(-params.mu_gd, &gt_act);
@@ -270,24 +398,69 @@ pub fn solve_block(
             if new_m >= m_cap {
                 // At the cap, drop sketching: the cache holds the exact
                 // Hessian and forced steps are damped exact-Newton (same
-                // fallback as the single-RHS adaptive solver).
-                let t0 = Instant::now();
-                let sa = a.dense().into_owned();
-                sketch_time += t0.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                cache = WoodburyCache::new(sa, nu);
-                factor_time += t0.elapsed().as_secs_f64();
-                engine = None;
+                // fallback as the single-RHS adaptive solver). This is
+                // the algorithm's own path, not a fault — no rung.
+                let (e2, c2) = exact_parts(a, nu, &mut sketch_time, &mut factor_time)?;
+                engine = e2;
+                cache = c2;
+                m = new_m;
             } else {
-                let e = engine.as_mut().expect("engine lives until the cap");
-                let t0 = Instant::now();
-                let rows = e.grow(new_m, a, &mut rng);
-                sketch_time += t0.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                cache.grow(&rows, e.scale());
-                factor_time += t0.elapsed().as_secs_f64();
+                let grown: Result<(), SolverError> = (|| {
+                    let e = engine.as_mut().ok_or_else(|| {
+                        SolverError::breakdown("sketch engine dropped before the cap")
+                    })?;
+                    let t0 = Instant::now();
+                    let rows = e.grow(new_m, a, &mut rng)?;
+                    sketch_time += t0.elapsed().as_secs_f64();
+                    let t0 = Instant::now();
+                    cache.grow(&rows, e.scale())?;
+                    factor_time += t0.elapsed().as_secs_f64();
+                    Ok(())
+                })();
+                match grown {
+                    Ok(()) => {
+                        recovery.escalate(cache.recovery());
+                        m = new_m;
+                    }
+                    Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                    Err(_) => {
+                        // Ladder: the grown sketch (or its bordered
+                        // re-factor) broke — re-sketch fresh at the
+                        // target size, else go exact. Either way the
+                        // engine/cache pair is rebuilt consistently.
+                        match fresh_parts(
+                            config,
+                            new_m,
+                            a,
+                            nu,
+                            &mut rng,
+                            &mut sketch_time,
+                            &mut factor_time,
+                        ) {
+                            Ok((e2, c2)) => {
+                                engine = e2;
+                                cache = c2;
+                                recovery.escalate(RecoveryRung::Resketch);
+                                m = new_m;
+                            }
+                            Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+                            Err(_) => {
+                                let (e2, c2) =
+                                    exact_parts(a, nu, &mut sketch_time, &mut factor_time)
+                                        .map_err(|err| {
+                                            SolverError::breakdown(format!(
+                                                "recovery ladder exhausted: {err}"
+                                            ))
+                                        })?;
+                                engine = e2;
+                                cache = c2;
+                                recovery.escalate(RecoveryRung::Exact);
+                                m = m_cap;
+                            }
+                        }
+                    }
+                }
             }
-            m = new_m;
             // Unchanged gradients, new geometry: re-evaluate the
             // preconditioned panel and retry the same iteration.
             gt_act = cache.apply_inverse_block(&g_act);
@@ -317,6 +490,7 @@ pub fn solve_block(
     for rep in &mut reports {
         rep.final_m = m;
         rep.peak_m = m;
+        rep.recovery = recovery;
         rep.sketch_time_s = sketch_time;
         rep.factor_time_s = factor_time;
         rep.wall_time_s = wall;
@@ -332,10 +506,10 @@ pub fn solve_block(
         })
         .collect();
 
-    BlockOutcome {
+    Ok(BlockOutcome {
         solutions,
         state: AdaptiveSessionState::from_parts(engine, cache, rng),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -365,11 +539,12 @@ mod tests {
         let (bmat, bs) = batch(256, 4);
         let atb = a.matmul_t(&bmat);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let out = solve_block(&a, 0.5, &atb, 1e-10, &cfg, None, 3);
+        let out = solve_block(&a, 0.5, &atb, 1e-10, &cfg, None, 3).unwrap();
         assert_eq!(out.solutions.len(), 4);
         for (j, sol) in out.solutions.iter().enumerate() {
             assert!(sol.report.converged, "column {j} did not converge");
             assert_eq!(sol.report.solver, "block-adaptive-gaussian");
+            assert_eq!(sol.report.recovery, RecoveryRung::None);
             let p = RidgeProblem::new(a.clone(), bs[j].clone(), 0.5);
             let x_star = direct::solve(&p);
             let rel = p.prediction_error(&sol.x, &x_star)
@@ -389,7 +564,7 @@ mod tests {
         }
         let atb = a.matmul_t(&bmat);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
-        let out = solve_block(&a, 0.8, &atb, 1e-9, &cfg, None, 5);
+        let out = solve_block(&a, 0.8, &atb, 1e-9, &cfg, None, 5).unwrap();
         assert!(out.solutions[1].report.converged);
         assert_eq!(out.solutions[1].report.iterations, 0);
         assert!(out.solutions[1].x.iter().all(|&v| v == 0.0));
@@ -404,16 +579,51 @@ mod tests {
         let atb = a.matmul_t(&bmat);
         let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
         // First block solve grows the sketch from m_initial.
-        let first = solve_block(&a, 0.3, &atb, 1e-9, &cfg, None, 7);
+        let first = solve_block(&a, 0.3, &atb, 1e-9, &cfg, None, 7).unwrap();
         assert!(first.solutions.iter().all(|s| s.report.converged));
         let m1 = first.state.m();
         // Resume at a larger nu: cached rows suffice — zero sketch work.
-        let second = solve_block(&a, 1.0, &atb, 1e-9, &cfg, Some(first.state), 7);
+        let second = solve_block(&a, 1.0, &atb, 1e-9, &cfg, Some(first.state), 7).unwrap();
         for sol in &second.solutions {
             assert!(sol.report.converged);
             assert_eq!(sol.report.sketch_time_s, 0.0, "resume must not re-sketch");
             assert_eq!(sol.report.doublings, 0);
         }
         assert_eq!(second.state.m(), m1);
+    }
+
+    #[test]
+    fn invalid_inputs_are_structured_errors() {
+        let ds = synthetic::exponential_decay(64, 8, 9);
+        let a = Operand::from(ds.a.dense().into_owned());
+        let (bmat, _) = batch(64, 2);
+        let atb = a.matmul_t(&bmat);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        for bad_nu in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = solve_block(&a, bad_nu, &atb, 1e-9, &cfg, None, 3).unwrap_err();
+            assert!(
+                matches!(err, SolverError::InvalidInput(_)),
+                "nu = {bad_nu} gave {err}"
+            );
+        }
+        for bad_eps in [0.0, -1e-9, f64::NAN] {
+            let err = solve_block(&a, 0.5, &atb, bad_eps, &cfg, None, 3).unwrap_err();
+            assert!(matches!(err, SolverError::InvalidInput(_)));
+        }
+        let wide = Matrix::zeros(7, 2); // wrong row count for d = 8
+        let err = solve_block(&a, 0.5, &wide, 1e-9, &cfg, None, 3).unwrap_err();
+        assert!(matches!(err, SolverError::InvalidInput(_)));
+    }
+
+    #[test]
+    fn expired_deadline_is_a_structured_error() {
+        let ds = synthetic::exponential_decay(128, 16, 11);
+        let a = Operand::from(ds.a.dense().into_owned());
+        let (bmat, _) = batch(128, 2);
+        let atb = a.matmul_t(&bmat);
+        let mut cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        cfg.deadline = Some(Instant::now());
+        let err = solve_block(&a, 0.5, &atb, 1e-9, &cfg, None, 3).unwrap_err();
+        assert!(matches!(err, SolverError::DeadlineExceeded(_)), "got {err}");
     }
 }

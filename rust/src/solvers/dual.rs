@@ -9,6 +9,7 @@
 //! `x* = A^T z*`.
 
 use super::adaptive::{self, AdaptiveConfig};
+use super::error::SolverError;
 use super::{RidgeProblem, Solution, StopRule};
 use crate::linalg::{Operand, OperandRef};
 use std::sync::Arc;
@@ -49,12 +50,25 @@ impl DualRidge {
     /// [`dual_stop`]). Guarantees of Theorems 5–7 carry over verbatim
     /// (Appendix A.2).
     pub fn solve_adaptive(&self, config: &AdaptiveConfig, stop: &StopRule, seed: u64) -> Solution {
+        self.try_solve_adaptive(config, stop, seed)
+            .unwrap_or_else(|e| panic!("dual adaptive solve failed: {e}"))
+    }
+
+    /// [`DualRidge::solve_adaptive`] with structured errors instead of a
+    /// panic: invalid input, deadline expiry and exhausted numerical
+    /// recovery come back as [`SolverError`] values.
+    pub fn try_solve_adaptive(
+        &self,
+        config: &AdaptiveConfig,
+        stop: &StopRule,
+        seed: u64,
+    ) -> Result<Solution, SolverError> {
         let n = self.dual.d();
         let z0 = vec![0.0; n];
-        let mut sol = adaptive::solve(&self.dual, &z0, config, stop, seed);
+        let mut sol = adaptive::solve(&self.dual, &z0, config, stop, seed)?;
         sol.x = self.primal(&sol.x);
         sol.report.solver = format!("dual-{}", sol.report.solver);
-        sol
+        Ok(sol)
     }
 }
 

@@ -1,0 +1,177 @@
+//! Error types and recovery accounting for the numerical core.
+//!
+//! The paper's adaptive algorithm is itself a recovery loop (reject →
+//! double `m` → re-sketch → retry), and the serving layer extends that
+//! philosophy to *faults*: a failed factorization or a corrupted growth
+//! step is met with an escalating **recovery ladder** instead of a panic:
+//!
+//! 1. **jitter** — retry the Cholesky with escalating diagonal jitter
+//!    (already built into
+//!    [`crate::linalg::cholesky::Cholesky::factor_with_jitter`]);
+//! 2. **resketch** — throw away the offending sketch block and re-apply a
+//!    fresh sketch of the same size (a new draw from the solver's RNG
+//!    stream);
+//! 3. **exact** — fall back to the exact (unsketched) Hessian, the same
+//!    path the adaptive solver takes when `m` reaches its cap.
+//!
+//! The rung that ultimately produced the factorization is recorded in
+//! [`crate::solvers::SolveReport::recovery`] and surfaced on the wire, so
+//! degraded solves are visible, not silent. Operations that exhaust the
+//! ladder return [`SolverError::NumericalBreakdown`]; sessions roll back
+//! to their pre-call state and the server answers a structured error.
+
+use std::fmt;
+
+/// Typed error for the solver/session stack. Converts to `String` for the
+/// wire layer; the enum split is what the recovery ladder and the chaos
+/// tests dispatch on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SolverError {
+    /// A factorization or growth step failed numerically even after the
+    /// recovery ladder (jitter → resketch → exact Hessian) was exhausted.
+    NumericalBreakdown(String),
+    /// The caller passed invalid data (non-positive `nu`, shape mismatch,
+    /// non-finite entries, an unsorted path, ...). The operation did not
+    /// start; no state was touched.
+    InvalidInput(String),
+    /// A structural capacity limit was hit (e.g. an SRHT sketch cannot
+    /// grow past its padded block dimension).
+    Capacity(String),
+    /// The per-request wall deadline expired mid-solve. The session rolls
+    /// back; the partial iterate is discarded.
+    DeadlineExceeded(String),
+    /// A panic was caught and converted (fault injection, or a genuine
+    /// bug); the session state was restored or rebuilt before returning.
+    Internal(String),
+}
+
+impl SolverError {
+    /// Invalid-input constructor (the most common variant at validation
+    /// boundaries).
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        SolverError::InvalidInput(msg.into())
+    }
+
+    /// Numerical-breakdown constructor.
+    pub fn breakdown(msg: impl Into<String>) -> Self {
+        SolverError::NumericalBreakdown(msg.into())
+    }
+
+    /// Build from a caught panic payload (shared by the scheduler's
+    /// worker loop, the server's request isolation, and the sessions'
+    /// transactional rollback).
+    pub fn from_panic(panic: &(dyn std::any::Any + Send)) -> Self {
+        SolverError::Internal(panic_message(panic))
+    }
+}
+
+impl fmt::Display for SolverError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolverError::NumericalBreakdown(m) => write!(f, "numerical breakdown: {m}"),
+            SolverError::InvalidInput(m) => write!(f, "{m}"),
+            SolverError::Capacity(m) => write!(f, "capacity: {m}"),
+            SolverError::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            SolverError::Internal(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for SolverError {}
+
+impl From<SolverError> for String {
+    fn from(e: SolverError) -> String {
+        e.to_string()
+    }
+}
+
+impl From<String> for SolverError {
+    /// Untyped session/validation errors flow into the typed world as
+    /// invalid input (they are all produced by validation boundaries).
+    fn from(msg: String) -> Self {
+        SolverError::InvalidInput(msg)
+    }
+}
+
+/// Human-readable payload of a caught panic. `"panic: ..."` prefixed so
+/// injected and genuine panics are distinguishable from ordinary errors
+/// in logs and wire responses.
+pub fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    let msg = panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "worker panicked".into());
+    format!("panic: {msg}")
+}
+
+/// Which rung of the recovery ladder a solve ultimately used. Ordered:
+/// `None < Jitter < Resketch < Exact`, and a report carries the *highest*
+/// rung any step of the solve needed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RecoveryRung {
+    /// No recovery needed (every factorization succeeded outright).
+    #[default]
+    None,
+    /// A factorization needed nonzero diagonal jitter.
+    Jitter,
+    /// A sketch block had to be re-applied from a fresh draw.
+    Resketch,
+    /// The solve fell back to the exact (unsketched) Hessian.
+    Exact,
+}
+
+impl RecoveryRung {
+    /// Wire/report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            RecoveryRung::None => "none",
+            RecoveryRung::Jitter => "jitter",
+            RecoveryRung::Resketch => "resketch",
+            RecoveryRung::Exact => "exact",
+        }
+    }
+
+    /// Merge: keep the most severe rung seen so far.
+    pub fn escalate(&mut self, other: RecoveryRung) {
+        if other > *self {
+            *self = other;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_shapes() {
+        assert_eq!(
+            SolverError::breakdown("K not PD").to_string(),
+            "numerical breakdown: K not PD"
+        );
+        assert_eq!(SolverError::invalid("bad nu").to_string(), "bad nu");
+        let s: String = SolverError::Capacity("srht cap".into()).into();
+        assert!(s.contains("capacity"));
+    }
+
+    #[test]
+    fn rung_ordering_and_escalation() {
+        assert!(RecoveryRung::None < RecoveryRung::Jitter);
+        assert!(RecoveryRung::Jitter < RecoveryRung::Resketch);
+        assert!(RecoveryRung::Resketch < RecoveryRung::Exact);
+        let mut r = RecoveryRung::Jitter;
+        r.escalate(RecoveryRung::None);
+        assert_eq!(r, RecoveryRung::Jitter);
+        r.escalate(RecoveryRung::Exact);
+        assert_eq!(r, RecoveryRung::Exact);
+        assert_eq!(r.label(), "exact");
+    }
+
+    #[test]
+    fn panic_payloads_format() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(&*p), "panic: boom 7");
+        assert!(matches!(SolverError::from_panic(&*p), SolverError::Internal(_)));
+    }
+}

@@ -5,9 +5,10 @@
 //! users who *do* know `d_e` (and for the rate-validation experiments that
 //! check `delta_t ~ (d_e/m)^t`).
 
+use super::error::RecoveryRung;
 use super::woodbury::WoodburyCache;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
-use crate::linalg::{axpy, norm2};
+use crate::linalg::{axpy, norm2, Matrix};
 use crate::rng::Xoshiro256;
 use crate::sketch::{self, SketchKind};
 use crate::theory::rates::IhsParams;
@@ -72,6 +73,25 @@ impl IhsConfig {
     }
 }
 
+/// Factor the sketched Hessian, falling back to the exact Hessian if the
+/// sketch is numerically unusable (the fixed-size method has no growth
+/// schedule to retry with, so the ladder here is jitter — inside the
+/// factorization — then exact). The rung climbed lands in
+/// [`SolveReport::recovery`].
+fn factor_or_exact(sa: Matrix, problem: &RidgeProblem, report: &mut SolveReport) -> WoodburyCache {
+    match WoodburyCache::new(sa, problem.nu) {
+        Ok(cache) => {
+            report.recovery.escalate(cache.recovery());
+            cache
+        }
+        Err(_) => {
+            report.recovery.escalate(RecoveryRung::Exact);
+            WoodburyCache::new(problem.a.dense().into_owned(), problem.nu)
+                .expect("recovery ladder exhausted: exact ridge Hessian would not factor")
+        }
+    }
+}
+
 /// Run fixed-size IHS from `x0`; the embedding is drawn from `seed`.
 pub fn solve(
     problem: &RidgeProblem,
@@ -95,7 +115,7 @@ pub fn solve(
     let sa = s.apply_operand(&problem.a);
     report.sketch_time_s = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    let cache = WoodburyCache::new(sa, problem.nu);
+    let cache = factor_or_exact(sa, problem, &mut report);
     report.factor_time_s = t0.elapsed().as_secs_f64();
 
     // Inner loop is allocation-free (workspace buffers below); only the
@@ -137,7 +157,7 @@ pub fn solve(
             let sa = s.apply_operand(&problem.a);
             report.sketch_time_s += t0.elapsed().as_secs_f64();
             let t0 = Instant::now();
-            cache = WoodburyCache::new(sa, problem.nu);
+            cache = factor_or_exact(sa, problem, &mut report);
             report.factor_time_s += t0.elapsed().as_secs_f64();
         }
         cache.apply_inverse_into(&g, &mut ws_m, &mut gt);

@@ -23,6 +23,9 @@
 //! * [`api`] — the unified dispatch surface: the [`api::Solver`] trait,
 //!   round-trippable [`api::SolverSpec`] strings, and the solver
 //!   [`api::registry`]. New callers should go through this module.
+//! * [`error`] — the typed [`error::SolverError`] and the
+//!   [`error::RecoveryRung`] ladder accounting behind fault-tolerant
+//!   serving (jitter → resketch → exact-Hessian fallback).
 
 pub mod adaptive;
 pub mod api;
@@ -30,6 +33,7 @@ pub mod block;
 pub mod cg;
 pub mod direct;
 pub mod dual;
+pub mod error;
 pub mod ihs;
 pub mod path;
 pub mod pcg;
@@ -37,6 +41,7 @@ pub mod session;
 pub mod woodbury;
 
 pub use api::{registry, Solver, SolverSpec};
+pub use error::{RecoveryRung, SolverError};
 
 use crate::linalg::{axpy, dot, norm2, Operand};
 use std::sync::Arc;
@@ -302,6 +307,9 @@ pub struct SolveReport {
     pub m_trace: Vec<usize>,
     /// Whether the stop rule was met (vs. iteration cap).
     pub converged: bool,
+    /// Highest recovery-ladder rung any step of the solve needed
+    /// (`none` on a healthy solve; see [`error::RecoveryRung`]).
+    pub recovery: RecoveryRung,
 }
 
 impl SolveReport {

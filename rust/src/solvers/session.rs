@@ -35,14 +35,33 @@
 //! The coordinator's model registry
 //! ([`crate::coordinator::registry::Registry`]) wraps one `ModelSession`
 //! per registered model behind a mutex and adds LRU byte-budget eviction.
+//!
+//! # Transactional semantics
+//!
+//! Every mutating session call — [`ModelSession::solve`],
+//! [`ModelSession::solve_rhs`], [`ModelSession::solve_block`],
+//! [`ModelSession::append`] and the pending-row flush — is
+//! all-or-nothing. On success the new sketch/factorization state, warm
+//! start and caches are committed together; on *any* failure (invalid
+//! input, numerical-recovery exhaustion, an expired deadline, or a
+//! caught panic) the session is restored to its exact pre-call state,
+//! so the next query answers bitwise-identically to a session that
+//! never saw the failed call. Failed calls therefore cannot poison a
+//! registered model: errors are reported, state is not corrupted.
+//! Only the query counters advance on a failed call (failures are
+//! still work the session performed).
 
 use super::adaptive::{AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver};
 use super::block;
+use super::error::{panic_message, SolverError};
 use super::woodbury::WoodburyCache;
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{Matrix, Operand};
 use crate::sketch::SketchKind;
+use crate::util::failpoint;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Maximum number of `(nu, eps) -> solution` entries retained per session
 /// (evicted least-recently-used; each entry is one length-`d` vector plus
@@ -214,29 +233,86 @@ impl ModelSession {
             return Err("non-finite entry in appended rows".into());
         }
 
+        // All-or-nothing from here: snapshot everything the mutation
+        // touches, run the mutating body under an unwind guard, and roll
+        // back on any error or panic — a failed append leaves the model
+        // exactly as it was.
+        let n0 = self.n();
+        let atb_snapshot = self.atb.clone();
+        let pending_snapshot = self.pending.clone();
+        let state_snapshot = self.state.clone();
+        let solutions_saved = std::mem::take(&mut self.solutions);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            self.append_commit(&delta_a, &delta_b, refresh)
+        }));
+        match outcome {
+            Ok(Ok(refreshed)) => {
+                Ok(AppendOutcome { rows_added: dn, n: self.n(), m: self.m(), refreshed })
+            }
+            Ok(Err(e)) => {
+                self.rollback_append(n0, atb_snapshot, pending_snapshot, state_snapshot);
+                self.solutions = solutions_saved;
+                Err(e.into())
+            }
+            Err(panic) => {
+                self.rollback_append(n0, atb_snapshot, pending_snapshot, state_snapshot);
+                self.solutions = solutions_saved;
+                Err(SolverError::Internal(panic_message(&*panic)).into())
+            }
+        }
+    }
+
+    /// The mutating body of [`ModelSession::append`]; inputs are already
+    /// validated and the caller holds the rollback snapshot.
+    fn append_commit(
+        &mut self,
+        delta_a: &Operand,
+        delta_b: &[f64],
+        refresh: AppendRefresh,
+    ) -> Result<bool, SolverError> {
         // O(Δn d) bookkeeping: atb += ΔA^T Δb, then grow the operand and
         // observations in place.
-        delta_a.matvec_t_add(&delta_b, &mut self.atb);
-        self.b.extend_from_slice(&delta_b);
+        delta_a.matvec_t_add(delta_b, &mut self.atb);
+        self.b.extend_from_slice(delta_b);
         // Queue the delta for the sketch before growing the operand (the
         // engine needs exactly the new rows). With no solver state yet
         // there is nothing to refresh — the first solve sketches the full
         // grown operand from scratch.
         if self.state.is_some() {
             match &mut self.pending {
-                Some(p) => p.append_rows(&delta_a),
+                Some(p) => p.append_rows(delta_a),
                 None => self.pending = Some(delta_a.clone()),
             }
         }
-        Arc::make_mut(&mut self.a).append_rows(&delta_a);
-        // Cached solutions answered the pre-append problem.
-        self.solutions.clear();
-
-        let refreshed = refresh == AppendRefresh::Eager && self.pending.is_some();
+        Arc::make_mut(&mut self.a).append_rows(delta_a);
+        // (Cached solutions answered the pre-append problem; the caller
+        // already moved them out and drops them on success.)
+        failpoint::check("session.append").map_err(SolverError::Internal)?;
         if refresh == AppendRefresh::Eager {
-            self.flush_pending();
+            self.flush_pending()?;
         }
-        Ok(AppendOutcome { rows_added: dn, n: self.n(), m: self.m(), refreshed })
+        Ok(refresh == AppendRefresh::Eager && self.state.is_some() && self.pending.is_none())
+    }
+
+    /// Undo the mutations of a failed [`ModelSession::append_commit`]:
+    /// shrink the operand and observations back to `n0` rows
+    /// ([`Operand::truncate_rows`] is the bitwise-exact inverse of the
+    /// append) and restore the cached `A^T b`, pending buffer and solver
+    /// state from the pre-call snapshot.
+    fn rollback_append(
+        &mut self,
+        n0: usize,
+        atb: Vec<f64>,
+        pending: Option<Operand>,
+        state: Option<AdaptiveSessionState>,
+    ) {
+        if self.n() > n0 {
+            Arc::make_mut(&mut self.a).truncate_rows(n0);
+        }
+        self.b.truncate(n0);
+        self.atb = atb;
+        self.pending = pending;
+        self.state = state;
     }
 
     /// Absorb pending appended rows into the sketch/factorization —
@@ -247,31 +323,65 @@ impl ModelSession {
     /// not reusable — but no sketch application is repeated). At the cap
     /// (no engine) the exact-Hessian cache takes the `O(Δn d^2)`
     /// incremental grow instead.
-    fn flush_pending(&mut self) {
-        let Some(delta) = self.pending.take() else { return };
-        let Some(state) = self.state.take() else {
-            // State was dropped (e.g. a caught panic): the next solve
-            // re-sketches the full operand, delta included.
-            return;
-        };
-        let (engine, cache, mut rng) = state.into_parts();
-        match engine {
-            Some(mut e) => {
-                e.append_rows(&delta, &mut rng);
-                let cache = WoodburyCache::new_scaled(
-                    e.sa_unnormalized().clone(),
-                    cache.nu(),
-                    e.scale(),
-                );
-                self.state = Some(AdaptiveSessionState::from_parts(Some(e), cache, rng));
+    /// Transactional: the new state is staged from clones and committed
+    /// together with clearing the pending buffer, so a failure (or caught
+    /// panic) leaves both exactly as they were. A *numerical* failure of
+    /// the incremental absorb takes the session-level recovery rung
+    /// instead of erroring: the resumable state is dropped and the next
+    /// solve re-sketches the grown operand from scratch (the appended
+    /// rows already live in the operand, so no data is lost). Injected
+    /// (`Internal`) and invalid-input failures propagate un-laddered.
+    fn flush_pending(&mut self) -> Result<(), SolverError> {
+        if self.pending.is_none() {
+            return Ok(());
+        }
+        if self.state.is_none() {
+            // No live sketch: the next solve sketches the full grown
+            // operand, delta included.
+            self.pending = None;
+            return Ok(());
+        }
+        failpoint::check("session.flush").map_err(SolverError::Internal)?;
+        let staged = self.state.clone().expect("checked above");
+        let delta = self.pending.clone().expect("checked above");
+        let outcome = catch_unwind(AssertUnwindSafe(
+            || -> Result<AdaptiveSessionState, SolverError> {
+                let (engine, cache, mut rng) = staged.into_parts();
+                match engine {
+                    Some(mut e) => {
+                        e.append_rows(&delta, &mut rng)?;
+                        let cache = WoodburyCache::new_scaled(
+                            e.sa_unnormalized().clone(),
+                            cache.nu(),
+                            e.scale(),
+                        )?;
+                        Ok(AdaptiveSessionState::from_parts(Some(e), cache, rng))
+                    }
+                    None => {
+                        // Exact-Hessian fallback: the cache rows are A
+                        // itself at scale 1 — append the new rows through
+                        // the incremental inner-Gram grow.
+                        let mut cache = cache;
+                        cache.grow(&delta.dense().into_owned(), 1.0)?;
+                        Ok(AdaptiveSessionState::from_parts(None, cache, rng))
+                    }
+                }
+            },
+        ));
+        match outcome {
+            Ok(Ok(new_state)) => {
+                self.state = Some(new_state);
+                self.pending = None;
+                Ok(())
             }
-            None => {
-                // Exact-Hessian fallback: the cache rows are A itself at
-                // scale 1 — append the new rows through the incremental
-                // inner-Gram grow.
-                let mut cache = cache;
-                cache.grow(&delta.dense().into_owned(), 1.0);
-                self.state = Some(AdaptiveSessionState::from_parts(None, cache, rng));
+            Ok(Err(e @ (SolverError::InvalidInput(_) | SolverError::Internal(_)))) => Err(e),
+            Ok(Err(_)) | Err(_) => {
+                // Session-level re-sketch rung: drop the resumable state;
+                // the rows are safe in the operand and the next solve
+                // rebuilds the sketch over all of them.
+                self.state = None;
+                self.pending = None;
+                Ok(())
             }
         }
     }
@@ -304,6 +414,16 @@ impl ModelSession {
     /// Total solves answered, and how many came from the solution cache.
     pub fn query_stats(&self) -> (u64, u64) {
         (self.queries, self.cache_hits)
+    }
+
+    /// Set (or clear) the wall-clock deadline for subsequent solves on
+    /// this session. The deadline is cooperative: the adaptive and block
+    /// solvers check it between accepted iterations and growth rounds
+    /// and return a structured `deadline exceeded` error once past it —
+    /// with the session state rolled back exactly as for any other
+    /// failed call. Cache hits are unaffected (they run no solver).
+    pub fn set_deadline(&mut self, deadline: Option<Instant>) {
+        self.config.deadline = deadline;
     }
 
     /// Approximate heap footprint in bytes: operand + observations +
@@ -358,7 +478,7 @@ impl ModelSession {
         let problem =
             RidgeProblem::from_parts(Arc::clone(&self.a), None, self.atb.clone(), nu);
         let x0 = self.warm.clone().unwrap_or_else(|| vec![0.0; problem.d()]);
-        let sol = self.run_adaptive(&problem, &x0, eps);
+        let sol = self.run_adaptive(&problem, &x0, eps)?;
 
         self.warm = Some(sol.x.clone());
         self.solutions.push(CachedSolution {
@@ -412,7 +532,7 @@ impl ModelSession {
         let atb = self.a.matvec_t(b);
         let problem = RidgeProblem::from_parts(Arc::clone(&self.a), None, atb, nu);
         let x0 = vec![0.0; problem.d()];
-        Ok(self.run_adaptive(&problem, &x0, eps))
+        Ok(self.run_adaptive(&problem, &x0, eps)?)
     }
 
     /// Solve at `nu` against a *batch* of `k` alternate right-hand sides
@@ -450,7 +570,7 @@ impl ModelSession {
         self.queries += bs.len() as u64;
         // Lazily appended rows must be in the sketch before the state can
         // resume (same contract as `run_adaptive`).
-        self.flush_pending();
+        self.flush_pending()?;
         // One SpMM forms every A^T b_j at once; column j then feeds
         // column j's cold-referenced stop target.
         let k = bs.len();
@@ -461,25 +581,32 @@ impl ModelSession {
             }
         }
         let atb = self.a.matmul_t(&bmat);
-        // `state.take()` without an unwind guard is deliberate (same
-        // policy as `run_adaptive`): if the solver panics mid-growth the
-        // engine/cache pair may be inconsistent (rows appended to one
-        // but not the other), and resuming it would fail the resume
-        // invariants on every later query. A server-side `catch_panic`
-        // therefore leaves the session with `state == None` — the next
-        // query safely re-sketches from scratch instead of poisoning
-        // the model.
-        let outcome = block::solve_block(
-            &self.a,
-            nu,
-            &atb,
-            eps,
-            &self.config,
-            self.state.take(),
-            self.seed,
-        );
-        self.state = Some(outcome.state);
-        Ok(outcome.solutions)
+        // Transactional: snapshot the resumable state; on any failure
+        // (structured error or caught panic) restore it, so a failed
+        // batch cannot poison the model — the next query resumes the
+        // exact pre-call sketch/factorization.
+        let snapshot = self.state.clone();
+        let taken = self.state.take();
+        let config = self.config.clone();
+        let seed = self.seed;
+        let a = &self.a;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            block::solve_block(a, nu, &atb, eps, &config, taken, seed)
+        }));
+        match outcome {
+            Ok(Ok(out)) => {
+                self.state = Some(out.state);
+                Ok(out.solutions)
+            }
+            Ok(Err(e)) => {
+                self.state = snapshot;
+                Err(e.into())
+            }
+            Err(panic) => {
+                self.state = snapshot;
+                Err(SolverError::Internal(panic_message(&*panic)).into())
+            }
+        }
     }
 
     /// Predict on new rows (each of length `d`): returns `row · x(nu)`
@@ -516,10 +643,15 @@ impl ModelSession {
     /// effectively unattainable (the solver would grow to the cap and
     /// spin to `max_iters`). Rescaling the tolerance by
     /// `||A^T b|| / ||g(x0)||` pins the absolute target instead.
-    fn run_adaptive(&mut self, problem: &RidgeProblem, x0: &[f64], eps: f64) -> Solution {
+    fn run_adaptive(
+        &mut self,
+        problem: &RidgeProblem,
+        x0: &[f64],
+        eps: f64,
+    ) -> Result<Solution, SolverError> {
         // Lazily appended rows must be in the sketch before the state can
         // resume (the engine's n must match the grown problem).
-        self.flush_pending();
+        self.flush_pending()?;
         // Cold starts need no rescale: g(0) = -A^T b, so the raw relative
         // rule already measures against `cold_scale` and the extra O(nnz)
         // gradient pass is skipped. Warm starts pay one extra gradient to
@@ -539,20 +671,37 @@ impl ModelSession {
             }
         };
         let stop = StopRule::GradientNorm { tol };
-        // No unwind guard on the taken state, deliberately: a panicking
-        // solve may leave the sketch/factor pair inconsistent, so a
-        // caught panic (coordinator `catch_panic`) drops the cached
-        // state and the next query re-sketches from scratch rather than
-        // resuming a corrupt pair.
-        let solver = match self.state.take() {
-            Some(state) => {
-                AdaptiveSolver::resume(problem, x0, self.config.clone(), stop, state)
+        // Transactional: snapshot the resumable state before the solver
+        // consumes it; restore on any failure (structured error or
+        // caught panic) so the next query resumes the exact pre-call
+        // sketch/factorization instead of a possibly-inconsistent pair.
+        let snapshot = self.state.clone();
+        let taken = self.state.take();
+        let config = self.config.clone();
+        let seed = self.seed;
+        let outcome = catch_unwind(AssertUnwindSafe(
+            || -> Result<(Solution, AdaptiveSessionState), SolverError> {
+                let solver = match taken {
+                    Some(state) => AdaptiveSolver::resume(problem, x0, config, stop, state)?,
+                    None => AdaptiveSolver::new(problem, x0, config, stop, seed)?,
+                };
+                solver.run_with_state()
+            },
+        ));
+        match outcome {
+            Ok(Ok((sol, state))) => {
+                self.state = Some(state);
+                Ok(sol)
             }
-            None => AdaptiveSolver::new(problem, x0, self.config.clone(), stop, self.seed),
-        };
-        let (sol, state) = solver.run_with_state();
-        self.state = Some(state);
-        sol
+            Ok(Err(e)) => {
+                self.state = snapshot;
+                Err(e)
+            }
+            Err(panic) => {
+                self.state = snapshot;
+                Err(SolverError::Internal(panic_message(&*panic)))
+            }
+        }
     }
 }
 
@@ -1002,5 +1151,51 @@ mod tests {
         );
         assert!(s.solve_block(f64::NAN, &[vec![1.0; 64]], 1e-8).is_err());
         assert_eq!(s.m(), 0, "rejected batches must not touch session state");
+    }
+
+    #[test]
+    fn expired_deadline_rolls_back_and_leaves_session_usable() {
+        let mut s = session(128, 16, 50);
+        let clean = s.solve(0.5, 1e-8).unwrap();
+        let m0 = s.m();
+        // An already-expired deadline fails the very next (uncached)
+        // solve with a structured error...
+        s.set_deadline(Some(Instant::now()));
+        let err = s.solve(0.25, 1e-10).unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        assert_eq!(s.m(), m0, "failed solve must not mutate the sketch state");
+        // ...while cache hits never run the solver and still answer.
+        let hit = s.solve(0.5, 1e-8).unwrap();
+        assert_eq!(hit.x, clean.x);
+        // Clearing the deadline restores full service — bitwise the same
+        // state as before the failed call.
+        s.set_deadline(None);
+        let fresh = s.solve(0.25, 1e-10).unwrap();
+        assert!(fresh.report.converged);
+    }
+
+    #[test]
+    fn expired_deadline_fails_block_solves_without_poisoning_state() {
+        let mut s = session(128, 16, 51);
+        s.solve(0.5, 1e-8).unwrap();
+        let m0 = s.m();
+        let bs: Vec<Vec<f64>> =
+            (0..3).map(|j| (0..128).map(|i| ((i + j) as f64 * 0.09).sin()).collect()).collect();
+        s.set_deadline(Some(Instant::now()));
+        let err = s.solve_block(0.4, &bs, 1e-10).unwrap_err();
+        assert!(err.contains("deadline"), "{err}");
+        assert_eq!(s.m(), m0, "failed batch must not mutate the sketch state");
+        s.set_deadline(None);
+        let sols = s.solve_block(0.4, &bs, 1e-10).unwrap();
+        assert!(sols.iter().all(|x| x.report.converged));
+    }
+
+    #[test]
+    fn healthy_session_reports_no_recovery_rung() {
+        use crate::solvers::error::RecoveryRung;
+        let mut s = session(128, 16, 52);
+        let sol = s.solve(0.5, 1e-9).unwrap();
+        assert_eq!(sol.report.recovery, RecoveryRung::None);
+        assert_eq!(sol.report.recovery.label(), "none");
     }
 }

@@ -34,8 +34,21 @@
 //! * past `m > d` it maintains the `d x d` inner Gram incrementally
 //!   (`O(Δm d^2)` per growth) and refactors at `O(d^3)`.
 
+//! # Failure semantics
+//!
+//! Every fallible operation (`new*`, `set_nu`, `grow`) is
+//! **transactional**: it stages its new Gram blocks and factorization in
+//! locals and commits only after the Cholesky succeeds, so an `Err`
+//! leaves the cache exactly as it was — no half-taken Gram, no `nu`
+//! re-key without a matching factor. Factorizations retry with
+//! escalating diagonal jitter ([`Cholesky::factor_with_jitter`]); the
+//! rung used is recorded in [`WoodburyCache::recovery`] so degraded
+//! factorizations are visible to the solvers' reports.
+
+use super::error::{RecoveryRung, SolverError};
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::{axpy, scale as scale_vec, Matrix};
+use crate::util::failpoint;
 
 /// Which factorization branch is active.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +60,7 @@ pub enum WoodburyMode {
 }
 
 /// Cached factorization of the sketched Hessian.
+#[derive(Clone)]
 pub struct WoodburyCache {
     /// Sketch rows as provided — unnormalized when `scale != 1`.
     sa: Matrix,
@@ -61,12 +75,15 @@ pub struct WoodburyCache {
     /// Direct: unnormalized inner Gram `sa^T sa` (`d x d`), updated by
     /// `O(Δm d^2)` rank-`Δm` additions on growth.
     inner_gram: Option<Matrix>,
+    /// Highest recovery rung any factorization of this cache has needed
+    /// (`Jitter` when `factor_with_jitter` had to perturb the diagonal).
+    recovery: RecoveryRung,
 }
 
 impl WoodburyCache {
     /// Factor for an already-normalized sketched matrix `SA` (`m x d`)
     /// and `nu` — the one-shot path used by the fixed-size solvers.
-    pub fn new(sa: Matrix, nu: f64) -> Self {
+    pub fn new(sa: Matrix, nu: f64) -> Result<Self, SolverError> {
         Self::new_scaled(sa, nu, 1.0)
     }
 
@@ -74,16 +91,20 @@ impl WoodburyCache {
     /// is `scale * sa` (the incremental growth path: the `1/sqrt(m)`
     /// normalization is folded into the solve so growth never rescales
     /// stored rows).
-    pub fn new_scaled(sa: Matrix, nu: f64, scale: f64) -> Self {
-        assert!(nu > 0.0);
-        assert!(scale > 0.0 && scale.is_finite());
+    pub fn new_scaled(sa: Matrix, nu: f64, scale: f64) -> Result<Self, SolverError> {
+        if !(nu > 0.0 && nu.is_finite()) {
+            return Err(SolverError::invalid(format!("invalid nu: {nu}")));
+        }
+        if !(scale > 0.0 && scale.is_finite()) {
+            return Err(SolverError::invalid(format!("invalid sketch scale: {scale}")));
+        }
         let (m, d) = (sa.rows(), sa.cols());
         let nu2 = nu * nu;
         let scale2 = scale * scale;
         if m <= d {
             let u = sa.gram_outer(); // unnormalized (S̃A)(S̃A)^T, m x m
-            let chol = factor_small(&u, scale2, nu2);
-            Self {
+            let (chol, recovery) = factor_small(&u, scale2, nu2)?;
+            Ok(Self {
                 sa,
                 scale2,
                 nu2,
@@ -91,11 +112,12 @@ impl WoodburyCache {
                 chol,
                 outer_gram: Some(u),
                 inner_gram: None,
-            }
+                recovery,
+            })
         } else {
             let inner = sa.gram(); // unnormalized (S̃A)^T(S̃A), d x d
-            let chol = factor_direct(&inner, scale2, nu2);
-            Self {
+            let (chol, recovery) = factor_direct(&inner, scale2, nu2)?;
+            Ok(Self {
                 sa,
                 scale2,
                 nu2,
@@ -103,7 +125,8 @@ impl WoodburyCache {
                 chol,
                 outer_gram: None,
                 inner_gram: Some(inner),
-            }
+                recovery,
+            })
         }
     }
 
@@ -127,6 +150,12 @@ impl WoodburyCache {
         self.nu2.sqrt()
     }
 
+    /// Highest recovery rung any factorization of this cache has needed
+    /// (solvers escalate this into their [`super::SolveReport`]).
+    pub fn recovery(&self) -> RecoveryRung {
+        self.recovery
+    }
+
     /// Re-key the cached factorization to a new regularization level.
     ///
     /// The Gram blocks (`(S̃A)(S̃A)^T` or `(S̃A)^T(S̃A)`) do not depend on
@@ -136,23 +165,33 @@ impl WoodburyCache {
     /// reuse one grown sketch across a whole regularization path
     /// (arXiv:2104.14101's cross-`nu` preconditioner reuse). A no-op when
     /// `nu` is unchanged.
-    pub fn set_nu(&mut self, nu: f64) {
-        assert!(nu > 0.0 && nu.is_finite());
+    ///
+    /// Transactional: the new factorization is staged in a local and
+    /// committed together with `nu`, so on `Err` the cache still answers
+    /// at its previous regularization level.
+    pub fn set_nu(&mut self, nu: f64) -> Result<(), SolverError> {
+        if !(nu > 0.0 && nu.is_finite()) {
+            return Err(SolverError::invalid(format!("invalid nu: {nu}")));
+        }
         let nu2 = nu * nu;
         if nu2 == self.nu2 {
-            return;
+            return Ok(());
         }
-        self.nu2 = nu2;
-        match self.mode {
+        failpoint::check("woodbury.set_nu").map_err(SolverError::Internal)?;
+        let (chol, rung) = match self.mode {
             WoodburyMode::SmallSketch => {
                 let u = self.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
-                self.chol = factor_small(u, self.scale2, nu2);
+                factor_small(u, self.scale2, nu2)?
             }
             WoodburyMode::Direct => {
                 let inner = self.inner_gram.as_ref().expect("Direct keeps inner_gram");
-                self.chol = factor_direct(inner, self.scale2, nu2);
+                factor_direct(inner, self.scale2, nu2)?
             }
-        }
+        };
+        self.nu2 = nu2;
+        self.chol = chol;
+        self.recovery.escalate(rung);
+        Ok(())
     }
 
     /// Approximate heap footprint in bytes (sketch rows + cached Gram +
@@ -179,12 +218,26 @@ impl WoodburyCache {
     /// the current scale unchanged takes the bordered-Cholesky fast path
     /// (fixed-scale row streaming — the adaptive solver's `1/sqrt(m)`
     /// rescale always lands in the Gram-reusing refactor branch instead).
-    pub fn grow(&mut self, new_rows: &Matrix, new_scale: f64) {
-        assert_eq!(new_rows.cols(), self.sa.cols(), "grow: column mismatch");
-        assert!(new_scale > 0.0 && new_scale.is_finite());
-        if new_rows.rows() == 0 {
-            return;
+    ///
+    /// Transactional: new Gram blocks and the new factorization are
+    /// staged in locals and committed only after the Cholesky succeeds,
+    /// so on `Err` the cache keeps its previous rows and factorization
+    /// intact (the old Gram is never `take()`n).
+    pub fn grow(&mut self, new_rows: &Matrix, new_scale: f64) -> Result<(), SolverError> {
+        if new_rows.cols() != self.sa.cols() {
+            return Err(SolverError::invalid(format!(
+                "grow: column mismatch ({} vs {})",
+                new_rows.cols(),
+                self.sa.cols()
+            )));
         }
+        if !(new_scale > 0.0 && new_scale.is_finite()) {
+            return Err(SolverError::invalid(format!("invalid sketch scale: {new_scale}")));
+        }
+        if new_rows.rows() == 0 {
+            return Ok(());
+        }
+        failpoint::check("woodbury.grow").map_err(SolverError::Internal)?;
         let d = self.sa.cols();
         let m_new = self.sa.rows() + new_rows.rows();
         let new_scale2 = new_scale * new_scale;
@@ -192,10 +245,11 @@ impl WoodburyCache {
         match self.mode {
             WoodburyMode::SmallSketch if m_new <= d => {
                 // O(Δm m d) cross + O(Δm^2 d) corner; the old m x m block
-                // of U is reused verbatim.
+                // of U is reused verbatim (read, not taken — a failed
+                // factor must leave it in place).
                 let cross = new_rows.matmul_nt(&self.sa); // Δm x m
                 let corner = new_rows.gram_outer(); // Δm x Δm
-                let u_old = self.outer_gram.take().expect("SmallSketch keeps outer_gram");
+                let u_old = self.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
                 let m_old = u_old.rows();
                 let dm = cross.rows();
                 let mut u = Matrix::zeros(m_new, m_new);
@@ -212,7 +266,8 @@ impl WoodburyCache {
 
                 let bordered = if new_scale2 == self.scale2 {
                     // Scale unchanged: K grows by a plain border — extend
-                    // the factor in O(Δm m^2).
+                    // the factor in O(Δm m^2). `extend_bordered` leaves
+                    // the factor untouched when the border is indefinite.
                     let mut cross_k = cross.clone();
                     scale_vec(self.scale2, cross_k.as_mut_slice());
                     let mut corner_k = corner.clone();
@@ -226,7 +281,9 @@ impl WoodburyCache {
                     // Rescaled (or borderline-indefinite corner): rebuild
                     // K = nu^2 I + scale^2 U from the cached Gram — O(m^3)
                     // factor, but no O(m^2 d) Gram recompute.
-                    self.chol = factor_small(&u, new_scale2, self.nu2);
+                    let (chol, rung) = factor_small(&u, new_scale2, self.nu2)?;
+                    self.chol = chol;
+                    self.recovery.escalate(rung);
                 }
                 self.outer_gram = Some(u);
                 self.sa.append_rows(new_rows);
@@ -234,12 +291,15 @@ impl WoodburyCache {
             }
             WoodburyMode::SmallSketch => {
                 // Crossing m > d: switch branches. The d x d inner Gram is
-                // built once here (O(m d^2)) and maintained incrementally
-                // afterwards.
+                // built once here as (S̃A)^T(S̃A) + ΔA^T ΔA (O(m d^2)) and
+                // maintained incrementally afterwards.
+                let mut inner = self.sa.gram();
+                inner.add_scaled(1.0, &new_rows.gram());
+                let (chol, rung) = factor_direct(&inner, new_scale2, self.nu2)?;
                 self.sa.append_rows(new_rows);
                 self.scale2 = new_scale2;
-                let inner = self.sa.gram();
-                self.chol = factor_direct(&inner, self.scale2, self.nu2);
+                self.chol = chol;
+                self.recovery.escalate(rung);
                 self.inner_gram = Some(inner);
                 self.outer_gram = None;
                 self.mode = WoodburyMode::Direct;
@@ -247,14 +307,18 @@ impl WoodburyCache {
             WoodburyMode::Direct => {
                 // Rank-Δm update of the inner Gram: O(Δm d^2) + O(d^3)
                 // refactor, independent of the accumulated m.
-                let mut inner = self.inner_gram.take().expect("Direct keeps inner_gram");
+                let mut inner =
+                    self.inner_gram.as_ref().expect("Direct keeps inner_gram").clone();
                 inner.add_scaled(1.0, &new_rows.gram());
+                let (chol, rung) = factor_direct(&inner, new_scale2, self.nu2)?;
                 self.sa.append_rows(new_rows);
                 self.scale2 = new_scale2;
-                self.chol = factor_direct(&inner, self.scale2, self.nu2);
+                self.chol = chol;
+                self.recovery.escalate(rung);
                 self.inner_gram = Some(inner);
             }
         }
+        Ok(())
     }
 
     /// Apply `H_S^{-1} g` into `out` (length `d`), allocation-free in the
@@ -343,22 +407,35 @@ impl WoodburyCache {
     }
 }
 
-/// Factor `K = nu^2 I + scale2 * U` for the small-sketch branch.
-fn factor_small(u: &Matrix, scale2: f64, nu2: f64) -> Cholesky {
+/// Factor `K = nu^2 I + scale2 * U` for the small-sketch branch, with
+/// the jitter ladder. Returns the rung used (`Jitter` when the diagonal
+/// had to be perturbed) so callers can surface degraded factorizations.
+fn factor_small(u: &Matrix, scale2: f64, nu2: f64) -> Result<(Cholesky, RecoveryRung), SolverError> {
+    failpoint::check("woodbury.factor").map_err(SolverError::NumericalBreakdown)?;
     let mut k = u.clone();
     scale_vec(scale2, k.as_mut_slice());
     k.add_diag(nu2);
-    let (chol, _) = Cholesky::factor_with_jitter(&k, 8).expect("K = nu^2 I + GG^T is PD");
-    chol
+    let (chol, jitter) = Cholesky::factor_with_jitter(&k, 8)
+        .map_err(|e| SolverError::breakdown(format!("sketched Gram K: {e}")))?;
+    let rung = if jitter > 0.0 { RecoveryRung::Jitter } else { RecoveryRung::None };
+    Ok((chol, rung))
 }
 
-/// Factor `H = scale2 * inner + nu^2 I` for the direct branch.
-fn factor_direct(inner: &Matrix, scale2: f64, nu2: f64) -> Cholesky {
+/// Factor `H = scale2 * inner + nu^2 I` for the direct branch, with the
+/// jitter ladder (see [`factor_small`]).
+fn factor_direct(
+    inner: &Matrix,
+    scale2: f64,
+    nu2: f64,
+) -> Result<(Cholesky, RecoveryRung), SolverError> {
+    failpoint::check("woodbury.factor").map_err(SolverError::NumericalBreakdown)?;
     let mut h = inner.clone();
     scale_vec(scale2, h.as_mut_slice());
     h.add_diag(nu2);
-    let (chol, _) = Cholesky::factor_with_jitter(&h, 8).expect("H_S is PD");
-    chol
+    let (chol, jitter) = Cholesky::factor_with_jitter(&h, 8)
+        .map_err(|e| SolverError::breakdown(format!("sketched Hessian: {e}")))?;
+    let rung = if jitter > 0.0 { RecoveryRung::Jitter } else { RecoveryRung::None };
+    Ok((chol, rung))
 }
 
 #[cfg(test)]
@@ -383,7 +460,7 @@ mod tests {
     #[test]
     fn small_sketch_branch_matches_direct_inverse() {
         let sa = random_sa(4, 12, 1);
-        let cache = WoodburyCache::new(sa, 0.8);
+        let cache = WoodburyCache::new(sa, 0.8).unwrap();
         assert_eq!(cache.mode(), WoodburyMode::SmallSketch);
         check_inverse(&cache, 12, 1e-9);
     }
@@ -391,7 +468,7 @@ mod tests {
     #[test]
     fn direct_branch_matches() {
         let sa = random_sa(20, 6, 2);
-        let cache = WoodburyCache::new(sa, 0.5);
+        let cache = WoodburyCache::new(sa, 0.5).unwrap();
         assert_eq!(cache.mode(), WoodburyMode::Direct);
         check_inverse(&cache, 6, 1e-9);
     }
@@ -402,7 +479,7 @@ mod tests {
         // explicitly built Direct-branch cache on the same data.
         let sa = random_sa(8, 8, 3);
         let nu = 1.1;
-        let small = WoodburyCache::new(sa.clone(), nu);
+        let small = WoodburyCache::new(sa.clone(), nu).unwrap();
         let mut h = sa.gram();
         h.add_diag(nu * nu);
         let chol = Cholesky::factor(&h).unwrap();
@@ -419,7 +496,7 @@ mod tests {
         // The adaptive algorithm starts at m = 1; the rank-one Woodbury
         // correction must still be exact.
         let sa = random_sa(1, 10, 4);
-        let cache = WoodburyCache::new(sa, 0.3);
+        let cache = WoodburyCache::new(sa, 0.3).unwrap();
         let g = vec![1.0; 10];
         let z = cache.apply_inverse(&g);
         let hz = cache.h_s().matvec(&z);
@@ -433,7 +510,7 @@ mod tests {
         // r = 1/2 g^T H_S^{-1} g > 0 for g != 0 (H_S is PD) — the quantity
         // Algorithm 1 monitors (Lemma 1).
         let sa = random_sa(5, 9, 5);
-        let cache = WoodburyCache::new(sa, 0.6);
+        let cache = WoodburyCache::new(sa, 0.6).unwrap();
         let g: Vec<f64> = (0..9).map(|i| (i as f64 - 4.0) * 0.1).collect();
         let z = cache.apply_inverse(&g);
         let r = 0.5 * crate::linalg::dot(&g, &z);
@@ -452,8 +529,8 @@ mod tests {
             scale_vec(scale, s.as_mut_slice());
             s
         };
-        let a = WoodburyCache::new_scaled(sa, 0.7, scale);
-        let b = WoodburyCache::new(scaled_rows, 0.7);
+        let a = WoodburyCache::new_scaled(sa, 0.7, scale).unwrap();
+        let b = WoodburyCache::new(scaled_rows, 0.7).unwrap();
         let g: Vec<f64> = (0..16).map(|i| (i as f64 * 0.2).sin()).collect();
         let za = a.apply_inverse(&g);
         let zb = b.apply_inverse(&g);
@@ -471,13 +548,13 @@ mod tests {
         let full = random_sa(8, d, 7);
         let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
         let nu = 0.9;
-        let mut cache = WoodburyCache::new_scaled(rows(0, 2), nu, 1.0 / (2f64).sqrt());
+        let mut cache = WoodburyCache::new_scaled(rows(0, 2), nu, 1.0 / (2f64).sqrt()).unwrap();
         for &(m0, m1) in &[(2usize, 4usize), (4, 8)] {
             let new_scale = 1.0 / (m1 as f64).sqrt();
-            cache.grow(&rows(m0, m1), new_scale);
+            cache.grow(&rows(m0, m1), new_scale).unwrap();
             assert_eq!(cache.m(), m1);
             assert_eq!(cache.mode(), WoodburyMode::SmallSketch);
-            let fresh = WoodburyCache::new_scaled(rows(0, m1), nu, new_scale);
+            let fresh = WoodburyCache::new_scaled(rows(0, m1), nu, new_scale).unwrap();
             let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.17).cos()).collect();
             let zg = cache.apply_inverse(&g);
             let zf = fresh.apply_inverse(&g);
@@ -494,9 +571,9 @@ mod tests {
         let d = 20;
         let full = random_sa(10, d, 8);
         let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
-        let mut cache = WoodburyCache::new_scaled(rows(0, 6), 0.5, 1.0);
-        cache.grow(&rows(6, 10), 1.0);
-        let fresh = WoodburyCache::new_scaled(rows(0, 10), 0.5, 1.0);
+        let mut cache = WoodburyCache::new_scaled(rows(0, 6), 0.5, 1.0).unwrap();
+        cache.grow(&rows(6, 10), 1.0).unwrap();
+        let fresh = WoodburyCache::new_scaled(rows(0, 10), 0.5, 1.0).unwrap();
         let g: Vec<f64> = (0..d).map(|i| ((i * i) as f64 * 0.05).sin()).collect();
         let zg = cache.apply_inverse(&g);
         let zf = fresh.apply_inverse(&g);
@@ -513,13 +590,13 @@ mod tests {
         let full = random_sa(12, d, 9);
         let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
         let nu = 0.8;
-        let mut cache = WoodburyCache::new_scaled(rows(0, 4), nu, 0.5);
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), nu, 0.5).unwrap();
         assert_eq!(cache.mode(), WoodburyMode::SmallSketch);
-        cache.grow(&rows(4, 8), 0.35);
+        cache.grow(&rows(4, 8), 0.35).unwrap();
         assert_eq!(cache.mode(), WoodburyMode::Direct);
-        cache.grow(&rows(8, 12), 0.29);
+        cache.grow(&rows(8, 12), 0.29).unwrap();
         assert_eq!(cache.m(), 12);
-        let fresh = WoodburyCache::new_scaled(rows(0, 12), nu, 0.29);
+        let fresh = WoodburyCache::new_scaled(rows(0, 12), nu, 0.29).unwrap();
         let g: Vec<f64> = (0..d).map(|i| (i as f64 + 0.5) * 0.3).collect();
         let zg = cache.apply_inverse(&g);
         let zf = fresh.apply_inverse(&g);
@@ -537,12 +614,12 @@ mod tests {
         for (m, d) in [(5usize, 14usize), (18, 6)] {
             let sa = random_sa(m, d, 21);
             let scale = 0.4;
-            let mut cache = WoodburyCache::new_scaled(sa.clone(), 0.9, scale);
+            let mut cache = WoodburyCache::new_scaled(sa.clone(), 0.9, scale).unwrap();
             let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.11).cos()).collect();
             for nu in [0.9, 0.3, 2.5, 0.3] {
-                cache.set_nu(nu);
+                cache.set_nu(nu).unwrap();
                 assert!((cache.nu() - nu).abs() < 1e-15);
-                let fresh = WoodburyCache::new_scaled(sa.clone(), nu, scale);
+                let fresh = WoodburyCache::new_scaled(sa.clone(), nu, scale).unwrap();
                 let za = cache.apply_inverse(&g);
                 let zf = fresh.apply_inverse(&g);
                 for i in 0..d {
@@ -557,10 +634,10 @@ mod tests {
         let d = 10;
         let full = random_sa(8, d, 22);
         let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
-        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 1.2, 0.5);
-        cache.set_nu(0.6);
-        cache.grow(&rows(4, 8), 0.35);
-        let fresh = WoodburyCache::new_scaled(rows(0, 8), 0.6, 0.35);
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 1.2, 0.5).unwrap();
+        cache.set_nu(0.6).unwrap();
+        cache.grow(&rows(4, 8), 0.35).unwrap();
+        let fresh = WoodburyCache::new_scaled(rows(0, 8), 0.6, 0.35).unwrap();
         let g: Vec<f64> = (0..d).map(|i| (i as f64 + 1.0) * 0.07).collect();
         let za = cache.apply_inverse(&g);
         let zf = fresh.apply_inverse(&g);
@@ -575,7 +652,7 @@ mod tests {
         // agree column-wise with the vector path to roundoff.
         for (m, d) in [(5usize, 14usize), (18, 6)] {
             let sa = random_sa(m, d, 30);
-            let cache = WoodburyCache::new_scaled(sa, 0.7, 0.5);
+            let cache = WoodburyCache::new_scaled(sa, 0.7, 0.5).unwrap();
             let g = Matrix::from_fn(d, 4, |i, j| ((i * 4 + j) as f64 * 0.19).sin());
             let blk = cache.apply_inverse_block(&g);
             for j in 0..4 {
@@ -598,9 +675,9 @@ mod tests {
         let d = 12;
         let full = random_sa(8, d, 31);
         let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
-        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 0.9, 0.5);
-        cache.grow(&rows(4, 8), 0.35);
-        cache.set_nu(0.4);
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 0.9, 0.5).unwrap();
+        cache.grow(&rows(4, 8), 0.35).unwrap();
+        cache.set_nu(0.4).unwrap();
         let g = Matrix::from_fn(d, 3, |i, j| ((i + j) as f64 * 0.23).cos());
         let blk = cache.apply_inverse_block(&g);
         // H_S * blk must reproduce g column by column.
@@ -615,12 +692,34 @@ mod tests {
     }
 
     #[test]
+    fn invalid_inputs_are_structured_errors_and_leave_cache_usable() {
+        let sa = random_sa(4, 9, 11);
+        let mut cache = WoodburyCache::new(sa, 0.8).unwrap();
+        assert_eq!(cache.recovery(), RecoveryRung::None);
+        let g: Vec<f64> = (0..9).map(|i| i as f64 * 0.2).collect();
+        let before = cache.apply_inverse(&g);
+        for nu in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            match cache.set_nu(nu) {
+                Err(SolverError::InvalidInput(m)) => assert!(m.contains("invalid nu")),
+                other => panic!("nu={nu}: expected InvalidInput, got {other:?}"),
+            }
+        }
+        match cache.grow(&Matrix::zeros(2, 5), 0.5) {
+            Err(SolverError::InvalidInput(_)) => {}
+            other => panic!("expected InvalidInput, got {other:?}"),
+        }
+        // The cache still answers exactly as before any rejected call.
+        assert_eq!(cache.apply_inverse(&g), before);
+        assert!(WoodburyCache::new(random_sa(3, 6, 12), f64::NAN).is_err());
+    }
+
+    #[test]
     fn grow_by_zero_rows_is_a_noop() {
         let sa = random_sa(3, 10, 10);
-        let mut cache = WoodburyCache::new_scaled(sa, 0.6, 0.5);
+        let mut cache = WoodburyCache::new_scaled(sa, 0.6, 0.5).unwrap();
         let g: Vec<f64> = (0..10).map(|i| i as f64 * 0.1).collect();
         let before = cache.apply_inverse(&g);
-        cache.grow(&Matrix::zeros(0, 10), 0.5);
+        cache.grow(&Matrix::zeros(0, 10), 0.5).unwrap();
         assert_eq!(cache.m(), 3);
         let after = cache.apply_inverse(&g);
         assert_eq!(before, after);

@@ -1,0 +1,201 @@
+//! Deterministic fault injection for the chaos/robustness test suite.
+//!
+//! A *failpoint* is a named hook compiled into fallible paths of the
+//! numerical core and the serving stack (sketch apply/grow, factorization,
+//! session append/flush, server I/O). In normal operation every hook is a
+//! single relaxed atomic load — nothing is armed and nothing fires. Tests
+//! and benches arm sites explicitly through [`arm`] / [`arm_spec`], or via
+//! the `EFFDIM_FAILPOINTS` environment variable (parsed by
+//! [`arm_from_env`], which the server calls at bind time so external chaos
+//! drivers can inject faults into a running process).
+//!
+//! Arming is **deterministic**: a site fires on its `hit_at`-th hit
+//! (1-based, counted per arming) and then disarms itself, so a test can
+//! express "the *second* factorization fails" and rerun it bitwise-
+//! reproducibly. There is no randomness and no time dependence.
+//!
+//! Spec grammar (env var and [`arm_spec`]):
+//!
+//! ```text
+//! EFFDIM_FAILPOINTS="site=action[:hit][,site=action[:hit]...]"
+//! action ∈ { error | panic | sleep-<millis> }
+//! ```
+//!
+//! e.g. `EFFDIM_FAILPOINTS="woodbury.factor=error:2,session.flush=panic"`.
+//!
+//! This module is a test/bench facility: production code never arms it,
+//! and an unarmed process pays one atomic load per hook.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Return an injected error from the instrumented operation.
+    Error,
+    /// Panic inside the instrumented operation (exercises unwind safety).
+    Panic,
+    /// Sleep for the given number of milliseconds (exercises deadlines
+    /// and slow-path shedding), then continue normally.
+    Sleep(u64),
+}
+
+struct Armed {
+    action: Action,
+    /// Fires on the `hit_at`-th hit (1-based); decremented per hit.
+    remaining: u64,
+}
+
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+    // OnceLock rather than a const-initialized Mutex: HashMap::new() is
+    // not const on the 1.70 MSRV.
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `site` to perform `action` on its `hit_at`-th hit (1-based), then
+/// disarm itself. Re-arming a site replaces the previous arming.
+pub fn arm(site: &str, action: Action, hit_at: u64) {
+    let mut reg = registry().lock().unwrap();
+    reg.insert(site.to_string(), Armed { action, remaining: hit_at.max(1) });
+    ANY_ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm every site (tests call this in cleanup so armings cannot leak
+/// across tests sharing the process).
+pub fn disarm_all() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    ANY_ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Parse and arm one `site=action[:hit]` spec. Unknown actions are
+/// reported, not silently ignored — a typo'd chaos spec must not turn
+/// into a vacuous test.
+pub fn arm_spec(spec: &str) -> Result<(), String> {
+    let (site, rest) = spec
+        .split_once('=')
+        .ok_or_else(|| format!("bad failpoint spec {spec:?} (want site=action[:hit])"))?;
+    let (action_str, hit) = match rest.split_once(':') {
+        Some((a, h)) => {
+            let h: u64 = h
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad failpoint hit count in {spec:?}"))?;
+            (a.trim(), h)
+        }
+        None => (rest.trim(), 1),
+    };
+    let action = match action_str {
+        "error" => Action::Error,
+        "panic" => Action::Panic,
+        other => match other.strip_prefix("sleep-") {
+            Some(ms) => Action::Sleep(
+                ms.parse().map_err(|_| format!("bad failpoint sleep millis in {spec:?}"))?,
+            ),
+            None => return Err(format!("unknown failpoint action {action_str:?} in {spec:?}")),
+        },
+    };
+    arm(site.trim(), action, hit);
+    Ok(())
+}
+
+/// Arm every spec in the `EFFDIM_FAILPOINTS` environment variable (no-op
+/// when unset or empty). Returns an error for malformed specs.
+pub fn arm_from_env() -> Result<(), String> {
+    let Ok(raw) = std::env::var("EFFDIM_FAILPOINTS") else { return Ok(()) };
+    for spec in raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        arm_spec(spec)?;
+    }
+    Ok(())
+}
+
+/// The hook itself. Returns `Ok(())` when the site is unarmed or not yet
+/// at its firing hit; returns `Err` for an [`Action::Error`] firing;
+/// panics for [`Action::Panic`]; sleeps then returns `Ok(())` for
+/// [`Action::Sleep`]. Call sites convert the `Err` into their own error
+/// type.
+pub fn check(site: &str) -> Result<(), String> {
+    // Fast path: nothing armed anywhere in the process.
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    let fired = {
+        let mut reg = registry().lock().unwrap();
+        let fired = match reg.get_mut(site) {
+            None => None,
+            Some(armed) => {
+                armed.remaining -= 1;
+                if armed.remaining == 0 {
+                    Some(armed.action.clone())
+                } else {
+                    None
+                }
+            }
+        };
+        if fired.is_some() {
+            reg.remove(site);
+            if reg.is_empty() {
+                ANY_ARMED.store(false, Ordering::SeqCst);
+            }
+        }
+        fired
+    };
+    match fired {
+        None => Ok(()),
+        Some(Action::Error) => Err(format!("injected fault at failpoint {site:?}")),
+        Some(Action::Panic) => panic!("injected panic at failpoint {site:?}"),
+        Some(Action::Sleep(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Failpoint state is process-global; tests in this module serialize
+    // on the registry by always starting from disarm_all() and using
+    // unique site names.
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        assert!(check("fp.test.unarmed").is_ok());
+    }
+
+    #[test]
+    fn error_fires_on_nth_hit_then_disarms() {
+        arm("fp.test.nth", Action::Error, 3);
+        assert!(check("fp.test.nth").is_ok());
+        assert!(check("fp.test.nth").is_ok());
+        let err = check("fp.test.nth").unwrap_err();
+        assert!(err.contains("fp.test.nth"), "{err}");
+        assert!(check("fp.test.nth").is_ok(), "fired failpoints disarm themselves");
+    }
+
+    #[test]
+    fn panic_action_panics() {
+        arm("fp.test.panic", Action::Panic, 1);
+        let r = std::panic::catch_unwind(|| check("fp.test.panic"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn specs_parse_and_reject() {
+        arm_spec("fp.test.spec=error:2").unwrap();
+        assert!(check("fp.test.spec").is_ok());
+        assert!(check("fp.test.spec").is_err());
+        arm_spec("fp.test.sleep=sleep-1").unwrap();
+        assert!(check("fp.test.sleep").is_ok(), "sleep actions continue normally");
+        assert!(arm_spec("no-equals").is_err());
+        assert!(arm_spec("site=explode").is_err());
+        assert!(arm_spec("site=error:x").is_err());
+        assert!(arm_spec("site=sleep-x").is_err());
+    }
+}

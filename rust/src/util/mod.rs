@@ -3,5 +3,6 @@
 //! the crate needs).
 
 pub mod cli;
+pub mod failpoint;
 pub mod json;
 pub mod stats;

@@ -159,13 +159,13 @@ fn engine_growth_after_append_keeps_the_sketch_prefix_bitwise() {
         let mut rng = Xoshiro256::seed_from_u64(7);
         let (full, _, base, _, delta, _) = split_problem(n, dn, d, 1.0, 13);
         let mut engine = SketchEngine::new(kind, m, &base, &mut rng);
-        engine.append_rows(&delta, &mut rng);
+        engine.append_rows(&delta, &mut rng).unwrap();
         assert_eq!(engine.n(), n + dn);
         assert_eq!(engine.m(), m);
         let before = engine.sa_unnormalized().clone();
         let target = (2 * m).min(engine.max_m());
         assert!(target > m, "growth target must exceed m for the test to bite");
-        engine.grow(target, &full, &mut rng);
+        engine.grow(target, &full, &mut rng).unwrap();
         assert_eq!(engine.m(), target);
         let after = engine.sa_unnormalized();
         for i in 0..m {

@@ -1,0 +1,448 @@
+//! Deterministic fault-injection (chaos) suite.
+//!
+//! Every failpoint compiled into the numerical core and the serving
+//! stack is fired here — as an injected error, a panic, or a stall —
+//! and the suite pins the three robustness contracts of the PR:
+//!
+//! * **recovery**: breakdowns inside the solver climb the ladder
+//!   (jitter → re-sketch → exact Hessian) and the rung used is visible
+//!   in [`SolveReport::recovery`](effdim::SolveReport), while the solve
+//!   still answers correctly;
+//! * **isolation**: injected (`Internal`) faults and panics roll the
+//!   session back all-or-nothing — the next query answers
+//!   bitwise-identically to a twin session that never saw the fault;
+//! * **serving**: faults surfacing through the TCP server produce
+//!   structured `{"ok":false}` errors, never poison a registered model,
+//!   and never take the process down.
+//!
+//! Failpoint state is process-global, so every test serializes on one
+//! mutex and starts from a disarmed registry. Armed tests live ONLY in
+//! this binary (the library's unit tests run in parallel threads and
+//! must never observe an armed site).
+
+use effdim::coordinator::server::{Client, Server};
+use effdim::data::synthetic;
+use effdim::linalg::Matrix;
+use effdim::sketch::SketchKind;
+use effdim::solvers::error::RecoveryRung;
+use effdim::solvers::session::{AppendRefresh, ModelSession};
+use effdim::solvers::{direct, RidgeProblem};
+use effdim::util::failpoint::{self, Action};
+use effdim::Operand;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Serialize the whole suite on one process-global lock and start each
+/// test from a disarmed failpoint registry. A test that panicked while
+/// holding the lock poisons it; the next test recovers the guard (the
+/// registry is re-cleared, so the poison carries no bad state).
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let guard = LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    failpoint::disarm_all();
+    guard
+}
+
+/// Deterministic session over the synthetic exponential-decay workload;
+/// identical `(n, d, data_seed)` + the fixed solver seed make two
+/// sessions exact twins (bitwise-identical answers).
+fn session(n: usize, d: usize, data_seed: u64) -> (ModelSession, Vec<f64>) {
+    let ds = synthetic::exponential_decay(n, d, data_seed);
+    let b = ds.b.clone();
+    let sess = ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 7).unwrap();
+    (sess, b)
+}
+
+/// Direct (Cholesky) reference solution for the session's registered
+/// problem at `nu`.
+fn reference(sess: &ModelSession, b: &[f64], nu: f64) -> Vec<f64> {
+    let atb = sess.operand().matvec_t(b);
+    let p = RidgeProblem::from_parts(Arc::clone(sess.operand()), None, atb, nu);
+    direct::solve(&p)
+}
+
+fn rel_err(x: &[f64], x_star: &[f64]) -> f64 {
+    let diff: Vec<f64> = x.iter().zip(x_star).map(|(a, b)| a - b).collect();
+    effdim::linalg::norm2(&diff) / (1.0 + effdim::linalg::norm2(x_star))
+}
+
+/// Bitwise equality — `f64::to_bits` per entry, stricter than `==`.
+fn assert_bitwise(x: &[f64], y: &[f64], what: &str) {
+    assert_eq!(x.len(), y.len(), "{what}: length mismatch");
+    for (i, (a, b)) in x.iter().zip(y).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{what}: entry {i} differs ({a:e} vs {b:e})"
+        );
+    }
+}
+
+/// A deterministic `dn x d` delta block plus observations, disjoint from
+/// the synthetic generators' output.
+fn delta_rows(dn: usize, d: usize) -> (Operand, Vec<f64>) {
+    let m = Matrix::from_fn(dn, d, |i, j| ((i * d + j) as f64 * 0.017).sin());
+    let b = (0..dn).map(|i| (i as f64 * 0.029).cos()).collect();
+    (Operand::Dense(m), b)
+}
+
+// ---------------------------------------------------------------------
+// Recovery ladder: breakdowns heal inside the solve and the rung used
+// is recorded in the report.
+// ---------------------------------------------------------------------
+
+#[test]
+fn initial_factor_breakdown_falls_back_to_exact_hessian() {
+    let _g = chaos_lock();
+    let (mut sess, b) = session(256, 32, 1);
+    failpoint::arm("woodbury.factor", Action::Error, 1);
+    let sol = sess.solve(0.5, 1e-9).expect("ladder must absorb the initial-factor breakdown");
+    assert!(sol.report.converged);
+    assert_eq!(sol.report.recovery, RecoveryRung::Exact);
+    assert_eq!(sol.report.recovery.label(), "exact");
+    let err = rel_err(&sol.x, &reference(&sess, &b, 0.5));
+    assert!(err <= 1e-6, "exact-fallback answer off by {err:.3e}");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn rekey_breakdown_resketches_and_the_rung_is_not_sticky() {
+    let _g = chaos_lock();
+    let (mut sess, b) = session(256, 32, 2);
+    let first = sess.solve(0.5, 1e-9).unwrap();
+    assert_eq!(first.report.recovery, RecoveryRung::None);
+
+    // The nu re-key path: a factor breakdown while re-keying the cached
+    // Woodbury factorization throws the sketch away and re-applies a
+    // fresh draw (rung 2), rather than erroring or falling to exact.
+    failpoint::arm("woodbury.factor", Action::Error, 1);
+    let rekeyed = sess.solve(1.0, 1e-9).expect("re-key breakdown must re-sketch");
+    assert!(rekeyed.report.converged);
+    assert_eq!(rekeyed.report.recovery, RecoveryRung::Resketch);
+    let err = rel_err(&rekeyed.x, &reference(&sess, &b, 1.0));
+    assert!(err <= 1e-6, "re-sketched answer off by {err:.3e}");
+
+    // An injected fault in set_nu itself (not the factorization) takes
+    // the same rung: anything but invalid input ladders.
+    failpoint::arm("woodbury.set_nu", Action::Error, 1);
+    let rekeyed2 = sess.solve(0.25, 1e-9).unwrap();
+    assert_eq!(rekeyed2.report.recovery, RecoveryRung::Resketch);
+
+    // The rung describes the solve that used it, not the session: a
+    // healthy follow-up reports a clean ladder again.
+    let healthy = sess.solve(0.7, 1e-9).unwrap();
+    assert_eq!(healthy.report.recovery, RecoveryRung::None);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn growth_round_failures_resketch_at_the_grown_size() {
+    let _g = chaos_lock();
+    // m starts at 1 on this problem and doubles several times before
+    // converging, so the first growth round reliably exists to sabotage.
+    for site in ["sketch.grow", "woodbury.grow"] {
+        let (mut sess, b) = session(256, 32, 3);
+        failpoint::arm(site, Action::Error, 1);
+        let sol = sess
+            .solve(0.3, 1e-9)
+            .unwrap_or_else(|e| panic!("growth fault at {site} must be absorbed: {e}"));
+        assert!(sol.report.converged);
+        assert_eq!(
+            sol.report.recovery,
+            RecoveryRung::Resketch,
+            "failed growth at {site} must re-sketch at the grown size"
+        );
+        let err = rel_err(&sol.x, &reference(&sess, &b, 0.3));
+        assert!(err <= 1e-6, "post-recovery answer off by {err:.3e} ({site})");
+    }
+    failpoint::disarm_all();
+}
+
+// ---------------------------------------------------------------------
+// Isolation: injected faults and panics roll back all-or-nothing; the
+// next answer is bitwise what a never-faulted twin produces.
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_iterate_faults_roll_back_and_answer_bitwise() {
+    let _g = chaos_lock();
+    let (mut twin, _) = session(256, 32, 4);
+    let want = twin.solve(0.5, 1e-9).unwrap().x;
+
+    for action in [Action::Error, Action::Panic] {
+        let (mut sess, _) = session(256, 32, 4);
+        failpoint::arm("adaptive.iterate", action.clone(), 1);
+        let err = sess.solve(0.5, 1e-9).expect_err("armed iterate must fail the solve");
+        match action {
+            Action::Error => assert!(
+                err.contains(r#"injected fault at failpoint "adaptive.iterate""#),
+                "{err}"
+            ),
+            Action::Panic => assert!(
+                err.contains(r#"panic: injected panic at failpoint "adaptive.iterate""#),
+                "{err}"
+            ),
+            Action::Sleep(_) => unreachable!(),
+        }
+        // Rolled back: the retry answers bitwise like the twin's first
+        // (and only) solve — no half-grown sketch state leaked out.
+        let retry = sess.solve(0.5, 1e-9).unwrap();
+        assert_bitwise(&retry.x, &want, "post-fault retry vs never-faulted twin");
+        assert_eq!(retry.report.recovery, RecoveryRung::None);
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn failed_appends_roll_back_bitwise_and_the_session_still_ingests() {
+    let _g = chaos_lock();
+    let (mut twin, _) = session(192, 16, 5);
+    twin.solve(0.5, 1e-9).unwrap();
+
+    let (mut sess, _) = session(192, 16, 5);
+    sess.solve(0.5, 1e-9).unwrap();
+    let (n0, m0, bytes0) = (sess.n(), sess.m(), sess.approx_bytes());
+
+    let (da, db) = delta_rows(8, 16);
+    for action in [Action::Error, Action::Panic] {
+        failpoint::arm("session.append", action.clone(), 1);
+        let err = sess
+            .append(da.clone(), db.clone(), AppendRefresh::Eager)
+            .expect_err("armed append must fail");
+        match action {
+            Action::Error => assert!(
+                err.contains(r#"injected fault at failpoint "session.append""#),
+                "{err}"
+            ),
+            Action::Panic => assert!(
+                err.contains(r#"panic: injected panic at failpoint "session.append""#),
+                "{err}"
+            ),
+            Action::Sleep(_) => unreachable!(),
+        }
+        // Full rollback: rows, sketch size, and byte accounting are
+        // exactly the pre-append values.
+        assert_eq!(sess.n(), n0, "failed append leaked rows");
+        assert_eq!(sess.m(), m0, "failed append changed the sketch");
+        assert_eq!(sess.approx_bytes(), bytes0, "failed append changed the byte footprint");
+    }
+
+    // The rolled-back session is not just intact but still bitwise the
+    // twin: the same (now unarmed) append + solve on both must agree.
+    sess.append(da.clone(), db.clone(), AppendRefresh::Eager).unwrap();
+    twin.append(da, db, AppendRefresh::Eager).unwrap();
+    let x_sess = sess.solve(0.5, 1e-9).unwrap().x;
+    let x_twin = twin.solve(0.5, 1e-9).unwrap().x;
+    assert_bitwise(&x_sess, &x_twin, "append-after-rollback vs twin");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn flush_fault_propagates_and_the_pending_rows_survive() {
+    let _g = chaos_lock();
+    let (mut twin, _) = session(192, 16, 6);
+    twin.solve(0.5, 1e-9).unwrap();
+    let (mut sess, _) = session(192, 16, 6);
+    sess.solve(0.5, 1e-9).unwrap();
+
+    let (da, db) = delta_rows(8, 16);
+    sess.append(da.clone(), db.clone(), AppendRefresh::Lazy).unwrap();
+    twin.append(da, db, AppendRefresh::Lazy).unwrap();
+    let n_grown = sess.n();
+
+    // The deferred flush runs at the head of the next solve; an injected
+    // fault there fails that solve but must not lose the appended rows
+    // or corrupt the pending buffer.
+    failpoint::arm("session.flush", Action::Error, 1);
+    let err = sess.solve(0.5, 1e-9).expect_err("armed flush must fail the solve");
+    assert!(err.contains(r#"injected fault at failpoint "session.flush""#), "{err}");
+    assert_eq!(sess.n(), n_grown, "appended rows must survive a failed flush");
+
+    // Disarmed retry: the flush completes and the answer is bitwise the
+    // twin's (same lazy append, never-faulted flush).
+    let x_sess = sess.solve(0.5, 1e-9).unwrap().x;
+    let x_twin = twin.solve(0.5, 1e-9).unwrap().x;
+    assert_bitwise(&x_sess, &x_twin, "flush-after-fault vs twin");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn sketch_append_panic_takes_the_session_resketch_rung() {
+    let _g = chaos_lock();
+    let (mut sess, b) = session(192, 16, 8);
+    sess.solve(0.5, 1e-9).unwrap();
+    let (da, db) = delta_rows(8, 16);
+    sess.append(da, db, AppendRefresh::Lazy).unwrap();
+
+    // An injected *error* in the engine's row-append is an Internal
+    // fault: it propagates (tested via the wire contract above); a
+    // *panic* during the staged absorb is indistinguishable from a
+    // numerical breakdown, so the flush takes the session-level
+    // re-sketch rung instead: the resumable state is dropped and the
+    // solve rebuilds the sketch over the grown operand — no data lost,
+    // no error surfaced.
+    failpoint::arm("sketch.append", Action::Panic, 1);
+    let sol = sess.solve(0.5, 1e-9).expect("flush panic must be absorbed by re-sketching");
+    assert!(sol.report.converged);
+    assert!(sess.m() >= 1, "re-sketch must leave a live sketch behind");
+    let err = rel_err(&sol.x, &reference(&sess, &b, 0.5));
+    assert!(err <= 1e-6, "re-sketched answer off by {err:.3e}");
+
+    // The error flavor of the same site propagates un-laddered.
+    let (da2, db2) = delta_rows(4, 16);
+    sess.append(da2, db2, AppendRefresh::Lazy).unwrap();
+    failpoint::arm("sketch.append", Action::Error, 1);
+    let msg = sess.solve(0.7, 1e-9).expect_err("injected engine fault must propagate");
+    assert!(msg.contains(r#"injected fault at failpoint "sketch.append""#), "{msg}");
+    let retry = sess.solve(0.7, 1e-9).unwrap();
+    assert!(retry.report.converged);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn block_solve_faults_are_isolated() {
+    let _g = chaos_lock();
+    let bs: Vec<Vec<f64>> = (0..3)
+        .map(|j| (0..192).map(|i| ((i * (j + 2)) as f64 * 0.013).sin()).collect())
+        .collect();
+    let (mut twin, _) = session(192, 16, 9);
+    let want: Vec<Vec<f64>> =
+        twin.solve_block(0.5, &bs, 1e-9).unwrap().into_iter().map(|s| s.x).collect();
+
+    let (mut sess, _) = session(192, 16, 9);
+    failpoint::arm("block.iterate", Action::Error, 1);
+    let err = sess.solve_block(0.5, &bs, 1e-9).expect_err("armed block iterate must fail");
+    assert!(err.contains(r#"injected fault at failpoint "block.iterate""#), "{err}");
+
+    let got = sess.solve_block(0.5, &bs, 1e-9).unwrap();
+    for (j, (sol, want_x)) in got.iter().zip(&want).enumerate() {
+        assert_bitwise(&sol.x, want_x, &format!("block column {j} after rollback"));
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn injected_stall_trips_the_deadline_and_the_session_recovers() {
+    let _g = chaos_lock();
+    let (mut sess, _) = session(256, 32, 10);
+    // A healthy solve finishes far inside 100ms; the injected 250ms
+    // stall pushes the first iterate past the wall and the cooperative
+    // deadline check turns it into a structured error.
+    failpoint::arm("adaptive.iterate", Action::Sleep(250), 1);
+    sess.set_deadline(Some(Instant::now() + Duration::from_millis(100)));
+    let err = sess.solve(0.5, 1e-9).expect_err("stalled solve must miss its deadline");
+    assert!(err.contains("deadline"), "{err}");
+
+    sess.set_deadline(None);
+    let sol = sess.solve(0.5, 1e-9).expect("session must recover after a missed deadline");
+    assert!(sol.report.converged);
+    failpoint::disarm_all();
+}
+
+// ---------------------------------------------------------------------
+// External arming: the EFFDIM_FAILPOINTS env contract chaos drivers use.
+// ---------------------------------------------------------------------
+
+#[test]
+fn env_var_arming_drives_faults_and_rejects_typos() {
+    let _g = chaos_lock();
+    std::env::set_var("EFFDIM_FAILPOINTS", "adaptive.iterate=error");
+    let armed = failpoint::arm_from_env();
+    std::env::remove_var("EFFDIM_FAILPOINTS");
+    armed.expect("valid spec must arm");
+
+    let (mut sess, _) = session(192, 16, 11);
+    let err = sess.solve(0.5, 1e-9).expect_err("env-armed failpoint must fire");
+    assert!(err.contains(r#"injected fault at failpoint "adaptive.iterate""#), "{err}");
+    assert!(sess.solve(0.5, 1e-9).is_ok(), "env-armed failpoints self-disarm");
+
+    // A typo'd spec is an error, not a vacuous chaos run.
+    std::env::set_var("EFFDIM_FAILPOINTS", "woodbury.factor=explode");
+    let rejected = failpoint::arm_from_env();
+    std::env::remove_var("EFFDIM_FAILPOINTS");
+    assert!(rejected.is_err(), "unknown actions must be rejected");
+    failpoint::disarm_all();
+}
+
+// ---------------------------------------------------------------------
+// Serving: faults crossing the TCP boundary are structured errors; the
+// registered model survives and keeps answering bitwise.
+// ---------------------------------------------------------------------
+
+#[test]
+fn server_survives_injected_faults_and_models_keep_answering_bitwise() {
+    let _g = chaos_lock();
+    let server = Server::bind("127.0.0.1:0", 1).unwrap();
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr).unwrap();
+
+    let reg = client
+        .call(r#"{"cmd":"register","profile":"exp","n":256,"d":32,"seed":5,"sketch":"gaussian"}"#)
+        .unwrap();
+    assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+    let model = reg.get("model").unwrap().as_usize().unwrap();
+
+    let xs = |resp: &effdim::util::json::Json| -> Vec<f64> {
+        resp.get("result")
+            .unwrap()
+            .get("x")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+
+    let q1 = client
+        .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.3,"eps":1e-8,"x":true}}"#))
+        .unwrap();
+    assert_eq!(q1.get("ok").unwrap().as_bool(), Some(true), "{q1:?}");
+    let x1 = xs(&q1);
+
+    // A re-key breakdown mid-request heals inside the solver; the wire
+    // sees a successful answer that *declares* its degraded path.
+    failpoint::arm("woodbury.factor", Action::Error, 1);
+    let degraded = client
+        .call(&format!(r#"{{"cmd":"query","model":{model},"nu":1.0,"eps":1e-8}}"#))
+        .unwrap();
+    assert_eq!(degraded.get("ok").unwrap().as_bool(), Some(true), "{degraded:?}");
+    assert_eq!(
+        degraded.get("result").unwrap().get("recovery").unwrap().as_str(),
+        Some("resketch"),
+        "{degraded:?}"
+    );
+
+    // An unrecoverable injected fault is a structured refusal — the
+    // connection stays up and the model stays registered.
+    failpoint::arm("adaptive.iterate", Action::Error, 1);
+    let refused = client
+        .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.07,"eps":1e-8}}"#))
+        .unwrap();
+    assert_eq!(refused.get("ok").unwrap().as_bool(), Some(false), "{refused:?}");
+    assert!(
+        refused.get("error").unwrap().as_str().unwrap().contains("injected fault"),
+        "{refused:?}"
+    );
+
+    // The original answer is still served bitwise (solution cache and
+    // session state untouched by either fault).
+    let q1_again = client
+        .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.3,"eps":1e-8,"x":true}}"#))
+        .unwrap();
+    assert_eq!(q1_again.get("ok").unwrap().as_bool(), Some(true), "{q1_again:?}");
+    assert_bitwise(&xs(&q1_again), &x1, "wire re-answer after faults");
+
+    let health = client.call(r#"{"cmd":"health"}"#).unwrap();
+    assert_eq!(health.get("ok").unwrap().as_bool(), Some(true), "{health:?}");
+    assert_eq!(health.get("models").unwrap().as_usize(), Some(1), "{health:?}");
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+    failpoint::disarm_all();
+}

@@ -166,6 +166,49 @@ fn concurrent_clients_get_bitwise_identical_solutions() {
 }
 
 #[test]
+fn failed_queries_cannot_poison_a_registered_session() {
+    // Robustness regression: a query that fails mid-solve (here: an
+    // already-expired wall deadline, which aborts between iterations,
+    // and an invalid batch) must leave the registered session exactly
+    // as it was — same answers bitwise, same byte accounting, model
+    // still registered.
+    //
+    // Deliberately failpoint-free: tests in this binary run in parallel
+    // threads and the failpoint registry is process-global (armed-site
+    // tests live in tests/chaos.rs, which serializes on a suite mutex).
+    let (reg, id) = registry_with_model(256, 32, 7);
+    let entry = reg.touch(id).unwrap();
+    let mut session = entry.session.lock().unwrap();
+
+    let baseline = session.solve(0.5, 1e-9).unwrap();
+    assert!(baseline.report.converged);
+    let bytes = session.approx_bytes();
+    let m = session.m();
+
+    // Expired deadline: the cooperative check fails the solve with a
+    // structured error and rolls the session back.
+    session.set_deadline(Some(std::time::Instant::now() - std::time::Duration::from_millis(1)));
+    let err = session.solve(0.05, 1e-12).expect_err("expired deadline must fail the solve");
+    assert!(err.contains("deadline"), "{err}");
+    session.set_deadline(None);
+
+    // Invalid inputs fail fast, before any state is touched.
+    assert!(session.solve(f64::NAN, 1e-9).is_err());
+    assert!(session.solve_block(0.5, &[], 1e-9).is_err());
+
+    // Nothing leaked: sketch size and byte footprint are unchanged, the
+    // model is still registered, and the original query re-answers
+    // bitwise (solution cache intact).
+    assert_eq!(session.m(), m, "failed queries changed the cached sketch");
+    assert_eq!(session.approx_bytes(), bytes, "failed queries changed the byte footprint");
+    let again = session.solve(0.5, 1e-9).unwrap();
+    assert_eq!(again.x, baseline.x, "post-failure answer must be bitwise the baseline");
+    reg.note_query(&entry, &session);
+    drop(session);
+    assert!(reg.touch(id).is_some(), "failed queries must not evict the model");
+}
+
+#[test]
 fn registry_reuse_over_tcp_end_to_end() {
     // Full wire-level pass: register, query twice (second at a new nu
     // reports zero sketch time), evict, query again -> clean error.

@@ -111,7 +111,7 @@ fn prop_woodbury_inverts_hs_any_shape() {
         let m = 1 + rng.next_below(2 * d as u64) as usize;
         let sa = Matrix::from_fn(m, d, |_, _| rng.next_gaussian() * 0.6);
         let nu = 0.2 + rng.next_f64();
-        let cache = WoodburyCache::new(sa.clone(), nu);
+        let cache = WoodburyCache::new(sa.clone(), nu).unwrap();
         let g: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
         let z = cache.apply_inverse(&g);
         let hz = cache.h_s().matvec(&z);
@@ -152,7 +152,7 @@ fn prop_adaptive_m_monotone_and_bounded() {
         let kind = if case % 2 == 0 { SketchKind::Gaussian } else { SketchKind::Srht };
         let cfg = AdaptiveConfig::new(kind);
         let stop = StopRule::TrueError { x_star, eps: 1e-8 };
-        let sol = adaptive::solve(&p, &vec![0.0; d], &cfg, &stop, 0xabc + case);
+        let sol = adaptive::solve(&p, &vec![0.0; d], &cfg, &stop, 0xabc + case).unwrap();
         assert!(sol.report.converged, "n={n} d={d} nu={nu} {kind}");
         for w in sol.report.m_trace.windows(2) {
             assert!(w[1] >= w[0], "m must never shrink");

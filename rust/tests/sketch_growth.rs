@@ -37,7 +37,7 @@ fn growth_is_deterministic_and_prefix_consistent() {
             let mut engine = SketchEngine::new(kind, 2, &a, &mut rng);
             let mut snapshots = vec![engine.sa_unnormalized().clone()];
             for &m in grows {
-                engine.grow(m, &a, &mut rng);
+                engine.grow(m, &a, &mut rng).unwrap();
                 snapshots.push(engine.sa_unnormalized().clone());
             }
             snapshots
@@ -67,7 +67,7 @@ fn grow_then_apply_matches_dense_composition() {
         let mut rng = Xoshiro256::seed_from_u64(4);
         let mut engine = SketchEngine::new(kind, 3, &a, &mut rng);
         for &m in &[7usize, 16, 33] {
-            engine.grow(m, &a, &mut rng);
+            engine.grow(m, &a, &mut rng).unwrap();
             let mut scaled = engine.sa_unnormalized().clone();
             effdim::linalg::scale(engine.scale(), scaled.as_mut_slice());
             let composed = engine.to_dense().matmul(&a);
@@ -89,13 +89,16 @@ fn grown_woodbury_matches_from_scratch_through_engine_rows() {
     for kind in KINDS {
         let mut rng = Xoshiro256::seed_from_u64(6);
         let mut engine = SketchEngine::new(kind, 1, &a, &mut rng);
-        let mut cache = WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), nu, engine.scale());
+        let mut cache =
+            WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), nu, engine.scale())
+                .unwrap();
         let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.23).sin()).collect();
         for &m in &[2usize, 4, 8, 16, 32] {
-            let new_rows = engine.grow(m, &a, &mut rng);
-            cache.grow(&new_rows, engine.scale());
+            let new_rows = engine.grow(m, &a, &mut rng).unwrap();
+            cache.grow(&new_rows, engine.scale()).unwrap();
             let fresh =
-                WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), nu, engine.scale());
+                WoodburyCache::new_scaled(engine.sa_unnormalized().clone(), nu, engine.scale())
+                    .unwrap();
             let zg = cache.apply_inverse(&g);
             let zf = fresh.apply_inverse(&g);
             for i in 0..d {

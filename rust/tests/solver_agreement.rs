@@ -90,7 +90,7 @@ fn all_solvers_agree_on_mnist_like() {
         for variant in [AdaptiveVariant::PolyakFirst, AdaptiveVariant::GradientOnly] {
             let mut cfg = AdaptiveConfig::new(kind);
             cfg.variant = variant;
-            let sol = adaptive::solve(&p, &x0, &cfg, &stop, 3);
+            let sol = adaptive::solve(&p, &x0, &cfg, &stop, 3).unwrap();
             assert!(
                 sol.report.converged && rel_err(&sol.x, &x_star) < 1e-2,
                 "adaptive {kind} {variant:?}: rel {}",
@@ -156,7 +156,7 @@ fn adaptive_rate_matches_theorem_6_envelope() {
     let x_star = direct::solve(&p);
     let stop = StopRule::TrueError { x_star, eps: 1e-12 };
     let cfg = AdaptiveConfig::new(SketchKind::Srht);
-    let sol = adaptive::solve(&p, &vec![0.0; 32], &cfg, &stop, 9);
+    let sol = adaptive::solve(&p, &vec![0.0; 32], &cfg, &stop, 9).unwrap();
     let c_gd = cfg.params().c_gd;
     let prefactor = effdim::theory::bounds::srht_error_prefactor(ds.sigma[0], nu);
     // Trace convention: entry 0 is the trivial 1.0 starting point; entry

@@ -135,7 +135,7 @@ fn sketch_engine_growth_is_prefix_consistent_on_csr() {
         let mut engine = SketchEngine::new(kind, 2, &ds.a, &mut rng);
         let mut snapshots = vec![engine.sa_unnormalized().clone()];
         for &m in &[5usize, 12, 30] {
-            engine.grow(m, &ds.a, &mut rng);
+            engine.grow(m, &ds.a, &mut rng).unwrap();
             snapshots.push(engine.sa_unnormalized().clone());
         }
         for w in snapshots.windows(2) {
@@ -149,7 +149,7 @@ fn sketch_engine_growth_is_prefix_consistent_on_csr() {
         let mut rng2 = Xoshiro256::seed_from_u64(5);
         let mut engine_d = SketchEngine::new(kind, 2, &dense, &mut rng2);
         for &m in &[5usize, 12, 30] {
-            engine_d.grow(m, &dense, &mut rng2);
+            engine_d.grow(m, &dense, &mut rng2).unwrap();
         }
         assert!(
             engine_d.sa_unnormalized().max_abs_diff(engine.sa_unnormalized()) < 1e-10,
