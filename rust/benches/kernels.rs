@@ -28,6 +28,13 @@
 //!   refactor, warm-started re-solve) over a full re-register + cold query
 //!   of the concatenated data. For `dn << n` these must land above 1.
 //!
+//! * `recovery_replay_speedup` — restart cost (§Durability acceptance):
+//!   recovering a crashed durable model (snapshot decode + sketch replay
+//!   from the compact header + WAL tail replay + first warm query) over
+//!   a cold re-register + first query of the same final data. Must land
+//!   above 1: replay restores the grown sketch and warm start directly
+//!   instead of re-paying the adaptive growth ladder.
+//!
 //! `cargo bench --bench kernels -- --smoke` runs a seconds-scale variant
 //! (shrunken shapes, fewer repeats) so CI *executes* every kernel path on
 //! each PR instead of merely compiling it.
@@ -656,6 +663,119 @@ fn main() {
             "    degraded_solve_overhead (resketch vs healthy re-key): {:.2}x\n",
             t_degraded / t_clean
         );
+    }
+
+    // Crash-recovery replay cost (§Durability acceptance): a durable
+    // model — warmed snapshot plus a WAL tail of streamed appends — is
+    // recovered (snapshot decode, sketch replay from the compact header,
+    // WAL replay, first warm query) and raced against a cold re-register
+    // + first query of the same final data. The snapshot stores only the
+    // sketch's replay header, so recovery re-derives `S~A` — but at the
+    // final m in one pass, with the warm start and solver state restored,
+    // instead of re-paying the adaptive growth ladder and cold
+    // iterations. `recovery_replay_speedup` = cold mean / recovery mean.
+    {
+        use effdim::coordinator::registry::{Registry, DEFAULT_BYTE_BUDGET};
+        use effdim::persist::{DurabilityPolicy, Store};
+        let (n, d, dn) = if smoke { (512usize, 64usize, 16usize) } else { (8192, 256, 64) };
+        let reps = if smoke { 2 } else { 5 };
+        let (nu, eps) = (0.5, 1e-8);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let total = n + 4 * dn;
+        let full = Matrix::from_fn(total, d, |_, _| rng.next_gaussian());
+        let b_full: Vec<f64> = (0..total).map(|i| (i as f64 * 0.011).sin()).collect();
+        let base = Matrix::from_fn(n, d, |i, j| full.get(i, j));
+        let b_base = b_full[..n].to_vec();
+        println!("--- crash-recovery replay (n = {n}, d = {d}, 4 x {dn} WAL appends) ---");
+        let t_recover = {
+            let mut times = Vec::new();
+            for i in 0..reps {
+                let dir = std::env::temp_dir()
+                    .join(format!("effdim-bench-recovery-{}-{i}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                // Untimed setup: register, warm, snapshot, stream the WAL
+                // tail, crash (drop without a closing snapshot).
+                let id = {
+                    let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+                    let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, Arc::clone(&store));
+                    let entry = reg
+                        .register(
+                            "bench".into(),
+                            Operand::Dense(base.clone()),
+                            b_base.clone(),
+                            SketchKind::Gaussian,
+                            90 + i as u64,
+                        )
+                        .unwrap();
+                    {
+                        let mut s = entry.session.lock().unwrap();
+                        s.solve(nu, eps).unwrap(); // grow the sketch once
+                    }
+                    reg.persist_all(Some(entry.id)).unwrap();
+                    for k in 0..4 {
+                        let lo = n + k * dn;
+                        let da = Matrix::from_fn(dn, d, |r, c| full.get(lo + r, c));
+                        let db = b_full[lo..lo + dn].to_vec();
+                        let mut s = entry.session.lock().unwrap();
+                        store
+                            .append_record(entry.id, &Operand::Dense(da.clone()), &db, true)
+                            .unwrap();
+                        s.append(Operand::Dense(da), db, AppendRefresh::Eager).unwrap();
+                    }
+                    entry.id
+                };
+                let t0 = Instant::now();
+                let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+                let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, store);
+                assert_eq!(reg.recover().unwrap(), 1, "bench model must recover");
+                let entry = reg.touch(id).unwrap();
+                let sol = entry.session.lock().unwrap().solve(nu, eps).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+                assert!(sol.report.converged, "recovered model must converge");
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+            let s = summarize(&times);
+            cases.push(Case {
+                name: "recover crashed model + query".into(),
+                n: total,
+                d,
+                m: 0,
+                threads: default_threads,
+                mean_s: s.mean,
+                min_s: s.min,
+            });
+            println!("{:<44} {:>10.3} ms", "recover crashed model + query", s.mean * 1e3);
+            s.mean
+        };
+        let t_cold = {
+            let mut times = Vec::new();
+            for i in 0..reps {
+                let t0 = Instant::now();
+                let mut sess = ModelSession::new(
+                    Arc::new(Operand::Dense(full.clone())),
+                    b_full.clone(),
+                    SketchKind::Gaussian,
+                    90 + i as u64,
+                )
+                .unwrap();
+                std::hint::black_box(sess.solve(nu, eps).unwrap());
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let s = summarize(&times);
+            cases.push(Case {
+                name: "cold re-register + query".into(),
+                n: total,
+                d,
+                m: 0,
+                threads: default_threads,
+                mean_s: s.mean,
+                min_s: s.min,
+            });
+            println!("{:<44} {:>10.3} ms", "cold re-register + query", s.mean * 1e3);
+            s.mean
+        };
+        derived.push(("recovery_replay_speedup".to_string(), Json::from(t_cold / t_recover)));
+        println!("    recovery replay speedup vs cold re-register: {:.2}x\n", t_cold / t_recover);
     }
 
     // Emit the JSON trajectory at the repo root (benches run from rust/).

@@ -20,6 +20,9 @@
 //! {"cmd":"append","model":1,"rows":2,"cols":2,
 //!  "triplets":[[0,0,1.0],[1,1,2.0]],"b":[0.5,0.25],"refresh":"eager"}
 //! {"cmd":"evict","model":1}
+//! {"cmd":"evict","model":1,"purge":true}
+//! {"cmd":"snapshot"}
+//! {"cmd":"snapshot","model":1}
 //! {"cmd":"models"}
 //! {"cmd":"metrics"}
 //! {"cmd":"health"}
@@ -158,10 +161,21 @@ pub enum Request {
         /// append rolls back completely (no rows retained).
         deadline_s: Option<f64>,
     },
-    /// Drop a registered model, freeing its cached state.
+    /// Drop a registered model, freeing its cached state. With a durable
+    /// state dir this is a *spill* (the model reloads on its next touch)
+    /// unless `purge` also deletes the on-disk state.
     Evict {
         /// Model id from a `register` response.
         model: u64,
+        /// Whether to delete the model's persisted snapshot + WAL too
+        /// (`"purge":true`); ignored without a state dir.
+        purge: bool,
+    },
+    /// Force a durable snapshot of one model (or all of them), flushing
+    /// pending appends and resetting the WAL. Errors without a state dir.
+    Snapshot {
+        /// Restrict to one model (`"model"`); absent = every live model.
+        model: Option<u64>,
     },
     /// List the registered models.
     Models,
@@ -297,7 +311,22 @@ pub fn decode(line: &str) -> Result<Request, String> {
             };
             Ok(Request::Append { model, a, b, eager, deadline_s })
         }
-        "evict" => Ok(Request::Evict { model: require_id(&v, "model")? }),
+        "evict" => {
+            // Strict like "refresh": a present-but-non-bool purge is an
+            // error, never a silent spill (or worse, a silent purge).
+            let purge = match v.get("purge") {
+                None | Some(Json::Null) => false,
+                Some(raw) => raw.as_bool().ok_or("\"purge\" must be true or false")?,
+            };
+            Ok(Request::Evict { model: require_id(&v, "model")?, purge })
+        }
+        "snapshot" => {
+            let model = match v.get("model") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(require_id(&v, "model")?),
+            };
+            Ok(Request::Snapshot { model })
+        }
         "models" => Ok(Request::Models),
         "status" => Ok(Request::Status { job: require_job(&v)? }),
         "wait" => Ok(Request::Wait {
@@ -686,7 +715,7 @@ mod tests {
             _ => panic!("wrong variant"),
         }
         assert!(matches!(decode(r#"{"cmd":"evict","model":4}"#).unwrap(),
-            Request::Evict { model: 4 }));
+            Request::Evict { model: 4, purge: false }));
         assert!(matches!(decode(r#"{"cmd":"models"}"#).unwrap(), Request::Models));
         // Malformed registry requests.
         assert!(decode(r#"{"cmd":"query"}"#).is_err(), "missing model id");
@@ -789,6 +818,37 @@ mod tests {
             Request::Append { eager, .. } => assert!(eager),
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn decode_evict_purge_and_snapshot() {
+        assert!(matches!(
+            decode(r#"{"cmd":"evict","model":2,"purge":true}"#).unwrap(),
+            Request::Evict { model: 2, purge: true }
+        ));
+        assert!(matches!(
+            decode(r#"{"cmd":"evict","model":2,"purge":null}"#).unwrap(),
+            Request::Evict { model: 2, purge: false }
+        ));
+        // A present-but-non-bool purge is an error, never a silent spill.
+        assert!(decode(r#"{"cmd":"evict","model":2,"purge":"yes"}"#).is_err());
+        assert!(decode(r#"{"cmd":"evict","model":2,"purge":1}"#).is_err());
+        assert!(matches!(
+            decode(r#"{"cmd":"snapshot"}"#).unwrap(),
+            Request::Snapshot { model: None }
+        ));
+        assert!(matches!(
+            decode(r#"{"cmd":"snapshot","model":null}"#).unwrap(),
+            Request::Snapshot { model: None }
+        ));
+        assert!(matches!(
+            decode(r#"{"cmd":"snapshot","model":5}"#).unwrap(),
+            Request::Snapshot { model: Some(5) }
+        ));
+        // A present-but-bad model id is rejected, not ignored — snapshot
+        // of "model 1.5" must not silently become snapshot-everything.
+        assert!(decode(r#"{"cmd":"snapshot","model":1.5}"#).is_err());
+        assert!(decode(r#"{"cmd":"snapshot","model":"all"}"#).is_err());
     }
 
     #[test]

@@ -23,8 +23,19 @@
 //! against one model serialize (the session mutates its sketch state).
 //! Eviction only removes the map entry — an in-flight query holds an
 //! `Arc` to the entry and completes normally.
+//!
+//! **Durability** (`serve --state-dir`): with a [`Store`] attached,
+//! registration writes an initial checksummed snapshot, every eviction
+//! becomes a *spill* — the model's pending appends are flushed and its
+//! state snapshotted before the RAM entry is dropped — and a `touch` of a
+//! spilled id transparently reloads the model from disk instead of
+//! answering `unknown model`. Explicit `evict` with `"purge":true`
+//! deletes the on-disk state too. At startup [`Registry::recover`]
+//! repopulates the map from the store (snapshot + WAL replay), keeping
+//! the original model ids.
 
 use crate::linalg::Operand;
+use crate::persist::Store;
 use crate::sketch::SketchKind;
 use crate::solvers::session::ModelSession;
 use crate::util::json::Json;
@@ -64,6 +75,8 @@ struct Inner {
 pub struct Registry {
     inner: Mutex<Inner>,
     byte_budget: usize,
+    /// Durable backing store (`serve --state-dir`); `None` = RAM-only.
+    store: Option<Arc<Store>>,
     /// Running sum of the live models' byte estimates, maintained on
     /// register / evict / byte refresh so the per-query budget check is
     /// O(1) instead of an O(models) re-sum under the shared lock.
@@ -80,18 +93,62 @@ pub struct Registry {
 }
 
 impl Registry {
-    /// Create a registry with the given byte budget (see
+    /// Create a RAM-only registry with the given byte budget (see
     /// [`DEFAULT_BYTE_BUDGET`]).
     pub fn new(byte_budget: usize) -> Self {
+        Self::build(byte_budget, None)
+    }
+
+    /// Create a registry backed by a durable [`Store`]: registrations
+    /// snapshot, evictions spill, touches reload. Call
+    /// [`Registry::recover`] afterwards to repopulate from disk.
+    pub fn with_store(byte_budget: usize, store: Arc<Store>) -> Self {
+        Self::build(byte_budget, Some(store))
+    }
+
+    fn build(byte_budget: usize, store: Option<Arc<Store>>) -> Self {
         Self {
             inner: Mutex::new(Inner { models: HashMap::new(), next_id: 1, clock: 0 }),
             byte_budget,
+            store,
             bytes_total: AtomicUsize::new(0),
             registered: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
             queries: AtomicU64::new(0),
             appends: AtomicU64::new(0),
         }
+    }
+
+    /// The attached durable store, if any.
+    pub fn store(&self) -> Option<&Arc<Store>> {
+        self.store.as_ref()
+    }
+
+    /// Repopulate the registry from the attached store: every model whose
+    /// snapshot decodes and whose WAL tail replays comes back under its
+    /// **original id** (damaged models are skipped with a warning inside
+    /// the store). Fresh ids continue after the largest recovered one.
+    /// Returns the number of models recovered.
+    pub fn recover(&self) -> Result<usize, String> {
+        let store = self.store.as_ref().ok_or("registry has no durable store")?;
+        let recovered = store.recover_all()?;
+        let count = recovered.len();
+        let mut inner = self.inner.lock().unwrap();
+        for model in recovered {
+            let bytes = model.session.approx_bytes();
+            inner.clock += 1;
+            let entry = Arc::new(ModelEntry {
+                id: model.id,
+                name: model.name,
+                session: Mutex::new(model.session),
+                last_used: AtomicU64::new(inner.clock),
+                bytes: AtomicUsize::new(bytes),
+            });
+            inner.models.insert(model.id, entry);
+            inner.next_id = inner.next_id.max(model.id + 1);
+            self.bytes_total.fetch_add(bytes, Ordering::Relaxed);
+        }
+        Ok(count)
     }
 
     /// Register a problem; returns the model entry (its `id` goes back to
@@ -122,21 +179,65 @@ impl Registry {
             self.bytes_total.fetch_add(bytes, Ordering::Relaxed);
             entry
         };
+        // Durable registration: the initial snapshot must land before the
+        // client's ack — a model that cannot be persisted is not
+        // registered at all (rolled back with its disk state purged).
+        if let Some(store) = &self.store {
+            let outcome = {
+                let mut session = entry.session.lock().unwrap();
+                store.persist_model(entry.id, &entry.name, &mut session)
+            };
+            if let Err(e) = outcome {
+                if let Some(dead) = self.inner.lock().unwrap().models.remove(&entry.id) {
+                    self.bytes_total
+                        .fetch_sub(dead.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+                }
+                store.drop_model(entry.id, true);
+                return Err(format!("cannot persist model: {e}"));
+            }
+        }
         self.registered.fetch_add(1, Ordering::Relaxed);
         self.enforce_budget(entry.id);
         Ok(entry)
     }
 
     /// Look up a model and bump its LRU position. `None` for unknown /
-    /// evicted ids.
+    /// purged ids. With a durable store attached, a **spilled** model is
+    /// transparently reloaded from its snapshot + WAL (reload-on-demand)
+    /// — the map lock is held across the reload so concurrent touches of
+    /// the same spilled id resolve to one reload, not two.
     pub fn touch(&self, id: ModelId) -> Option<Arc<ModelEntry>> {
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let clock = inner.clock;
-        inner.models.get(&id).map(|e| {
+        if let Some(e) = inner.models.get(&id) {
             e.last_used.store(clock, Ordering::Relaxed);
-            Arc::clone(e)
-        })
+            return Some(Arc::clone(e));
+        }
+        let store = self.store.as_ref()?;
+        if !store.has_spilled(id) {
+            return None;
+        }
+        let reloaded = match store.load_model(id) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("warning: reload of spilled model {id} failed: {e}");
+                return None;
+            }
+        };
+        let bytes = reloaded.session.approx_bytes();
+        let entry = Arc::new(ModelEntry {
+            id,
+            name: reloaded.name,
+            session: Mutex::new(reloaded.session),
+            last_used: AtomicU64::new(clock),
+            bytes: AtomicUsize::new(bytes),
+        });
+        inner.models.insert(id, Arc::clone(&entry));
+        self.bytes_total.fetch_add(bytes, Ordering::Relaxed);
+        drop(inner);
+        self.enforce_budget(id);
+        Some(entry)
     }
 
     /// The standard "no such model" error (registration expired or never
@@ -186,17 +287,49 @@ impl Registry {
         self.enforce_budget(entry.id);
     }
 
-    /// Explicitly remove a model. Returns `false` for unknown ids.
-    pub fn evict(&self, id: ModelId) -> bool {
+    /// Explicitly remove a model. Returns `false` for unknown ids. With a
+    /// durable store attached the default is a **spill** — pending lazy
+    /// appends are flushed and a final snapshot written, so a later touch
+    /// reloads the model losslessly; `purge` deletes the on-disk state
+    /// too, making the removal permanent.
+    pub fn evict(&self, id: ModelId, purge: bool) -> bool {
         let removed = self.inner.lock().unwrap().models.remove(&id);
         match removed {
             Some(e) => {
                 self.bytes_total.fetch_sub(e.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
                 self.evicted.fetch_add(1, Ordering::Relaxed);
+                self.offload(&e, purge);
                 true
             }
             None => false,
         }
+    }
+
+    /// Offload a just-removed entry's state to the store (no-op without
+    /// one). Spilling flushes un-applied lazy append deltas and writes a
+    /// final snapshot **before** the RAM entry dies — dropping the entry
+    /// without this would discard pending rows that were never folded
+    /// into the sketch. Runs outside the map lock; the session is
+    /// `try_lock`ed so two threads spilling each other's victims cannot
+    /// deadlock — a busy session skips the snapshot (its on-disk
+    /// snapshot + WAL already cover every acked append; only cached
+    /// solver state is lost).
+    fn offload(&self, entry: &ModelEntry, purge: bool) {
+        let Some(store) = &self.store else { return };
+        if purge {
+            store.drop_model(entry.id, true);
+            return;
+        }
+        if let Ok(mut session) = entry.session.try_lock() {
+            if let Err(e) = store.persist_model(entry.id, &entry.name, &mut session) {
+                eprintln!(
+                    "warning: spill snapshot of model {} failed: {e} \
+                     (its WAL still covers every acked append)",
+                    entry.id
+                );
+            }
+        }
+        store.drop_model(entry.id, false);
     }
 
     /// Number of live models.
@@ -223,30 +356,39 @@ impl Registry {
         if self.bytes_total.load(Ordering::Relaxed) <= self.byte_budget {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
-        let mut evicted = 0u64;
-        while self.bytes_total.load(Ordering::Relaxed) > self.byte_budget {
-            let victim = inner
-                .models
-                .values()
-                .filter(|e| e.id != protect)
-                .min_by_key(|e| e.last_used.load(Ordering::Relaxed))
-                .map(|e| e.id);
-            match victim {
-                Some(id) => {
-                    if let Some(e) = inner.models.remove(&id) {
-                        self.bytes_total
-                            .fetch_sub(e.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+        let mut victims: Vec<Arc<ModelEntry>> = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            while self.bytes_total.load(Ordering::Relaxed) > self.byte_budget {
+                let victim = inner
+                    .models
+                    .values()
+                    .filter(|e| e.id != protect)
+                    .min_by_key(|e| e.last_used.load(Ordering::Relaxed))
+                    .map(|e| e.id);
+                match victim {
+                    Some(id) => {
+                        if let Some(e) = inner.models.remove(&id) {
+                            self.bytes_total
+                                .fetch_sub(e.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+                            victims.push(e);
+                        }
                     }
-                    evicted += 1;
+                    // Only the protected model is left; a single
+                    // over-budget model is admitted (documented in the
+                    // module docs).
+                    None => break,
                 }
-                // Only the protected model is left; a single over-budget
-                // model is admitted (documented in the module docs).
-                None => break,
             }
         }
-        if evicted > 0 {
-            self.evicted.fetch_add(evicted, Ordering::Relaxed);
+        if !victims.is_empty() {
+            self.evicted.fetch_add(victims.len() as u64, Ordering::Relaxed);
+            // Byte-pressure eviction is always a spill, never a purge —
+            // done after releasing the map lock (the spill locks each
+            // victim's session).
+            for e in &victims {
+                self.offload(e, false);
+            }
         }
     }
 
@@ -286,9 +428,52 @@ impl Registry {
         )
     }
 
-    /// Counter snapshot merged into the `metrics` wire response.
+    /// Snapshot every live model (or just `only`) to the durable store,
+    /// flushing pending appends and resetting each model's WAL. Returns
+    /// the number of models persisted. Errors if no store is attached or
+    /// `only` names an unknown model.
+    pub fn persist_all(&self, only: Option<ModelId>) -> Result<usize, String> {
+        let store = self.store.as_ref().ok_or("server has no state dir (durability is off)")?;
+        let entries: Vec<Arc<ModelEntry>> = {
+            let inner = self.inner.lock().unwrap();
+            match only {
+                Some(id) => {
+                    vec![inner.models.get(&id).cloned().ok_or_else(|| Self::unknown(id))?]
+                }
+                None => inner.models.values().cloned().collect(),
+            }
+        };
+        let mut persisted = 0;
+        for e in &entries {
+            let mut session = e.session.lock().unwrap();
+            store.persist_model(e.id, &e.name, &mut session)?;
+            persisted += 1;
+        }
+        store.sync_all()?;
+        Ok(persisted)
+    }
+
+    /// Number of live models whose solver state has moved past their last
+    /// snapshot (a crash now would recover them losslessly but not
+    /// solver-state-bitwise). Models busy with an in-flight request are
+    /// counted dirty — the request is mutating them.
+    pub fn dirty_models(&self) -> usize {
+        let Some(store) = &self.store else { return 0 };
+        let entries: Vec<Arc<ModelEntry>> =
+            self.inner.lock().unwrap().models.values().cloned().collect();
+        entries
+            .iter()
+            .filter(|e| match e.session.try_lock() {
+                Ok(s) => store.persisted_epoch(e.id) != Some(s.epoch()),
+                Err(_) => true,
+            })
+            .count()
+    }
+
+    /// Counter snapshot merged into the `metrics` wire response. With a
+    /// durable store attached, persistence counters ride along.
     pub fn stats_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("models", Json::from(self.len())),
             ("model_bytes", Json::from(self.total_bytes())),
             ("byte_budget", Json::from(self.byte_budget)),
@@ -296,7 +481,22 @@ impl Registry {
             ("evicted", Json::from(self.evicted.load(Ordering::Relaxed))),
             ("queries", Json::from(self.queries.load(Ordering::Relaxed))),
             ("appends", Json::from(self.appends.load(Ordering::Relaxed))),
-        ])
+        ];
+        if let Some(store) = &self.store {
+            fields.extend([
+                ("durability", Json::from(store.policy().to_string())),
+                ("snapshots_written", Json::from(store.snapshots_written.load(Ordering::Relaxed))),
+                ("wal_records", Json::from(store.wal_records.load(Ordering::Relaxed))),
+                ("wal_lag_bytes", Json::from(store.wal_lag_bytes())),
+                ("truncated_tails", Json::from(store.truncated_tails.load(Ordering::Relaxed))),
+                ("recovered_models", Json::from(store.recovered_models.load(Ordering::Relaxed))),
+                ("spills", Json::from(store.spills.load(Ordering::Relaxed))),
+                ("reloads", Json::from(store.reloads.load(Ordering::Relaxed))),
+                ("purged", Json::from(store.purged.load(Ordering::Relaxed))),
+                ("dirty_models", Json::from(self.dirty_models())),
+            ]);
+        }
+        Json::obj(fields)
     }
 }
 
@@ -326,9 +526,9 @@ mod tests {
         };
         assert!(sol.report.converged);
         assert_eq!(reg.queries.load(Ordering::Relaxed), 1);
-        assert!(reg.evict(id));
+        assert!(reg.evict(id, false));
         assert!(reg.touch(id).is_none());
-        assert!(!reg.evict(id));
+        assert!(!reg.evict(id, false));
         assert!(reg.is_empty());
     }
 
@@ -425,8 +625,113 @@ mod tests {
     fn ids_are_never_reused_after_eviction() {
         let reg = Registry::new(DEFAULT_BYTE_BUDGET);
         let a = register_one(&reg, 64, 8, 1);
-        reg.evict(a);
+        reg.evict(a, false);
         let b = register_one(&reg, 64, 8, 2);
         assert!(b > a, "model ids must stay monotonic");
+    }
+
+    // ---- durability ----
+
+    use crate::persist::{DurabilityPolicy, Store};
+
+    fn durable_dir(tag: &str) -> std::path::PathBuf {
+        use std::sync::atomic::AtomicUsize;
+        static COUNTER: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "effdim-registry-{tag}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn durable_registry(dir: &std::path::Path) -> Registry {
+        let store = Store::open(dir, DurabilityPolicy::Strict).unwrap();
+        Registry::with_store(DEFAULT_BYTE_BUDGET, Arc::new(store))
+    }
+
+    /// Regression for the evict data-loss bug: a *lazy* append leaves the
+    /// delta rows in the session's pending buffer, and evict used to drop
+    /// the entry — pending rows and all. With a store attached, evict
+    /// spills: the snapshot path flushes the pending delta first, and a
+    /// later touch reloads the model bitwise-equal to a never-spilled twin.
+    #[test]
+    fn evict_spills_pending_lazy_appends_and_reload_restores_them() {
+        use crate::solvers::session::AppendRefresh;
+        let _serial = crate::persist::tests_serial();
+        let dir = durable_dir("lazy-spill");
+        let reg = durable_registry(&dir);
+        let id = register_one(&reg, 96, 12, 5);
+        let twin_reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        let twin_id = register_one(&twin_reg, 96, 12, 5);
+        for (r, i) in [(&reg, id), (&twin_reg, twin_id)] {
+            let ds = synthetic::exponential_decay(8, 12, 11);
+            let entry = r.touch(i).unwrap();
+            let mut s = entry.session.lock().unwrap();
+            s.append(ds.a, ds.b, AppendRefresh::Lazy).unwrap();
+            r.note_append(&entry, &s);
+        }
+        // Spill while the delta still sits in the pending buffer.
+        assert!(reg.evict(id, false));
+        let entry = reg.touch(id).expect("spilled model reloads on demand");
+        let x = {
+            let mut s = entry.session.lock().unwrap();
+            assert_eq!(s.n(), 96 + 8, "pending lazy rows survive the spill");
+            s.solve(0.5, 1e-9).unwrap().x
+        };
+        let twin_x = {
+            let entry = twin_reg.touch(twin_id).unwrap();
+            let mut s = entry.session.lock().unwrap();
+            s.solve(0.5, 1e-9).unwrap().x
+        };
+        let (xb, tb): (Vec<u64>, Vec<u64>) = (
+            x.iter().map(|v| v.to_bits()).collect(),
+            twin_x.iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(xb, tb, "reloaded model must match the never-spilled twin bitwise");
+        // Purge really deletes: no transparent reload afterwards.
+        assert!(reg.evict(id, true));
+        assert!(reg.touch(id).is_none(), "purged model must not reload");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_restores_models_under_their_original_ids() {
+        let _serial = crate::persist::tests_serial();
+        let dir = durable_dir("recover");
+        let (a, b) = {
+            let reg = durable_registry(&dir);
+            let a = register_one(&reg, 64, 8, 1);
+            let b = register_one(&reg, 64, 8, 2);
+            reg.persist_all(None).unwrap();
+            (a, b)
+        };
+        let reg = durable_registry(&dir);
+        assert_eq!(reg.recover().unwrap(), 2);
+        assert!(reg.touch(a).is_some(), "model {a} recovered");
+        assert!(reg.touch(b).is_some(), "model {b} recovered");
+        let c = register_one(&reg, 64, 8, 3);
+        assert!(c > b, "next_id must advance past recovered ids");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dirty_models_tracks_unsnapshotted_solves() {
+        let _serial = crate::persist::tests_serial();
+        let dir = durable_dir("dirty");
+        let reg = durable_registry(&dir);
+        let id = register_one(&reg, 64, 8, 9);
+        assert_eq!(reg.dirty_models(), 0, "registration snapshots the fresh model");
+        let entry = reg.touch(id).unwrap();
+        {
+            let mut s = entry.session.lock().unwrap();
+            s.solve(0.5, 1e-8).unwrap();
+            reg.note_query(&entry, &s);
+        }
+        assert_eq!(reg.dirty_models(), 1, "a solve moves the epoch past the snapshot");
+        reg.persist_all(Some(id)).unwrap();
+        assert_eq!(reg.dirty_models(), 0, "snapshot catches the epoch back up");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -30,10 +30,12 @@ use super::job::JobState;
 use super::protocol::{self, Request};
 use super::registry::{Registry, DEFAULT_BYTE_BUDGET};
 use super::scheduler::Scheduler;
+use crate::persist::{DurabilityPolicy, Store};
 use crate::util::failpoint;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -70,6 +72,14 @@ pub struct ServerConfig {
     pub request_timeout: Option<Duration>,
     /// Maximum concurrent connections before accepts are shed.
     pub max_conns: usize,
+    /// Durable state directory (`serve --state-dir`): registered models
+    /// are snapshotted there, appends are WAL-logged, and startup
+    /// recovers whatever a previous process left behind. `None` =
+    /// RAM-only (the pre-durability behavior).
+    pub state_dir: Option<PathBuf>,
+    /// WAL fsync policy (`serve --durability strict|batch|off`); only
+    /// meaningful with a `state_dir`.
+    pub durability: DurabilityPolicy,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +90,8 @@ impl Default for ServerConfig {
             max_line_bytes: DEFAULT_MAX_LINE_BYTES,
             request_timeout: None,
             max_conns: DEFAULT_MAX_CONNS,
+            state_dir: None,
+            durability: DurabilityPolicy::Strict,
         }
     }
 }
@@ -126,13 +138,32 @@ impl Server {
         // whole server process through the environment.
         failpoint::arm_from_env()
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        // Durable serving: open the state dir and recover whatever a
+        // previous process left behind *before* accepting traffic, so
+        // recovered ids answer from the first request on.
+        let invalid = |e: String| std::io::Error::new(std::io::ErrorKind::InvalidInput, e);
+        let registry = match &config.state_dir {
+            None => Registry::new(config.model_byte_budget),
+            Some(dir) => {
+                let store = Arc::new(Store::open(dir, config.durability).map_err(invalid)?);
+                let registry = Registry::with_store(config.model_byte_budget, store);
+                let recovered = registry.recover().map_err(invalid)?;
+                if recovered > 0 {
+                    eprintln!(
+                        "recovered {recovered} model(s) from {}",
+                        dir.display()
+                    );
+                }
+                registry
+            }
+        };
         let listener = TcpListener::bind(addr)?;
         // Poll for shutdown between accepts.
         listener.set_nonblocking(true)?;
         Ok(Self {
             shared: Arc::new(Shared {
                 scheduler: Scheduler::start(config.workers, 256),
-                registry: Registry::new(config.model_byte_budget),
+                registry,
                 stop: Arc::new(AtomicBool::new(false)),
                 active_conns: AtomicUsize::new(0),
                 config,
@@ -182,6 +213,15 @@ impl Server {
         // response first, and returns.
         for h in conns {
             let _ = h.join();
+        }
+        // Durable shutdown: with every connection drained, snapshot all
+        // live models and hit the fsync barrier, so a graceful stop never
+        // leaves replay debt behind. Best-effort — a full disk must not
+        // turn a clean shutdown into a hang or a panic.
+        if self.shared.registry.store().is_some() {
+            if let Err(e) = self.shared.registry.persist_all(None) {
+                eprintln!("warning: shutdown snapshot failed: {e}");
+            }
         }
     }
 }
@@ -294,14 +334,25 @@ fn respond(req: Request, shared: &Shared) -> String {
         Request::Ping => protocol::ok(vec![("pong", Json::Bool(true))]),
         Request::Health => {
             let draining = shared.stop.load(Ordering::SeqCst);
-            protocol::ok(vec![
+            let mut fields = vec![
                 ("status", Json::from(if draining { "draining" } else { "ok" })),
                 ("backlog", Json::from(scheduler.backlog())),
                 ("models", Json::from(registry.len())),
                 ("model_bytes", Json::from(registry.total_bytes())),
                 ("connections", Json::from(shared.active_conns.load(Ordering::SeqCst))),
                 ("workers", Json::from(shared.config.workers)),
-            ])
+            ];
+            if let Some(store) = registry.store() {
+                fields.extend([
+                    ("durability", Json::from(store.policy().to_string())),
+                    ("dirty_models", Json::from(registry.dirty_models())),
+                    ("wal_lag_bytes", Json::from(store.wal_lag_bytes())),
+                ]);
+                if let Some(age) = store.last_snapshot_age_s() {
+                    fields.push(("last_snapshot_age_s", Json::from(age)));
+                }
+            }
+            protocol::ok(fields)
         }
         Request::Metrics => protocol::ok(vec![
             ("metrics", scheduler.metrics().to_json()),
@@ -412,9 +463,32 @@ fn respond(req: Request, shared: &Shared) -> String {
                 crate::solvers::session::AppendRefresh::Lazy
             };
             let mut session = entry.session.lock().unwrap();
+            // Write-ahead: the delta is logged durably *before* it is
+            // applied, so an ack implies the rows survive a crash. A WAL
+            // write failure rejects the append outright (nothing was
+            // applied); a session rejection rolls the record back (it
+            // must not replay on recovery). The log happens under the
+            // session lock so record order matches apply order.
+            let wal_offset = match registry.store() {
+                None => None,
+                Some(store) => match store.append_record(model, &a, &b, eager) {
+                    Ok(off) => Some(off),
+                    Err(e) => {
+                        registry.note_append(&entry, &session);
+                        return protocol::err(&format!("append not logged: {e}"));
+                    }
+                },
+            };
             session.set_deadline(wall_deadline(shared, deadline_s));
             let outcome = catch_panic(|| session.append(a, b, refresh));
             session.set_deadline(None);
+            if outcome.is_err() {
+                if let (Some(store), Some(off)) = (registry.store(), wal_offset) {
+                    if let Err(e) = store.rollback_append(model, off) {
+                        eprintln!("warning: WAL rollback for model {model} failed: {e}");
+                    }
+                }
+            }
             // Recharge the byte accounting even on error: the session
             // rolls itself back, but the registry's cached size must track
             // whatever state survived.
@@ -431,13 +505,25 @@ fn respond(req: Request, shared: &Shared) -> String {
                 Err(e) => protocol::err(&e),
             }
         }
-        Request::Evict { model } => {
-            if registry.evict(model) {
-                protocol::ok(vec![("evicted", Json::from(model))])
+        Request::Evict { model, purge } => {
+            if registry.evict(model, purge) {
+                protocol::ok(vec![
+                    ("evicted", Json::from(model)),
+                    ("purged", Json::Bool(purge && registry.store().is_some())),
+                ])
             } else {
                 protocol::err(&Registry::unknown(model))
             }
         }
+        Request::Snapshot { model } => match registry.persist_all(model) {
+            Ok(persisted) => protocol::ok(vec![
+                ("snapshotted", Json::from(persisted)),
+                ("wal_lag_bytes", Json::from(
+                    registry.store().map_or(0, |s| s.wal_lag_bytes()),
+                )),
+            ]),
+            Err(e) => protocol::err(&e),
+        },
         Request::Models => protocol::ok(vec![("models", registry.models_json())]),
         Request::Solvers => {
             let entries = crate::solvers::api::registry()
@@ -908,6 +994,100 @@ mod tests {
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
         let resp = client.call(r#"{"cmd":"status","job":12345}"#).unwrap();
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn durable_server_recovers_models_across_restart() {
+        let state_dir = std::env::temp_dir()
+            .join(format!("effdim-server-durable-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&state_dir);
+        let config = || ServerConfig {
+            state_dir: Some(state_dir.clone()),
+            durability: DurabilityPolicy::Strict,
+            ..ServerConfig::default()
+        };
+        let model = {
+            let (addr, _stop, handle) = start_with_config(config());
+            let mut client = Client::connect(addr).unwrap();
+            let reg = client
+                .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":8,"name":"dur"}"#)
+                .unwrap();
+            assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+            let model = reg.get("model").unwrap().as_usize().unwrap();
+            // Health/metrics expose the durability surface.
+            let h = client.call(r#"{"cmd":"health"}"#).unwrap();
+            assert_eq!(h.get("durability").unwrap().as_str(), Some("strict"));
+            assert!(h.get("dirty_models").is_some());
+            assert!(h.get("wal_lag_bytes").is_some());
+            // An append rides the WAL; the explicit snapshot absorbs it.
+            let app = client
+                .call(&format!(
+                    r#"{{"cmd":"append","model":{model},"rows":1,"cols":16,"triplets":[[0,3,1.0]],"b":[0.5]}}"#
+                ))
+                .unwrap();
+            assert_eq!(app.get("ok").unwrap().as_bool(), Some(true), "{app:?}");
+            let snap = client.call(r#"{"cmd":"snapshot"}"#).unwrap();
+            assert_eq!(snap.get("ok").unwrap().as_bool(), Some(true), "{snap:?}");
+            assert_eq!(snap.get("snapshotted").unwrap().as_usize(), Some(1));
+            assert_eq!(snap.get("wal_lag_bytes").unwrap().as_usize(), Some(0));
+            let resp = client.call(r#"{"cmd":"shutdown"}"#).unwrap();
+            assert_eq!(resp.get("stopping").unwrap().as_bool(), Some(true));
+            handle.join().unwrap();
+            model
+        };
+        // Restart over the same state dir: the model answers under its
+        // old id, bitwise-identically to a never-killed twin (all its
+        // mutations were the snapshotted register + the WAL'd append).
+        let (addr, stop, handle) = start_with_config(config());
+        let mut client = Client::connect(addr).unwrap();
+        let q = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5,"include_x":true}}"#))
+            .unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true), "{q:?}");
+        let x_after: Vec<f64> = q
+            .get("result").unwrap().get("x").unwrap()
+            .as_arr().unwrap()
+            .iter().map(|v| v.as_f64().unwrap()).collect();
+        let x_twin = {
+            use crate::solvers::session::{AppendRefresh, ModelSession};
+            let workload = super::super::job::Workload::Synthetic {
+                profile: "exp".into(), n: 128, d: 16, seed: 8,
+            };
+            let (a, b) = workload.materialize().unwrap();
+            let mut twin = ModelSession::new(
+                Arc::new(a), b, crate::sketch::SketchKind::Gaussian, 8,
+            ).unwrap();
+            let delta = crate::linalg::sparse::CsrMatrix::from_triplets(1, 16, &[(0, 3, 1.0)]);
+            twin.append(crate::linalg::Operand::Sparse(delta), vec![0.5], AppendRefresh::Eager)
+                .unwrap();
+            twin.solve(0.5, 1e-8).unwrap().x
+        };
+        assert_eq!(
+            x_twin.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            x_after.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "recovered model must answer bitwise-identically to a never-killed twin"
+        );
+        // Purge makes eviction permanent — no reload-on-demand.
+        let ev = client
+            .call(&format!(r#"{{"cmd":"evict","model":{model},"purge":true}}"#))
+            .unwrap();
+        assert_eq!(ev.get("purged").unwrap().as_bool(), Some(true), "{ev:?}");
+        let gone = client.call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5}}"#)).unwrap();
+        assert_eq!(gone.get("ok").unwrap().as_bool(), Some(false));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+        let _ = std::fs::remove_dir_all(&state_dir);
+    }
+
+    #[test]
+    fn snapshot_without_state_dir_errors_cleanly() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client.call(r#"{"cmd":"snapshot"}"#).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("state dir"));
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();
     }

@@ -162,6 +162,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod persist;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;

@@ -15,7 +15,8 @@
 //! effdim client predict --addr 127.0.0.1:7199 --model 1 --nu 0.5 --row 0.1,0.2,...
 //! effdim client append  --addr 127.0.0.1:7199 --model 1 --data delta.txt \
 //!                --refresh lazy
-//! effdim client evict   --addr 127.0.0.1:7199 --model 1
+//! effdim client evict   --addr 127.0.0.1:7199 --model 1 [--purge]
+//! effdim client snapshot --addr 127.0.0.1:7199 [--model 1]
 //! effdim client models  --addr 127.0.0.1:7199
 //! effdim info    --profile cifar-like --n 1024 --d 128 --nu 1.0
 //! effdim solvers
@@ -87,6 +88,14 @@ const USAGE: &str = "usage: effdim <solve|path|serve|request|client|info|solvers
     (wire \"deadline_s\" overrides per request), --max-conns n bounds
     concurrent connections (excess accepts answer
     {\"ok\":false,\"error\":\"overloaded\",\"retry_after_s\":..})
+  serve durability: --state-dir <dir> persists models (checksummed
+    snapshots + per-model append WAL) and recovers them at startup;
+    --durability strict|batch|off picks the WAL fsync policy (default
+    strict; requires --state-dir)
+  client/request retries: --retries n retries overload sheds and transport
+    errors with exponential backoff + jitter, honoring the server's
+    retry_after_s hint (default 0 = fail fast); --max-backoff-s x caps one
+    backoff sleep (default 30)
   --threads k pins the parallel dense kernels for the whole command
     (default: PALLAS_THREADS env var, else all hardware threads)
   run `effdim solvers` for the registry; see rust/src/main.rs docs for flags";
@@ -361,12 +370,33 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("--max-conns must be >= 1");
         return 2;
     }
+    // Durability: a state dir turns on snapshots + WAL + recovery; the
+    // fsync policy only means something with one.
+    let state_dir = args.get("state-dir").map(std::path::PathBuf::from);
+    let durability = match args.get("durability") {
+        None => effdim::persist::DurabilityPolicy::Strict,
+        Some(v) => {
+            if state_dir.is_none() {
+                eprintln!("--durability requires --state-dir");
+                return 2;
+            }
+            match v.parse() {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        }
+    };
     let config = effdim::coordinator::server::ServerConfig {
         workers,
         model_byte_budget: budget_mb.saturating_mul(1 << 20),
         max_line_bytes: max_request_mb.saturating_mul(1 << 20),
         request_timeout,
         max_conns,
+        state_dir,
+        durability,
     };
     match Server::bind_with_config(addr, config) {
         Ok(server) => {
@@ -382,15 +412,17 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
-/// `effdim client <register|query|predict|evict|models>` — build a model-
-/// registry request (PROTOCOL.md) from flags, send it, print the JSON
-/// response. Exit code 1 when the server answered `"ok":false`.
+/// `effdim client <register|query|predict|evict|snapshot|models>` — build
+/// a model-registry request (PROTOCOL.md) from flags, send it, print the
+/// JSON response. Exit code 1 when the server answered `"ok":false`.
 fn cmd_client(args: &Args) -> i32 {
-    let action = ["register", "query", "predict", "append", "evict", "models"]
+    let action = ["register", "query", "predict", "append", "evict", "snapshot", "models"]
         .into_iter()
         .find(|a| args.has(a));
     let Some(action) = action else {
-        eprintln!("client needs one of: register | query | predict | append | evict | models");
+        eprintln!(
+            "client needs one of: register | query | predict | append | evict | snapshot | models"
+        );
         eprintln!("{USAGE}");
         return 2;
     };
@@ -406,26 +438,96 @@ fn cmd_client(args: &Args) -> i32 {
             return 2;
         }
     };
-    match Client::connect(addr) {
-        Ok(mut client) => match client.call(&payload) {
-            Ok(resp) => {
-                println!("{}", resp.to_string());
-                if resp.get("ok").and_then(Json::as_bool) == Some(true) {
-                    0
-                } else {
-                    1
-                }
-            }
-            Err(e) => {
-                eprintln!("request failed: {e}");
+    let (retries, max_backoff_s) = match retry_flags(args) {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+    match call_with_retries(addr, &payload, retries, max_backoff_s) {
+        Ok(resp) => {
+            println!("{}", resp.to_string());
+            if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                0
+            } else {
                 1
             }
-        },
+        }
         Err(e) => {
-            eprintln!("connect {addr}: {e}");
+            eprintln!("{e}");
             1
         }
     }
+}
+
+/// Parse the shared `--retries` / `--max-backoff-s` client flags.
+fn retry_flags(args: &Args) -> Result<(u32, f64), i32> {
+    let retries = args.get_usize("retries", 0) as u32;
+    let max_backoff_s = args.get_f64("max-backoff-s", 30.0);
+    if !max_backoff_s.is_finite() || max_backoff_s < 0.0 {
+        eprintln!("--max-backoff-s must be a finite non-negative number");
+        return Err(2);
+    }
+    Ok((retries, max_backoff_s))
+}
+
+/// One backoff sleep for the client retry loop: an exponential base
+/// (50 ms, doubling per attempt) scaled by a deterministic
+/// multiplicative jitter in `[0.5, 1.0)`, floored by the server's
+/// `retry_after_s` hint when one was sent, capped at `max_backoff_s`.
+/// `state` is an LCG register advanced once per call, so concurrent
+/// clients seeded differently (e.g. by pid) desynchronize instead of
+/// retrying in lockstep.
+fn backoff_delay_s(attempt: u32, hint_s: Option<f64>, max_backoff_s: f64, state: &mut u64) -> f64 {
+    let base = 0.05 * f64::from(1u32 << attempt.min(16));
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    let jitter = 0.5 + 0.5 * ((*state >> 33) as f64 / (1u64 << 31) as f64);
+    let mut delay = base * jitter;
+    if let Some(h) = hint_s {
+        if h.is_finite() && h > 0.0 {
+            delay = delay.max(h);
+        }
+    }
+    delay.min(max_backoff_s)
+}
+
+/// Connect + send with bounded retries. Retryable outcomes are transport
+/// failures (connect/IO errors) and `{"ok":false,"error":"overloaded"}`
+/// sheds — whose `retry_after_s` hint floors the backoff. Any other
+/// server answer (including semantic errors like "unknown model") is
+/// final: retrying it cannot change the result. When the budget runs
+/// out the last outcome is returned as-is.
+fn call_with_retries(
+    addr: std::net::SocketAddr,
+    payload: &str,
+    retries: u32,
+    max_backoff_s: f64,
+) -> Result<Json, String> {
+    let mut state = u64::from(std::process::id()) ^ 0x9E37_79B9_7F4A_7C15;
+    for attempt in 0..=retries {
+        let outcome = Client::connect(addr)
+            .map_err(|e| format!("connect {addr}: {e}"))
+            .and_then(|mut client| {
+                client.call(payload).map_err(|e| format!("request failed: {e}"))
+            });
+        let hint_s = match &outcome {
+            Ok(resp) => {
+                let shed = resp.get("ok").and_then(Json::as_bool) == Some(false)
+                    && resp.get("error").and_then(Json::as_str) == Some("overloaded");
+                if !shed {
+                    return outcome;
+                }
+                resp.get("retry_after_s").and_then(Json::as_f64)
+            }
+            Err(_) => None,
+        };
+        if attempt == retries {
+            return outcome;
+        }
+        let delay = backoff_delay_s(attempt, hint_s, max_backoff_s, &mut state);
+        if delay > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+        }
+    }
+    unreachable!("the loop returns on its final attempt");
 }
 
 /// Strict comma-list parse for values that go on the wire: any
@@ -604,7 +706,20 @@ fn build_client_request(args: &Args, action: &str) -> Result<String, i32> {
                 }
             }
         }
-        "evict" => fields.push(("model", Json::from(model()?))),
+        "evict" => {
+            fields.push(("model", Json::from(model()?)));
+            if args.has("purge") {
+                // Without --purge an evict on a durable server spills to
+                // disk (reload-on-demand); --purge deletes the disk state.
+                fields.push(("purge", Json::from(true)));
+            }
+        }
+        "snapshot" => {
+            // Bare snapshot flushes every model; --model narrows to one.
+            if args.get("model").is_some() {
+                fields.push(("model", Json::from(model()?)));
+            }
+        }
         "models" => {}
         _ => unreachable!("validated above"),
     }
@@ -643,19 +758,17 @@ fn cmd_request(args: &Args) -> i32 {
             return 2;
         }
     };
-    match Client::connect(addr) {
-        Ok(mut client) => match client.call(payload) {
-            Ok(resp) => {
-                println!("{}", resp.to_string());
-                0
-            }
-            Err(e) => {
-                eprintln!("request failed: {e}");
-                1
-            }
-        },
+    let (retries, max_backoff_s) = match retry_flags(args) {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+    match call_with_retries(addr, payload, retries, max_backoff_s) {
+        Ok(resp) => {
+            println!("{}", resp.to_string());
+            0
+        }
         Err(e) => {
-            eprintln!("connect {addr}: {e}");
+            eprintln!("{e}");
             1
         }
     }
@@ -714,4 +827,70 @@ fn cmd_solvers() -> i32 {
         "\nspec grammar: name[@key=value,...]  (m=<usize> for ihs, rho=<f64> for pcg, threads=<usize> for any randomized solver)"
     );
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use effdim::coordinator::server::ServerConfig;
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
+
+    #[test]
+    fn backoff_is_bounded_jittered_and_honors_the_hint() {
+        let mut state = 42u64;
+        // No hint: each delay lands in [0.5, 1.0) x 50ms x 2^attempt.
+        for attempt in 0..6 {
+            let base = 0.05 * f64::from(1u32 << attempt);
+            let d = backoff_delay_s(attempt, None, 30.0, &mut state);
+            assert!(d >= 0.5 * base && d < base, "attempt {attempt}: {d}");
+        }
+        // The server hint floors the delay...
+        assert!(backoff_delay_s(0, Some(2.5), 30.0, &mut state) >= 2.5);
+        // ...the cap wins over the hint, and bad hints are ignored.
+        assert_eq!(backoff_delay_s(0, Some(10.0), 0.2, &mut state), 0.2);
+        assert!(backoff_delay_s(0, Some(f64::NAN), 30.0, &mut state) < 0.05);
+        assert!(backoff_delay_s(0, Some(f64::INFINITY), 30.0, &mut state) < 0.05);
+        // Deep attempts stay capped instead of overflowing the shift.
+        assert!(backoff_delay_s(63, None, 0.75, &mut state) <= 0.75);
+    }
+
+    #[test]
+    fn jitter_stream_desynchronizes_but_is_deterministic_per_seed() {
+        let (mut a, mut b, mut c) = (7u64, 7u64, 8u64);
+        let da = backoff_delay_s(3, None, 30.0, &mut a);
+        let db = backoff_delay_s(3, None, 30.0, &mut b);
+        let dc = backoff_delay_s(3, None, 30.0, &mut c);
+        assert_eq!(da, db, "same seed, same delay");
+        assert_ne!(da, dc, "different seeds desynchronize");
+    }
+
+    #[test]
+    fn retries_ride_out_an_overload_shed() {
+        let server = effdim::coordinator::server::Server::bind_with_config(
+            "127.0.0.1:0",
+            ServerConfig { max_conns: 1, ..ServerConfig::default() },
+        )
+        .unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let handle = std::thread::spawn(move || server.run());
+        // Occupy the only connection slot.
+        let mut hog = Client::connect(addr).unwrap();
+        let pong = hog.call(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true), "{pong:?}");
+        // Fail-fast (--retries 0) surfaces the shed as the final answer.
+        let shed = call_with_retries(addr, r#"{"cmd":"ping"}"#, 0, 0.05).unwrap();
+        assert_eq!(shed.get("error").and_then(Json::as_str), Some("overloaded"), "{shed:?}");
+        // Release the slot shortly; a retrying client rides the shed out.
+        let release = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            drop(hog);
+        });
+        let resp = call_with_retries(addr, r#"{"cmd":"ping"}"#, 60, 0.25).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        release.join().unwrap();
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
 }

@@ -1,0 +1,427 @@
+//! Byte-level encoding primitives shared by the WAL record format and
+//! the snapshot format: little-endian integers, bit-exact `f64` vectors
+//! (serialized via [`f64::to_bits`] so a decode→encode round trip is the
+//! identity on every value, NaN payloads and signed zeros included), a
+//! storage-kind-preserving [`Operand`] codec, and a table-driven CRC-32
+//! (IEEE 802.3 polynomial — no external crate).
+//!
+//! Every decoder goes through [`Cursor`], which bounds-checks each read
+//! and returns a structured error instead of panicking: a torn or
+//! bit-flipped file must surface as a recoverable decode failure, never
+//! as an index-out-of-bounds abort of the recovering server.
+
+use crate::linalg::sparse::CsrMatrix;
+use crate::linalg::{Matrix, Operand};
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE), table built at compile time.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 (IEEE 802.3 / zlib polynomial) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Writers.
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a little-endian `u32`.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `usize` as a little-endian `u64` (portable across word
+/// sizes; the decoder rejects values that do not fit the host `usize`).
+pub fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+/// Append an `f64` by bit pattern.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// Append a length-prefixed `f64` vector, bit-exact.
+pub fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
+    put_usize(out, v.len());
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+/// Append a length-prefixed `u32` vector.
+pub fn put_u32_slice(out: &mut Vec<u8>, v: &[u32]) {
+    put_usize(out, v.len());
+    for &x in v {
+        put_u32(out, x);
+    }
+}
+
+/// Append a length-prefixed `usize` vector (as `u64`s).
+pub fn put_usize_slice(out: &mut Vec<u8>, v: &[usize]) {
+    put_usize(out, v.len());
+    for &x in v {
+        put_usize(out, x);
+    }
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_usize(out, s.len());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append an `Option<f64>` as a presence tag plus the bit pattern.
+pub fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => put_u8(out, 0),
+        Some(x) => {
+            put_u8(out, 1);
+            put_f64(out, x);
+        }
+    }
+}
+
+/// Append an [`Operand`] preserving its storage kind: dense matrices as
+/// their row-major entry slab, CSR matrices as a per-row
+/// `(count, cols, values)` walk. Both directions are bitwise round-trip
+/// safe — the CSR walk yields already-sorted, duplicate-free triplets,
+/// which [`CsrMatrix::from_triplets`] reassembles verbatim.
+pub fn put_operand(out: &mut Vec<u8>, op: &Operand) {
+    match op {
+        Operand::Dense(m) => {
+            put_u8(out, 0);
+            put_usize(out, m.rows());
+            put_usize(out, m.cols());
+            for &x in m.as_slice() {
+                put_f64(out, x);
+            }
+        }
+        Operand::Sparse(c) => {
+            put_u8(out, 1);
+            put_usize(out, c.rows());
+            put_usize(out, c.cols());
+            for i in 0..c.rows() {
+                let (cols, vals) = c.row(i);
+                put_usize(out, cols.len());
+                for &cc in cols {
+                    put_u32(out, cc);
+                }
+                for &v in vals {
+                    put_f64(out, v);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader.
+
+/// Cap on any single decoded length prefix. A corrupt length field must
+/// fail fast, not drive a multi-gigabyte allocation before the CRC (or
+/// a bounds check) catches it.
+const MAX_DECODE_LEN: u64 = 1 << 33;
+
+/// Bounds-checked sequential reader over an encoded byte buffer.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Start reading at the beginning of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated record: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read a `u8`.
+    pub fn take_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn take_u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn take_u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a `usize` (stored as `u64`; rejects implausible lengths).
+    pub fn take_usize(&mut self) -> Result<usize, String> {
+        let v = self.take_u64()?;
+        if v > MAX_DECODE_LEN {
+            return Err(format!("implausible length field {v}"));
+        }
+        Ok(v as usize)
+    }
+
+    /// Read an `f64` by bit pattern.
+    pub fn take_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// Read a length-prefixed `f64` vector.
+    pub fn take_f64_vec(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.take_usize()?;
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(format!("truncated f64 vector: {n} entries past end"));
+        }
+        (0..n).map(|_| self.take_f64()).collect()
+    }
+
+    /// Read a length-prefixed `u32` vector.
+    pub fn take_u32_vec(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.take_usize()?;
+        if self.remaining() < n.saturating_mul(4) {
+            return Err(format!("truncated u32 vector: {n} entries past end"));
+        }
+        (0..n).map(|_| self.take_u32()).collect()
+    }
+
+    /// Read a length-prefixed `usize` vector.
+    pub fn take_usize_vec(&mut self) -> Result<Vec<usize>, String> {
+        let n = self.take_usize()?;
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(format!("truncated usize vector: {n} entries past end"));
+        }
+        (0..n).map(|_| self.take_usize()).collect()
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn take_str(&mut self) -> Result<String, String> {
+        let n = self.take_usize()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| "invalid UTF-8 in string field".into())
+    }
+
+    /// Read an `Option<f64>`.
+    pub fn take_opt_f64(&mut self) -> Result<Option<f64>, String> {
+        match self.take_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.take_f64()?)),
+            t => Err(format!("bad option tag {t}")),
+        }
+    }
+
+    /// Read an [`Operand`] written by [`put_operand`].
+    pub fn take_operand(&mut self) -> Result<Operand, String> {
+        let tag = self.take_u8()?;
+        let rows = self.take_usize()?;
+        let cols = self.take_usize()?;
+        match tag {
+            0 => {
+                let want = rows.saturating_mul(cols);
+                if self.remaining() < want.saturating_mul(8) {
+                    return Err("truncated dense operand".into());
+                }
+                let mut data = Vec::with_capacity(want);
+                for _ in 0..want {
+                    data.push(self.take_f64()?);
+                }
+                Ok(Operand::Dense(Matrix::from_vec(rows, cols, data)))
+            }
+            1 => {
+                let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+                for i in 0..rows {
+                    let nnz = self.take_usize()?;
+                    if self.remaining() < nnz.saturating_mul(12) {
+                        return Err(format!("truncated CSR row {i}"));
+                    }
+                    let mut row_cols = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        let cc = self.take_u32()? as usize;
+                        if cc >= cols {
+                            return Err(format!("CSR column {cc} out of range (< {cols})"));
+                        }
+                        row_cols.push(cc);
+                    }
+                    for &cc in &row_cols {
+                        trips.push((i, cc, 0.0));
+                    }
+                    let base = trips.len() - nnz;
+                    for k in 0..nnz {
+                        trips[base + k].2 = self.take_f64()?;
+                    }
+                }
+                Ok(Operand::Sparse(CsrMatrix::from_triplets(rows, cols, &trips)))
+            }
+            t => Err(format!("bad operand tag {t}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Canonical IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn primitives_round_trip_bitwise() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_f64(&mut buf, -0.0);
+        put_f64(&mut buf, f64::from_bits(0x7FF8_0000_0000_1234)); // NaN payload
+        put_f64_slice(&mut buf, &[1.5, f64::MIN_POSITIVE, -3.25]);
+        put_u32_slice(&mut buf, &[0, 1, u32::MAX]);
+        put_usize_slice(&mut buf, &[42, 0]);
+        put_str(&mut buf, "modèle");
+        put_opt_f64(&mut buf, None);
+        put_opt_f64(&mut buf, Some(2.5));
+
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.take_u8().unwrap(), 7);
+        assert_eq!(c.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.take_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(c.take_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(c.take_f64().unwrap().to_bits(), 0x7FF8_0000_0000_1234);
+        let v = c.take_f64_vec().unwrap();
+        assert_eq!(v, vec![1.5, f64::MIN_POSITIVE, -3.25]);
+        assert_eq!(c.take_u32_vec().unwrap(), vec![0, 1, u32::MAX]);
+        assert_eq!(c.take_usize_vec().unwrap(), vec![42, 0]);
+        assert_eq!(c.take_str().unwrap(), "modèle");
+        assert_eq!(c.take_opt_f64().unwrap(), None);
+        assert_eq!(c.take_opt_f64().unwrap(), Some(2.5));
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn operand_round_trip_preserves_kind_and_bits() {
+        let dense = Operand::Dense(Matrix::from_vec(
+            2,
+            3,
+            vec![1.0, -0.0, 2.5, f64::MAX, 1e-300, -7.25],
+        ));
+        let sparse = Operand::Sparse(CsrMatrix::from_triplets(
+            3,
+            4,
+            &[(0, 1, 1.5), (0, 3, -2.0), (2, 0, 0.125)],
+        ));
+        for op in [&dense, &sparse] {
+            let mut buf = Vec::new();
+            put_operand(&mut buf, op);
+            let back = Cursor::new(&buf).take_operand().unwrap();
+            assert_eq!(back.rows(), op.rows());
+            assert_eq!(back.cols(), op.cols());
+            match (op, &back) {
+                (Operand::Dense(a), Operand::Dense(b)) => {
+                    let bits = |m: &Matrix| {
+                        m.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    };
+                    assert_eq!(bits(a), bits(b));
+                }
+                (Operand::Sparse(a), Operand::Sparse(b)) => {
+                    for i in 0..a.rows() {
+                        let (ca, va) = a.row(i);
+                        let (cb, vb) = b.row(i);
+                        assert_eq!(ca, cb);
+                        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                        assert_eq!(bits(va), bits(vb));
+                    }
+                }
+                _ => panic!("storage kind changed across round trip"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_reads_error_cleanly_at_every_offset() {
+        let mut buf = Vec::new();
+        put_str(&mut buf, "name");
+        put_f64_slice(&mut buf, &[1.0, 2.0]);
+        put_operand(&mut buf, &Operand::Dense(Matrix::from_vec(1, 2, vec![3.0, 4.0])));
+        for cut in 0..buf.len() {
+            let mut c = Cursor::new(&buf[..cut]);
+            // Some prefixes decode partially; none may panic and the full
+            // sequence must fail before completing.
+            let r = c
+                .take_str()
+                .and_then(|_| c.take_f64_vec())
+                .and_then(|_| c.take_operand());
+            assert!(r.is_err(), "cut at {cut} still decoded fully");
+        }
+    }
+
+    #[test]
+    fn implausible_lengths_are_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX); // absurd length prefix
+        assert!(Cursor::new(&buf).take_f64_vec().is_err());
+        assert!(Cursor::new(&buf).take_usize().is_err());
+    }
+
+    #[test]
+    fn csr_decode_rejects_out_of_range_columns() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 1); // sparse tag
+        put_usize(&mut buf, 1); // rows
+        put_usize(&mut buf, 2); // cols
+        put_usize(&mut buf, 1); // nnz in row 0
+        put_u32(&mut buf, 9); // column out of range
+        put_f64(&mut buf, 1.0);
+        assert!(Cursor::new(&buf).take_operand().is_err());
+    }
+}

@@ -1,0 +1,562 @@
+//! Durable model state: checksummed snapshots + per-model append WAL.
+//!
+//! The serving stack keeps every model in RAM; this module makes that
+//! state survive a crash. Two artifacts per model, under
+//! `<state-dir>/<model-id>/`:
+//!
+//! * **`snapshot.snap`** — a checksummed point-in-time image of the
+//!   session ([`snapshot`]): operand, observations, `A^T b` with its own
+//!   digest, the sketch-engine *replay header* (seeds and per-block RNG
+//!   states, **not** the `S̃A` panel), warm start, and solution-cache
+//!   keys. Written via write-temp + fsync + atomic-rename, so a crash
+//!   mid-snapshot leaves the previous snapshot intact.
+//! * **`wal.log`** — an append-only log of every wire `append` since the
+//!   last snapshot ([`wal`]): length-prefixed, CRC-checksummed records,
+//!   fsynced per [`DurabilityPolicy`].
+//!
+//! Recovery ([`replay`]) loads the snapshot, re-derives the sketch panel
+//! from the replay header, and re-applies the intact WAL tail through
+//! the ordinary append path — bitwise-identical answers when all
+//! post-snapshot mutations were WAL-covered appends. A torn or corrupt
+//! WAL tail is truncated with a logged warning, never a panic.
+//!
+//! The [`Store`] below owns the directory layout and the open WAL
+//! handles, and is what the coordinator's registry talks to.
+
+pub mod codec;
+pub mod replay;
+pub mod snapshot;
+pub mod wal;
+
+use crate::solvers::session::ModelSession;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// When WAL records (and snapshot resets) are forced to stable storage.
+/// The on-disk *format* is identical across policies — only the crash
+/// window differs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DurabilityPolicy {
+    /// fsync every WAL record before acking the append (largest safety,
+    /// highest append latency). The default.
+    Strict,
+    /// Defer fsyncs to snapshot/shutdown barriers ([`Store::sync_all`]);
+    /// a crash between barriers can lose acked-but-unsynced appends.
+    Batch,
+    /// Never fsync; the OS page cache is the only durability. For tests
+    /// and throwaway servers.
+    Off,
+}
+
+impl Default for DurabilityPolicy {
+    fn default() -> Self {
+        Self::Strict
+    }
+}
+
+impl std::fmt::Display for DurabilityPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Strict => "strict",
+            Self::Batch => "batch",
+            Self::Off => "off",
+        })
+    }
+}
+
+impl std::str::FromStr for DurabilityPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "strict" => Ok(Self::Strict),
+            "batch" => Ok(Self::Batch),
+            "off" => Ok(Self::Off),
+            other => Err(format!(
+                "unknown durability policy {other:?} (expected strict, batch, or off)"
+            )),
+        }
+    }
+}
+
+/// Per-model persistence bookkeeping the store keeps in RAM.
+struct ModelMeta {
+    /// The open append log (positioned at its intact length).
+    wal: wal::Wal,
+    /// Session epoch captured by the last snapshot (solver runs bump the
+    /// live epoch; live > persisted means the model is *dirty* — its
+    /// solver state would not recover bitwise until the next snapshot).
+    persisted_epoch: u64,
+    /// When the last snapshot was written (or the model recovered).
+    last_snapshot: Instant,
+}
+
+/// A model recovered from disk at startup.
+pub struct RecoveredModel {
+    /// The directory's model id (ids stay stable across restarts).
+    pub id: u64,
+    /// The display name persisted in the snapshot.
+    pub name: String,
+    /// The rebuilt session, WAL tail already re-applied.
+    pub session: ModelSession,
+}
+
+/// The durable side of the model registry: owns the state directory, one
+/// open WAL per model, and the persistence counters surfaced by
+/// `metrics`. Thread-safe behind `&self` (one mutex over the per-model
+/// map; snapshot/WAL I/O for *different* models still serializes here,
+/// which is fine — appends are far cheaper than the solves they ride
+/// with).
+pub struct Store {
+    root: PathBuf,
+    policy: DurabilityPolicy,
+    models: Mutex<HashMap<u64, ModelMeta>>,
+    /// Snapshots written over the store's lifetime.
+    pub snapshots_written: AtomicU64,
+    /// WAL records appended over the store's lifetime.
+    pub wal_records: AtomicU64,
+    /// Torn/corrupt WAL tails truncated during recovery.
+    pub truncated_tails: AtomicU64,
+    /// Models successfully recovered at startup.
+    pub recovered_models: AtomicU64,
+    /// Models whose on-disk state was dropped (purged) on evict.
+    pub purged: AtomicU64,
+    /// Models spilled to disk (evicted from RAM, state kept on disk).
+    pub spills: AtomicU64,
+    /// Spilled models reloaded on demand.
+    pub reloads: AtomicU64,
+}
+
+impl Store {
+    /// Open (creating if absent) a state directory.
+    pub fn open(root: &Path, policy: DurabilityPolicy) -> Result<Self, String> {
+        std::fs::create_dir_all(root)
+            .map_err(|e| format!("cannot create state dir {}: {e}", root.display()))?;
+        Ok(Self {
+            root: root.to_path_buf(),
+            policy,
+            models: Mutex::new(HashMap::new()),
+            snapshots_written: AtomicU64::new(0),
+            wal_records: AtomicU64::new(0),
+            truncated_tails: AtomicU64::new(0),
+            recovered_models: AtomicU64::new(0),
+            purged: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+        })
+    }
+
+    /// The configured fsync policy.
+    pub fn policy(&self) -> DurabilityPolicy {
+        self.policy
+    }
+
+    fn model_dir(&self, id: u64) -> PathBuf {
+        self.root.join(id.to_string())
+    }
+
+    fn snapshot_path(&self, id: u64) -> PathBuf {
+        self.model_dir(id).join("snapshot.snap")
+    }
+
+    fn wal_path(&self, id: u64) -> PathBuf {
+        self.model_dir(id).join("wal.log")
+    }
+
+    /// Recover every model the state directory holds: decode each
+    /// snapshot, re-derive its sketch, re-apply the intact WAL tail
+    /// (truncating torn/corrupt tails with a logged warning), and leave
+    /// the WAL open for further appends. A model whose artifacts are
+    /// damaged beyond its WAL tail is **skipped with a warning**, never a
+    /// panic — one bad model must not take down the whole server.
+    /// Returns the survivors sorted by id.
+    pub fn recover_all(&self) -> Result<Vec<RecoveredModel>, String> {
+        let mut ids = Vec::new();
+        let entries = std::fs::read_dir(&self.root)
+            .map_err(|e| format!("cannot read state dir {}: {e}", self.root.display()))?;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            if let Some(id) = name.to_str().and_then(|s| s.parse::<u64>().ok()) {
+                if entry.path().is_dir() {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        let mut out = Vec::new();
+        for id in ids {
+            match self.recover_one(id) {
+                Ok(model) => {
+                    self.recovered_models.fetch_add(1, Ordering::Relaxed);
+                    out.push(model);
+                }
+                Err(e) => {
+                    eprintln!("warning: skipping model {id} during recovery: {e}");
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Recover one model directory and register its meta (open WAL,
+    /// persisted epoch) with the store.
+    fn recover_one(&self, id: u64) -> Result<RecoveredModel, String> {
+        let snap = snapshot::load(&self.snapshot_path(id))?;
+        let name = snap.name.clone();
+        let persisted_epoch = snap.epoch;
+        let mut session = replay::rebuild_session(snap)?;
+        let wal_path = self.wal_path(id);
+        let scan = wal::scan(&wal_path).map_err(|e| format!("WAL scan failed: {e}"))?;
+        if scan.truncated_tail {
+            self.truncated_tails.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "warning: model {id}: torn or corrupt WAL tail past byte {} — truncating \
+                 ({} intact records kept)",
+                scan.valid_len,
+                scan.records.len()
+            );
+        }
+        replay::apply_wal(&mut session, &scan.records)?;
+        let wal = wal::Wal::open(&wal_path, self.policy, scan.valid_len)
+            .map_err(|e| format!("cannot reopen WAL: {e}"))?;
+        self.models.lock().unwrap().insert(
+            id,
+            ModelMeta { wal, persisted_epoch, last_snapshot: Instant::now() },
+        );
+        Ok(RecoveredModel { id, name, session })
+    }
+
+    /// Write a fresh snapshot of `session` (flushing any pending lazy
+    /// append first) and reset the model's WAL — the snapshot absorbs
+    /// everything the log covered. Creates the model's directory and WAL
+    /// on first call (i.e. at `register`).
+    pub fn persist_model(
+        &self,
+        id: u64,
+        name: &str,
+        session: &mut ModelSession,
+    ) -> Result<(), String> {
+        let bytes = snapshot::encode_session(name, session)?;
+        let dir = self.model_dir(id);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("cannot create model dir {}: {e}", dir.display()))?;
+        snapshot::write_atomic(&self.snapshot_path(id), &bytes)?;
+        let mut models = self.models.lock().unwrap();
+        let meta = match models.entry(id) {
+            std::collections::hash_map::Entry::Occupied(o) => o.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let wal = wal::Wal::open(&self.wal_path(id), self.policy, 0)
+                    .map_err(|e| format!("cannot open WAL: {e}"))?;
+                v.insert(ModelMeta { wal, persisted_epoch: 0, last_snapshot: Instant::now() })
+            }
+        };
+        meta.wal.truncate_to(0)?;
+        meta.persisted_epoch = session.epoch();
+        meta.last_snapshot = Instant::now();
+        drop(models);
+        self.snapshots_written.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Log one wire `append` **before** it is applied to the session.
+    /// Returns the rollback offset to hand to [`Store::rollback_append`]
+    /// if the session subsequently rejects the delta.
+    pub fn append_record(
+        &self,
+        id: u64,
+        a: &crate::linalg::Operand,
+        b: &[f64],
+        eager: bool,
+    ) -> Result<u64, String> {
+        let payload = wal::encode_append(a, b, eager);
+        let mut models = self.models.lock().unwrap();
+        let meta = models.get_mut(&id).ok_or_else(|| format!("model {id} has no WAL"))?;
+        let offset = meta.wal.append(&payload)?;
+        self.wal_records.fetch_add(1, Ordering::Relaxed);
+        Ok(offset)
+    }
+
+    /// Remove a logged append the session rejected — the record must not
+    /// replay on recovery.
+    pub fn rollback_append(&self, id: u64, offset: u64) -> Result<(), String> {
+        let mut models = self.models.lock().unwrap();
+        let meta = models.get_mut(&id).ok_or_else(|| format!("model {id} has no WAL"))?;
+        meta.wal.truncate_to(offset)
+    }
+
+    /// Forget a model. With `purge` the on-disk state is deleted too
+    /// (explicit `evict`); without it the files stay for a later
+    /// [`Store::load_model`] (LRU spill).
+    pub fn drop_model(&self, id: u64, purge: bool) {
+        self.models.lock().unwrap().remove(&id);
+        if purge {
+            let _ = std::fs::remove_dir_all(self.model_dir(id));
+            self.purged.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.spills.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether a spilled model's state is still on disk.
+    pub fn has_spilled(&self, id: u64) -> bool {
+        !self.models.lock().unwrap().contains_key(&id)
+            && self.snapshot_path(id).is_file()
+    }
+
+    /// Reload a spilled model from disk (recovery path, counted as a
+    /// reload). Fails if the model was purged or never persisted.
+    pub fn load_model(&self, id: u64) -> Result<RecoveredModel, String> {
+        if self.models.lock().unwrap().contains_key(&id) {
+            return Err(format!("model {id} is already live"));
+        }
+        let model = self.recover_one(id)?;
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(model)
+    }
+
+    /// Epoch the model's last snapshot captured (`None` if the model has
+    /// no persisted state). A live session whose epoch is greater is
+    /// *dirty*: recovery would be lossless but not solver-state-bitwise
+    /// until the next snapshot.
+    pub fn persisted_epoch(&self, id: u64) -> Option<u64> {
+        self.models.lock().unwrap().get(&id).map(|m| m.persisted_epoch)
+    }
+
+    /// Total bytes of WAL not yet absorbed by a snapshot, across all live
+    /// models — the replay debt a crash right now would incur.
+    pub fn wal_lag_bytes(&self) -> u64 {
+        self.models.lock().unwrap().values().map(|m| m.wal.len()).sum()
+    }
+
+    /// Age in seconds of the *oldest* live snapshot (`None` when no model
+    /// is persisted) — the staleness bound on recovery.
+    pub fn last_snapshot_age_s(&self) -> Option<f64> {
+        self.models
+            .lock()
+            .unwrap()
+            .values()
+            .map(|m| m.last_snapshot.elapsed().as_secs_f64())
+            .fold(None, |acc, x| Some(acc.map_or(x, |a: f64| a.max(x))))
+    }
+
+    /// Force every model's WAL to stable storage — the batch policy's
+    /// barrier (graceful shutdown, periodic checkpoints).
+    pub fn sync_all(&self) -> Result<(), String> {
+        for meta in self.models.lock().unwrap().values_mut() {
+            meta.wal.sync()?;
+        }
+        Ok(())
+    }
+}
+
+/// Serializes tests that arm process-global failpoints against tests
+/// that would otherwise trip them (failpoint state is shared across the
+/// whole test binary). Recovers from poisoning so one failing test does
+/// not cascade.
+#[cfg(test)]
+pub(crate) fn tests_serial() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::OnceLock;
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::Operand;
+    use crate::sketch::SketchKind;
+    use crate::solvers::session::AppendRefresh;
+    use std::path::PathBuf;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    fn tmp(tag: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "effdim-store-{}-{}-{}",
+            std::process::id(),
+            tag,
+            SEQ.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn fresh_session(n: usize, d: usize, seed: u64) -> ModelSession {
+        let ds = synthetic::exponential_decay(n, d, seed);
+        ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 7).unwrap()
+    }
+
+    #[test]
+    fn durability_policy_parses_and_displays() {
+        for (s, p) in [
+            ("strict", DurabilityPolicy::Strict),
+            ("batch", DurabilityPolicy::Batch),
+            ("off", DurabilityPolicy::Off),
+        ] {
+            assert_eq!(s.parse::<DurabilityPolicy>().unwrap(), p);
+            assert_eq!(p.to_string(), s);
+        }
+        assert!("eventually".parse::<DurabilityPolicy>().is_err());
+        assert_eq!(DurabilityPolicy::default(), DurabilityPolicy::Strict);
+    }
+
+    #[test]
+    fn store_round_trip_snapshot_wal_recover() {
+        let root = tmp("roundtrip");
+        let delta = synthetic::exponential_decay(96, 12, 41);
+        let (live_sol, live_atb) = {
+            let store = Store::open(&root, DurabilityPolicy::Strict).unwrap();
+            let mut live = fresh_session(96, 12, 40);
+            live.solve(0.5, 1e-8).unwrap();
+            store.persist_model(3, "demo", &mut live).unwrap();
+            // One WAL-covered append after the snapshot.
+            let a = Operand::from(delta.a.dense().into_owned());
+            store.append_record(3, &a, &delta.b, false).unwrap();
+            live.append(a, delta.b.clone(), AppendRefresh::Lazy).unwrap();
+            assert!(store.wal_lag_bytes() > 0);
+            assert_eq!(store.persisted_epoch(3), Some(live.epoch()));
+            (live.solve(0.25, 1e-9).unwrap(), live.atb().to_vec())
+        };
+        // "Crash": a fresh store over the same directory recovers the
+        // model with the WAL tail applied, bitwise.
+        let store = Store::open(&root, DurabilityPolicy::Strict).unwrap();
+        let mut recovered = store.recover_all().unwrap();
+        assert_eq!(recovered.len(), 1);
+        let rec = &mut recovered[0];
+        assert_eq!((rec.id, rec.name.as_str()), (3, "demo"));
+        assert_eq!(bits(rec.session.atb()), bits(&live_atb));
+        let sol = rec.session.solve(0.25, 1e-9).unwrap();
+        assert_eq!(bits(&sol.x), bits(&live_sol.x));
+        assert_eq!(store.recovered_models.load(Ordering::Relaxed), 1);
+        assert_eq!(store.truncated_tails.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn torn_wal_tail_is_truncated_not_fatal() {
+        let root = tmp("torn");
+        {
+            let store = Store::open(&root, DurabilityPolicy::Off).unwrap();
+            let mut s = fresh_session(64, 8, 50);
+            store.persist_model(1, "torn", &mut s).unwrap();
+            let d = synthetic::exponential_decay(4, 8, 51);
+            let a = Operand::from(d.a.dense().into_owned());
+            store.append_record(1, &a, &d.b, true).unwrap();
+        }
+        // Tear the last 5 bytes off the WAL.
+        let wal_path = root.join("1").join("wal.log");
+        let data = std::fs::read(&wal_path).unwrap();
+        std::fs::write(&wal_path, &data[..data.len() - 5]).unwrap();
+        let store = Store::open(&root, DurabilityPolicy::Off).unwrap();
+        let recovered = store.recover_all().unwrap();
+        assert_eq!(recovered.len(), 1, "model survives a torn tail");
+        assert_eq!(recovered[0].session.n(), 64, "torn append dropped");
+        assert_eq!(store.truncated_tails.load(Ordering::Relaxed), 1);
+        // The reopened WAL accepts fresh appends after the truncation.
+        let d = synthetic::exponential_decay(2, 8, 52);
+        let a = Operand::from(d.a.dense().into_owned());
+        store.append_record(1, &a, &d.b, true).unwrap();
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn damaged_snapshot_skips_model_with_warning_not_panic() {
+        let root = tmp("damaged");
+        {
+            let store = Store::open(&root, DurabilityPolicy::Off).unwrap();
+            let mut good = fresh_session(64, 8, 60);
+            store.persist_model(1, "good", &mut good).unwrap();
+            let mut bad = fresh_session(64, 8, 61);
+            store.persist_model(2, "bad", &mut bad).unwrap();
+        }
+        // Corrupt model 2's snapshot body.
+        let snap_path = root.join("2").join("snapshot.snap");
+        let mut data = std::fs::read(&snap_path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0xFF;
+        std::fs::write(&snap_path, &data).unwrap();
+        let store = Store::open(&root, DurabilityPolicy::Off).unwrap();
+        let recovered = store.recover_all().unwrap();
+        assert_eq!(recovered.len(), 1, "only the intact model recovers");
+        assert_eq!(recovered[0].id, 1);
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn rollback_append_removes_the_rejected_record() {
+        let root = tmp("rollback");
+        let store = Store::open(&root, DurabilityPolicy::Strict).unwrap();
+        let mut s = fresh_session(64, 8, 70);
+        store.persist_model(1, "rb", &mut s).unwrap();
+        // A wrong-width delta: logged, rejected by the session, rolled
+        // back — it must not replay on recovery.
+        let bad = Operand::from(crate::linalg::Matrix::zeros(1, 3));
+        let off = store.append_record(1, &bad, &[1.0], true).unwrap();
+        assert!(s.append(bad, vec![1.0], AppendRefresh::Eager).is_err());
+        store.rollback_append(1, off).unwrap();
+        assert_eq!(store.wal_lag_bytes(), 0);
+        drop(store);
+        let store = Store::open(&root, DurabilityPolicy::Strict).unwrap();
+        let recovered = store.recover_all().unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].session.n(), 64, "rolled-back record did not replay");
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn spill_keeps_state_purge_removes_it() {
+        let root = tmp("spill");
+        let store = Store::open(&root, DurabilityPolicy::Off).unwrap();
+        let mut s = fresh_session(64, 8, 80);
+        s.solve(0.5, 1e-8).unwrap();
+        let sol_live = s.solve(0.3, 1e-9).unwrap();
+        store.persist_model(5, "spilled", &mut s).unwrap();
+        store.drop_model(5, false);
+        assert!(store.has_spilled(5));
+        // Reload on demand: bitwise the same answers.
+        let mut back = store.load_model(5).unwrap();
+        assert_eq!(back.name, "spilled");
+        let sol_back = back.session.solve(0.3, 1e-9).unwrap();
+        assert_eq!(bits(&sol_back.x), bits(&sol_live.x));
+        assert_eq!(store.reloads.load(Ordering::Relaxed), 1);
+        // Purge deletes the files for good.
+        store.drop_model(5, true);
+        assert!(!store.has_spilled(5));
+        assert!(store.load_model(5).is_err());
+        assert_eq!(store.purged.load(Ordering::Relaxed), 1);
+        let _ = std::fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn snapshot_resets_the_wal_and_epoch_tracking() {
+        let root = tmp("reset");
+        let store = Store::open(&root, DurabilityPolicy::Batch).unwrap();
+        let mut s = fresh_session(64, 8, 90);
+        store.persist_model(1, "m", &mut s).unwrap();
+        let d = synthetic::exponential_decay(4, 8, 91);
+        let a = Operand::from(d.a.dense().into_owned());
+        store.append_record(1, &a, &d.b, true).unwrap();
+        s.append(a, d.b.clone(), AppendRefresh::Eager).unwrap();
+        assert!(store.wal_lag_bytes() > 0);
+        s.solve(0.5, 1e-8).unwrap(); // dirty: live epoch moved past snapshot
+        assert!(s.epoch() > store.persisted_epoch(1).unwrap());
+        store.persist_model(1, "m", &mut s).unwrap();
+        assert_eq!(store.wal_lag_bytes(), 0, "snapshot absorbs the log");
+        assert_eq!(store.persisted_epoch(1), Some(s.epoch()));
+        assert_eq!(store.snapshots_written.load(Ordering::Relaxed), 2);
+        assert!(store.last_snapshot_age_s().unwrap() >= 0.0);
+        store.sync_all().unwrap();
+        let _ = std::fs::remove_dir_all(root);
+    }
+}

@@ -1,0 +1,204 @@
+//! Session reconstruction: snapshot + WAL tail → a live [`ModelSession`].
+//!
+//! Recovery composes the two persistence artifacts in commit order:
+//! first the snapshot is decoded and the sketch is **re-derived** from
+//! its replay header against the recovered operand
+//! ([`SketchEngine::from_replay`]) — bitwise-identical to the panel the
+//! exporting server held — then every intact WAL record is re-applied
+//! through the ordinary [`ModelSession::append`] path with its original
+//! eager/lazy flag, so the recovered session consumes RNG draws in
+//! exactly the sequence the dead server did. When the only mutations
+//! after the last snapshot were appends (the WAL-covered case), the
+//! recovered session answers **bitwise-identically** to a never-killed
+//! twin; after un-snapshotted *solves* (a dirty model) recovery is still
+//! correct and lossless — the operand, observations and `A^T b` replay
+//! exactly — but the solver state legitimately differs until the next
+//! snapshot.
+
+use super::snapshot::ModelSnapshot;
+use super::wal;
+use crate::linalg::Operand;
+use crate::rng::Xoshiro256;
+use crate::sketch::engine::SketchEngine;
+use crate::solvers::adaptive::AdaptiveSessionState;
+use crate::solvers::session::{AppendRefresh, ModelSession};
+use crate::util::failpoint;
+use std::sync::Arc;
+
+/// Rebuild a session from a decoded snapshot: re-derive the sketch
+/// panel from the replay header, restore the factorization at the
+/// persisted `nu`, and reattach the RNG mid-stream. The
+/// `persist.recover` failpoint fires before any reconstruction work.
+pub fn rebuild_session(snap: ModelSnapshot) -> Result<ModelSession, String> {
+    failpoint::check("persist.recover")?;
+    snap.verify_atb_digest()?;
+    let a = Arc::new(snap.a);
+    let state = match snap.state {
+        None => None,
+        Some(st) => {
+            let engine = match st.engine {
+                None => None,
+                Some(replay) => {
+                    let aref: &Operand = &a;
+                    Some(
+                        SketchEngine::from_replay(replay, aref.as_ref())
+                            .map_err(|e| format!("sketch replay failed: {e}"))?,
+                    )
+                }
+            };
+            let rng = Xoshiro256::from_state(st.rng_state.0, st.rng_state.1);
+            Some(
+                AdaptiveSessionState::restore(engine, st.cache_nu, rng, &a)
+                    .map_err(|e| format!("factorization restore failed: {e}"))?,
+            )
+        }
+    };
+    ModelSession::restore(
+        a,
+        snap.b,
+        snap.atb,
+        snap.kind,
+        snap.seed,
+        state,
+        snap.warm,
+        snap.queries,
+        snap.epoch,
+    )
+}
+
+/// Re-apply intact WAL payloads (in log order) to a rebuilt session
+/// through the ordinary append path, preserving each record's original
+/// eager/lazy refresh flag. Returns the number of records applied.
+pub fn apply_wal(session: &mut ModelSession, records: &[Vec<u8>]) -> Result<usize, String> {
+    for (i, payload) in records.iter().enumerate() {
+        let rec = wal::decode_append(payload)
+            .map_err(|e| format!("WAL record {i} undecodable: {e}"))?;
+        let refresh = if rec.eager { AppendRefresh::Eager } else { AppendRefresh::Lazy };
+        session
+            .append(rec.a, rec.b, refresh)
+            .map_err(|e| format!("WAL record {i} failed to apply: {e}"))?;
+    }
+    Ok(records.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::Matrix;
+    use crate::persist::snapshot::{decode, encode_session};
+    use crate::sketch::SketchKind;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Full (n, d) dataset split into a base session's rows plus two
+    /// append deltas of `dn` rows each.
+    #[allow(clippy::type_complexity)]
+    fn staged(
+        n: usize,
+        d: usize,
+        dn: usize,
+        seed: u64,
+    ) -> (Matrix, Vec<f64>, Vec<(Matrix, Vec<f64>)>) {
+        let ds = synthetic::exponential_decay(n, d, seed);
+        let full = ds.a.dense().into_owned();
+        let base_rows = n - 2 * dn;
+        let base = Matrix::from_fn(base_rows, d, |i, j| full.get(i, j));
+        let mut deltas = Vec::new();
+        for k in 0..2 {
+            let r0 = base_rows + k * dn;
+            let delta = Matrix::from_fn(dn, d, |i, j| full.get(r0 + i, j));
+            deltas.push((delta, ds.b[r0..r0 + dn].to_vec()));
+        }
+        (base, ds.b[..base_rows].to_vec(), deltas)
+    }
+
+    #[test]
+    fn rebuilt_sessions_answer_bitwise_for_all_families() {
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+            let ds = synthetic::exponential_decay(96, 12, 80);
+            let mut live =
+                ModelSession::new(Arc::new(ds.a), ds.b, kind, 9).unwrap();
+            live.solve(0.5, 1e-8).unwrap();
+            let snap = decode(&encode_session("m", &mut live).unwrap()).unwrap();
+            let mut rebuilt = rebuild_session(snap).unwrap();
+            assert_eq!(rebuilt.m(), live.m(), "{kind:?}: replayed sketch size differs");
+            // Fresh (uncached in both) queries must agree to the bit.
+            let a = live.solve(0.3, 1e-9).unwrap();
+            let b = rebuilt.solve(0.3, 1e-9).unwrap();
+            assert_eq!(bits(&a.x), bits(&b.x), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn snapshot_plus_wal_replay_matches_never_killed_twin_bitwise() {
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+            let (base, b_base, deltas) = staged(120, 10, 5, 81);
+            let mut live = ModelSession::new(
+                Arc::new(Operand::from(base)),
+                b_base,
+                kind,
+                11,
+            )
+            .unwrap();
+            live.solve(0.6, 1e-8).unwrap();
+            // Snapshot, then stream two appends that only the WAL covers
+            // (one lazy, one eager — the flag must replay too).
+            let snapshot_bytes = encode_session("twin", &mut live).unwrap();
+            let mut wal_payloads = Vec::new();
+            for (k, (delta, db)) in deltas.iter().enumerate() {
+                let eager = k == 1;
+                wal_payloads.push(wal::encode_append(
+                    &Operand::from(delta.clone()),
+                    db,
+                    eager,
+                ));
+                let refresh =
+                    if eager { AppendRefresh::Eager } else { AppendRefresh::Lazy };
+                live.append(Operand::from(delta.clone()), db.clone(), refresh).unwrap();
+            }
+            // "Crash": rebuild purely from the persisted artifacts.
+            let mut recovered = rebuild_session(decode(&snapshot_bytes).unwrap()).unwrap();
+            let applied = apply_wal(&mut recovered, &wal_payloads).unwrap();
+            assert_eq!(applied, 2);
+            assert_eq!(recovered.n(), live.n());
+            assert_eq!(bits(recovered.atb()), bits(live.atb()), "{kind:?}: atb diverged");
+            // The never-killed twin and the recovered server must answer a
+            // fresh query identically to the bit.
+            let lx = live.solve(0.45, 1e-9).unwrap();
+            let rx = recovered.solve(0.45, 1e-9).unwrap();
+            assert_eq!(bits(&lx.x), bits(&rx.x), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn unsolved_snapshot_round_trips_and_first_solve_matches() {
+        let ds = synthetic::exponential_decay(64, 8, 82);
+        let mut live =
+            ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 13).unwrap();
+        let snap = decode(&encode_session("cold", &mut live).unwrap()).unwrap();
+        let mut rebuilt = rebuild_session(snap).unwrap();
+        let a = live.solve(0.8, 1e-8).unwrap();
+        let b = rebuilt.solve(0.8, 1e-8).unwrap();
+        assert_eq!(bits(&a.x), bits(&b.x));
+    }
+
+    #[test]
+    fn bad_wal_records_are_structured_errors() {
+        let ds = synthetic::exponential_decay(64, 8, 83);
+        let mut s =
+            ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 13).unwrap();
+        let err = apply_wal(&mut s, &[vec![0xFF, 0x00]]).unwrap_err();
+        assert!(err.contains("record 0"), "{err}");
+        // A wrong-width append fails to apply but never panics.
+        let bad = wal::encode_append(
+            &Operand::from(Matrix::zeros(1, 3)),
+            &[1.0],
+            false,
+        );
+        let err = apply_wal(&mut s, &[bad]).unwrap_err();
+        assert!(err.contains("failed to apply"), "{err}");
+    }
+}

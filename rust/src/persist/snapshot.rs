@@ -1,0 +1,551 @@
+//! Checksummed model snapshots.
+//!
+//! A snapshot captures everything needed to rebuild a
+//! [`ModelSession`] that answers **bitwise-identically** to the live
+//! one, while staying compact: the operand and observations are stored
+//! verbatim, but the sketch is stored as its *replay header*
+//! ([`EngineReplay`] — per-block RNG snapshots and padding/selection
+//! structure), never the `m x d` applied panel, which recovery
+//! re-derives from the operand
+//! ([`SketchEngine::from_replay`](crate::sketch::engine::SketchEngine::from_replay)).
+//! `A^T b` is accumulated incrementally across appends, so its exact bit
+//! pattern is history-dependent: the snapshot stores its bytes inline
+//! plus a CRC digest that recovery re-verifies against the decoded
+//! vector ([`ModelSnapshot::verify_atb_digest`]).
+//!
+//! The whole file carries a trailing CRC-32 over every preceding byte;
+//! decode rejects magic/version/CRC mismatches with a structured error
+//! (never a panic), so a half-written or bit-flipped snapshot surfaces
+//! as "recover from the previous one", not a crash loop.
+//!
+//! Writes go through [`write_atomic`]: write `<file>.tmp`, fsync, rename
+//! over the final name, fsync the directory — a crash at any point
+//! leaves either the old snapshot or the new one, never a torn hybrid.
+
+use super::codec::{self, Cursor};
+use crate::linalg::Operand;
+use crate::rng::Xoshiro256;
+use crate::sketch::engine::{EngineReplay, GaussianReplay, ReplayState, SparseReplay, SrhtReplay};
+use crate::sketch::SketchKind;
+use crate::solvers::session::ModelSession;
+use crate::util::failpoint;
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Snapshot file magic: `"EFDS"` little-endian.
+pub const SNAPSHOT_MAGIC: u32 = 0x5344_4645;
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Decoded persistent state of one model.
+pub struct ModelSnapshot {
+    /// Registered model name.
+    pub name: String,
+    /// Sketch family the session grows.
+    pub kind: SketchKind,
+    /// Solver seed.
+    pub seed: u64,
+    /// The data operand, storage kind preserved.
+    pub a: Operand,
+    /// Observations `b`.
+    pub b: Vec<f64>,
+    /// The incrementally accumulated `A^T b`, bytes verbatim.
+    pub atb: Vec<f64>,
+    /// Stored CRC digest of the `atb` bit patterns.
+    pub atb_digest: u32,
+    /// Solver state, if the session had solved at least once.
+    pub state: Option<SolverStateSnapshot>,
+    /// Warm-start vector from the last primary-RHS solve.
+    pub warm: Option<Vec<f64>>,
+    /// `(nu_bits, eps_bits)` keys the solution cache held (the vectors
+    /// are not persisted — recovered sessions re-answer from state).
+    pub cache_keys: Vec<(u64, u64)>,
+    /// Lifetime query counter at snapshot time.
+    pub queries: u64,
+    /// Mutation epoch at snapshot time.
+    pub epoch: u64,
+}
+
+/// Persistent form of an
+/// [`AdaptiveSessionState`](crate::solvers::adaptive::AdaptiveSessionState).
+pub struct SolverStateSnapshot {
+    /// Sketch replay header, or `None` at the exact-Hessian cap.
+    pub engine: Option<EngineReplay>,
+    /// Regularization level the Woodbury factorization was built at.
+    pub cache_nu: f64,
+    /// Session RNG state (core words plus the cached polar spare).
+    pub rng_state: ([u64; 4], Option<f64>),
+}
+
+impl ModelSnapshot {
+    /// Re-verify the stored `A^T b` digest against the decoded vector.
+    /// Decode already checks this; recovery calls it once more after any
+    /// further handling as defense in depth.
+    pub fn verify_atb_digest(&self) -> Result<(), String> {
+        let got = atb_digest(&self.atb);
+        if got != self.atb_digest {
+            return Err(format!(
+                "A^T b digest mismatch: stored {:#010x}, computed {got:#010x}",
+                self.atb_digest
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// CRC digest of an `A^T b` vector's bit patterns.
+pub fn atb_digest(atb: &[f64]) -> u32 {
+    let mut buf = Vec::with_capacity(8 + atb.len() * 8);
+    codec::put_f64_slice(&mut buf, atb);
+    codec::crc32(&buf)
+}
+
+fn kind_tag(kind: SketchKind) -> u8 {
+    match kind {
+        SketchKind::Gaussian => 0,
+        SketchKind::Srht => 1,
+        SketchKind::Sparse => 2,
+    }
+}
+
+fn kind_from_tag(tag: u8) -> Result<SketchKind, String> {
+    match tag {
+        0 => Ok(SketchKind::Gaussian),
+        1 => Ok(SketchKind::Srht),
+        2 => Ok(SketchKind::Sparse),
+        t => Err(format!("bad sketch-kind tag {t}")),
+    }
+}
+
+fn put_rng_state(out: &mut Vec<u8>, state: &([u64; 4], Option<f64>)) {
+    for w in state.0 {
+        codec::put_u64(out, w);
+    }
+    codec::put_opt_f64(out, state.1);
+}
+
+fn take_rng_state(c: &mut Cursor<'_>) -> Result<([u64; 4], Option<f64>), String> {
+    let mut s = [0u64; 4];
+    for w in &mut s {
+        *w = c.take_u64()?;
+    }
+    Ok((s, c.take_opt_f64()?))
+}
+
+fn put_engine(out: &mut Vec<u8>, r: &EngineReplay) {
+    codec::put_u8(out, kind_tag(r.kind));
+    codec::put_usize(out, r.n);
+    match &r.state {
+        ReplayState::Gaussian { blocks } => {
+            codec::put_u8(out, 0);
+            codec::put_usize(out, blocks.len());
+            for b in blocks {
+                codec::put_usize(out, b.rows);
+                codec::put_usize(out, b.segments.len());
+                for (rng, cols) in &b.segments {
+                    put_rng_state(out, &rng.state());
+                    codec::put_usize(out, *cols);
+                }
+            }
+        }
+        ReplayState::Srht { blocks, taken } => {
+            codec::put_u8(out, 1);
+            codec::put_usize(out, *taken);
+            codec::put_usize(out, blocks.len());
+            for b in blocks {
+                codec::put_usize(out, b.row_offset);
+                codec::put_usize(out, b.n_rows);
+                codec::put_f64_slice(out, &b.signs);
+                codec::put_usize_slice(out, &b.order);
+            }
+        }
+        ReplayState::Sparse { blocks } => {
+            codec::put_u8(out, 2);
+            codec::put_usize(out, blocks.len());
+            for b in blocks {
+                codec::put_usize(out, b.rows);
+                codec::put_u32_slice(out, &b.hash);
+                codec::put_f64_slice(out, &b.signs);
+            }
+        }
+    }
+}
+
+fn take_engine(c: &mut Cursor<'_>) -> Result<EngineReplay, String> {
+    let kind = kind_from_tag(c.take_u8()?)?;
+    let n = c.take_usize()?;
+    let state = match c.take_u8()? {
+        0 => {
+            let nb = c.take_usize()?;
+            let mut blocks = Vec::with_capacity(nb.min(1024));
+            for _ in 0..nb {
+                let rows = c.take_usize()?;
+                let ns = c.take_usize()?;
+                let mut segments = Vec::with_capacity(ns.min(1024));
+                for _ in 0..ns {
+                    let (s, spare) = take_rng_state(c)?;
+                    let cols = c.take_usize()?;
+                    segments.push((Xoshiro256::from_state(s, spare), cols));
+                }
+                blocks.push(GaussianReplay { rows, segments });
+            }
+            ReplayState::Gaussian { blocks }
+        }
+        1 => {
+            let taken = c.take_usize()?;
+            let nb = c.take_usize()?;
+            let mut blocks = Vec::with_capacity(nb.min(1024));
+            for _ in 0..nb {
+                blocks.push(SrhtReplay {
+                    row_offset: c.take_usize()?,
+                    n_rows: c.take_usize()?,
+                    signs: c.take_f64_vec()?,
+                    order: c.take_usize_vec()?,
+                });
+            }
+            ReplayState::Srht { blocks, taken }
+        }
+        2 => {
+            let nb = c.take_usize()?;
+            let mut blocks = Vec::with_capacity(nb.min(1024));
+            for _ in 0..nb {
+                blocks.push(SparseReplay {
+                    rows: c.take_usize()?,
+                    hash: c.take_u32_vec()?,
+                    signs: c.take_f64_vec()?,
+                });
+            }
+            ReplayState::Sparse { blocks }
+        }
+        t => return Err(format!("bad replay-state tag {t}")),
+    };
+    Ok(EngineReplay { kind, n, state })
+}
+
+/// Serialize a session to snapshot bytes. Flushes lazily appended rows
+/// first (bitwise-neutral — see
+/// [`ModelSession::flush_appended`]) so the replay header
+/// covers exactly the stored operand.
+pub fn encode_session(name: &str, session: &mut ModelSession) -> Result<Vec<u8>, String> {
+    session.flush_appended()?;
+    let mut out = Vec::new();
+    codec::put_u32(&mut out, SNAPSHOT_MAGIC);
+    codec::put_u32(&mut out, SNAPSHOT_VERSION);
+    codec::put_str(&mut out, name);
+    codec::put_u8(&mut out, kind_tag(session.kind()));
+    codec::put_u64(&mut out, session.seed());
+    codec::put_operand(&mut out, session.operand());
+    codec::put_f64_slice(&mut out, session.b());
+    codec::put_f64_slice(&mut out, session.atb());
+    codec::put_u32(&mut out, atb_digest(session.atb()));
+    match session.state() {
+        None => codec::put_u8(&mut out, 0),
+        Some(st) => {
+            codec::put_u8(&mut out, 1);
+            match st.engine() {
+                None => codec::put_u8(&mut out, 0),
+                Some(e) => {
+                    codec::put_u8(&mut out, 1);
+                    put_engine(&mut out, &e.replay_state());
+                }
+            }
+            codec::put_f64(&mut out, st.cache_nu());
+            put_rng_state(&mut out, &st.rng().state());
+        }
+    }
+    match session.warm() {
+        None => codec::put_u8(&mut out, 0),
+        Some(w) => {
+            codec::put_u8(&mut out, 1);
+            codec::put_f64_slice(&mut out, w);
+        }
+    }
+    let keys = session.solution_keys();
+    codec::put_usize(&mut out, keys.len());
+    for (nu_bits, eps_bits) in keys {
+        codec::put_u64(&mut out, nu_bits);
+        codec::put_u64(&mut out, eps_bits);
+    }
+    let (queries, _) = session.query_stats();
+    codec::put_u64(&mut out, queries);
+    codec::put_u64(&mut out, session.epoch());
+    let crc = codec::crc32(&out);
+    codec::put_u32(&mut out, crc);
+    Ok(out)
+}
+
+/// Decode and fully verify snapshot bytes: magic, version, trailing
+/// file CRC, then the stored `A^T b` digest.
+pub fn decode(bytes: &[u8]) -> Result<ModelSnapshot, String> {
+    if bytes.len() < 12 {
+        return Err(format!("snapshot too short ({} bytes)", bytes.len()));
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let stored_crc = {
+        let t = &bytes[bytes.len() - 4..];
+        u32::from_le_bytes([t[0], t[1], t[2], t[3]])
+    };
+    let computed = codec::crc32(body);
+    if computed != stored_crc {
+        return Err(format!(
+            "snapshot checksum mismatch: stored {stored_crc:#010x}, computed {computed:#010x}"
+        ));
+    }
+    let mut c = Cursor::new(body);
+    let magic = c.take_u32()?;
+    if magic != SNAPSHOT_MAGIC {
+        return Err(format!("bad snapshot magic {magic:#010x}"));
+    }
+    let version = c.take_u32()?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!(
+            "unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})"
+        ));
+    }
+    let name = c.take_str()?;
+    let kind = kind_from_tag(c.take_u8()?)?;
+    let seed = c.take_u64()?;
+    let a = c.take_operand()?;
+    let b = c.take_f64_vec()?;
+    let atb = c.take_f64_vec()?;
+    let atb_digest = c.take_u32()?;
+    let state = match c.take_u8()? {
+        0 => None,
+        1 => {
+            let engine = match c.take_u8()? {
+                0 => None,
+                1 => Some(take_engine(&mut c)?),
+                t => return Err(format!("bad engine tag {t}")),
+            };
+            let cache_nu = c.take_f64()?;
+            let rng_state = take_rng_state(&mut c)?;
+            Some(SolverStateSnapshot { engine, cache_nu, rng_state })
+        }
+        t => return Err(format!("bad state tag {t}")),
+    };
+    let warm = match c.take_u8()? {
+        0 => None,
+        1 => Some(c.take_f64_vec()?),
+        t => return Err(format!("bad warm tag {t}")),
+    };
+    let nk = c.take_usize()?;
+    let mut cache_keys = Vec::with_capacity(nk.min(1024));
+    for _ in 0..nk {
+        cache_keys.push((c.take_u64()?, c.take_u64()?));
+    }
+    let queries = c.take_u64()?;
+    let epoch = c.take_u64()?;
+    if c.remaining() != 0 {
+        return Err(format!("{} trailing bytes after snapshot body", c.remaining()));
+    }
+    let snap = ModelSnapshot {
+        name,
+        kind,
+        seed,
+        a,
+        b,
+        atb,
+        atb_digest,
+        state,
+        warm,
+        cache_keys,
+        queries,
+        epoch,
+    };
+    snap.verify_atb_digest()?;
+    Ok(snap)
+}
+
+/// Durably replace the file at `path` with `bytes`: write `path.tmp`,
+/// fsync it, rename over `path`, then fsync the parent directory so the
+/// rename itself is durable. A crash anywhere in the sequence leaves the
+/// previous snapshot (or nothing) — never a partial file under the final
+/// name. The `persist.snapshot` failpoint fires before any byte lands.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    failpoint::check("persist.snapshot")?;
+    let tmp = path.with_extension("tmp");
+    let write = || -> io::Result<()> {
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        if let Some(parent) = path.parent() {
+            // Directory fsync makes the rename durable; best-effort on
+            // filesystems that refuse to open directories.
+            if let Ok(d) = File::open(parent) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    };
+    write().map_err(|e| format!("snapshot write to {} failed: {e}", path.display()))
+}
+
+/// Read and decode a snapshot file.
+pub fn load(path: &Path) -> Result<ModelSnapshot, String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| format!("snapshot read from {} failed: {e}", path.display()))?;
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use std::sync::Arc;
+
+    fn grown_session(kind: SketchKind) -> ModelSession {
+        let ds = synthetic::exponential_decay(96, 12, 77);
+        let mut s = ModelSession::new(Arc::new(ds.a), ds.b, kind, 7).unwrap();
+        s.solve(0.5, 1e-8).unwrap();
+        s
+    }
+
+    #[test]
+    fn encode_decode_round_trips_all_families() {
+        for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+            let mut s = grown_session(kind);
+            let bytes = encode_session("my-model", &mut s).unwrap();
+            let snap = decode(&bytes).unwrap();
+            assert_eq!(snap.name, "my-model");
+            assert_eq!(snap.kind, kind);
+            assert_eq!(snap.seed, 7);
+            assert_eq!(snap.a.rows(), 96);
+            assert_eq!(snap.b.len(), 96);
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&snap.atb), bits(s.atb()));
+            assert_eq!(bits(snap.warm.as_deref().unwrap()), bits(s.warm().unwrap()));
+            assert_eq!(snap.cache_keys, s.solution_keys());
+            assert_eq!(snap.queries, 1);
+            assert_eq!(snap.epoch, 1);
+            let st = snap.state.expect("solved session has state");
+            assert!(st.engine.is_some());
+            assert_eq!(st.cache_nu.to_bits(), s.state().unwrap().cache_nu().to_bits());
+            snap_verifies(&bytes);
+        }
+    }
+
+    fn snap_verifies(bytes: &[u8]) {
+        decode(bytes).unwrap().verify_atb_digest().unwrap();
+    }
+
+    #[test]
+    fn unsolved_session_snapshot_has_no_state() {
+        let ds = synthetic::exponential_decay(48, 6, 78);
+        let mut s =
+            ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 5).unwrap();
+        let bytes = encode_session("cold", &mut s).unwrap();
+        let snap = decode(&bytes).unwrap();
+        assert!(snap.state.is_none());
+        assert!(snap.warm.is_none());
+        assert!(snap.cache_keys.is_empty());
+        assert_eq!((snap.queries, snap.epoch), (0, 0));
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let mut s = grown_session(SketchKind::Gaussian);
+        let bytes = encode_session("flip", &mut s).unwrap();
+        // Exhaustive over a prefix and a suffix (the file is a few KB;
+        // stride the middle to keep the test fast while still crossing
+        // every field).
+        let len = bytes.len();
+        let positions: Vec<usize> = (0..len.min(64))
+            .chain((64..len).step_by(97))
+            .chain(len.saturating_sub(16)..len)
+            .collect();
+        for pos in positions {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x01;
+            assert!(decode(&bad).is_err(), "flip at byte {pos} went undetected");
+        }
+        // Truncation at any length is also rejected.
+        for cut in 0..len {
+            assert!(decode(&bytes[..cut]).is_err(), "truncation to {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn stored_atb_digest_is_verified_independently_of_the_file_crc() {
+        let ds = synthetic::exponential_decay(8, 2, 79);
+        let mut s =
+            ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 3).unwrap();
+        assert!(
+            matches!(&**s.operand(), Operand::Dense(_)),
+            "offset arithmetic below assumes a dense operand"
+        );
+        let mut bytes = encode_session("x", &mut s).unwrap();
+        // Locate the digest field from the fixed layout: magic+version,
+        // name, kind, seed, dense operand (tag+rows+cols+entries), b,
+        // atb — the digest is the next 4 bytes.
+        let off = 4 + 4 // magic + version
+            + 8 + 1 // name "x"
+            + 1 // kind tag
+            + 8 // seed
+            + 1 + 8 + 8 + 8 * 2 * 8 // dense operand 8x2
+            + 8 + 8 * 8 // b
+            + 8 + 2 * 8; // atb
+        bytes[off] ^= 0xFF; // corrupt the stored digest...
+        let body_len = bytes.len() - 4;
+        let crc = codec::crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes()); // ...and re-seal the file CRC
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.contains("digest"), "want the digest check to fire, got: {err}");
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_structured_errors() {
+        let mut s = grown_session(SketchKind::Srht);
+        let bytes = encode_session("v", &mut s).unwrap();
+        let reseal = |mut b: Vec<u8>| -> Vec<u8> {
+            let body = b.len() - 4;
+            let crc = codec::crc32(&b[..body]);
+            b[body..].copy_from_slice(&crc.to_le_bytes());
+            b
+        };
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] ^= 0xAA;
+        let err = decode(&reseal(wrong_magic)).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+        let mut wrong_version = bytes.clone();
+        wrong_version[4] = 0xEE;
+        let err = decode(&reseal(wrong_version)).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_never_leaves_tmp() {
+        let dir = std::env::temp_dir().join(format!("effdim-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.snap");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        assert!(!path.with_extension("tmp").exists(), "tmp file must not survive");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn snapshot_is_much_smaller_than_the_applied_panel() {
+        // The replay header stores RNG snapshots + structure, not S̃A.
+        // For a Gaussian sketch the panel would be m*d f64s; the header
+        // must stay well under the operand-dominated budget.
+        let mut s = grown_session(SketchKind::Gaussian);
+        let m = s.m();
+        assert!(m > 0);
+        let bytes = encode_session("sz", &mut s).unwrap();
+        let operand_bytes = 96 * 12 * 8;
+        let panel_bytes = m * 12 * 8;
+        assert!(
+            bytes.len() < operand_bytes + panel_bytes / 2 + 4096,
+            "snapshot {} bytes; operand {} + panel {}",
+            bytes.len(),
+            operand_bytes,
+            panel_bytes
+        );
+    }
+}

@@ -1,0 +1,377 @@
+//! Per-model append write-ahead log.
+//!
+//! Every wire `append` is logged as one framed record **before** it is
+//! applied to the in-RAM session, so streamed rows survive a crash that
+//! happens after the client's ack. The frame is
+//!
+//! ```text
+//! [magic u32][payload_len u32][crc32(payload) u32][payload ...]
+//! ```
+//!
+//! all little-endian. Recovery scans the file front to back and stops at
+//! the first frame that is short, mis-tagged, or fails its CRC — the
+//! *torn-tail rule*: everything before the bad frame is intact (each
+//! record's CRC proved it), everything from it on is discarded by
+//! truncating the file, with a logged warning and never a panic. A crash
+//! half-way through a frame write therefore loses at most the one record
+//! that was never acked durable.
+//!
+//! The fsync policy trades durability for append latency (the
+//! `--durability` serve flag): [`DurabilityPolicy::Strict`] fsyncs every
+//! record, `Batch` defers the fsync to the next snapshot/shutdown
+//! [`Wal::sync`], `Off` never fsyncs (the OS page cache is the only
+//! durability). The *format* is identical in all three — only the crash
+//! window differs.
+
+use super::codec::{self, Cursor};
+use super::DurabilityPolicy;
+use crate::linalg::Operand;
+use crate::util::failpoint;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// Frame magic: `"WALR"` little-endian.
+pub const RECORD_MAGIC: u32 = 0x524C_4157;
+/// Frame header bytes preceding each payload.
+pub const HEADER_BYTES: u64 = 12;
+
+/// Payload of one logged wire `append`.
+pub struct AppendRecord {
+    /// The appended rows, in the storage kind the client sent (the
+    /// session normalizes on apply, so replay converges regardless).
+    pub a: Operand,
+    /// The appended observations.
+    pub b: Vec<f64>,
+    /// Whether the client asked for an eager refresh.
+    pub eager: bool,
+}
+
+/// Record-type tag for [`AppendRecord`] payloads (room for future kinds).
+const TAG_APPEND: u8 = 1;
+
+/// Encode an append into a WAL payload.
+pub fn encode_append(a: &Operand, b: &[f64], eager: bool) -> Vec<u8> {
+    let mut out = Vec::new();
+    codec::put_u8(&mut out, TAG_APPEND);
+    codec::put_u8(&mut out, u8::from(eager));
+    codec::put_operand(&mut out, a);
+    codec::put_f64_slice(&mut out, b);
+    out
+}
+
+/// Decode a WAL payload back into an append.
+pub fn decode_append(payload: &[u8]) -> Result<AppendRecord, String> {
+    let mut c = Cursor::new(payload);
+    let tag = c.take_u8()?;
+    if tag != TAG_APPEND {
+        return Err(format!("unknown WAL record tag {tag}"));
+    }
+    let eager = match c.take_u8()? {
+        0 => false,
+        1 => true,
+        v => return Err(format!("bad eager flag {v}")),
+    };
+    let a = c.take_operand()?;
+    let b = c.take_f64_vec()?;
+    if c.remaining() != 0 {
+        return Err(format!("{} trailing bytes after WAL record", c.remaining()));
+    }
+    Ok(AppendRecord { a, b, eager })
+}
+
+/// What a front-to-back scan of a WAL file found.
+pub struct WalScan {
+    /// Payloads of every intact record, in log order.
+    pub records: Vec<Vec<u8>>,
+    /// Byte length of the intact prefix (where an appender must resume).
+    pub valid_len: u64,
+    /// Whether a torn or corrupt tail was found past `valid_len`.
+    pub truncated_tail: bool,
+}
+
+/// Scan `path` and return every intact record plus the valid prefix
+/// length. A missing file is an empty log; a torn or corrupt tail is
+/// reported, not an error — the caller truncates and carries on.
+pub fn scan(path: &Path) -> io::Result<WalScan> {
+    let data = match std::fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(WalScan { records: Vec::new(), valid_len: 0, truncated_tail: false })
+        }
+        Err(e) => return Err(e),
+    };
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let rest = data.len() - pos;
+        if rest == 0 {
+            break;
+        }
+        if rest < HEADER_BYTES as usize {
+            break; // torn header
+        }
+        let hdr = &data[pos..pos + HEADER_BYTES as usize];
+        let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+        let len = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]) as usize;
+        let crc = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]);
+        if magic != RECORD_MAGIC || rest - HEADER_BYTES as usize < len {
+            break; // mis-tagged frame or torn payload
+        }
+        let payload = &data[pos + HEADER_BYTES as usize..pos + HEADER_BYTES as usize + len];
+        if codec::crc32(payload) != crc {
+            break; // bit-flipped payload
+        }
+        records.push(payload.to_vec());
+        pos += HEADER_BYTES as usize + len;
+    }
+    Ok(WalScan {
+        records,
+        valid_len: pos as u64,
+        truncated_tail: pos < data.len(),
+    })
+}
+
+/// An open, appendable WAL file.
+pub struct Wal {
+    file: File,
+    len: u64,
+    policy: DurabilityPolicy,
+}
+
+impl Wal {
+    /// Open (creating if absent) the log at `path`, truncate it to the
+    /// scanned `valid_len` — dropping any torn tail — and position for
+    /// appends.
+    pub fn open(path: &Path, policy: DurabilityPolicy, valid_len: u64) -> io::Result<Self> {
+        let file = OpenOptions::new().create(true).read(true).write(true).open(path)?;
+        file.set_len(valid_len)?;
+        let mut wal = Self { file, len: valid_len, policy };
+        wal.file.seek(SeekFrom::Start(valid_len))?;
+        Ok(wal)
+    }
+
+    /// Bytes of intact log (the offset the next record lands at).
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// Whether the log holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one framed record and apply the fsync policy. Returns the
+    /// byte offset *before* the record — the rollback point if applying
+    /// the logged operation to the session subsequently fails. The
+    /// `persist.wal_append` failpoint fires before any byte is written.
+    pub fn append(&mut self, payload: &[u8]) -> Result<u64, String> {
+        failpoint::check("persist.wal_append")?;
+        let before = self.len;
+        let mut frame = Vec::with_capacity(HEADER_BYTES as usize + payload.len());
+        codec::put_u32(&mut frame, RECORD_MAGIC);
+        codec::put_u32(&mut frame, payload.len() as u32);
+        codec::put_u32(&mut frame, codec::crc32(payload));
+        frame.extend_from_slice(payload);
+        self.file
+            .write_all(&frame)
+            .map_err(|e| format!("WAL write failed: {e}"))?;
+        self.len += frame.len() as u64;
+        if self.policy == DurabilityPolicy::Strict {
+            self.file
+                .sync_data()
+                .map_err(|e| format!("WAL fsync failed: {e}"))?;
+        }
+        Ok(before)
+    }
+
+    /// Roll the log back to `len` bytes — used when the session rejected
+    /// the operation a record describes (the record must not replay on
+    /// recovery) and after a snapshot absorbs the log (`len = 0`).
+    pub fn truncate_to(&mut self, len: u64) -> Result<(), String> {
+        self.file
+            .set_len(len)
+            .and_then(|()| self.file.seek(SeekFrom::Start(len)).map(|_| ()))
+            .map_err(|e| format!("WAL truncate failed: {e}"))?;
+        self.len = len;
+        if self.policy == DurabilityPolicy::Strict {
+            self.file
+                .sync_data()
+                .map_err(|e| format!("WAL fsync failed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Force written records to stable storage (no-op under
+    /// [`DurabilityPolicy::Off`]; the batch policy calls this at
+    /// snapshot/shutdown barriers).
+    pub fn sync(&mut self) -> Result<(), String> {
+        if self.policy == DurabilityPolicy::Off {
+            return Ok(());
+        }
+        self.file.sync_data().map_err(|e| format!("WAL fsync failed: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CsrMatrix;
+    use crate::linalg::Matrix;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn tmp(tag: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "effdim-wal-{}-{}-{}",
+            std::process::id(),
+            tag,
+            SEQ.fetch_add(1, Ordering::SeqCst)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn append_and_scan_round_trip() {
+        let dir = tmp("roundtrip");
+        let path = dir.join("wal.log");
+        for policy in [DurabilityPolicy::Strict, DurabilityPolicy::Batch, DurabilityPolicy::Off] {
+            let _ = std::fs::remove_file(&path);
+            let mut wal = Wal::open(&path, policy, 0).unwrap();
+            let payloads: Vec<Vec<u8>> =
+                (0u8..5).map(|i| vec![i; 3 + i as usize * 7]).collect();
+            for p in &payloads {
+                wal.append(p).unwrap();
+            }
+            wal.sync().unwrap();
+            let scan = scan(&path).unwrap();
+            assert_eq!(scan.records, payloads);
+            assert!(!scan.truncated_tail);
+            assert_eq!(scan.valid_len, wal.len());
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_file_scans_as_empty_log() {
+        let dir = tmp("missing");
+        let scan = scan(&dir.join("nope.log")).unwrap();
+        assert!(scan.records.is_empty());
+        assert_eq!(scan.valid_len, 0);
+        assert!(!scan.truncated_tail);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_offset_keeps_the_intact_prefix() {
+        let dir = tmp("tear");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::open(&path, DurabilityPolicy::Off, 0).unwrap();
+        let payloads: Vec<Vec<u8>> = vec![vec![1; 9], vec![2; 17], vec![3; 4]];
+        let mut offsets = vec![0u64];
+        for p in &payloads {
+            wal.append(p).unwrap();
+            offsets.push(wal.len());
+        }
+        let full = std::fs::read(&path).unwrap();
+        let torn = dir.join("torn.log");
+        for cut in 0..=full.len() {
+            std::fs::write(&torn, &full[..cut]).unwrap();
+            let s = scan(&torn).unwrap();
+            // Expected record count: whole frames that fit in `cut` bytes.
+            let k = offsets.iter().filter(|&&o| o > 0 && o <= cut as u64).count();
+            assert_eq!(s.records.len(), k, "cut at {cut}");
+            assert_eq!(s.records, payloads[..k].to_vec(), "cut at {cut}");
+            assert_eq!(s.valid_len, offsets[k], "cut at {cut}");
+            assert_eq!(s.truncated_tail, (cut as u64) > offsets[k], "cut at {cut}");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bit_flip_stops_scan_at_last_good_record() {
+        let dir = tmp("flip");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::open(&path, DurabilityPolicy::Off, 0).unwrap();
+        let first_end = {
+            wal.append(&[10; 20]).unwrap();
+            wal.len()
+        };
+        wal.append(&[20; 20]).unwrap();
+        drop(wal);
+        let mut data = std::fs::read(&path).unwrap();
+        // Flip one payload bit in the SECOND record.
+        let idx = first_end as usize + HEADER_BYTES as usize + 5;
+        data[idx] ^= 0x40;
+        std::fs::write(&path, &data).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1, "scan must stop before the corrupt record");
+        assert_eq!(s.records[0], vec![10; 20]);
+        assert_eq!(s.valid_len, first_end);
+        assert!(s.truncated_tail);
+        // Re-opening at the valid length drops the corrupt tail for good.
+        let wal = Wal::open(&path, DurabilityPolicy::Off, s.valid_len).unwrap();
+        assert_eq!(wal.len(), first_end);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), first_end);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rollback_removes_the_unapplied_record() {
+        let dir = tmp("rollback");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::open(&path, DurabilityPolicy::Strict, 0).unwrap();
+        wal.append(b"keep").unwrap();
+        let before = wal.append(b"reject-me").unwrap();
+        wal.truncate_to(before).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records, vec![b"keep".to_vec()]);
+        assert!(!s.truncated_tail);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn append_record_codec_round_trips_both_kinds() {
+        let dense = Operand::Dense(Matrix::from_vec(2, 2, vec![1.0, -0.0, 3.5, 4.25]));
+        let sparse = Operand::Sparse(CsrMatrix::from_triplets(
+            2,
+            3,
+            &[(0, 2, -1.5), (1, 0, 2.0)],
+        ));
+        for (op, eager) in [(&dense, true), (&sparse, false)] {
+            let b = vec![0.5, -2.0];
+            let payload = encode_append(op, &b, eager);
+            let rec = decode_append(&payload).unwrap();
+            assert_eq!(rec.eager, eager);
+            assert_eq!(rec.b, b);
+            assert_eq!(rec.a.rows(), op.rows());
+            assert_eq!(rec.a.cols(), op.cols());
+            assert_eq!(
+                matches!(rec.a, Operand::Dense(_)),
+                matches!(op, Operand::Dense(_))
+            );
+        }
+        // Trailing garbage and unknown tags are rejected.
+        let mut payload = encode_append(&dense, &[1.0, 2.0], false);
+        payload.push(0);
+        assert!(decode_append(&payload).is_err());
+        assert!(decode_append(&[99, 0]).is_err());
+    }
+
+    #[test]
+    fn wal_append_failpoint_fires_before_writing() {
+        let _serial = crate::persist::tests_serial();
+        let dir = tmp("failpoint");
+        let path = dir.join("wal.log");
+        let mut wal = Wal::open(&path, DurabilityPolicy::Strict, 0).unwrap();
+        failpoint::arm("persist.wal_append", failpoint::Action::Error, 1);
+        let err = wal.append(b"never-lands").unwrap_err();
+        assert!(err.contains("persist.wal_append"), "{err}");
+        assert_eq!(wal.len(), 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        failpoint::disarm_all();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

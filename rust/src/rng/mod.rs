@@ -51,6 +51,21 @@ impl Xoshiro256 {
         Xoshiro256::seed_from_u64(base)
     }
 
+    /// Export the full generator state for persistence
+    /// ([`crate::persist`]). The cached polar-method spare is part of the
+    /// state: dropping it would shift every subsequent Gaussian draw by
+    /// one, breaking bitwise replay of a sketch stream.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from an exported [`Self::state`] — the inverse
+    /// of `state()`: the restored stream continues draw for draw where the
+    /// exported one stopped.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Self { s, gauss_spare }
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -83,7 +83,8 @@
 
 use super::srht::{fwht_rows, hadamard_entry, next_pow2, signed_work};
 use super::SketchKind;
-use crate::linalg::{Matrix, OperandRef};
+use crate::linalg::sparse::CsrMatrix;
+use crate::linalg::{Matrix, Operand, OperandRef};
 use crate::rng::Xoshiro256;
 use crate::solvers::error::SolverError;
 use crate::util::failpoint;
@@ -578,6 +579,286 @@ impl SketchEngine {
             }
         }
     }
+    /// Export the engine's *structural* growth state — everything needed
+    /// to re-derive `S̃A` bitwise from the problem operand, **without** the
+    /// `m x d` applied panel itself (or SRHT's `ñ x d` FWHT work buffer,
+    /// which [`Self::from_replay`] recomputes). This is what the
+    /// persistence layer ([`crate::persist`]) checkpoints: per-block RNG
+    /// snapshots and padding/selection structure are tiny next to the
+    /// panels they regenerate.
+    pub fn replay_state(&self) -> EngineReplay {
+        let state = match &self.state {
+            State::Gaussian { blocks } => ReplayState::Gaussian {
+                blocks: blocks
+                    .iter()
+                    .map(|b| GaussianReplay { rows: b.rows, segments: b.segments.clone() })
+                    .collect(),
+            },
+            State::Srht { blocks, taken } => ReplayState::Srht {
+                blocks: blocks
+                    .iter()
+                    .map(|b| SrhtReplay {
+                        row_offset: b.row_offset,
+                        n_rows: b.n_rows,
+                        signs: b.signs.clone(),
+                        order: b.order.clone(),
+                    })
+                    .collect(),
+                taken: *taken,
+            },
+            State::Sparse { blocks } => ReplayState::Sparse {
+                blocks: blocks
+                    .iter()
+                    .map(|b| SparseReplay {
+                        rows: b.rows,
+                        hash: b.hash.clone(),
+                        signs: b.signs.clone(),
+                    })
+                    .collect(),
+            },
+        };
+        EngineReplay { kind: self.kind, n: self.n, state }
+    }
+
+    /// Rebuild an engine from an exported [`Self::replay_state`] and the
+    /// problem operand, re-deriving `S̃A` **bitwise** identical to the
+    /// exporting engine's panel.
+    ///
+    /// Bitwise equality holds because the replay repeats the exporting
+    /// engine's arithmetic in its exact accumulation order: per-segment
+    /// Gaussian draws restart from their stored RNG snapshots and multiply
+    /// the same operand row ranges; SRHT blocks recompute their FWHT work
+    /// buffers from the stored signs and re-read the same selected rows in
+    /// block-index order; CountSketch blocks rescatter the operand in
+    /// ascending row order (creation + appends visited rows in exactly
+    /// that order). The caller must pass the operand rows the engine had
+    /// consumed when the state was exported, **in the same storage form**
+    /// (dense vs CSR kernels round differently) — the session layer
+    /// guarantees this by normalizing append deltas to the operand's
+    /// storage kind before they reach the engine.
+    pub fn from_replay<'a>(
+        replay: EngineReplay,
+        a: impl Into<OperandRef<'a>>,
+    ) -> Result<Self, SolverError> {
+        let a: OperandRef<'a> = a.into();
+        let EngineReplay { kind, n, state } = replay;
+        if a.rows() != n {
+            return Err(SolverError::invalid(format!(
+                "replay expects the engine's {} operand rows, got {}",
+                n,
+                a.rows()
+            )));
+        }
+        if n == 0 {
+            return Err(SolverError::invalid("replay needs a non-empty operand"));
+        }
+        match state {
+            ReplayState::Gaussian { blocks } => {
+                if blocks.is_empty() {
+                    return Err(SolverError::invalid("gaussian replay needs >= 1 block"));
+                }
+                let mut sa: Option<Matrix> = None;
+                let mut rebuilt = Vec::with_capacity(blocks.len());
+                for b in blocks {
+                    let covered: usize = b.segments.iter().map(|(_, c)| *c).sum();
+                    if covered != n || b.rows == 0 {
+                        return Err(SolverError::invalid(format!(
+                            "gaussian replay block covers {covered} of {n} operand rows"
+                        )));
+                    }
+                    let mut block_sa: Option<Matrix> = None;
+                    let mut c0 = 0;
+                    for (snapshot, cols) in &b.segments {
+                        let mut rng = snapshot.clone();
+                        let mut g = Matrix::zeros(b.rows, *cols);
+                        rng.fill_gaussian(g.as_mut_slice(), 1.0);
+                        let seg = slice_rows(a, c0, c0 + cols);
+                        let contrib = dense_block_times(&g, seg.as_ref());
+                        match &mut block_sa {
+                            None => block_sa = Some(contrib),
+                            Some(acc) => {
+                                for i in 0..b.rows {
+                                    crate::linalg::axpy(1.0, contrib.row(i), acc.row_mut(i));
+                                }
+                            }
+                        }
+                        c0 += cols;
+                    }
+                    let block_sa = block_sa.expect("segments verified non-empty by cover check");
+                    match &mut sa {
+                        None => sa = Some(block_sa),
+                        Some(acc) => acc.append_rows(&block_sa),
+                    }
+                    rebuilt.push(GaussianBlock { rows: b.rows, segments: b.segments });
+                }
+                Ok(Self {
+                    kind,
+                    n,
+                    sa: sa.expect("blocks verified non-empty"),
+                    state: State::Gaussian { blocks: rebuilt },
+                })
+            }
+            ReplayState::Srht { blocks, taken } => {
+                if blocks.is_empty() {
+                    return Err(SolverError::invalid("srht replay needs >= 1 block"));
+                }
+                let mut rebuilt = Vec::with_capacity(blocks.len());
+                for b in blocks {
+                    if taken > b.order.len()
+                        || b.signs.len() != b.n_rows
+                        || b.row_offset + b.n_rows > n
+                    {
+                        return Err(SolverError::invalid("inconsistent srht replay block"));
+                    }
+                    let seg = slice_rows(a, b.row_offset, b.row_offset + b.n_rows);
+                    let mut work = signed_work(seg.as_ref(), &b.signs, b.order.len());
+                    fwht_rows(&mut work);
+                    rebuilt.push(SrhtBlock {
+                        row_offset: b.row_offset,
+                        n_rows: b.n_rows,
+                        signs: b.signs,
+                        work,
+                        order: b.order,
+                    });
+                }
+                let mut sa = copy_rows(&rebuilt[0].work, &rebuilt[0].order[..taken]);
+                for block in &rebuilt[1..] {
+                    add_rows(&mut sa, &block.work, &block.order[..taken]);
+                }
+                Ok(Self { kind, n, sa, state: State::Srht { blocks: rebuilt, taken } })
+            }
+            ReplayState::Sparse { blocks } => {
+                if blocks.is_empty() {
+                    return Err(SolverError::invalid("sparse replay needs >= 1 block"));
+                }
+                let mut sa: Option<Matrix> = None;
+                let mut rebuilt = Vec::with_capacity(blocks.len());
+                for b in blocks {
+                    if b.hash.len() != n || b.signs.len() != n || b.rows == 0 {
+                        return Err(SolverError::invalid("inconsistent sparse replay block"));
+                    }
+                    let block = SparseBlock {
+                        rows: b.rows,
+                        hash: b.hash,
+                        signs: b.signs,
+                        weight: (b.rows as f64).sqrt(),
+                    };
+                    let rows = block.apply(a);
+                    match &mut sa {
+                        None => sa = Some(rows),
+                        Some(acc) => acc.append_rows(&rows),
+                    }
+                    rebuilt.push(block);
+                }
+                Ok(Self {
+                    kind,
+                    n,
+                    sa: sa.expect("blocks verified non-empty"),
+                    state: State::Sparse { blocks: rebuilt },
+                })
+            }
+        }
+    }
+}
+
+/// Serializable structural state of a [`SketchEngine`] — the replay
+/// header a durable snapshot stores instead of the `m x d` panel. See
+/// [`SketchEngine::replay_state`] / [`SketchEngine::from_replay`].
+#[derive(Clone)]
+pub struct EngineReplay {
+    /// Embedding family.
+    pub kind: SketchKind,
+    /// Ambient (data) row count the exporting engine had consumed.
+    pub n: usize,
+    /// Per-family block structure.
+    pub state: ReplayState,
+}
+
+/// Per-family replay payload of an [`EngineReplay`].
+#[derive(Clone)]
+pub enum ReplayState {
+    /// Gaussian growth blocks (per-segment RNG snapshots).
+    Gaussian {
+        /// One entry per growth block, stacked top to bottom.
+        blocks: Vec<GaussianReplay>,
+    },
+    /// Stacked signed-Hadamard blocks plus the shared selection depth.
+    Srht {
+        /// One entry per data segment, left to right over the ambient
+        /// coordinates.
+        blocks: Vec<SrhtReplay>,
+        /// Shared without-replacement selection depth (`m`).
+        taken: usize,
+    },
+    /// Size-weighted CountSketch blocks.
+    Sparse {
+        /// One entry per growth block, stacked top to bottom.
+        blocks: Vec<SparseReplay>,
+    },
+}
+
+/// Replay form of a Gaussian growth block: the per-segment RNG snapshots
+/// regenerate `S̃`'s entries; the panel is recomputed against the operand.
+#[derive(Clone)]
+pub struct GaussianReplay {
+    /// Sketch rows in this block.
+    pub rows: usize,
+    /// `(RNG snapshot before the draw, operand-row count)` per column
+    /// segment, in draw order.
+    pub segments: Vec<(Xoshiro256, usize)>,
+}
+
+/// Replay form of an SRHT block — everything except the `ñ_b x d` FWHT
+/// work buffer, which [`SketchEngine::from_replay`] recomputes.
+#[derive(Clone)]
+pub struct SrhtReplay {
+    /// First ambient coordinate this block covers.
+    pub row_offset: usize,
+    /// Data rows covered (before padding).
+    pub n_rows: usize,
+    /// Rademacher signs, length `n_rows`.
+    pub signs: Vec<f64>,
+    /// Partial Fisher–Yates permutation over `0..ñ_b` (its length is the
+    /// block's padded dimension).
+    pub order: Vec<usize>,
+}
+
+/// Replay form of a CountSketch block; the `sqrt(rows)` size weight is
+/// recomputed (bitwise) on restore.
+#[derive(Clone)]
+pub struct SparseReplay {
+    /// Sketch rows in this block.
+    pub rows: usize,
+    /// Target sketch row per ambient coordinate.
+    pub hash: Vec<u32>,
+    /// Rademacher sign per ambient coordinate.
+    pub signs: Vec<f64>,
+}
+
+/// Materialize operand rows `r0..r1` as an owned operand of the *same*
+/// storage kind — replay must re-run each segment through the exact
+/// kernel (dense GEMM vs CSR row-axpy) the live engine used, since the
+/// two accumulate in different orders.
+fn slice_rows(a: OperandRef<'_>, r0: usize, r1: usize) -> Operand {
+    match a {
+        OperandRef::Dense(m) => {
+            let mut out = Matrix::zeros(r1 - r0, m.cols());
+            for i in r0..r1 {
+                out.row_mut(i - r0).copy_from_slice(m.row(i));
+            }
+            Operand::Dense(out)
+        }
+        OperandRef::Sparse(c) => {
+            let mut trips = Vec::new();
+            for i in r0..r1 {
+                let (cols, vals) = c.row(i);
+                for (&cc, &v) in cols.iter().zip(vals) {
+                    trips.push((i - r0, cc as usize, v));
+                }
+            }
+            Operand::Sparse(CsrMatrix::from_triplets(r1 - r0, c.cols(), &trips))
+        }
+    }
 }
 
 /// Continue a partial Fisher–Yates shuffle: select `k` more indices
@@ -909,6 +1190,88 @@ mod tests {
         assert!((engine.scale() - 1.0 / 2f64.sqrt()).abs() < 1e-15);
         engine.grow(9, &a, &mut rng).unwrap();
         assert!((engine.scale() - 1.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn replay_roundtrip_is_bitwise_after_grow_and_append() {
+        // Export the structural state after growth + streamed appends and
+        // re-derive S̃A from the final operand: every entry must be
+        // bit-for-bit identical — the property durable snapshots rely on.
+        let a = test_a(24, 5, 60);
+        let d1 = test_a(6, 5, 61);
+        let d2 = test_a(3, 5, 62);
+        let mut full = a.clone();
+        full.append_rows(&d1);
+        full.append_rows(&d2);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(63);
+            let mut engine = SketchEngine::new(kind, 2, &a, &mut rng);
+            engine.grow(5, &a, &mut rng).unwrap();
+            engine.append_rows(&d1, &mut rng).unwrap();
+            let mut mid = a.clone();
+            mid.append_rows(&d1);
+            engine.grow(9, &mid, &mut rng).unwrap();
+            engine.append_rows(&d2, &mut rng).unwrap();
+            let restored = SketchEngine::from_replay(engine.replay_state(), &full).unwrap();
+            assert_eq!(restored.m(), engine.m(), "{kind}");
+            assert_eq!(restored.n(), engine.n(), "{kind}");
+            assert_eq!(restored.kind(), kind);
+            assert_eq!(restored.max_m(), engine.max_m(), "{kind}");
+            assert_eq!(
+                restored.sa_unnormalized(),
+                engine.sa_unnormalized(),
+                "{kind} replay is not bitwise"
+            );
+            // The restored engine keeps working: grow both in lockstep
+            // from clones of the same RNG and stay bitwise twins.
+            let mut e1 = engine.clone();
+            let mut e2 = restored;
+            let mut r1 = rng.clone();
+            let mut r2 = rng.clone();
+            if e1.max_m() >= 12 {
+                e1.grow(12, &full, &mut r1).unwrap();
+                e2.grow(12, &full, &mut r2).unwrap();
+                assert_eq!(e1.sa_unnormalized(), e2.sa_unnormalized(), "{kind} post-replay grow");
+            }
+        }
+    }
+
+    #[test]
+    fn replay_roundtrip_csr_operand() {
+        // CSR-stored problems replay through the sparse kernels and stay
+        // bitwise too (storage kind changes the accumulation order, so
+        // the slice helper must preserve it).
+        let mut rng0 = Xoshiro256::seed_from_u64(64);
+        let dense = Matrix::from_fn(26, 6, |_, _| {
+            if rng0.next_f64() < 0.3 { rng0.next_gaussian() } else { 0.0 }
+        });
+        let csr = CsrMatrix::from_dense(&dense);
+        let ddense = Matrix::from_fn(4, 6, |_, _| {
+            if rng0.next_f64() < 0.4 { rng0.next_gaussian() } else { 0.0 }
+        });
+        let dcsr = CsrMatrix::from_dense(&ddense);
+        let mut full = csr.clone();
+        full.append_rows(&dcsr);
+        for kind in KINDS {
+            let mut rng = Xoshiro256::seed_from_u64(65);
+            let mut engine = SketchEngine::new(kind, 3, &csr, &mut rng);
+            engine.append_rows(&dcsr, &mut rng).unwrap();
+            let restored = SketchEngine::from_replay(engine.replay_state(), &full).unwrap();
+            assert_eq!(
+                restored.sa_unnormalized(),
+                engine.sa_unnormalized(),
+                "{kind} CSR replay is not bitwise"
+            );
+        }
+    }
+
+    #[test]
+    fn replay_rejects_mismatched_operand() {
+        let a = test_a(16, 4, 66);
+        let mut rng = Xoshiro256::seed_from_u64(67);
+        let engine = SketchEngine::new(SketchKind::Gaussian, 3, &a, &mut rng);
+        let wrong = test_a(15, 4, 68);
+        assert!(SketchEngine::from_replay(engine.replay_state(), &wrong).is_err());
     }
 
     #[test]

@@ -105,6 +105,50 @@ impl AdaptiveSessionState {
         self.engine.as_ref().map_or(0, SketchEngine::approx_bytes) + self.cache.approx_bytes()
     }
 
+    /// Borrow the incremental sketch engine — `None` once growth hit the
+    /// cap. Persistence exports its replay header
+    /// ([`SketchEngine::replay_state`]) instead of the panel.
+    pub fn engine(&self) -> Option<&SketchEngine> {
+        self.engine.as_ref()
+    }
+
+    /// Borrow the mid-stream session RNG (checkpointed so recovered
+    /// growth continues the same draw sequence).
+    pub fn rng(&self) -> &Xoshiro256 {
+        &self.rng
+    }
+
+    /// The regularization level the cached factorization is currently
+    /// keyed to — what [`AdaptiveSessionState::restore`] re-factors at.
+    pub fn cache_nu(&self) -> f64 {
+        self.cache.nu()
+    }
+
+    /// Rebuild a session state from persisted parts: the restored engine
+    /// (or `None` at cap), the factorization's `nu` key, the mid-stream
+    /// RNG, and the recovered operand (used only on the at-cap path,
+    /// where the cache holds the exact Hessian).
+    ///
+    /// The rebuilt factorization is **bitwise** the one a live session
+    /// holds after an append flush: the session layer always rebuilds its
+    /// cache via [`WoodburyCache::new_scaled`] on the engine's panel (see
+    /// [`crate::solvers::session::ModelSession`]), so re-running that
+    /// constructor on the bitwise-replayed panel reproduces it exactly.
+    pub fn restore(
+        engine: Option<SketchEngine>,
+        nu: f64,
+        rng: Xoshiro256,
+        a: &crate::linalg::Operand,
+    ) -> Result<Self, SolverError> {
+        let cache = match &engine {
+            Some(e) => {
+                WoodburyCache::new_scaled(e.sa_unnormalized().clone(), nu, e.scale())?
+            }
+            None => WoodburyCache::new(a.dense().into_owned(), nu)?,
+        };
+        Ok(Self { engine, cache, rng })
+    }
+
     /// Decompose into `(engine, cache, rng)` — the block multi-RHS solver
     /// ([`crate::solvers::block`]) drives these directly instead of going
     /// through [`AdaptiveSolver::resume`].

@@ -59,6 +59,7 @@ use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{Matrix, Operand};
 use crate::sketch::SketchKind;
 use crate::util::failpoint;
+use std::borrow::Cow;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
@@ -133,6 +134,14 @@ pub struct ModelSession {
     queries: u64,
     /// Queries answered from the solution cache.
     cache_hits: u64,
+    /// Counter of state mutations that a WAL replay does **not**
+    /// reproduce — bumped by every successful solver run (uncached solve,
+    /// alternate-RHS solve, block solve), which consumes RNG draws and
+    /// rewrites the warm start. Appends do *not* bump it: an append is
+    /// fully captured by the WAL and its replay is bitwise
+    /// ([`crate::persist`] snapshots a model again only when `epoch`
+    /// moved past the persisted one).
+    epoch: u64,
 }
 
 impl ModelSession {
@@ -172,6 +181,58 @@ impl ModelSession {
             solutions: Vec::new(),
             queries: 0,
             cache_hits: 0,
+            epoch: 0,
+        })
+    }
+
+    /// Rebuild a session from persisted parts ([`crate::persist`]): the
+    /// recovered operand/observations/`A^T b`, the sketch family and
+    /// solver seed, the replayed solver state (engine + factorization +
+    /// RNG, or `None` if the model was snapshotted before its first
+    /// solve), the warm-start vector, and the persisted query/epoch
+    /// counters. The solution cache starts empty — recovered sessions
+    /// answer fresh queries bitwise-identically to the live twin, and
+    /// exact-repeat hits re-accumulate from there.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore(
+        a: Arc<Operand>,
+        b: Vec<f64>,
+        atb: Vec<f64>,
+        kind: SketchKind,
+        seed: u64,
+        state: Option<AdaptiveSessionState>,
+        warm: Option<Vec<f64>>,
+        queries: u64,
+        epoch: u64,
+    ) -> Result<Self, String> {
+        let (n, d) = (a.rows(), a.cols());
+        if n < d {
+            return Err(format!("restored operand is underdetermined (n {n} < d {d})"));
+        }
+        if b.len() != n {
+            return Err(format!("restored b has {} entries, expected n = {n}", b.len()));
+        }
+        if atb.len() != d {
+            return Err(format!("restored atb has {} entries, expected d = {d}", atb.len()));
+        }
+        if let Some(w) = &warm {
+            if w.len() != d {
+                return Err(format!("restored warm start has {} entries, expected d = {d}", w.len()));
+            }
+        }
+        Ok(Self {
+            a,
+            b,
+            atb,
+            config: AdaptiveConfig::new(kind),
+            seed,
+            state,
+            pending: None,
+            warm,
+            solutions: Vec::new(),
+            queries,
+            cache_hits: 0,
+            epoch,
         })
     }
 
@@ -270,6 +331,25 @@ impl ModelSession {
         delta_b: &[f64],
         refresh: AppendRefresh,
     ) -> Result<bool, SolverError> {
+        // Normalize the delta to the operand's storage kind before ANY
+        // consumer sees it. The operand merge converts on append anyway
+        // ([`Operand::append_rows`] follows the receiver), but the sketch
+        // engine's bitwise-replay contract
+        // ([`crate::sketch::engine::SketchEngine::from_replay`]) re-derives
+        // `S̃A` by slicing rows back out of the *stored* operand — so the
+        // live engine must consume the delta in the stored kind too, or
+        // the dense-GEMM and CSR-axpy accumulation orders diverge and
+        // recovery is no longer bitwise.
+        let delta_a: Cow<'_, Operand> = match (&*self.a, delta_a) {
+            (Operand::Dense(_), Operand::Sparse(dc)) => {
+                Cow::Owned(Operand::Dense(dc.to_dense()))
+            }
+            (Operand::Sparse(_), Operand::Dense(dm)) => {
+                Cow::Owned(Operand::Sparse(crate::linalg::sparse::CsrMatrix::from_dense(dm)))
+            }
+            _ => Cow::Borrowed(delta_a),
+        };
+        let delta_a: &Operand = &delta_a;
         // O(Δn d) bookkeeping: atb += ΔA^T Δb, then grow the operand and
         // observations in place.
         delta_a.matvec_t_add(delta_b, &mut self.atb);
@@ -414,6 +494,62 @@ impl ModelSession {
     /// Total solves answered, and how many came from the solution cache.
     pub fn query_stats(&self) -> (u64, u64) {
         (self.queries, self.cache_hits)
+    }
+
+    /// The registered observations `b` (grown by appends).
+    pub fn b(&self) -> &[f64] {
+        &self.b
+    }
+
+    /// The cached `A^T b` — accumulated incrementally across appends, so
+    /// its exact bit pattern is history-dependent; persistence stores the
+    /// bytes verbatim rather than recomputing
+    /// ([`crate::persist`]).
+    pub fn atb(&self) -> &[f64] {
+        &self.atb
+    }
+
+    /// The solver seed the session was registered with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The warm-start vector left by the last primary-RHS solve.
+    pub fn warm(&self) -> Option<&[f64]> {
+        self.warm.as_deref()
+    }
+
+    /// The live solver state (sketch engine + factorization + RNG), if
+    /// the session has solved at least once.
+    pub fn state(&self) -> Option<&AdaptiveSessionState> {
+        self.state.as_ref()
+    }
+
+    /// The `(nu, eps)` bit-pattern keys of the cached solutions, least
+    /// recently used first. Snapshots persist the keys (not the vectors):
+    /// they are cheap, and a recovering server can see which operating
+    /// points the model served without carrying stale answers across a
+    /// restart.
+    pub fn solution_keys(&self) -> Vec<(u64, u64)> {
+        self.solutions.iter().map(|s| (s.nu_bits, s.eps_bits)).collect()
+    }
+
+    /// Mutation epoch: how many solver runs (not appends) have changed
+    /// state that only a fresh snapshot can capture. A model is *dirty*
+    /// when its epoch is ahead of the last persisted one; appends leave
+    /// the epoch alone because the WAL replays them bitwise.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Absorb any lazily appended rows into the sketch/factorization now
+    /// — the public hook used before snapshotting or spilling a model
+    /// ([`crate::persist`]). Bitwise-neutral with respect to a twin that
+    /// flushed at its next solve instead: the engine consumes the same
+    /// pending rows with the same RNG state either way, so flushing early
+    /// never forks the stream.
+    pub fn flush_appended(&mut self) -> Result<(), String> {
+        self.flush_pending().map_err(|e| e.into())
     }
 
     /// Set (or clear) the wall-clock deadline for subsequent solves on
@@ -596,6 +732,7 @@ impl ModelSession {
         match outcome {
             Ok(Ok(out)) => {
                 self.state = Some(out.state);
+                self.epoch += 1;
                 Ok(out.solutions)
             }
             Ok(Err(e)) => {
@@ -691,6 +828,7 @@ impl ModelSession {
         match outcome {
             Ok(Ok((sol, state))) => {
                 self.state = Some(state);
+                self.epoch += 1;
                 Ok(sol)
             }
             Ok(Err(e)) => {
@@ -1197,5 +1335,98 @@ mod tests {
         let sol = s.solve(0.5, 1e-9).unwrap();
         assert_eq!(sol.report.recovery, RecoveryRung::None);
         assert_eq!(sol.report.recovery.label(), "none");
+    }
+
+    #[test]
+    fn append_delta_is_normalized_to_operand_storage_kind() {
+        use crate::linalg::sparse::CsrMatrix;
+        let ds = synthetic::exponential_decay(96, 8, 61);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 4);
+        let mut s = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Gaussian,
+            62,
+        )
+        .unwrap();
+        s.solve(0.5, 1e-8).unwrap();
+        // A CSR delta streamed into a dense model must be densified
+        // *before* it reaches the pending buffer — the engine has to see
+        // the same storage kind a replay would slice out of the operand.
+        let sparse_delta = Operand::Sparse(CsrMatrix::from_dense(&delta));
+        s.append(sparse_delta, b_delta, AppendRefresh::Lazy).unwrap();
+        assert!(
+            matches!(s.pending.as_ref().unwrap(), Operand::Dense(_)),
+            "pending delta must carry the operand's (dense) storage kind"
+        );
+        assert!(matches!(&*s.a, Operand::Dense(_)));
+        let sol = s.solve(0.5, 1e-9).unwrap();
+        assert!(sol.report.converged);
+    }
+
+    #[test]
+    fn epoch_counts_solver_runs_not_appends() {
+        let ds = synthetic::exponential_decay(128, 16, 63);
+        let full = ds.a.dense().into_owned();
+        let (base, b_base, delta, b_delta) = split_last(&full, &ds.b, 4);
+        let mut s = ModelSession::new(
+            Arc::new(Operand::from(base)),
+            b_base,
+            SketchKind::Gaussian,
+            64,
+        )
+        .unwrap();
+        assert_eq!(s.epoch(), 0);
+        s.solve(0.5, 1e-8).unwrap();
+        assert_eq!(s.epoch(), 1, "an uncached solve mutates solver state");
+        s.solve(0.5, 1e-8).unwrap();
+        assert_eq!(s.epoch(), 1, "a cache hit runs no solver");
+        s.append(Operand::from(delta), b_delta, AppendRefresh::Eager).unwrap();
+        assert_eq!(s.epoch(), 1, "appends are WAL-covered, not dirty");
+        s.solve(0.5, 1e-8).unwrap();
+        assert_eq!(s.epoch(), 2);
+        // Failed solves roll back without bumping.
+        assert!(s.solve(0.0, 1e-8).is_err());
+        assert_eq!(s.epoch(), 2);
+    }
+
+    #[test]
+    fn restore_rebuilds_a_bitwise_equivalent_session() {
+        let mut live = session(128, 16, 65);
+        live.solve(0.5, 1e-8).unwrap();
+        let mut restored = ModelSession::restore(
+            Arc::clone(live.operand()),
+            live.b().to_vec(),
+            live.atb().to_vec(),
+            live.kind(),
+            live.seed(),
+            live.state().cloned(),
+            live.warm().map(<[f64]>::to_vec),
+            live.query_stats().0,
+            live.epoch(),
+        )
+        .unwrap();
+        assert_eq!(restored.epoch(), live.epoch());
+        assert_eq!(restored.query_stats().0, live.query_stats().0);
+        // A fresh (uncached in both) query consumes the same RNG stream
+        // from the same state — bitwise-identical answers.
+        let a = live.solve(0.25, 1e-9).unwrap();
+        let b = restored.solve(0.25, 1e-9).unwrap();
+        let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.x), bits(&b.x));
+        // Shape validation rejects inconsistent parts.
+        assert!(ModelSession::restore(
+            Arc::clone(live.operand()),
+            vec![1.0; 3],
+            live.atb().to_vec(),
+            live.kind(),
+            live.seed(),
+            None,
+            None,
+            0,
+            0,
+        )
+        .is_err());
     }
 }

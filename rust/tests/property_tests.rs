@@ -246,3 +246,174 @@ fn prop_json_roundtrip() {
         assert_eq!(back, v, "{text}");
     });
 }
+
+// ---------------------------------------------------------------------------
+// Durability codecs: WAL records and checksummed snapshots
+// ---------------------------------------------------------------------------
+
+/// Unique scratch path for a property case's WAL/snapshot file.
+fn persist_scratch(tag: &str, case: u64) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("effdim-prop-{}-{tag}", std::process::id()));
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(format!("case-{case}"))
+}
+
+/// Random small delta block (dense or CSR, the two wire storage kinds).
+fn random_delta(rng: &mut Xoshiro256) -> (effdim::Operand, Vec<f64>) {
+    use effdim::linalg::sparse::CsrMatrix;
+    let rows = 1 + rng.next_below(6) as usize;
+    let cols = 1 + rng.next_below(8) as usize;
+    let b: Vec<f64> = (0..rows).map(|_| rng.next_gaussian()).collect();
+    let a = if rng.next_u64() & 1 == 0 {
+        effdim::Operand::Dense(Matrix::from_fn(rows, cols, |_, _| rng.next_gaussian()))
+    } else {
+        let mut trips = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.next_f64() < 0.4 {
+                    trips.push((i, j, rng.next_gaussian()));
+                }
+            }
+        }
+        effdim::Operand::Sparse(CsrMatrix::from_triplets(rows, cols, &trips))
+    };
+    (a, b)
+}
+
+#[test]
+fn prop_wal_record_roundtrip() {
+    use effdim::persist::wal::{decode_append, encode_append};
+    check_property("wal record roundtrip", 40, |_case, rng| {
+        let (a, b) = random_delta(rng);
+        let eager = rng.next_u64() & 1 == 0;
+        let rec = decode_append(&encode_append(&a, &b, eager)).expect("roundtrip decodes");
+        assert_eq!(rec.eager, eager);
+        assert_eq!(rec.b.len(), b.len());
+        for (x, y) in rec.b.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "b must survive bitwise");
+        }
+        assert_eq!(rec.a.rows(), a.rows());
+        assert_eq!(rec.a.cols(), a.cols());
+        let (da, db) = (rec.a.dense(), a.dense());
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                assert_eq!(
+                    da.get(i, j).to_bits(),
+                    db.get(i, j).to_bits(),
+                    "delta entry ({i},{j}) must survive bitwise"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_wal_scan_survives_truncation_at_every_byte_offset() {
+    use effdim::persist::wal::{encode_append, scan, Wal};
+    use effdim::persist::DurabilityPolicy;
+    // Two records; the scan of any prefix must stop at the last whole
+    // record before the cut — never error, never return a partial record.
+    check_property("wal truncation sweep", 8, |case, rng| {
+        let path = persist_scratch("wal-trunc", case);
+        let _ = std::fs::remove_file(&path);
+        let mut wal = Wal::open(&path, DurabilityPolicy::Off, 0).unwrap();
+        let mut boundaries = vec![0u64]; // valid_len after k whole records
+        for _ in 0..2 {
+            let (a, b) = random_delta(rng);
+            wal.append(&encode_append(&a, &b, true)).unwrap();
+            boundaries.push(wal.len());
+        }
+        wal.sync().unwrap();
+        drop(wal);
+        let full = std::fs::read(&path).unwrap();
+        for cut in 0..=full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let s = scan(&path).unwrap_or_else(|e| panic!("cut {cut}: scan errored: {e}"));
+            let whole = boundaries.iter().filter(|&&b| b <= cut as u64).count() - 1;
+            assert_eq!(s.records.len(), whole, "cut {cut}: whole-record prefix");
+            assert_eq!(s.valid_len, boundaries[whole], "cut {cut}: valid_len");
+            assert_eq!(
+                s.truncated_tail,
+                cut as u64 > boundaries[whole],
+                "cut {cut}: tail flag"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
+fn prop_wal_scan_stops_at_corrupted_record() {
+    use effdim::persist::wal::{encode_append, scan, Wal};
+    use effdim::persist::DurabilityPolicy;
+    check_property("wal corruption stops scan", 20, |case, rng| {
+        let path = persist_scratch("wal-crc", case);
+        let _ = std::fs::remove_file(&path);
+        let mut wal = Wal::open(&path, DurabilityPolicy::Off, 0).unwrap();
+        let (a, b) = random_delta(rng);
+        wal.append(&encode_append(&a, &b, true)).unwrap();
+        let first_end = wal.len();
+        let (a2, b2) = random_delta(rng);
+        wal.append(&encode_append(&a2, &b2, false)).unwrap();
+        wal.sync().unwrap();
+        drop(wal);
+        // Flip one byte anywhere in the second record (header or payload).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let span = bytes.len() - first_end as usize;
+        let victim = first_end as usize + rng.next_below(span as u64) as usize;
+        bytes[victim] ^= 1 << rng.next_below(8);
+        std::fs::write(&path, &bytes).unwrap();
+        let s = scan(&path).unwrap();
+        // Corrupting the length field can make the header claim a longer
+        // record than the file holds (a torn tail); any other flip fails
+        // the magic or CRC. Either way: stop at the last good record.
+        assert_eq!(s.records.len(), 1, "scan must stop at the corrupted record");
+        assert_eq!(s.valid_len, first_end);
+        assert!(s.truncated_tail, "the corrupt tail must be flagged");
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
+fn prop_snapshot_decode_rejects_any_single_byte_corruption() {
+    use effdim::data::synthetic;
+    use effdim::persist::snapshot::{decode, encode_session};
+    use effdim::sketch::SketchKind;
+    use effdim::solvers::session::ModelSession;
+    use std::sync::Arc;
+    check_property("snapshot corruption rejected", 12, |_case, rng| {
+        let (n, d) = random_dims(rng);
+        let ds = synthetic::exponential_decay(n, d, rng.next_u64());
+        let atb_ref: Vec<f64>;
+        let mut sess = ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 3).unwrap();
+        if rng.next_u64() & 1 == 0 {
+            sess.solve(0.5, 1e-8).unwrap(); // snapshot a warmed session too
+        }
+        atb_ref = sess.atb().to_vec();
+        let bytes = encode_session("prop", &mut sess).unwrap();
+
+        // Clean decode round-trips the identifying fields bitwise.
+        let snap = decode(&bytes).expect("clean snapshot decodes");
+        assert_eq!(snap.name, "prop");
+        assert_eq!(snap.a.rows(), n);
+        assert_eq!(snap.a.cols(), d);
+        snap.verify_atb_digest().expect("stored digest matches");
+        assert_eq!(snap.atb.len(), atb_ref.len());
+        for (x, y) in snap.atb.iter().zip(&atb_ref) {
+            assert_eq!(x.to_bits(), y.to_bits(), "atb must survive bitwise");
+        }
+
+        // One flipped bit anywhere must fail decode (file CRC), and any
+        // truncation must fail decode — never panic, never a wrong model.
+        for _ in 0..8 {
+            let mut bad = bytes.clone();
+            let at = rng.next_below(bad.len() as u64) as usize;
+            bad[at] ^= 1 << rng.next_below(8);
+            assert!(decode(&bad).is_err(), "flipped byte {at} must be detected");
+        }
+        for _ in 0..4 {
+            let cut = rng.next_below(bytes.len() as u64) as usize;
+            assert!(decode(&bytes[..cut]).is_err(), "truncation at {cut} must be detected");
+        }
+    });
+}

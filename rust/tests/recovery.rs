@@ -1,0 +1,416 @@
+//! Crash-recovery chaos suite for the durability subsystem.
+//!
+//! The contract under test, end to end:
+//!
+//! * **bitwise recovery**: a store whose history is an initial snapshot
+//!   plus WAL-covered appends recovers — across all three sketch
+//!   families — to a registry whose fresh queries answer
+//!   bitwise-identically to a twin that never crashed;
+//! * **torn tails**: a WAL cut mid-record (the shape a crash mid-write
+//!   leaves behind) is truncated to the last whole record with a logged
+//!   warning — never a panic, never a lost prefix;
+//! * **corruption**: a bit-flipped snapshot skips that one model and
+//!   recovers the rest;
+//! * **failpoints**: injected faults at the three persistence sites
+//!   (`persist.wal_append`, `persist.snapshot`, `persist.recover`)
+//!   surface as structured errors over the wire and leave every model
+//!   consistent;
+//! * **spill/reload**: evict on a durable server is a spill — a later
+//!   query transparently reloads the model, pending lazy appends
+//!   included.
+//!
+//! Failpoint state is process-global, so every test serializes on one
+//! mutex and starts disarmed (same discipline as `tests/chaos.rs`).
+
+use effdim::coordinator::registry::{Registry, DEFAULT_BYTE_BUDGET};
+use effdim::coordinator::server::{Client, Server, ServerConfig};
+use effdim::data::synthetic;
+use effdim::linalg::Matrix;
+use effdim::persist::{DurabilityPolicy, Store};
+use effdim::sketch::SketchKind;
+use effdim::solvers::session::{AppendRefresh, ModelSession};
+use effdim::util::failpoint::{self, Action};
+use effdim::util::json::Json;
+use effdim::Operand;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let guard = LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    failpoint::disarm_all();
+    guard
+}
+
+/// Fresh scratch state dir under the system temp root.
+fn state_dir(tag: &str) -> PathBuf {
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "effdim-recovery-{tag}-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bitwise(x: &[f64], y: &[f64], what: &str) {
+    assert_eq!(x.len(), y.len(), "{what}: length mismatch");
+    for (i, (a, b)) in x.iter().zip(y).enumerate() {
+        assert!(a.to_bits() == b.to_bits(), "{what}: entry {i} differs ({a:e} vs {b:e})");
+    }
+}
+
+/// Deterministic `dn x d` delta block, disjoint from the generators.
+fn delta_rows(dn: usize, d: usize) -> (Operand, Vec<f64>) {
+    let m = Matrix::from_fn(dn, d, |i, j| ((i * d + j) as f64 * 0.017).sin());
+    let b = (0..dn).map(|i| (i as f64 * 0.029).cos()).collect();
+    (Operand::Dense(m), b)
+}
+
+/// Register one synthetic model on a durable registry and stream one
+/// WAL-covered append into it in the server's order (WAL first, then
+/// apply), then "crash": drop everything *without* a closing snapshot,
+/// so recovery must replay the WAL over the initial snapshot.
+fn seed_store_and_crash(dir: &Path, kind: SketchKind, refresh: AppendRefresh) -> u64 {
+    let store = Arc::new(Store::open(dir, DurabilityPolicy::Strict).unwrap());
+    let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, Arc::clone(&store));
+    let ds = synthetic::exponential_decay(192, 16, 21);
+    let entry = reg.register("crash".into(), ds.a, ds.b, kind, 21).unwrap();
+    let (da, db) = delta_rows(8, 16);
+    {
+        let mut s = entry.session.lock().unwrap();
+        store
+            .append_record(entry.id, &da, &db, refresh == AppendRefresh::Eager)
+            .expect("append must reach the WAL");
+        s.append(da, db, refresh).unwrap();
+    }
+    entry.id
+    // reg + store drop here with the WAL ahead of the snapshot — the
+    // simulated crash.
+}
+
+/// The never-crashed twin of [`seed_store_and_crash`]'s model.
+fn twin_solution(kind: SketchKind, refresh: AppendRefresh, nu: f64) -> Vec<f64> {
+    let ds = synthetic::exponential_decay(192, 16, 21);
+    let mut twin = ModelSession::new(Arc::new(ds.a), ds.b, kind, 21).unwrap();
+    let (da, db) = delta_rows(8, 16);
+    twin.append(da, db, refresh).unwrap();
+    twin.solve(nu, 1e-9).unwrap().x
+}
+
+// ---------------------------------------------------------------------
+// Crash simulation: snapshot + WAL replay answers bitwise, per family.
+// ---------------------------------------------------------------------
+
+#[test]
+fn crash_recovery_is_bitwise_for_all_sketch_families() {
+    let _g = chaos_lock();
+    for (kind, refresh) in [
+        (SketchKind::Gaussian, AppendRefresh::Eager),
+        (SketchKind::Srht, AppendRefresh::Lazy),
+        (SketchKind::Sparse, AppendRefresh::Eager),
+    ] {
+        let dir = state_dir("families");
+        let id = seed_store_and_crash(&dir, kind, refresh);
+        let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+        let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, store);
+        assert_eq!(reg.recover().unwrap(), 1, "{kind:?}");
+        let entry = reg.touch(id).unwrap();
+        let x = {
+            let mut s = entry.session.lock().unwrap();
+            assert_eq!(s.n(), 192 + 8, "{kind:?}: WAL append must replay");
+            s.solve(0.4, 1e-9).unwrap().x
+        };
+        let twin = twin_solution(kind, refresh, 0.4);
+        assert_bitwise(&x, &twin, &format!("{kind:?} recovered vs never-crashed twin"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Torn tails and flipped bits: degrade by exactly one unit, never panic.
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_wal_tail_truncates_to_the_last_whole_record() {
+    let _g = chaos_lock();
+    let dir = state_dir("torn");
+    let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+    let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, Arc::clone(&store));
+    let ds = synthetic::exponential_decay(192, 16, 22);
+    let entry = reg.register("torn".into(), ds.a, ds.b, SketchKind::Gaussian, 22).unwrap();
+    let id = entry.id;
+    for _ in 0..2 {
+        let (da, db) = delta_rows(4, 16);
+        let mut s = entry.session.lock().unwrap();
+        store.append_record(id, &da, &db, true).unwrap();
+        s.append(da, db, AppendRefresh::Eager).unwrap();
+    }
+    drop(entry);
+    drop(reg);
+    drop(store);
+
+    // Tear the tail: chop 5 bytes off the last record, as a crash
+    // mid-write would.
+    let wal = dir.join(id.to_string()).join("wal.log");
+    let len = std::fs::metadata(&wal).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&wal).unwrap();
+    f.set_len(len - 5).unwrap();
+    drop(f);
+
+    let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+    let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, Arc::clone(&store));
+    assert_eq!(reg.recover().unwrap(), 1);
+    assert_eq!(store.truncated_tails.load(Ordering::Relaxed), 1, "tear must be counted");
+    let entry = reg.touch(id).unwrap();
+    let mut s = entry.session.lock().unwrap();
+    assert_eq!(s.n(), 192 + 4, "exactly the whole-record prefix replays");
+    assert!(s.solve(0.5, 1e-9).unwrap().report.converged, "recovered model still solves");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_snapshot_bit_skips_one_model_and_recovers_the_rest() {
+    let _g = chaos_lock();
+    let dir = state_dir("flip");
+    let (id_bad, id_good) = {
+        let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+        let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, store);
+        let mk = |seed: u64| {
+            let ds = synthetic::exponential_decay(96, 8, seed);
+            reg.register(format!("m{seed}"), ds.a, ds.b, SketchKind::Gaussian, seed).unwrap().id
+        };
+        (mk(1), mk(2))
+    };
+    // Flip one payload bit in the middle of the first model's snapshot.
+    let snap = dir.join(id_bad.to_string()).join("snapshot.snap");
+    let mut bytes = Vec::new();
+    std::fs::File::open(&snap).unwrap().read_to_end(&mut bytes).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    let mut f = std::fs::OpenOptions::new().write(true).open(&snap).unwrap();
+    f.seek(SeekFrom::Start(0)).unwrap();
+    f.write_all(&bytes).unwrap();
+    drop(f);
+
+    let store = Arc::new(Store::open(&dir, DurabilityPolicy::Strict).unwrap());
+    let reg = Registry::with_store(DEFAULT_BYTE_BUDGET, store);
+    assert_eq!(reg.recover().unwrap(), 1, "only the intact model recovers");
+    assert!(reg.touch(id_good).is_some(), "intact model survives its neighbor's corruption");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Failpoints at the persistence sites, observed over the wire.
+// ---------------------------------------------------------------------
+
+fn start_durable_server(dir: &Path) -> (std::net::SocketAddr, Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<()>) {
+    let config = ServerConfig {
+        state_dir: Some(dir.to_path_buf()),
+        durability: DurabilityPolicy::Strict,
+        ..ServerConfig::default()
+    };
+    let server = Server::bind_with_config("127.0.0.1:0", config).unwrap();
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, stop, handle)
+}
+
+fn ok_of(resp: &Json) -> bool {
+    resp.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+#[test]
+fn wal_append_fault_refuses_the_append_and_applies_nothing() {
+    let _g = chaos_lock();
+    let dir = state_dir("walfault");
+    let (addr, stop, handle) = start_durable_server(&dir);
+    let mut client = Client::connect(addr).unwrap();
+    let reg = client
+        .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":3,"name":"wf"}"#)
+        .unwrap();
+    assert!(ok_of(&reg), "{reg:?}");
+    let model = reg.get("model").unwrap().as_usize().unwrap();
+
+    failpoint::arm("persist.wal_append", Action::Error, 1);
+    let refused = client
+        .call(&format!(
+            r#"{{"cmd":"append","model":{model},"rows":1,"cols":16,"triplets":[[0,3,1.0]],"b":[0.5]}}"#
+        ))
+        .unwrap();
+    assert!(!ok_of(&refused), "{refused:?}");
+    assert!(
+        refused.get("error").unwrap().as_str().unwrap().contains("append not logged"),
+        "{refused:?}"
+    );
+
+    // Nothing applied: the model still has its original rows and a
+    // disarmed retry of the same append goes through.
+    let listing = client.call(r#"{"cmd":"models"}"#).unwrap();
+    let n0 = listing.get("models").unwrap().as_arr().unwrap()[0]
+        .get("n")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(n0, 128, "refused append must not leak rows");
+    let retried = client
+        .call(&format!(
+            r#"{{"cmd":"append","model":{model},"rows":1,"cols":16,"triplets":[[0,3,1.0]],"b":[0.5]}}"#
+        ))
+        .unwrap();
+    assert!(ok_of(&retried), "{retried:?}");
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+
+    // The retried (logged) append is exactly what a restart replays.
+    let (addr, stop, handle) = start_durable_server(&dir);
+    let mut client = Client::connect(addr).unwrap();
+    let listing = client.call(r#"{"cmd":"models"}"#).unwrap();
+    let n1 = listing.get("models").unwrap().as_arr().unwrap()[0]
+        .get("n")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(n1, 129, "recovery replays the one logged append");
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_fault_fails_register_cleanly_and_leaves_no_ghost() {
+    let _g = chaos_lock();
+    let dir = state_dir("snapfault");
+    let (addr, stop, handle) = start_durable_server(&dir);
+    let mut client = Client::connect(addr).unwrap();
+
+    failpoint::arm("persist.snapshot", Action::Error, 1);
+    let refused = client
+        .call(r#"{"cmd":"register","profile":"exp","n":96,"d":8,"seed":4,"name":"ghost"}"#)
+        .unwrap();
+    assert!(!ok_of(&refused), "{refused:?}");
+    assert!(
+        refused.get("error").unwrap().as_str().unwrap().contains("cannot persist"),
+        "{refused:?}"
+    );
+    let health = client.call(r#"{"cmd":"health"}"#).unwrap();
+    assert_eq!(health.get("models").unwrap().as_usize(), Some(0), "{health:?}");
+
+    // Disarmed, the same registration succeeds and is durable.
+    let reg = client
+        .call(r#"{"cmd":"register","profile":"exp","n":96,"d":8,"seed":4,"name":"ghost"}"#)
+        .unwrap();
+    assert!(ok_of(&reg), "{reg:?}");
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn recover_fault_skips_the_model_then_reloads_it_on_demand() {
+    let _g = chaos_lock();
+    let dir = state_dir("recfault");
+    // Two models, cleanly shut down.
+    let (addr, stop, handle) = start_durable_server(&dir);
+    let mut client = Client::connect(addr).unwrap();
+    let mut ids = Vec::new();
+    for seed in [5, 6] {
+        let reg = client
+            .call(&format!(
+                r#"{{"cmd":"register","profile":"exp","n":96,"d":8,"seed":{seed},"name":"r{seed}"}}"#
+            ))
+            .unwrap();
+        assert!(ok_of(&reg), "{reg:?}");
+        ids.push(reg.get("model").unwrap().as_usize().unwrap());
+    }
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+
+    // One injected rebuild fault: startup recovery skips that model with
+    // a warning and carries on.
+    failpoint::arm("persist.recover", Action::Error, 1);
+    let (addr, stop, handle) = start_durable_server(&dir);
+    let mut client = Client::connect(addr).unwrap();
+    let health = client.call(r#"{"cmd":"health"}"#).unwrap();
+    assert_eq!(health.get("models").unwrap().as_usize(), Some(1), "{health:?}");
+
+    // The skipped model's disk state is intact, so a (now disarmed)
+    // query reloads it transparently instead of erroring.
+    let q = client
+        .call(&format!(r#"{{"cmd":"query","model":{},"nu":0.5,"eps":1e-8}}"#, ids[0]))
+        .unwrap();
+    assert!(ok_of(&q), "skipped model must reload on demand: {q:?}");
+    let health = client.call(r#"{"cmd":"health"}"#).unwrap();
+    assert_eq!(health.get("models").unwrap().as_usize(), Some(2), "{health:?}");
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+    failpoint::disarm_all();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Spill / reload over the wire, pending lazy appends included.
+// ---------------------------------------------------------------------
+
+#[test]
+fn evicted_model_reloads_on_demand_with_its_pending_lazy_append() {
+    let _g = chaos_lock();
+    let dir = state_dir("spill");
+    let (addr, stop, handle) = start_durable_server(&dir);
+    let mut client = Client::connect(addr).unwrap();
+    let reg = client
+        .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":7,"name":"sp"}"#)
+        .unwrap();
+    assert!(ok_of(&reg), "{reg:?}");
+    let model = reg.get("model").unwrap().as_usize().unwrap();
+
+    // Lazy append: the delta sits in the session's pending buffer when
+    // the evict lands — the old data-loss shape.
+    let app = client
+        .call(&format!(
+            r#"{{"cmd":"append","model":{model},"rows":1,"cols":16,"triplets":[[0,2,2.0]],"b":[0.25],"refresh":"lazy"}}"#
+        ))
+        .unwrap();
+    assert!(ok_of(&app), "{app:?}");
+
+    let ev = client.call(&format!(r#"{{"cmd":"evict","model":{model}}}"#)).unwrap();
+    assert!(ok_of(&ev), "{ev:?}");
+    assert_eq!(ev.get("purged").and_then(Json::as_bool), Some(false), "{ev:?}");
+
+    // The next query transparently reloads from disk; the appended row
+    // is there.
+    let q = client
+        .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5,"eps":1e-8}}"#))
+        .unwrap();
+    assert!(ok_of(&q), "spilled model must reload: {q:?}");
+    let listing = client.call(r#"{"cmd":"models"}"#).unwrap();
+    let n = listing.get("models").unwrap().as_arr().unwrap()[0]
+        .get("n")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(n, 129, "pending lazy append survived the spill");
+
+    // Purge is final: no transparent reload afterwards.
+    let ev = client.call(&format!(r#"{{"cmd":"evict","model":{model},"purge":true}}"#)).unwrap();
+    assert!(ok_of(&ev), "{ev:?}");
+    assert_eq!(ev.get("purged").and_then(Json::as_bool), Some(true), "{ev:?}");
+    let q = client
+        .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.5,"eps":1e-8}}"#))
+        .unwrap();
+    assert!(!ok_of(&q), "purged model must stay gone: {q:?}");
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
