@@ -778,6 +778,67 @@ fn main() {
         println!("    recovery replay speedup vs cold re-register: {:.2}x\n", t_cold / t_recover);
     }
 
+    // Concurrent lock-free serving reads (§Serving acceptance): one
+    // registered model with a warmed, published snapshot; T threads split
+    // a fixed budget of repeat-`nu` queries, each answered entirely from
+    // the snapshot handle (`entry.snapshot().cached(..)`) — the same path
+    // the server's fast lane takes, session mutex never touched.
+    // `concurrent_query_speedup_tT` = mean(1 thread) / mean(T threads)
+    // over the same total work, so ideal scaling reads as ~T and a
+    // serialized read path would read as ~1.
+    {
+        use effdim::coordinator::registry::{Registry, DEFAULT_BYTE_BUDGET};
+        let (n, d) = if smoke { (512usize, 64usize) } else { (4096usize, 256usize) };
+        let total_queries = if smoke { 20_000usize } else { 200_000usize };
+        let reps = if smoke { 2 } else { 5 };
+        let (nu, eps) = (0.5, 1e-8);
+        let ds = synthetic::exponential_decay(n, d, 23);
+        let reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        let entry = reg
+            .register("bench".into(), ds.a, ds.b, SketchKind::Gaussian, 23)
+            .unwrap();
+        {
+            let mut s = entry.session.lock().unwrap();
+            s.solve(nu, eps).unwrap();
+            entry.publish(&mut s).unwrap();
+        }
+        println!(
+            "--- concurrent snapshot queries (n = {n}, d = {d}, {total_queries} repeat-nu reads) ---"
+        );
+        let mut t1 = f64::NAN;
+        for t in [1usize, 2, 8] {
+            let per_thread = total_queries / t;
+            let mean = timed(
+                &mut cases,
+                &format!("snapshot cached query x{total_queries} (t={t})"),
+                (n, d, 0),
+                t,
+                reps,
+                || {
+                    std::thread::scope(|scope| {
+                        for _ in 0..t {
+                            scope.spawn(|| {
+                                for _ in 0..per_thread {
+                                    let snap = entry.snapshot();
+                                    let sol =
+                                        snap.cached(nu, eps).expect("warmed solution published");
+                                    std::hint::black_box(sol.x[0]);
+                                }
+                            });
+                        }
+                    });
+                },
+            );
+            if t == 1 {
+                t1 = mean;
+            } else {
+                derived.push((format!("concurrent_query_speedup_t{t}"), Json::from(t1 / mean)));
+                println!("    concurrent_query_speedup_t{t}: {:.2}x", t1 / mean);
+            }
+        }
+        println!();
+    }
+
     // Emit the JSON trajectory at the repo root (benches run from rust/).
     let out = Json::obj(vec![
         ("generated_by", Json::from("cargo bench --bench kernels")),

@@ -32,6 +32,12 @@
 //! ```
 //! Responses: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
 //!
+//! **Pipelining:** any request may add `"id":N` (non-negative integer).
+//! Tagged requests are answered asynchronously with the id echoed as the
+//! first response field — `{"id":N,"ok":true,...}` — and may come back
+//! in completion order, so one connection can keep many requests in
+//! flight (see `PROTOCOL.md` §Concurrency and [`decode_tagged`]).
+//!
 //! Robustness contract (see `PROTOCOL.md` §Errors): `nu`/`eps` are
 //! validated *at decode* — non-positive or non-finite values answer
 //! `{"ok":false,"error":"invalid nu: ..."}` before any solver state is
@@ -192,9 +198,49 @@ pub enum Request {
     Shutdown,
 }
 
-/// Decode one request line.
+/// Decode one request line, discarding any pipelining tag (see
+/// [`decode_tagged`]). A malformed `"id"` field is still an error — the
+/// tag is part of the wire contract whether or not the caller uses it.
 pub fn decode(line: &str) -> Result<Request, String> {
+    decode_tagged(line).map(|(_, req)| req)
+}
+
+/// Decode one request line together with its optional `"id"` pipelining
+/// tag.
+///
+/// Any request may carry `"id"` (a non-negative integer `< 2^53`, the
+/// exact-in-f64 range — same strictness as `"job"`/`"model"` ids): the
+/// server then answers **asynchronously**, echoing the id as the first
+/// field of the response line, and tagged responses on one connection
+/// may arrive in any order (completion order, not submission order).
+/// Untagged requests keep the classic synchronous one-in/one-out
+/// contract. `null` means absent, like every optional field; any other
+/// non-integer value is a decode error rather than a silently dropped
+/// tag — a client that thinks it tagged a request must never get an
+/// untagged (uncorrelatable) response back.
+pub fn decode_tagged(line: &str) -> Result<(Option<u64>, Request), String> {
     let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+    let id = decode_request_id(&v)?;
+    Ok((id, decode_value(v)?))
+}
+
+/// Strict optional request id: absent / `null` → `None`; anything
+/// non-integral, negative, or above the f64-exact range is an error.
+fn decode_request_id(v: &Json) -> Result<Option<u64>, String> {
+    match v.get("id") {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => {
+            let x = j.as_f64().ok_or("request id must be a number")?;
+            if !(x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x < 9_007_199_254_740_992.0)
+            {
+                return Err(format!("request id must be a non-negative integer, got {x}"));
+            }
+            Ok(Some(x as u64))
+        }
+    }
+}
+
+fn decode_value(v: Json) -> Result<Request, String> {
     let cmd = v.get("cmd").and_then(Json::as_str).ok_or("missing cmd")?;
     match cmd {
         "solve" => {
@@ -526,9 +572,78 @@ pub fn err_with(message: &str, mut fields: Vec<(&str, Json)>) -> String {
     Json::obj(all).to_string()
 }
 
+/// Splice a request's `"id"` tag into an already-encoded response line,
+/// as its first field — the pipelining correlation contract. Every
+/// encoder above produces a non-empty JSON object, so the splice is a
+/// plain prefix rewrite; keeping it at the encoding layer means the
+/// server tags `ok` and `err` responses identically.
+pub fn tag_response(id: u64, response: &str) -> String {
+    debug_assert!(
+        response.starts_with('{') && response.len() > 2,
+        "responses are non-empty JSON objects"
+    );
+    let mut out = String::with_capacity(response.len() + 24);
+    out.push_str("{\"id\":");
+    out.push_str(&id.to_string());
+    out.push(',');
+    out.push_str(&response[1..]);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn decode_tagged_reads_the_id_and_the_request() {
+        let (id, req) = decode_tagged(r#"{"cmd":"ping","id":7}"#).unwrap();
+        assert_eq!(id, Some(7));
+        assert!(matches!(req, Request::Ping));
+    }
+
+    #[test]
+    fn untagged_requests_decode_with_no_id() {
+        let (id, req) = decode_tagged(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(id, None);
+        assert!(matches!(req, Request::Ping));
+        // `null` means absent, like every optional field.
+        let (id, _) = decode_tagged(r#"{"cmd":"ping","id":null}"#).unwrap();
+        assert_eq!(id, None);
+    }
+
+    #[test]
+    fn request_id_zero_is_a_valid_tag() {
+        let (id, _) = decode_tagged(r#"{"cmd":"ping","id":0}"#).unwrap();
+        assert_eq!(id, Some(0));
+    }
+
+    #[test]
+    fn malformed_request_ids_are_decode_errors() {
+        // A client that thinks it tagged a request must never silently
+        // get an uncorrelatable untagged response: reject, don't drop.
+        for bad in [
+            r#"{"cmd":"ping","id":1.5}"#,
+            r#"{"cmd":"ping","id":-1}"#,
+            r#"{"cmd":"ping","id":"7"}"#,
+            r#"{"cmd":"ping","id":true}"#,
+            r#"{"cmd":"ping","id":9007199254740992}"#,
+        ] {
+            let e = decode_tagged(bad).unwrap_err();
+            assert!(e.contains("request id"), "{bad}: {e}");
+            // The untagged decoder applies the same strictness.
+            assert!(decode(bad).is_err(), "{bad} must fail decode() too");
+        }
+    }
+
+    #[test]
+    fn tag_response_splices_the_id_first() {
+        assert_eq!(tag_response(3, r#"{"ok":true}"#), r#"{"id":3,"ok":true}"#);
+        let tagged = tag_response(12, &err("boom"));
+        assert!(tagged.starts_with(r#"{"id":12,"ok":false"#), "{tagged}");
+        let parsed = json::parse(&tagged).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_usize(), Some(12));
+        assert_eq!(parsed.get("error").unwrap().as_str(), Some("boom"));
+    }
 
     #[test]
     fn decode_solve_with_defaults() {

@@ -24,6 +24,19 @@
 //! Eviction only removes the map entry — an in-flight query holds an
 //! `Arc` to the entry and completes normally.
 //!
+//! **Lock-free reads:** on top of the session mutex, every entry
+//! publishes an immutable [`SessionSnapshot`] through an RCU cell
+//! ([`crate::util::rcu::RcuCell`]). Read-only queries — exact-repeat
+//! solves and predicts over cached solutions — are answered straight
+//! from [`ModelEntry::snapshot`] without ever acquiring the session
+//! mutex, so unlimited readers of one hot model overlap freely while a
+//! writer (solve / append / re-key) mutates the session under its lock
+//! and republishes via [`ModelEntry::publish`] **only after the mutation
+//! commits**. A failed or rolled-back writer publishes nothing, so
+//! readers can never observe a partial state; a reader holding an old
+//! snapshot keeps getting that generation's bitwise answers for as long
+//! as it holds the `Arc`.
+//!
 //! **Durability** (`serve --state-dir`): with a [`Store`] attached,
 //! registration writes an initial checksummed snapshot, every eviction
 //! becomes a *spill* — the model's pending appends are flushed and its
@@ -37,8 +50,9 @@
 use crate::linalg::Operand;
 use crate::persist::Store;
 use crate::sketch::SketchKind;
-use crate::solvers::session::ModelSession;
+use crate::solvers::session::{ModelSession, SessionSnapshot};
 use crate::util::json::Json;
+use crate::util::{failpoint, rcu::RcuCell};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -58,11 +72,52 @@ pub struct ModelEntry {
     pub name: String,
     /// The reusable solver session; lock to query.
     pub session: Mutex<ModelSession>,
+    /// The published read-only view (see the module docs); loaded
+    /// lock-free by [`ModelEntry::snapshot`], swapped by
+    /// [`ModelEntry::publish`] after each committed mutation.
+    snap: RcuCell<SessionSnapshot>,
+    /// Queries answered entirely from the published snapshot (no session
+    /// lock). Counted here because the snapshot itself is immutable.
+    pub snap_queries: AtomicU64,
+    /// Snapshot-path queries that hit the cached-solution fast path
+    /// (currently all of them; kept separate so future read-only paths
+    /// that miss can be told apart).
+    pub snap_hits: AtomicU64,
     /// Logical LRU clock value of the last touch.
     last_used: AtomicU64,
     /// Cached `approx_bytes` of the session, refreshed after each query
     /// (sessions grow); reading it must not require the session lock.
     bytes: AtomicUsize,
+}
+
+impl ModelEntry {
+    /// Clone the currently published snapshot handle — **no mutex**, two
+    /// atomic RMWs and an `Arc` clone (see [`crate::util::rcu::RcuCell`]).
+    /// This is the whole read path: callers answer from the returned
+    /// snapshot and never touch [`ModelEntry::session`].
+    pub fn snapshot(&self) -> Arc<SessionSnapshot> {
+        self.snap.load()
+    }
+
+    /// Publish the session's current state as the new snapshot. Call
+    /// **after** a mutation commits, while still holding the session
+    /// lock (the `&mut ModelSession` argument enforces exactly that) —
+    /// publishing under the lock keeps generation order identical to
+    /// commit order.
+    ///
+    /// The `session.publish` failpoint fires *before* the swap: an
+    /// injected failure here models a writer dying between commit and
+    /// publish — the previous snapshot stays live and fully consistent,
+    /// and the next successful publish covers the skipped one (readers
+    /// see the committed state then, one generation late). The swap
+    /// itself is a single atomic store, so there is no partially
+    /// published state to observe, ever.
+    pub fn publish(&self, session: &mut ModelSession) -> Result<(), String> {
+        let snap = session.snapshot();
+        failpoint::check("session.publish")?;
+        self.snap.store(snap);
+        Ok(())
+    }
 }
 
 struct Inner {
@@ -134,13 +189,21 @@ impl Registry {
         let recovered = store.recover_all()?;
         let count = recovered.len();
         let mut inner = self.inner.lock().unwrap();
-        for model in recovered {
+        for mut model in recovered {
             let bytes = model.session.approx_bytes();
             inner.clock += 1;
+            // Recovery publishes only after the rebuild + WAL replay
+            // fully succeeded (damaged models were skipped above), so the
+            // first snapshot readers can load is already the complete
+            // recovered state — replay never exposes an intermediate.
+            let snap = RcuCell::new(model.session.snapshot());
             let entry = Arc::new(ModelEntry {
                 id: model.id,
                 name: model.name,
                 session: Mutex::new(model.session),
+                snap,
+                snap_queries: AtomicU64::new(0),
+                snap_hits: AtomicU64::new(0),
                 last_used: AtomicU64::new(inner.clock),
                 bytes: AtomicUsize::new(bytes),
             });
@@ -161,8 +224,9 @@ impl Registry {
         kind: SketchKind,
         seed: u64,
     ) -> Result<Arc<ModelEntry>, String> {
-        let session = ModelSession::new(Arc::new(a), b, kind, seed)?;
+        let mut session = ModelSession::new(Arc::new(a), b, kind, seed)?;
         let bytes = session.approx_bytes();
+        let snap = RcuCell::new(session.snapshot());
         let entry = {
             let mut inner = self.inner.lock().unwrap();
             let id = inner.next_id;
@@ -172,6 +236,9 @@ impl Registry {
                 id,
                 name,
                 session: Mutex::new(session),
+                snap,
+                snap_queries: AtomicU64::new(0),
+                snap_hits: AtomicU64::new(0),
                 last_used: AtomicU64::new(inner.clock),
                 bytes: AtomicUsize::new(bytes),
             });
@@ -218,7 +285,7 @@ impl Registry {
         if !store.has_spilled(id) {
             return None;
         }
-        let reloaded = match store.load_model(id) {
+        let mut reloaded = match store.load_model(id) {
             Ok(m) => m,
             Err(e) => {
                 eprintln!("warning: reload of spilled model {id} failed: {e}");
@@ -226,10 +293,14 @@ impl Registry {
             }
         };
         let bytes = reloaded.session.approx_bytes();
+        let snap = RcuCell::new(reloaded.session.snapshot());
         let entry = Arc::new(ModelEntry {
             id,
             name: reloaded.name,
             session: Mutex::new(reloaded.session),
+            snap,
+            snap_queries: AtomicU64::new(0),
+            snap_hits: AtomicU64::new(0),
             last_used: AtomicU64::new(clock),
             bytes: AtomicUsize::new(bytes),
         });
@@ -253,6 +324,18 @@ impl Registry {
     pub fn note_query(&self, entry: &ModelEntry, session: &ModelSession) {
         self.queries.fetch_add(1, Ordering::Relaxed);
         self.refresh_bytes(entry, session);
+    }
+
+    /// Record a query answered entirely from the published snapshot: the
+    /// registry-level counter advances (a snapshot hit is still a served
+    /// query, so wire metrics stay comparable with the locked path) and
+    /// the entry's own atomics record the lock-free hit. No byte refresh
+    /// — a read-only answer grows nothing — and no session lock, which is
+    /// the point.
+    pub fn note_snapshot_query(&self, entry: &ModelEntry) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        entry.snap_queries.fetch_add(1, Ordering::Relaxed);
+        entry.snap_hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a finished streaming append against `entry`: the operand,
@@ -411,6 +494,14 @@ impl Registry {
                         ("model", Json::from(e.id)),
                         ("name", Json::from(e.name.clone())),
                         ("bytes", Json::from(e.bytes.load(Ordering::Relaxed))),
+                        // Snapshot-path stats come from the entry's own
+                        // atomics + RCU cell, so they are reported even
+                        // for models busy with a long writer-path query.
+                        ("generation", Json::from(e.snapshot().generation())),
+                        (
+                            "snapshot_queries",
+                            Json::from(e.snap_queries.load(Ordering::Relaxed)),
+                        ),
                     ];
                     if let Some((n, d, m, kind, queries, hits)) = detail {
                         fields.extend([

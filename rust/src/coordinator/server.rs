@@ -37,7 +37,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// How long the nonblocking accept loop sleeps between polls. Bounds both
@@ -53,6 +53,12 @@ pub const DEFAULT_MAX_LINE_BYTES: usize = 16 * 1024 * 1024;
 
 /// Default bound on concurrent connection threads.
 pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// Default bound on in-flight *tagged* (pipelined) requests per
+/// connection — admission control one level below
+/// [`ServerConfig::max_conns`]: a single connection cannot fan out more
+/// worker threads than this, no matter how many tagged lines it floods.
+pub const DEFAULT_MAX_PIPELINE: usize = 16;
 
 /// Retry hint (seconds) in the overload-shed response.
 pub const RETRY_AFTER_S: f64 = 1.0;
@@ -72,6 +78,12 @@ pub struct ServerConfig {
     pub request_timeout: Option<Duration>,
     /// Maximum concurrent connections before accepts are shed.
     pub max_conns: usize,
+    /// Maximum in-flight pipelined (tagged) requests per connection; a
+    /// tagged request beyond this is shed with a *tagged*
+    /// `{"id":N,"ok":false,"error":"pipeline full","retry_after_s":..}`
+    /// so the client knows exactly which request to retry. Untagged
+    /// requests are unaffected (they are synchronous by contract).
+    pub max_pipeline: usize,
     /// Durable state directory (`serve --state-dir`): registered models
     /// are snapshotted there, appends are WAL-logged, and startup
     /// recovers whatever a previous process left behind. `None` =
@@ -90,6 +102,7 @@ impl Default for ServerConfig {
             max_line_bytes: DEFAULT_MAX_LINE_BYTES,
             request_timeout: None,
             max_conns: DEFAULT_MAX_CONNS,
+            max_pipeline: DEFAULT_MAX_PIPELINE,
             state_dir: None,
             durability: DurabilityPolicy::Strict,
         }
@@ -239,16 +252,53 @@ fn shed(mut stream: TcpStream) {
     let _ = stream.write_all(b"\n");
 }
 
-fn handle_connection(stream: TcpStream, shared: &Shared) {
+fn handle_connection(stream: TcpStream, shared: &Arc<Shared>) {
     // Short read timeout so the thread re-checks the stop flag instead of
     // blocking forever on an idle client (run() joins these threads at
     // shutdown; an indefinite blocking read would deadlock the server).
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut writer = match stream.try_clone() {
+    let writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let mut reader = BufReader::new(stream);
+    // Responses from the read loop and from pipelined workers interleave
+    // on one socket; the mutex makes each *line* atomic (a worker writes
+    // its whole tagged response or nothing between two other lines).
+    let writer = Arc::new(Mutex::new(writer));
+    let mut pipeline: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    serve_lines(BufReader::new(stream), shared, &writer, &mut pipeline);
+    // Graceful drain, pipelined edition: whatever made the read loop
+    // return (client close, stop flag, fatal line), every in-flight
+    // tagged request still finishes and writes its tagged response
+    // before the connection thread retires — run() joins *this* thread,
+    // so the shutdown drain contract covers workers transitively.
+    for h in pipeline {
+        let _ = h.join();
+    }
+}
+
+/// Write one response line (serialized against concurrent workers on the
+/// same connection). Returns `false` once the socket is unusable.
+fn write_line(writer: &Mutex<TcpStream>, line: &str) -> bool {
+    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+    w.write_all(line.as_bytes()).is_ok()
+        && w.write_all(b"\n").is_ok()
+        && w.flush().is_ok()
+}
+
+/// The per-connection read loop. Untagged requests keep the classic
+/// synchronous contract (decode → respond → write, in order); tagged
+/// requests are dispatched to short-lived worker threads so many can be
+/// in flight at once, their responses written in completion order with
+/// the id spliced back in (see `PROTOCOL.md` §Concurrency). In-flight
+/// workers are capped by [`ServerConfig::max_pipeline`]; beyond it the
+/// request is shed immediately with a tagged `pipeline full` error.
+fn serve_lines(
+    mut reader: BufReader<TcpStream>,
+    shared: &Arc<Shared>,
+    writer: &Arc<Mutex<TcpStream>>,
+    pipeline: &mut Vec<std::thread::JoinHandle<()>>,
+) {
     let cap = shared.config.max_line_bytes;
     let mut buf: Vec<u8> = Vec::new();
     loop {
@@ -278,9 +328,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
                     let resp = protocol::err(&format!(
                         "request too large: line exceeds {cap} bytes"
                     ));
-                    let _ = writer.write_all(resp.as_bytes());
-                    let _ = writer.write_all(b"\n");
-                    let _ = writer.flush();
+                    let _ = write_line(writer, &resp);
                     return;
                 }
                 continue; // partial line: wait for the rest
@@ -291,15 +339,53 @@ fn handle_connection(stream: TcpStream, shared: &Shared) {
         if request.trim().is_empty() {
             continue;
         }
-        let response = match protocol::decode(&request) {
-            Err(e) => protocol::err(&e),
-            Ok(req) => respond(req, shared),
-        };
-        if writer.write_all(response.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-            || writer.flush().is_err()
-        {
-            return;
+        match protocol::decode_tagged(&request) {
+            // A line that does not decode cannot be correlated reliably
+            // (its id, if any, may itself be the malformed part), so the
+            // error goes back untagged and in order.
+            Err(e) => {
+                if !write_line(writer, &protocol::err(&e)) {
+                    return;
+                }
+            }
+            Ok((None, req)) => {
+                let response = respond(req, shared);
+                if !write_line(writer, &response) {
+                    return;
+                }
+            }
+            Ok((Some(id), req)) => {
+                pipeline.retain(|h| !h.is_finished());
+                if pipeline.len() >= shared.config.max_pipeline {
+                    // Admission control below the connection cap: shed
+                    // *this request* (tagged, so the client knows which
+                    // one) instead of queueing unboundedly or blocking
+                    // the whole connection behind slow solves.
+                    let resp = protocol::tag_response(
+                        id,
+                        &protocol::err_with(
+                            "pipeline full",
+                            vec![
+                                ("retry_after_s", Json::from(RETRY_AFTER_S)),
+                                (
+                                    "max_pipeline",
+                                    Json::from(shared.config.max_pipeline),
+                                ),
+                            ],
+                        ),
+                    );
+                    if !write_line(writer, &resp) {
+                        return;
+                    }
+                    continue;
+                }
+                let shared = Arc::clone(shared);
+                let writer = Arc::clone(writer);
+                pipeline.push(std::thread::spawn(move || {
+                    let response = protocol::tag_response(id, &respond(req, &shared));
+                    let _ = write_line(&writer, &response);
+                }));
+            }
         }
     }
 }
@@ -392,6 +478,26 @@ fn respond(req: Request, shared: &Shared) -> String {
             let Some(entry) = registry.touch(model) else {
                 return protocol::err(&Registry::unknown(model));
             };
+            // Lock-free fast path: a plain repeat-`nu` query whose exact
+            // `(nu, eps)` is cached in the published snapshot is answered
+            // without ever acquiring the session mutex — concurrent
+            // repeats of a hot operating point overlap freely with each
+            // other *and* with a writer mutating the session under its
+            // lock. The snapshot is immutable, so the answer is bitwise
+            // the one its generation committed. Everything the snapshot
+            // cannot answer read-only (uncached points, paths, alternate
+            // RHS, batches) falls through to the locked writer path.
+            if b.is_none() && bs.is_none() && nus.is_empty() {
+                let snap = entry.snapshot();
+                if let Some(sol) = snap.cached(nu, eps) {
+                    registry.note_snapshot_query(&entry);
+                    return protocol::ok(vec![
+                        ("model", Json::from(model)),
+                        ("result", solution_json(nu, &sol, include_x)),
+                        ("m", Json::from(snap.m())),
+                    ]);
+                }
+            }
             let mut session = entry.session.lock().unwrap();
             session.set_deadline(wall_deadline(shared, deadline_s));
             let outcome = if let Some(bs) = bs {
@@ -426,6 +532,16 @@ fn respond(req: Request, shared: &Shared) -> String {
             // that errors halfway (e.g. an unsorted nu) may already have
             // grown the cached sketch on its solved points.
             registry.note_query(&entry, &session);
+            // Publish only on success: a failed call rolled the session
+            // back to exactly the state already published, so skipping
+            // the swap is what keeps "failed writers never publish"
+            // airtight (and a path that committed early points publishes
+            // them with its next successful query).
+            if outcome.is_ok() {
+                if let Err(e) = entry.publish(&mut session) {
+                    eprintln!("warning: snapshot publish for model {model} skipped: {e}");
+                }
+            }
             match outcome {
                 Ok(mut fields) => {
                     fields.insert(0, ("model", Json::from(model)));
@@ -439,11 +555,33 @@ fn respond(req: Request, shared: &Shared) -> String {
             let Some(entry) = registry.touch(model) else {
                 return protocol::err(&Registry::unknown(model));
             };
+            // Lock-free fast path: predictions over an already-cached
+            // `(nu, eps)` solution are pure dot products against an
+            // immutable snapshot — no session mutex. A `Some(Err)` here
+            // is a definitive row-validation error (identical to what
+            // the writer path would produce); only an uncached solution
+            // falls through to the locked solve-then-predict path.
+            if let Some(res) = entry.snapshot().predict_cached(nu, &rows, eps) {
+                registry.note_snapshot_query(&entry);
+                return match res {
+                    Ok(y) => protocol::ok(vec![
+                        ("model", Json::from(model)),
+                        ("nu", Json::from(nu)),
+                        ("y", Json::Arr(y.into_iter().map(Json::from).collect())),
+                    ]),
+                    Err(e) => protocol::err(&e),
+                };
+            }
             let mut session = entry.session.lock().unwrap();
             session.set_deadline(wall_deadline(shared, deadline_s));
             let outcome = catch_panic(|| session.predict(nu, &rows, eps));
             session.set_deadline(None);
             registry.note_query(&entry, &session);
+            if outcome.is_ok() {
+                if let Err(e) = entry.publish(&mut session) {
+                    eprintln!("warning: snapshot publish for model {model} skipped: {e}");
+                }
+            }
             match outcome {
                 Ok(y) => protocol::ok(vec![
                     ("model", Json::from(model)),
@@ -493,6 +631,17 @@ fn respond(req: Request, shared: &Shared) -> String {
             // rolls itself back, but the registry's cached size must track
             // whatever state survived.
             registry.note_append(&entry, &session);
+            // WAL-before-apply meets snapshot publication: the record was
+            // durable before the apply, the apply committed under the
+            // session lock, and only then does the new generation become
+            // visible to lock-free readers — a crash at any point leaves
+            // either the old snapshot live (rows still replayable from
+            // the WAL) or the new one fully applied, never a torn view.
+            if outcome.is_ok() {
+                if let Err(e) = entry.publish(&mut session) {
+                    eprintln!("warning: snapshot publish for model {model} skipped: {e}");
+                }
+            }
             match outcome {
                 Ok(out) => protocol::ok(vec![
                     ("model", Json::from(model)),
@@ -618,11 +767,26 @@ impl Client {
 
     /// Send one request line, read one response line, parse it.
     pub fn call(&mut self, request: &str) -> Result<Json, String> {
+        self.send(request)?;
+        self.recv()
+    }
+
+    /// Send one request line without waiting for the response — the
+    /// pipelining half-call. Pair with [`Client::recv`]; tag requests
+    /// with `"id"` so possibly-reordered responses can be correlated
+    /// (see `PROTOCOL.md` §Concurrency).
+    pub fn send(&mut self, request: &str) -> Result<(), String> {
         self.writer
             .write_all(request.as_bytes())
             .and_then(|_| self.writer.write_all(b"\n"))
             .and_then(|_| self.writer.flush())
-            .map_err(|e| e.to_string())?;
+            .map_err(|e| e.to_string())
+    }
+
+    /// Read and parse the next response line, whichever in-flight
+    /// request it answers (tagged responses carry their request's `"id"`
+    /// as the first field).
+    pub fn recv(&mut self) -> Result<Json, String> {
         let mut buf: Vec<u8> = Vec::new();
         let cap = self.max_line_bytes;
         let n = (&mut self.reader)
@@ -726,6 +890,52 @@ mod tests {
             assert!(Instant::now() < deadline, "shed slot never freed");
             std::thread::sleep(Duration::from_millis(20));
         }
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn tagged_requests_pipeline_on_one_connection() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        // Fire three tagged pings without waiting for any response, then
+        // collect all three.  Completion order is unspecified, so match by id.
+        for id in [7u64, 8, 9] {
+            client.send(&format!(r#"{{"id":{id},"cmd":"ping"}}"#)).unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let resp = client.recv().unwrap();
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+            seen.push(resp.get("id").unwrap().as_usize().unwrap());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![7, 8, 9]);
+        // The connection is still usable for plain untagged calls afterwards.
+        let pong = client.call(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+        assert!(pong.get("id").is_none(), "untagged request must get an untagged response");
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn pipeline_admission_sheds_tagged_requests_with_a_tagged_error() {
+        // max_pipeline == 0 makes every tagged request exceed the in-flight
+        // cap, so shedding is deterministic.
+        let (addr, stop, handle) =
+            start_with_config(ServerConfig { max_pipeline: 0, ..ServerConfig::default() });
+        let mut client = Client::connect(addr).unwrap();
+        client.send(r#"{"id":42,"cmd":"ping"}"#).unwrap();
+        let resp = client.recv().unwrap();
+        assert_eq!(resp.get("id").unwrap().as_usize(), Some(42), "{resp:?}");
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(resp.get("error").unwrap().as_str(), Some("pipeline full"));
+        assert!(resp.get("retry_after_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(resp.get("max_pipeline").unwrap().as_usize(), Some(0));
+        // Untagged requests bypass the pipeline and still work.
+        let pong = client.call(r#"{"cmd":"ping"}"#).unwrap();
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();
     }

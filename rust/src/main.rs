@@ -395,6 +395,7 @@ fn cmd_serve(args: &Args) -> i32 {
         max_line_bytes: max_request_mb.saturating_mul(1 << 20),
         request_timeout,
         max_conns,
+        max_pipeline: effdim::coordinator::server::DEFAULT_MAX_PIPELINE,
         state_dir,
         durability,
     };

@@ -14,6 +14,24 @@
 //! correct and lossless — the operand, observations and `A^T b` replay
 //! exactly — but the solver state legitimately differs until the next
 //! snapshot.
+//!
+//! **Recovery vs. lock-free publication.** Replay interacts with the
+//! serving layer's RCU snapshots (`SessionSnapshot` /
+//! `ModelEntry::publish`) only at one point: `Registry::recover`
+//! constructs each `ModelEntry` — and therefore publishes its *first*
+//! read snapshot — strictly **after** [`rebuild_session`] and
+//! [`apply_wal`] have both returned `Ok`. A recovery that fails anywhere
+//! in rebuild or WAL replay produces no entry and hence no snapshot;
+//! readers can never observe a half-replayed model. The WAL-before-apply
+//! invariant composes the same way it did pre-snapshots: appends are
+//! logged before the session mutates, the session mutates before
+//! `publish` is called, and `publish` swaps one complete, immutable
+//! snapshot — so every snapshot any reader ever holds corresponds to a
+//! prefix of the durable history. Session `generation` numbers are
+//! per-process bookkeeping and intentionally **not** persisted: a
+//! recovered session restarts at generation 0 with an empty solution
+//! cache, and its first published snapshot simply misses on
+//! `cached(..)`, routing readers to the (bitwise-replayed) solve path.
 
 use super::snapshot::ModelSnapshot;
 use super::wal;
@@ -183,6 +201,36 @@ mod tests {
         let a = live.solve(0.8, 1e-8).unwrap();
         let b = rebuilt.solve(0.8, 1e-8).unwrap();
         assert_eq!(bits(&a.x), bits(&b.x));
+    }
+
+    #[test]
+    fn recovered_sessions_publish_complete_snapshots() {
+        // A recovered session starts with an empty solution cache: its
+        // first snapshot must miss on cached() (routing readers to the
+        // replayed solve path), and after one solve its snapshot must
+        // serve that answer bitwise-identically to a never-killed twin.
+        let ds = synthetic::exponential_decay(96, 12, 84);
+        let mut live =
+            ModelSession::new(Arc::new(ds.a), ds.b, SketchKind::Gaussian, 17).unwrap();
+        live.solve(0.5, 1e-8).unwrap();
+        let snap_bytes = encode_session("pub", &mut live).unwrap();
+        let mut recovered = rebuild_session(decode(&snap_bytes).unwrap()).unwrap();
+        assert_eq!(recovered.generation(), 0, "generation must not persist");
+        let first = recovered.snapshot();
+        assert_eq!(first.generation(), 1);
+        assert!(first.solution_keys().is_empty(), "recovered cache must start empty");
+        assert!(first.cached(0.5, 1e-8).is_none());
+        // One solve each; the snapshot then serves the recovered answer.
+        let lx = live.solve(0.35, 1e-9).unwrap();
+        let rx = recovered.solve(0.35, 1e-9).unwrap();
+        assert_eq!(bits(&lx.x), bits(&rx.x));
+        let second = recovered.snapshot();
+        assert!(second.generation() > first.generation(), "generations are monotone");
+        let hit = second.cached(0.35, 1e-9).expect("solved nu must be cached");
+        assert_eq!(bits(&hit.x), bits(&lx.x), "snapshot answer diverged from twin");
+        // The first (pinned) snapshot still answers what *it* implies:
+        // nothing — old handles never grow new solutions.
+        assert!(first.cached(0.35, 1e-9).is_none());
     }
 
     #[test]

@@ -51,6 +51,7 @@ use crate::sketch::SketchKind;
 use crate::theory::rates::IhsParams;
 use crate::theory::{gaussian_bounds, srht_bounds};
 use crate::util::failpoint;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Reusable sketch/factorization state extracted from a finished
@@ -73,15 +74,26 @@ use std::time::Instant;
 /// `Clone` is what makes [`crate::solvers::session::ModelSession`]'s
 /// transactional rollback possible: a mutating call snapshots the state
 /// and restores it on any error or caught panic.
+///
+/// The heavy members (sketch panel, factorization) live behind `Arc`s,
+/// so `Clone` is **O(1)** — a clone shares the panel and Gram buffers
+/// with the original. That is what lets the serving layer publish a
+/// state clone inside every
+/// [`crate::solvers::session::SessionSnapshot`] for free. Mutation goes
+/// through [`AdaptiveSessionState::into_parts`], which unwraps the
+/// `Arc`s copy-on-write style: sole owners mutate in place at zero extra
+/// cost, while a state shared with a published snapshot deep-copies
+/// first — so a reader pinned to an old snapshot keeps bitwise-stable
+/// buffers no matter what the writer does next.
 #[derive(Clone)]
 pub struct AdaptiveSessionState {
     /// Incremental sketch state; `None` once growth hit the cap (the
     /// cache then holds the exact Hessian — see
     /// [`AdaptiveSolver::step`]).
-    engine: Option<SketchEngine>,
+    engine: Option<Arc<SketchEngine>>,
     /// Factorization of the sketched Hessian at the *last solved* `nu`;
     /// re-keyed cheaply on resume.
-    cache: WoodburyCache,
+    cache: Arc<WoodburyCache>,
     /// RNG mid-stream, so future growth rows continue the same draw
     /// sequence a single uninterrupted solve would have used.
     rng: Xoshiro256,
@@ -102,14 +114,20 @@ impl AdaptiveSessionState {
     /// Approximate heap footprint in bytes (engine buffers + cached
     /// factorization) — what registries charge against their byte budget.
     pub fn approx_bytes(&self) -> usize {
-        self.engine.as_ref().map_or(0, SketchEngine::approx_bytes) + self.cache.approx_bytes()
+        self.engine.as_deref().map_or(0, SketchEngine::approx_bytes) + self.cache.approx_bytes()
     }
 
     /// Borrow the incremental sketch engine — `None` once growth hit the
     /// cap. Persistence exports its replay header
     /// ([`SketchEngine::replay_state`]) instead of the panel.
     pub fn engine(&self) -> Option<&SketchEngine> {
-        self.engine.as_ref()
+        self.engine.as_deref()
+    }
+
+    /// Borrow the cached factorization — what the lock-free read path
+    /// reports `m` and the keyed `nu` from without touching any mutex.
+    pub fn cache(&self) -> &WoodburyCache {
+        &self.cache
     }
 
     /// Borrow the mid-stream session RNG (checkpointed so recovered
@@ -146,14 +164,23 @@ impl AdaptiveSessionState {
             }
             None => WoodburyCache::new(a.dense().into_owned(), nu)?,
         };
-        Ok(Self { engine, cache, rng })
+        Ok(Self { engine: engine.map(Arc::new), cache: Arc::new(cache), rng })
     }
 
     /// Decompose into `(engine, cache, rng)` — the block multi-RHS solver
     /// ([`crate::solvers::block`]) drives these directly instead of going
     /// through [`AdaptiveSolver::resume`].
+    ///
+    /// This is the copy-on-write point: when no published snapshot shares
+    /// the `Arc`s, they unwrap for free and the caller mutates the
+    /// original buffers in place (bitwise identical to the pre-`Arc`
+    /// behavior); when a snapshot does share them, the buffers are
+    /// deep-copied here so the snapshot's view stays frozen.
     pub(crate) fn into_parts(self) -> (Option<SketchEngine>, WoodburyCache, Xoshiro256) {
-        (self.engine, self.cache, self.rng)
+        let engine =
+            self.engine.map(|e| Arc::try_unwrap(e).unwrap_or_else(|shared| (*shared).clone()));
+        let cache = Arc::try_unwrap(self.cache).unwrap_or_else(|shared| (*shared).clone());
+        (engine, cache, self.rng)
     }
 
     /// Reassemble after a block solve. The engine and cache must describe
@@ -166,7 +193,7 @@ impl AdaptiveSessionState {
         if let Some(e) = &engine {
             debug_assert_eq!(e.m(), cache.m(), "engine/cache row counts diverged");
         }
-        Self { engine, cache, rng }
+        Self { engine: engine.map(Arc::new), cache: Arc::new(cache), rng }
     }
 }
 
@@ -318,7 +345,7 @@ impl<'p> AdaptiveSolver<'p> {
         stop: StopRule,
         state: AdaptiveSessionState,
     ) -> Result<Self, SolverError> {
-        let AdaptiveSessionState { engine, cache, rng } = state;
+        let (engine, cache, rng) = state.into_parts();
         if let Some(e) = &engine {
             assert_eq!(e.kind(), config.kind, "resume: sketch family changed");
             assert_eq!(e.n(), problem.n(), "resume: problem shape changed");
@@ -685,8 +712,7 @@ impl<'p> AdaptiveSolver<'p> {
     /// dropped — transactional callers restore their own snapshot.
     pub fn run_with_state(mut self) -> Result<(Solution, AdaptiveSessionState), SolverError> {
         self.run_inner()?;
-        let state =
-            AdaptiveSessionState { engine: self.engine, cache: self.cache, rng: self.rng };
+        let state = AdaptiveSessionState::from_parts(self.engine, self.cache, self.rng);
         Ok((Solution { x: self.x, report: self.report }, state))
     }
 

@@ -50,6 +50,24 @@
 //! registered model: errors are reported, state is not corrupted.
 //! Only the query counters advance on a failed call (failures are
 //! still work the session performed).
+//!
+//! # Snapshots and the lock-free read path
+//!
+//! [`ModelSession::snapshot`] freezes everything a read-only query needs
+//! into an immutable [`SessionSnapshot`]: the shared operand, `A^T b`,
+//! the solver state (sketch panel + factorization, shared
+//! copy-on-write — see [`AdaptiveSessionState`]), the warm start, and
+//! the solution cache, stamped with a monotonically increasing
+//! **generation**. The serving layer publishes one snapshot per model
+//! through an RCU cell ([`crate::util::rcu::RcuCell`]), so unlimited
+//! concurrent readers answer exact-repeat and predict queries without
+//! ever touching the session mutex, while writers keep mutating the
+//! session under the lock and republish on success. Because the
+//! snapshot is built *after* a mutation commits (and never on failure —
+//! the transactional rollback above restores the pre-call state, which
+//! is exactly what is already published), a half-applied mutation can
+//! never be observed through a snapshot: readers see the old generation
+//! or the new one, nothing in between.
 
 use super::adaptive::{AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver};
 use super::block;
@@ -69,7 +87,9 @@ use std::time::Instant;
 /// its report).
 pub const SOLUTION_CACHE_CAP: usize = 32;
 
-/// One cached solve keyed by the exact `(nu, eps)` bit patterns.
+/// One cached solve keyed by the exact `(nu, eps)` bit patterns. Stored
+/// behind an `Arc` so a published [`SessionSnapshot`] shares the vectors
+/// with the live cache instead of copying them per publish.
 struct CachedSolution {
     nu_bits: u64,
     eps_bits: u64,
@@ -129,7 +149,12 @@ pub struct ModelSession {
     /// Last primary-RHS solution, used to warm-start the next solve.
     warm: Option<Vec<f64>>,
     /// Bounded exact-repeat cache, most recently used last.
-    solutions: Vec<CachedSolution>,
+    solutions: Vec<Arc<CachedSolution>>,
+    /// Snapshot generation: bumped by every [`ModelSession::snapshot`]
+    /// call, so each published snapshot carries a strictly increasing
+    /// stamp. Per-process only (restarts reset it); persistence and WAL
+    /// replay do not carry it.
+    generation: u64,
     /// Total solves answered (cache hits included).
     queries: u64,
     /// Queries answered from the solution cache.
@@ -179,6 +204,7 @@ impl ModelSession {
             pending: None,
             warm: None,
             solutions: Vec::new(),
+            generation: 0,
             queries: 0,
             cache_hits: 0,
             epoch: 0,
@@ -230,6 +256,7 @@ impl ModelSession {
             pending: None,
             warm,
             solutions: Vec::new(),
+            generation: 0,
             queries,
             cache_hits: 0,
             epoch,
@@ -542,6 +569,39 @@ impl ModelSession {
         self.epoch
     }
 
+    /// Snapshot generation of the *next* [`ModelSession::snapshot`] call
+    /// minus one — i.e. how many snapshots this session has produced.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Freeze the session's current read-only view into an immutable
+    /// [`SessionSnapshot`], bumping the generation stamp.
+    ///
+    /// The snapshot is **O(1)** in the heavy state: the operand, sketch
+    /// panel, factorization and cached solution vectors are shared via
+    /// `Arc` (copy-on-write on the session side — see
+    /// [`AdaptiveSessionState`]), so publishing after every committed
+    /// mutation is cheap. Only `A^T b` and the warm start (two length-`d`
+    /// vectors) are copied.
+    ///
+    /// Callers publish the returned `Arc` through
+    /// [`crate::util::rcu::RcuCell`] *after* the mutation that produced
+    /// it commits; the transactional rollback contract (module docs)
+    /// then guarantees no partial state is ever published.
+    pub fn snapshot(&mut self) -> Arc<SessionSnapshot> {
+        self.generation += 1;
+        Arc::new(SessionSnapshot {
+            generation: self.generation,
+            kind: self.config.kind,
+            a: Arc::clone(&self.a),
+            atb: self.atb.clone(),
+            state: self.state.clone(),
+            warm: self.warm.clone(),
+            solutions: self.solutions.clone(),
+        })
+    }
+
     /// Absorb any lazily appended rows into the sketch/factorization now
     /// — the public hook used before snapshotting or spilling a model
     /// ([`crate::persist`]). Bitwise-neutral with respect to a twin that
@@ -617,12 +677,12 @@ impl ModelSession {
         let sol = self.run_adaptive(&problem, &x0, eps)?;
 
         self.warm = Some(sol.x.clone());
-        self.solutions.push(CachedSolution {
+        self.solutions.push(Arc::new(CachedSolution {
             nu_bits: nu.to_bits(),
             eps_bits: eps.to_bits(),
             x: sol.x.clone(),
             report: sol.report.clone(),
-        });
+        }));
         if self.solutions.len() > SOLUTION_CACHE_CAP {
             self.solutions.remove(0);
         }
@@ -840,6 +900,128 @@ impl ModelSession {
                 Err(SolverError::Internal(panic_message(&*panic)))
             }
         }
+    }
+}
+
+/// An immutable, shareable view of a [`ModelSession`] at one committed
+/// point in time — what the serving layer publishes through
+/// [`crate::util::rcu::RcuCell`] so readers answer without the session
+/// mutex.
+///
+/// A snapshot never mutates: its answers are exactly the answers the
+/// session would have given at the generation it was taken (bitwise —
+/// the cached vectors are the very `Arc`s the session holds), and they
+/// stay that way no matter how far the live session moves on. Queries it
+/// cannot answer read-only (an uncached `(nu, eps)`, an alternate RHS, a
+/// batch, anything that must run the solver) return `None`; the caller
+/// falls back to the locked writer path.
+pub struct SessionSnapshot {
+    generation: u64,
+    kind: SketchKind,
+    a: Arc<Operand>,
+    /// `A^T b` as of this generation (appends change it).
+    atb: Vec<f64>,
+    /// Solver state sharing the sketch panel + factorization with the
+    /// session copy-on-write (see [`AdaptiveSessionState`]).
+    state: Option<AdaptiveSessionState>,
+    warm: Option<Vec<f64>>,
+    /// The exact-repeat cache as of this generation, LRU order. Entries
+    /// are shared with the live session; no vector is copied at publish.
+    solutions: Vec<Arc<CachedSolution>>,
+}
+
+impl SessionSnapshot {
+    /// The strictly increasing stamp [`ModelSession::snapshot`] assigned.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Rows `n` of the data as of this generation.
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Columns `d` of the data.
+    pub fn d(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Sketch size `m` as of this generation (0 before the first solve).
+    pub fn m(&self) -> usize {
+        self.state.as_ref().map_or(0, AdaptiveSessionState::m)
+    }
+
+    /// Sketch family of the underlying session.
+    pub fn kind(&self) -> SketchKind {
+        self.kind
+    }
+
+    /// `A^T b` as of this generation.
+    pub fn atb(&self) -> &[f64] {
+        &self.atb
+    }
+
+    /// The frozen solver state, if the session had solved by this
+    /// generation.
+    pub fn state(&self) -> Option<&AdaptiveSessionState> {
+        self.state.as_ref()
+    }
+
+    /// The warm-start vector as of this generation.
+    pub fn warm(&self) -> Option<&[f64]> {
+        self.warm.as_deref()
+    }
+
+    /// `(nu, eps)` bit-pattern keys cached at this generation, LRU first.
+    pub fn solution_keys(&self) -> Vec<(u64, u64)> {
+        self.solutions.iter().map(|s| (s.nu_bits, s.eps_bits)).collect()
+    }
+
+    /// Answer an exact-repeat query (`(nu, eps)` bitwise equal to a
+    /// cached solve) without any lock or solver run. `None` means this
+    /// generation has no cached answer — fall back to the writer path.
+    ///
+    /// Unlike [`ModelSession::solve`]'s hit path this does not reorder
+    /// the LRU or bump session counters (the snapshot is immutable);
+    /// the serving layer counts snapshot hits on its own atomics.
+    pub fn cached(&self, nu: f64, eps: f64) -> Option<Solution> {
+        // Iterate newest-first: identical keys cannot coexist in the
+        // cache, so order only matters for mechanical sympathy (recent
+        // keys are the likely repeats).
+        self.solutions
+            .iter()
+            .rev()
+            .find(|s| s.nu_bits == nu.to_bits() && s.eps_bits == eps.to_bits())
+            .map(|s| Solution { x: s.x.clone(), report: s.report.clone() })
+    }
+
+    /// Answer a predict query from the cached solution at `(nu, eps)`.
+    ///
+    /// `None` means the solution is not cached at this generation (the
+    /// caller must take the writer path, which solves first). `Some(Err)`
+    /// is a definitive input error — the same row validation
+    /// [`ModelSession::predict`] performs, so falling through to the
+    /// writer path would produce the identical message.
+    pub fn predict_cached(
+        &self,
+        nu: f64,
+        rows: &[Vec<f64>],
+        eps: f64,
+    ) -> Option<Result<Vec<f64>, String>> {
+        let sol = self.cached(nu, eps)?;
+        let d = self.d();
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != d {
+                return Some(Err(format!(
+                    "predict row {i} has {} entries, expected d = {d}",
+                    row.len()
+                )));
+            }
+            if row.iter().any(|v| !v.is_finite()) {
+                return Some(Err(format!("non-finite entry in predict row {i}")));
+            }
+        }
+        Some(Ok(rows.iter().map(|row| crate::linalg::dot(row, &sol.x)).collect()))
     }
 }
 

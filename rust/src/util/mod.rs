@@ -5,4 +5,5 @@
 pub mod cli;
 pub mod failpoint;
 pub mod json;
+pub mod rcu;
 pub mod stats;

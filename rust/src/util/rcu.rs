@@ -1,0 +1,224 @@
+//! A minimal RCU-style publication cell for `Arc` snapshots, in pure std.
+//!
+//! [`RcuCell`] holds one published `Arc<T>` and lets **unlimited
+//! concurrent readers** clone it without taking any mutex, while writers
+//! build the next value out-of-line and swap it in atomically. This is
+//! the primitive behind the serving stack's lock-free read path
+//! ([`crate::solvers::session::SessionSnapshot`] published per model by
+//! [`crate::coordinator::registry::ModelEntry`]): a reader either sees
+//! the old snapshot or the new one, never a mix, and a reader that
+//! already pinned an old snapshot keeps a fully consistent `Arc` to it
+//! for as long as it likes.
+//!
+//! # Design
+//!
+//! `std` has no atomic `Arc` swap, so the cell uses the classic
+//! **two-slot pin-count** scheme:
+//!
+//! - Two slots each hold an `Arc<T>`; an atomic `active` index says
+//!   which slot is current.
+//! - A reader loads `active`, increments that slot's **pin count**, then
+//!   re-checks `active`. If it still matches, the slot cannot be
+//!   overwritten while pinned, so cloning the `Arc` inside is safe; the
+//!   reader then unpins and returns the clone. If `active` moved, the
+//!   reader unpins and retries (at most once per concurrent publish).
+//! - A writer (serialized by an internal mutex that **readers never
+//!   touch**) targets the *inactive* slot, waits for its pin count to
+//!   drain to zero, overwrites the slot, and only then flips `active`.
+//!
+//! All atomics use `SeqCst`: the publication protocol is a Dekker-style
+//! store→load handshake (reader: pin then re-check `active`; writer:
+//! observe zero pins then overwrite), and `SeqCst` gives the single total
+//! order that makes the interleaving argument airtight. The read path
+//! costs two atomic RMWs and an `Arc` clone — no mutex, no syscall — and
+//! a reader can only retry while a publish is in flight, so reads are
+//! lock-free in the strict sense: some reader always completes.
+//!
+//! Writers may briefly spin waiting for stragglers pinned to the slot
+//! they are about to reuse; pins are held only across an `Arc` clone
+//! (nanoseconds), so the wait is bounded and tiny. Writers block each
+//! other on the internal mutex — exactly the "writers serialize, readers
+//! never block" contract the serving layer wants.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Atomically-swappable `Arc<T>` holder with mutex-free reads.
+///
+/// See the [module docs](self) for the protocol and memory-ordering
+/// argument. `T` is typically an immutable snapshot; the cell itself
+/// never hands out `&mut T`.
+pub struct RcuCell<T> {
+    /// Index (0 or 1) of the slot readers should pin.
+    active: AtomicUsize,
+    /// Per-slot count of readers currently between pin and unpin.
+    pins: [AtomicUsize; 2],
+    /// The two published values. A slot is only written while it is
+    /// inactive *and* its pin count is zero, under the writer mutex.
+    slots: [UnsafeCell<Arc<T>>; 2],
+    /// Serializes writers. Readers never lock this.
+    writers: Mutex<()>,
+}
+
+// SAFETY: the pin/re-check handshake (see module docs) guarantees a slot
+// is never overwritten while any thread may dereference it, and writers
+// are serialized by `writers`; with that protocol upheld, sharing the
+// cell across threads is sound whenever `Arc<T>` itself is sendable.
+unsafe impl<T: Send + Sync> Send for RcuCell<T> {}
+// SAFETY: as above — all cross-thread access to `slots` is mediated by
+// the SeqCst pin-count protocol.
+unsafe impl<T: Send + Sync> Sync for RcuCell<T> {}
+
+impl<T> RcuCell<T> {
+    /// Create a cell publishing `value`.
+    pub fn new(value: Arc<T>) -> Self {
+        Self {
+            active: AtomicUsize::new(0),
+            pins: [AtomicUsize::new(0), AtomicUsize::new(0)],
+            // Both slots start with the same Arc so the inactive slot is
+            // never in a "poison" state needing special casing.
+            slots: [UnsafeCell::new(Arc::clone(&value)), UnsafeCell::new(value)],
+            writers: Mutex::new(()),
+        }
+    }
+
+    /// Clone the currently published `Arc` without taking any lock.
+    ///
+    /// The returned handle stays valid (and immutable) no matter how many
+    /// publishes happen afterwards — a pinned-to-the-past reader simply
+    /// keeps the old snapshot alive through its own refcount.
+    pub fn load(&self) -> Arc<T> {
+        loop {
+            let s = self.active.load(Ordering::SeqCst);
+            self.pins[s].fetch_add(1, Ordering::SeqCst);
+            if self.active.load(Ordering::SeqCst) == s {
+                // SAFETY: `active == s` *after* our pin landed means (in
+                // the SeqCst total order) any writer that will overwrite
+                // slot `s` must first flip `active` away from `s` and
+                // then observe `pins[s] == 0` — it cannot have done
+                // either yet, so the slot's contents are stable while we
+                // hold the pin.
+                let out = unsafe { (*self.slots[s].get()).clone() };
+                self.pins[s].fetch_sub(1, Ordering::SeqCst);
+                return out;
+            }
+            // A publish landed between our load and our pin; the slot we
+            // pinned may be the writer's next target. Back off and retry.
+            self.pins[s].fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Publish `value`, making it the snapshot all future [`RcuCell::load`]
+    /// calls return. Existing handles from earlier loads are untouched.
+    ///
+    /// Concurrent writers serialize on an internal mutex; the swap itself
+    /// is a single atomic store, so readers observe either the old value
+    /// or the new one in full — never a partial state.
+    pub fn store(&self, value: Arc<T>) {
+        let _writer = self.writers.lock().unwrap_or_else(|e| e.into_inner());
+        let cur = self.active.load(Ordering::SeqCst);
+        let idx = 1 - cur;
+        // Drain stragglers still pinned to the retired slot. Pins only
+        // span an Arc clone, so this resolves in nanoseconds; yield if a
+        // reader got preempted mid-clone.
+        let mut spins = 0u32;
+        while self.pins[idx].load(Ordering::SeqCst) != 0 {
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        // SAFETY: `idx` is the inactive slot (readers re-checking
+        // `active` will not pin it and keep it pinned), its pin count
+        // drained to zero after it became inactive, and we hold the
+        // writer mutex — no other thread can touch the slot's contents.
+        unsafe {
+            *self.slots[idx].get() = value;
+        }
+        // The publish point: readers that load `active` from here on pin
+        // the new slot; readers mid-protocol on the old index are still
+        // reading the old (intact) slot.
+        self.active.store(idx, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn load_returns_the_initial_value() {
+        let cell = RcuCell::new(Arc::new(41usize));
+        assert_eq!(*cell.load(), 41);
+        assert_eq!(*cell.load(), 41);
+    }
+
+    #[test]
+    fn store_publishes_and_old_handles_survive() {
+        let cell = RcuCell::new(Arc::new(1usize));
+        let pinned = cell.load();
+        cell.store(Arc::new(2));
+        cell.store(Arc::new(3));
+        assert_eq!(*pinned, 1, "pinned reader must keep its snapshot");
+        assert_eq!(*cell.load(), 3);
+    }
+
+    /// Torn-read hunt: the published value is a pair that must stay
+    /// internally consistent (`.1 == .0 * 2`). Readers hammer `load`
+    /// while a writer republishes; any mix of two generations would
+    /// break the invariant.
+    #[test]
+    fn concurrent_loads_never_observe_a_torn_pair() {
+        let cell = Arc::new(RcuCell::new(Arc::new((0u64, 0u64))));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..4 {
+            let cell = Arc::clone(&cell);
+            let stop = Arc::clone(&stop);
+            readers.push(std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let pair = cell.load();
+                    assert_eq!(pair.1, pair.0 * 2, "torn snapshot observed");
+                    assert!(pair.0 >= last, "snapshot generation went backwards");
+                    last = pair.0;
+                }
+            }));
+        }
+        for k in 1..=2000u64 {
+            cell.store(Arc::new((k, k * 2)));
+        }
+        stop.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().expect("reader panicked");
+        }
+        let last = cell.load();
+        assert_eq!(*last, (2000, 4000));
+    }
+
+    /// Writers serialize but never lose a publish: after all writers
+    /// join, the cell holds one of the final values and every
+    /// intermediate load was some writer's exact publication.
+    #[test]
+    fn concurrent_stores_always_leave_a_published_value() {
+        let cell = Arc::new(RcuCell::new(Arc::new(0u64)));
+        let mut writers = Vec::new();
+        for w in 0..4u64 {
+            let cell = Arc::clone(&cell);
+            writers.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    cell.store(Arc::new(w * 1_000_000 + i));
+                }
+            }));
+        }
+        for w in writers {
+            w.join().expect("writer panicked");
+        }
+        let v = *cell.load();
+        assert_eq!(v % 1_000_000, 499, "final value must be some writer's last publish");
+    }
+}

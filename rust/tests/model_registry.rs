@@ -209,6 +209,83 @@ fn failed_queries_cannot_poison_a_registered_session() {
 }
 
 #[test]
+fn pipelined_tagged_queries_on_one_connection_match_by_id() {
+    // Wire-level pipelining (PROTOCOL.md §Concurrency): k tagged
+    // requests go out back-to-back on ONE connection before any
+    // response is read; the k tagged responses may come back in any
+    // completion order and are matched by id. Repeat-nu queries ride
+    // the lock-free snapshot path, a fresh-nu query takes the writer
+    // path, and a tagged failure stays tagged — all on the same socket.
+    let server = Server::bind("127.0.0.1:0", 1).unwrap();
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.run());
+    let mut client = Client::connect(addr).unwrap();
+
+    let reg = client
+        .call(r#"{"cmd":"register","profile":"exp","n":128,"d":16,"seed":9,"sketch":"gaussian"}"#)
+        .unwrap();
+    assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+    let model = reg.get("model").unwrap().as_usize().unwrap();
+
+    // Warm the cache (and publish the snapshot) with one untagged solve,
+    // keeping its solution vector as the bitwise reference.
+    let warm = client
+        .call(&format!(
+            r#"{{"cmd":"query","model":{model},"nu":0.3,"eps":1e-8,"include_x":true}}"#
+        ))
+        .unwrap();
+    assert_eq!(warm.get("ok").unwrap().as_bool(), Some(true), "{warm:?}");
+    let reference_x = format!("{:?}", warm.get("result").unwrap().get("x").unwrap());
+
+    // Six interleaved tagged requests, no reads in between: three
+    // repeat-nu cache hits, one fresh nu, one ping, one tagged error.
+    for line in [
+        format!(r#"{{"id":10,"cmd":"query","model":{model},"nu":0.3,"eps":1e-8,"include_x":true}}"#),
+        format!(r#"{{"id":11,"cmd":"query","model":{model},"nu":0.3,"eps":1e-8,"include_x":true}}"#),
+        format!(r#"{{"id":12,"cmd":"query","model":{model},"nu":0.3,"eps":1e-8,"include_x":true}}"#),
+        format!(r#"{{"id":13,"cmd":"query","model":{model},"nu":0.9,"eps":1e-8}}"#),
+        r#"{"id":14,"cmd":"ping"}"#.to_string(),
+        r#"{"id":15,"cmd":"query","model":424242,"nu":0.5}"#.to_string(),
+    ] {
+        client.send(&line).unwrap();
+    }
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..6 {
+        let resp = client.recv().unwrap();
+        let id = resp.get("id").expect("pipelined response lost its tag").as_usize().unwrap();
+        assert!(by_id.insert(id, resp).is_none(), "duplicate response id");
+    }
+    assert_eq!(by_id.len(), 6, "every request must be answered exactly once");
+    for id in [10usize, 11, 12] {
+        let resp = &by_id[&id];
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+        let x = format!("{:?}", resp.get("result").unwrap().get("x").unwrap());
+        assert_eq!(x, reference_x, "pipelined repeat query {id} diverged from the warm solve");
+    }
+    assert_eq!(by_id[&13].get("ok").unwrap().as_bool(), Some(true), "{:?}", by_id[&13]);
+    assert_eq!(by_id[&14].get("ok").unwrap().as_bool(), Some(true));
+    let failed = &by_id[&15];
+    assert_eq!(failed.get("ok").unwrap().as_bool(), Some(false));
+    assert!(failed.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+
+    // A malformed id is a strict-decode failure: the error comes back
+    // untagged and in-order (the id itself cannot be trusted).
+    client.send(r#"{"id":1.5,"cmd":"ping"}"#).unwrap();
+    let bad = client.recv().unwrap();
+    assert!(bad.get("id").is_none(), "malformed-id error must be untagged: {bad:?}");
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    assert!(bad.get("error").unwrap().as_str().unwrap().contains("request id"), "{bad:?}");
+
+    // The connection survives all of it for ordinary untagged traffic.
+    let pong = client.call(r#"{"cmd":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap();
+}
+
+#[test]
 fn registry_reuse_over_tcp_end_to_end() {
     // Full wire-level pass: register, query twice (second at a new nu
     // reports zero sketch time), evict, query again -> clean error.

@@ -417,3 +417,126 @@ fn prop_snapshot_decode_rejects_any_single_byte_corruption() {
         }
     });
 }
+
+#[test]
+fn prop_snapshot_generations_are_monotone_and_never_serve_retired_vectors() {
+    // Deterministic-interleaving sweep over the RCU serving core: an
+    // LCG (seeded per case) schedules reader loads, writer solves,
+    // and writer appends in one thread, so every interleaving is exactly
+    // reproducible from the case id. Invariants: generations only move
+    // forward; every snapshot agrees bitwise with an independently
+    // maintained oracle of what its generation was published with; and
+    // a snapshot published after an append never serves a vector cached
+    // before it (appends retire the whole solution cache), while pinned
+    // older handles keep serving their own generation's bits.
+    use effdim::coordinator::registry::{Registry, DEFAULT_BYTE_BUDGET};
+    use effdim::data::synthetic;
+    use effdim::solvers::session::{AppendRefresh, SessionSnapshot};
+    use effdim::Operand;
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    const EPS: f64 = 1e-8;
+    const NUS: [f64; 4] = [0.2, 0.4, 0.6, 0.8];
+
+    check_property("snapshot interleavings", 8, |case, rng| {
+        let d = 4 + rng.next_below(5) as usize;
+        let n = d * (3 + rng.next_below(3) as usize);
+        let ds = synthetic::exponential_decay(n, d, rng.next_u64());
+        let registry = Registry::new(DEFAULT_BYTE_BUDGET);
+        let entry = registry
+            .register("prop".into(), ds.a, ds.b, SketchKind::Gaussian, 7)
+            .unwrap();
+
+        // Oracle state, maintained in lockstep with the writer ops: the
+        // exact (nu, eps) -> x bits the cache must hold, rebuilt from
+        // each solve's *returned* Solution (not read back through the
+        // snapshot, so the comparison is independent), cleared on append.
+        let mut live: HashMap<(u64, u64), Vec<u64>> = HashMap::new();
+        let mut expected_n = n;
+        let mut expected_gen = 1u64; // registration published generation 1
+        // log[i] = (generation, n, cache content) of the i-th publish.
+        let mut log: Vec<(u64, usize, HashMap<(u64, u64), Vec<u64>>)> =
+            vec![(1, n, HashMap::new())];
+        let mut pinned: Vec<(Arc<SessionSnapshot>, usize)> = Vec::new();
+        let mut last_gen = 0u64;
+
+        let verify = |snap: &SessionSnapshot, (gen, nn, cache): &(u64, usize, HashMap<(u64, u64), Vec<u64>>)| {
+            assert_eq!(snap.generation(), *gen);
+            assert_eq!(snap.n(), *nn, "case {case}: rows diverged at gen {gen}");
+            let keys: Vec<(u64, u64)> = snap.solution_keys();
+            assert_eq!(keys.len(), cache.len(), "case {case}: cache size diverged at gen {gen}");
+            for key in keys {
+                let want = cache.get(&key).unwrap_or_else(|| {
+                    panic!("case {case}: gen {gen} serves a retired/foreign vector {key:?}")
+                });
+                let sol = snap.cached(f64::from_bits(key.0), f64::from_bits(key.1)).unwrap();
+                let got: Vec<u64> = sol.x.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(&got, want, "case {case}: bits diverged at gen {gen}, key {key:?}");
+            }
+        };
+
+        let mut lcg: u64 = 0x2545F4914F6CDD1D ^ case;
+        for _ in 0..24 {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            match lcg >> 61 {
+                // Reader: load a snapshot, check monotonicity, match it
+                // against the oracle log entry for its generation, and
+                // sometimes pin it for the end-of-case recheck.
+                0..=3 => {
+                    let snap = entry.snapshot();
+                    let gen = snap.generation();
+                    assert!(gen >= last_gen, "case {case}: generation went backwards");
+                    last_gen = gen;
+                    let idx = log
+                        .iter()
+                        .position(|(g, _, _)| *g == gen)
+                        .unwrap_or_else(|| panic!("case {case}: unpublished generation {gen}"));
+                    verify(&snap, &log[idx]);
+                    if pinned.len() < 4 {
+                        pinned.push((snap, idx));
+                    }
+                }
+                // Writer: solve one of the palette nus and publish.
+                4 | 5 => {
+                    let nu = NUS[(lcg >> 32) as usize % NUS.len()];
+                    let mut session = entry.session.lock().unwrap();
+                    let sol = session.solve(nu, EPS).unwrap();
+                    entry.publish(&mut session).unwrap();
+                    drop(session);
+                    live.insert(
+                        (nu.to_bits(), EPS.to_bits()),
+                        sol.x.iter().map(|v| v.to_bits()).collect(),
+                    );
+                    expected_gen += 1;
+                    log.push((expected_gen, expected_n, live.clone()));
+                }
+                // Writer: append a couple of random rows (eager or lazy)
+                // and publish; the cache retires wholesale.
+                _ => {
+                    let dn = 1 + ((lcg >> 32) as usize & 1);
+                    let delta = Matrix::from_fn(dn, d, |_, _| rng.next_gaussian());
+                    let db: Vec<f64> = (0..dn).map(|_| rng.next_gaussian()).collect();
+                    let refresh = if (lcg >> 40) & 1 == 0 {
+                        AppendRefresh::Eager
+                    } else {
+                        AppendRefresh::Lazy
+                    };
+                    let mut session = entry.session.lock().unwrap();
+                    session.append(Operand::from(delta), db, refresh).unwrap();
+                    entry.publish(&mut session).unwrap();
+                    drop(session);
+                    live.clear();
+                    expected_n += dn;
+                    expected_gen += 1;
+                    log.push((expected_gen, expected_n, live.clone()));
+                }
+            }
+        }
+        // Every pinned handle still answers exactly what its own
+        // generation implied, no matter how many retirements followed.
+        for (snap, idx) in &pinned {
+            verify(snap, &log[*idx]);
+        }
+    });
+}
