@@ -28,6 +28,12 @@
 //!   refactor, warm-started re-solve) over a full re-register + cold query
 //!   of the concatenated data. For `dn << n` these must land above 1.
 //!
+//! * `frozen_solve_speedup_t{2,8}` — T threads solving *distinct
+//!   uncached* `nu` against one model: the frozen read lane
+//!   (`SessionSnapshot::solve_frozen`, no session lock) over the mutex
+//!   writer lane (every solve serialized on the session lock). Lock-free
+//!   scaling reads as ~T; a hidden lock reads as ~1.
+//!
 //! * `recovery_replay_speedup` — restart cost (§Durability acceptance):
 //!   recovering a crashed durable model (snapshot decode + sketch replay
 //!   from the compact header + WAL tail replay + first warm query) over
@@ -835,6 +841,100 @@ fn main() {
                 derived.push((format!("concurrent_query_speedup_t{t}"), Json::from(t1 / mean)));
                 println!("    concurrent_query_speedup_t{t}: {:.2}x", t1 / mean);
             }
+        }
+        println!();
+    }
+
+    // Frozen-lane uncached solve throughput (§Serving acceptance): T
+    // threads each solving *distinct uncached* `nu` against one
+    // registered model. The writer (mutex) lane serializes every solve
+    // on the session lock; the frozen lane answers from the published
+    // snapshot's pinned artifacts (`SessionSnapshot::solve_frozen`) with
+    // no lock at all. `frozen_solve_speedup_tT` = mutex-lane wall time /
+    // frozen-lane wall time over the same per-thread work, so lock-free
+    // scaling reads as ~T and a hidden lock reads as ~1. Every query
+    // draws a fresh `nu` above the warm point (smaller effective
+    // dimension), so nothing is ever cached, the frozen m always
+    // suffices, and both lanes pay a real gradient-IHS solve per call.
+    {
+        use effdim::coordinator::registry::{Registry, DEFAULT_BYTE_BUDGET};
+        use effdim::solvers::adaptive::FrozenOutcome;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let (n, d) = if smoke { (512usize, 64usize) } else { (2048usize, 128usize) };
+        let per_thread = if smoke { 4usize } else { 8 };
+        let reps = if smoke { 2 } else { 5 };
+        let (warm_nu, eps) = (0.5, 1e-8);
+        let ds = synthetic::exponential_decay(n, d, 29);
+        let reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        let entry = reg
+            .register("bench".into(), ds.a, ds.b, SketchKind::Gaussian, 29)
+            .unwrap();
+        {
+            let mut s = entry.session.lock().unwrap();
+            s.solve(warm_nu, eps).unwrap();
+            entry.publish(&mut s).unwrap();
+        }
+        let ticket = AtomicU64::new(0);
+        let fresh_nu =
+            |ticket: &AtomicU64| 0.6 + 0.003 * ticket.fetch_add(1, Ordering::Relaxed) as f64;
+        println!(
+            "--- frozen-lane uncached solves (n = {n}, d = {d}, {per_thread} distinct nus/thread) ---"
+        );
+        for t in [2usize, 8] {
+            let t_mutex = timed(
+                &mut cases,
+                &format!("uncached solve mutex lane (t={t})"),
+                (n, d, 0),
+                t,
+                reps,
+                || {
+                    std::thread::scope(|scope| {
+                        for _ in 0..t {
+                            scope.spawn(|| {
+                                for _ in 0..per_thread {
+                                    let nu = fresh_nu(&ticket);
+                                    let sol = entry.session.lock().unwrap().solve(nu, eps).unwrap();
+                                    assert!(sol.report.converged, "mutex-lane solve must converge");
+                                    std::hint::black_box(sol.x[0]);
+                                }
+                            });
+                        }
+                    });
+                },
+            );
+            let t_frozen = timed(
+                &mut cases,
+                &format!("uncached solve frozen lane (t={t})"),
+                (n, d, 0),
+                t,
+                reps,
+                || {
+                    std::thread::scope(|scope| {
+                        for _ in 0..t {
+                            scope.spawn(|| {
+                                let snap = entry.snapshot();
+                                for _ in 0..per_thread {
+                                    let nu = fresh_nu(&ticket);
+                                    match snap
+                                        .solve_frozen(nu, eps, None)
+                                        .expect("snapshot has state")
+                                        .unwrap()
+                                    {
+                                        FrozenOutcome::Solved(sol) => {
+                                            std::hint::black_box(sol.x[0]);
+                                        }
+                                        FrozenOutcome::NeedsGrowth { .. } => {
+                                            panic!("nu {nu} must fit the frozen m")
+                                        }
+                                    }
+                                }
+                            });
+                        }
+                    });
+                },
+            );
+            derived.push((format!("frozen_solve_speedup_t{t}"), Json::from(t_mutex / t_frozen)));
+            println!("    frozen_solve_speedup_t{t}: {:.2}x", t_mutex / t_frozen);
         }
         println!();
     }

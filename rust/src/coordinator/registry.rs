@@ -80,9 +80,15 @@ pub struct ModelEntry {
     /// lock). Counted here because the snapshot itself is immutable.
     pub snap_queries: AtomicU64,
     /// Snapshot-path queries that hit the cached-solution fast path
-    /// (currently all of them; kept separate so future read-only paths
-    /// that miss can be told apart).
+    /// (kept separate from [`ModelEntry::frozen_solves`]: a hit copies a
+    /// cached vector, a frozen solve runs the full iteration lock-free).
     pub snap_hits: AtomicU64,
+    /// Uncached solves answered entirely through the frozen read lane
+    /// (pinned panel + pure per-`nu` re-key; no session lock, no growth).
+    pub frozen_solves: AtomicU64,
+    /// Frozen-lane attempts that returned `NeedsGrowth` (or a recovery
+    /// condition) and fell back to the mutex lane for this model.
+    pub frozen_fallbacks: AtomicU64,
     /// Logical LRU clock value of the last touch.
     last_used: AtomicU64,
     /// Cached `approx_bytes` of the session, refreshed after each query
@@ -145,6 +151,13 @@ pub struct Registry {
     /// Streaming appends applied (`{"cmd":"append"}`); counted separately
     /// from queries — an ingest is not a solve.
     pub appends: AtomicU64,
+    /// Uncached solves answered through the frozen read lane across all
+    /// models (no session lock; see [`ModelEntry::frozen_solves`]).
+    pub frozen_solves: AtomicU64,
+    /// Frozen-lane attempts that deferred with `NeedsGrowth` and were
+    /// re-run on the mutex lane (each such query is counted once, by the
+    /// mutex lane's [`Registry::note_query`]).
+    pub frozen_fallbacks: AtomicU64,
 }
 
 impl Registry {
@@ -171,6 +184,8 @@ impl Registry {
             evicted: AtomicU64::new(0),
             queries: AtomicU64::new(0),
             appends: AtomicU64::new(0),
+            frozen_solves: AtomicU64::new(0),
+            frozen_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -204,6 +219,8 @@ impl Registry {
                 snap,
                 snap_queries: AtomicU64::new(0),
                 snap_hits: AtomicU64::new(0),
+                frozen_solves: AtomicU64::new(0),
+                frozen_fallbacks: AtomicU64::new(0),
                 last_used: AtomicU64::new(inner.clock),
                 bytes: AtomicUsize::new(bytes),
             });
@@ -239,6 +256,8 @@ impl Registry {
                 snap,
                 snap_queries: AtomicU64::new(0),
                 snap_hits: AtomicU64::new(0),
+                frozen_solves: AtomicU64::new(0),
+                frozen_fallbacks: AtomicU64::new(0),
                 last_used: AtomicU64::new(inner.clock),
                 bytes: AtomicUsize::new(bytes),
             });
@@ -301,6 +320,8 @@ impl Registry {
             snap,
             snap_queries: AtomicU64::new(0),
             snap_hits: AtomicU64::new(0),
+            frozen_solves: AtomicU64::new(0),
+            frozen_fallbacks: AtomicU64::new(0),
             last_used: AtomicU64::new(clock),
             bytes: AtomicUsize::new(bytes),
         });
@@ -338,6 +359,30 @@ impl Registry {
         entry.snap_hits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record an uncached solve answered entirely through the frozen read
+    /// lane. Counts as a served query (wire metrics stay comparable with
+    /// the mutex lane) and as a snapshot-path query, but **not** as a
+    /// cache hit — the full iteration ran, lock-free. No byte refresh:
+    /// the frozen lane mutates nothing, so the session's footprint is
+    /// unchanged. The LRU position was already bumped by the
+    /// [`Registry::touch`] that resolved the model id — frozen solves
+    /// keep a model hot exactly like mutex-lane solves do.
+    pub fn note_frozen_solve(&self, entry: &ModelEntry) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.frozen_solves.fetch_add(1, Ordering::Relaxed);
+        entry.snap_queries.fetch_add(1, Ordering::Relaxed);
+        entry.frozen_solves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a frozen-lane attempt that deferred (`NeedsGrowth`) to the
+    /// mutex lane. Only the fallback counters advance — the query itself
+    /// is counted once, by the mutex lane's [`Registry::note_query`] when
+    /// the writer-path solve finishes.
+    pub fn note_frozen_fallback(&self, entry: &ModelEntry) {
+        self.frozen_fallbacks.fetch_add(1, Ordering::Relaxed);
+        entry.frozen_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record a finished streaming append against `entry`: the operand,
     /// `A^T b`, sketch rows and (pending or refreshed) factorization all
     /// grew, so the byte estimate is recharged and the LRU budget
@@ -350,10 +395,17 @@ impl Registry {
     }
 
     /// Shared byte re-accounting: swap in the session's fresh
-    /// `approx_bytes`, O(1)-update the running total under the map lock,
-    /// then enforce the budget without evicting `entry` itself.
+    /// `approx_bytes` **plus** whatever the published snapshot still
+    /// retains beyond the live state
+    /// ([`SessionSnapshot::retained_bytes`] — allocation-deduplicated via
+    /// `Arc::ptr_eq`, so shared panels/operands are charged once), then
+    /// O(1)-update the running total under the map lock and enforce the
+    /// budget without evicting `entry` itself. Charging the retained
+    /// artifacts matters after growth: a stale snapshot pins the whole
+    /// pre-growth panel + engine until the next publish, and a budget
+    /// that ignored it would admit more live state than configured.
     fn refresh_bytes(&self, entry: &ModelEntry, session: &ModelSession) {
-        let new = session.approx_bytes();
+        let new = session.approx_bytes() + entry.snapshot().retained_bytes(session);
         {
             let inner = self.inner.lock().unwrap();
             // A concurrently evicted model must not perturb the running
@@ -502,6 +554,14 @@ impl Registry {
                             "snapshot_queries",
                             Json::from(e.snap_queries.load(Ordering::Relaxed)),
                         ),
+                        (
+                            "frozen_solves",
+                            Json::from(e.frozen_solves.load(Ordering::Relaxed)),
+                        ),
+                        (
+                            "frozen_fallbacks",
+                            Json::from(e.frozen_fallbacks.load(Ordering::Relaxed)),
+                        ),
                     ];
                     if let Some((n, d, m, kind, queries, hits)) = detail {
                         fields.extend([
@@ -572,6 +632,8 @@ impl Registry {
             ("evicted", Json::from(self.evicted.load(Ordering::Relaxed))),
             ("queries", Json::from(self.queries.load(Ordering::Relaxed))),
             ("appends", Json::from(self.appends.load(Ordering::Relaxed))),
+            ("frozen_solves", Json::from(self.frozen_solves.load(Ordering::Relaxed))),
+            ("frozen_fallbacks", Json::from(self.frozen_fallbacks.load(Ordering::Relaxed))),
         ];
         if let Some(store) = &self.store {
             fields.extend([
@@ -681,6 +743,96 @@ mod tests {
             entry.bytes.load(Ordering::Relaxed) > one_model,
             "append recharged the cached byte estimate"
         );
+    }
+
+    #[test]
+    fn panel_growth_recharge_counts_retained_snapshot_and_evicts() {
+        // Regression for snapshot byte accounting: after a warm solve the
+        // published snapshot shares everything with the live state, but a
+        // later growth solve leaves the snapshot pinning the whole
+        // pre-growth panel + engine. The recharge in `note_query` must
+        // charge session + retained-snapshot bytes (deduplicated per
+        // allocation) — enough pressure to evict a colder model.
+        let warm_bytes = {
+            let probe = Registry::new(usize::MAX);
+            let id = register_one(&probe, 96, 12, 9);
+            let entry = probe.touch(id).unwrap();
+            let mut s = entry.session.lock().unwrap();
+            s.solve(0.5, 1e-8).unwrap();
+            entry.publish(&mut s).unwrap();
+            probe.note_query(&entry, &s);
+            drop(s);
+            entry.bytes.load(Ordering::Relaxed)
+        };
+        // Both warmed models fit with a sliver of slack.
+        let reg = Registry::new(warm_bytes * 2 + warm_bytes / 8);
+        let hot = register_one(&reg, 96, 12, 1);
+        let cold = register_one(&reg, 96, 12, 2);
+        for id in [hot, cold] {
+            let entry = reg.touch(id).unwrap();
+            let mut s = entry.session.lock().unwrap();
+            s.solve(0.5, 1e-8).unwrap();
+            entry.publish(&mut s).unwrap();
+            reg.note_query(&entry, &s);
+        }
+        assert_eq!(reg.len(), 2, "both warmed models fit before growth");
+        // Make `hot` the protected/most-recent model, then force growth
+        // with a much smaller nu. The snapshot published at nu=0.5 is NOT
+        // republished, so it retains the pre-growth panel.
+        let entry = reg.touch(hot).unwrap();
+        {
+            let mut s = entry.session.lock().unwrap();
+            let sol = s.solve(0.005, 1e-8).unwrap();
+            assert!(sol.report.doublings >= 1, "premise: this solve grows the panel");
+            reg.note_query(&entry, &s);
+            // The charge is exactly session + deduped snapshot retention,
+            // and the stale snapshot genuinely retains something.
+            let retained = entry.snapshot().retained_bytes(&s);
+            assert!(retained > 0, "stale snapshot must retain the pre-growth panel");
+            assert_eq!(
+                entry.bytes.load(Ordering::Relaxed),
+                s.approx_bytes() + retained,
+            );
+        }
+        assert!(reg.touch(hot).is_some(), "grown model survives its own recharge");
+        assert!(reg.touch(cold).is_none(), "growth pressure evicted the colder model");
+        assert_eq!(reg.evicted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn frozen_counters_flow_through_stats_and_listing() {
+        let reg = Registry::new(DEFAULT_BYTE_BUDGET);
+        let id = register_one(&reg, 128, 16, 8);
+        let entry = reg.touch(id).unwrap();
+        {
+            let mut s = entry.session.lock().unwrap();
+            s.solve(0.5, 1e-8).unwrap();
+            entry.publish(&mut s).unwrap();
+            reg.note_query(&entry, &s);
+        }
+        // An uncached nu through the frozen lane off the snapshot handle
+        // — no session lock, counted as a query but not a cache hit.
+        let snap = entry.snapshot();
+        match snap.solve_frozen(0.9, 1e-8, None).unwrap().unwrap() {
+            crate::solvers::adaptive::FrozenOutcome::Solved(sol) => {
+                assert!(sol.report.converged);
+                reg.note_frozen_solve(&entry);
+            }
+            crate::solvers::adaptive::FrozenOutcome::NeedsGrowth { reason, .. } => {
+                panic!("larger nu must serve frozen: {reason}")
+            }
+        }
+        reg.note_frozen_fallback(&entry);
+        assert_eq!(reg.queries.load(Ordering::Relaxed), 2);
+        assert_eq!(entry.snap_hits.load(Ordering::Relaxed), 0);
+        let stats = reg.stats_json();
+        assert_eq!(stats.get("frozen_solves").unwrap().as_usize(), Some(1));
+        assert_eq!(stats.get("frozen_fallbacks").unwrap().as_usize(), Some(1));
+        let listing = reg.models_json();
+        let m = &listing.as_arr().unwrap()[0];
+        assert_eq!(m.get("frozen_solves").unwrap().as_usize(), Some(1));
+        assert_eq!(m.get("frozen_fallbacks").unwrap().as_usize(), Some(1));
+        assert!(m.get("generation").unwrap().as_usize().unwrap() >= 1);
     }
 
     #[test]

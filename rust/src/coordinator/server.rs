@@ -31,6 +31,7 @@ use super::protocol::{self, Request};
 use super::registry::{Registry, DEFAULT_BYTE_BUDGET};
 use super::scheduler::Scheduler;
 use crate::persist::{DurabilityPolicy, Store};
+use crate::solvers::adaptive::FrozenOutcome;
 use crate::util::failpoint;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -496,6 +497,41 @@ fn respond(req: Request, shared: &Shared) -> String {
                         ("result", solution_json(nu, &sol, include_x)),
                         ("m", Json::from(snap.m())),
                     ]);
+                }
+                // Frozen read lane: an *uncached* single-`nu` query runs
+                // the full adaptive iteration against the snapshot's
+                // pinned panel + view — still no session mutex, so
+                // distinct-`nu` readers of one hot model overlap freely
+                // with each other and with a writer. The answer is
+                // bitwise the one the writer lane would produce from this
+                // generation; nothing is cached and the warm start does
+                // not advance (the writer lane owns all mutation).
+                // `None` (no solver state yet / pending lazy appends) and
+                // `NeedsGrowth` (frozen `m` too small for this `nu`, or a
+                // recovery condition) fall back to the mutex lane below,
+                // which owns growth and the recovery ladder.
+                match snap.solve_frozen(nu, eps, wall_deadline(shared, deadline_s)) {
+                    Some(Ok(FrozenOutcome::Solved(sol))) => {
+                        registry.note_frozen_solve(&entry);
+                        return protocol::ok(vec![
+                            ("model", Json::from(model)),
+                            ("result", solution_json(nu, &sol, include_x)),
+                            ("m", Json::from(snap.m())),
+                        ]);
+                    }
+                    Some(Ok(FrozenOutcome::NeedsGrowth { .. })) => {
+                        registry.note_frozen_fallback(&entry);
+                    }
+                    // Definitive input/deadline error — the writer path
+                    // would fail the same way; don't duplicate the work
+                    // just to fail again. Failed work is still a served
+                    // query (the mutex lane counts its failures too).
+                    Some(Err(e)) => {
+                        registry.queries.fetch_add(1, Ordering::Relaxed);
+                        entry.snap_queries.fetch_add(1, Ordering::Relaxed);
+                        return protocol::err(&e);
+                    }
+                    None => {}
                 }
             }
             let mut session = entry.session.lock().unwrap();
@@ -1058,6 +1094,69 @@ mod tests {
         let reg_stats = metrics.get("registry").unwrap();
         assert_eq!(reg_stats.get("registered").unwrap().as_usize(), Some(1));
         assert_eq!(reg_stats.get("evicted").unwrap().as_usize(), Some(1));
+
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn uncached_nu_queries_take_the_frozen_lane_over_tcp() {
+        let (addr, stop, handle) = start_server();
+        let mut client = Client::connect(addr).unwrap();
+        let reg = client
+            .call(r#"{"cmd":"register","profile":"exp","n":512,"d":64,"seed":6,"name":"fz"}"#)
+            .unwrap();
+        assert_eq!(reg.get("ok").unwrap().as_bool(), Some(true), "{reg:?}");
+        let model = reg.get("model").unwrap().as_usize().unwrap();
+
+        // Writer lane: the first solve warms the model and publishes the
+        // snapshot the frozen lane will serve from. A large nu keeps the
+        // published sketch small, so a later small-nu query must defer.
+        let warm = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":50.0}}"#))
+            .unwrap();
+        assert_eq!(warm.get("ok").unwrap().as_bool(), Some(true), "{warm:?}");
+
+        // Uncached, easier nu (larger => smaller effective dimension):
+        // answered by the frozen lane from the pinned snapshot artifacts.
+        let q = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":80.0,"include_x":true}}"#))
+            .unwrap();
+        assert_eq!(q.get("ok").unwrap().as_bool(), Some(true), "{q:?}");
+        assert_eq!(q.get("result").unwrap().get("converged").unwrap().as_bool(), Some(true));
+        let reg_stats = |client: &mut Client| {
+            client.call(r#"{"cmd":"metrics"}"#).unwrap().get("registry").unwrap().clone()
+        };
+        let stats = reg_stats(&mut client);
+        assert_eq!(stats.get("frozen_solves").unwrap().as_usize(), Some(1), "{stats:?}");
+        assert_eq!(stats.get("frozen_fallbacks").unwrap().as_usize(), Some(0));
+
+        // A hard nu the frozen m cannot cover: NeedsGrowth falls the
+        // query back to the writer lane, which grows, answers, and
+        // republishes — one fallback, one (writer-counted) query.
+        let hard = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.05}}"#))
+            .unwrap();
+        assert_eq!(hard.get("ok").unwrap().as_bool(), Some(true), "{hard:?}");
+        let stats = reg_stats(&mut client);
+        assert_eq!(stats.get("frozen_fallbacks").unwrap().as_usize(), Some(1), "{stats:?}");
+        assert_eq!(stats.get("frozen_solves").unwrap().as_usize(), Some(1));
+
+        // After the republish the grown panel covers nearby nus: an
+        // uncached query in that range is frozen again.
+        let q2 = client
+            .call(&format!(r#"{{"cmd":"query","model":{model},"nu":0.07}}"#))
+            .unwrap();
+        assert_eq!(q2.get("ok").unwrap().as_bool(), Some(true), "{q2:?}");
+        let stats = reg_stats(&mut client);
+        assert_eq!(stats.get("frozen_solves").unwrap().as_usize(), Some(2), "{stats:?}");
+
+        // The per-model listing surfaces the same counters lock-free.
+        let listing = client.call(r#"{"cmd":"models"}"#).unwrap();
+        let m0 = &listing.get("models").unwrap().as_arr().unwrap()[0];
+        assert_eq!(m0.get("frozen_solves").unwrap().as_usize(), Some(2), "{m0:?}");
+        assert_eq!(m0.get("frozen_fallbacks").unwrap().as_usize(), Some(1));
+        assert!(m0.get("generation").unwrap().as_usize().unwrap() >= 2);
 
         stop.store(true, Ordering::SeqCst);
         handle.join().unwrap();

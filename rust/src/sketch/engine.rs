@@ -89,6 +89,52 @@ use crate::rng::Xoshiro256;
 use crate::solvers::error::SolverError;
 use crate::util::failpoint;
 
+/// Read-only metadata frozen out of a [`SketchEngine`] at O(1) —
+/// the sketch-layer half of a pinned-snapshot solve. A view is `Copy`
+/// (five scalars); the applied rows themselves travel separately as the
+/// solver's shared `Arc<GramPanel>`
+/// ([`crate::solvers::woodbury::GramPanel`]), so cloning a view out of a
+/// live engine never touches the `m x d` panel or the per-family growth
+/// buffers. Obtained via [`SketchEngine::view`].
+#[derive(Clone, Copy, Debug)]
+pub struct SketchView {
+    kind: SketchKind,
+    n: usize,
+    m: usize,
+    max_m: usize,
+    scale: f64,
+}
+
+impl SketchView {
+    /// Embedding family.
+    pub fn kind(&self) -> SketchKind {
+        self.kind
+    }
+
+    /// Ambient dimension `n` at freeze time.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Sketch depth `m` at freeze time.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Growth cap the live engine was subject to (`usize::MAX` unless
+    /// SRHT padded blocks bound it) — what decides whether a frozen
+    /// solve may take the at-cap exact-Hessian waiver instead of
+    /// reporting `NeedsGrowth`.
+    pub fn max_m(&self) -> usize {
+        self.max_m
+    }
+
+    /// Effective embedding normalization (`1/sqrt(m)`).
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
 /// Per-problem incremental sketch state plus the unnormalized applied
 /// sketch `S̃A`.
 #[derive(Clone)]
@@ -522,6 +568,23 @@ impl SketchEngine {
     /// `sqrt(m_i)` size weight in the stored rows).
     pub fn scale(&self) -> f64 {
         1.0 / (self.m() as f64).sqrt()
+    }
+
+    /// Freeze the engine's read-only metadata into a [`SketchView`] —
+    /// O(1), no buffer is touched. Together with the solver's shared
+    /// `Arc<GramPanel>` (which already carries the applied rows), a view
+    /// is everything a frozen no-growth solve needs from the sketch
+    /// layer: the family, the depth `m`, the growth cap `max_m`, and the
+    /// normalization. See
+    /// [`crate::solvers::adaptive::solve_frozen`].
+    pub fn view(&self) -> SketchView {
+        SketchView {
+            kind: self.kind,
+            n: self.n,
+            m: self.m(),
+            max_m: self.max_m(),
+            scale: self.scale(),
+        }
     }
 
     /// Materialize the effective (normalized) `m x n` embedding — tests

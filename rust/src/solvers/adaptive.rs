@@ -42,11 +42,11 @@
 //! fallback itself surfaces as [`SolverError::NumericalBreakdown`].
 
 use super::error::{RecoveryRung, SolverError};
-use super::woodbury::WoodburyCache;
+use super::woodbury::{GramPanel, WoodburyCache};
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{dot, norm2};
 use crate::rng::Xoshiro256;
-use crate::sketch::engine::SketchEngine;
+use crate::sketch::engine::{SketchEngine, SketchView};
 use crate::sketch::SketchKind;
 use crate::theory::rates::IhsParams;
 use crate::theory::{gaussian_bounds, srht_bounds};
@@ -140,6 +140,57 @@ impl AdaptiveSessionState {
     /// keyed to — what [`AdaptiveSessionState::restore`] re-factors at.
     pub fn cache_nu(&self) -> f64 {
         self.cache.nu()
+    }
+
+    /// The shared immutable Gram panel — the frozen read lane's artifact:
+    /// clone the `Arc` out of a published snapshot and derive per-`nu`
+    /// factorizations from it with zero writer coordination
+    /// ([`GramPanel::factor`] is pure).
+    pub fn panel(&self) -> &Arc<GramPanel> {
+        self.cache.panel()
+    }
+
+    /// Freeze the sketch-layer metadata ([`SketchView`]) out of the live
+    /// engine at O(1) — `None` once growth hit the cap (the panel then
+    /// holds the exact Hessian and the frozen lane's at-cap waiver
+    /// applies unconditionally).
+    pub fn view(&self) -> Option<SketchView> {
+        self.engine.as_deref().map(SketchEngine::view)
+    }
+
+    /// Bytes of this state's allocations **not** shared with `live`
+    /// (compared allocation-by-allocation via `Arc::ptr_eq`): what a
+    /// registry must additionally charge for a published snapshot whose
+    /// writer has since re-keyed or grown. A snapshot that still shares
+    /// everything with the live state costs 0 extra; after a writer-lane
+    /// `set_nu` the snapshot retains its own `NuFactor` (but still shares
+    /// the panel); after a grow it retains the whole pre-growth panel and
+    /// engine. Passing `None` charges every allocation (nothing left to
+    /// share against).
+    pub fn bytes_not_shared_with(&self, live: Option<&AdaptiveSessionState>) -> usize {
+        let mut extra = 0;
+        if let Some(e) = &self.engine {
+            let shared = live
+                .and_then(|l| l.engine.as_ref())
+                .map_or(false, |le| Arc::ptr_eq(e, le));
+            if !shared {
+                extra += e.approx_bytes();
+            }
+        }
+        let cache_shared = live.map_or(false, |l| Arc::ptr_eq(&self.cache, &l.cache));
+        if !cache_shared {
+            // The per-nu factor is unshared whenever the cache Arc
+            // diverged, but the panel may still be the same allocation
+            // (`set_nu` re-keys without copying the panel) — charge it
+            // only when the panel pointers differ too.
+            extra += self.cache.factor().approx_bytes();
+            let panel_shared =
+                live.map_or(false, |l| Arc::ptr_eq(self.cache.panel(), l.cache.panel()));
+            if !panel_shared {
+                extra += self.cache.panel().approx_bytes();
+            }
+        }
+        extra
     }
 
     /// Rebuild a session state from persisted parts: the restored engine
@@ -815,6 +866,219 @@ pub fn solve(
     AdaptiveSolver::new(problem, x0, config.clone(), stop.clone(), seed)?.run()
 }
 
+/// Typed outcome of a frozen-lane solve ([`solve_frozen`]).
+#[derive(Clone, Debug)]
+pub enum FrozenOutcome {
+    /// Finished against the pinned artifacts (converged, or hit the
+    /// iteration cap — exactly when the writer lane would have too).
+    Solved(Solution),
+    /// Both candidates failed the acceptance tests at a frozen `m` below
+    /// the growth cap — precisely the condition under which the writer
+    /// lane would grow the sketch (`d_eff(nu)` too large for the pinned
+    /// `m`). The read lane cannot grow: the panel is immutable and
+    /// shared. Callers fall back to the mutex lane, which owns growth
+    /// and the recovery ladder.
+    NeedsGrowth {
+        /// The frozen sketch size that proved insufficient.
+        m: usize,
+        /// Which test failed and by how much (diagnostics only).
+        reason: String,
+    },
+}
+
+/// **Frozen-lane solve**: run the gradient-/Polyak-IHS iteration of
+/// Algorithm 1 against *pinned immutable artifacts* — a shared
+/// [`GramPanel`] and the [`SketchView`] frozen out of the engine — with
+/// growth replaced by a typed [`FrozenOutcome::NeedsGrowth`] return.
+///
+/// This is what makes uncached-`nu` queries embarrassingly parallel: the
+/// per-`nu` factorization is derived by the pure [`GramPanel::factor`]
+/// (`&panel + nu -> NuFactor`, the cross-`nu` preconditioner reuse of
+/// arXiv:2104.14101), and the iteration then runs entirely on local
+/// buffers — no lock, no RNG draw, no mutation anywhere. Iterating to
+/// convergence with a fixed embedding is the regime analyzed in
+/// arXiv:2002.09488.
+///
+/// # Bitwise-twin contract
+///
+/// For a query the writer lane ([`AdaptiveSolver::resume`]) would answer
+/// *without growing*, this function produces **bit-identical** iterates:
+/// it evaluates the same candidate expressions on the same buffers in
+/// the same order, the derived factorization is bitwise the one `set_nu`
+/// would install (the factor kernels are deterministic in
+/// `(Gram, scale2, nu2)`), and the cap arithmetic (`m_cap`, the at-cap
+/// exact-Newton waiver) mirrors [`AdaptiveSolver::build`] exactly. Where
+/// the writer lane would call `grow_sketch`, this lane returns
+/// `NeedsGrowth` instead — so it never returns a *different* answer,
+/// only the same answer or a typed deferral.
+///
+/// # What this lane cannot do
+///
+/// No recovery ladder: resketch and exact-Hessian rebuilds mutate writer
+/// state, so a numerical failure of the per-`nu` re-key also defers to
+/// the writer via `NeedsGrowth`. No warm-start or cache population:
+/// callers ([`crate::solvers::session::SessionSnapshot::solve_frozen`])
+/// treat the result as read-only. Only the oracle-free
+/// [`StopRule::GradientNorm`] is supported (the serving criterion).
+///
+/// `view = None` means the state froze *at the cap* (no engine retained;
+/// the panel holds the exact Hessian): the waiver applies unconditionally
+/// and `NeedsGrowth` is impossible on the acceptance path.
+pub fn solve_frozen(
+    problem: &RidgeProblem,
+    x0: &[f64],
+    config: &AdaptiveConfig,
+    stop: &StopRule,
+    panel: &GramPanel,
+    view: Option<&SketchView>,
+) -> Result<FrozenOutcome, SolverError> {
+    let created = Instant::now();
+    let d = problem.d();
+    if x0.len() != d {
+        return Err(SolverError::invalid(format!(
+            "x0 has {} entries, problem has d = {d}",
+            x0.len()
+        )));
+    }
+    if panel.d() != d {
+        return Err(SolverError::invalid(format!(
+            "frozen panel has d = {}, problem has d = {d}",
+            panel.d()
+        )));
+    }
+    let StopRule::GradientNorm { tol } = stop else {
+        return Err(SolverError::invalid("frozen solve supports the GradientNorm stop rule only"));
+    };
+    let tol = *tol;
+    let params = config.params();
+    // Mirror the writer lane's cap arithmetic exactly
+    // (`AdaptiveSolver::build`): m_cap = next_pow2(n), further bounded by
+    // a live engine's own cap; with no engine retained the state is at
+    // the cap and `m` reads as `m_cap`.
+    let mut m_cap = crate::sketch::srht::next_pow2(problem.n());
+    if let Some(v) = view {
+        m_cap = m_cap.min(v.max_m());
+    }
+    let m = view.map_or(m_cap, SketchView::m);
+
+    let mut report = SolveReport::new(match config.variant {
+        AdaptiveVariant::PolyakFirst => format!("adaptive-{}", config.kind),
+        AdaptiveVariant::GradientOnly => format!("adaptive-gd-{}", config.kind),
+    });
+    // Pure per-nu re-key off the pinned panel — the only factorization
+    // this lane ever performs.
+    let t0 = Instant::now();
+    let factor = match panel.factor(problem.nu) {
+        Ok(f) => f,
+        Err(e @ SolverError::InvalidInput(_)) => return Err(e),
+        Err(e) => {
+            return Ok(FrozenOutcome::NeedsGrowth {
+                m: panel.m(),
+                reason: format!("frozen re-key failed ({e}); writer lane owns recovery"),
+            })
+        }
+    };
+    report.factor_time_s += t0.elapsed().as_secs_f64();
+    report.recovery.escalate(factor.recovery());
+    report.final_m = m;
+    report.peak_m = m;
+    report.m_trace.reserve(config.max_iters.min(65_536));
+
+    // Identical buffers and arithmetic order to `AdaptiveSolver` — the
+    // bitwise-twin contract depends on matching `build`/`step`/`run_inner`
+    // operation for operation.
+    let mut scratch: Vec<f64> = Vec::new();
+    let mut x_prev = x0.to_vec();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0; d];
+    problem.gradient_into(&x, &mut scratch, &mut g);
+    let mut ws_m: Vec<f64> = Vec::new();
+    let mut g_tilde = vec![0.0; d];
+    factor.apply_inverse_into(panel, &g, &mut ws_m, &mut g_tilde);
+    let r_1 = 0.5 * dot(&g, &g_tilde);
+    let mut r_t = r_1;
+    let mut t = 1usize;
+    let g0_norm = norm2(&g);
+    let mut x_cand = vec![0.0; d];
+    let mut g_cand = vec![0.0; d];
+    let mut gt_cand = vec![0.0; d];
+
+    while report.iterations < config.max_iters {
+        failpoint::check("adaptive.frozen").map_err(SolverError::Internal)?;
+        if let Some(deadline) = config.deadline {
+            if Instant::now() >= deadline {
+                return Err(SolverError::DeadlineExceeded(format!(
+                    "solve passed its wall deadline after {} accepted iterations",
+                    report.iterations
+                )));
+            }
+        }
+        let r_plus;
+        'accept: {
+            // --- Polyak candidate (steps 4–7) ---
+            if config.variant == AdaptiveVariant::PolyakFirst {
+                for i in 0..d {
+                    x_cand[i] = x[i] - params.mu_p * g_tilde[i]
+                        + params.beta_p * (x[i] - x_prev[i]);
+                }
+                problem.gradient_into(&x_cand, &mut scratch, &mut g_cand);
+                factor.apply_inverse_into(panel, &g_cand, &mut ws_m, &mut gt_cand);
+                let r_p = 0.5 * dot(&g_cand, &gt_cand);
+                let c_p_plus =
+                    if r_1 > 0.0 { (r_p / r_1).powf(1.0 / t as f64) } else { 0.0 };
+                if c_p_plus <= params.c_p {
+                    r_plus = r_p;
+                    break 'accept;
+                }
+                report.rejections += 1;
+            }
+
+            // --- Gradient candidate (steps 9–12) ---
+            for i in 0..d {
+                x_cand[i] = x[i] - params.mu_gd * g_tilde[i];
+            }
+            problem.gradient_into(&x_cand, &mut scratch, &mut g_cand);
+            factor.apply_inverse_into(panel, &g_cand, &mut ws_m, &mut gt_cand);
+            let r_gd = 0.5 * dot(&g_cand, &gt_cand);
+            let c_gd_plus = if r_t > 0.0 { r_gd / r_t } else { 0.0 };
+            if c_gd_plus <= params.c_gd || m >= m_cap {
+                // At the cap H_S is (near-)exact — the writer lane's
+                // damped exact-Newton waiver, verbatim.
+                r_plus = r_gd;
+                break 'accept;
+            }
+            report.rejections += 1;
+
+            // --- Both rejected: the writer lane would grow here ---
+            return Ok(FrozenOutcome::NeedsGrowth {
+                m,
+                reason: format!(
+                    "decrement ratio {c_gd_plus:.3e} > c_gd {:.3e} at frozen m = {m} (cap {m_cap})",
+                    params.c_gd
+                ),
+            });
+        }
+        // Accept: rotate buffers exactly like `accept_candidate`.
+        std::mem::swap(&mut x_prev, &mut x);
+        std::mem::swap(&mut x, &mut x_cand);
+        std::mem::swap(&mut g, &mut g_cand);
+        std::mem::swap(&mut g_tilde, &mut gt_cand);
+        r_t = r_plus;
+        t += 1;
+        report.iterations += 1;
+        report.m_trace.push(m);
+        if norm2(&g) <= tol * g0_norm {
+            report.converged = true;
+            break;
+        }
+    }
+
+    let total = created.elapsed().as_secs_f64();
+    report.wall_time_s = total;
+    report.iter_time_s = total - report.sketch_time_s - report.factor_time_s;
+    Ok(FrozenOutcome::Solved(Solution { x, report }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1002,5 +1266,160 @@ mod tests {
         let rel = p2.prediction_error(&sol2.x, &x_star)
             / p2.prediction_error(&vec![0.0; 32], &x_star);
         assert!(rel < 1e-8, "relative error {rel}");
+    }
+
+    // ---- frozen read lane ----
+
+    fn bits(x: &[f64]) -> Vec<u64> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn frozen_solve_is_a_bitwise_twin_of_the_mutex_lane() {
+        // All three sketch families x dense/CSR: warm a state at nu = 0.5,
+        // then solve nu = 1.25 (larger nu => smaller d_eff => no growth)
+        // through both lanes. The frozen lane pins the panel Arc + view;
+        // the mutex lane resumes the state. Results must agree BITWISE.
+        let ds = crate::data::synthetic::exponential_decay(256, 32, 33);
+        let dense = ds.a.dense().into_owned();
+        let ops = [
+            crate::linalg::Operand::Dense(dense.clone()),
+            crate::linalg::Operand::Sparse(crate::linalg::sparse::CsrMatrix::from_dense(&dense)),
+        ];
+        let stop = StopRule::GradientNorm { tol: 1e-8 };
+        for op in ops {
+            for kind in [SketchKind::Gaussian, SketchKind::Srht, SketchKind::Sparse] {
+                let p1 = RidgeProblem::new(op.clone(), ds.b.clone(), 0.5);
+                let p2 = RidgeProblem::new(op.clone(), ds.b.clone(), 1.25);
+                let cfg = AdaptiveConfig::new(kind);
+                let solver =
+                    AdaptiveSolver::new(&p1, &vec![0.0; 32], cfg.clone(), stop.clone(), 9)
+                        .unwrap();
+                let (sol1, state) = solver.run_with_state().unwrap();
+
+                // Read lane: pinned artifacts, pure factor, no mutation.
+                let panel = Arc::clone(state.panel());
+                let view = state.view();
+                let frozen =
+                    solve_frozen(&p2, &sol1.x, &cfg, &stop, &panel, view.as_ref()).unwrap();
+                let FrozenOutcome::Solved(fsol) = frozen else {
+                    panic!("{kind:?}: larger nu must not need growth");
+                };
+
+                // Writer lane twin on the same state.
+                let resumed =
+                    AdaptiveSolver::resume(&p2, &sol1.x, cfg, stop.clone(), state).unwrap();
+                let (msol, _) = resumed.run_with_state().unwrap();
+                assert_eq!(msol.report.doublings, 0, "{kind:?}: twin premise (no growth)");
+                assert_eq!(
+                    bits(&fsol.x),
+                    bits(&msol.x),
+                    "{kind:?}/{}: frozen and mutex lanes diverged",
+                    if matches!(op, crate::linalg::Operand::Dense(_)) { "dense" } else { "csr" },
+                );
+                assert_eq!(fsol.report.iterations, msol.report.iterations);
+                assert_eq!(fsol.report.final_m, msol.report.final_m);
+                assert_eq!(fsol.report.converged, msol.report.converged);
+                assert!(fsol.report.converged);
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_solve_reports_needs_growth_exactly_when_the_writer_would_grow() {
+        // Warm at nu = 50 (d_eff < 2 => tiny frozen m), then ask for
+        // nu = 0.05 (d_eff far above the frozen m): the frozen lane must
+        // return the typed NeedsGrowth deferral, and the mutex twin must
+        // indeed grow on the same query.
+        let ds = crate::data::synthetic::exponential_decay(512, 64, 34);
+        let stop = StopRule::GradientNorm { tol: 1e-8 };
+        let p1 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 50.0);
+        let p2 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 0.05);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let solver =
+            AdaptiveSolver::new(&p1, &vec![0.0; 64], cfg.clone(), stop.clone(), 10).unwrap();
+        let (sol1, state) = solver.run_with_state().unwrap();
+        let frozen_m = state.m();
+
+        let panel = Arc::clone(state.panel());
+        let view = state.view();
+        match solve_frozen(&p2, &sol1.x, &cfg, &stop, &panel, view.as_ref()).unwrap() {
+            FrozenOutcome::NeedsGrowth { m, reason } => {
+                assert_eq!(m, frozen_m);
+                assert!(reason.contains("frozen m"), "reason: {reason}");
+            }
+            FrozenOutcome::Solved(s) => {
+                panic!("expected NeedsGrowth at m = {frozen_m}, solved in {} iters", s.report.iterations)
+            }
+        }
+        // The pinned panel is untouched by the deferral.
+        assert_eq!(panel.m(), frozen_m);
+
+        // Writer twin grows on exactly this query.
+        let resumed = AdaptiveSolver::resume(&p2, &sol1.x, cfg, stop, state).unwrap();
+        let (msol, _) = resumed.run_with_state().unwrap();
+        assert!(msol.report.doublings >= 1, "twin premise: the writer lane grows here");
+    }
+
+    #[test]
+    fn frozen_solve_at_cap_takes_the_exact_hessian_waiver() {
+        // A state frozen AT the cap (no engine; the panel holds the exact
+        // Hessian) can never defer: the at-cap damped-Newton waiver
+        // accepts the gradient candidate unconditionally, mirroring the
+        // writer lane. Build twin at-cap states via restore (deterministic)
+        // and compare bitwise.
+        let ds = crate::data::synthetic::exponential_decay(64, 8, 35);
+        let a = std::sync::Arc::new(ds.a.clone());
+        let stop = StopRule::GradientNorm { tol: 1e-9 };
+        let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 0.3);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+
+        let state =
+            AdaptiveSessionState::restore(None, 0.7, Xoshiro256::seed_from_u64(1), &a).unwrap();
+        assert!(state.at_cap());
+        assert!(state.view().is_none());
+        let panel = Arc::clone(state.panel());
+        let frozen = solve_frozen(&p, &vec![0.0; 8], &cfg, &stop, &panel, None).unwrap();
+        let FrozenOutcome::Solved(fsol) = frozen else {
+            panic!("at-cap frozen solve must never need growth");
+        };
+        assert!(fsol.report.converged);
+
+        let twin =
+            AdaptiveSessionState::restore(None, 0.7, Xoshiro256::seed_from_u64(1), &a).unwrap();
+        let resumed = AdaptiveSolver::resume(&p, &vec![0.0; 8], cfg, stop, twin).unwrap();
+        let (msol, _) = resumed.run_with_state().unwrap();
+        assert_eq!(bits(&fsol.x), bits(&msol.x));
+        assert_eq!(fsol.report.iterations, msol.report.iterations);
+    }
+
+    #[test]
+    fn snapshot_byte_dedupe_charges_per_allocation() {
+        // A freshly published snapshot shares everything with the live
+        // state => 0 extra bytes. After a writer set_nu the snapshot
+        // retains only its own NuFactor (panel still shared); `None`
+        // charges the full footprint.
+        let ds = crate::data::synthetic::exponential_decay(128, 16, 36);
+        let p = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 0.5);
+        let cfg = AdaptiveConfig::new(SketchKind::Gaussian);
+        let stop = StopRule::GradientNorm { tol: 1e-8 };
+        let solver = AdaptiveSolver::new(&p, &vec![0.0; 16], cfg.clone(), stop.clone(), 11).unwrap();
+        let (sol, state) = solver.run_with_state().unwrap();
+        let published = state.clone(); // what a SessionSnapshot holds
+        assert_eq!(published.bytes_not_shared_with(Some(&state)), 0);
+        assert_eq!(published.bytes_not_shared_with(None), published.approx_bytes());
+
+        // Writer re-keys: COW unwraps clone the cache, the panel Arc is
+        // carried over — the stale snapshot now retains its factor only.
+        let p2 = RidgeProblem::new(ds.a.clone(), ds.b.clone(), 0.9);
+        let resumed = AdaptiveSolver::resume(&p2, &sol.x, cfg, stop, state).unwrap();
+        let (_, state2) = resumed.run_with_state().unwrap();
+        let extra = published.bytes_not_shared_with(Some(&state2));
+        assert!(extra > 0, "stale snapshot must charge its own factor");
+        assert!(
+            extra < published.approx_bytes(),
+            "panel/engine still shared must not be double-charged: {extra} vs {}",
+            published.approx_bytes()
+        );
     }
 }

@@ -42,6 +42,20 @@
 //! Surfaced as [`ModelSession::solve_block`] and, over the wire, as the
 //! `query` command's `"bs"` batch (PROTOCOL.md).
 //!
+//! # Writer lane only
+//!
+//! Block solves always run on the **writer lane** (under the session
+//! lock): they grow the shared sketch and are not covered by the frozen
+//! read lane ([`solve_frozen`](super::adaptive::solve_frozen) /
+//! `SessionSnapshot::solve_frozen`), which serves single-`nu`,
+//! model-`b` queries from pinned immutable artifacts. The two lanes
+//! compose safely through the copy-on-write seam:
+//! `AdaptiveSessionState::into_parts` hands this module an *owned*
+//! [`WoodburyCache`] (cloning the panel only if a published snapshot
+//! still shares it), so block-wide growth here never mutates a
+//! [`GramPanel`](super::woodbury::GramPanel) that a concurrent frozen
+//! solve is reading.
+//!
 //! # Failure semantics
 //!
 //! [`solve_block`] never panics on bad input or numerical breakdown: it

@@ -69,12 +69,15 @@
 //! never be observed through a snapshot: readers see the old generation
 //! or the new one, nothing in between.
 
-use super::adaptive::{AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver};
+use super::adaptive::{
+    self, AdaptiveConfig, AdaptiveSessionState, AdaptiveSolver, FrozenOutcome,
+};
 use super::block;
 use super::error::{panic_message, SolverError};
-use super::woodbury::WoodburyCache;
+use super::woodbury::{GramPanel, WoodburyCache};
 use super::{RidgeProblem, Solution, SolveReport, StopRule};
 use crate::linalg::{Matrix, Operand};
+use crate::sketch::engine::SketchView;
 use crate::sketch::SketchKind;
 use crate::util::failpoint;
 use std::borrow::Cow;
@@ -593,12 +596,13 @@ impl ModelSession {
         self.generation += 1;
         Arc::new(SessionSnapshot {
             generation: self.generation,
-            kind: self.config.kind,
+            config: self.config.clone(),
             a: Arc::clone(&self.a),
             atb: self.atb.clone(),
             state: self.state.clone(),
             warm: self.warm.clone(),
             solutions: self.solutions.clone(),
+            pending: self.pending.is_some(),
         })
     }
 
@@ -633,16 +637,8 @@ impl ModelSession {
         let f64s = std::mem::size_of::<f64>();
         let operand = operand_bytes(&self.a)
             + self.pending.as_ref().map_or(0, operand_bytes);
-        let cached: usize = self
-            .solutions
-            .iter()
-            .map(|s| {
-                (s.x.len() + s.report.error_trace.len()) * f64s
-                    + s.report.m_trace.len() * std::mem::size_of::<usize>()
-                    + s.report.solver.len()
-                    + std::mem::size_of::<CachedSolution>()
-            })
-            .sum();
+        let cached: usize =
+            self.solutions.iter().map(|s| cached_entry_bytes(s)).sum();
         operand
             + (self.b.len() + self.atb.len()) * f64s
             + self.warm.as_ref().map_or(0, |w| w.len() * f64s)
@@ -917,7 +913,10 @@ impl ModelSession {
 /// falls back to the locked writer path.
 pub struct SessionSnapshot {
     generation: u64,
-    kind: SketchKind,
+    /// The session's solver configuration at publish time — the frozen
+    /// lane reruns the *same* adaptive iteration the writer would, so it
+    /// needs the identical parameters, not just the sketch family.
+    config: AdaptiveConfig,
     a: Arc<Operand>,
     /// `A^T b` as of this generation (appends change it).
     atb: Vec<f64>,
@@ -928,6 +927,11 @@ pub struct SessionSnapshot {
     /// The exact-repeat cache as of this generation, LRU order. Entries
     /// are shared with the live session; no vector is copied at publish.
     solutions: Vec<Arc<CachedSolution>>,
+    /// Whether lazily appended rows were awaiting a flush at publish
+    /// time. A pending snapshot cannot run the frozen lane: the panel it
+    /// pins does not cover those rows, so a frozen answer would diverge
+    /// from the writer lane (which flushes before solving).
+    pending: bool,
 }
 
 impl SessionSnapshot {
@@ -953,7 +957,28 @@ impl SessionSnapshot {
 
     /// Sketch family of the underlying session.
     pub fn kind(&self) -> SketchKind {
-        self.kind
+        self.config.kind
+    }
+
+    /// Whether lazily appended rows were awaiting a flush at publish
+    /// time (the frozen lane refuses such snapshots — see
+    /// [`SessionSnapshot::solve_frozen`]).
+    pub fn pending(&self) -> bool {
+        self.pending
+    }
+
+    /// The pinned immutable Gram panel, if the session had solved by
+    /// this generation — the artifact concurrent readers derive per-`nu`
+    /// factorizations from ([`GramPanel::factor`] is pure).
+    pub fn panel(&self) -> Option<&Arc<GramPanel>> {
+        self.state.as_ref().map(AdaptiveSessionState::panel)
+    }
+
+    /// The frozen sketch-layer metadata, if the session had solved by
+    /// this generation and growth had not yet hit the cap (at cap the
+    /// panel holds the exact Hessian and no view exists).
+    pub fn view(&self) -> Option<SketchView> {
+        self.state.as_ref().and_then(AdaptiveSessionState::view)
     }
 
     /// `A^T b` as of this generation.
@@ -1023,6 +1048,133 @@ impl SessionSnapshot {
         }
         Some(Ok(rows.iter().map(|row| crate::linalg::dot(row, &sol.x)).collect()))
     }
+
+    /// Run a full *uncached* solve at `(nu, eps)` against this
+    /// snapshot's pinned artifacts — no lock, no mutation, no growth.
+    ///
+    /// This is the frozen read lane: the panel `Arc` and [`SketchView`]
+    /// are immutable, [`GramPanel::factor`] is pure, and the iteration
+    /// ([`adaptive::solve_frozen`]) replicates the writer lane's
+    /// arithmetic operation-for-operation — including the
+    /// cold-referenced tolerance rescale of `ModelSession::run_adaptive`
+    /// and the warm start as of this generation — so a frozen answer is
+    /// **bitwise** the answer the mutex lane would have produced from
+    /// the same generation. Results are NOT inserted into the solution
+    /// cache and the warm start is NOT advanced: the writer lane owns
+    /// all cache/warm-start mutation; the serving layer counts frozen
+    /// solves on its own atomics.
+    ///
+    /// Returns:
+    /// * `None` — this snapshot cannot serve the frozen lane at all: no
+    ///   solver state yet (the sketch does not exist before the first
+    ///   solve) or lazily appended rows were pending at publish time
+    ///   (the pinned panel does not cover them). Take the writer path.
+    /// * `Some(Err(msg))` — definitive input error, byte-identical to
+    ///   the message the writer path would produce (invalid `nu`/`eps`,
+    ///   or an expired `deadline`); falling through would duplicate
+    ///   work for the same answer.
+    /// * `Some(Ok(FrozenOutcome::Solved(sol)))` — done, lock-free.
+    /// * `Some(Ok(FrozenOutcome::NeedsGrowth { .. }))` — the frozen `m`
+    ///   is insufficient for this `nu`'s effective dimension (or the
+    ///   pure re-key failed and the recovery ladder is needed); fall
+    ///   back to the mutex lane, which owns growth and recovery.
+    pub fn solve_frozen(
+        &self,
+        nu: f64,
+        eps: f64,
+        deadline: Option<Instant>,
+    ) -> Option<Result<FrozenOutcome, String>> {
+        if self.pending {
+            return None;
+        }
+        let state = self.state.as_ref()?;
+        if let Err(e) = check_nu_eps(nu, eps) {
+            return Some(Err(e));
+        }
+        let problem =
+            RidgeProblem::from_parts(Arc::clone(&self.a), None, self.atb.clone(), nu);
+        let x0 = self.warm.clone().unwrap_or_else(|| vec![0.0; problem.d()]);
+        // Mirror `ModelSession::run_adaptive`'s cold-referenced rescale
+        // exactly: `eps` always means `||g|| <= eps * ||A^T b||`.
+        let tol = if x0.iter().all(|&v| v == 0.0) {
+            eps
+        } else {
+            let g0_norm = crate::linalg::norm2(&problem.gradient(&x0));
+            let cold_scale = crate::linalg::norm2(&problem.atb);
+            if g0_norm > 0.0 && cold_scale > 0.0 {
+                eps * cold_scale / g0_norm
+            } else {
+                eps
+            }
+        };
+        let stop = StopRule::GradientNorm { tol };
+        let mut config = self.config.clone();
+        config.deadline = deadline;
+        let view = state.view();
+        let outcome = adaptive::solve_frozen(
+            &problem,
+            &x0,
+            &config,
+            &stop,
+            state.panel(),
+            view.as_ref(),
+        );
+        Some(match outcome {
+            Ok(out) => Ok(out),
+            // Definitive errors the writer lane would reproduce verbatim
+            // (same inputs, same deadline) — surface them directly.
+            Err(e @ SolverError::InvalidInput(_))
+            | Err(e @ SolverError::DeadlineExceeded(_)) => Err(e.into()),
+            // Anything else (numerical breakdown, injected faults) defers
+            // to the writer lane, which owns the recovery ladder.
+            Err(e) => Ok(FrozenOutcome::NeedsGrowth {
+                m: state.m(),
+                reason: format!("frozen solve failed ({e}); writer lane owns recovery"),
+            }),
+        })
+    }
+
+    /// Bytes of this snapshot's allocations **not** shared with the live
+    /// session, compared allocation-by-allocation (`Arc::ptr_eq`): the
+    /// extra footprint a registry must charge for keeping this snapshot
+    /// published after the writer moved on. A snapshot taken from the
+    /// current session state costs only its two owned length-`d` vectors
+    /// (`A^T b` + warm start); after a writer-lane re-key it additionally
+    /// retains its own `NuFactor`; after a grow, the whole pre-growth
+    /// panel and engine; after cache eviction, the evicted solution
+    /// vectors. Each allocation is charged once no matter how many `Arc`
+    /// clones of it exist.
+    pub fn retained_bytes(&self, live: &ModelSession) -> usize {
+        let f64s = std::mem::size_of::<f64>();
+        let mut extra = self.atb.len() * f64s
+            + self.warm.as_ref().map_or(0, |w| w.len() * f64s);
+        if !Arc::ptr_eq(&self.a, &live.a) {
+            extra += operand_bytes(&self.a);
+        }
+        if let Some(state) = &self.state {
+            extra += state.bytes_not_shared_with(live.state.as_ref());
+        }
+        for s in &self.solutions {
+            let shared = live.solutions.iter().any(|l| Arc::ptr_eq(s, l));
+            if !shared {
+                extra += cached_entry_bytes(s);
+            }
+        }
+        extra
+    }
+}
+
+/// Heap bytes of one solution-cache entry: its vectors plus the fixed
+/// scalar footprint (key bits + inline [`SolveReport`] counters/label).
+/// Shared by [`ModelSession::approx_bytes`] and
+/// [`SessionSnapshot::retained_bytes`] so live and retained entries are
+/// charged by the same formula.
+fn cached_entry_bytes(s: &CachedSolution) -> usize {
+    let f64s = std::mem::size_of::<f64>();
+    (s.x.len() + s.report.error_trace.len()) * f64s
+        + s.report.m_trace.len() * std::mem::size_of::<usize>()
+        + s.report.solver.len()
+        + std::mem::size_of::<CachedSolution>()
 }
 
 /// Heap bytes of an operand's storage (dense entries, or CSR values +
@@ -1610,5 +1762,130 @@ mod tests {
             0,
         )
         .is_err());
+    }
+
+    // ---- frozen read lane (snapshot-level) ----
+
+    fn bits(x: &[f64]) -> Vec<u64> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn snapshot_solve_frozen_is_bitwise_the_writer_answer_and_populates_nothing() {
+        // Two twin sessions (same data, same seed). One warms state and
+        // publishes a snapshot; the frozen solve at an uncached nu off
+        // that snapshot must match — bitwise — the writer-lane solve the
+        // twin performs from the same generation, while mutating nothing.
+        let mut writer = session(256, 32, 40);
+        let mut twin = session(256, 32, 40);
+        writer.solve(0.5, 1e-6).unwrap();
+        twin.solve(0.5, 1e-6).unwrap();
+
+        let snap = writer.snapshot();
+        assert!(snap.panel().is_some());
+        assert!(!snap.pending());
+        assert!(snap.cached(0.9, 1e-6).is_none(), "premise: uncached nu");
+        let keys_before = writer.solution_keys();
+
+        let frozen = snap.solve_frozen(0.9, 1e-6, None).unwrap().unwrap();
+        let FrozenOutcome::Solved(fsol) = frozen else {
+            panic!("larger nu than the warm solve must not need growth");
+        };
+        let msol = twin.solve(0.9, 1e-6).unwrap();
+        assert_eq!(bits(&fsol.x), bits(&msol.x), "frozen and writer lanes diverged");
+        assert_eq!(fsol.report.iterations, msol.report.iterations);
+        assert_eq!(fsol.report.final_m, msol.report.final_m);
+
+        // Read-only: no cache entry, no warm-start advance, no counters.
+        assert_eq!(writer.solution_keys(), keys_before);
+        assert!(snap.cached(0.9, 1e-6).is_none());
+        assert_eq!(writer.query_stats().0, twin.query_stats().0 - 1);
+
+        // The writer keeps working off the untouched state: its own solve
+        // at the same nu still answers bitwise-identically.
+        let wsol = writer.solve(0.9, 1e-6).unwrap();
+        assert_eq!(bits(&wsol.x), bits(&fsol.x));
+    }
+
+    #[test]
+    fn snapshot_solve_frozen_refuses_stateless_and_pending_snapshots() {
+        // Before the first solve there is no panel to pin.
+        let mut s = session(96, 12, 41);
+        assert!(s.snapshot().solve_frozen(0.5, 1e-6, None).is_none());
+
+        // A lazily appended row leaves the pinned panel stale — the
+        // frozen lane must defer to the writer (which flushes first).
+        s.solve(0.5, 1e-6).unwrap();
+        let extra = synthetic::exponential_decay(96, 12, 42);
+        let row = extra.a.dense().into_owned().row(0).to_vec();
+        let delta = Operand::from(Matrix::from_vec(1, 12, row));
+        s.append(delta, vec![1.0], AppendRefresh::Lazy).unwrap();
+        let snap = s.snapshot();
+        assert!(snap.pending());
+        assert!(snap.solve_frozen(0.5, 1e-6, None).is_none());
+    }
+
+    #[test]
+    fn snapshot_solve_frozen_surfaces_writer_identical_input_errors() {
+        let mut s = session(96, 12, 43);
+        s.solve(0.5, 1e-6).unwrap();
+        let snap = s.snapshot();
+        let frozen_err = snap.solve_frozen(-1.0, 1e-6, None).unwrap().unwrap_err();
+        let writer_err = s.solve(-1.0, 1e-6).unwrap_err();
+        assert_eq!(frozen_err, writer_err);
+    }
+
+    #[test]
+    fn snapshot_needs_growth_defers_then_next_generation_serves_frozen() {
+        // Warm at a large nu (tiny frozen m); a much smaller nu needs a
+        // bigger sketch: the frozen lane defers with NeedsGrowth, the
+        // writer lane grows and re-publishes, and the *next* snapshot
+        // serves that same nu frozen — the serving layer's fallback
+        // contract end to end at the session level.
+        let mut s = session(512, 64, 44);
+        s.solve(50.0, 1e-6).unwrap();
+        let snap1 = s.snapshot();
+        let gen1 = snap1.generation();
+        match snap1.solve_frozen(0.05, 1e-6, None).unwrap().unwrap() {
+            FrozenOutcome::NeedsGrowth { m, .. } => assert_eq!(m, snap1.m()),
+            FrozenOutcome::Solved(_) => panic!("tiny frozen m must defer"),
+        }
+
+        let wsol = s.solve(0.05, 1e-6).unwrap();
+        assert!(wsol.report.doublings >= 1, "premise: the writer grows here");
+        let snap2 = s.snapshot();
+        assert!(snap2.generation() > gen1);
+        // Same nu, *different* eps => not a cache hit; a genuinely
+        // uncached frozen solve against the grown panel succeeds now.
+        match snap2.solve_frozen(0.05, 2e-6, None).unwrap().unwrap() {
+            FrozenOutcome::Solved(sol) => assert!(sol.report.converged),
+            FrozenOutcome::NeedsGrowth { reason, .. } => {
+                panic!("grown panel must serve this nu frozen: {reason}")
+            }
+        }
+    }
+
+    #[test]
+    fn retained_bytes_charges_only_unshared_allocations() {
+        let mut s = session(256, 32, 45);
+        s.solve(0.5, 1e-6).unwrap();
+        let snap = s.snapshot();
+        // Fresh snapshot: everything heavy is shared; only the two owned
+        // length-d/n vectors (atb + warm) are charged.
+        let f64s = std::mem::size_of::<f64>();
+        let owned = s.atb().len() * f64s + s.warm().unwrap().len() * f64s;
+        assert_eq!(snap.retained_bytes(&s), owned);
+
+        // A writer-lane solve at a new nu re-keys (and may grow): the
+        // stale snapshot now retains its own factor — and, if growth
+        // happened, the whole pre-growth panel — but never the shared
+        // operand.
+        s.solve(0.1, 1e-6).unwrap();
+        let extra = snap.retained_bytes(&s);
+        assert!(extra > owned, "stale snapshot must charge unshared solver state");
+        let full = operand_bytes(s.operand())
+            + s.atb().len() * f64s
+            + s.approx_bytes();
+        assert!(extra < full, "shared operand must not be double-charged");
     }
 }

@@ -9,6 +9,25 @@
 //! When `m > d` the direct `d x d` factorization is cheaper and we switch
 //! automatically.
 //!
+//! # The immutable/mutable seam
+//!
+//! The state splits cleanly along what depends on `nu` and what does not:
+//!
+//! * [`GramPanel`] — the sketch rows `S̃A`, their normalization, and the
+//!   cached unnormalized Gram (`(S̃A)(S̃A)^T` or `(S̃A)^T(S̃A)` by branch).
+//!   None of it depends on `nu`. The panel is **immutable** and shared
+//!   behind an `Arc`: concurrent readers may hold it while a writer grows
+//!   its own copy (copy-on-write, see [`WoodburyCache::grow`]).
+//! * [`NuFactor`] — the per-`nu` Cholesky. Produced by the *pure*
+//!   [`GramPanel::factor`]: `&GramPanel + nu -> NuFactor`, no mutation
+//!   anywhere, so any number of readers can derive factors for distinct
+//!   `nu` from one shared panel simultaneously. This is the cross-`nu`
+//!   preconditioner reuse of arXiv:2104.14101 made lock-free.
+//!
+//! [`WoodburyCache`] pairs one panel with one factor and keeps the
+//! classic mutable API (`set_nu`, `grow`) as thin writer-lane wrappers —
+//! existing callers behave bitwise as before the split.
+//!
 //! # Growth reuse
 //!
 //! Algorithm 1 grows `m` by appending rows; rebuilding the cache from
@@ -33,6 +52,12 @@
 //!   the `O(m^2 d)` Gram term that dominates for `m <= d`;
 //! * past `m > d` it maintains the `d x d` inner Gram incrementally
 //!   (`O(Δm d^2)` per growth) and refactors at `O(d^3)`.
+//!
+//! Growth commits through `Arc::make_mut`: a cache whose panel nobody
+//! else holds mutates it in place (bitwise the pre-split behavior); a
+//! panel shared with a published snapshot is deep-copied first, so
+//! readers pinned to the old panel keep answering from it unchanged
+//! (snapshot isolation).
 
 //! # Failure semantics
 //!
@@ -49,6 +74,7 @@ use super::error::{RecoveryRung, SolverError};
 use crate::linalg::cholesky::Cholesky;
 use crate::linalg::{axpy, scale as scale_vec, Matrix};
 use crate::util::failpoint;
+use std::sync::Arc;
 
 /// Which factorization branch is active.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,22 +85,262 @@ pub enum WoodburyMode {
     Direct,
 }
 
-/// Cached factorization of the sketched Hessian.
+/// The `nu`-independent half of the sketched Hessian: sketch rows, their
+/// normalization, and the cached unnormalized Gram. Immutable once built
+/// — every mutation in the system goes through [`WoodburyCache`], which
+/// copies-on-write when the panel is shared.
 #[derive(Clone)]
-pub struct WoodburyCache {
+pub struct GramPanel {
     /// Sketch rows as provided — unnormalized when `scale != 1`.
     sa: Matrix,
     /// `scale^2` for the effective embedding `scale * sa`.
     scale2: f64,
-    nu2: f64,
     mode: WoodburyMode,
-    chol: Cholesky,
     /// SmallSketch: unnormalized outer Gram `sa sa^T` (`m x m`), kept so
     /// growth only computes the new cross/corner blocks.
     outer_gram: Option<Matrix>,
     /// Direct: unnormalized inner Gram `sa^T sa` (`d x d`), updated by
     /// `O(Δm d^2)` rank-`Δm` additions on growth.
     inner_gram: Option<Matrix>,
+}
+
+impl GramPanel {
+    /// Build the panel for unnormalized sketch rows `sa` whose effective
+    /// embedding is `scale * sa`: pick the branch from `m` vs `d` and
+    /// compute the matching Gram (`O(m^2 d)` or `O(m d^2)`). This is the
+    /// only expensive, `nu`-free work; everything `nu`-dependent lives in
+    /// [`GramPanel::factor`].
+    pub fn build(sa: Matrix, scale: f64) -> Result<Self, SolverError> {
+        if !(scale > 0.0 && scale.is_finite()) {
+            return Err(SolverError::invalid(format!("invalid sketch scale: {scale}")));
+        }
+        let (m, d) = (sa.rows(), sa.cols());
+        let scale2 = scale * scale;
+        if m <= d {
+            let u = sa.gram_outer(); // unnormalized (S̃A)(S̃A)^T, m x m
+            Ok(Self {
+                sa,
+                scale2,
+                mode: WoodburyMode::SmallSketch,
+                outer_gram: Some(u),
+                inner_gram: None,
+            })
+        } else {
+            let inner = sa.gram(); // unnormalized (S̃A)^T(S̃A), d x d
+            Ok(Self {
+                sa,
+                scale2,
+                mode: WoodburyMode::Direct,
+                outer_gram: None,
+                inner_gram: Some(inner),
+            })
+        }
+    }
+
+    /// Derive the per-`nu` factorization from the cached Gram — **pure**:
+    /// `&self` only, so concurrent readers can each factor their own `nu`
+    /// from one shared panel with no coordination. Costs `O(m^3)`
+    /// (small-sketch) or `O(d^3)` (direct); never recomputes the Gram and
+    /// never touches sketch rows. Factorizations retry with escalating
+    /// diagonal jitter; the rung used rides in the returned factor.
+    pub fn factor(&self, nu: f64) -> Result<NuFactor, SolverError> {
+        if !(nu > 0.0 && nu.is_finite()) {
+            return Err(SolverError::invalid(format!("invalid nu: {nu}")));
+        }
+        let nu2 = nu * nu;
+        let (chol, recovery) = match self.mode {
+            WoodburyMode::SmallSketch => {
+                let u = self.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
+                factor_small(u, self.scale2, nu2)?
+            }
+            WoodburyMode::Direct => {
+                let inner = self.inner_gram.as_ref().expect("Direct keeps inner_gram");
+                factor_direct(inner, self.scale2, nu2)?
+            }
+        };
+        Ok(NuFactor { nu2, dim: self.factor_dim(), chol, recovery })
+    }
+
+    /// Sketch size `m`.
+    pub fn m(&self) -> usize {
+        self.sa.rows()
+    }
+
+    /// Column dimension `d` of the sketched matrix.
+    pub fn d(&self) -> usize {
+        self.sa.cols()
+    }
+
+    /// Active branch.
+    pub fn mode(&self) -> WoodburyMode {
+        self.mode
+    }
+
+    /// Effective embedding scale (`1.0` for pre-normalized rows).
+    pub fn scale(&self) -> f64 {
+        self.scale2.sqrt()
+    }
+
+    /// The stored (unnormalized) sketch rows.
+    pub fn sa(&self) -> &Matrix {
+        &self.sa
+    }
+
+    /// Dimension of the factorization this panel's branch produces.
+    fn factor_dim(&self) -> usize {
+        match self.mode {
+            WoodburyMode::SmallSketch => self.sa.rows(),
+            WoodburyMode::Direct => self.sa.cols(),
+        }
+    }
+
+    /// Approximate heap footprint in bytes (sketch rows + cached Gram).
+    /// The panel is shared behind an `Arc`; byte budgets must charge it
+    /// **once per allocation**, not per handle — compare `Arc::ptr_eq`
+    /// before summing.
+    pub fn approx_bytes(&self) -> usize {
+        let mat = |m: &Matrix| m.rows() * m.cols() * std::mem::size_of::<f64>();
+        let gram = self.outer_gram.as_ref().map_or(0, mat)
+            + self.inner_gram.as_ref().map_or(0, mat);
+        mat(&self.sa) + gram
+    }
+
+    /// Explicit `H_S` at `nu` (tests / diagnostics only).
+    pub fn h_s(&self, nu2: f64) -> Matrix {
+        let mut h = self.sa.gram();
+        scale_vec(self.scale2, h.as_mut_slice());
+        h.add_diag(nu2);
+        h
+    }
+}
+
+/// The `nu`-dependent half: one Cholesky factorization of
+/// `K = nu^2 I + scale^2 U` (small-sketch) or `H = scale^2 inner + nu^2 I`
+/// (direct), applied against the [`GramPanel`] it was derived from.
+#[derive(Clone)]
+pub struct NuFactor {
+    nu2: f64,
+    /// Factor dimension (`m` or `d` by branch) — pinned at factor time so
+    /// byte accounting and pairing checks need no panel.
+    dim: usize,
+    chol: Cholesky,
+    /// Rung this particular factorization needed (`Jitter` when the
+    /// diagonal had to be perturbed).
+    recovery: RecoveryRung,
+}
+
+impl NuFactor {
+    /// Regularization level this factorization is keyed to.
+    pub fn nu(&self) -> f64 {
+        self.nu2.sqrt()
+    }
+
+    /// Recovery rung this factorization needed.
+    pub fn recovery(&self) -> RecoveryRung {
+        self.recovery
+    }
+
+    /// Approximate heap footprint of the factor alone (the panel is
+    /// charged separately, once per allocation).
+    pub fn approx_bytes(&self) -> usize {
+        self.dim * self.dim * std::mem::size_of::<f64>()
+    }
+
+    /// Apply `H_S^{-1} g` into `out` (length `d`), allocation-free in the
+    /// steady state: `ws_m` is length-`m` scratch resized only when the
+    /// sketch grows. Cost: `O(m d + m^2)` (small-sketch branch) or
+    /// `O(d^2)` (direct branch). This is the per-iteration primitive of
+    /// the IHS solvers' workspace loops. `panel` must be the panel this
+    /// factor was derived from.
+    pub fn apply_inverse_into(
+        &self,
+        panel: &GramPanel,
+        g: &[f64],
+        ws_m: &mut Vec<f64>,
+        out: &mut [f64],
+    ) {
+        assert_eq!(g.len(), panel.sa.cols(), "apply_inverse dimension mismatch");
+        assert_eq!(out.len(), panel.sa.cols(), "apply_inverse output mismatch");
+        debug_assert_eq!(self.dim, panel.factor_dim(), "factor derived from a different panel");
+        match panel.mode {
+            WoodburyMode::SmallSketch => {
+                // (1/nu^2) (g - scale^2 (S̃A)^T K^{-1} (S̃A) g) with
+                // K = nu^2 I + scale^2 (S̃A)(S̃A)^T.
+                ws_m.resize(panel.sa.rows(), 0.0);
+                panel.sa.matvec_into(g, ws_m);
+                self.chol.solve_in_place(ws_m);
+                out.copy_from_slice(g);
+                // out -= scale^2 (S̃A)^T kinv, fused as per-row axpys.
+                for i in 0..panel.sa.rows() {
+                    let c = panel.scale2 * ws_m[i];
+                    if c != 0.0 {
+                        axpy(-c, panel.sa.row(i), out);
+                    }
+                }
+                scale_vec(1.0 / self.nu2, out);
+            }
+            WoodburyMode::Direct => {
+                out.copy_from_slice(g);
+                self.chol.solve_in_place(out);
+            }
+        }
+    }
+
+    /// Apply `H_S^{-1} g` (allocating wrapper).
+    pub fn apply_inverse(&self, panel: &GramPanel, g: &[f64]) -> Vec<f64> {
+        let mut ws_m = Vec::new();
+        let mut out = vec![0.0; panel.sa.cols()];
+        self.apply_inverse_into(panel, g, &mut ws_m, &mut out);
+        out
+    }
+
+    /// Apply `H_S^{-1}` to `k` gradients at once: `g` is `d x k` (column
+    /// `j` = gradient `j`), the result has the same shape. One BLAS-3
+    /// pass replaces `k` BLAS-2 [`NuFactor::apply_inverse`] calls —
+    /// `O(m d k + m^2 k)` (small-sketch branch, via GEMM +
+    /// [`Cholesky::solve_matrix_in_place`]) or `O(d^2 k)` (direct) — and
+    /// inherits the block kernels' thread parallelism. Column `j` agrees
+    /// with `apply_inverse(g_j)` to roundoff (the block kernels
+    /// accumulate in blocked order, not the vector order). This is the
+    /// per-iteration primitive of the block multi-RHS solver
+    /// ([`crate::solvers::block`]).
+    pub fn apply_inverse_block(&self, panel: &GramPanel, g: &Matrix) -> Matrix {
+        assert_eq!(g.rows(), panel.sa.cols(), "apply_inverse_block dimension mismatch");
+        debug_assert_eq!(self.dim, panel.factor_dim(), "factor derived from a different panel");
+        match panel.mode {
+            WoodburyMode::SmallSketch => {
+                // (1/nu^2) (G - scale^2 (S̃A)^T K^{-1} (S̃A) G) with
+                // K = nu^2 I + scale^2 (S̃A)(S̃A)^T.
+                let mut w = panel.sa.matmul(g); // m x k
+                self.chol.solve_matrix_in_place(&mut w);
+                let mut out = panel.sa.matmul_tn(&w); // d x k
+                let inv_nu2 = 1.0 / self.nu2;
+                for i in 0..out.rows() {
+                    let grow = g.row(i);
+                    let orow = out.row_mut(i);
+                    for (o, &gv) in orow.iter_mut().zip(grow) {
+                        *o = (gv - panel.scale2 * *o) * inv_nu2;
+                    }
+                }
+                out
+            }
+            WoodburyMode::Direct => {
+                let mut out = g.clone();
+                self.chol.solve_matrix_in_place(&mut out);
+                out
+            }
+        }
+    }
+}
+
+/// Cached factorization of the sketched Hessian: one shared [`GramPanel`]
+/// paired with the [`NuFactor`] for the currently keyed `nu`. The mutable
+/// writer-lane API (`set_nu`, `grow`) lives here; read-lane users take
+/// [`WoodburyCache::panel`] and derive their own factors.
+#[derive(Clone)]
+pub struct WoodburyCache {
+    panel: Arc<GramPanel>,
+    factor: NuFactor,
     /// Highest recovery rung any factorization of this cache has needed
     /// (`Jitter` when `factor_with_jitter` had to perturb the diagonal).
     recovery: RecoveryRung,
@@ -95,65 +361,48 @@ impl WoodburyCache {
         if !(nu > 0.0 && nu.is_finite()) {
             return Err(SolverError::invalid(format!("invalid nu: {nu}")));
         }
-        if !(scale > 0.0 && scale.is_finite()) {
-            return Err(SolverError::invalid(format!("invalid sketch scale: {scale}")));
-        }
-        let (m, d) = (sa.rows(), sa.cols());
-        let nu2 = nu * nu;
-        let scale2 = scale * scale;
-        if m <= d {
-            let u = sa.gram_outer(); // unnormalized (S̃A)(S̃A)^T, m x m
-            let (chol, recovery) = factor_small(&u, scale2, nu2)?;
-            Ok(Self {
-                sa,
-                scale2,
-                nu2,
-                mode: WoodburyMode::SmallSketch,
-                chol,
-                outer_gram: Some(u),
-                inner_gram: None,
-                recovery,
-            })
-        } else {
-            let inner = sa.gram(); // unnormalized (S̃A)^T(S̃A), d x d
-            let (chol, recovery) = factor_direct(&inner, scale2, nu2)?;
-            Ok(Self {
-                sa,
-                scale2,
-                nu2,
-                mode: WoodburyMode::Direct,
-                chol,
-                outer_gram: None,
-                inner_gram: Some(inner),
-                recovery,
-            })
-        }
+        let panel = GramPanel::build(sa, scale)?;
+        let factor = panel.factor(nu)?;
+        let recovery = factor.recovery;
+        Ok(Self { panel: Arc::new(panel), factor, recovery })
     }
 
     /// Sketch size `m`.
     pub fn m(&self) -> usize {
-        self.sa.rows()
+        self.panel.m()
     }
 
     /// Column dimension `d` of the sketched matrix.
     pub fn d(&self) -> usize {
-        self.sa.cols()
+        self.panel.d()
     }
 
     /// Active branch.
     pub fn mode(&self) -> WoodburyMode {
-        self.mode
+        self.panel.mode
     }
 
     /// Regularization level the current factorization is keyed to.
     pub fn nu(&self) -> f64 {
-        self.nu2.sqrt()
+        self.factor.nu()
     }
 
     /// Highest recovery rung any factorization of this cache has needed
     /// (solvers escalate this into their [`super::SolveReport`]).
     pub fn recovery(&self) -> RecoveryRung {
         self.recovery
+    }
+
+    /// The shared immutable panel — the read lane's entry point: clone
+    /// the `Arc` out, derive per-`nu` factors with [`GramPanel::factor`],
+    /// and apply them with no further coordination with this cache.
+    pub fn panel(&self) -> &Arc<GramPanel> {
+        &self.panel
+    }
+
+    /// The factor currently keyed (writer lane's `nu`).
+    pub fn factor(&self) -> &NuFactor {
+        &self.factor
     }
 
     /// Re-key the cached factorization to a new regularization level.
@@ -164,7 +413,8 @@ impl WoodburyCache {
     /// recompute, and never any sketch work. This is what lets a session
     /// reuse one grown sketch across a whole regularization path
     /// (arXiv:2104.14101's cross-`nu` preconditioner reuse). A no-op when
-    /// `nu` is unchanged.
+    /// `nu` is unchanged. The panel is untouched — a snapshot sharing it
+    /// keeps sharing it.
     ///
     /// Transactional: the new factorization is staged in a local and
     /// committed together with `nu`, so on `Err` the cache still answers
@@ -174,42 +424,27 @@ impl WoodburyCache {
             return Err(SolverError::invalid(format!("invalid nu: {nu}")));
         }
         let nu2 = nu * nu;
-        if nu2 == self.nu2 {
+        if nu2 == self.factor.nu2 {
             return Ok(());
         }
         failpoint::check("woodbury.set_nu").map_err(SolverError::Internal)?;
-        let (chol, rung) = match self.mode {
-            WoodburyMode::SmallSketch => {
-                let u = self.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
-                factor_small(u, self.scale2, nu2)?
-            }
-            WoodburyMode::Direct => {
-                let inner = self.inner_gram.as_ref().expect("Direct keeps inner_gram");
-                factor_direct(inner, self.scale2, nu2)?
-            }
-        };
-        self.nu2 = nu2;
-        self.chol = chol;
-        self.recovery.escalate(rung);
+        let factor = self.panel.factor(nu)?;
+        self.recovery.escalate(factor.recovery);
+        self.factor = factor;
         Ok(())
     }
 
     /// Approximate heap footprint in bytes (sketch rows + cached Gram +
-    /// Cholesky factor) — used by registry byte budgets.
+    /// Cholesky factor) — used by registry byte budgets. Counts the panel
+    /// as if owned; callers sharing the panel across handles must dedupe
+    /// via [`WoodburyCache::panel`] + `Arc::ptr_eq`.
     pub fn approx_bytes(&self) -> usize {
-        let mat = |m: &Matrix| m.rows() * m.cols() * std::mem::size_of::<f64>();
-        let gram = self.outer_gram.as_ref().map_or(0, mat)
-            + self.inner_gram.as_ref().map_or(0, mat);
-        let factor_dim = match self.mode {
-            WoodburyMode::SmallSketch => self.sa.rows(),
-            WoodburyMode::Direct => self.sa.cols(),
-        };
-        mat(&self.sa) + gram + factor_dim * factor_dim * std::mem::size_of::<f64>()
+        self.panel.approx_bytes() + self.factor.approx_bytes()
     }
 
     /// Effective embedding scale (`1.0` for pre-normalized rows).
     pub fn scale(&self) -> f64 {
-        self.scale2.sqrt()
+        self.panel.scale()
     }
 
     /// Append `Δm` unnormalized sketch rows and update the factorization,
@@ -222,13 +457,17 @@ impl WoodburyCache {
     /// Transactional: new Gram blocks and the new factorization are
     /// staged in locals and committed only after the Cholesky succeeds,
     /// so on `Err` the cache keeps its previous rows and factorization
-    /// intact (the old Gram is never `take()`n).
+    /// intact (the old Gram is never `take()`n). The commit goes through
+    /// `Arc::make_mut`: a uniquely held panel mutates in place (the
+    /// pre-split behavior, bitwise); a panel shared with a snapshot is
+    /// deep-copied, leaving the snapshot's readers pinned to the old
+    /// rows.
     pub fn grow(&mut self, new_rows: &Matrix, new_scale: f64) -> Result<(), SolverError> {
-        if new_rows.cols() != self.sa.cols() {
+        if new_rows.cols() != self.panel.sa.cols() {
             return Err(SolverError::invalid(format!(
                 "grow: column mismatch ({} vs {})",
                 new_rows.cols(),
-                self.sa.cols()
+                self.panel.sa.cols()
             )));
         }
         if !(new_scale > 0.0 && new_scale.is_finite()) {
@@ -238,18 +477,18 @@ impl WoodburyCache {
             return Ok(());
         }
         failpoint::check("woodbury.grow").map_err(SolverError::Internal)?;
-        let d = self.sa.cols();
-        let m_new = self.sa.rows() + new_rows.rows();
+        let d = self.panel.sa.cols();
+        let m_new = self.panel.sa.rows() + new_rows.rows();
         let new_scale2 = new_scale * new_scale;
 
-        match self.mode {
+        match self.panel.mode {
             WoodburyMode::SmallSketch if m_new <= d => {
                 // O(Δm m d) cross + O(Δm^2 d) corner; the old m x m block
                 // of U is reused verbatim (read, not taken — a failed
                 // factor must leave it in place).
-                let cross = new_rows.matmul_nt(&self.sa); // Δm x m
+                let cross = new_rows.matmul_nt(&self.panel.sa); // Δm x m
                 let corner = new_rows.gram_outer(); // Δm x Δm
-                let u_old = self.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
+                let u_old = self.panel.outer_gram.as_ref().expect("SmallSketch keeps outer_gram");
                 let m_old = u_old.rows();
                 let dm = cross.rows();
                 let mut u = Matrix::zeros(m_new, m_new);
@@ -264,16 +503,16 @@ impl WoodburyCache {
                     u.row_mut(m_old + i)[m_old..].copy_from_slice(corner.row(i));
                 }
 
-                let bordered = if new_scale2 == self.scale2 {
+                let bordered = if new_scale2 == self.panel.scale2 {
                     // Scale unchanged: K grows by a plain border — extend
                     // the factor in O(Δm m^2). `extend_bordered` leaves
                     // the factor untouched when the border is indefinite.
                     let mut cross_k = cross.clone();
-                    scale_vec(self.scale2, cross_k.as_mut_slice());
+                    scale_vec(self.panel.scale2, cross_k.as_mut_slice());
                     let mut corner_k = corner.clone();
-                    scale_vec(self.scale2, corner_k.as_mut_slice());
-                    corner_k.add_diag(self.nu2);
-                    self.chol.extend_bordered(&cross_k, &corner_k).is_ok()
+                    scale_vec(self.panel.scale2, corner_k.as_mut_slice());
+                    corner_k.add_diag(self.factor.nu2);
+                    self.factor.chol.extend_bordered(&cross_k, &corner_k).is_ok()
                 } else {
                     false
                 };
@@ -281,129 +520,74 @@ impl WoodburyCache {
                     // Rescaled (or borderline-indefinite corner): rebuild
                     // K = nu^2 I + scale^2 U from the cached Gram — O(m^3)
                     // factor, but no O(m^2 d) Gram recompute.
-                    let (chol, rung) = factor_small(&u, new_scale2, self.nu2)?;
-                    self.chol = chol;
+                    let (chol, rung) = factor_small(&u, new_scale2, self.factor.nu2)?;
+                    self.factor.chol = chol;
+                    self.factor.recovery = rung;
                     self.recovery.escalate(rung);
                 }
-                self.outer_gram = Some(u);
-                self.sa.append_rows(new_rows);
-                self.scale2 = new_scale2;
+                self.factor.dim = m_new;
+                let panel = Arc::make_mut(&mut self.panel);
+                panel.outer_gram = Some(u);
+                panel.sa.append_rows(new_rows);
+                panel.scale2 = new_scale2;
             }
             WoodburyMode::SmallSketch => {
                 // Crossing m > d: switch branches. The d x d inner Gram is
                 // built once here as (S̃A)^T(S̃A) + ΔA^T ΔA (O(m d^2)) and
                 // maintained incrementally afterwards.
-                let mut inner = self.sa.gram();
+                let mut inner = self.panel.sa.gram();
                 inner.add_scaled(1.0, &new_rows.gram());
-                let (chol, rung) = factor_direct(&inner, new_scale2, self.nu2)?;
-                self.sa.append_rows(new_rows);
-                self.scale2 = new_scale2;
-                self.chol = chol;
+                let (chol, rung) = factor_direct(&inner, new_scale2, self.factor.nu2)?;
+                self.factor.chol = chol;
+                self.factor.recovery = rung;
+                self.factor.dim = d;
                 self.recovery.escalate(rung);
-                self.inner_gram = Some(inner);
-                self.outer_gram = None;
-                self.mode = WoodburyMode::Direct;
+                let panel = Arc::make_mut(&mut self.panel);
+                panel.sa.append_rows(new_rows);
+                panel.scale2 = new_scale2;
+                panel.inner_gram = Some(inner);
+                panel.outer_gram = None;
+                panel.mode = WoodburyMode::Direct;
             }
             WoodburyMode::Direct => {
                 // Rank-Δm update of the inner Gram: O(Δm d^2) + O(d^3)
                 // refactor, independent of the accumulated m.
                 let mut inner =
-                    self.inner_gram.as_ref().expect("Direct keeps inner_gram").clone();
+                    self.panel.inner_gram.as_ref().expect("Direct keeps inner_gram").clone();
                 inner.add_scaled(1.0, &new_rows.gram());
-                let (chol, rung) = factor_direct(&inner, new_scale2, self.nu2)?;
-                self.sa.append_rows(new_rows);
-                self.scale2 = new_scale2;
-                self.chol = chol;
+                let (chol, rung) = factor_direct(&inner, new_scale2, self.factor.nu2)?;
+                self.factor.chol = chol;
+                self.factor.recovery = rung;
+                self.factor.dim = d;
                 self.recovery.escalate(rung);
-                self.inner_gram = Some(inner);
+                let panel = Arc::make_mut(&mut self.panel);
+                panel.sa.append_rows(new_rows);
+                panel.scale2 = new_scale2;
+                panel.inner_gram = Some(inner);
             }
         }
         Ok(())
     }
 
-    /// Apply `H_S^{-1} g` into `out` (length `d`), allocation-free in the
-    /// steady state: `ws_m` is length-`m` scratch resized only when the
-    /// sketch grows. Cost: `O(m d + m^2)` (small-sketch branch) or
-    /// `O(d^2)` (direct branch). This is the per-iteration primitive of
-    /// the IHS solvers' workspace loops.
+    /// Apply `H_S^{-1} g` into `out` (see [`NuFactor::apply_inverse_into`]).
     pub fn apply_inverse_into(&self, g: &[f64], ws_m: &mut Vec<f64>, out: &mut [f64]) {
-        assert_eq!(g.len(), self.sa.cols(), "apply_inverse dimension mismatch");
-        assert_eq!(out.len(), self.sa.cols(), "apply_inverse output mismatch");
-        match self.mode {
-            WoodburyMode::SmallSketch => {
-                // (1/nu^2) (g - scale^2 (S̃A)^T K^{-1} (S̃A) g) with
-                // K = nu^2 I + scale^2 (S̃A)(S̃A)^T.
-                ws_m.resize(self.sa.rows(), 0.0);
-                self.sa.matvec_into(g, ws_m);
-                self.chol.solve_in_place(ws_m);
-                out.copy_from_slice(g);
-                // out -= scale^2 (S̃A)^T kinv, fused as per-row axpys.
-                for i in 0..self.sa.rows() {
-                    let c = self.scale2 * ws_m[i];
-                    if c != 0.0 {
-                        axpy(-c, self.sa.row(i), out);
-                    }
-                }
-                scale_vec(1.0 / self.nu2, out);
-            }
-            WoodburyMode::Direct => {
-                out.copy_from_slice(g);
-                self.chol.solve_in_place(out);
-            }
-        }
+        self.factor.apply_inverse_into(&self.panel, g, ws_m, out);
     }
 
     /// Apply `H_S^{-1} g` (allocating wrapper).
     pub fn apply_inverse(&self, g: &[f64]) -> Vec<f64> {
-        let mut ws_m = Vec::new();
-        let mut out = vec![0.0; self.sa.cols()];
-        self.apply_inverse_into(g, &mut ws_m, &mut out);
-        out
+        self.factor.apply_inverse(&self.panel, g)
     }
 
-    /// Apply `H_S^{-1}` to `k` gradients at once: `g` is `d x k` (column
-    /// `j` = gradient `j`), the result has the same shape. One BLAS-3
-    /// pass replaces `k` BLAS-2 [`WoodburyCache::apply_inverse`] calls —
-    /// `O(m d k + m^2 k)` (small-sketch branch, via GEMM +
-    /// [`Cholesky::solve_matrix_in_place`]) or `O(d^2 k)` (direct) — and
-    /// inherits the block kernels' thread parallelism. Column `j` agrees
-    /// with `apply_inverse(g_j)` to roundoff (the block kernels
-    /// accumulate in blocked order, not the vector order). This is the
-    /// per-iteration primitive of the block multi-RHS solver
-    /// ([`crate::solvers::block`]).
+    /// Apply `H_S^{-1}` to `k` gradients at once (see
+    /// [`NuFactor::apply_inverse_block`]).
     pub fn apply_inverse_block(&self, g: &Matrix) -> Matrix {
-        assert_eq!(g.rows(), self.sa.cols(), "apply_inverse_block dimension mismatch");
-        match self.mode {
-            WoodburyMode::SmallSketch => {
-                // (1/nu^2) (G - scale^2 (S̃A)^T K^{-1} (S̃A) G) with
-                // K = nu^2 I + scale^2 (S̃A)(S̃A)^T.
-                let mut w = self.sa.matmul(g); // m x k
-                self.chol.solve_matrix_in_place(&mut w);
-                let mut out = self.sa.matmul_tn(&w); // d x k
-                let inv_nu2 = 1.0 / self.nu2;
-                for i in 0..out.rows() {
-                    let grow = g.row(i);
-                    let orow = out.row_mut(i);
-                    for (o, &gv) in orow.iter_mut().zip(grow) {
-                        *o = (gv - self.scale2 * *o) * inv_nu2;
-                    }
-                }
-                out
-            }
-            WoodburyMode::Direct => {
-                let mut out = g.clone();
-                self.chol.solve_matrix_in_place(&mut out);
-                out
-            }
-        }
+        self.factor.apply_inverse_block(&self.panel, g)
     }
 
     /// Explicit `H_S` (tests / diagnostics only).
     pub fn h_s(&self) -> Matrix {
-        let mut h = self.sa.gram();
-        scale_vec(self.scale2, h.as_mut_slice());
-        h.add_diag(self.nu2);
-        h
+        self.panel.h_s(self.factor.nu2)
     }
 }
 
@@ -723,5 +907,112 @@ mod tests {
         assert_eq!(cache.m(), 3);
         let after = cache.apply_inverse(&g);
         assert_eq!(before, after);
+    }
+
+    // ---- panel / factor seam ----
+
+    #[test]
+    fn panel_factor_is_pure_and_matches_cache_bitwise() {
+        // Deriving a factor from the shared panel is read-only and must
+        // reproduce the writer lane's answers *bitwise*: factor_small /
+        // factor_direct are deterministic in (Gram, scale2, nu2), so any
+        // reader re-keying the same panel at the same nu computes the
+        // same factor the cache's own set_nu would.
+        for (m, d) in [(5usize, 14usize), (18, 6)] {
+            let sa = random_sa(m, d, 40);
+            let mut cache = WoodburyCache::new_scaled(sa, 0.9, 0.5).unwrap();
+            let panel = Arc::clone(cache.panel());
+            let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.13).sin()).collect();
+            for nu in [0.9, 0.3, 2.5] {
+                // Reader lane: pure factor off the pinned panel.
+                let f1 = panel.factor(nu).unwrap();
+                let f2 = panel.factor(nu).unwrap();
+                let z1 = f1.apply_inverse(&panel, &g);
+                let z2 = f2.apply_inverse(&panel, &g);
+                let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&z1), bits(&z2), "factor must be deterministic");
+                // Writer lane at the same nu: bitwise the same answers.
+                cache.set_nu(nu).unwrap();
+                assert_eq!(bits(&z1), bits(&cache.apply_inverse(&g)), "m={m} nu={nu}");
+            }
+        }
+    }
+
+    #[test]
+    fn grow_copies_on_write_when_panel_is_shared() {
+        // A reader pinning the panel Arc must keep answering from the old
+        // rows after the writer grows — and the writer's growth must still
+        // agree with a from-scratch cache on the grown rows.
+        let d = 16;
+        let full = random_sa(8, d, 41);
+        let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 0.7, 0.5).unwrap();
+        let pinned = Arc::clone(cache.panel());
+        let pinned_factor = pinned.factor(0.7).unwrap();
+        let g: Vec<f64> = (0..d).map(|i| (i as f64 * 0.21).cos()).collect();
+        let before = pinned_factor.apply_inverse(&pinned, &g);
+
+        cache.grow(&rows(4, 8), 0.35).unwrap();
+        assert!(
+            !Arc::ptr_eq(&pinned, cache.panel()),
+            "shared panel must be copied, not mutated in place"
+        );
+        assert_eq!(pinned.m(), 4, "pinned panel keeps its pre-growth rows");
+        assert_eq!(cache.m(), 8);
+        // The pinned reader still gets bitwise the pre-growth answers.
+        let after = pinned_factor.apply_inverse(&pinned, &g);
+        let bits = |x: &[f64]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&before), bits(&after));
+        // And the grown cache matches a fresh build on the full rows.
+        let fresh = WoodburyCache::new_scaled(rows(0, 8), 0.7, 0.35).unwrap();
+        let zg = cache.apply_inverse(&g);
+        let zf = fresh.apply_inverse(&g);
+        for i in 0..d {
+            assert!((zg[i] - zf[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unshared_grow_mutates_panel_in_place() {
+        // Sole ownership (no snapshot pinning the Arc): make_mut must
+        // mutate in place — no allocation-level churn for the common
+        // writer-only path. Observable via the Arc's strong count staying
+        // 1 and the grown answers matching fresh ones (the bitwise
+        // equivalence to the pre-split code path).
+        let d = 12;
+        let full = random_sa(8, d, 42);
+        let rows = |a: usize, b: usize| Matrix::from_fn(b - a, d, |i, j| full.get(a + i, j));
+        let mut cache = WoodburyCache::new_scaled(rows(0, 4), 0.8, 0.5).unwrap();
+        assert_eq!(Arc::strong_count(cache.panel()), 1);
+        cache.grow(&rows(4, 8), 0.35).unwrap();
+        assert_eq!(Arc::strong_count(cache.panel()), 1);
+        assert_eq!(cache.m(), 8);
+    }
+
+    #[test]
+    fn factor_rejects_invalid_nu_and_panel_rejects_bad_scale() {
+        let panel = GramPanel::build(random_sa(4, 9, 43), 0.5).unwrap();
+        for nu in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            match panel.factor(nu) {
+                Err(SolverError::InvalidInput(m)) => assert!(m.contains("invalid nu")),
+                other => panic!("nu={nu}: expected InvalidInput, got {other:?}"),
+            }
+        }
+        for scale in [0.0, -0.5, f64::NAN] {
+            assert!(GramPanel::build(random_sa(2, 4, 44), scale).is_err());
+        }
+    }
+
+    #[test]
+    fn byte_accounting_splits_panel_and_factor() {
+        let cache = WoodburyCache::new_scaled(random_sa(5, 14, 45), 0.6, 0.5).unwrap();
+        let f64s = std::mem::size_of::<f64>();
+        // Panel: sa (5x14) + outer gram (5x5); factor: 5x5 Cholesky.
+        assert_eq!(cache.panel().approx_bytes(), (5 * 14 + 5 * 5) * f64s);
+        assert_eq!(cache.factor().approx_bytes(), 5 * 5 * f64s);
+        assert_eq!(
+            cache.approx_bytes(),
+            cache.panel().approx_bytes() + cache.factor().approx_bytes()
+        );
     }
 }

@@ -15,6 +15,11 @@
 //! * **crash-safe publication** — a writer that dies (injected error or
 //!   panic) between commit and publish leaves the *old* snapshot live
 //!   and fully correct; no partial snapshot is ever observable.
+//! * **lock-free uncached solves** — the frozen lane
+//!   ([`SessionSnapshot::solve_frozen`]) answers *uncached* distinct-`nu`
+//!   queries from the pinned artifacts alone (no session lock), bitwise
+//!   equal to the writer lane, deferring with
+//!   [`FrozenOutcome::NeedsGrowth`] exactly when the writer would grow.
 //!
 //! The `session.publish` failpoint is process-global state, so every
 //! test here serializes on one suite mutex and starts disarmed, exactly
@@ -25,6 +30,7 @@ use effdim::coordinator::registry::{ModelEntry, Registry, DEFAULT_BYTE_BUDGET};
 use effdim::data::synthetic;
 use effdim::linalg::Matrix;
 use effdim::sketch::SketchKind;
+use effdim::solvers::adaptive::FrozenOutcome;
 use effdim::solvers::session::{AppendRefresh, ModelSession, SessionSnapshot};
 use effdim::util::failpoint::{self, Action};
 use effdim::Operand;
@@ -393,4 +399,186 @@ fn a_crashed_publish_never_exposes_a_partial_snapshot() {
     assert_eq!(bits(&sol.x), published);
     let sol_a = after.cached(NU_A, EPS).expect("older solution evicted unexpectedly");
     assert_eq!(bits(&sol_a.x), base_bits);
+}
+
+/// The frozen-lane acceptance criterion: N readers each complete a full
+/// *uncached, distinct-nu* solve from the snapshot handle alone while the
+/// test holds the session mutex for the whole duration. If
+/// `solve_frozen` touched the lock this would deadlock; and every answer
+/// must be bitwise what the writer lane would have produced from the
+/// same generation (oracle: a fresh twin session per nu, replaying
+/// warm-solve → query single-threaded).
+#[test]
+fn frozen_solves_of_distinct_uncached_nus_proceed_while_the_lock_is_held() {
+    let _guard = suite_lock();
+    const WARM_NU: f64 = 0.5;
+    // Distinct uncached operating points, all with a *smaller* effective
+    // dimension than the warm solve's, so the frozen m is sufficient.
+    let nus = [0.7, 0.85, 1.0, 1.3, 1.7, 2.2];
+
+    let (_registry, entry) = registered(64, 8, 44, 7);
+    {
+        let mut session = entry.session.lock().unwrap();
+        session.solve(WARM_NU, EPS).unwrap();
+        entry.publish(&mut session).unwrap();
+    }
+    // Oracle: one fresh twin per nu — each replays exactly what the
+    // writer lane would do next from the published generation.
+    let expected: Vec<Vec<u64>> = nus
+        .iter()
+        .map(|&nu| {
+            let mut t = twin(64, 8, 44, 7);
+            t.solve(WARM_NU, EPS).unwrap();
+            bits(&t.solve(nu, EPS).unwrap().x)
+        })
+        .collect();
+
+    let locked = entry.session.lock().unwrap();
+    thread::scope(|scope| {
+        for (i, &nu) in nus.iter().enumerate() {
+            let entry = Arc::clone(&entry);
+            let expected = expected[i].clone();
+            scope.spawn(move || {
+                let snap = entry.snapshot();
+                assert!(snap.cached(nu, EPS).is_none(), "nu {nu} must be uncached");
+                for _ in 0..20 {
+                    let out =
+                        snap.solve_frozen(nu, EPS, None).expect("snapshot has state").unwrap();
+                    match out {
+                        FrozenOutcome::Solved(sol) => {
+                            assert!(sol.report.converged);
+                            assert_eq!(
+                                bits(&sol.x),
+                                expected,
+                                "frozen solve at nu {nu} diverged from the writer twin"
+                            );
+                        }
+                        FrozenOutcome::NeedsGrowth { reason, .. } => {
+                            panic!("nu {nu} must fit the frozen m: {reason}")
+                        }
+                    }
+                }
+            });
+        }
+    });
+    drop(locked);
+    // The frozen lane populated nothing: every nu is still uncached and
+    // the live session still warm-starts from the WARM_NU solution.
+    let snap = entry.snapshot();
+    for &nu in &nus {
+        assert!(snap.cached(nu, EPS).is_none(), "frozen solve must not populate the cache");
+    }
+}
+
+/// The fallback ladder end-to-end at the registry level: a snapshot
+/// whose frozen m is too small for a hard nu defers with `NeedsGrowth`
+/// (counted as a fallback), the writer lane grows under the lock and
+/// republishes, and the *next* snapshot serves the same nu frozen —
+/// bitwise equal to what the writer would answer next.
+#[test]
+fn needs_growth_falls_back_once_then_the_next_snapshot_serves_frozen() {
+    let _guard = suite_lock();
+    const EASY_NU: f64 = 50.0; // d_eff ~ 1: tiny frozen m
+    const HARD_NU: f64 = 0.05; // d_eff >> frozen m
+
+    let (registry, entry) = registered(512, 64, 45, 7);
+    {
+        let mut session = entry.session.lock().unwrap();
+        session.solve(EASY_NU, EPS).unwrap();
+        entry.publish(&mut session).unwrap();
+    }
+
+    // The published snapshot's frozen lane cannot serve the hard nu.
+    let snap = entry.snapshot();
+    let frozen_m = snap.m();
+    match snap.solve_frozen(HARD_NU, EPS, None).unwrap().unwrap() {
+        FrozenOutcome::NeedsGrowth { m, .. } => {
+            assert_eq!(m, frozen_m);
+            registry.note_frozen_fallback(&entry);
+        }
+        FrozenOutcome::Solved(_) => panic!("tiny frozen m must defer to the writer lane"),
+    }
+
+    // Writer lane: grow under the lock, republish.
+    {
+        let mut session = entry.session.lock().unwrap();
+        let sol = session.solve(HARD_NU, EPS).unwrap();
+        assert!(sol.report.doublings >= 1, "premise: the writer grows here");
+        registry.note_query(&entry, &session);
+        entry.publish(&mut session).unwrap();
+    }
+
+    // The next generation serves the very same nu frozen (different eps
+    // so it is a genuine uncached solve, not a cache hit), bitwise equal
+    // to the writer twin's next answer.
+    let snap2 = entry.snapshot();
+    assert!(snap2.m() > frozen_m, "republished snapshot must carry the grown panel");
+    let twin_bits = {
+        let mut t = twin(512, 64, 45, 7);
+        t.solve(EASY_NU, EPS).unwrap();
+        t.solve(HARD_NU, EPS).unwrap();
+        bits(&t.solve(HARD_NU, EPS / 2.0).unwrap().x)
+    };
+    match snap2.solve_frozen(HARD_NU, EPS / 2.0, None).unwrap().unwrap() {
+        FrozenOutcome::Solved(sol) => {
+            registry.note_frozen_solve(&entry);
+            assert!(sol.report.converged);
+            assert_eq!(bits(&sol.x), twin_bits, "post-growth frozen lane diverged");
+        }
+        FrozenOutcome::NeedsGrowth { reason, .. } => {
+            panic!("grown panel must serve nu {HARD_NU} frozen: {reason}")
+        }
+    }
+
+    // Counters: one fallback, one frozen solve, and the frozen solve
+    // counted as a served query.
+    assert_eq!(entry.frozen_fallbacks.load(Ordering::Relaxed), 1);
+    assert_eq!(entry.frozen_solves.load(Ordering::Relaxed), 1);
+    assert_eq!(registry.frozen_fallbacks.load(Ordering::Relaxed), 1);
+    assert_eq!(registry.frozen_solves.load(Ordering::Relaxed), 1);
+    assert_eq!(registry.queries.load(Ordering::Relaxed), 2);
+}
+
+/// Snapshot isolation under writer-lane growth: a reader pinned to the
+/// pre-growth snapshot keeps solving its nu frozen — and keeps getting
+/// its own generation's bits — even while the writer grows the panel and
+/// republishes. The copy-on-write seam (shared `Arc<GramPanel>`,
+/// deep-copy on shared growth) is what makes this safe; this test would
+/// catch any in-place mutation of a shared panel.
+#[test]
+fn a_pinned_snapshot_keeps_its_frozen_answers_across_writer_growth() {
+    let _guard = suite_lock();
+    const NU: f64 = 0.9;
+
+    let (_registry, entry) = registered(128, 16, 46, 7);
+    {
+        let mut session = entry.session.lock().unwrap();
+        session.solve(0.5, EPS).unwrap();
+        entry.publish(&mut session).unwrap();
+    }
+    let pinned = entry.snapshot();
+    let before = match pinned.solve_frozen(NU, EPS, None).unwrap().unwrap() {
+        FrozenOutcome::Solved(sol) => bits(&sol.x),
+        FrozenOutcome::NeedsGrowth { reason, .. } => panic!("nu {NU} must fit: {reason}"),
+    };
+
+    // Writer: force growth (small nu) and republish; the live panel is
+    // now a different, larger allocation.
+    {
+        let mut session = entry.session.lock().unwrap();
+        let sol = session.solve(0.01, EPS).unwrap();
+        assert!(sol.report.doublings >= 1, "premise: growth happened");
+        entry.publish(&mut session).unwrap();
+    }
+    assert!(entry.snapshot().m() > pinned.m());
+
+    // The pinned handle still answers with its own generation's bits.
+    match pinned.solve_frozen(NU, EPS, None).unwrap().unwrap() {
+        FrozenOutcome::Solved(sol) => {
+            assert_eq!(bits(&sol.x), before, "pinned snapshot's frozen answer changed");
+        }
+        FrozenOutcome::NeedsGrowth { reason, .. } => {
+            panic!("pinned snapshot lost its panel: {reason}")
+        }
+    }
 }
